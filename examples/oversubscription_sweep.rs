@@ -1,0 +1,45 @@
+//! Oversubscription sweep (Fig 3 driver): how each benchmark's IPC
+//! degrades as the device memory shrinks, under the rule-based
+//! strategies. Pure simulator — no artifacts needed.
+//!
+//! Run: `cargo run --release --example oversubscription_sweep [-- --strategy uvmsmart]`
+
+use uvmio::config::Scale;
+use uvmio::coordinator::{run_rule_based, RunSpec, Strategy};
+use uvmio::trace::workloads::Workload;
+use uvmio::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env().map_err(anyhow::Error::msg)?;
+    let strategy = match args.get_or("strategy", "baseline") {
+        "baseline" => Strategy::Baseline,
+        "uvmsmart" => Strategy::UvmSmart,
+        "demand-hpe" => Strategy::DemandHpe,
+        "demand-belady" => Strategy::DemandBelady,
+        other => anyhow::bail!("unknown strategy {other}"),
+    };
+    let levels = [100u32, 110, 125, 150, 200];
+
+    println!("strategy: {}", strategy.name());
+    println!("{:<12} {:>9} {:>9} {:>9} {:>9} {:>9}", "benchmark",
+             "100%", "110%", "125%", "150%", "200%");
+    for w in Workload::ALL {
+        let trace = w.generate(Scale::default(), 42);
+        let mut cells = Vec::new();
+        let base_ipc = {
+            let spec = RunSpec::new(&trace, 100);
+            run_rule_based(&spec, strategy).outcome.stats.ipc()
+        };
+        for pct in levels {
+            let spec = RunSpec::new(&trace, pct);
+            let ipc = run_rule_based(&spec, strategy).outcome.stats.ipc();
+            cells.push(format!("{:.3}", ipc / base_ipc));
+        }
+        println!(
+            "{:<12} {:>9} {:>9} {:>9} {:>9} {:>9}",
+            w.name(), cells[0], cells[1], cells[2], cells[3], cells[4]
+        );
+    }
+    println!("\n(values are IPC normalized to the 100% — no oversubscription — run)");
+    Ok(())
+}

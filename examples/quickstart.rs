@@ -1,0 +1,59 @@
+//! Quickstart: the framework in ~40 lines.
+//!
+//! Generates the Hotspot benchmark trace, runs it under 125% memory
+//! oversubscription with (a) the CUDA-runtime baseline (tree prefetch +
+//! LRU) and (b) the paper's intelligent framework (Transformer page
+//! predictor via PJRT), and prints the headline comparison.
+//!
+//! Requires `make artifacts` first. Run: `cargo run --release --example quickstart`
+
+use std::rc::Rc;
+
+use uvmio::config::Scale;
+use uvmio::coordinator::{run_intelligent, run_rule_based, RunSpec, Strategy};
+use uvmio::predictor::IntelligentConfig;
+use uvmio::runtime::{Manifest, Runtime};
+use uvmio::trace::workloads::Workload;
+
+fn main() -> anyhow::Result<()> {
+    // 1. a workload trace (synthetic Rodinia Hotspot, page-level)
+    let trace = Workload::Hotspot.generate(Scale::default(), 42);
+    println!(
+        "workload: {} — {} pages touched, {} accesses",
+        trace.name, trace.touched_pages, trace.accesses.len()
+    );
+
+    // 2. 125% oversubscription: device memory = 80% of the working set
+    let spec = RunSpec::new(&trace, 125);
+    println!("device capacity: {} pages\n", spec.cfg.capacity_pages);
+
+    // 3. baseline: NVIDIA's tree prefetcher + LRU eviction
+    let base = run_rule_based(&spec, Strategy::Baseline);
+
+    // 4. the intelligent framework: DFA pattern classifier -> pattern-
+    //    specific Transformer predictor (AOT HLO via PJRT) -> policy
+    //    engine (prediction frequency table + page set chain)
+    let runtime = Runtime::new(&Manifest::default_dir())?;
+    let model = Rc::new(runtime.model("predictor")?);
+    let ours = run_intelligent(&spec, &model, &runtime, IntelligentConfig::default())?;
+
+    for (name, cell) in [("baseline", &base), ("intelligent", &ours)] {
+        let s = &cell.outcome.stats;
+        println!(
+            "{name:12} thrash={:<6} faults={:<6} prefetch_acc={:.2} IPC={:.4}",
+            s.thrash_events,
+            s.faults,
+            s.prefetch_accuracy(),
+            s.ipc()
+        );
+    }
+    let b = base.outcome.stats.thrash_events.max(1);
+    let o = ours.outcome.stats.thrash_events;
+    println!(
+        "\nthrash reduction: {:.1}%  |  IPC speedup: {:.2}x  |  {} online train steps on-path",
+        100.0 * (1.0 - o as f64 / b as f64),
+        ours.outcome.stats.ipc() / base.outcome.stats.ipc(),
+        ours.inference_calls
+    );
+    Ok(())
+}

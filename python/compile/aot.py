@@ -1,0 +1,140 @@
+"""AOT lowering: JAX/Pallas -> HLO text artifacts + manifest for rust.
+
+Emits, per model in ``model.MODELS`` (predictor / lstm / cnn / mlp):
+
+* ``artifacts/<name>_fwd.hlo.txt``   — (params, addr, delta, pc, tb) -> (logits,)
+* ``artifacts/<name>_train.hlo.txt`` — one Adam step over the paper's loss
+* ``artifacts/<name>_init.hlo.txt``  — (seed,) -> (params,)
+
+plus ``artifacts/manifest.json`` describing every artifact's input/output
+shapes and dtypes so the rust runtime is fully self-describing.
+
+Interchange format is **HLO text**, NOT a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version behind the published ``xla`` crate) rejects. The text parser
+reassigns ids, so text round-trips cleanly (see /opt/xla-example/README.md).
+
+Build-time only: ``make artifacts`` runs this once; the rust binary never
+imports python.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .config import CONFIG, COMPARATOR
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    """Convert a jax Lowered to XLA HLO text via stablehlo."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def _shape_dtype(*dims, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(dims), dtype)
+
+
+def example_args(kind: str, p: int):
+    """ShapeDtypeStructs for each artifact kind, in argument order."""
+    cfg = CONFIG
+    b, t, c = cfg.batch, cfg.seq_len, cfg.delta_vocab
+    f32, i32 = jnp.float32, jnp.int32
+    seq = lambda: _shape_dtype(b, t, dtype=i32)
+    if kind == "fwd":
+        return (_shape_dtype(p), seq(), seq(), seq(), seq())
+    if kind == "train":
+        return (_shape_dtype(p), _shape_dtype(p), _shape_dtype(p),
+                _shape_dtype(p), _shape_dtype(dtype=i32),
+                seq(), seq(), seq(), seq(),
+                _shape_dtype(b, dtype=i32), _shape_dtype(c),
+                _shape_dtype(), _shape_dtype())
+    if kind == "init":
+        return (_shape_dtype(dtype=jnp.uint32),)
+    raise ValueError(kind)
+
+
+ARG_NAMES = {
+    "fwd": ["params", "addr", "delta", "pc", "tb"],
+    "train": ["params", "prev_params", "opt_m", "opt_v", "step",
+              "addr", "delta", "pc", "tb", "labels", "thrash_mask",
+              "lambda", "mu"],
+    "init": ["seed"],
+}
+
+OUT_NAMES = {
+    "fwd": ["logits"],
+    "train": ["params", "opt_m", "opt_v", "loss"],
+    "init": ["params"],
+}
+
+
+def build_all(out_dir: str, models=None, verbose: bool = True) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {
+        "config": CONFIG.to_dict(),
+        "comparator": {"hidden": COMPARATOR.hidden,
+                       "mlp_layers": COMPARATOR.mlp_layers,
+                       "cnn_kernel": COMPARATOR.cnn_kernel},
+        "models": {},
+    }
+    wanted = models or list(M.MODELS)
+    makers = {"fwd": M.make_fwd, "train": M.make_train_step,
+              "init": M.make_init}
+    for name in wanted:
+        model = M.MODELS[name]
+        p = M.spec_size(model.spec(CONFIG))
+        entry = {"param_count": p,
+                 "footprint": M.footprint(model),
+                 "artifacts": {}}
+        for kind, maker in makers.items():
+            fn = maker(model, CONFIG)
+            args = example_args(kind, p)
+            lowered = jax.jit(fn).lower(*args)
+            text = to_hlo_text(lowered)
+            fname = f"{name}_{kind}.hlo.txt"
+            path = os.path.join(out_dir, fname)
+            with open(path, "w") as f:
+                f.write(text)
+            entry["artifacts"][kind] = {
+                "file": fname,
+                "sha256": hashlib.sha256(text.encode()).hexdigest(),
+                "args": [
+                    {"name": n, "shape": list(a.shape), "dtype": str(a.dtype)}
+                    for n, a in zip(ARG_NAMES[kind], args)
+                ],
+                "outputs": OUT_NAMES[kind],
+            }
+            if verbose:
+                print(f"  {fname}: {len(text)} chars "
+                      f"({p} params)", file=sys.stderr)
+        manifest["models"][name] = entry
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts",
+                    help="artifact output directory")
+    ap.add_argument("--models", nargs="*", default=None,
+                    help="subset of models to lower (default: all)")
+    args = ap.parse_args()
+    out_dir = args.out if os.path.isabs(args.out) else os.path.normpath(
+        os.path.join(os.getcwd(), args.out))
+    build_all(out_dir, args.models)
+    print(f"artifacts written to {out_dir}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

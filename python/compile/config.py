@@ -1,0 +1,65 @@
+"""Single source of truth for predictor hyper-parameters.
+
+These dimensions are baked into the AOT artifacts (fixed shapes) and are
+exported to `artifacts/manifest.json` so the rust coordinator never has to
+guess a shape. Keep in sync with DESIGN.md §Scaled evaluation parameters.
+"""
+
+from dataclasses import dataclass, asdict, field
+
+
+@dataclass(frozen=True)
+class PredictorConfig:
+    # --- sequence / batch (paper: history length 10) ---
+    seq_len: int = 10
+    batch: int = 64
+
+    # --- vocabularies (hashed, fixed-size: incremental classes arrive over
+    # time but the table size is bounded, Section IV-B) ---
+    delta_vocab: int = 512     # output classes = page-delta classes
+    addr_vocab: int = 4096     # page-address buckets
+    pc_vocab: int = 512
+    tb_vocab: int = 1024
+
+    # --- transformer dims (dual-block, Section IV-B) ---
+    d_model: int = 32
+    n_heads: int = 2
+    d_ff: int = 64
+    n_layers: int = 1          # encoder layers per block
+
+    # --- optimizer ---
+    lr: float = 1e-3
+    beta1: float = 0.9
+    beta2: float = 0.999
+    eps: float = 1e-8
+
+    # default loss weights (runtime-tunable inputs to the train artifact)
+    lucir_lambda: float = 0.5
+    thrash_mu: float = 0.2
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    def to_dict(self) -> dict:
+        d = asdict(self)
+        d["d_head"] = self.d_head
+        return d
+
+
+@dataclass(frozen=True)
+class ComparatorConfig:
+    """Dims for the Fig-10 comparator models (LSTM / CNN / MLP).
+
+    They share the predictor's feature vocabularies and I/O contract so the
+    rust trainer can drive any of them through the same code path.
+    """
+
+    hidden: int = 64           # LSTM hidden / CNN channels / MLP width
+    mlp_layers: int = 2
+    cnn_kernel: int = 3
+
+
+CONFIG = PredictorConfig()
+COMPARATOR = ComparatorConfig()

@@ -1,0 +1,212 @@
+"""Layer-1 Pallas kernels for the page-predictor hot path.
+
+Three fused kernels cover the Transformer encoder's compute:
+
+* ``fused_attention`` — the whole scaled-dot-product attention
+  (QK^T -> softmax -> @V) for one (batch x head) grid cell in a single
+  VMEM-resident block. This is the TPU rethink of the paper's
+  tensor-core/shared-memory attention: with seq_len=10 and d_head=16 the
+  full (T, d_head) tile fits one VMEM block, so there are no HBM
+  round-trips between the three stages.
+* ``fused_ffn`` — position-wise feed-forward (x@W1+b1 -> ReLU -> @W2+b2)
+  over row blocks.
+* ``fused_layernorm`` — layer normalisation over row blocks.
+
+All kernels are invoked with ``interpret=True``: the CPU PJRT plugin in this
+image cannot execute Mosaic custom-calls, and interpret-mode lowers to plain
+HLO that round-trips through the rust loader. Real-TPU perf is estimated
+from the BlockSpec schedule in DESIGN.md §Perf.
+
+``pallas_call`` has no reverse-mode autodiff rule, so each kernel is wrapped
+in ``jax.custom_vjp``: the forward pass runs the Pallas kernel, the backward
+pass is the VJP of the pure-jnp reference (``kernels.ref``). The two are
+proven equivalent by the hypothesis sweep in ``python/tests/test_kernel.py``,
+so the gradients are exact.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# interpret=True everywhere — see module docstring.
+_INTERPRET = True
+
+
+def _row_block(n: int, cap: int = 128) -> int:
+    """Largest divisor of ``n`` that is <= cap (VMEM row-tile height)."""
+    best = 1
+    for d in range(1, min(n, cap) + 1):
+        if n % d == 0:
+            best = d
+    return best
+
+
+# ---------------------------------------------------------------------------
+# fused attention
+# ---------------------------------------------------------------------------
+
+
+def _attention_kernel(q_ref, k_ref, v_ref, o_ref, *, scale: float):
+    # Refs carry one (1, T, d_head) block per grid cell: a whole head.
+    q = q_ref[0]                       # (T, d)
+    k = k_ref[0]                       # (T, d)
+    v = v_ref[0]                       # (T, d)
+    s = jnp.dot(q, k.T) * scale        # (T, T) — stays in VMEM
+    s = s - jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    o_ref[0] = jnp.dot(p, v)           # (T, d)
+
+
+def fused_attention(q: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:
+    """Scaled-dot-product attention over ``(BH, T, d_head)`` tensors.
+
+    One grid cell per fused (batch x head) index; each cell computes the
+    complete attention for its head inside a single VMEM block.
+    """
+    bh, t, d = q.shape
+    scale = 1.0 / (d ** 0.5)
+    spec = pl.BlockSpec((1, t, d), lambda i: (i, 0, 0))
+    return pl.pallas_call(
+        functools.partial(_attention_kernel, scale=scale),
+        grid=(bh,),
+        in_specs=[spec, spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((bh, t, d), q.dtype),
+        interpret=_INTERPRET,
+    )(q, k, v)
+
+
+# ---------------------------------------------------------------------------
+# fused feed-forward
+# ---------------------------------------------------------------------------
+
+
+def _ffn_kernel(x_ref, w1_ref, b1_ref, w2_ref, b2_ref, o_ref):
+    x = x_ref[...]                     # (rows, D)
+    h = jnp.dot(x, w1_ref[...]) + b1_ref[...]
+    h = jnp.maximum(h, 0.0)
+    o_ref[...] = jnp.dot(h, w2_ref[...]) + b2_ref[...]
+
+
+def fused_ffn(x: jax.Array, w1: jax.Array, b1: jax.Array,
+              w2: jax.Array, b2: jax.Array) -> jax.Array:
+    """Position-wise FFN ``relu(x@w1+b1)@w2+b2`` over row blocks of ``x``.
+
+    ``x``: (N, D); ``w1``: (D, F); ``w2``: (F, D). Weights are broadcast to
+    every grid cell (their index_map pins block (0, 0)), so each row block
+    streams through VMEM exactly once.
+    """
+    n, d = x.shape
+    f = w1.shape[1]
+    rows = _row_block(n)
+    grid = (n // rows,)
+    return pl.pallas_call(
+        _ffn_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((rows, d), lambda i: (i, 0)),
+            pl.BlockSpec((d, f), lambda i: (0, 0)),
+            pl.BlockSpec((f,), lambda i: (0,)),
+            pl.BlockSpec((f, d), lambda i: (0, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((rows, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, d), x.dtype),
+        interpret=_INTERPRET,
+    )(x, w1, b1, w2, b2)
+
+
+# ---------------------------------------------------------------------------
+# fused layer norm
+# ---------------------------------------------------------------------------
+
+
+def _layernorm_kernel(x_ref, g_ref, b_ref, o_ref, *, eps: float):
+    x = x_ref[...]                     # (rows, D)
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mean) ** 2, axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps)
+    o_ref[...] = (x - mean) * inv * g_ref[...] + b_ref[...]
+
+
+def fused_layernorm(x: jax.Array, gamma: jax.Array, beta: jax.Array,
+                    eps: float = 1e-5) -> jax.Array:
+    """LayerNorm over the last axis of ``x`` (N, D), row-blocked."""
+    n, d = x.shape
+    rows = _row_block(n)
+    return pl.pallas_call(
+        functools.partial(_layernorm_kernel, eps=eps),
+        grid=(n // rows,),
+        in_specs=[
+            pl.BlockSpec((rows, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((rows, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, d), x.dtype),
+        interpret=_INTERPRET,
+    )(x, gamma, beta)
+
+
+# ---------------------------------------------------------------------------
+# custom-vjp wrappers: Pallas forward, reference-VJP backward
+# ---------------------------------------------------------------------------
+
+from . import ref as _ref  # noqa: E402  (late import avoids a cycle)
+
+
+@jax.custom_vjp
+def attention(q, k, v):
+    """Differentiable fused attention: Pallas fwd, ref-derived bwd."""
+    return fused_attention(q, k, v)
+
+
+def _attention_fwd(q, k, v):
+    return fused_attention(q, k, v), (q, k, v)
+
+
+def _attention_bwd(res, g):
+    _, vjp = jax.vjp(_ref.ref_attention, *res)
+    return vjp(g)
+
+
+attention.defvjp(_attention_fwd, _attention_bwd)
+
+
+@jax.custom_vjp
+def ffn(x, w1, b1, w2, b2):
+    """Differentiable fused FFN: Pallas fwd, ref-derived bwd."""
+    return fused_ffn(x, w1, b1, w2, b2)
+
+
+def _ffn_fwd(x, w1, b1, w2, b2):
+    return fused_ffn(x, w1, b1, w2, b2), (x, w1, b1, w2, b2)
+
+
+def _ffn_bwd(res, g):
+    _, vjp = jax.vjp(_ref.ref_ffn, *res)
+    return vjp(g)
+
+
+ffn.defvjp(_ffn_fwd, _ffn_bwd)
+
+
+@jax.custom_vjp
+def layernorm(x, gamma, beta):
+    """Differentiable fused LayerNorm: Pallas fwd, ref-derived bwd."""
+    return fused_layernorm(x, gamma, beta)
+
+
+def _layernorm_fwd(x, gamma, beta):
+    return fused_layernorm(x, gamma, beta), (x, gamma, beta)
+
+
+def _layernorm_bwd(res, g):
+    _, vjp = jax.vjp(_ref.ref_layernorm, *res)
+    return vjp(g)
+
+
+layernorm.defvjp(_layernorm_fwd, _layernorm_bwd)

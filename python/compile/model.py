@@ -1,0 +1,399 @@
+"""Layer-2 JAX model: the thrashing-aware incremental page predictor.
+
+This module defines, in pure JAX (calling the Layer-1 Pallas kernels):
+
+* the paper's **dual-block Transformer** page-delta predictor (Section IV-B):
+  a *regular* block over (page address, page delta) and an *irregular* block
+  over (PC, thread-block id), each a Transformer encoder, combined by
+  learnable block weights into a LUCIR-style cosine classifier head;
+* the Fig-10 **comparator models** (LSTM, CNN, MLP) behind the same
+  input/output contract;
+* the **training step**: Adam over the paper's loss
+  ``L = CE + λ·L_dis(LUCIR feature distillation) + µ·L_thra`` where
+  ``L_thra = Σ_{i∈E∪T} y_i·log p_i`` penalises probability mass on classes
+  whose pages were already evicted/thrashed (Equation 2/3);
+* flat-parameter plumbing: every model's parameters live in ONE ``f32[P]``
+  vector (unflattened inside the graph) so the rust coordinator handles
+  exactly one parameter buffer plus two Adam slots per model-table entry.
+
+Everything here is **build-time only**: ``aot.py`` lowers `fwd`/`train`/
+`init` per model to HLO text and the rust runtime executes them via PJRT.
+"""
+
+import math
+from typing import Callable, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import CONFIG, COMPARATOR, PredictorConfig
+from .kernels.attention import attention, ffn, layernorm
+
+Spec = List[Tuple[str, Tuple[int, ...]]]
+
+
+# ---------------------------------------------------------------------------
+# flat-parameter plumbing
+# ---------------------------------------------------------------------------
+
+
+def spec_size(spec: Spec) -> int:
+    """Total element count of a parameter spec."""
+    return sum(int(math.prod(s)) for _, s in spec)
+
+
+def unflatten(flat: jax.Array, spec: Spec) -> Dict[str, jax.Array]:
+    """Slice a flat f32[P] vector into named parameter arrays."""
+    out = {}
+    off = 0
+    for name, shape in spec:
+        n = int(math.prod(shape))
+        out[name] = flat[off:off + n].reshape(shape)
+        off += n
+    return out
+
+
+def init_flat(seed: jax.Array, spec: Spec) -> jax.Array:
+    """Initialise a flat parameter vector from a scalar uint32 seed.
+
+    Init policy by name suffix: embeddings N(0, 0.02); linear weights
+    scaled-normal (fan-avg); biases 0; layernorm gamma / block alphas 1;
+    cosine-head scale ``eta`` starts at 10 (LUCIR convention).
+    """
+    key = jax.random.PRNGKey(seed)
+    chunks = []
+    for i, (name, shape) in enumerate(spec):
+        sub = jax.random.fold_in(key, i)
+        n = int(math.prod(shape))
+        if name.endswith((".gamma", ".alpha")) or name == "mix.alpha":
+            chunks.append(jnp.ones((n,), jnp.float32))
+        elif name.endswith(".eta"):
+            chunks.append(jnp.full((n,), 10.0, jnp.float32))
+        elif name.endswith((".beta", ".b")):
+            chunks.append(jnp.zeros((n,), jnp.float32))
+        elif name.startswith("emb.") or name.endswith(".pos"):
+            chunks.append(0.02 * jax.random.normal(sub, (n,), jnp.float32))
+        else:
+            fan_in = shape[0] if len(shape) > 1 else n
+            fan_out = shape[-1]
+            std = math.sqrt(2.0 / (fan_in + fan_out))
+            chunks.append(std * jax.random.normal(sub, (n,), jnp.float32))
+    return jnp.concatenate(chunks)
+
+
+# ---------------------------------------------------------------------------
+# shared building blocks
+# ---------------------------------------------------------------------------
+
+
+def _linear(p: Dict[str, jax.Array], prefix: str, x: jax.Array) -> jax.Array:
+    return x @ p[f"{prefix}.w"] + p[f"{prefix}.b"]
+
+
+def _linear_spec(prefix: str, d_in: int, d_out: int) -> Spec:
+    return [(f"{prefix}.w", (d_in, d_out)), (f"{prefix}.b", (d_out,))]
+
+
+def _encoder_layer_spec(prefix: str, cfg: PredictorConfig) -> Spec:
+    d, f = cfg.d_model, cfg.d_ff
+    spec: Spec = []
+    for proj in ("wq", "wk", "wv", "wo"):
+        spec += _linear_spec(f"{prefix}.{proj}", d, d)
+    spec += [(f"{prefix}.ln1.gamma", (d,)), (f"{prefix}.ln1.beta", (d,)),
+             (f"{prefix}.ln2.gamma", (d,)), (f"{prefix}.ln2.beta", (d,))]
+    spec += _linear_spec(f"{prefix}.ffn1", d, f)
+    spec += _linear_spec(f"{prefix}.ffn2", f, d)
+    return spec
+
+
+def _encoder_layer(p: Dict[str, jax.Array], prefix: str, x: jax.Array,
+                   cfg: PredictorConfig) -> jax.Array:
+    """Pre-LN Transformer encoder layer over (B, T, D), Pallas hot path."""
+    b, t, d = x.shape
+    h, dh = cfg.n_heads, cfg.d_head
+
+    x2 = x.reshape(b * t, d)
+    normed = layernorm(x2, p[f"{prefix}.ln1.gamma"],
+                             p[f"{prefix}.ln1.beta"]).reshape(b, t, d)
+    q = _linear(p, f"{prefix}.wq", normed)
+    k = _linear(p, f"{prefix}.wk", normed)
+    v = _linear(p, f"{prefix}.wv", normed)
+
+    def split(a):  # (B, T, D) -> (B*H, T, dh)
+        return a.reshape(b, t, h, dh).transpose(0, 2, 1, 3).reshape(b * h, t, dh)
+
+    o = attention(split(q), split(k), split(v))
+    o = o.reshape(b, h, t, dh).transpose(0, 2, 1, 3).reshape(b, t, d)
+    x = x + _linear(p, f"{prefix}.wo", o)
+
+    x2 = x.reshape(b * t, d)
+    normed = layernorm(x2, p[f"{prefix}.ln2.gamma"],
+                             p[f"{prefix}.ln2.beta"])
+    ff = ffn(normed, p[f"{prefix}.ffn1.w"], p[f"{prefix}.ffn1.b"],
+                   p[f"{prefix}.ffn2.w"], p[f"{prefix}.ffn2.b"])
+    return x + ff.reshape(b, t, d)
+
+
+def _cosine_head(p: Dict[str, jax.Array], feat: jax.Array) -> jax.Array:
+    """LUCIR cosine-normalised classifier: eta * <f̂, ŵ_c>."""
+    f = feat / (jnp.linalg.norm(feat, axis=-1, keepdims=True) + 1e-8)
+    w = p["head.w"]
+    w = w / (jnp.linalg.norm(w, axis=0, keepdims=True) + 1e-8)
+    return p["head.eta"][0] * (f @ w)
+
+
+# ---------------------------------------------------------------------------
+# model definitions — all expose spec(cfg) and apply(p, addr, delta, pc, tb)
+# returning (logits[B,C], features[B,Df])
+# ---------------------------------------------------------------------------
+
+
+class DualTransformer:
+    """The paper's predictor: regular (addr+delta) and irregular (PC+TB)
+    Transformer blocks, learnable block weights, cosine head."""
+
+    name = "predictor"
+
+    @staticmethod
+    def spec(cfg: PredictorConfig = CONFIG) -> Spec:
+        d = cfg.d_model
+        spec: Spec = [
+            ("emb.addr", (cfg.addr_vocab, d)),
+            ("emb.delta", (cfg.delta_vocab, d)),
+            ("emb.pc", (cfg.pc_vocab, d)),
+            ("emb.tb", (cfg.tb_vocab, d)),
+            ("reg.pos", (cfg.seq_len, d)),
+            ("irr.pos", (cfg.seq_len, d)),
+        ]
+        for i in range(cfg.n_layers):
+            spec += _encoder_layer_spec(f"reg.l{i}", cfg)
+            spec += _encoder_layer_spec(f"irr.l{i}", cfg)
+        spec += [("mix.alpha", (2,)),
+                 ("head.w", (2 * d, cfg.delta_vocab)),
+                 ("head.eta", (1,))]
+        return spec
+
+    @staticmethod
+    def apply(p, addr, delta, pc, tb, cfg: PredictorConfig = CONFIG):
+        x_reg = p["emb.addr"][addr] + p["emb.delta"][delta] + p["reg.pos"]
+        x_irr = p["emb.pc"][pc] + p["emb.tb"][tb] + p["irr.pos"]
+        for i in range(cfg.n_layers):
+            x_reg = _encoder_layer(p, f"reg.l{i}", x_reg, cfg)
+            x_irr = _encoder_layer(p, f"irr.l{i}", x_irr, cfg)
+        f_reg = x_reg[:, -1, :]            # last-token pooling
+        f_irr = x_irr[:, -1, :]
+        a = p["mix.alpha"]
+        feat = jnp.concatenate([a[0] * f_reg, a[1] * f_irr], axis=-1)
+        return _cosine_head(p, feat), feat
+
+
+class LstmModel:
+    """Single-layer LSTM comparator (Fig 10): summed feature embeddings,
+    lax.scan recurrence, last hidden state -> cosine head."""
+
+    name = "lstm"
+
+    @staticmethod
+    def spec(cfg: PredictorConfig = CONFIG) -> Spec:
+        d, h = cfg.d_model, COMPARATOR.hidden
+        return [
+            ("emb.addr", (cfg.addr_vocab, d)),
+            ("emb.delta", (cfg.delta_vocab, d)),
+            ("emb.pc", (cfg.pc_vocab, d)),
+            ("emb.tb", (cfg.tb_vocab, d)),
+            ("lstm.wi", (d, 4 * h)),
+            ("lstm.wh", (h, 4 * h)),
+            ("lstm.b", (4 * h,)),
+            ("head.w", (h, cfg.delta_vocab)),
+            ("head.eta", (1,)),
+        ]
+
+    @staticmethod
+    def apply(p, addr, delta, pc, tb, cfg: PredictorConfig = CONFIG):
+        x = (p["emb.addr"][addr] + p["emb.delta"][delta]
+             + p["emb.pc"][pc] + p["emb.tb"][tb])     # (B, T, D)
+        b = x.shape[0]
+        h_dim = COMPARATOR.hidden
+
+        def step(carry, xt):
+            h, c = carry
+            z = xt @ p["lstm.wi"] + h @ p["lstm.wh"] + p["lstm.b"]
+            i, f, g, o = jnp.split(z, 4, axis=-1)
+            c = jax.nn.sigmoid(f) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+            h = jax.nn.sigmoid(o) * jnp.tanh(c)
+            return (h, c), None
+
+        init = (jnp.zeros((b, h_dim)), jnp.zeros((b, h_dim)))
+        (h, _), _ = jax.lax.scan(step, init, x.transpose(1, 0, 2))
+        return _cosine_head(p, h), h
+
+
+class CnnModel:
+    """1-D convolutional comparator: conv over time, global max pool."""
+
+    name = "cnn"
+
+    @staticmethod
+    def spec(cfg: PredictorConfig = CONFIG) -> Spec:
+        d, h, k = cfg.d_model, COMPARATOR.hidden, COMPARATOR.cnn_kernel
+        return [
+            ("emb.addr", (cfg.addr_vocab, d)),
+            ("emb.delta", (cfg.delta_vocab, d)),
+            ("emb.pc", (cfg.pc_vocab, d)),
+            ("emb.tb", (cfg.tb_vocab, d)),
+            ("cnn.w", (k, d, h)),          # (width, in, out)
+            ("cnn.b", (h,)),
+            ("head.w", (h, cfg.delta_vocab)),
+            ("head.eta", (1,)),
+        ]
+
+    @staticmethod
+    def apply(p, addr, delta, pc, tb, cfg: PredictorConfig = CONFIG):
+        x = (p["emb.addr"][addr] + p["emb.delta"][delta]
+             + p["emb.pc"][pc] + p["emb.tb"][tb])     # (B, T, D)
+        y = jax.lax.conv_general_dilated(
+            x, p["cnn.w"], window_strides=(1,), padding="SAME",
+            dimension_numbers=("NWC", "WIO", "NWC"))
+        y = jnp.maximum(y + p["cnn.b"], 0.0)
+        feat = jnp.max(y, axis=1)                     # (B, H)
+        return _cosine_head(p, feat), feat
+
+
+class MlpModel:
+    """Flatten-the-window MLP comparator."""
+
+    name = "mlp"
+
+    @staticmethod
+    def spec(cfg: PredictorConfig = CONFIG) -> Spec:
+        d, h = cfg.d_model, COMPARATOR.hidden
+        return [
+            ("emb.addr", (cfg.addr_vocab, d)),
+            ("emb.delta", (cfg.delta_vocab, d)),
+            ("emb.pc", (cfg.pc_vocab, d)),
+            ("emb.tb", (cfg.tb_vocab, d)),
+            ("mlp.fc1.w", (cfg.seq_len * d, h)),
+            ("mlp.fc1.b", (h,)),
+            ("mlp.fc2.w", (h, h)),
+            ("mlp.fc2.b", (h,)),
+            ("head.w", (h, cfg.delta_vocab)),
+            ("head.eta", (1,)),
+        ]
+
+    @staticmethod
+    def apply(p, addr, delta, pc, tb, cfg: PredictorConfig = CONFIG):
+        x = (p["emb.addr"][addr] + p["emb.delta"][delta]
+             + p["emb.pc"][pc] + p["emb.tb"][tb])     # (B, T, D)
+        x = x.reshape(x.shape[0], -1)
+        h = jnp.maximum(_linear(p, "mlp.fc1", x), 0.0)
+        h = jnp.maximum(_linear(p, "mlp.fc2", h), 0.0)
+        return _cosine_head(p, h), h
+
+
+MODELS = {m.name: m for m in (DualTransformer, LstmModel, CnnModel, MlpModel)}
+
+
+# ---------------------------------------------------------------------------
+# loss + training step (shared by all models)
+# ---------------------------------------------------------------------------
+
+
+def _loss(flat, prev_flat, addr, delta, pc, tb, labels, thrash_mask,
+          lam, mu, model, cfg: PredictorConfig):
+    """Paper Equation 3: mean(CE + λ·L_dis) + µ·mean_S(L_thra)."""
+    spec = model.spec(cfg)
+    logits, feat = model.apply(unflatten(flat, spec), addr, delta, pc, tb, cfg)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    lp_label = jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    ce = -jnp.mean(lp_label)
+
+    # LUCIR L_dis^G: keep current features oriented like the previous
+    # model's (cosine distillation). The previous model is frozen.
+    _, feat_prev = model.apply(unflatten(prev_flat, spec),
+                               addr, delta, pc, tb, cfg)
+    feat_prev = jax.lax.stop_gradient(feat_prev)
+    cos = jnp.sum(feat * feat_prev, axis=-1) / (
+        jnp.linalg.norm(feat, axis=-1) * jnp.linalg.norm(feat_prev, axis=-1)
+        + 1e-8)
+    dis = jnp.mean(1.0 - cos)
+
+    # Thrashing term (Equation 2): for samples whose label class maps to an
+    # evicted/thrashed page, ADD y·log p — minimising the total pushes
+    # probability mass away from those classes.
+    w = thrash_mask[labels]                     # (B,) in {0,1}
+    thra = jnp.sum(w * lp_label) / jnp.maximum(jnp.sum(w), 1.0)
+
+    return ce + lam * dis + mu * thra
+
+
+def make_fwd(model, cfg: PredictorConfig = CONFIG) -> Callable:
+    """(params, addr, delta, pc, tb) -> (logits,) for AOT lowering."""
+    spec = model.spec(cfg)
+
+    def fwd(flat, addr, delta, pc, tb):
+        logits, _ = model.apply(unflatten(flat, spec), addr, delta, pc, tb, cfg)
+        return (logits,)
+
+    return fwd
+
+
+def make_train_step(model, cfg: PredictorConfig = CONFIG) -> Callable:
+    """One Adam step over the paper's loss; returns updated state + loss.
+
+    Signature (all fixed shapes):
+      (params[P], prev_params[P], m[P], v[P], step i32,
+       addr[B,T] i32, delta[B,T] i32, pc[B,T] i32, tb[B,T] i32,
+       labels[B] i32, thrash_mask[C] f32, lam f32, mu f32)
+      -> (params'[P], m'[P], v'[P], loss f32)
+    """
+
+    def train(flat, prev_flat, m, v, step, addr, delta, pc, tb, labels,
+              thrash_mask, lam, mu):
+        loss, g = jax.value_and_grad(_loss)(
+            flat, prev_flat, addr, delta, pc, tb, labels, thrash_mask,
+            lam, mu, model, cfg)
+        t = (step + 1).astype(jnp.float32)
+        m = cfg.beta1 * m + (1 - cfg.beta1) * g
+        v = cfg.beta2 * v + (1 - cfg.beta2) * g * g
+        mhat = m / (1 - cfg.beta1 ** t)
+        vhat = v / (1 - cfg.beta2 ** t)
+        flat = flat - cfg.lr * mhat / (jnp.sqrt(vhat) + cfg.eps)
+        return (flat, m, v, loss)
+
+    return train
+
+
+def make_init(model, cfg: PredictorConfig = CONFIG) -> Callable:
+    """(seed u32) -> (params[P],) fresh flat parameters."""
+    spec = model.spec(cfg)
+
+    def init(seed):
+        return (init_flat(seed, spec),)
+
+    return init
+
+
+# ---------------------------------------------------------------------------
+# footprint accounting (paper Table IV)
+# ---------------------------------------------------------------------------
+
+
+def footprint(model, cfg: PredictorConfig = CONFIG,
+              bits: int = 5) -> Dict[str, float]:
+    """Analytic memory footprint in MB following paper Equation 4:
+    ``Total = (Params×2 + Activations) × Patterns`` with ``bits``-wide
+    quantisation (the paper clamps to [-16, 16] => 5 bits suffice)."""
+    p_count = spec_size(model.spec(cfg))
+    b, t, d = cfg.batch, cfg.seq_len, cfg.d_model
+    # activation estimate: embeddings + per-layer (qkv+o, attn probs, ffn)
+    act = 2 * b * t * d                        # two block input embeddings
+    for _ in range(cfg.n_layers):
+        act += 2 * (4 * b * t * d              # q, k, v, o
+                    + b * cfg.n_heads * t * t  # attention probabilities
+                    + b * t * cfg.d_ff)        # ffn hidden
+    act += b * 2 * d + b * cfg.delta_vocab     # features + logits
+    params_mb = p_count * bits / 8 / 2 ** 20
+    act_mb = act * bits / 8 / 2 ** 20
+    return {"params_mb": params_mb, "activations_mb": act_mb,
+            "param_count": p_count,
+            "total_mb_per_pattern": 2 * params_mb + act_mb}

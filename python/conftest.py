@@ -1,0 +1,6 @@
+import os
+import sys
+
+# Make `compile` (the build-time package) importable regardless of how
+# pytest is invoked.
+sys.path.insert(0, os.path.dirname(__file__))

@@ -1,0 +1,81 @@
+"""AOT pipeline: HLO-text lowering contract + manifest integrity.
+
+A tiny function is lowered end-to-end (fast), and if `make artifacts` has
+already produced the real artifacts, their manifest is cross-checked
+against the live model specs.
+"""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, model as M
+from compile.config import CONFIG
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_to_hlo_text_roundtrippable():
+    def fn(x, y):
+        return (jnp.matmul(x, y) + 2.0,)
+
+    spec = jax.ShapeDtypeStruct((2, 2), jnp.float32)
+    text = aot.to_hlo_text(jax.jit(fn).lower(spec, spec))
+    # must be textual HLO the xla crate's parser accepts: has an ENTRY
+    # computation and a tuple root (return_tuple=True)
+    assert "ENTRY" in text
+    assert "tuple" in text
+    assert "HloModule" in text
+
+
+def test_example_args_order_matches_names():
+    for kind in ("fwd", "train", "init"):
+        args = aot.example_args(kind, 128)
+        assert len(args) == len(aot.ARG_NAMES[kind])
+
+
+def test_train_args_paper_shapes():
+    p = 1000
+    args = aot.example_args("train", p)
+    named = dict(zip(aot.ARG_NAMES["train"], args))
+    assert named["params"].shape == (p,)
+    assert named["thrash_mask"].shape == (CONFIG.delta_vocab,)
+    assert named["labels"].shape == (CONFIG.batch,)
+    assert named["addr"].shape == (CONFIG.batch, CONFIG.seq_len)
+    assert named["step"].dtype == jnp.int32
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ART, "manifest.json")),
+                    reason="run `make artifacts` first")
+def test_manifest_consistent_with_models():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        manifest = json.load(f)
+    assert manifest["config"]["seq_len"] == CONFIG.seq_len
+    assert manifest["config"]["delta_vocab"] == CONFIG.delta_vocab
+    for name, model in M.MODELS.items():
+        entry = manifest["models"][name]
+        assert entry["param_count"] == M.spec_size(model.spec(CONFIG))
+        for kind in ("fwd", "train", "init"):
+            art = entry["artifacts"][kind]
+            path = os.path.join(ART, art["file"])
+            assert os.path.exists(path), path
+            assert art["outputs"] == aot.OUT_NAMES[kind]
+            # declared arg count matches the lowering contract
+            assert len(art["args"]) == len(aot.ARG_NAMES[kind])
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ART, "manifest.json")),
+                    reason="run `make artifacts` first")
+def test_artifact_hlo_text_parses_back():
+    """The flagship artifact must be loadable by the same XLA version the
+    rust crate wraps (text parser reassigns 64-bit ids)."""
+    from jax._src.lib import xla_client as xc
+    with open(os.path.join(ART, "manifest.json")) as f:
+        manifest = json.load(f)
+    fname = manifest["models"]["predictor"]["artifacts"]["fwd"]["file"]
+    text = open(os.path.join(ART, fname)).read()
+    assert text.startswith("HloModule")
+    assert "ENTRY" in text

@@ -1,0 +1,169 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracle (``kernels.ref``).
+
+This is the CORE numeric signal of the stack: the same kernels land in the
+AOT HLO the rust coordinator executes, and the custom-vjp backward passes
+are exact only if forward == reference. Hypothesis sweeps shapes/dtypes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attention as K
+from compile.kernels import ref as R
+
+jax.config.update("jax_platform_name", "cpu")
+
+F32_TOL = dict(rtol=1e-5, atol=1e-5)
+
+
+def _rand(key, shape, dtype=jnp.float32):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# fused_attention
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(bh=st.integers(1, 16), t=st.integers(1, 24), d=st.integers(1, 32),
+       seed=st.integers(0, 2 ** 16))
+def test_attention_matches_ref(bh, t, d, seed):
+    q = _rand(seed, (bh, t, d))
+    k = _rand(seed + 1, (bh, t, d))
+    v = _rand(seed + 2, (bh, t, d))
+    np.testing.assert_allclose(K.fused_attention(q, k, v),
+                               R.ref_attention(q, k, v), **F32_TOL)
+
+
+def test_attention_paper_shape():
+    # The exact shape baked into the predictor artifact: B*H=128, T=10, dh=16.
+    q, k, v = (_rand(i, (128, 10, 16)) for i in range(3))
+    np.testing.assert_allclose(K.fused_attention(q, k, v),
+                               R.ref_attention(q, k, v), **F32_TOL)
+
+
+def test_attention_rows_sum_to_one_property():
+    # softmax(QK^T) rows are a convex combination: attention output of
+    # constant V must be that constant.
+    q = _rand(0, (4, 10, 16))
+    k = _rand(1, (4, 10, 16))
+    v = jnp.full((4, 10, 16), 3.25)
+    np.testing.assert_allclose(K.fused_attention(q, k, v), v, **F32_TOL)
+
+
+def test_attention_large_logits_stable():
+    # The in-kernel max-subtraction must survive large score magnitudes.
+    q = 100.0 * _rand(0, (2, 8, 16))
+    k = 100.0 * _rand(1, (2, 8, 16))
+    v = _rand(2, (2, 8, 16))
+    out = K.fused_attention(q, k, v)
+    assert bool(jnp.all(jnp.isfinite(out)))
+    np.testing.assert_allclose(out, R.ref_attention(q, k, v),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_attention_grad_matches_ref_grad():
+    q, k, v = (_rand(i, (4, 10, 16)) for i in range(3))
+
+    def f_pallas(q, k, v):
+        return jnp.sum(K.attention(q, k, v) ** 2)
+
+    def f_ref(q, k, v):
+        return jnp.sum(R.ref_attention(q, k, v) ** 2)
+
+    gp = jax.grad(f_pallas, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(f_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(gp, gr):
+        np.testing.assert_allclose(a, b, **F32_TOL)
+
+
+# ---------------------------------------------------------------------------
+# fused_ffn
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(1, 256), d=st.integers(1, 48), f=st.integers(1, 96),
+       seed=st.integers(0, 2 ** 16))
+def test_ffn_matches_ref(n, d, f, seed):
+    x = _rand(seed, (n, d))
+    w1 = _rand(seed + 1, (d, f))
+    b1 = _rand(seed + 2, (f,))
+    w2 = _rand(seed + 3, (f, d))
+    b2 = _rand(seed + 4, (d,))
+    np.testing.assert_allclose(K.fused_ffn(x, w1, b1, w2, b2),
+                               R.ref_ffn(x, w1, b1, w2, b2),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_ffn_grad_matches_ref_grad():
+    x = _rand(0, (64, 32))
+    w1, b1 = _rand(1, (32, 64)), _rand(2, (64,))
+    w2, b2 = _rand(3, (64, 32)), _rand(4, (32,))
+
+    def loss(fn):
+        return lambda *a: jnp.sum(fn(*a) ** 2)
+
+    gp = jax.grad(loss(K.ffn), argnums=(0, 1, 2, 3, 4))(x, w1, b1, w2, b2)
+    gr = jax.grad(loss(R.ref_ffn), argnums=(0, 1, 2, 3, 4))(x, w1, b1, w2, b2)
+    for a, b in zip(gp, gr):
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# fused_layernorm
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(1, 256), d=st.integers(2, 64),
+       seed=st.integers(0, 2 ** 16))
+def test_layernorm_matches_ref(n, d, seed):
+    x = _rand(seed, (n, d))
+    g = _rand(seed + 1, (d,))
+    b = _rand(seed + 2, (d,))
+    np.testing.assert_allclose(K.fused_layernorm(x, g, b),
+                               R.ref_layernorm(x, g, b), **F32_TOL)
+
+
+def test_layernorm_normalises():
+    x = 5.0 + 3.0 * _rand(0, (32, 32))
+    out = K.fused_layernorm(x, jnp.ones(32), jnp.zeros(32))
+    np.testing.assert_allclose(jnp.mean(out, -1), jnp.zeros(32),
+                               atol=1e-5)
+    np.testing.assert_allclose(jnp.std(out, -1), jnp.ones(32), atol=1e-3)
+
+
+def test_layernorm_grad_matches_ref_grad():
+    x, g, b = _rand(0, (64, 32)), _rand(1, (32,)), _rand(2, (32,))
+
+    def loss(fn):
+        return lambda *a: jnp.sum(jnp.sin(fn(*a)))
+
+    gp = jax.grad(loss(K.layernorm), argnums=(0, 1, 2))(x, g, b)
+    gr = jax.grad(loss(R.ref_layernorm), argnums=(0, 1, 2))(x, g, b)
+    for a, b_ in zip(gp, gr):
+        np.testing.assert_allclose(a, b_, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# row-block helper
+# ---------------------------------------------------------------------------
+
+
+@given(n=st.integers(1, 4096))
+@settings(max_examples=50, deadline=None)
+def test_row_block_divides(n):
+    rb = K._row_block(n)
+    assert 1 <= rb <= 128
+    assert n % rb == 0
+
+
+def test_row_block_prefers_large_tiles():
+    assert K._row_block(640) == 128
+    assert K._row_block(64) == 64
+    assert K._row_block(13) == 13  # prime < cap: whole array

@@ -1,0 +1,245 @@
+"""L2 correctness: predictor/comparator models, loss semantics, train step.
+
+Uses a *small* config (tiny vocabularies, batch 8) so the full matrix of
+models runs in seconds; the paper-scale config is exercised once for the
+predictor (shape parity with the AOT artifacts).
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.config import CONFIG, PredictorConfig
+
+jax.config.update("jax_platform_name", "cpu")
+
+SMALL = dataclasses.replace(
+    CONFIG, batch=8, seq_len=10, delta_vocab=32, addr_vocab=64,
+    pc_vocab=16, tb_vocab=16, d_model=8, n_heads=2, d_ff=16)
+
+
+def _batch(cfg, seed=0):
+    rng = np.random.default_rng(seed)
+    b, t = cfg.batch, cfg.seq_len
+    mk = lambda hi, shape: jnp.asarray(rng.integers(0, hi, shape), jnp.int32)
+    return (mk(cfg.addr_vocab, (b, t)), mk(cfg.delta_vocab, (b, t)),
+            mk(cfg.pc_vocab, (b, t)), mk(cfg.tb_vocab, (b, t)),
+            mk(cfg.delta_vocab, (b,)))
+
+
+# ---------------------------------------------------------------------------
+# flat-param plumbing
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", list(M.MODELS))
+def test_unflatten_roundtrip(name):
+    spec = M.MODELS[name].spec(SMALL)
+    p = M.spec_size(spec)
+    flat = jnp.arange(p, dtype=jnp.float32)
+    parts = M.unflatten(flat, spec)
+    # every element lands exactly once, in spec order
+    rebuilt = jnp.concatenate([parts[n].reshape(-1) for n, _ in spec])
+    np.testing.assert_array_equal(rebuilt, flat)
+
+
+@pytest.mark.parametrize("name", list(M.MODELS))
+def test_init_deterministic_and_structured(name):
+    spec = M.MODELS[name].spec(SMALL)
+    a = M.init_flat(jnp.uint32(7), spec)
+    b = M.init_flat(jnp.uint32(7), spec)
+    c = M.init_flat(jnp.uint32(8), spec)
+    np.testing.assert_array_equal(a, b)
+    assert not np.array_equal(np.asarray(a), np.asarray(c))
+    parts = M.unflatten(a, spec)
+    # init policy invariants
+    for n, _ in spec:
+        if n.endswith(".gamma") or n == "mix.alpha":
+            np.testing.assert_array_equal(parts[n], jnp.ones_like(parts[n]))
+        if n.endswith(".eta"):
+            np.testing.assert_array_equal(parts[n], 10.0 * jnp.ones_like(parts[n]))
+        if n.endswith(".beta") or n.endswith(".b"):
+            np.testing.assert_array_equal(parts[n], jnp.zeros_like(parts[n]))
+
+
+# ---------------------------------------------------------------------------
+# forward contracts
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", list(M.MODELS))
+def test_forward_shapes_and_finite(name):
+    model = M.MODELS[name]
+    spec = model.spec(SMALL)
+    flat = M.init_flat(jnp.uint32(0), spec)
+    addr, delta, pc, tb, _ = _batch(SMALL)
+    logits, feat = model.apply(M.unflatten(flat, spec), addr, delta, pc, tb, SMALL)
+    assert logits.shape == (SMALL.batch, SMALL.delta_vocab)
+    assert feat.ndim == 2 and feat.shape[0] == SMALL.batch
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_predictor_paper_scale_shapes():
+    model = M.MODELS["predictor"]
+    spec = model.spec(CONFIG)
+    flat = M.init_flat(jnp.uint32(0), spec)
+    addr, delta, pc, tb, _ = _batch(CONFIG)
+    logits, feat = model.apply(M.unflatten(flat, spec), addr, delta, pc, tb, CONFIG)
+    assert logits.shape == (CONFIG.batch, CONFIG.delta_vocab)
+    assert feat.shape == (CONFIG.batch, 2 * CONFIG.d_model)
+
+
+def test_cosine_head_bounded_by_eta():
+    # cosine head: |logit| <= eta since both vectors are unit-norm.
+    model = M.MODELS["predictor"]
+    spec = model.spec(SMALL)
+    flat = M.init_flat(jnp.uint32(3), spec)
+    addr, delta, pc, tb, _ = _batch(SMALL)
+    logits, _ = model.apply(M.unflatten(flat, spec), addr, delta, pc, tb, SMALL)
+    assert float(jnp.max(jnp.abs(logits))) <= 10.0 + 1e-4
+
+
+def test_block_weights_gate_blocks():
+    # zeroing mix.alpha[1] must make the irregular inputs irrelevant.
+    model = M.MODELS["predictor"]
+    spec = model.spec(SMALL)
+    flat = M.init_flat(jnp.uint32(0), spec)
+    parts = M.unflatten(flat, spec)
+    parts["mix.alpha"] = jnp.asarray([1.0, 0.0])
+    addr, delta, pc, tb, _ = _batch(SMALL)
+    pc2 = (pc + 3) % SMALL.pc_vocab
+    tb2 = (tb + 5) % SMALL.tb_vocab
+    l1, _ = model.apply(parts, addr, delta, pc, tb, SMALL)
+    l2, _ = model.apply(parts, addr, delta, pc2, tb2, SMALL)
+    np.testing.assert_allclose(l1, l2, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# loss semantics
+# ---------------------------------------------------------------------------
+
+
+def _loss_args(cfg, mask=None, lam=0.0, mu=0.0, seed=0):
+    model = M.MODELS["predictor"]
+    spec = model.spec(cfg)
+    flat = M.init_flat(jnp.uint32(seed), spec)
+    addr, delta, pc, tb, labels = _batch(cfg, seed)
+    if mask is None:
+        mask = jnp.zeros((cfg.delta_vocab,), jnp.float32)
+    return (flat, flat, addr, delta, pc, tb, labels, mask,
+            jnp.float32(lam), jnp.float32(mu), model, cfg)
+
+
+def test_loss_reduces_to_ce_when_weights_zero():
+    args = _loss_args(SMALL, lam=0.0, mu=0.0)
+    loss = M._loss(*args)
+    # plain CE of an init model over C classes starts near log(C)
+    assert 0.0 < float(loss) < 2 * np.log(SMALL.delta_vocab)
+
+
+def test_distillation_zero_against_self():
+    # prev == current params -> cosine distance 0 -> λ has no effect.
+    a0 = M._loss(*_loss_args(SMALL, lam=0.0))
+    a1 = M._loss(*_loss_args(SMALL, lam=123.0))
+    np.testing.assert_allclose(a0, a1, rtol=1e-5, atol=1e-5)
+
+
+def test_thrash_term_sign():
+    # Marking all classes as thrashed ADDS Σ y log p (negative), so the
+    # total loss must go DOWN by exactly µ·mean(log p_label) — i.e. the
+    # optimiser is rewarded for reducing p on thrashed classes.
+    mask_all = jnp.ones((SMALL.delta_vocab,), jnp.float32)
+    l_no = M._loss(*_loss_args(SMALL, mask=None, mu=1.0))
+    l_yes = M._loss(*_loss_args(SMALL, mask=mask_all, mu=1.0))
+    assert float(l_yes) < float(l_no)
+
+
+def test_thrash_term_pushes_mass_off_masked_classes():
+    model = M.MODELS["predictor"]
+    cfg = SMALL
+    spec = model.spec(cfg)
+    train = M.make_train_step(model, cfg)
+    addr, delta, pc, tb, labels = _batch(cfg)
+    mask = jnp.zeros((cfg.delta_vocab,), jnp.float32).at[labels].set(1.0)
+
+    def run(mu):
+        flat = M.init_flat(jnp.uint32(0), spec)
+        m = jnp.zeros_like(flat)
+        v = jnp.zeros_like(flat)
+        prev = flat
+        for i in range(30):
+            flat, m, v, _ = train(flat, prev, m, v, jnp.int32(i), addr,
+                                  delta, pc, tb, labels, mask * mu,
+                                  jnp.float32(0.0), jnp.float32(1.0))
+        logits, _ = model.apply(M.unflatten(flat, spec), addr, delta, pc, tb, cfg)
+        p = jax.nn.softmax(logits, -1)
+        return float(jnp.mean(jnp.take_along_axis(p, labels[:, None], 1)))
+
+    # with the term active, label-probability of thrashed classes stays lower
+    assert run(mu=1.0) < run(mu=0.0)
+
+
+@pytest.mark.parametrize("name", list(M.MODELS))
+def test_train_step_decreases_loss(name):
+    model = M.MODELS[name]
+    cfg = SMALL
+    spec = model.spec(cfg)
+    train = jax.jit(M.make_train_step(model, cfg))
+    addr, delta, pc, tb, labels = _batch(cfg)
+    mask = jnp.zeros((cfg.delta_vocab,), jnp.float32)
+    flat = M.init_flat(jnp.uint32(0), spec)
+    prev = flat
+    m = jnp.zeros_like(flat)
+    v = jnp.zeros_like(flat)
+    losses = []
+    for i in range(20):
+        flat, m, v, loss = train(flat, prev, m, v, jnp.int32(i), addr, delta,
+                                 pc, tb, labels, mask, jnp.float32(0.1),
+                                 jnp.float32(0.0))
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] * 0.8, losses
+
+
+def test_train_step_pure():
+    # same inputs -> identical outputs (required for the AOT contract)
+    model = M.MODELS["mlp"]
+    cfg = SMALL
+    spec = model.spec(cfg)
+    train = M.make_train_step(model, cfg)
+    addr, delta, pc, tb, labels = _batch(cfg)
+    mask = jnp.zeros((cfg.delta_vocab,), jnp.float32)
+    flat = M.init_flat(jnp.uint32(0), spec)
+    z = jnp.zeros_like(flat)
+    o1 = train(flat, flat, z, z, jnp.int32(0), addr, delta, pc, tb, labels,
+               mask, jnp.float32(0.5), jnp.float32(0.2))
+    o2 = train(flat, flat, z, z, jnp.int32(0), addr, delta, pc, tb, labels,
+               mask, jnp.float32(0.5), jnp.float32(0.2))
+    for a, b in zip(o1, o2):
+        np.testing.assert_array_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# footprint accounting (paper Table IV)
+# ---------------------------------------------------------------------------
+
+
+def test_footprint_matches_equation4():
+    fp = M.footprint(M.MODELS["predictor"], CONFIG, bits=5)
+    # Total per pattern = Params×2 + Activations (Equation 4 before the
+    # ×Patterns factor applied by the rust side).
+    np.testing.assert_allclose(
+        fp["total_mb_per_pattern"],
+        2 * fp["params_mb"] + fp["activations_mb"])
+    # paper Table IV reports sub-MB params with quantisation; ours must be
+    # in the same order of magnitude
+    assert 0.05 < fp["params_mb"] < 2.0
+
+
+def test_footprint_param_count_consistent():
+    for name, model in M.MODELS.items():
+        fp = M.footprint(model, SMALL)
+        assert fp["param_count"] == M.spec_size(model.spec(SMALL))

@@ -1,0 +1,92 @@
+//! Minimal criterion-style bench harness (criterion is not in the
+//! vendored crate set). Prints `name  time: [median]  thrpt: [x/s]`
+//! lines compatible with eyeballing and `bench_output.txt` diffing.
+//!
+//! Method: warm up, then run batches until ≥ `MIN_TIME`, report the
+//! median of per-iteration times across batches.
+
+use std::time::{Duration, Instant};
+
+const WARMUP: Duration = Duration::from_millis(300);
+const MIN_TIME: Duration = Duration::from_millis(1200);
+const MAX_ITERS: u64 = 1_000_000_000;
+
+pub struct Bench {
+    group: String,
+}
+
+impl Bench {
+    pub fn new(group: &str) -> Bench {
+        println!("# group: {group}");
+        Bench { group: group.to_string() }
+    }
+
+    /// Time `f`; `elems` is the per-iteration element count for
+    /// throughput reporting (0 = skip throughput).
+    pub fn bench<F: FnMut()>(&self, name: &str, elems: u64, mut f: F) {
+        // warmup
+        let start = Instant::now();
+        let mut warm_iters = 0u64;
+        while start.elapsed() < WARMUP && warm_iters < MAX_ITERS {
+            f();
+            warm_iters += 1;
+        }
+        let per_iter_est = WARMUP
+            .checked_div(warm_iters.max(1) as u32)
+            .unwrap_or(Duration::from_nanos(1))
+            .max(Duration::from_nanos(1));
+        let batch = (Duration::from_millis(100).as_nanos()
+            / per_iter_est.as_nanos().max(1)) as u64;
+        let batch = batch.clamp(1, 1_000_000);
+
+        let mut samples: Vec<f64> = Vec::new();
+        let bench_start = Instant::now();
+        while bench_start.elapsed() < MIN_TIME || samples.len() < 5 {
+            let t0 = Instant::now();
+            for _ in 0..batch {
+                f();
+            }
+            samples.push(t0.elapsed().as_secs_f64() / batch as f64);
+            if samples.len() > 200 {
+                break;
+            }
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = samples[samples.len() / 2];
+        let fmt = format_time(median);
+        if elems > 0 {
+            let thrpt = elems as f64 / median;
+            println!(
+                "{}/{name:<40} time: [{fmt}]  thrpt: [{}]",
+                self.group,
+                format_thrpt(thrpt)
+            );
+        } else {
+            println!("{}/{name:<40} time: [{fmt}]", self.group);
+        }
+    }
+}
+
+fn format_time(secs: f64) -> String {
+    if secs >= 1.0 {
+        format!("{secs:.3} s")
+    } else if secs >= 1e-3 {
+        format!("{:.3} ms", secs * 1e3)
+    } else if secs >= 1e-6 {
+        format!("{:.3} µs", secs * 1e6)
+    } else {
+        format!("{:.1} ns", secs * 1e9)
+    }
+}
+
+fn format_thrpt(per_sec: f64) -> String {
+    if per_sec >= 1e9 {
+        format!("{:.3} Gelem/s", per_sec / 1e9)
+    } else if per_sec >= 1e6 {
+        format!("{:.3} Melem/s", per_sec / 1e6)
+    } else if per_sec >= 1e3 {
+        format!("{:.3} Kelem/s", per_sec / 1e3)
+    } else {
+        format!("{per_sec:.1} elem/s")
+    }
+}

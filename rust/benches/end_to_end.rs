@@ -1,0 +1,61 @@
+//! End-to-end grid-cell benchmarks: the wall-clock cost of regenerating
+//! one (workload × strategy) cell of each paper table, including the
+//! full intelligent framework with live PJRT training when artifacts are
+//! present. These are the numbers that bound `repro exp all`.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use std::rc::Rc;
+
+use common::Bench;
+use uvmio::config::Scale;
+use uvmio::coordinator::{
+    online_accuracy, run_intelligent, run_rule_based, RunSpec, Strategy,
+    TrainOpts,
+};
+use uvmio::predictor::features::samples_from_trace;
+use uvmio::predictor::IntelligentConfig;
+use uvmio::runtime::{Manifest, Runtime};
+use uvmio::trace::workloads::Workload;
+
+fn main() {
+    let b = Bench::new("end_to_end");
+    let trace = Workload::Hotspot.generate(Scale::default(), 42);
+    let events = trace.accesses.len() as u64;
+
+    for s in [Strategy::Baseline, Strategy::UvmSmart, Strategy::DemandBelady] {
+        let spec = RunSpec::new(&trace, 125);
+        let name = format!("cell/Hotspot@125/{}", s.name());
+        b.bench(&name, events, || {
+            std::hint::black_box(run_rule_based(&spec, s));
+        });
+    }
+
+    let dir = Manifest::default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("intelligent benches skipped: run `make artifacts`");
+        return;
+    }
+    let runtime = Runtime::new(&dir).expect("runtime");
+    let model = Rc::new(runtime.model("predictor").expect("predictor"));
+
+    // the full framework: simulation + online PJRT training + inference
+    let spec = RunSpec::new(&trace, 125);
+    b.bench("cell/Hotspot@125/Intelligent", events, || {
+        std::hint::black_box(
+            run_intelligent(&spec, &model, &runtime, IntelligentConfig::default())
+                .unwrap(),
+        );
+    });
+
+    // one accuracy harness pass (Fig 4 cell)
+    let dims = uvmio::coordinator::feat_dims(&runtime);
+    let (samples, _) = samples_from_trace(&trace, dims);
+    b.bench("accuracy/Hotspot/online", samples.len() as u64, || {
+        std::hint::black_box(
+            online_accuracy(&model, &dims, &samples, &TrainOpts::default(), None)
+                .unwrap(),
+        );
+    });
+}

@@ -1,0 +1,89 @@
+//! Policy microbenchmarks: per-operation cost of every evictor and the
+//! tree prefetcher — these run on the simulator's per-fault path, so
+//! they must stay far below the per-event budget.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use common::Bench;
+use uvmio::policy::belady::{belady_for_sequence, count_misses};
+use uvmio::policy::hpe::Hpe;
+use uvmio::policy::lru::Lru;
+use uvmio::policy::random::RandomEvict;
+use uvmio::policy::tree_evict::TreeEvict;
+use uvmio::policy::tree_prefetch::TreePrefetcher;
+use uvmio::policy::{Evictor, Prefetcher};
+use uvmio::sim::DeviceMemory;
+use uvmio::trace::Access;
+use uvmio::util::rng::Rng;
+
+fn acc(page: u64) -> Access {
+    Access { page, pc: 0, tb: 0, kernel: 0, inst_gap: 0, is_write: false }
+}
+
+/// replacement-only workload: random pages over capacity
+fn churn<E: Evictor>(ev: &mut E, seq: &[u64], capacity: usize) {
+    count_misses(seq, capacity, ev);
+}
+
+fn main() {
+    let b = Bench::new("policies");
+    let mut rng = Rng::new(1);
+    let seq: Vec<u64> = (0..20_000).map(|_| rng.below(4096)).collect();
+    let n = seq.len() as u64;
+
+    b.bench("evict/LRU/churn20k", n, || {
+        churn(&mut Lru::new(), &seq, 2048);
+    });
+    b.bench("evict/Random/churn20k", n, || {
+        churn(&mut RandomEvict::new(3), &seq, 2048);
+    });
+    b.bench("evict/HPE/churn20k", n, || {
+        churn(&mut Hpe::new(), &seq, 2048);
+    });
+    b.bench("evict/TreeEvict/churn20k", n, || {
+        churn(&mut TreeEvict::new(), &seq, 2048);
+    });
+    b.bench("evict/Belady/churn20k(incl-oracle-build)", n, || {
+        churn(&mut belady_for_sequence(&seq), &seq, 2048);
+    });
+
+    // tree prefetcher: migrate/evict bookkeeping + candidate generation
+    b.bench("prefetch/tree/migrate+query", 1, || {
+        let mut t = TreePrefetcher::new();
+        for p in 0..512u64 {
+            t.on_migrate(p, false);
+        }
+        for p in (0..512u64).step_by(16) {
+            std::hint::black_box(t.prefetch(&acc(p)));
+        }
+        for p in 0..512u64 {
+            t.on_evict(p);
+        }
+    });
+
+    // victim-selection latency at steady state (hot loop operation)
+    let mem = DeviceMemory::new(4096);
+    let mut lru = Lru::new();
+    for p in 0..4096u64 {
+        lru.on_migrate(p, false);
+    }
+    b.bench("evict/LRU/select_victim", 1, || {
+        let v = lru.select_victim(&mem).unwrap();
+        lru.on_evict(v);
+        lru.on_migrate(v, false);
+    });
+
+    let mut hpe = Hpe::new();
+    for p in 0..4096u64 {
+        hpe.on_migrate(p, false);
+        if p % 64 == 0 {
+            hpe.on_interval();
+        }
+    }
+    b.bench("evict/HPE/select_victim", 1, || {
+        let v = hpe.select_victim(&mem).unwrap();
+        hpe.on_evict(v);
+        hpe.on_migrate(v, false);
+    });
+}

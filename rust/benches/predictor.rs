@@ -1,0 +1,104 @@
+//! Learning-stack benchmarks: the structures on the prediction path
+//! (frequency table, page-set chain, window builder, batch packing) and
+//! — when artifacts are built — the PJRT inference / train-step
+//! latencies that set the Fig 13 overhead budget.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use common::Bench;
+use uvmio::config::Scale;
+use uvmio::predictor::chain::PageSetChain;
+use uvmio::predictor::features::{
+    pack_batch, samples_from_trace, FeatDims, WindowBuilder,
+};
+use uvmio::predictor::FreqTable;
+use uvmio::runtime::{Manifest, Runtime, TrainState};
+use uvmio::trace::workloads::Workload;
+use uvmio::util::rng::Rng;
+
+fn dims() -> FeatDims {
+    FeatDims {
+        seq_len: 10,
+        delta_vocab: 512,
+        addr_vocab: 4096,
+        pc_vocab: 512,
+        tb_vocab: 1024,
+    }
+}
+
+fn main() {
+    let b = Bench::new("predictor");
+    let mut rng = Rng::new(2);
+
+    // frequency table: record + lookup mix
+    let pages: Vec<u64> = (0..8192).map(|_| rng.below(1 << 20)).collect();
+    b.bench("freq_table/record8k+query8k", pages.len() as u64 * 2, || {
+        let mut ft = FreqTable::new(3);
+        for &p in &pages {
+            ft.record(p);
+        }
+        let mut acc = 0i64;
+        for &p in &pages {
+            acc += ft.frequency(p) as i64;
+        }
+        std::hint::black_box(acc);
+    });
+
+    // page-set chain: insert/rotate/victim cycle
+    let mut ft = FreqTable::new(3);
+    for &p in pages.iter().take(512) {
+        ft.record(p);
+    }
+    b.bench("chain/insert+rotate+victim-2k", 2048, || {
+        let mut chain = PageSetChain::new();
+        for p in 0..2048u64 {
+            chain.insert(p);
+            if p % 64 == 0 {
+                chain.rotate();
+            }
+        }
+        for _ in 0..512 {
+            std::hint::black_box(chain.victim(&ft, 64));
+        }
+    });
+
+    // feature pipeline over a real trace
+    let trace = Workload::Nw.generate(Scale::default(), 42);
+    b.bench("features/windows/NW", trace.accesses.len() as u64, || {
+        let mut wb = WindowBuilder::new(dims());
+        let mut n = 0usize;
+        for a in &trace.accesses {
+            if wb.push(a).is_some() {
+                n += 1;
+            }
+        }
+        std::hint::black_box(n);
+    });
+
+    let (samples, _) = samples_from_trace(&trace, dims());
+    b.bench("features/pack_batch64", 64, || {
+        std::hint::black_box(pack_batch(&samples[..64], 64, 10));
+    });
+
+    // PJRT latencies (skipped when artifacts are absent)
+    let dir = Manifest::default_dir();
+    if dir.join("manifest.json").exists() {
+        let rt = Runtime::new(&dir).expect("runtime");
+        let model = rt.model("predictor").expect("predictor");
+        let params = model.init_params(0).unwrap();
+        let batch = pack_batch(&samples[..64], 64, 10);
+        b.bench("pjrt/forward/batch64", 64, || {
+            std::hint::black_box(model.forward(&params, &batch).unwrap());
+        });
+        let mut state = TrainState::fresh(params);
+        let mask = vec![0.0f32; model.classes];
+        b.bench("pjrt/train_step/batch64", 64, || {
+            std::hint::black_box(
+                model.train_step(&mut state, &batch, &mask, 0.5, 0.2).unwrap(),
+            );
+        });
+    } else {
+        eprintln!("pjrt benches skipped: run `make artifacts`");
+    }
+}

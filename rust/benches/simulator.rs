@@ -1,0 +1,52 @@
+//! Simulator throughput benchmarks: trace-event rate through the engine
+//! under each rule-based strategy — L3 must not be the bottleneck
+//! (DESIGN.md §Perf target: ≥ 5 M events/s single thread).
+
+#[path = "common/mod.rs"]
+mod common;
+
+use common::Bench;
+use uvmio::config::Scale;
+use uvmio::coordinator::{run_rule_based, RunSpec, Strategy};
+use uvmio::trace::workloads::Workload;
+
+fn main() {
+    let b = Bench::new("simulator");
+
+    // trace generation itself
+    for w in [Workload::Bicg, Workload::Nw, Workload::Hotspot] {
+        let t = w.generate(Scale::default(), 42);
+        let name = format!("generate/{}", w.name());
+        b.bench(&name, t.accesses.len() as u64, || {
+            std::hint::black_box(w.generate(Scale::default(), 42));
+        });
+    }
+
+    // engine end-to-end per strategy (BICG = heaviest thrasher)
+    let trace = Workload::Bicg.generate(Scale::default(), 42);
+    let events = trace.accesses.len() as u64;
+    for s in [
+        Strategy::DemandLru,
+        Strategy::Baseline,
+        Strategy::DemandHpe,
+        Strategy::TreeHpe,
+        Strategy::DemandBelady,
+        Strategy::UvmSmart,
+    ] {
+        let spec = RunSpec::new(&trace, 125);
+        let name = format!("engine/BICG/{}", s.name());
+        b.bench(&name, events, || {
+            std::hint::black_box(run_rule_based(&spec, s));
+        });
+    }
+
+    // scale sweep: events/s should stay ~flat as the trace grows
+    for factor in [1u32, 2, 4] {
+        let trace = Workload::Hotspot.generate(Scale { factor }, 42);
+        let spec = RunSpec::new(&trace, 125);
+        let name = format!("engine/Hotspot/scale{factor}");
+        b.bench(&name, trace.accesses.len() as u64, || {
+            std::hint::black_box(run_rule_based(&spec, Strategy::Baseline));
+        });
+    }
+}

@@ -1,0 +1,15 @@
+//! The coordinator: wires traces, the simulator, the policies and the
+//! PJRT runtime into the paper's evaluation grid. Owns the online
+//! train-predict loop, the overhead-injection post-pass, and the
+//! multi-tenant scalability harness.
+
+pub mod driver;
+pub mod multi;
+pub mod trainer;
+
+pub use driver::{
+    feat_dims, normalized_ipc, run_intelligent, run_rule_based, CellResult,
+    RunSpec, Strategy,
+};
+pub use multi::{multi_accuracy, MultiReport};
+pub use trainer::{offline_accuracy, online_accuracy, AccuracyReport, TrainOpts};

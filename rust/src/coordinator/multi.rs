@@ -1,0 +1,140 @@
+//! Multi-workload (concurrent-tenant) accuracy harness — Table VII.
+//!
+//! Two workloads run concurrently (see [`crate::trace::multi`]); the
+//! predictor sees the merged access stream — more classes arriving
+//! faster, interleaved patterns — and we report per-tenant top-1, the
+//! paper's scalability measurement.
+
+use std::collections::HashSet;
+use std::rc::Rc;
+
+use anyhow::Result;
+
+use crate::config::PAGES_PER_BB;
+use crate::policy::dfa::classify_blocks;
+use crate::predictor::features::{
+    pack_batch, FeatDims, Sample,
+};
+use crate::predictor::model_table::ModelTable;
+use crate::runtime::ModelRuntime;
+use crate::trace::multi::{interleave, tenant_of};
+use crate::trace::Trace;
+use crate::util::rng::Rng;
+
+use super::trainer::TrainOpts;
+
+/// Per-tenant accuracy from a concurrent run.
+#[derive(Debug, Clone)]
+pub struct MultiReport {
+    pub pair: String,
+    pub top1_a: f64,
+    pub top1_b: f64,
+    pub train_steps: usize,
+    pub patterns_used: usize,
+}
+
+/// Run the online (or ours, per `opts`) methodology on two interleaved
+/// workloads and report per-tenant top-1 accuracy.
+pub fn multi_accuracy(
+    rt: &Rc<ModelRuntime>,
+    dims: &FeatDims,
+    a: &Trace,
+    b: &Trace,
+    opts: &TrainOpts,
+) -> Result<MultiReport> {
+    let merged = interleave(a, b);
+    // Featurise per tenant: page deltas are only meaningful within one
+    // tenant's access stream (the GMMU sees per-context fault streams),
+    // so each tenant gets its own window builder — but samples arrive in
+    // the merged order, which is what stresses the predictor.
+    let mut builders = [
+        crate::predictor::WindowBuilder::new(*dims),
+        crate::predictor::WindowBuilder::new(*dims),
+    ];
+    let mut samples: Vec<Sample> = Vec::new();
+    let mut tenants: Vec<usize> = Vec::new();
+    for acc in &merged.accesses {
+        let t = tenant_of(acc);
+        if let Some(s) = builders[t].push(acc) {
+            samples.push(s);
+            tenants.push(t);
+        }
+    }
+
+    let mut table = ModelTable::new(opts.seed as u32, opts.pattern_aware);
+    let mut rng = Rng::new(opts.seed);
+    let mut seen: HashSet<u64> = HashSet::new();
+    let mut correct = [0usize; 2];
+    let mut total = [0usize; 2];
+    let mut train_steps = 0usize;
+
+    let group = opts
+        .group
+        .min((samples.len() / 6).max(512))
+        .max(64);
+    let n_groups = samples.len() / group;
+    for gi in 0..n_groups.saturating_sub(1) {
+        let lo = gi * group;
+        let hi = lo + group;
+        let train_group = &samples[lo..hi];
+        let eval_group = &samples[hi..(hi + group).min(samples.len())];
+        let eval_tenants = &tenants[hi..(hi + group).min(samples.len())];
+
+        let blocks: Vec<u64> = train_group
+            .iter()
+            .map(|s| s.target_page / PAGES_PER_BB)
+            .collect();
+        let pattern = classify_blocks(&blocks, &seen);
+        seen.extend(blocks);
+
+        let state = table.state_mut(pattern, rt)?;
+        if opts.lambda > 0.0 {
+            state.snapshot_prev();
+        }
+        let mask = vec![0.0f32; dims.delta_vocab];
+        let mut shuffled: Vec<Sample> = train_group.to_vec();
+        rng.shuffle(&mut shuffled);
+        for chunk in shuffled.chunks(rt.batch).take(opts.steps_per_group) {
+            if chunk.len() < rt.batch {
+                break;
+            }
+            let batch = pack_batch(chunk, rt.batch, dims.seq_len);
+            rt.train_step(state, &batch, &mask, opts.lambda, opts.mu)?;
+            train_steps += 1;
+        }
+
+        // evaluate next group, attributing per tenant
+        let params = state.params.clone();
+        let cap_batches = opts.eval_cap.div_ceil(rt.batch);
+        for (bi, chunk) in eval_group.chunks(rt.batch).enumerate() {
+            if bi >= cap_batches || chunk.len() < rt.batch {
+                break;
+            }
+            let batch = pack_batch(chunk, rt.batch, dims.seq_len);
+            let logits = rt.forward(&params, &batch)?;
+            let top1 = rt.top1(&logits);
+            for (i, (pred, s)) in top1.iter().zip(chunk).enumerate() {
+                let tenant = eval_tenants[bi * rt.batch + i];
+                if *pred == s.label as usize {
+                    correct[tenant] += 1;
+                }
+                total[tenant] += 1;
+            }
+        }
+    }
+
+    let acc = |t: usize| {
+        if total[t] == 0 {
+            0.0
+        } else {
+            correct[t] as f64 / total[t] as f64
+        }
+    };
+    Ok(MultiReport {
+        pair: merged.name,
+        top1_a: acc(0),
+        top1_b: acc(1),
+        train_steps,
+        patterns_used: table.patterns_used(),
+    })
+}

@@ -1,0 +1,302 @@
+//! Prediction-accuracy experiments: Fig 4 (online vs offline), Fig 6
+//! (Hotspot training-method ablation), Fig 10 (model architectures),
+//! Fig 11 (normalized accuracy incl. our solution), Fig 12 (thrashing
+//! loss-term ablation) and Table VII (multi-workload scalability).
+
+use std::collections::HashSet;
+
+use anyhow::Result;
+
+use crate::coordinator::{
+    multi_accuracy, offline_accuracy, online_accuracy, run_intelligent,
+    run_rule_based, RunSpec, Strategy, TrainOpts,
+};
+use crate::predictor::features::samples_from_trace;
+use crate::predictor::{FeatDims, IntelligentConfig};
+use crate::trace::workloads::Workload;
+use crate::util::csv::{fnum, Table};
+
+use super::ExpContext;
+
+fn dims_of(ctx: &mut ExpContext) -> Result<FeatDims> {
+    let (runtime, _) = ctx.predictor()?;
+    Ok(crate::coordinator::feat_dims(runtime))
+}
+
+fn workload_set(ctx: &ExpContext) -> Vec<Workload> {
+    if ctx.opts.quick {
+        vec![
+            Workload::Hotspot,
+            Workload::Nw,
+            Workload::StreamTriad,
+            Workload::SradV2,
+        ]
+    } else {
+        Workload::ALL.to_vec()
+    }
+}
+
+/// Fig 4: top-1 page-delta accuracy, online vs offline training.
+pub fn fig4(ctx: &mut ExpContext) -> Result<()> {
+    let dims = dims_of(ctx)?;
+    let (_, model) = ctx.predictor()?;
+    let mut t = Table::new(
+        "Fig 4 — top-1 delta accuracy: online vs offline (single workload)",
+        &["Benchmark", "Online", "Offline", "Loss"],
+    );
+    let mut losses = Vec::new();
+    for w in workload_set(ctx) {
+        let trace = w.generate(ctx.opts.scale, ctx.opts.seed);
+        let (samples, _) = samples_from_trace(&trace, dims);
+        let online = online_accuracy(
+            &model, &dims, &samples, &TrainOpts::default(), None,
+        )?;
+        let offline =
+            offline_accuracy(&model, &dims, &samples, &TrainOpts::default())?;
+        let loss = offline.top1 - online.top1;
+        losses.push(loss);
+        t.row(vec![
+            w.name().to_string(),
+            fnum(online.top1, 3),
+            fnum(offline.top1, 3),
+            fnum(loss, 3),
+        ]);
+    }
+    print!("{}", t.to_console());
+    println!(
+        "  average online-vs-offline accuracy loss: {:.3} (paper: 0.111)",
+        losses.iter().sum::<f64>() / losses.len() as f64
+    );
+    t.save(&ctx.opts.reports_dir, "fig4")?;
+    Ok(())
+}
+
+/// Fig 6: Hotspot under three training methods: offline, online with
+/// multiple (pattern-aware) models, online with a single model.
+pub fn fig6(ctx: &mut ExpContext) -> Result<()> {
+    let dims = dims_of(ctx)?;
+    let (_, model) = ctx.predictor()?;
+    let trace = Workload::Hotspot.generate(ctx.opts.scale, ctx.opts.seed);
+    let (samples, _) = samples_from_trace(&trace, dims);
+
+    let offline =
+        offline_accuracy(&model, &dims, &samples, &TrainOpts::default())?;
+    let multi = online_accuracy(
+        &model,
+        &dims,
+        &samples,
+        &TrainOpts { pattern_aware: true, ..Default::default() },
+        None,
+    )?;
+    let single = online_accuracy(
+        &model, &dims, &samples, &TrainOpts::default(), None,
+    )?;
+
+    let mut t = Table::new(
+        "Fig 6 — Hotspot top-1 accuracy by training method",
+        &["Method", "Top-1", "TrainSteps", "Models"],
+    );
+    t.row(vec![
+        "Offline".to_string(),
+        fnum(offline.top1, 3),
+        offline.train_steps.to_string(),
+        "1".into(),
+    ]);
+    t.row(vec![
+        "Online (multi-model)".to_string(),
+        fnum(multi.top1, 3),
+        multi.train_steps.to_string(),
+        multi.patterns_used.to_string(),
+    ]);
+    t.row(vec![
+        "Online (single model)".to_string(),
+        fnum(single.top1, 3),
+        single.train_steps.to_string(),
+        "1".into(),
+    ]);
+    print!("{}", t.to_console());
+    println!("  (paper: 0.856 / 0.805 / 0.694)");
+    t.save(&ctx.opts.reports_dir, "fig6")?;
+    Ok(())
+}
+
+/// Fig 10: online accuracy across predictor architectures
+/// (Transformer / LSTM / CNN / MLP).
+pub fn fig10(ctx: &mut ExpContext) -> Result<()> {
+    let dims = dims_of(ctx)?;
+    let arch = ["predictor", "lstm", "cnn", "mlp"];
+    let workloads = if ctx.opts.quick {
+        vec![Workload::Hotspot, Workload::Nw, Workload::StreamTriad]
+    } else {
+        workload_set(ctx)
+    };
+    let mut t = Table::new(
+        "Fig 10 — online top-1 accuracy by predictor architecture",
+        &["Benchmark", "Transformer", "LSTM", "CNN", "MLP"],
+    );
+    let mut sums = [0.0f64; 4];
+    for w in &workloads {
+        let trace = w.generate(ctx.opts.scale, ctx.opts.seed);
+        let (samples, _) = samples_from_trace(&trace, dims);
+        let mut row = vec![w.name().to_string()];
+        for (i, a) in arch.iter().enumerate() {
+            let model = ctx.model(a)?;
+            let rep = online_accuracy(
+                &model, &dims, &samples, &TrainOpts::default(), None,
+            )?;
+            sums[i] += rep.top1;
+            row.push(fnum(rep.top1, 3));
+        }
+        t.row(row);
+    }
+    print!("{}", t.to_console());
+    let n = workloads.len() as f64;
+    println!(
+        "  averages: Transformer {:.3} | LSTM {:.3} | CNN {:.3} | MLP {:.3}",
+        sums[0] / n, sums[1] / n, sums[2] / n, sums[3] / n
+    );
+    t.save(&ctx.opts.reports_dir, "fig10")?;
+    Ok(())
+}
+
+/// Fig 11: top-1 accuracy of online and our solution, normalized by the
+/// offline (profiling) upper bound.
+pub fn fig11(ctx: &mut ExpContext) -> Result<()> {
+    let dims = dims_of(ctx)?;
+    let (_, model) = ctx.predictor()?;
+    let mut t = Table::new(
+        "Fig 11 — top-1 accuracy normalized to offline training",
+        &["Benchmark", "Online", "Ours", "Offline(abs)"],
+    );
+    let mut improvements = Vec::new();
+    for w in workload_set(ctx) {
+        let trace = w.generate(ctx.opts.scale, ctx.opts.seed);
+        let (samples, _) = samples_from_trace(&trace, dims);
+        let online = online_accuracy(
+            &model, &dims, &samples, &TrainOpts::default(), None,
+        )?;
+        let ours =
+            online_accuracy(&model, &dims, &samples, &TrainOpts::ours(), None)?;
+        let offline =
+            offline_accuracy(&model, &dims, &samples, &TrainOpts::default())?;
+        let denom = offline.top1.max(1e-9);
+        improvements.push(ours.top1 - online.top1);
+        t.row(vec![
+            w.name().to_string(),
+            fnum(online.top1 / denom, 3),
+            fnum(ours.top1 / denom, 3),
+            fnum(offline.top1, 3),
+        ]);
+    }
+    print!("{}", t.to_console());
+    println!(
+        "  average top-1 improvement (ours - online): {:.3} (paper: +0.0645)",
+        improvements.iter().sum::<f64>() / improvements.len() as f64
+    );
+    t.save(&ctx.opts.reports_dir, "fig11")?;
+    Ok(())
+}
+
+/// Fig 12: the thrashing loss term — page-thrash reduction vs accuracy
+/// cost on the four worst-thrashing benchmarks.
+pub fn fig12(ctx: &mut ExpContext) -> Result<()> {
+    let dims = dims_of(ctx)?;
+    let (_, model) = ctx.predictor()?;
+    let focus = [Workload::Atax, Workload::Bicg, Workload::Nw, Workload::SradV2];
+    let mut t = Table::new(
+        "Fig 12 — loss function with/without the thrashing term @125%",
+        &["Benchmark", "Thrash w/o", "Thrash w.", "Top-1 w/o", "Top-1 w."],
+    );
+    for w in focus {
+        let trace = w.generate(ctx.opts.scale, ctx.opts.seed);
+        let spec = RunSpec::new(&trace, 125);
+        let run_mu = |ctx: &mut ExpContext, mu: f32| -> Result<u64> {
+            let (runtime, _) = ctx.predictor()?;
+            let cfg = IntelligentConfig { mu, ..Default::default() };
+            Ok(run_intelligent(&spec, &model, runtime, cfg)?
+                .outcome
+                .stats
+                .thrash_events)
+        };
+        let thrash_without = run_mu(ctx, 0.0)?;
+        let thrash_with = run_mu(ctx, 0.2)?;
+
+        // accuracy side: E ∪ T from a baseline run feeds the mask
+        let base = run_rule_based(&spec, Strategy::Baseline);
+        let mut pages: HashSet<u64> =
+            base.outcome.stats.evicted_pages.clone();
+        pages.extend(base.outcome.stats.thrashed_pages.iter().copied());
+        let (samples, _) = samples_from_trace(&trace, dims);
+        let without = online_accuracy(
+            &model,
+            &dims,
+            &samples,
+            &TrainOpts { mu: 0.0, lambda: 0.5, pattern_aware: true, ..Default::default() },
+            Some(&pages),
+        )?;
+        let with = online_accuracy(
+            &model,
+            &dims,
+            &samples,
+            &TrainOpts { mu: 0.2, lambda: 0.5, pattern_aware: true, ..Default::default() },
+            Some(&pages),
+        )?;
+        t.row(vec![
+            w.name().to_string(),
+            thrash_without.to_string(),
+            thrash_with.to_string(),
+            fnum(without.top1, 3),
+            fnum(with.top1, 3),
+        ]);
+    }
+    print!("{}", t.to_console());
+    println!("  (paper: 7.4% average thrash reduction at 1.2% accuracy cost)");
+    t.save(&ctx.opts.reports_dir, "fig12")?;
+    Ok(())
+}
+
+/// Table VII: multi-workload scalability — per-tenant top-1 for
+/// category pairs, online vs ours.
+pub fn table7(ctx: &mut ExpContext) -> Result<()> {
+    let dims = dims_of(ctx)?;
+    let (_, model) = ctx.predictor()?;
+    let rows = [
+        Workload::StreamTriad,
+        Workload::Hotspot,
+        Workload::Nw,
+        Workload::Atax,
+    ];
+    let cols = [Workload::TwoDConv, Workload::SradV2];
+    let mut t = Table::new(
+        "Table VII — multi-workload top-1: online vs our solution",
+        &["Pair(A)", "Partner(B)", "Online(A)", "Ours(A)", "Online(B)", "Ours(B)"],
+    );
+    let mut gains = Vec::new();
+    for a in &rows {
+        for b in &cols {
+            let ta = a.generate(ctx.opts.scale, ctx.opts.seed);
+            let tb = b.generate(ctx.opts.scale, ctx.opts.seed ^ 1);
+            let online =
+                multi_accuracy(&model, &dims, &ta, &tb, &TrainOpts::default())?;
+            let ours =
+                multi_accuracy(&model, &dims, &ta, &tb, &TrainOpts::ours())?;
+            gains.push(ours.top1_a - online.top1_a);
+            gains.push(ours.top1_b - online.top1_b);
+            t.row(vec![
+                a.name().to_string(),
+                b.name().to_string(),
+                fnum(online.top1_a, 3),
+                fnum(ours.top1_a, 3),
+                fnum(online.top1_b, 3),
+                fnum(ours.top1_b, 3),
+            ]);
+        }
+    }
+    print!("{}", t.to_console());
+    println!(
+        "  average multi-tenant top-1 improvement: {:.3} (paper: +0.102)",
+        gains.iter().sum::<f64>() / gains.len() as f64
+    );
+    t.save(&ctx.opts.reports_dir, "table7")?;
+    Ok(())
+}

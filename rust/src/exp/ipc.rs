@@ -1,0 +1,177 @@
+//! IPC experiments: Fig 3 (oversubscription slowdown), Fig 13
+//! (prediction-overhead sensitivity) and Fig 14 (ours vs UVMSmart under
+//! 125% / 150%).
+
+use anyhow::Result;
+
+use crate::config::us_to_cycles;
+use crate::coordinator::{
+    run_intelligent, run_rule_based, RunSpec, Strategy,
+};
+use crate::predictor::IntelligentConfig;
+use crate::trace::workloads::Workload;
+use crate::util::csv::{fnum, Table};
+
+use super::ExpContext;
+
+/// Fig 3: baseline-runtime performance slowdown under oversubscription.
+pub fn fig3(ctx: &mut ExpContext) -> Result<()> {
+    let mut t = Table::new(
+        "Fig 3 — baseline slowdown under memory oversubscription",
+        &["Benchmark", "IPC@100%", "IPC@110%", "IPC@125%", "IPC@150%",
+          "Slowdown@125%", "Slowdown@150%"],
+    );
+    let mut slow125 = Vec::new();
+    for w in Workload::ALL {
+        let trace = w.generate(ctx.opts.scale, ctx.opts.seed);
+        let ipc_at = |pct: u32| {
+            let spec = RunSpec::new(&trace, pct);
+            run_rule_based(&spec, Strategy::Baseline).outcome.stats.ipc()
+        };
+        let (i100, i110, i125, i150) =
+            (ipc_at(100), ipc_at(110), ipc_at(125), ipc_at(150));
+        let s125 = 100.0 * (1.0 - i125 / i100);
+        let s150 = 100.0 * (1.0 - i150 / i100);
+        slow125.push(s125);
+        t.row(vec![
+            w.name().to_string(),
+            fnum(i100, 4),
+            fnum(i110, 4),
+            fnum(i125, 4),
+            fnum(i150, 4),
+            format!("{}%", fnum(s125, 1)),
+            format!("{}%", fnum(s150, 1)),
+        ]);
+    }
+    print!("{}", t.to_console());
+    let avg = slow125.iter().sum::<f64>() / slow125.len() as f64;
+    println!("  average slowdown @125%: {:.1}% (paper: 24.1%)", avg);
+    t.save(&ctx.opts.reports_dir, "fig3")?;
+    Ok(())
+}
+
+/// Fig 13: normalized IPC (vs UVMSmart) at prediction overheads of
+/// 1/10/20/50/100 µs per batched invocation, 125% oversubscription.
+///
+/// The simulator's schedule is overhead-independent (the charge is
+/// additive, §V-C), so each benchmark runs ONCE and the sweep is exact
+/// arithmetic on the invocation count.
+pub fn fig13(ctx: &mut ExpContext) -> Result<()> {
+    let (_, model) = ctx.predictor()?;
+    let levels_us = [1.0, 10.0, 20.0, 50.0, 100.0];
+    let workloads: Vec<Workload> = if ctx.opts.quick {
+        vec![Workload::Atax, Workload::Nw, Workload::Hotspot]
+    } else {
+        Workload::ALL.to_vec()
+    };
+    let mut t = Table::new(
+        "Fig 13 — normalized IPC vs UVMSmart under prediction overhead @125%",
+        &["Benchmark", "1us", "10us", "20us", "50us", "100us"],
+    );
+    let mut sums = [0.0f64; 5];
+    for w in &workloads {
+        let trace = w.generate(ctx.opts.scale, ctx.opts.seed);
+        let spec = RunSpec::new(&trace, 125);
+        let smart = run_rule_based(&spec, Strategy::UvmSmart);
+        let (runtime, _) = ctx.predictor()?;
+        let ours =
+            run_intelligent(&spec, &model, runtime, IntelligentConfig::default())?;
+        // strip the default overhead back out, then sweep
+        let raw_cycles =
+            ours.outcome.stats.cycles - ours.outcome.stats.prediction_overhead_cycles;
+        let smart_ipc = smart.outcome.stats.ipc();
+        let mut row = vec![w.name().to_string()];
+        for (i, us) in levels_us.iter().enumerate() {
+            let cycles = raw_cycles + us_to_cycles(*us) * ours.inference_calls;
+            let ipc = ours.outcome.stats.instructions as f64 / cycles as f64;
+            let norm = if smart_ipc == 0.0 { 0.0 } else { ipc / smart_ipc };
+            sums[i] += norm;
+            row.push(fnum(norm, 3));
+        }
+        t.row(row);
+    }
+    print!("{}", t.to_console());
+    let n = workloads.len() as f64;
+    println!(
+        "  averages: {} (paper: 1.52 / 1.32 / 1.17 / 0.91 / 0.71)",
+        sums.iter().map(|s| fnum(s / n, 2)).collect::<Vec<_>>().join(" / ")
+    );
+    t.save(&ctx.opts.reports_dir, "fig13")?;
+    Ok(())
+}
+
+/// Fig 14: normalized IPC (vs the tree+LRU baseline at the same
+/// oversubscription) for UVMSmart and our solution @125% and @150%, with
+/// crash emulation at 150%.
+pub fn fig14(ctx: &mut ExpContext) -> Result<()> {
+    let (_, model) = ctx.predictor()?;
+    let workloads: Vec<Workload> = if ctx.opts.quick {
+        vec![Workload::Atax, Workload::Nw, Workload::Bicg, Workload::Hotspot]
+    } else {
+        Workload::ALL.to_vec()
+    };
+    let mut t = Table::new(
+        "Fig 14 — normalized IPC vs baseline @125% and @150%",
+        &["Benchmark", "UVMSmart@125", "Ours@125", "UVMSmart@150", "Ours@150"],
+    );
+    let mut geo = [[0.0f64; 2]; 2]; // [oversub][method] log-sums
+    let mut counts = [[0usize; 2]; 2];
+    for w in &workloads {
+        let trace = w.generate(ctx.opts.scale, ctx.opts.seed);
+        let mut cells = Vec::new();
+        for (oi, pct) in [125u32, 150].into_iter().enumerate() {
+            // crash emulation at 150%: runaway thrash kills the run
+            let crash_at = 3 * trace.working_set_pages;
+            let mut spec = RunSpec::new(&trace, pct);
+            if pct >= 150 {
+                spec = spec.with_crash_threshold(crash_at);
+            }
+            let base = run_rule_based(&spec, Strategy::Baseline);
+            let base_ipc = base.outcome.stats.ipc();
+            let smart = run_rule_based(&spec, Strategy::UvmSmart);
+            let (runtime, _) = ctx.predictor()?;
+            let ours = run_intelligent(
+                &spec,
+                &model,
+                runtime,
+                IntelligentConfig::default(),
+            )?;
+            for (mi, cell) in [&smart.outcome, &ours.outcome].into_iter().enumerate() {
+                if cell.crashed {
+                    cells.push("CRASH".to_string());
+                } else {
+                    let norm = if base_ipc == 0.0 {
+                        0.0
+                    } else {
+                        cell.stats.ipc() / base_ipc
+                    };
+                    geo[oi][mi] += norm.max(1e-9).ln();
+                    counts[oi][mi] += 1;
+                    cells.push(fnum(norm, 3));
+                }
+            }
+        }
+        t.row(vec![
+            w.name().to_string(),
+            cells[0].clone(),
+            cells[1].clone(),
+            cells[2].clone(),
+            cells[3].clone(),
+        ]);
+    }
+    print!("{}", t.to_console());
+    let gm = |oi: usize, mi: usize| {
+        if counts[oi][mi] == 0 {
+            f64::NAN
+        } else {
+            (geo[oi][mi] / counts[oi][mi] as f64).exp()
+        }
+    };
+    println!(
+        "  geomean (non-crashed): UVMSmart@125 {:.2} | Ours@125 {:.2} | UVMSmart@150 {:.2} | Ours@150 {:.2}",
+        gm(0, 0), gm(0, 1), gm(1, 0), gm(1, 1)
+    );
+    println!("  (paper: ours improves IPC 1.52X @125% and 3.66X @150% vs baseline)");
+    t.save(&ctx.opts.reports_dir, "fig14")?;
+    Ok(())
+}

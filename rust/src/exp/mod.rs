@@ -1,0 +1,116 @@
+//! Experiment registry: one entry per table/figure of the paper's
+//! evaluation (DESIGN.md §Experiment index). `repro exp <id>` regenerates
+//! the table/series; `repro exp all` runs the suite. Every experiment
+//! prints a console table AND writes `reports/<id>.csv`.
+
+pub mod accuracy;
+pub mod footprint;
+pub mod ipc;
+pub mod thrash;
+pub mod traces;
+
+use std::path::PathBuf;
+use std::rc::Rc;
+
+use anyhow::{bail, Result};
+
+use crate::config::Scale;
+use crate::runtime::{ModelRuntime, Runtime};
+
+/// Options shared by all experiments.
+pub struct ExpOpts {
+    pub scale: Scale,
+    pub seed: u64,
+    pub reports_dir: PathBuf,
+    pub artifacts_dir: PathBuf,
+    /// trim PJRT-heavy experiments (fewer workloads / groups)
+    pub quick: bool,
+}
+
+impl Default for ExpOpts {
+    fn default() -> Self {
+        ExpOpts {
+            scale: Scale::default(),
+            seed: 42,
+            reports_dir: PathBuf::from("reports"),
+            artifacts_dir: crate::runtime::Manifest::default_dir(),
+            quick: false,
+        }
+    }
+}
+
+/// Lazily-initialised PJRT context shared across experiments in one
+/// `exp all` invocation (compiling an executable trio costs seconds, so
+/// compiled models are cached by name).
+pub struct ExpContext {
+    pub opts: ExpOpts,
+    runtime: Option<Runtime>,
+    models: std::collections::HashMap<String, Rc<ModelRuntime>>,
+}
+
+impl ExpContext {
+    pub fn new(opts: ExpOpts) -> ExpContext {
+        ExpContext {
+            opts,
+            runtime: None,
+            models: std::collections::HashMap::new(),
+        }
+    }
+
+    fn ensure_runtime(&mut self) -> Result<&Runtime> {
+        if self.runtime.is_none() {
+            self.runtime = Some(Runtime::new(&self.opts.artifacts_dir)?);
+        }
+        Ok(self.runtime.as_ref().unwrap())
+    }
+
+    /// Compile (or fetch cached) executables for a model by name.
+    pub fn model(&mut self, name: &str) -> Result<Rc<ModelRuntime>> {
+        if !self.models.contains_key(name) {
+            self.ensure_runtime()?;
+            let model = Rc::new(self.runtime.as_ref().unwrap().model(name)?);
+            self.models.insert(name.to_string(), model);
+        }
+        Ok(Rc::clone(&self.models[name]))
+    }
+
+    /// The PJRT runtime + compiled predictor, loading on first use.
+    pub fn predictor(&mut self) -> Result<(&Runtime, Rc<ModelRuntime>)> {
+        let model = self.model("predictor")?;
+        Ok((self.runtime.as_ref().unwrap(), model))
+    }
+}
+
+pub const ALL: &[&str] = &[
+    "table1", "table2", "table3", "table4", "table6", "table7", "fig3",
+    "fig4", "fig5", "fig6", "fig10", "fig11", "fig12", "fig13", "fig14",
+];
+
+/// Run one experiment by id.
+pub fn run(id: &str, ctx: &mut ExpContext) -> Result<()> {
+    match id {
+        "table1" => thrash::table1(ctx),
+        "table2" => thrash::table2(ctx),
+        "table3" => traces::table3(ctx),
+        "table4" => footprint::table4(ctx),
+        "table6" => thrash::table6(ctx),
+        "table7" => accuracy::table7(ctx),
+        "fig3" => ipc::fig3(ctx),
+        "fig4" => accuracy::fig4(ctx),
+        "fig5" => traces::fig5(ctx),
+        "fig6" => accuracy::fig6(ctx),
+        "fig10" => accuracy::fig10(ctx),
+        "fig11" => accuracy::fig11(ctx),
+        "fig12" => accuracy::fig12(ctx),
+        "fig13" => ipc::fig13(ctx),
+        "fig14" => ipc::fig14(ctx),
+        "all" => {
+            for id in ALL {
+                eprintln!("== running {id} ==");
+                run(id, ctx)?;
+            }
+            Ok(())
+        }
+        other => bail!("unknown experiment {other}; known: {ALL:?} or 'all'"),
+    }
+}

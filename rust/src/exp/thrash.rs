@@ -1,0 +1,127 @@
+//! Thrashing tables: Table I (rule-based strategies), Table II (the
+//! HPE × prefetcher pathology) and Table VI (the full grid including
+//! our solution).
+
+use anyhow::Result;
+
+use crate::coordinator::{run_intelligent, run_rule_based, RunSpec, Strategy};
+use crate::predictor::IntelligentConfig;
+use crate::trace::workloads::Workload;
+use crate::util::csv::Table;
+
+use super::ExpContext;
+
+const OVERSUB: u32 = 125;
+
+fn thrash_of(ctx: &ExpContext, w: Workload, s: Strategy) -> u64 {
+    let trace = w.generate(ctx.opts.scale, ctx.opts.seed);
+    let spec = RunSpec::new(&trace, OVERSUB);
+    run_rule_based(&spec, s).outcome.stats.thrash_events
+}
+
+/// Table I: pages thrashed @125% for Baseline / D.+HPE / UVMSmart /
+/// D.+Belady (the rule-based landscape + the oracle bound).
+pub fn table1(ctx: &mut ExpContext) -> Result<()> {
+    let mut t = Table::new(
+        "Table I — pages thrashed @125% oversubscription (rule-based)",
+        &["Benchmark", "Baseline", "D.+HPE", "UVMSmart", "D.+Belady."],
+    );
+    for w in Workload::ALL {
+        t.row(vec![
+            w.name().to_string(),
+            thrash_of(ctx, w, Strategy::Baseline).to_string(),
+            thrash_of(ctx, w, Strategy::DemandHpe).to_string(),
+            thrash_of(ctx, w, Strategy::UvmSmart).to_string(),
+            thrash_of(ctx, w, Strategy::DemandBelady).to_string(),
+        ]);
+    }
+    print!("{}", t.to_console());
+    t.save(&ctx.opts.reports_dir, "table1")?;
+    Ok(())
+}
+
+/// Table II: Demand.+HPE vs Tree.+HPE — the cooperation failure.
+pub fn table2(ctx: &mut ExpContext) -> Result<()> {
+    let mut t = Table::new(
+        "Table II — HPE with and without the tree prefetcher @125%",
+        &["Benchmark", "Demand.+HPE", "Tree.+HPE"],
+    );
+    for w in Workload::ALL {
+        t.row(vec![
+            w.name().to_string(),
+            thrash_of(ctx, w, Strategy::DemandHpe).to_string(),
+            thrash_of(ctx, w, Strategy::TreeHpe).to_string(),
+        ]);
+    }
+    print!("{}", t.to_console());
+    t.save(&ctx.opts.reports_dir, "table2")?;
+    Ok(())
+}
+
+/// Table VI: the full strategy grid @125%, including our solution.
+pub fn table6(ctx: &mut ExpContext) -> Result<()> {
+    let (_, model) = ctx.predictor()?;
+    let workloads: Vec<Workload> = if ctx.opts.quick {
+        vec![Workload::Atax, Workload::Bicg, Workload::Nw, Workload::Hotspot]
+    } else {
+        Workload::ALL.to_vec()
+    };
+    let mut t = Table::new(
+        "Table VI — pages thrashed @125% (with vs without prefetching)",
+        &[
+            "Benchmark",
+            "Baseline",
+            "Tree.+HPE",
+            "UVMSmart",
+            "Our solution",
+            "Demand.+HPE",
+            "Demand.+Belady.",
+        ],
+    );
+    let mut base_sum = 0u64;
+    let mut ours_sum = 0u64;
+    let mut smart_sum = 0u64;
+    for w in &workloads {
+        let trace = w.generate(ctx.opts.scale, ctx.opts.seed);
+        let spec = RunSpec::new(&trace, OVERSUB);
+        let (runtime, _) = ctx.predictor()?;
+        let ours = run_intelligent(
+            &spec,
+            &model,
+            runtime,
+            IntelligentConfig::default(),
+        )?
+        .outcome
+        .stats
+        .thrash_events;
+        let base = thrash_of(ctx, *w, Strategy::Baseline);
+        let smart = thrash_of(ctx, *w, Strategy::UvmSmart);
+        base_sum += base;
+        ours_sum += ours;
+        smart_sum += smart;
+        t.row(vec![
+            w.name().to_string(),
+            base.to_string(),
+            thrash_of(ctx, *w, Strategy::TreeHpe).to_string(),
+            smart.to_string(),
+            ours.to_string(),
+            thrash_of(ctx, *w, Strategy::DemandHpe).to_string(),
+            thrash_of(ctx, *w, Strategy::DemandBelady).to_string(),
+        ]);
+    }
+    print!("{}", t.to_console());
+    let red = |x: u64| {
+        if base_sum == 0 {
+            0.0
+        } else {
+            100.0 * (1.0 - x as f64 / base_sum as f64)
+        }
+    };
+    println!(
+        "  reduction vs baseline: ours {:.1}% | UVMSmart {:.1}%  (paper: 64.4% vs 17.3%)",
+        red(ours_sum),
+        red(smart_sum)
+    );
+    t.save(&ctx.opts.reports_dir, "table6")?;
+    Ok(())
+}

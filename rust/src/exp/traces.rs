@@ -1,0 +1,100 @@
+//! Trace analytics experiments: Table III (delta-vocabulary growth per
+//! program phase) and Fig 5 (delta distributions and access-pattern
+//! visualisation series).
+
+use std::collections::HashSet;
+
+use anyhow::Result;
+
+use crate::config::PAGES_PER_BB;
+use crate::policy::dfa::{classify_blocks, Pattern};
+use crate::trace::stats::{
+    delta_entropy, delta_histogram, label_proximity, unique_deltas_per_phase,
+};
+use crate::trace::workloads::Workload;
+use crate::util::csv::{fnum, Table};
+
+use super::ExpContext;
+
+/// Table III: unique page deltas at each of three program phases.
+pub fn table3(ctx: &mut ExpContext) -> Result<()> {
+    let mut t = Table::new(
+        "Table III — unique page deltas per program phase (cumulative)",
+        &["Benchmark", "Phase 0", "Phase 1", "Phase 2"],
+    );
+    for w in Workload::ALL {
+        let trace = w.generate(ctx.opts.scale, ctx.opts.seed);
+        let counts = unique_deltas_per_phase(&trace, 3);
+        t.row(vec![
+            w.name().to_string(),
+            counts[0].to_string(),
+            counts[1].to_string(),
+            counts[2].to_string(),
+        ]);
+    }
+    print!("{}", t.to_console());
+    t.save(&ctx.opts.reports_dir, "table3")?;
+    Ok(())
+}
+
+/// Fig 5: per-phase delta distribution summaries (a-d) and pattern-label
+/// temporal proximity (e-f). Emits the histogram series as CSV for
+/// plotting; the console shows the summary statistics.
+pub fn fig5(ctx: &mut ExpContext) -> Result<()> {
+    let focus = [
+        Workload::Nw,
+        Workload::SradV2,
+        Workload::Hotspot,
+        Workload::StreamTriad,
+    ];
+    let mut summary = Table::new(
+        "Fig 5 — delta distribution & pattern proximity per phase",
+        &["Benchmark", "Phase", "UniqueDeltas", "Entropy(bits)", "PatternProximity"],
+    );
+    let mut series = Table::new(
+        "fig5 histogram series",
+        &["benchmark", "phase", "delta", "count"],
+    );
+    for w in focus {
+        let trace = w.generate(ctx.opts.scale, ctx.opts.seed);
+        for phase in 0..3 {
+            let hist = delta_histogram(&trace, phase, 3);
+            // pattern labels over windows of the phase (DFA classes 0-5,
+            // the paper's re-labelled visualisation)
+            let len = trace.accesses.len();
+            let (lo, hi) = (len * phase / 3, len * (phase + 1) / 3);
+            let mut labels = Vec::new();
+            let mut seen: HashSet<u64> = HashSet::new();
+            for win in trace.accesses[lo..hi].chunks(64) {
+                let blocks: Vec<u64> =
+                    win.iter().map(|a| a.page / PAGES_PER_BB).collect();
+                let p: Pattern = classify_blocks(&blocks, &seen);
+                labels.push(p.index() as u8);
+                seen.extend(blocks);
+            }
+            summary.row(vec![
+                w.name().to_string(),
+                phase.to_string(),
+                hist.len().to_string(),
+                fnum(delta_entropy(&hist), 2),
+                fnum(label_proximity(&labels), 3),
+            ]);
+            // top-32 deltas per phase into the plotting series
+            let mut items: Vec<(i64, usize)> =
+                hist.iter().map(|(d, c)| (*d, *c)).collect();
+            items.sort_by_key(|(_, c)| std::cmp::Reverse(*c));
+            for (d, c) in items.into_iter().take(32) {
+                series.row(vec![
+                    w.name().to_string(),
+                    phase.to_string(),
+                    d.to_string(),
+                    c.to_string(),
+                ]);
+            }
+        }
+    }
+    print!("{}", summary.to_console());
+    summary.save(&ctx.opts.reports_dir, "fig5_summary")?;
+    series.save(&ctx.opts.reports_dir, "fig5_histograms")?;
+    Ok(())
+}

@@ -1,0 +1,15 @@
+//! # uvmio — Intelligent Oversubscription Management for CPU-GPU UVM
+//!
+//! Reproduction of "An Intelligent Framework for Oversubscription
+//! Management in CPU-GPU Unified Memory" (Long, Gong, Zhou 2022).
+//! See DESIGN.md for the full system inventory and experiment index.
+
+pub mod config;
+pub mod coordinator;
+pub mod exp;
+pub mod policy;
+pub mod predictor;
+pub mod runtime;
+pub mod sim;
+pub mod trace;
+pub mod util;

@@ -1,0 +1,209 @@
+//! `repro` — launcher for the uvmio reproduction.
+//!
+//! ```text
+//! repro exp <table1|table2|...|fig14|all> [--quick] [--scale N] [--seed N]
+//! repro simulate --workload NW --strategy baseline --oversub 125
+//! repro accuracy --workload Hotspot --method ours
+//! repro info
+//! ```
+//!
+//! Experiments write `reports/<id>.csv` next to the console table.
+
+use std::process::ExitCode;
+use std::rc::Rc;
+
+use uvmio::config::Scale;
+use uvmio::coordinator::{
+    offline_accuracy, online_accuracy, run_intelligent, run_rule_based,
+    RunSpec, Strategy, TrainOpts,
+};
+use uvmio::exp::{self, ExpContext, ExpOpts};
+use uvmio::predictor::features::samples_from_trace;
+use uvmio::predictor::IntelligentConfig;
+use uvmio::runtime::{Manifest, Runtime};
+use uvmio::trace::workloads::Workload;
+use uvmio::util::cli::Args;
+
+const USAGE: &str = "\
+repro — intelligent UVM oversubscription management (paper reproduction)
+
+USAGE:
+  repro exp <id|all> [--quick] [--scale N] [--seed N] [--reports DIR]
+      regenerate a paper table/figure (table1 table2 table3 table4 table6
+      table7 fig3 fig4 fig5 fig6 fig10 fig11 fig12 fig13 fig14)
+  repro simulate --workload W --strategy S [--oversub PCT] [--scale N] [--seed N]
+      one simulation cell; strategies: baseline demand-hpe tree-hpe
+      demand-belady demand-lru demand-random uvmsmart intelligent
+  repro accuracy --workload W [--method online|offline|ours] [--seed N]
+      predictor accuracy on one workload
+  repro info
+      artifact manifest + workload inventory
+";
+
+fn main() -> ExitCode {
+    match real_main() {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn real_main() -> anyhow::Result<()> {
+    let args = Args::from_env().map_err(|e| anyhow::anyhow!(e))?;
+    match args.subcommand.as_deref() {
+        Some("exp") => cmd_exp(&args),
+        Some("simulate") => cmd_simulate(&args),
+        Some("accuracy") => cmd_accuracy(&args),
+        Some("info") => cmd_info(),
+        _ => {
+            print!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+fn opts_from(args: &Args) -> anyhow::Result<ExpOpts> {
+    let mut opts = ExpOpts::default();
+    opts.scale = Scale {
+        factor: args.get_parse("scale", 1u32).map_err(anyhow::Error::msg)?,
+    };
+    opts.seed = args.get_parse("seed", 42u64).map_err(anyhow::Error::msg)?;
+    opts.quick = args.has("quick");
+    if let Some(dir) = args.get("reports") {
+        opts.reports_dir = dir.into();
+    }
+    if let Some(dir) = args.get("artifacts") {
+        opts.artifacts_dir = dir.into();
+    }
+    Ok(opts)
+}
+
+fn cmd_exp(args: &Args) -> anyhow::Result<()> {
+    args.reject_unknown(&["quick", "scale", "seed", "reports", "artifacts"])
+        .map_err(anyhow::Error::msg)?;
+    let id = args
+        .positional
+        .first()
+        .cloned()
+        .unwrap_or_else(|| "all".to_string());
+    let mut ctx = ExpContext::new(opts_from(args)?);
+    exp::run(&id, &mut ctx)
+}
+
+fn parse_strategy(s: &str) -> anyhow::Result<Strategy> {
+    Ok(match s.to_ascii_lowercase().as_str() {
+        "baseline" => Strategy::Baseline,
+        "demand-hpe" => Strategy::DemandHpe,
+        "tree-hpe" => Strategy::TreeHpe,
+        "demand-belady" => Strategy::DemandBelady,
+        "demand-lru" => Strategy::DemandLru,
+        "demand-random" => Strategy::DemandRandom,
+        "uvmsmart" => Strategy::UvmSmart,
+        "intelligent" => Strategy::Intelligent,
+        other => anyhow::bail!("unknown strategy {other}"),
+    })
+}
+
+fn parse_workload(args: &Args) -> anyhow::Result<Workload> {
+    let name = args
+        .get("workload")
+        .ok_or_else(|| anyhow::anyhow!("--workload required"))?;
+    Workload::from_name(name)
+        .ok_or_else(|| anyhow::anyhow!("unknown workload {name}"))
+}
+
+fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
+    args.reject_unknown(&["workload", "strategy", "oversub", "scale", "seed", "artifacts"])
+        .map_err(anyhow::Error::msg)?;
+    let opts = opts_from(args)?;
+    let w = parse_workload(args)?;
+    let strategy = parse_strategy(args.get_or("strategy", "baseline"))?;
+    let oversub = args.get_parse("oversub", 125u32).map_err(anyhow::Error::msg)?;
+    let trace = w.generate(opts.scale, opts.seed);
+    let spec = RunSpec::new(&trace, oversub);
+
+    let cell = if strategy == Strategy::Intelligent {
+        let runtime = Runtime::new(&opts.artifacts_dir)?;
+        let model = Rc::new(runtime.model("predictor")?);
+        run_intelligent(&spec, &model, &runtime, IntelligentConfig::default())?
+    } else {
+        run_rule_based(&spec, strategy)
+    };
+    let s = &cell.outcome.stats;
+    println!("workload        : {} ({} pages, {} accesses)", trace.name,
+             trace.working_set_pages, trace.accesses.len());
+    println!("strategy        : {}", strategy.name());
+    println!("oversubscription: {oversub}% (capacity {} pages)", spec.cfg.capacity_pages);
+    println!("faults          : {}", s.faults);
+    println!("migrations      : {}", s.migrations);
+    println!("evictions       : {}", s.evictions);
+    println!("prefetches      : {} (garbage {})", s.prefetches, s.garbage_prefetches);
+    println!("zero-copy       : {}", s.zero_copy);
+    println!("pages thrashed  : {} events / {} unique", s.thrash_events,
+             s.thrashed_pages.len());
+    println!("IPC             : {:.4}", s.ipc());
+    if cell.inference_calls > 0 {
+        println!("inference calls : {} ({} predictions, {} patterns)",
+                 cell.inference_calls, cell.model_predictions, cell.patterns_used);
+    }
+    if cell.outcome.crashed {
+        println!("status          : CRASHED (runaway thrashing)");
+    }
+    Ok(())
+}
+
+fn cmd_accuracy(args: &Args) -> anyhow::Result<()> {
+    args.reject_unknown(&["workload", "method", "scale", "seed", "artifacts"])
+        .map_err(anyhow::Error::msg)?;
+    let opts = opts_from(args)?;
+    let w = parse_workload(args)?;
+    let method = args.get_or("method", "online").to_string();
+    let runtime = Runtime::new(&opts.artifacts_dir)?;
+    let model = Rc::new(runtime.model("predictor")?);
+    let dims = uvmio::coordinator::feat_dims(&runtime);
+    let trace = w.generate(opts.scale, opts.seed);
+    let (samples, vocab) = samples_from_trace(&trace, dims);
+    println!("workload: {} ({} samples, {} delta classes)",
+             trace.name, samples.len(), vocab.assigned());
+    let report = match method.as_str() {
+        "online" => online_accuracy(&model, &dims, &samples, &TrainOpts::default(), None)?,
+        "ours" => online_accuracy(&model, &dims, &samples, &TrainOpts::ours(), None)?,
+        "offline" => offline_accuracy(&model, &dims, &samples, &TrainOpts::default())?,
+        other => anyhow::bail!("unknown method {other}"),
+    };
+    println!("method  : {}", report.method);
+    println!("top-1   : {:.3} over {} evaluations", report.top1, report.evaluated);
+    println!("training: {} steps, {} model(s)", report.train_steps, report.patterns_used);
+    Ok(())
+}
+
+fn cmd_info() -> anyhow::Result<()> {
+    println!("workloads:");
+    for w in Workload::ALL {
+        let t = w.generate(Scale::default(), 42);
+        println!(
+            "  {:12} {:>6} pages  {:>7} accesses  {} kernels  [{}]",
+            w.name(),
+            t.working_set_pages,
+            t.accesses.len(),
+            t.kernels,
+            w.category()
+        );
+    }
+    let dir = Manifest::default_dir();
+    match Manifest::load(&dir) {
+        Ok(m) => {
+            println!("artifacts ({}):", dir.display());
+            for (name, e) in &m.models {
+                println!(
+                    "  {:10} {:>7} params  fwd/train/init present  ({:.2} MB params)",
+                    name, e.param_count, e.params_mb
+                );
+            }
+        }
+        Err(_) => println!("artifacts: not built (run `make artifacts`)"),
+    }
+    Ok(())
+}

@@ -1,0 +1,84 @@
+//! Prefetcher × Evictor composition: the paper's strategy grid.
+//!
+//! `Composite::new(TreePrefetcher::new(), Lru::new())` is the Baseline;
+//! `Composite::new(DemandOnly, Belady::new(&trace))` is "D.+Belady."; the
+//! pathological "Tree.+HPE" of Table II is exactly
+//! `Composite::new(TreePrefetcher::new(), Hpe::new(..))` — the composition
+//! is where the paper's cooperation problem lives, so it deserves a
+//! first-class type.
+
+use crate::sim::{DeviceMemory, Page};
+use crate::trace::Access;
+
+use super::{Evictor, Policy, Prefetcher};
+
+pub struct Composite<P: Prefetcher, E: Evictor> {
+    pub prefetcher: P,
+    pub evictor: E,
+}
+
+impl<P: Prefetcher, E: Evictor> Composite<P, E> {
+    pub fn new(prefetcher: P, evictor: E) -> Self {
+        Composite { prefetcher, evictor }
+    }
+}
+
+impl<P: Prefetcher, E: Evictor> Policy for Composite<P, E> {
+    fn name(&self) -> String {
+        format!("{}.+{}", self.prefetcher.name(), self.evictor.name())
+    }
+
+    fn on_access(&mut self, acc: &Access, resident: bool) {
+        self.prefetcher.on_access(acc, resident);
+        self.evictor.on_access(acc, resident);
+    }
+
+    fn prefetch(&mut self, acc: &Access) -> Vec<Page> {
+        self.prefetcher.prefetch(acc)
+    }
+
+    fn select_victim(&mut self, mem: &DeviceMemory) -> Option<Page> {
+        self.evictor.select_victim(mem)
+    }
+
+    fn on_migrate(&mut self, page: Page, via_prefetch: bool) {
+        self.prefetcher.on_migrate(page, via_prefetch);
+        self.evictor.on_migrate(page, via_prefetch);
+    }
+
+    fn on_evict(&mut self, page: Page) {
+        self.prefetcher.on_evict(page);
+        self.evictor.on_evict(page);
+    }
+
+    fn on_interval(&mut self) {
+        self.evictor.on_interval();
+    }
+
+    fn on_kernel_boundary(&mut self, kernel: u32) {
+        self.evictor.on_kernel_boundary(kernel);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::policy::lru::Lru;
+    use crate::policy::tree_prefetch::TreePrefetcher;
+    use crate::policy::DemandOnly;
+
+    #[test]
+    fn names_follow_paper_convention() {
+        let c = Composite::new(DemandOnly, Lru::new());
+        assert_eq!(c.name(), "Demand.+LRU");
+        let c = Composite::new(TreePrefetcher::new(), Lru::new());
+        assert_eq!(c.name(), "Tree.+LRU");
+    }
+
+    #[test]
+    fn demand_only_never_prefetches() {
+        let mut c = Composite::new(DemandOnly, Lru::new());
+        let acc = Access { page: 0, pc: 0, tb: 0, kernel: 0, inst_gap: 0, is_write: false };
+        assert!(Policy::prefetch(&mut c, &acc).is_empty());
+    }
+}

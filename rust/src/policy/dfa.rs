@@ -1,0 +1,284 @@
+//! The DFA access-pattern classifier (Ganguly et al., DATE'21 — reused by
+//! the paper as its pattern classifier, §IV-C).
+//!
+//! The UVM runtime batches far-faults into 64 KB basic-block DMA
+//! transfers; the DFA scans the transfer stream segregated at kernel
+//! boundaries and labels each segment with one of six patterns by
+//! (a) linearity/randomness of the block addresses and (b) re-referencing
+//! across kernel boundaries:
+//!
+//! `Streaming`, `Random`, `Mixed` × (reuse? `LinearReuse`/`RandomReuse`/
+//! `MixedReuse`).
+
+use std::collections::HashSet;
+
+use crate::config::PAGES_PER_BB;
+use crate::sim::Page;
+
+/// The six DFA classes (paper §IV-C digits 0-5).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Pattern {
+    Streaming,
+    Random,
+    Mixed,
+    LinearReuse,
+    RandomReuse,
+    MixedReuse,
+}
+
+impl Pattern {
+    pub const COUNT: usize = 6;
+
+    pub fn index(&self) -> usize {
+        match self {
+            Pattern::Streaming => 0,
+            Pattern::Random => 1,
+            Pattern::Mixed => 2,
+            Pattern::LinearReuse => 3,
+            Pattern::RandomReuse => 4,
+            Pattern::MixedReuse => 5,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Pattern::Streaming => "Streaming",
+            Pattern::Random => "Random",
+            Pattern::Mixed => "Mixed",
+            Pattern::LinearReuse => "LinearReuse",
+            Pattern::RandomReuse => "RandomReuse",
+            Pattern::MixedReuse => "MixedReuse",
+        }
+    }
+
+    pub fn is_linear(&self) -> bool {
+        matches!(self, Pattern::Streaming | Pattern::LinearReuse)
+    }
+
+    pub fn is_random(&self) -> bool {
+        matches!(self, Pattern::Random | Pattern::RandomReuse)
+    }
+
+    pub fn has_reuse(&self) -> bool {
+        matches!(
+            self,
+            Pattern::LinearReuse | Pattern::RandomReuse | Pattern::MixedReuse
+        )
+    }
+}
+
+/// Classify a basic-block address sequence given the set of blocks seen in
+/// earlier segments. Pure function — the invariant tests lean on this.
+///
+/// Linearity detection is *multi-stream aware*: real UVM transfer streams
+/// interleave several linear walks (one per `cudaMallocManaged` array), so
+/// instead of demanding +1 deltas we measure how much of the transition
+/// mass is covered by the few most common deltas. A periodic delta cycle
+/// (streaming over k arrays) concentrates in ≤ k+1 distinct deltas; a
+/// random walk spreads across many.
+pub fn classify_blocks(blocks: &[u64], seen_before: &HashSet<u64>) -> Pattern {
+    if blocks.len() < 2 {
+        return Pattern::Streaming; // too little signal: optimistic default
+    }
+    let mut hist: std::collections::HashMap<i64, usize> =
+        std::collections::HashMap::new();
+    for w in blocks.windows(2) {
+        *hist.entry(w[1] as i64 - w[0] as i64).or_insert(0) += 1;
+    }
+    let n = (blocks.len() - 1) as f64;
+    let mut counts: Vec<usize> = hist.values().copied().collect();
+    counts.sort_unstable_by(|a, b| b.cmp(a));
+    let top4: usize = counts.iter().take(4).sum();
+    let top4_frac = top4 as f64 / n;
+    let reuse = blocks.iter().filter(|b| seen_before.contains(b)).count();
+    let reuse_frac = reuse as f64 / blocks.len() as f64;
+
+    let base = if top4_frac >= 0.70 {
+        0 // linear / periodic multi-stream
+    } else if hist.len() >= 16 && top4_frac < 0.40 {
+        1 // random: many distinct jumps, no dominant period
+    } else {
+        2 // mixed
+    };
+    match (base, reuse_frac >= 0.3) {
+        (0, false) => Pattern::Streaming,
+        (1, false) => Pattern::Random,
+        (2, false) => Pattern::Mixed,
+        (0, true) => Pattern::LinearReuse,
+        (1, true) => Pattern::RandomReuse,
+        (2, true) => Pattern::MixedReuse,
+        _ => unreachable!(),
+    }
+}
+
+/// Stateful classifier fed by the migration (DMA) stream.
+#[derive(Debug, Default)]
+pub struct DfaClassifier {
+    seen: HashSet<u64>,
+    segment: Vec<u64>,
+    last: Option<Pattern>,
+    /// bounded history so long runs don't grow without limit
+    max_segment: usize,
+}
+
+impl DfaClassifier {
+    pub fn new() -> DfaClassifier {
+        DfaClassifier {
+            seen: HashSet::new(),
+            segment: Vec::new(),
+            last: None,
+            max_segment: 4096,
+        }
+    }
+
+    /// Record a page migration (the DFA sees its basic block).
+    pub fn note_transfer(&mut self, page: Page) {
+        if self.segment.len() < self.max_segment {
+            self.segment.push(page / PAGES_PER_BB);
+        }
+    }
+
+    /// Kernel boundary: classify the finished segment and reset.
+    pub fn kernel_boundary(&mut self) -> Pattern {
+        let p = classify_blocks(&self.segment, &self.seen);
+        self.seen.extend(self.segment.drain(..));
+        self.last = Some(p);
+        p
+    }
+
+    /// Classify the in-flight segment without closing it (used by the
+    /// online framework between boundaries).
+    pub fn classify_current(&self) -> Pattern {
+        self.last
+            .unwrap_or_else(|| classify_blocks(&self.segment, &self.seen))
+    }
+
+    /// Most recent closed-segment classification.
+    pub fn last(&self) -> Option<Pattern> {
+        self.last
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bbs(v: &[u64]) -> Vec<u64> {
+        v.to_vec()
+    }
+
+    /// scattered walk with all-distinct deltas
+    fn scatter(n: u64) -> Vec<u64> {
+        (0..n).map(|i| (i * i * 2654435761 >> 5) % 997).collect()
+    }
+
+    #[test]
+    fn linear_no_reuse_is_streaming() {
+        let p = classify_blocks(&bbs(&[0, 1, 2, 3, 4, 5]), &HashSet::new());
+        assert_eq!(p, Pattern::Streaming);
+    }
+
+    #[test]
+    fn large_jumps_are_random() {
+        // a long scattered walk: every delta distinct
+        let p = classify_blocks(&scatter(32), &HashSet::new());
+        assert_eq!(p, Pattern::Random);
+    }
+
+    #[test]
+    fn interleaved_streams_are_still_linear() {
+        // three arrays streamed together: the delta cycle {+42, +43, -84}
+        // repeats — multi-stream streaming, not random
+        let mut blocks = Vec::new();
+        for i in 0..40u64 {
+            blocks.push(i);
+            blocks.push(42 + i);
+            blocks.push(85 + i);
+        }
+        let p = classify_blocks(&blocks, &HashSet::new());
+        assert_eq!(p, Pattern::Streaming);
+    }
+
+    #[test]
+    fn alternating_is_mixed() {
+        // half a dominant +1 walk, half scattered jumps: neither linear-
+        // nor random-dominant
+        let mut blocks = Vec::new();
+        for i in 0..30u64 {
+            blocks.push(i);
+            blocks.push(i + 1);
+            blocks.push(i + 2);
+            blocks.push((i * i * 31337 >> 3) % 900);
+        }
+        let p = classify_blocks(&blocks, &HashSet::new());
+        assert_eq!(p, Pattern::Mixed);
+    }
+
+    #[test]
+    fn reuse_upgrades_class() {
+        let seen: HashSet<u64> = (0..1000).collect();
+        let p = classify_blocks(&bbs(&[0, 1, 2, 3, 4, 5]), &seen);
+        assert_eq!(p, Pattern::LinearReuse);
+        let p = classify_blocks(&scatter(32), &seen);
+        assert_eq!(p, Pattern::RandomReuse);
+    }
+
+    #[test]
+    fn stateful_cross_kernel_reuse() {
+        let mut d = DfaClassifier::new();
+        for p in 0..64 {
+            d.note_transfer(p); // bbs 0..4 linear
+        }
+        assert_eq!(d.kernel_boundary(), Pattern::Streaming);
+        // second kernel re-touches the same blocks
+        for p in 0..64 {
+            d.note_transfer(p);
+        }
+        assert_eq!(d.kernel_boundary(), Pattern::LinearReuse);
+    }
+
+    #[test]
+    fn classification_is_pure() {
+        let seen: HashSet<u64> = HashSet::new();
+        let blocks = bbs(&[5, 6, 7, 8, 2, 9]);
+        assert_eq!(
+            classify_blocks(&blocks, &seen),
+            classify_blocks(&blocks, &seen)
+        );
+    }
+
+    #[test]
+    fn workload_categories_match_table7() {
+        use crate::config::Scale;
+        use crate::trace::workloads::Workload;
+        // feed each benchmark's page stream through the DFA and check the
+        // headline category of the paper's Table VII rows
+        let classify = |w: Workload| {
+            let t = w.generate(Scale::default(), 42);
+            let mut d = DfaClassifier::new();
+            let mut votes = [0usize; Pattern::COUNT];
+            let mut kernel = 0;
+            for a in &t.accesses {
+                if a.kernel != kernel {
+                    kernel = a.kernel;
+                    votes[d.kernel_boundary().index()] += 1;
+                }
+                d.note_transfer(a.page);
+            }
+            votes[d.kernel_boundary().index()] += 1;
+            votes
+        };
+        let triad = classify(Workload::StreamTriad);
+        assert!(
+            triad[Pattern::Streaming.index()] + triad[Pattern::LinearReuse.index()]
+                >= triad.iter().sum::<usize>() / 2,
+            "StreamTriad should be linear: {triad:?}"
+        );
+        let atax = classify(Workload::Atax);
+        assert!(
+            atax[Pattern::Random.index()] + atax[Pattern::RandomReuse.index()]
+                + atax[Pattern::Mixed.index()] + atax[Pattern::MixedReuse.index()] > 0,
+            "ATAX transpose phase should look non-linear: {atax:?}"
+        );
+    }
+}

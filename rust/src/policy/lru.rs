@@ -1,0 +1,116 @@
+//! LRU eviction — the CUDA driver's page replacement policy (GTC'17),
+//! and the evictor half of the paper's Baseline (tree prefetch + LRU).
+//!
+//! True LRU over pages: O(log n) via a tick-indexed BTreeMap. The paper
+//! notes ideal LRU is too expensive in hardware; the simulator models the
+//! idealised policy, as GPGPU-Sim does.
+
+use std::collections::{BTreeMap, HashMap};
+
+use crate::sim::{DeviceMemory, Page};
+use crate::trace::Access;
+
+use super::Evictor;
+
+#[derive(Debug, Default)]
+pub struct Lru {
+    tick: u64,
+    by_tick: BTreeMap<u64, Page>,
+    tick_of: HashMap<Page, u64>,
+}
+
+impl Lru {
+    pub fn new() -> Lru {
+        Lru::default()
+    }
+
+    fn bump(&mut self, page: Page) {
+        self.tick += 1;
+        if let Some(old) = self.tick_of.insert(page, self.tick) {
+            self.by_tick.remove(&old);
+        }
+        self.by_tick.insert(self.tick, page);
+    }
+
+    fn drop_page(&mut self, page: Page) {
+        if let Some(t) = self.tick_of.remove(&page) {
+            self.by_tick.remove(&t);
+        }
+    }
+
+    /// Number of tracked pages (resident set size).
+    pub fn len(&self) -> usize {
+        self.tick_of.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tick_of.is_empty()
+    }
+}
+
+impl Evictor for Lru {
+    fn name(&self) -> String {
+        "LRU".into()
+    }
+
+    fn on_access(&mut self, acc: &Access, resident: bool) {
+        if resident {
+            self.bump(acc.page);
+        }
+    }
+
+    fn on_migrate(&mut self, page: Page, _via_prefetch: bool) {
+        self.bump(page);
+    }
+
+    fn on_evict(&mut self, page: Page) {
+        self.drop_page(page);
+    }
+
+    fn select_victim(&mut self, _mem: &DeviceMemory) -> Option<Page> {
+        self.by_tick.values().next().copied()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::DeviceMemory;
+
+    fn acc(page: Page) -> Access {
+        Access { page, pc: 0, tb: 0, kernel: 0, inst_gap: 0, is_write: false }
+    }
+
+    #[test]
+    fn evicts_least_recently_used() {
+        let mem = DeviceMemory::new(16);
+        let mut lru = Lru::new();
+        for p in [1, 2, 3] {
+            lru.on_migrate(p, false);
+        }
+        lru.on_access(&acc(1), true); // refresh 1
+        assert_eq!(lru.select_victim(&mem), Some(2));
+        lru.on_evict(2);
+        assert_eq!(lru.select_victim(&mem), Some(3));
+    }
+
+    #[test]
+    fn eviction_untracks() {
+        let mem = DeviceMemory::new(16);
+        let mut lru = Lru::new();
+        lru.on_migrate(9, false);
+        lru.on_evict(9);
+        assert_eq!(lru.select_victim(&mem), None);
+        assert!(lru.is_empty());
+    }
+
+    #[test]
+    fn rebump_keeps_one_entry_per_page() {
+        let mut lru = Lru::new();
+        for _ in 0..10 {
+            lru.on_migrate(5, false);
+        }
+        assert_eq!(lru.len(), 1);
+        assert_eq!(lru.by_tick.len(), 1);
+    }
+}

@@ -1,0 +1,105 @@
+//! Memory-management policies: the strategy axis of every experiment.
+//!
+//! A [`Policy`] bundles the three decisions the UVM runtime makes —
+//! how to *service a fault* (migrate / zero-copy / delayed), what to
+//! *prefetch*, and whom to *evict* — because the paper's central claim is
+//! that these must cooperate (Section III-B: HPE collapses when paired
+//! with the tree prefetcher it wasn't designed for).
+//!
+//! Implemented strategies:
+//!
+//! | module | paper name | role |
+//! |---|---|---|
+//! | `lru` | Baseline eviction | CUDA driver's LRU (GTC'17) |
+//! | `random` | Random | Zheng et al. comparison point |
+//! | `tree_prefetch` | Tree. | NVIDIA driver's tree prefetcher (Ganguly) |
+//! | `tree_evict` | tree pre-eviction | inverse-threshold heuristic |
+//! | `belady` | D.+Belady. | MIN oracle upper bound |
+//! | `hpe` | HPE | hierarchical page eviction (Yu et al.) |
+//! | `uvmsmart` | UVMSmart | adaptive DFA-driven runtime (Ganguly) |
+//! | `dfa` | — | the 6-class access-pattern classifier both |
+//! |       |   | UVMSmart and our framework share |
+//! | `composite` | Baseline / Tree.+HPE / D.+X | prefetcher × evictor glue |
+
+pub mod belady;
+pub mod composite;
+pub mod dfa;
+pub mod hpe;
+pub mod lru;
+pub mod random;
+pub mod tree_evict;
+pub mod tree_prefetch;
+pub mod uvmsmart;
+
+use crate::sim::{DeviceMemory, FaultAction, Page};
+use crate::trace::Access;
+
+/// A complete memory-management strategy (fault action + prefetch +
+/// eviction). The engine calls the hooks in trace order.
+pub trait Policy {
+    fn name(&self) -> String;
+
+    /// Observe an access (after residency is known, before servicing).
+    fn on_access(&mut self, _acc: &Access, _resident: bool) {}
+
+    /// How to service a far-fault on `page` (default: migrate).
+    fn fault_action(&mut self, _page: Page) -> FaultAction {
+        FaultAction::Migrate
+    }
+
+    /// Pages to prefetch after servicing `acc` (non-resident pages only;
+    /// the engine filters and bounds them by the arena).
+    fn prefetch(&mut self, _acc: &Access) -> Vec<Page> {
+        Vec::new()
+    }
+
+    /// Choose an eviction victim. Must return a resident page; the engine
+    /// falls back (and counts `policy_victim_fallbacks`) otherwise.
+    fn select_victim(&mut self, mem: &DeviceMemory) -> Option<Page>;
+
+    /// A page became resident (demand or prefetch).
+    fn on_migrate(&mut self, _page: Page, _via_prefetch: bool) {}
+
+    /// A page was evicted.
+    fn on_evict(&mut self, _page: Page) {}
+
+    /// Interval boundary (every `SimConfig::interval_faults` faults) —
+    /// HPE rotates its page-set chain here, frequency tables flush, etc.
+    fn on_interval(&mut self) {}
+
+    /// Kernel (phase) boundary.
+    fn on_kernel_boundary(&mut self, _kernel: u32) {}
+}
+
+/// Eviction-only strategies that compose with any prefetcher via
+/// [`composite::Composite`].
+pub trait Evictor {
+    fn name(&self) -> String;
+    fn on_access(&mut self, _acc: &Access, _resident: bool) {}
+    fn select_victim(&mut self, mem: &DeviceMemory) -> Option<Page>;
+    fn on_migrate(&mut self, _page: Page, _via_prefetch: bool) {}
+    fn on_evict(&mut self, _page: Page) {}
+    fn on_interval(&mut self) {}
+    fn on_kernel_boundary(&mut self, _kernel: u32) {}
+}
+
+/// Prefetch-only strategies for the same composition.
+pub trait Prefetcher {
+    fn name(&self) -> String;
+    fn on_access(&mut self, _acc: &Access, _resident: bool) {}
+    fn prefetch(&mut self, _acc: &Access) -> Vec<Page> {
+        Vec::new()
+    }
+    fn on_migrate(&mut self, _page: Page, _via_prefetch: bool) {}
+    fn on_evict(&mut self, _page: Page) {}
+}
+
+/// No prefetching — the paper's "Demand." configurations.
+#[derive(Debug, Default)]
+pub struct DemandOnly;
+
+impl Prefetcher for DemandOnly {
+    fn name(&self) -> String {
+        "Demand".into()
+    }
+}

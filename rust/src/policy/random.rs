@@ -1,0 +1,103 @@
+//! Random eviction (Zheng et al. HPCA'16 comparison point): a uniformly
+//! random resident page, irrespective of recency. Sometimes beats LRU on
+//! thrashing patterns precisely because it is recency-blind.
+
+use std::collections::HashMap;
+
+use crate::sim::{DeviceMemory, Page};
+use crate::util::rng::Rng;
+
+use super::Evictor;
+
+#[derive(Debug)]
+pub struct RandomEvict {
+    rng: Rng,
+    /// swap-remove vector + index map for O(1) membership updates
+    pages: Vec<Page>,
+    index: HashMap<Page, usize>,
+}
+
+impl RandomEvict {
+    pub fn new(seed: u64) -> RandomEvict {
+        RandomEvict {
+            rng: Rng::new(seed),
+            pages: Vec::new(),
+            index: HashMap::new(),
+        }
+    }
+}
+
+impl Evictor for RandomEvict {
+    fn name(&self) -> String {
+        "Random".into()
+    }
+
+    fn on_migrate(&mut self, page: Page, _via_prefetch: bool) {
+        if !self.index.contains_key(&page) {
+            self.index.insert(page, self.pages.len());
+            self.pages.push(page);
+        }
+    }
+
+    fn on_evict(&mut self, page: Page) {
+        if let Some(i) = self.index.remove(&page) {
+            let last = self.pages.pop().expect("non-empty");
+            if i < self.pages.len() {
+                self.pages[i] = last;
+                self.index.insert(last, i);
+            }
+        }
+    }
+
+    fn select_victim(&mut self, _mem: &DeviceMemory) -> Option<Page> {
+        if self.pages.is_empty() {
+            None
+        } else {
+            Some(*self.rng.choose(&self.pages))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tracks_membership() {
+        let mem = DeviceMemory::new(8);
+        let mut r = RandomEvict::new(1);
+        for p in 0..5 {
+            r.on_migrate(p, false);
+        }
+        r.on_evict(2);
+        for _ in 0..100 {
+            let v = r.select_victim(&mem).unwrap();
+            assert_ne!(v, 2);
+            assert!(v < 5);
+        }
+    }
+
+    #[test]
+    fn empty_returns_none() {
+        let mem = DeviceMemory::new(8);
+        let mut r = RandomEvict::new(1);
+        assert_eq!(r.select_victim(&mem), None);
+        r.on_migrate(1, false);
+        r.on_evict(1);
+        assert_eq!(r.select_victim(&mem), None);
+    }
+
+    #[test]
+    fn covers_all_resident_pages() {
+        let mem = DeviceMemory::new(8);
+        let mut r = RandomEvict::new(7);
+        for p in 0..4 {
+            r.on_migrate(p, false);
+        }
+        let mut seen = [false; 4];
+        for _ in 0..200 {
+            seen[r.select_victim(&mem).unwrap() as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+}

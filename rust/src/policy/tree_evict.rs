@@ -1,0 +1,181 @@
+//! Tree-based pre-eviction (Ganguly et al., ISCA'19): the inverse of the
+//! tree prefetcher's threshold heuristic. Whenever a non-leaf node of a
+//! chunk tree falls **below 50% occupancy**, the remaining valid 64 KB
+//! leaves under it are scheduled for pre-eviction — the intuition being
+//! that a draining region will not be re-referenced soon.
+//!
+//! Used by the ablation benches (`policies` bench) and available to the
+//! experiment harness as an alternative evictor; falls back to LRU order
+//! when the pre-eviction queue is empty.
+
+use std::collections::{HashMap, VecDeque};
+
+use crate::config::{BBS_PER_CHUNK, PAGES_PER_BB};
+use crate::sim::{DeviceMemory, Page};
+use crate::trace::Access;
+
+use super::lru::Lru;
+use super::Evictor;
+
+const PAGES_PER_CHUNK: u64 = PAGES_PER_BB * BBS_PER_CHUNK;
+const NODES: usize = 2 * BBS_PER_CHUNK as usize;
+
+#[derive(Debug)]
+pub struct TreeEvict {
+    valid: HashMap<u64, [u16; NODES]>, // chunk -> heap counters
+    resident: HashMap<Page, ()>,
+    /// pages scheduled for pre-eviction (drained by select_victim)
+    queue: VecDeque<Page>,
+    fallback: Lru,
+}
+
+impl TreeEvict {
+    pub fn new() -> TreeEvict {
+        TreeEvict {
+            valid: HashMap::new(),
+            resident: HashMap::new(),
+            queue: VecDeque::new(),
+            fallback: Lru::new(),
+        }
+    }
+
+    fn leaf(page: Page) -> (u64, usize) {
+        let chunk = page / PAGES_PER_CHUNK;
+        let bb = (page % PAGES_PER_CHUNK) / PAGES_PER_BB;
+        (chunk, BBS_PER_CHUNK as usize + bb as usize)
+    }
+
+    fn node_capacity(i: usize) -> u64 {
+        let depth = (usize::BITS - 1 - i.leading_zeros()) as u64;
+        PAGES_PER_CHUNK >> depth
+    }
+
+    /// After an eviction, check the victim's ancestors: any node that
+    /// dropped below 50% schedules its remaining resident pages.
+    fn schedule_drain(&mut self, page: Page) {
+        let (chunk, mut i) = Self::leaf(page);
+        let counters = match self.valid.get(&chunk) {
+            Some(c) => *c,
+            None => return,
+        };
+        i /= 2; // start at the first non-leaf ancestor
+        while i >= 1 {
+            let cap = Self::node_capacity(i);
+            let v = counters[i] as u64;
+            if v > 0 && v * 2 < cap {
+                // collect resident pages under node i
+                let depth = (usize::BITS - 1 - i.leading_zeros()) as usize;
+                let leaves_under = BBS_PER_CHUNK as usize >> depth;
+                let first_leaf = (i << (5 - depth)) - BBS_PER_CHUNK as usize;
+                for leaf in first_leaf..first_leaf + leaves_under {
+                    let base = chunk * PAGES_PER_CHUNK + leaf as u64 * PAGES_PER_BB;
+                    for p in base..base + PAGES_PER_BB {
+                        if self.resident.contains_key(&p) {
+                            self.queue.push_back(p);
+                        }
+                    }
+                }
+                break; // one draining node per eviction event
+            }
+            i /= 2;
+        }
+    }
+
+    fn adjust(&mut self, page: Page, delta: i32) {
+        let (chunk, mut i) = Self::leaf(page);
+        let counters = self.valid.entry(chunk).or_insert([0; NODES]);
+        while i >= 1 {
+            let v = counters[i] as i32 + delta;
+            debug_assert!(v >= 0);
+            counters[i] = v as u16;
+            i /= 2;
+        }
+    }
+}
+
+impl Default for TreeEvict {
+    fn default() -> Self {
+        TreeEvict::new()
+    }
+}
+
+impl Evictor for TreeEvict {
+    fn name(&self) -> String {
+        "TreeEvict".into()
+    }
+
+    fn on_access(&mut self, acc: &Access, resident: bool) {
+        self.fallback.on_access(acc, resident);
+    }
+
+    fn on_migrate(&mut self, page: Page, via_prefetch: bool) {
+        if self.resident.insert(page, ()).is_none() {
+            self.adjust(page, 1);
+        }
+        self.fallback.on_migrate(page, via_prefetch);
+    }
+
+    fn on_evict(&mut self, page: Page) {
+        if self.resident.remove(&page).is_some() {
+            self.adjust(page, -1);
+            self.schedule_drain(page);
+        }
+        self.fallback.on_evict(page);
+    }
+
+    fn select_victim(&mut self, mem: &DeviceMemory) -> Option<Page> {
+        while let Some(p) = self.queue.pop_front() {
+            if self.resident.contains_key(&p) {
+                return Some(p);
+            }
+        }
+        self.fallback.select_victim(mem)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn drains_below_half_occupancy() {
+        let mem = DeviceMemory::new(1024);
+        let mut t = TreeEvict::new();
+        // fill bb 0 (16 pages): parent node (cap 32) at exactly 50%
+        for p in 0..16 {
+            t.on_migrate(p, false);
+        }
+        // evict one page: parent drops below 50% => remaining 15 pages of
+        // the node get scheduled
+        t.on_evict(3);
+        let v = t.select_victim(&mem);
+        assert!(v.is_some());
+        assert!(v.unwrap() < 16, "drain victim from the draining node");
+    }
+
+    #[test]
+    fn falls_back_to_lru_when_queue_empty() {
+        let mem = DeviceMemory::new(1024);
+        let mut t = TreeEvict::new();
+        // two full chunks' worth keeps every node >= 50%
+        for p in 0..512 {
+            t.on_migrate(p, false);
+        }
+        assert_eq!(t.select_victim(&mem), Some(0), "LRU order");
+    }
+
+    #[test]
+    fn stale_drain_entries_skipped() {
+        let mem = DeviceMemory::new(1024);
+        let mut t = TreeEvict::new();
+        for p in 0..16 {
+            t.on_migrate(p, false);
+        }
+        t.on_evict(3);
+        // externally evict everything the drain queued
+        for p in 0..16 {
+            t.on_evict(p);
+        }
+        assert_eq!(t.select_victim(&mem), None);
+    }
+}

@@ -1,0 +1,220 @@
+//! The NVIDIA driver's tree-based neighbourhood prefetcher, as uncovered
+//! by Ganguly et al. (ISCA'19) through micro-benchmarking (paper §II-B).
+//!
+//! Each `cudaMallocManaged` allocation is logically divided into 2 MB
+//! chunks; each chunk is a full binary tree whose 32 leaves are 64 KB
+//! basic blocks (16 × 4 KB pages). On a far-fault the runtime migrates
+//! the whole faulted basic block; and for every non-leaf node whose
+//! resident ("valid") size exceeds 50% of its capacity, the remaining
+//! non-valid pages under that node are scheduled as prefetches.
+
+use std::collections::HashMap;
+
+use crate::config::{BBS_PER_CHUNK, PAGES_PER_BB};
+use crate::sim::Page;
+use crate::trace::Access;
+
+use super::Prefetcher;
+
+const PAGES_PER_CHUNK: u64 = PAGES_PER_BB * BBS_PER_CHUNK; // 512
+/// tree nodes for 32 leaves: 63, heap-indexed from 1
+const NODES: usize = 2 * BBS_PER_CHUNK as usize;
+
+/// Valid-page counters for one 2 MB chunk's tree.
+#[derive(Debug, Clone)]
+struct ChunkTree {
+    /// valid pages under each node (heap layout, root = 1)
+    valid: [u16; NODES],
+}
+
+impl ChunkTree {
+    fn new() -> ChunkTree {
+        ChunkTree { valid: [0; NODES] }
+    }
+
+    /// capacity in pages of a node at heap index i (root 1 = 512)
+    fn node_capacity(i: usize) -> u64 {
+        let depth = (usize::BITS - 1 - i.leading_zeros()) as u64; // root=0
+        PAGES_PER_CHUNK >> depth
+    }
+
+    fn leaf_index(bb_in_chunk: u64) -> usize {
+        BBS_PER_CHUNK as usize + bb_in_chunk as usize
+    }
+
+    fn adjust(&mut self, bb_in_chunk: u64, delta: i32) {
+        let mut i = Self::leaf_index(bb_in_chunk);
+        while i >= 1 {
+            let v = self.valid[i] as i32 + delta;
+            debug_assert!(v >= 0, "negative valid count");
+            self.valid[i] = v as u16;
+            i /= 2;
+        }
+    }
+}
+
+/// The tree prefetcher ("Tree." in the paper's tables).
+#[derive(Debug, Default)]
+pub struct TreePrefetcher {
+    chunks: HashMap<u64, ChunkTree>,
+    /// resident mirror at page granularity (to emit only absent pages)
+    resident: HashMap<Page, ()>,
+}
+
+impl TreePrefetcher {
+    pub fn new() -> TreePrefetcher {
+        TreePrefetcher::default()
+    }
+
+    fn chunk_of(page: Page) -> u64 {
+        page / PAGES_PER_CHUNK
+    }
+
+    fn bb_in_chunk(page: Page) -> u64 {
+        (page % PAGES_PER_CHUNK) / PAGES_PER_BB
+    }
+
+    /// All absent pages under heap node `i` of `chunk`.
+    fn absent_under(&self, chunk: u64, i: usize) -> Vec<Page> {
+        // node i at depth d covers leaves [lo, hi)
+        let depth = (usize::BITS - 1 - i.leading_zeros()) as usize;
+        let leaves_under = BBS_PER_CHUNK as usize >> depth;
+        let first_leaf = (i << (5 - depth)) - BBS_PER_CHUNK as usize;
+        let mut out = Vec::new();
+        for leaf in first_leaf..first_leaf + leaves_under {
+            let bb_base = chunk * PAGES_PER_CHUNK + leaf as u64 * PAGES_PER_BB;
+            for p in bb_base..bb_base + PAGES_PER_BB {
+                if !self.resident.contains_key(&p) {
+                    out.push(p);
+                }
+            }
+        }
+        out
+    }
+}
+
+impl Prefetcher for TreePrefetcher {
+    fn name(&self) -> String {
+        "Tree".into()
+    }
+
+    fn prefetch(&mut self, acc: &Access) -> Vec<Page> {
+        let chunk = Self::chunk_of(acc.page);
+        let bb = Self::bb_in_chunk(acc.page);
+        let tree = match self.chunks.get(&chunk) {
+            Some(t) => t,
+            None => return Vec::new(), // nothing migrated yet
+        };
+
+        // 1. complete the faulted basic block
+        let mut out = self.absent_under(chunk, ChunkTree::leaf_index(bb));
+
+        // 2. walk ancestors: >50% valid => schedule the rest of the node
+        let mut i = ChunkTree::leaf_index(bb) / 2;
+        while i >= 1 {
+            let cap = ChunkTree::node_capacity(i);
+            if (tree.valid[i] as u64) * 2 > cap {
+                out.extend(self.absent_under(chunk, i));
+            }
+            i /= 2;
+        }
+        out.sort_unstable();
+        out.dedup();
+        out
+    }
+
+    fn on_migrate(&mut self, page: Page, _via_prefetch: bool) {
+        if self.resident.insert(page, ()).is_none() {
+            let chunk = Self::chunk_of(page);
+            let bb = Self::bb_in_chunk(page);
+            self.chunks
+                .entry(chunk)
+                .or_insert_with(ChunkTree::new)
+                .adjust(bb, 1);
+        }
+    }
+
+    fn on_evict(&mut self, page: Page) {
+        if self.resident.remove(&page).is_some() {
+            let chunk = Self::chunk_of(page);
+            let bb = Self::bb_in_chunk(page);
+            if let Some(t) = self.chunks.get_mut(&chunk) {
+                t.adjust(bb, -1);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn acc(page: Page) -> Access {
+        Access { page, pc: 0, tb: 0, kernel: 0, inst_gap: 0, is_write: false }
+    }
+
+    #[test]
+    fn node_capacities() {
+        assert_eq!(ChunkTree::node_capacity(1), 512); // root: whole chunk
+        assert_eq!(ChunkTree::node_capacity(2), 256);
+        assert_eq!(ChunkTree::node_capacity(32), 16); // leaf = basic block
+        assert_eq!(ChunkTree::node_capacity(63), 16);
+    }
+
+    #[test]
+    fn completes_the_faulted_basic_block() {
+        let mut t = TreePrefetcher::new();
+        t.on_migrate(0, false); // page 0 of bb 0
+        let out = t.prefetch(&acc(0));
+        // the rest of bb 0: pages 1..16
+        assert_eq!(out, (1..16).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn fifty_percent_threshold_expands_parent() {
+        let mut t = TreePrefetcher::new();
+        // fill bb 0 entirely (16 pages) => parent node (cap 32) is at
+        // exactly 50% — NOT over threshold yet
+        for p in 0..16 {
+            t.on_migrate(p, false);
+        }
+        let out = t.prefetch(&acc(0));
+        assert!(out.is_empty(), "50% is not >50%: {out:?}");
+        // one page of bb 1 tips the parent over 50%
+        t.on_migrate(16, false);
+        let out = t.prefetch(&acc(16));
+        // completes bb1 (17..32); parent of (bb0,bb1) now >50% -> rest of
+        // that subtree is bb1's pages too; grandparents still below.
+        assert!(out.contains(&17));
+        assert!(out.contains(&31));
+        assert!(!out.contains(&32), "sibling subtree below threshold");
+    }
+
+    #[test]
+    fn eviction_decrements_counters() {
+        let mut t = TreePrefetcher::new();
+        for p in 0..17 {
+            t.on_migrate(p, false);
+        }
+        for p in 0..17 {
+            t.on_evict(p);
+        }
+        let chunk = t.chunks.get(&0).unwrap();
+        assert!(chunk.valid.iter().all(|&v| v == 0));
+        // double-evict is a no-op
+        t.on_evict(0);
+        assert!(t.chunks.get(&0).unwrap().valid.iter().all(|&v| v == 0));
+    }
+
+    #[test]
+    fn chunks_are_independent() {
+        let mut t = TreePrefetcher::new();
+        for p in 0..400 {
+            t.on_migrate(p, false); // most of chunk 0
+        }
+        // fault in chunk 1 must not see chunk 0's occupancy
+        t.on_migrate(512, false);
+        let out = t.prefetch(&acc(512));
+        assert_eq!(out, (513..528).collect::<Vec<u64>>());
+    }
+}

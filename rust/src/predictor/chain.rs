@@ -1,0 +1,198 @@
+//! The page set chain shared by prefetch and eviction (paper §IV-D,
+//! borrowed from HPE): resident pages partitioned into new/middle/old by
+//! migration interval, updated with BOTH demand loads and prefetches.
+//! Eviction searches old → middle → new and, within the chosen
+//! partition, selects the page with the LOWEST prediction frequency —
+//! the frequency table supplies the ordering.
+
+use std::collections::{HashMap, VecDeque};
+
+use crate::sim::Page;
+
+use super::freq_table::FreqTable;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PartitionId {
+    New,
+    Middle,
+    Old,
+}
+
+#[derive(Debug, Default)]
+pub struct PageSetChain {
+    new: VecDeque<Page>,
+    middle: VecDeque<Page>,
+    old: VecDeque<Page>,
+    member: HashMap<Page, PartitionId>,
+}
+
+impl PageSetChain {
+    pub fn new() -> PageSetChain {
+        PageSetChain::default()
+    }
+
+    /// A page became resident (demand OR prefetch — the paper stresses
+    /// that the chain sees both).
+    pub fn insert(&mut self, page: Page) {
+        if self.member.insert(page, PartitionId::New).is_none() {
+            self.new.push_back(page);
+        }
+    }
+
+    pub fn remove(&mut self, page: Page) {
+        self.member.remove(&page);
+        // queues cleaned lazily at scan time
+    }
+
+    pub fn contains(&self, page: Page) -> bool {
+        self.member.contains_key(&page)
+    }
+
+    pub fn len(&self) -> usize {
+        self.member.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.member.is_empty()
+    }
+
+    /// Interval boundary: age partitions (middle→old, new→middle).
+    pub fn rotate(&mut self) {
+        let aged: Vec<Page> = self.middle.drain(..).collect();
+        for p in &aged {
+            if let Some(m) = self.member.get_mut(p) {
+                *m = PartitionId::Old;
+            }
+        }
+        self.old.extend(aged);
+        let fresh: Vec<Page> = self.new.drain(..).collect();
+        for p in &fresh {
+            if let Some(m) = self.member.get_mut(p) {
+                *m = PartitionId::Middle;
+            }
+        }
+        self.middle.extend(fresh);
+    }
+
+    /// Eviction candidate: lowest prediction frequency within the oldest
+    /// non-empty partition (scan bounded to `scan_limit` live entries).
+    pub fn victim(&mut self, freq: &FreqTable, scan_limit: usize) -> Option<Page> {
+        for part in [PartitionId::Old, PartitionId::Middle, PartitionId::New] {
+            let member = &self.member;
+            let queue = match part {
+                PartitionId::Old => &mut self.old,
+                PartitionId::Middle => &mut self.middle,
+                PartitionId::New => &mut self.new,
+            };
+            // lazy-clean the head, then scan up to scan_limit live pages
+            while let Some(&p) = queue.front() {
+                if member.get(&p) == Some(&part) {
+                    break;
+                }
+                queue.pop_front();
+            }
+            if queue.is_empty() {
+                continue;
+            }
+            let mut best: Option<(i32, usize, Page)> = None;
+            let mut seen = 0usize;
+            for (i, &p) in queue.iter().enumerate() {
+                if member.get(&p) != Some(&part) {
+                    continue; // stale
+                }
+                let f = freq.frequency(p);
+                if best.map(|(bf, _, _)| f < bf).unwrap_or(true) {
+                    best = Some((f, i, p));
+                    if f == -1 {
+                        break; // can't rank lower
+                    }
+                }
+                seen += 1;
+                if seen >= scan_limit {
+                    break;
+                }
+            }
+            if let Some((_, i, p)) = best {
+                queue.remove(i);
+                self.member.remove(&p);
+                return Some(p);
+            }
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eviction_prefers_oldest_partition() {
+        let mut c = PageSetChain::new();
+        let freq = FreqTable::new(3);
+        c.insert(1);
+        c.rotate();
+        c.insert(2);
+        c.rotate(); // 1 old, 2 middle
+        c.insert(3);
+        assert_eq!(c.victim(&freq, 64), Some(1));
+        assert_eq!(c.victim(&freq, 64), Some(2));
+        assert_eq!(c.victim(&freq, 64), Some(3));
+        assert_eq!(c.victim(&freq, 64), None);
+    }
+
+    #[test]
+    fn within_partition_lowest_frequency_wins() {
+        let mut c = PageSetChain::new();
+        let mut freq = FreqTable::new(3);
+        for p in [10, 11, 12] {
+            c.insert(p);
+        }
+        c.rotate();
+        c.rotate(); // all old
+        // 11 predicted often, 12 once, 10 never
+        for _ in 0..5 {
+            freq.record(11);
+        }
+        freq.record(12);
+        assert_eq!(c.victim(&freq, 64), Some(10), "never-predicted first");
+        assert_eq!(c.victim(&freq, 64), Some(12));
+        assert_eq!(c.victim(&freq, 64), Some(11), "hottest last");
+    }
+
+    #[test]
+    fn removal_makes_entries_stale_not_wrong() {
+        let mut c = PageSetChain::new();
+        let freq = FreqTable::new(3);
+        c.insert(5);
+        c.insert(6);
+        c.remove(5);
+        assert_eq!(c.victim(&freq, 64), Some(6));
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn partitions_disjoint_and_cover() {
+        let mut c = PageSetChain::new();
+        for p in 0..30 {
+            c.insert(p);
+            if p % 10 == 9 {
+                c.rotate();
+            }
+        }
+        assert_eq!(c.len(), 30);
+        // every member is in exactly one partition (the map is the truth).
+        // Three rotations: 0-9 aged twice (old), 10-19 once (old after
+        // the final rotation... middle->old), 20-29 rotated once (middle).
+        let mut counts = [0usize; 3];
+        for (_, part) in c.member.iter() {
+            counts[match part {
+                PartitionId::New => 0,
+                PartitionId::Middle => 1,
+                PartitionId::Old => 2,
+            }] += 1;
+        }
+        assert_eq!(counts.iter().sum::<usize>(), 30);
+        assert_eq!(counts, [0, 10, 20]);
+    }
+}

@@ -1,0 +1,334 @@
+//! The intelligent framework's policy engine (paper Fig 7/9): the
+//! [`crate::policy::Policy`] implementation that puts the Transformer
+//! page predictor on the UVM request path.
+//!
+//! Per access: featurise → buffer the window. Every full batch of
+//! windows: one PJRT inference → top-k delta predictions → predicted
+//! pages → (a) prediction frequency table update, (b) prefetch queue.
+//! Eviction: page-set chain partitions ordered by prediction frequency.
+//! Online fine-tuning: every `train_group` samples, snapshot the LUCIR
+//! "previous model", build the thrash mask from E∪T, and run a few Adam
+//! steps on the pattern-specific weights from the model table.
+
+use std::collections::HashSet;
+use std::rc::Rc;
+
+use crate::policy::dfa::DfaClassifier;
+use crate::policy::Policy;
+use crate::runtime::ModelRuntime;
+use crate::sim::{DeviceMemory, FaultAction, Page};
+use crate::trace::Access;
+use crate::util::rng::Rng;
+
+use super::chain::PageSetChain;
+use super::features::{pack_batch, FeatDims, Sample, WindowBuilder};
+use super::freq_table::FreqTable;
+use super::model_table::ModelTable;
+
+/// Tunables for the intelligent policy (ablation switches included).
+#[derive(Debug, Clone)]
+pub struct IntelligentConfig {
+    /// top-k delta predictions taken per window
+    pub topk: usize,
+    /// samples accumulated before an online fine-tune round
+    pub train_group: usize,
+    /// Adam steps per fine-tune round
+    pub steps_per_round: usize,
+    /// hard cap on fine-tune rounds (bounds PJRT cost per run)
+    pub max_rounds: usize,
+    /// LUCIR distillation weight λ
+    pub lambda: f32,
+    /// thrashing-term weight µ (0 disables — Fig 12 ablation)
+    pub mu: f32,
+    /// pattern-aware model table (false = single model — Fig 6 ablation)
+    pub pattern_aware: bool,
+    /// cap on prefetches returned per access
+    pub prefetch_burst: usize,
+    pub seed: u64,
+}
+
+impl Default for IntelligentConfig {
+    fn default() -> Self {
+        IntelligentConfig {
+            topk: 4,
+            train_group: 2048,
+            steps_per_round: 8,
+            max_rounds: 12,
+            lambda: 0.5,
+            mu: 0.2,
+            pattern_aware: true,
+            prefetch_burst: 256,
+            seed: 0xF00D,
+        }
+    }
+}
+
+pub struct IntelligentPolicy {
+    rt: Rc<ModelRuntime>,
+    cfg: IntelligentConfig,
+    dims: FeatDims,
+    wb: WindowBuilder,
+    dfa: DfaClassifier,
+    table: ModelTable,
+    freq: FreqTable,
+    chain: PageSetChain,
+    /// windows awaiting batched inference, with their base pages
+    infer_buf: Vec<(Vec<super::features::Feat>, u64)>,
+    /// training samples for the current fine-tune round
+    samples: Vec<Sample>,
+    /// prefetch candidates produced by the last inference
+    prefetch_queue: Vec<Page>,
+    /// E and T sets feeding the thrash mask
+    evicted: HashSet<Page>,
+    thrashed: HashSet<Page>,
+    /// most recent target page observed per delta class (mask bridge)
+    class_target: Vec<u64>,
+    rounds_done: usize,
+    rng: Rng,
+    // instrumentation (read by the coordinator for overhead accounting)
+    pub inference_calls: u64,
+    pub predictions: u64,
+    pub train_steps: u64,
+    pub last_loss: f32,
+}
+
+impl IntelligentPolicy {
+    pub fn new(
+        rt: Rc<ModelRuntime>,
+        dims: FeatDims,
+        cfg: IntelligentConfig,
+    ) -> IntelligentPolicy {
+        let table = ModelTable::new(cfg.seed as u32, cfg.pattern_aware);
+        IntelligentPolicy {
+            wb: WindowBuilder::new(dims),
+            dfa: DfaClassifier::new(),
+            table,
+            freq: FreqTable::new(3),
+            chain: PageSetChain::new(),
+            infer_buf: Vec::new(),
+            samples: Vec::new(),
+            prefetch_queue: Vec::new(),
+            evicted: HashSet::new(),
+            thrashed: HashSet::new(),
+            class_target: vec![u64::MAX; dims.delta_vocab],
+            rounds_done: 0,
+            rng: Rng::new(cfg.seed),
+            inference_calls: 0,
+            predictions: 0,
+            train_steps: 0,
+            last_loss: f32::NAN,
+            rt,
+            dims,
+            cfg,
+        }
+    }
+
+    pub fn patterns_used(&self) -> usize {
+        self.table.patterns_used()
+    }
+
+    /// Run one batched inference over the buffered windows.
+    fn run_inference(&mut self) {
+        let batch_size = self.rt.batch;
+        if self.infer_buf.len() < batch_size {
+            return;
+        }
+        let taken: Vec<_> = self.infer_buf.drain(..batch_size).collect();
+        let samples: Vec<Sample> = taken
+            .iter()
+            .map(|(w, base)| Sample {
+                window: w.clone(),
+                label: 0,
+                target_page: *base,
+            })
+            .collect();
+        let batch = pack_batch(&samples, batch_size, self.dims.seq_len);
+        let pattern = self.dfa.classify_current();
+        let Ok(state) = self.table.state_mut(pattern, &self.rt) else {
+            return;
+        };
+        let Ok(logits) = self.rt.forward(&state.params, &batch) else {
+            return;
+        };
+        self.inference_calls += 1;
+        let topk = self.rt.topk(&logits, self.cfg.topk);
+        for ((_, base), classes) in taken.iter().zip(topk) {
+            for class in classes {
+                let Some(delta) = self.wb.vocab().delta_of(class) else {
+                    continue;
+                };
+                let page = base.wrapping_add_signed(delta);
+                self.predictions += 1;
+                self.freq.record(page);
+                // Prefetch aggressiveness follows the pattern (paper
+                // §IV-D: the frequency table "can be exploited to control
+                // the amount of prefetching"): for random patterns only
+                // the predicted page itself is fetched (accuracy over
+                // coverage); for linear/mixed patterns we fetch the whole
+                // 64 KB basic block (§II-B: the unit of prefetching) and
+                // extrapolate the delta ahead so batched inference still
+                // runs in front of the stream.
+                if pattern.is_random() {
+                    if !self.prefetch_queue.contains(&page) {
+                        self.prefetch_queue.push(page);
+                    }
+                    continue;
+                }
+                for j in 1..=3i64 {
+                    let Some(step) = delta.checked_mul(j) else { break };
+                    let Some(ahead) = base.checked_add_signed(step) else {
+                        continue; // extrapolated past the address space
+                    };
+                    let bb_base = ahead / crate::config::PAGES_PER_BB
+                        * crate::config::PAGES_PER_BB;
+                    let Some(bb_end) =
+                        bb_base.checked_add(crate::config::PAGES_PER_BB)
+                    else {
+                        continue;
+                    };
+                    for p in bb_base..bb_end {
+                        if !self.prefetch_queue.contains(&p) {
+                            self.prefetch_queue.push(p);
+                        }
+                    }
+                }
+            }
+        }
+        // bound the queue: newest predictions are most trustworthy
+        if self.prefetch_queue.len() > 4 * self.cfg.prefetch_burst {
+            let cut = self.prefetch_queue.len() - 4 * self.cfg.prefetch_burst;
+            self.prefetch_queue.drain(..cut);
+        }
+    }
+
+    /// One online fine-tune round over the accumulated sample group.
+    fn run_training(&mut self) {
+        if self.rounds_done >= self.cfg.max_rounds {
+            self.samples.clear();
+            return;
+        }
+        self.rounds_done += 1;
+        let pattern = self.dfa.classify_current();
+        // thrash mask: class c is masked iff its most recent target page
+        // is in E ∪ T (Equation 2's page sets, bridged to classes)
+        let mut mask = vec![0.0f32; self.dims.delta_vocab];
+        let mu = if self.cfg.mu > 0.0 {
+            for (c, m) in mask.iter_mut().enumerate() {
+                let page = self.class_target[c];
+                if page != u64::MAX
+                    && (self.evicted.contains(&page) || self.thrashed.contains(&page))
+                {
+                    *m = 1.0;
+                }
+            }
+            self.cfg.mu
+        } else {
+            0.0
+        };
+
+        let mut group = std::mem::take(&mut self.samples);
+        self.rng.shuffle(&mut group);
+        let batch_size = self.rt.batch;
+        let Ok(state) = self.table.state_mut(pattern, &self.rt) else {
+            return;
+        };
+        // LUCIR: freeze the pre-round weights as the previous model
+        state.snapshot_prev();
+        let mut steps = 0;
+        for chunk in group.chunks(batch_size) {
+            if steps >= self.cfg.steps_per_round || chunk.len() < batch_size {
+                break;
+            }
+            let batch = pack_batch(chunk, batch_size, self.dims.seq_len);
+            if let Ok(loss) = self.rt.train_step(
+                state,
+                &batch,
+                &mask,
+                self.cfg.lambda,
+                mu,
+            ) {
+                self.last_loss = loss;
+                self.train_steps += 1;
+                steps += 1;
+            } else {
+                break;
+            }
+        }
+    }
+}
+
+impl Policy for IntelligentPolicy {
+    fn name(&self) -> String {
+        "Intelligent".into()
+    }
+
+    fn on_access(&mut self, acc: &Access, _resident: bool) {
+        if let Some(window) = self.wb.current_window() {
+            self.infer_buf
+                .push((window, self.wb.last_page().unwrap_or(0)));
+        }
+        if let Some(sample) = self.wb.push(acc) {
+            self.class_target[sample.label as usize] = sample.target_page;
+            self.samples.push(sample);
+            if self.samples.len() >= self.cfg.train_group {
+                self.run_training();
+            }
+        }
+        if self.infer_buf.len() >= self.rt.batch {
+            self.run_inference();
+        }
+    }
+
+    fn fault_action(&mut self, page: Page) -> FaultAction {
+        // The GMMU accepts pinning decisions from the policy engine
+        // (paper Fig 7 step 7: "prefetching, pre-eviction, pinning").
+        // Under memory pressure, a faulting page that the predictor does
+        // NOT expect to be re-used soon (absent from the prediction
+        // frequency table) on a random-pattern phase is served by
+        // delayed migration instead of paying the full far-fault +
+        // migration cost — the accuracy-gated analogue of UVMSmart's
+        // augmented memory module.
+        if !self.evicted.is_empty()
+            && self.dfa.classify_current().is_random()
+            && self.freq.frequency(page) < 0
+        {
+            FaultAction::Delay
+        } else {
+            FaultAction::Migrate
+        }
+    }
+
+    fn prefetch(&mut self, _acc: &Access) -> Vec<Page> {
+        let n = self.cfg.prefetch_burst.min(self.prefetch_queue.len());
+        self.prefetch_queue.drain(..n).collect()
+    }
+
+    fn select_victim(&mut self, _mem: &DeviceMemory) -> Option<Page> {
+        self.chain.victim(&self.freq, 64)
+    }
+
+    fn on_migrate(&mut self, page: Page, via_prefetch: bool) {
+        self.chain.insert(page);
+        if self.evicted.contains(&page) {
+            self.thrashed.insert(page);
+        }
+        if !via_prefetch {
+            self.dfa.note_transfer(page);
+        }
+    }
+
+    fn on_evict(&mut self, page: Page) {
+        self.chain.remove(page);
+        self.evicted.insert(page);
+    }
+
+    fn on_interval(&mut self) {
+        self.chain.rotate();
+        self.freq.on_interval();
+    }
+
+    fn on_kernel_boundary(&mut self, _kernel: u32) {
+        self.dfa.kernel_boundary();
+    }
+}
+

@@ -1,0 +1,302 @@
+//! Feature pipeline: turns the raw access stream into the predictor's
+//! (addr, delta, PC, TB) windows and delta-class labels.
+//!
+//! The delta vocabulary is **incremental**: class ids are assigned to
+//! page deltas in arrival order, exactly the setting that causes the
+//! catastrophic-forgetting problem the paper attacks (§III-C, Table III).
+//! The table is bounded (`classes`); once full, unseen deltas alias into
+//! existing ids via a hash — the "explosively growing number of classes"
+//! is capped in hardware, as the paper's §IV-B requires.
+
+use std::collections::HashMap;
+
+use crate::trace::Access;
+
+/// Incremental delta→class vocabulary with bounded size.
+#[derive(Debug, Clone)]
+pub struct DeltaVocab {
+    classes: usize,
+    map: HashMap<i64, i32>,
+    /// reverse map for converting predicted classes back into deltas
+    rev: Vec<i64>,
+}
+
+impl DeltaVocab {
+    pub fn new(classes: usize) -> DeltaVocab {
+        assert!(classes >= 2);
+        DeltaVocab {
+            classes,
+            map: HashMap::new(),
+            rev: Vec::new(),
+        }
+    }
+
+    /// Class of `delta`, assigning a fresh id if the table has room.
+    pub fn class_of(&mut self, delta: i64) -> i32 {
+        if let Some(&c) = self.map.get(&delta) {
+            return c;
+        }
+        if self.rev.len() < self.classes {
+            let c = self.rev.len() as i32;
+            self.map.insert(delta, c);
+            self.rev.push(delta);
+            c
+        } else {
+            // table full: alias by hash (stable, spreads collisions)
+            (delta.unsigned_abs().wrapping_mul(0x9E37_79B9) as usize
+                % self.classes) as i32
+        }
+    }
+
+    /// Delta represented by a class, if it was explicitly assigned.
+    pub fn delta_of(&self, class: usize) -> Option<i64> {
+        self.rev.get(class).copied()
+    }
+
+    /// Number of explicitly assigned classes so far (Table III metric).
+    pub fn assigned(&self) -> usize {
+        self.rev.len()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.classes
+    }
+}
+
+/// One featurised access.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Feat {
+    pub addr: i32,
+    pub delta: i32,
+    pub pc: i32,
+    pub tb: i32,
+}
+
+/// A (window, label) training/inference sample. The window is the last
+/// `seq_len` featurised accesses; the label is the NEXT delta class.
+#[derive(Debug, Clone)]
+pub struct Sample {
+    pub window: Vec<Feat>,
+    pub label: i32,
+    /// page the labelled delta leads to (for the thrash mask)
+    pub target_page: u64,
+}
+
+/// Vocabulary sizes for the non-delta features (mirrors the manifest).
+#[derive(Debug, Clone, Copy)]
+pub struct FeatDims {
+    pub seq_len: usize,
+    pub delta_vocab: usize,
+    pub addr_vocab: usize,
+    pub pc_vocab: usize,
+    pub tb_vocab: usize,
+}
+
+/// Streaming window builder over one access stream.
+#[derive(Debug)]
+pub struct WindowBuilder {
+    dims: FeatDims,
+    vocab: DeltaVocab,
+    history: Vec<Feat>,
+    last_page: Option<u64>,
+}
+
+impl WindowBuilder {
+    pub fn new(dims: FeatDims) -> WindowBuilder {
+        WindowBuilder {
+            vocab: DeltaVocab::new(dims.delta_vocab),
+            dims,
+            history: Vec::new(),
+            last_page: None,
+        }
+    }
+
+    pub fn vocab(&self) -> &DeltaVocab {
+        &self.vocab
+    }
+
+    pub fn vocab_mut(&mut self) -> &mut DeltaVocab {
+        &mut self.vocab
+    }
+
+    /// Featurise one access. Returns a full [`Sample`] once at least
+    /// `seq_len + 1` accesses have been observed: the window is the T
+    /// accesses *before* this one and the label is this access's delta.
+    pub fn push(&mut self, acc: &Access) -> Option<Sample> {
+        let delta = match self.last_page {
+            None => 0,
+            Some(p) => acc.page as i64 - p as i64,
+        };
+        self.last_page = Some(acc.page);
+        let feat = Feat {
+            addr: (acc.page % self.dims.addr_vocab as u64) as i32,
+            delta: self.vocab.class_of(delta),
+            pc: (acc.pc as usize % self.dims.pc_vocab) as i32,
+            tb: (acc.tb as usize % self.dims.tb_vocab) as i32,
+        };
+        let sample = if self.history.len() >= self.dims.seq_len {
+            let window =
+                self.history[self.history.len() - self.dims.seq_len..].to_vec();
+            Some(Sample {
+                window,
+                label: feat.delta,
+                target_page: acc.page,
+            })
+        } else {
+            None
+        };
+        self.history.push(feat);
+        // bound memory: keep twice the window
+        if self.history.len() > 4 * self.dims.seq_len {
+            let cut = self.history.len() - 2 * self.dims.seq_len;
+            self.history.drain(..cut);
+        }
+        sample
+    }
+
+    /// The current window (for inference on the live stream), if full.
+    pub fn current_window(&self) -> Option<Vec<Feat>> {
+        if self.history.len() >= self.dims.seq_len {
+            Some(self.history[self.history.len() - self.dims.seq_len..].to_vec())
+        } else {
+            None
+        }
+    }
+
+    /// Most recently observed page (base for delta→page conversion).
+    pub fn last_page(&self) -> Option<u64> {
+        self.last_page
+    }
+}
+
+/// Pack samples into a fixed-size [`crate::runtime::Batch`], padding the
+/// tail by repeating the last sample (padding rows are excluded from
+/// `rows`, so accuracy math never sees them).
+pub fn pack_batch(
+    samples: &[Sample],
+    batch: usize,
+    seq_len: usize,
+) -> crate::runtime::Batch {
+    assert!(!samples.is_empty() && samples.len() <= batch);
+    let mut out = crate::runtime::Batch {
+        rows: samples.len(),
+        ..Default::default()
+    };
+    for i in 0..batch {
+        let s = samples.get(i).unwrap_or_else(|| samples.last().unwrap());
+        assert_eq!(s.window.len(), seq_len, "window length mismatch");
+        for f in &s.window {
+            out.addr.push(f.addr);
+            out.delta.push(f.delta);
+            out.pc.push(f.pc);
+            out.tb.push(f.tb);
+        }
+        out.labels.push(s.label);
+    }
+    out
+}
+
+/// Featurise a whole trace into samples (offline-training path).
+pub fn samples_from_trace(
+    trace: &crate::trace::Trace,
+    dims: FeatDims,
+) -> (Vec<Sample>, DeltaVocab) {
+    let mut wb = WindowBuilder::new(dims);
+    let mut out = Vec::new();
+    for acc in &trace.accesses {
+        if let Some(s) = wb.push(acc) {
+            out.push(s);
+        }
+    }
+    (out, wb.vocab)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dims() -> FeatDims {
+        FeatDims {
+            seq_len: 4,
+            delta_vocab: 8,
+            addr_vocab: 64,
+            pc_vocab: 16,
+            tb_vocab: 16,
+        }
+    }
+
+    fn acc(page: u64) -> Access {
+        Access { page, pc: 3, tb: 5, kernel: 0, inst_gap: 0, is_write: false }
+    }
+
+    #[test]
+    fn vocab_assigns_incrementally_and_aliases_when_full() {
+        let mut v = DeltaVocab::new(4);
+        assert_eq!(v.class_of(0), 0);
+        assert_eq!(v.class_of(5), 1);
+        assert_eq!(v.class_of(-3), 2);
+        assert_eq!(v.class_of(5), 1, "stable re-lookup");
+        assert_eq!(v.class_of(100), 3);
+        assert_eq!(v.assigned(), 4);
+        // full: new deltas alias into [0, 4)
+        let alias = v.class_of(999);
+        assert!((0..4).contains(&alias));
+        assert_eq!(v.assigned(), 4);
+        assert_eq!(v.delta_of(1), Some(5));
+        assert_eq!(v.delta_of(7), None);
+    }
+
+    #[test]
+    fn windows_lag_labels_by_one() {
+        let mut wb = WindowBuilder::new(dims());
+        // pages 0,2,4,6,8 -> deltas 0,2,2,2,2
+        let mut sample = None;
+        for p in [0u64, 2, 4, 6, 8] {
+            sample = wb.push(&acc(p));
+        }
+        let s = sample.expect("5th access completes a window");
+        assert_eq!(s.window.len(), 4);
+        assert_eq!(s.target_page, 8);
+        // label class must equal the class of delta +2 (assigned id 1:
+        // first delta was 0 -> class 0, then +2 -> class 1)
+        assert_eq!(s.label, 1);
+        // window deltas: classes of [0, 2, 2, 2]
+        let wd: Vec<i32> = s.window.iter().map(|f| f.delta).collect();
+        assert_eq!(wd, vec![0, 1, 1, 1]);
+    }
+
+    #[test]
+    fn history_stays_bounded() {
+        let mut wb = WindowBuilder::new(dims());
+        for p in 0..10_000u64 {
+            wb.push(&acc(p));
+        }
+        assert!(wb.history.len() <= 16);
+        assert_eq!(wb.current_window().unwrap().len(), 4);
+    }
+
+    #[test]
+    fn pack_batch_pads_without_counting() {
+        let mut wb = WindowBuilder::new(dims());
+        let mut samples = Vec::new();
+        for p in 0..20u64 {
+            if let Some(s) = wb.push(&acc(p * 3)) {
+                samples.push(s);
+            }
+        }
+        let b = pack_batch(&samples[..3], 8, 4);
+        assert_eq!(b.rows, 3);
+        assert_eq!(b.labels.len(), 8);
+        assert_eq!(b.addr.len(), 8 * 4);
+    }
+
+    #[test]
+    fn trace_sampling_covers_everything_past_warmup() {
+        use crate::config::Scale;
+        use crate::trace::workloads::Workload;
+        let t = Workload::StreamTriad.generate(Scale::default(), 1);
+        let (samples, vocab) = samples_from_trace(&t, dims());
+        assert_eq!(samples.len(), t.accesses.len() - 4);
+        assert!(vocab.assigned() >= 2);
+    }
+}

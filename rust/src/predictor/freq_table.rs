@@ -1,0 +1,182 @@
+//! The prediction frequency table (paper §IV-D / §IV-E).
+//!
+//! A 16-way set-associative cache of 1024 entries, one entry per 64 KB
+//! basic block, whose data field holds a saturating 6-bit counter per page
+//! of the block. Counters accumulate how often each page appears in the
+//! predictor's output over the last few intervals — a proxy for the
+//! page's importance in the near-future access stream. Prefetch picks
+//! the highest counters; eviction picks the lowest (pages absent from the
+//! table rank as −1, below every present page). Flushed every 3 intervals
+//! to track phase changes.
+//!
+//! Geometry per the paper's §IV-E storage math: 64 sets × 16 ways,
+//! 48-bit tags, 16 × 6-bit counters per entry ⇒ 18 KB total.
+
+use crate::config::PAGES_PER_BB;
+use crate::sim::Page;
+
+const WAYS: usize = 16;
+const SETS: usize = 64; // 1024 entries total
+const COUNTER_MAX: u8 = 63; // 6-bit saturating
+
+#[derive(Debug, Clone, Copy)]
+struct Entry {
+    tag: u64, // basic-block number (tag per the paper: 48 bits)
+    counters: [u8; PAGES_PER_BB as usize],
+    lru: u64,
+    valid: bool,
+}
+
+impl Entry {
+    const EMPTY: Entry = Entry {
+        tag: 0,
+        counters: [0; PAGES_PER_BB as usize],
+        lru: 0,
+        valid: false,
+    };
+}
+
+/// The frequency table.
+#[derive(Debug)]
+pub struct FreqTable {
+    sets: Vec<[Entry; WAYS]>,
+    tick: u64,
+    intervals_since_flush: u32,
+    flush_period: u32,
+    pub flushes: u64,
+    pub insertions: u64,
+}
+
+impl FreqTable {
+    pub fn new(flush_period: u32) -> FreqTable {
+        FreqTable {
+            sets: vec![[Entry::EMPTY; WAYS]; SETS],
+            tick: 0,
+            intervals_since_flush: 0,
+            flush_period,
+            flushes: 0,
+            insertions: 0,
+        }
+    }
+
+    fn locate(page: Page) -> (usize, u64, usize) {
+        let bb = page / PAGES_PER_BB;
+        let set = (bb % SETS as u64) as usize;
+        let page_in_bb = (page % PAGES_PER_BB) as usize;
+        (set, bb, page_in_bb)
+    }
+
+    /// Record one predicted page (bumps its 6-bit counter).
+    pub fn record(&mut self, page: Page) {
+        self.tick += 1;
+        let (si, bb, pi) = Self::locate(page);
+        let set = &mut self.sets[si];
+        // hit
+        for e in set.iter_mut() {
+            if e.valid && e.tag == bb {
+                e.counters[pi] = (e.counters[pi] + 1).min(COUNTER_MAX);
+                e.lru = self.tick;
+                return;
+            }
+        }
+        // miss: fill LRU way
+        self.insertions += 1;
+        let victim = set
+            .iter_mut()
+            .min_by_key(|e| if e.valid { e.lru } else { 0 })
+            .expect("WAYS > 0");
+        *victim = Entry::EMPTY;
+        victim.valid = true;
+        victim.tag = bb;
+        victim.lru = self.tick;
+        victim.counters[pi] = 1;
+    }
+
+    /// Prediction frequency of a page: the counter value, or −1 if the
+    /// page never appeared in recent predictions (paper: "pages that never
+    /// show up in the prediction results" get −1).
+    pub fn frequency(&self, page: Page) -> i32 {
+        let (si, bb, pi) = Self::locate(page);
+        for e in &self.sets[si] {
+            if e.valid && e.tag == bb {
+                let c = e.counters[pi];
+                return if c == 0 { -1 } else { c as i32 };
+            }
+        }
+        -1
+    }
+
+    /// Interval boundary: flush every `flush_period` intervals.
+    pub fn on_interval(&mut self) {
+        self.intervals_since_flush += 1;
+        if self.intervals_since_flush >= self.flush_period {
+            self.intervals_since_flush = 0;
+            self.flushes += 1;
+            for set in self.sets.iter_mut() {
+                for e in set.iter_mut() {
+                    *e = Entry::EMPTY;
+                }
+            }
+        }
+    }
+
+    /// Storage cost in bytes (paper §IV-E: (6·16+48)/8 · 1024 = 18 KB).
+    pub fn storage_bytes() -> usize {
+        let bytes_per_entry = (6 * PAGES_PER_BB as usize + 48) / 8;
+        bytes_per_entry * SETS * WAYS
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn absent_pages_rank_minus_one() {
+        let t = FreqTable::new(3);
+        assert_eq!(t.frequency(1234), -1);
+    }
+
+    #[test]
+    fn counters_accumulate_and_saturate() {
+        let mut t = FreqTable::new(3);
+        for _ in 0..100 {
+            t.record(5);
+        }
+        assert_eq!(t.frequency(5), 63, "6-bit saturation");
+        t.record(6); // same bb, different page
+        assert_eq!(t.frequency(6), 1);
+        assert_eq!(t.frequency(7), -1, "untouched page in a present bb");
+    }
+
+    #[test]
+    fn flush_period_of_three_intervals() {
+        let mut t = FreqTable::new(3);
+        t.record(42);
+        t.on_interval();
+        t.on_interval();
+        assert_eq!(t.frequency(42), 1, "still warm after 2 intervals");
+        t.on_interval();
+        assert_eq!(t.frequency(42), -1, "flushed on the 3rd");
+        assert_eq!(t.flushes, 1);
+    }
+
+    #[test]
+    fn set_conflict_evicts_lru_block() {
+        let mut t = FreqTable::new(3);
+        // 17 distinct blocks mapping to the same set (stride SETS blocks)
+        for i in 0..17u64 {
+            let page = i * (SETS as u64) * PAGES_PER_BB;
+            t.record(page);
+        }
+        // block 0 was LRU -> evicted
+        assert_eq!(t.frequency(0), -1);
+        // block 16 present
+        assert_eq!(t.frequency(16 * SETS as u64 * PAGES_PER_BB), 1);
+    }
+
+    #[test]
+    fn paper_storage_math() {
+        assert_eq!(FreqTable::storage_bytes(), 18 * 1024);
+    }
+}

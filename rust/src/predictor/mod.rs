@@ -1,0 +1,15 @@
+//! The learning stack: feature pipeline, incremental delta vocabulary,
+//! prediction frequency table, page-set chain, pattern-based model table,
+//! and the intelligent policy engine that binds them to the simulator.
+
+pub mod chain;
+pub mod engine;
+pub mod features;
+pub mod freq_table;
+pub mod model_table;
+
+pub use chain::PageSetChain;
+pub use engine::{IntelligentConfig, IntelligentPolicy};
+pub use features::{DeltaVocab, FeatDims, Sample, WindowBuilder};
+pub use freq_table::FreqTable;
+pub use model_table::ModelTable;

@@ -1,0 +1,95 @@
+//! The pattern-based model table (paper §IV-C): a direct-mapped cache
+//! from DFA access-pattern class to that pattern's model weights. All
+//! entries share one architecture (one compiled executable); only the
+//! flat parameter vectors differ, so a "model switch" is just a different
+//! `TrainState` handed to the same `ModelRuntime` — exactly the
+//! weights-table-indexed-by-pattern-hash organisation the paper describes.
+
+use std::collections::HashMap;
+
+use anyhow::Result;
+
+use crate::policy::dfa::Pattern;
+use crate::runtime::{ModelRuntime, TrainState};
+
+#[derive(Debug)]
+pub struct ModelTable {
+    states: HashMap<usize, TrainState>,
+    seed_base: u32,
+    /// when false, every pattern maps to slot 0 (the single-model
+    /// ablation of Fig 6 / §III-C)
+    pattern_aware: bool,
+}
+
+impl ModelTable {
+    pub fn new(seed_base: u32, pattern_aware: bool) -> ModelTable {
+        ModelTable {
+            states: HashMap::new(),
+            seed_base,
+            pattern_aware,
+        }
+    }
+
+    fn slot(&self, pattern: Pattern) -> usize {
+        if self.pattern_aware {
+            pattern.index()
+        } else {
+            0
+        }
+    }
+
+    /// Fetch (or lazily initialise) the weights for a pattern.
+    pub fn state_mut(
+        &mut self,
+        pattern: Pattern,
+        rt: &ModelRuntime,
+    ) -> Result<&mut TrainState> {
+        let slot = self.slot(pattern);
+        if !self.states.contains_key(&slot) {
+            let params = rt.init_params(self.seed_base + slot as u32)?;
+            self.states.insert(slot, TrainState::fresh(params));
+        }
+        Ok(self.states.get_mut(&slot).expect("just inserted"))
+    }
+
+    pub fn state(&self, pattern: Pattern) -> Option<&TrainState> {
+        self.states.get(&self.slot(pattern))
+    }
+
+    /// Number of pattern models instantiated so far — the `Patterns`
+    /// column of Table IV.
+    pub fn patterns_used(&self) -> usize {
+        self.states.len()
+    }
+
+    /// Table IV, Equation 4: `(Params×2 + Acti) × Patterns` in MB at the
+    /// given quantisation width.
+    pub fn footprint_mb(&self, params_mb: f64, activations_mb: f64) -> f64 {
+        (params_mb * 2.0 + activations_mb) * self.patterns_used() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn footprint_follows_equation4() {
+        let mut t = ModelTable::new(0, true);
+        // fake three instantiated patterns without touching PJRT
+        for slot in 0..3usize {
+            t.states.insert(slot, TrainState::fresh(vec![0.0; 4]));
+        }
+        let fp = t.footprint_mb(0.5, 1.46);
+        assert!((fp - 3.0 * (2.0 * 0.5 + 1.46)).abs() < 1e-9);
+        assert_eq!(t.patterns_used(), 3);
+    }
+
+    #[test]
+    fn single_model_mode_shares_slot() {
+        let t = ModelTable::new(0, false);
+        assert_eq!(t.slot(Pattern::Streaming), t.slot(Pattern::Random));
+        let t = ModelTable::new(0, true);
+        assert_ne!(t.slot(Pattern::Streaming), t.slot(Pattern::Random));
+    }
+}

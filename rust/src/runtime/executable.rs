@@ -1,0 +1,280 @@
+//! PJRT execution: load HLO-text artifacts, compile once, execute from
+//! the coordinator's hot path. Python never runs here.
+//!
+//! Pattern follows /opt/xla-example/load_hlo: `HloModuleProto::from_text_file`
+//! → `XlaComputation::from_proto` → `client.compile` → `execute`. The AOT
+//! pass lowers with `return_tuple=True`, so every output is a tuple literal.
+
+use std::path::Path;
+use std::rc::Rc;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::manifest::{ArtifactSpec, Manifest};
+
+/// Shared PJRT CPU client.
+pub struct Runtime {
+    client: Rc<xla::PjRtClient>,
+    pub manifest: Manifest,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client and load the manifest from `dir`.
+    pub fn new(dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(dir)?;
+        let client =
+            Rc::new(xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?);
+        Ok(Runtime { client, manifest })
+    }
+
+    /// Compile one artifact (HLO text) into an executable.
+    pub fn compile(&self, spec: &ArtifactSpec) -> Result<Executable> {
+        let path = self.manifest.dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .map_err(|e| anyhow!("parsing {}: {e:?}", spec.file))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e:?}", spec.file))?;
+        Ok(Executable { exe, spec: spec.clone() })
+    }
+
+    /// Load the (fwd, train, init) trio for a model by name.
+    pub fn model(&self, name: &str) -> Result<ModelRuntime> {
+        let entry = self.manifest.model(name)?.clone();
+        let fwd = self.compile(&entry.artifacts["fwd"])?;
+        let train = self.compile(&entry.artifacts["train"])?;
+        let init = self.compile(&entry.artifacts["init"])?;
+        Ok(ModelRuntime {
+            name: name.to_string(),
+            fwd,
+            train,
+            init,
+            param_count: entry.param_count,
+            batch: self.manifest.batch,
+            seq_len: self.manifest.seq_len,
+            classes: self.manifest.delta_vocab,
+        })
+    }
+}
+
+/// A compiled artifact plus its declared signature.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub spec: ArtifactSpec,
+}
+
+impl Executable {
+    /// Execute with positional literals; returns the decomposed tuple.
+    pub fn call(&self, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        if args.len() != self.spec.args.len() {
+            bail!(
+                "{}: expected {} args, got {}",
+                self.spec.file,
+                self.spec.args.len(),
+                args.len()
+            );
+        }
+        let out = self
+            .exe
+            .execute::<xla::Literal>(args)
+            .map_err(|e| anyhow!("executing {}: {e:?}", self.spec.file))?;
+        let lit = out[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("download {}: {e:?}", self.spec.file))?;
+        lit.to_tuple().map_err(|e| anyhow!("untuple: {e:?}"))
+    }
+}
+
+/// One model-table entry's worth of executables + typed entry points.
+pub struct ModelRuntime {
+    pub name: String,
+    fwd: Executable,
+    train: Executable,
+    init: Executable,
+    pub param_count: usize,
+    pub batch: usize,
+    pub seq_len: usize,
+    pub classes: usize,
+}
+
+/// A training/inference minibatch in flat row-major layout.
+#[derive(Debug, Clone, Default)]
+pub struct Batch {
+    /// B×T feature windows (i32 vocab indices)
+    pub addr: Vec<i32>,
+    pub delta: Vec<i32>,
+    pub pc: Vec<i32>,
+    pub tb: Vec<i32>,
+    /// B labels (next-delta classes)
+    pub labels: Vec<i32>,
+    /// number of *valid* rows (≤ B; the rest is padding)
+    pub rows: usize,
+}
+
+impl Batch {
+    pub fn validate(&self, b: usize, t: usize) -> Result<()> {
+        if self.addr.len() != b * t
+            || self.delta.len() != b * t
+            || self.pc.len() != b * t
+            || self.tb.len() != b * t
+            || self.labels.len() != b
+        {
+            bail!(
+                "batch shape mismatch: features {}/{}/{}/{} labels {} vs B={b} T={t}",
+                self.addr.len(),
+                self.delta.len(),
+                self.pc.len(),
+                self.tb.len(),
+                self.labels.len()
+            );
+        }
+        if self.rows == 0 || self.rows > b {
+            bail!("batch rows {} outside 1..={b}", self.rows);
+        }
+        Ok(())
+    }
+}
+
+/// Mutable training state: flat parameters + Adam slots + the frozen
+/// previous model for LUCIR distillation.
+#[derive(Debug, Clone)]
+pub struct TrainState {
+    pub params: Vec<f32>,
+    pub prev_params: Vec<f32>,
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+    pub step: i32,
+}
+
+impl TrainState {
+    pub fn fresh(params: Vec<f32>) -> TrainState {
+        let n = params.len();
+        TrainState {
+            prev_params: params.clone(),
+            params,
+            m: vec![0.0; n],
+            v: vec![0.0; n],
+            step: 0,
+        }
+    }
+
+    /// Freeze the current weights as the LUCIR "previous model" — called
+    /// at incremental-task boundaries (each online fine-tune round).
+    pub fn snapshot_prev(&mut self) {
+        self.prev_params.clone_from(&self.params);
+    }
+}
+
+fn lit_2d(v: &[i32], b: usize, t: usize) -> Result<xla::Literal> {
+    xla::Literal::vec1(v)
+        .reshape(&[b as i64, t as i64])
+        .map_err(|e| anyhow!("reshape: {e:?}"))
+}
+
+impl ModelRuntime {
+    /// Fresh flat parameters from a seed (runs the init artifact).
+    pub fn init_params(&self, seed: u32) -> Result<Vec<f32>> {
+        let out = self.init.call(&[xla::Literal::scalar(seed)])?;
+        let params = out[0]
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("init params download: {e:?}"))?;
+        if params.len() != self.param_count {
+            bail!("init returned {} params, expected {}", params.len(), self.param_count);
+        }
+        Ok(params)
+    }
+
+    /// Forward pass: logits for each valid row, row-major `rows × classes`.
+    pub fn forward(&self, params: &[f32], batch: &Batch) -> Result<Vec<f32>> {
+        batch.validate(self.batch, self.seq_len)?;
+        let args = [
+            xla::Literal::vec1(params),
+            lit_2d(&batch.addr, self.batch, self.seq_len)?,
+            lit_2d(&batch.delta, self.batch, self.seq_len)?,
+            lit_2d(&batch.pc, self.batch, self.seq_len)?,
+            lit_2d(&batch.tb, self.batch, self.seq_len)?,
+        ];
+        let out = self.fwd.call(&args)?;
+        let mut logits = out[0]
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("logits download: {e:?}"))?;
+        logits.truncate(batch.rows * self.classes);
+        Ok(logits)
+    }
+
+    /// One Adam step over the paper's loss. `thrash_mask[c] = 1.0` marks
+    /// delta-classes whose pages are in E∪T (evicted ∪ thrashed).
+    pub fn train_step(
+        &self,
+        state: &mut TrainState,
+        batch: &Batch,
+        thrash_mask: &[f32],
+        lambda: f32,
+        mu: f32,
+    ) -> Result<f32> {
+        batch.validate(self.batch, self.seq_len)?;
+        if thrash_mask.len() != self.classes {
+            bail!("thrash mask {} != classes {}", thrash_mask.len(), self.classes);
+        }
+        let args = [
+            xla::Literal::vec1(&state.params),
+            xla::Literal::vec1(&state.prev_params),
+            xla::Literal::vec1(&state.m),
+            xla::Literal::vec1(&state.v),
+            xla::Literal::scalar(state.step),
+            lit_2d(&batch.addr, self.batch, self.seq_len)?,
+            lit_2d(&batch.delta, self.batch, self.seq_len)?,
+            lit_2d(&batch.pc, self.batch, self.seq_len)?,
+            lit_2d(&batch.tb, self.batch, self.seq_len)?,
+            xla::Literal::vec1(&batch.labels),
+            xla::Literal::vec1(thrash_mask),
+            xla::Literal::scalar(lambda),
+            xla::Literal::scalar(mu),
+        ];
+        let out = self.train.call(&args)?;
+        state.params = out[0].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+        state.m = out[1].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+        state.v = out[2].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+        state.step += 1;
+        let loss = out[3]
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("{e:?}"))?
+            .first()
+            .copied()
+            .ok_or_else(|| anyhow!("empty loss"))?;
+        Ok(loss)
+    }
+
+    /// Top-1 class per valid row from a flat logits buffer.
+    pub fn top1(&self, logits: &[f32]) -> Vec<usize> {
+        logits
+            .chunks_exact(self.classes)
+            .map(|row| {
+                row.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(i, _)| i)
+                    .unwrap_or(0)
+            })
+            .collect()
+    }
+
+    /// Top-k classes per row (k small), descending score.
+    pub fn topk(&self, logits: &[f32], k: usize) -> Vec<Vec<usize>> {
+        logits
+            .chunks_exact(self.classes)
+            .map(|row| {
+                let mut idx: Vec<usize> = (0..row.len()).collect();
+                idx.sort_unstable_by(|&a, &b| {
+                    row[b].partial_cmp(&row[a]).unwrap()
+                });
+                idx.truncate(k);
+                idx
+            })
+            .collect()
+    }
+}

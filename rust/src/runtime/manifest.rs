@@ -1,0 +1,212 @@
+//! `artifacts/manifest.json` — the contract between the python AOT pass
+//! and this runtime. Self-describing: every artifact's argument order,
+//! shapes and dtypes are declared, so shape bugs fail loudly at load time
+//! instead of as cryptic PJRT errors.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct ArgSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl ArgSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub file: String,
+    pub args: Vec<ArgSpec>,
+    pub outputs: Vec<String>,
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelEntry {
+    pub param_count: usize,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+    /// analytic footprint (paper Table IV inputs), in MB
+    pub params_mb: f64,
+    pub activations_mb: f64,
+}
+
+/// Parsed manifest: predictor dimensions + per-model artifact specs.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub seq_len: usize,
+    pub batch: usize,
+    pub delta_vocab: usize,
+    pub addr_vocab: usize,
+    pub pc_vocab: usize,
+    pub tb_vocab: usize,
+    pub models: BTreeMap<String, ModelEntry>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} — run `make artifacts` first", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("manifest parse: {e}"))?;
+
+        let dim = |k: &str| -> Result<usize> {
+            j.at(&["config", k])
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("manifest missing config.{k}"))
+        };
+
+        let mut models = BTreeMap::new();
+        let model_obj = j
+            .get("models")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("manifest missing models"))?;
+        for (name, entry) in model_obj {
+            let param_count = entry
+                .get("param_count")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("{name}: missing param_count"))?;
+            let mut artifacts = BTreeMap::new();
+            let arts = entry
+                .get("artifacts")
+                .and_then(Json::as_obj)
+                .ok_or_else(|| anyhow!("{name}: missing artifacts"))?;
+            for (kind, art) in arts {
+                let file = art
+                    .get("file")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("{name}/{kind}: missing file"))?
+                    .to_string();
+                if !dir.join(&file).exists() {
+                    bail!("{name}/{kind}: artifact {file} not found in {}", dir.display());
+                }
+                let mut args = Vec::new();
+                for a in art
+                    .get("args")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow!("{name}/{kind}: missing args"))?
+                {
+                    args.push(ArgSpec {
+                        name: a
+                            .get("name")
+                            .and_then(Json::as_str)
+                            .unwrap_or_default()
+                            .to_string(),
+                        shape: a
+                            .get("shape")
+                            .and_then(Json::as_arr)
+                            .map(|s| {
+                                s.iter().filter_map(Json::as_usize).collect()
+                            })
+                            .unwrap_or_default(),
+                        dtype: a
+                            .get("dtype")
+                            .and_then(Json::as_str)
+                            .unwrap_or("float32")
+                            .to_string(),
+                    });
+                }
+                let outputs = art
+                    .get("outputs")
+                    .and_then(Json::as_arr)
+                    .map(|o| {
+                        o.iter()
+                            .filter_map(Json::as_str)
+                            .map(String::from)
+                            .collect()
+                    })
+                    .unwrap_or_default();
+                artifacts.insert(kind.clone(), ArtifactSpec { file, args, outputs });
+            }
+            let fp = |k: &str| {
+                entry
+                    .at(&["footprint", k])
+                    .and_then(Json::as_f64)
+                    .unwrap_or(0.0)
+            };
+            models.insert(
+                name.clone(),
+                ModelEntry {
+                    param_count,
+                    artifacts,
+                    params_mb: fp("params_mb"),
+                    activations_mb: fp("activations_mb"),
+                },
+            );
+        }
+
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            seq_len: dim("seq_len")?,
+            batch: dim("batch")?,
+            delta_vocab: dim("delta_vocab")?,
+            addr_vocab: dim("addr_vocab")?,
+            pc_vocab: dim("pc_vocab")?,
+            tb_vocab: dim("tb_vocab")?,
+            models,
+        })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelEntry> {
+        self.models
+            .get(name)
+            .ok_or_else(|| anyhow!("model {name} not in manifest"))
+    }
+
+    /// Default artifacts directory: `$UVMIO_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("UVMIO_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
+    }
+
+    #[test]
+    fn loads_real_manifest_when_built() {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        }
+        let m = Manifest::load(&dir).expect("manifest loads");
+        assert_eq!(m.seq_len, 10);
+        assert!(m.models.contains_key("predictor"));
+        let p = m.model("predictor").unwrap();
+        assert!(p.param_count > 100_000);
+        for kind in ["fwd", "train", "init"] {
+            let art = &p.artifacts[kind];
+            assert!(dir.join(&art.file).exists());
+            assert!(!art.args.is_empty());
+        }
+        // train arg order starts with the four state vectors
+        let train = &p.artifacts["train"];
+        assert_eq!(train.args[0].name, "params");
+        assert_eq!(train.args[0].shape, vec![p.param_count]);
+        assert_eq!(train.args.last().unwrap().name, "mu");
+    }
+
+    #[test]
+    fn missing_dir_is_actionable() {
+        let err = Manifest::load(Path::new("/nonexistent-xyz")).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("make artifacts"), "{msg}");
+    }
+}

@@ -1,0 +1,11 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`) produced
+//! by `python/compile/aot.py` and executes them on the CPU PJRT client.
+//! This is the ONLY bridge between the rust request path and the
+//! python-authored compute graphs — and it crosses at build time, via HLO
+//! text, never via a python interpreter.
+
+pub mod executable;
+pub mod manifest;
+
+pub use executable::{Batch, Executable, ModelRuntime, Runtime, TrainState};
+pub use manifest::{ArgSpec, ArtifactSpec, Manifest, ModelEntry};

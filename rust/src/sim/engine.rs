@@ -1,0 +1,347 @@
+//! The simulation engine: drives a trace through a policy under the
+//! Table V timing model.
+//!
+//! Timing model (all values in GPU core cycles):
+//!
+//! * compute: each access carries `inst_gap` compute instructions — one
+//!   cycle each (the SMs' issue width is folded into the gap scale);
+//! * translation: TLB hit = 1 cycle, miss = page-walk latency;
+//! * resident access: DRAM latency divided by the warp-overlap factor
+//!   (the GTO scheduler hides most of it);
+//! * far-fault: faults *batch* — a fault arriving while a batch is being
+//!   serviced joins it and shares the 45 µs service latency (modelling
+//!   the UVM driver's fault coalescing through the MSHRs); each migrated
+//!   page additionally occupies the PCIe link for its transfer time;
+//! * zero-copy / delayed remote access: fixed remote latency, no
+//!   migration;
+//! * prefetches ride the link in the background: they cost link occupancy
+//!   (delaying later demand transfers — this is how "aggressive
+//!   prefetching hurts" emerges) but never stall the SMs directly;
+//! * predictor-driven policies charge `prediction_overhead` per
+//!   invocation batch (the Fig 13 sensitivity axis).
+
+use crate::config::SimConfig;
+use crate::policy::Policy;
+use crate::sim::{DeviceMemory, FaultAction, Page, Stats, Tlb};
+use crate::trace::Trace;
+
+use std::collections::HashMap;
+
+/// Result of a run: final stats plus the crash determination used by the
+/// 150% experiments (the paper reports ATAX/NW/2DCONV crashing under
+/// UVMSmart at 150% oversubscription).
+#[derive(Debug, Clone)]
+pub struct RunOutcome {
+    pub stats: Stats,
+    /// True if thrashing exceeded the runaway threshold (the analogue of
+    /// the benchmark crashing in the paper's simulator).
+    pub crashed: bool,
+}
+
+pub struct Engine {
+    cfg: SimConfig,
+    mem: DeviceMemory,
+    tlb: Tlb,
+    stats: Stats,
+    /// cycle when the PCIe link becomes free
+    link_free: u64,
+    /// cycle when the current fault batch's service completes
+    batch_done: u64,
+    /// faults currently sharing the batch (bounded by MSHR count)
+    batch_faults: usize,
+    /// soft-pin remote-touch counters (delayed migration)
+    delay_counters: HashMap<Page, u32>,
+    faults_in_interval: u32,
+    current_kernel: u32,
+    /// runaway threshold: thrash events before declaring a crash
+    crash_threshold: u64,
+}
+
+impl Engine {
+    pub fn new(cfg: SimConfig) -> Engine {
+        let cap = cfg.capacity_pages;
+        assert!(cap > 0, "SimConfig.capacity_pages not set");
+        Engine {
+            mem: DeviceMemory::new(cap),
+            tlb: Tlb::new(cfg.tlb_entries),
+            stats: Stats::default(),
+            link_free: 0,
+            batch_done: 0,
+            batch_faults: 0,
+            delay_counters: HashMap::new(),
+            faults_in_interval: 0,
+            current_kernel: 0,
+            crash_threshold: u64::MAX,
+            cfg,
+        }
+    }
+
+    /// Enable crash emulation: a run whose thrash events exceed
+    /// `threshold` is marked crashed (used by the 150% experiments).
+    pub fn with_crash_threshold(mut self, threshold: u64) -> Engine {
+        self.crash_threshold = threshold;
+        self
+    }
+
+    pub fn memory(&self) -> &DeviceMemory {
+        &self.mem
+    }
+
+    pub fn stats(&self) -> &Stats {
+        &self.stats
+    }
+
+    /// Run the whole trace under `policy`.
+    pub fn run(mut self, trace: &Trace, policy: &mut dyn Policy) -> RunOutcome {
+        for acc in &trace.accesses {
+            if acc.kernel != self.current_kernel {
+                self.current_kernel = acc.kernel;
+                policy.on_kernel_boundary(acc.kernel);
+            }
+            self.step(acc, policy, trace);
+            if self.stats.thrash_events > self.crash_threshold {
+                return RunOutcome { stats: self.stats, crashed: true };
+            }
+        }
+        RunOutcome { stats: self.stats, crashed: false }
+    }
+
+    fn step(
+        &mut self,
+        acc: &crate::trace::Access,
+        policy: &mut dyn Policy,
+        trace: &Trace,
+    ) {
+        // hot path: plain scalar reads, no per-step config copies
+        let (tlb_hit_latency, walk_latency) =
+            (self.cfg.tlb_hit_latency, self.cfg.walk_latency);
+        let hit_latency = self.cfg.dram_latency / self.cfg.warp_overlap;
+        self.stats.accesses += 1;
+        self.stats.instructions += acc.inst_gap as u64 + 1;
+        self.stats.cycles += acc.inst_gap as u64;
+
+        // translation
+        if self.tlb.access(acc.page) {
+            self.stats.tlb_hits += 1;
+            self.stats.cycles += tlb_hit_latency;
+        } else {
+            self.stats.tlb_misses += 1;
+            self.stats.cycles += walk_latency;
+        }
+
+        let resident = self.mem.resident(acc.page);
+        policy.on_access(acc, resident);
+
+        if resident {
+            self.stats.hits += 1;
+            self.mem.touch(acc.page, acc.is_write);
+            self.stats.cycles += hit_latency;
+        } else {
+            self.handle_fault(acc, policy);
+            // prefetching is fault-triggered (the driver schedules
+            // prefetch DMA while servicing the far-fault batch);
+            // candidates must lie inside a managed allocation.
+            let candidates = policy.prefetch(acc);
+            for page in candidates {
+                if !trace.in_allocation(page) || self.mem.resident(page) {
+                    continue;
+                }
+                self.admit(page, policy, true);
+            }
+        }
+    }
+
+    fn handle_fault(&mut self, acc: &crate::trace::Access, policy: &mut dyn Policy) {
+        // fault path is comparatively cold; a flat config copy is fine
+        let cfg = self.cfg.clone();
+        self.stats.faults += 1;
+        self.faults_in_interval += 1;
+        if self.faults_in_interval >= cfg.interval_faults {
+            self.faults_in_interval = 0;
+            policy.on_interval();
+        }
+
+        let action = policy.fault_action(acc.page);
+        let effective = match action {
+            FaultAction::Delay => {
+                let c = self.delay_counters.entry(acc.page).or_insert(0);
+                *c += 1;
+                if *c >= cfg.delay_threshold {
+                    self.delay_counters.remove(&acc.page);
+                    FaultAction::Migrate
+                } else {
+                    self.stats.delayed_remote += 1;
+                    self.stats.cycles += cfg.zero_copy_latency;
+                    return;
+                }
+            }
+            other => other,
+        };
+
+        match effective {
+            FaultAction::ZeroCopy => {
+                self.stats.zero_copy += 1;
+                self.stats.cycles += cfg.zero_copy_latency;
+            }
+            FaultAction::Migrate => {
+                // fault batching: join the in-flight batch if one is live
+                // and has MSHR headroom, else open a new batch.
+                let now = self.stats.cycles;
+                if now >= self.batch_done || self.batch_faults >= cfg.fault_mshrs {
+                    self.batch_done = now + cfg.far_fault_latency;
+                    self.batch_faults = 1;
+                } else {
+                    self.batch_faults += 1;
+                }
+                // the migration transfer queues on the link after the
+                // fault service completes
+                let start = self.batch_done.max(self.link_free);
+                let done = start + cfg.transfer_cycles_per_page;
+                self.link_free = done;
+                let stall = (done - now) / cfg.warp_overlap;
+                self.stats.cycles += stall;
+
+                self.admit(acc.page, policy, false);
+                self.mem.touch(acc.page, acc.is_write);
+            }
+            FaultAction::Delay => unreachable!("resolved above"),
+        }
+    }
+
+    /// Bring a page into device memory, evicting as needed.
+    fn admit(&mut self, page: Page, policy: &mut dyn Policy, via_prefetch: bool) {
+        while self.mem.is_full() {
+            let victim = match policy.select_victim(&self.mem) {
+                Some(v) if self.mem.resident(v) && v != page => v,
+                _ => {
+                    self.stats.policy_victim_fallbacks += 1;
+                    match self.mem.any_page() {
+                        Some(v) => v,
+                        None => break, // capacity 0 handled by ctor assert
+                    }
+                }
+            };
+            let frame = self.mem.evict(victim).expect("victim resident");
+            self.tlb.invalidate(victim);
+            self.stats
+                .note_eviction(victim, frame.prefetched_untouched, frame.dirty);
+            if frame.dirty {
+                // writeback occupies the link but does not stall the SMs
+                self.link_free =
+                    self.link_free.max(self.stats.cycles) + self.cfg.transfer_cycles_per_page;
+            }
+            policy.on_evict(victim);
+        }
+        // prefetch transfers ride the link in the background
+        if via_prefetch {
+            self.stats.prefetches += 1;
+            self.link_free =
+                self.link_free.max(self.stats.cycles) + self.cfg.transfer_cycles_per_page;
+        }
+        self.mem.install(page, self.stats.cycles, via_prefetch);
+        self.stats.note_migration(page);
+        policy.on_migrate(page, via_prefetch);
+    }
+
+    /// Charge predictor inference overhead (called by learning-based
+    /// policies through the coordinator).
+    pub fn charge_prediction(&mut self, batch: u64) {
+        self.stats.predictions += batch;
+        let cost = self.cfg.prediction_overhead;
+        self.stats.prediction_overhead_cycles += cost;
+        self.stats.cycles += cost;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::policy::composite::Composite;
+    use crate::policy::lru::Lru;
+    use crate::policy::DemandOnly;
+    use crate::trace::{Access, Trace};
+
+    fn mk_trace(pages: &[u64], ws: u64) -> Trace {
+        Trace::from_accesses(
+            "t",
+            ws,
+            1,
+            pages
+                .iter()
+                .map(|&p| Access {
+                    page: p,
+                    pc: 0,
+                    tb: 0,
+                    kernel: 0,
+                    inst_gap: 4,
+                    is_write: false,
+                })
+                .collect(),
+        )
+    }
+
+    fn demand_lru() -> Composite<DemandOnly, Lru> {
+        Composite::new(DemandOnly, Lru::new())
+    }
+
+    #[test]
+    fn no_oversubscription_no_thrash() {
+        let t = mk_trace(&[0, 1, 2, 0, 1, 2, 0, 1, 2], 3);
+        let cfg = SimConfig { capacity_pages: 3, ..Default::default() };
+        let out = Engine::new(cfg).run(&t, &mut demand_lru());
+        assert_eq!(out.stats.thrash_events, 0);
+        assert_eq!(out.stats.faults, 3);
+        assert_eq!(out.stats.hits, 6);
+        assert!(!out.crashed);
+    }
+
+    #[test]
+    fn cyclic_overcapacity_thrashes_lru() {
+        // classic LRU pathology: cycle over capacity+1 pages
+        let seq: Vec<u64> = (0..4).cycle().take(40).collect();
+        let t = mk_trace(&seq, 4);
+        let cfg = SimConfig { capacity_pages: 3, ..Default::default() };
+        let out = Engine::new(cfg).run(&t, &mut demand_lru());
+        assert_eq!(out.stats.hits, 0, "LRU always misses on this cycle");
+        assert!(out.stats.thrash_events > 30);
+    }
+
+    #[test]
+    fn instructions_and_cycles_accumulate() {
+        let t = mk_trace(&[0, 0, 0], 1);
+        let cfg = SimConfig { capacity_pages: 1, ..Default::default() };
+        let out = Engine::new(cfg).run(&t, &mut demand_lru());
+        assert_eq!(out.stats.instructions, 15);
+        assert!(out.stats.cycles > 0);
+        assert!(out.stats.ipc() > 0.0);
+    }
+
+    #[test]
+    fn crash_threshold_trips() {
+        let seq: Vec<u64> = (0..4).cycle().take(400).collect();
+        let t = mk_trace(&seq, 4);
+        let cfg = SimConfig { capacity_pages: 2, ..Default::default() };
+        let out = Engine::new(cfg)
+            .with_crash_threshold(50)
+            .run(&t, &mut demand_lru());
+        assert!(out.crashed);
+    }
+
+    #[test]
+    fn fault_batching_is_cheaper_than_serial_faults() {
+        // 64 distinct cold pages: with batching, later faults join the
+        // first batch's service window; total cycles must be far below
+        // 64 * far_fault_latency.
+        let seq: Vec<u64> = (0..64).collect();
+        let t = mk_trace(&seq, 64);
+        let cfg = SimConfig { capacity_pages: 64, ..Default::default() };
+        let serial_bound = 64 * cfg.far_fault_latency;
+        let out = Engine::new(cfg).run(&t, &mut demand_lru());
+        assert!(
+            out.stats.cycles < serial_bound / 4,
+            "cycles {} vs serial {}",
+            out.stats.cycles,
+            serial_bound
+        );
+    }
+}

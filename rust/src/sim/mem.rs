@@ -1,0 +1,148 @@
+//! GPU device-memory model: the resident page set under a fixed frame
+//! budget, with dirty tracking for writeback accounting.
+
+use std::collections::HashMap;
+
+use super::Page;
+
+/// Per-frame metadata.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Frame {
+    pub dirty: bool,
+    /// Cycle of the migration that installed this page.
+    pub migrated_at: u64,
+    /// Access count since residency (used by frequency-aware policies).
+    pub touches: u32,
+    /// True if the page arrived via prefetch and is still untouched.
+    pub prefetched_untouched: bool,
+}
+
+/// Device memory: a capacity-bounded map from page to frame.
+#[derive(Debug, Clone)]
+pub struct DeviceMemory {
+    frames: HashMap<Page, Frame>,
+    capacity: u64,
+}
+
+impl DeviceMemory {
+    pub fn new(capacity_pages: u64) -> DeviceMemory {
+        assert!(capacity_pages > 0, "zero-capacity device memory");
+        DeviceMemory {
+            frames: HashMap::with_capacity(capacity_pages as usize),
+            capacity: capacity_pages,
+        }
+    }
+
+    pub fn capacity(&self) -> u64 {
+        self.capacity
+    }
+
+    pub fn used(&self) -> u64 {
+        self.frames.len() as u64
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.used() >= self.capacity
+    }
+
+    pub fn resident(&self, page: Page) -> bool {
+        self.frames.contains_key(&page)
+    }
+
+    pub fn frame(&self, page: Page) -> Option<&Frame> {
+        self.frames.get(&page)
+    }
+
+    /// Install a page. Panics if already resident or over capacity —
+    /// the engine must evict first (this is an invariant, not an error
+    /// path: see DESIGN.md §Key invariants).
+    pub fn install(&mut self, page: Page, now: u64, via_prefetch: bool) {
+        assert!(!self.is_full(), "install over capacity");
+        let prev = self.frames.insert(
+            page,
+            Frame {
+                dirty: false,
+                migrated_at: now,
+                touches: 0,
+                prefetched_untouched: via_prefetch,
+            },
+        );
+        assert!(prev.is_none(), "page {page} installed twice");
+    }
+
+    /// Record an access to a resident page. Returns false if not resident.
+    pub fn touch(&mut self, page: Page, is_write: bool) -> bool {
+        match self.frames.get_mut(&page) {
+            Some(f) => {
+                f.dirty |= is_write;
+                f.touches = f.touches.saturating_add(1);
+                f.prefetched_untouched = false;
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Evict a page; returns its frame (dirty flag drives writeback cost).
+    pub fn evict(&mut self, page: Page) -> Option<Frame> {
+        self.frames.remove(&page)
+    }
+
+    /// Iterate resident pages (order unspecified).
+    pub fn pages(&self) -> impl Iterator<Item = Page> + '_ {
+        self.frames.keys().copied()
+    }
+
+    /// Any resident page — the engine's last-resort victim fallback.
+    pub fn any_page(&self) -> Option<Page> {
+        self.frames.keys().next().copied()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn capacity_accounting() {
+        let mut m = DeviceMemory::new(2);
+        m.install(10, 0, false);
+        assert!(!m.is_full());
+        m.install(20, 1, true);
+        assert!(m.is_full());
+        assert_eq!(m.used(), 2);
+        let f = m.evict(10).unwrap();
+        assert!(!f.dirty);
+        assert_eq!(m.used(), 1);
+        assert!(!m.resident(10));
+    }
+
+    #[test]
+    #[should_panic(expected = "over capacity")]
+    fn install_over_capacity_is_a_bug() {
+        let mut m = DeviceMemory::new(1);
+        m.install(1, 0, false);
+        m.install(2, 0, false);
+    }
+
+    #[test]
+    #[should_panic(expected = "installed twice")]
+    fn double_install_is_a_bug() {
+        let mut m = DeviceMemory::new(2);
+        m.install(1, 0, false);
+        m.install(1, 0, false);
+    }
+
+    #[test]
+    fn touch_sets_dirty_and_clears_prefetch_mark() {
+        let mut m = DeviceMemory::new(2);
+        m.install(5, 0, true);
+        assert!(m.frame(5).unwrap().prefetched_untouched);
+        assert!(m.touch(5, true));
+        let f = m.frame(5).unwrap();
+        assert!(f.dirty);
+        assert!(!f.prefetched_untouched);
+        assert_eq!(f.touches, 1);
+        assert!(!m.touch(99, false));
+    }
+}

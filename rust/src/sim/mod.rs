@@ -1,0 +1,37 @@
+//! Trace-driven UVM timing simulator.
+//!
+//! Reproduces the slice of GPGPU-Sim + the UVMSmart extension that the
+//! paper's metrics depend on: per-access TLB/page-walk modelling, far-fault
+//! batching in the GMMU's MSHRs, page migration and writeback over a
+//! bandwidth-shared PCIe link, zero-copy remote access, delayed migration
+//! (soft pinning), and thrashing accounting. Timing parameters come from
+//! the paper's Table V via [`crate::config::SimConfig`].
+//!
+//! The engine is policy-agnostic: everything strategy-specific (what to
+//! prefetch, whom to evict, migrate vs pin) lives behind
+//! [`crate::policy::Policy`].
+
+pub mod engine;
+pub mod mem;
+pub mod stats;
+pub mod tlb;
+
+pub use engine::{Engine, RunOutcome};
+pub use mem::DeviceMemory;
+pub use stats::Stats;
+pub use tlb::Tlb;
+
+/// Virtual page number.
+pub type Page = u64;
+
+/// How a far-fault is serviced (policy decision).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultAction {
+    /// Migrate the page to device memory (default UVM behaviour).
+    Migrate,
+    /// Service remotely over the interconnect (hard pin / zero-copy).
+    ZeroCopy,
+    /// Soft pin: access remotely until the configured read threshold,
+    /// then migrate (UVMSmart's delayed migration).
+    Delay,
+}

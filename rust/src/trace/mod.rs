@@ -1,0 +1,186 @@
+//! Memory-access traces: the substrate the whole evaluation runs on.
+//!
+//! The paper drives GPGPU-Sim with 11 UVM benchmarks from Rodinia,
+//! Polybench and Lonestar; we reproduce each benchmark's *page-level*
+//! access structure with deterministic synthetic generators (see
+//! `workloads`). A trace is the sequence of coalesced page touches the UVM
+//! runtime observes, annotated with the features the predictor consumes:
+//! PC, thread-block id, kernel (phase) index, and the compute-instruction
+//! gap used by the timing model.
+
+pub mod multi;
+pub mod stats;
+pub mod workloads;
+
+/// One coalesced page-granular memory access as seen by the GMMU.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Access {
+    /// Virtual page number within the workload's managed arena.
+    pub page: u64,
+    /// Program-counter identifier (which load/store in the kernel).
+    pub pc: u32,
+    /// Thread-block id issuing the access.
+    pub tb: u32,
+    /// Kernel launch index — kernel boundaries delimit program phases.
+    pub kernel: u32,
+    /// Compute instructions retired since the previous access (timing).
+    pub inst_gap: u32,
+    /// Store (true) or load (false) — writes dirty the page.
+    pub is_write: bool,
+}
+
+/// A complete workload trace.
+#[derive(Debug, Clone)]
+pub struct Trace {
+    pub name: String,
+    /// Arena span in pages, including chunk-alignment padding between
+    /// `cudaMallocManaged` allocations.
+    pub working_set_pages: u64,
+    /// Distinct pages actually touched — the working-set size the
+    /// oversubscription percentages are computed against.
+    pub touched_pages: u64,
+    /// (base, pages) of each managed allocation. Prefetching never
+    /// crosses an allocation boundary (driver semantics). Empty means
+    /// "one allocation covering the whole arena".
+    pub allocations: Vec<(u64, u64)>,
+    /// Number of kernel launches (== phase count).
+    pub kernels: u32,
+    pub accesses: Vec<Access>,
+}
+
+impl Trace {
+    /// Is `page` inside some managed allocation?
+    pub fn in_allocation(&self, page: u64) -> bool {
+        if self.allocations.is_empty() {
+            return page < self.working_set_pages;
+        }
+        self.allocations
+            .iter()
+            .any(|&(base, pages)| page >= base && page < base + pages)
+    }
+
+    /// Build a trace from raw accesses: one allocation spanning the
+    /// arena, touched-set computed. Used by tests and ad-hoc sequences.
+    pub fn from_accesses(
+        name: &str,
+        working_set_pages: u64,
+        kernels: u32,
+        accesses: Vec<Access>,
+    ) -> Trace {
+        let touched: std::collections::HashSet<u64> =
+            accesses.iter().map(|a| a.page).collect();
+        Trace {
+            name: name.to_string(),
+            working_set_pages,
+            touched_pages: touched.len() as u64,
+            allocations: Vec::new(),
+            kernels,
+            accesses,
+        }
+    }
+
+    /// Total instructions (compute gaps + one per access).
+    pub fn instructions(&self) -> u64 {
+        self.accesses
+            .iter()
+            .map(|a| a.inst_gap as u64 + 1)
+            .sum()
+    }
+
+    /// Signed page delta stream (first access has delta 0).
+    pub fn deltas(&self) -> Vec<i64> {
+        let mut out = Vec::with_capacity(self.accesses.len());
+        let mut prev: Option<u64> = None;
+        for a in &self.accesses {
+            out.push(match prev {
+                None => 0,
+                Some(p) => a.page as i64 - p as i64,
+            });
+            prev = Some(a.page);
+        }
+        out
+    }
+
+    /// Split indices at kernel boundaries: ranges of equal `kernel`.
+    pub fn phases(&self) -> Vec<std::ops::Range<usize>> {
+        let mut out = Vec::new();
+        let mut start = 0usize;
+        for i in 1..=self.accesses.len() {
+            if i == self.accesses.len()
+                || self.accesses[i].kernel != self.accesses[start].kernel
+            {
+                out.push(start..i);
+                start = i;
+            }
+        }
+        out
+    }
+
+    /// Sanity: every page below the working set, kernels monotone.
+    pub fn validate(&self) -> Result<(), String> {
+        let mut max_kernel = 0u32;
+        for (i, a) in self.accesses.iter().enumerate() {
+            if !self.in_allocation(a.page) {
+                return Err(format!(
+                    "{}: access {i} touches page {} outside every allocation",
+                    self.name, a.page
+                ));
+            }
+            if a.kernel < max_kernel {
+                return Err(format!(
+                    "{}: access {i} kernel id went backwards", self.name
+                ));
+            }
+            max_kernel = a.kernel;
+        }
+        if self.kernels != max_kernel + 1 {
+            return Err(format!(
+                "{}: kernels field {} != observed {}",
+                self.name,
+                self.kernels,
+                max_kernel + 1
+            ));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Trace {
+        Trace::from_accesses(
+            "t",
+            10,
+            2,
+            vec![
+                Access { page: 0, pc: 0, tb: 0, kernel: 0, inst_gap: 4, is_write: false },
+                Access { page: 3, pc: 0, tb: 0, kernel: 0, inst_gap: 4, is_write: true },
+                Access { page: 1, pc: 1, tb: 1, kernel: 1, inst_gap: 2, is_write: false },
+            ],
+        )
+    }
+
+    #[test]
+    fn deltas_and_instructions() {
+        let t = tiny();
+        assert_eq!(t.deltas(), vec![0, 3, -2]);
+        assert_eq!(t.instructions(), 4 + 1 + 4 + 1 + 2 + 1);
+    }
+
+    #[test]
+    fn phases_split_at_kernel_boundary() {
+        let t = tiny();
+        assert_eq!(t.phases(), vec![0..2, 2..3]);
+    }
+
+    #[test]
+    fn validate_catches_out_of_range() {
+        let mut t = tiny();
+        t.accesses[1].page = 99;
+        assert!(t.validate().is_err());
+        let t2 = tiny();
+        assert!(t2.validate().is_ok());
+    }
+}

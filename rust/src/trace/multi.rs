@@ -1,0 +1,149 @@
+//! Multi-tenant trace interleaving (Table VII scalability study).
+//!
+//! Modern GPUs run concurrent kernels/applications (MPS); the paper tests
+//! its predictor on pairs of concurrent workloads from different DFA
+//! categories. We merge two traces with disjoint page arenas, namespaced
+//! PC/TB ids, and proportional round-robin scheduling so both tenants
+//! make progress at their native rates.
+
+use crate::trace::{Access, Trace};
+
+/// Interleave two traces into one concurrent-execution trace.
+///
+/// * pages of `b` are rebased above `a`'s arena;
+/// * PC/TB namespaces are split (tenant bit in the high range);
+/// * accesses are merged proportionally so the shorter trace finishes at
+///   the same relative point (models co-scheduled SMs).
+pub fn interleave(a: &Trace, b: &Trace) -> Trace {
+    // rebase tenant B above tenant A's arena on a chunk boundary, so
+    // prefetcher trees never straddle tenants
+    let chunk = crate::config::PAGES_PER_BB * crate::config::BBS_PER_CHUNK;
+    let base = a.working_set_pages.div_ceil(chunk) * chunk;
+    let pc_off = 1 << 12;
+    let tb_off = 1 << 14;
+    let (na, nb) = (a.accesses.len(), b.accesses.len());
+    let mut out = Vec::with_capacity(na + nb);
+    let (mut ia, mut ib) = (0usize, 0usize);
+    // largest-remainder scheduling: advance the tenant whose progress
+    // fraction is lowest.
+    while ia < na || ib < nb {
+        let fa = if na == 0 { 1.0 } else { ia as f64 / na as f64 };
+        let fb = if nb == 0 { 1.0 } else { ib as f64 / nb as f64 };
+        if ib >= nb || (ia < na && fa <= fb) {
+            out.push(a.accesses[ia]);
+            ia += 1;
+        } else {
+            let acc = b.accesses[ib];
+            out.push(Access {
+                page: acc.page + base,
+                pc: acc.pc + pc_off,
+                tb: acc.tb + tb_off,
+                // kernel ids must stay monotone in the merged stream; the
+                // simulator only uses them for phase boundaries, so tenant
+                // B's kernels ride on top of A's id space.
+                kernel: acc.kernel,
+                ..acc
+            });
+            ib += 1;
+        }
+    }
+    // Re-monotonise kernel ids over the merged stream: a phase boundary is
+    // wherever EITHER tenant launches a new kernel.
+    let mut merged_kernel = 0u32;
+    let mut last_pair: Option<(bool, u32)> = None;
+    for acc in out.iter_mut() {
+        let tenant_b = acc.tb >= tb_off;
+        let pair = (tenant_b, acc.kernel);
+        if let Some(lp) = last_pair {
+            if lp != pair && acc.kernel != 0 || (lp.0 == pair.0 && lp.1 != pair.1) {
+                if lp.0 == pair.0 && lp.1 != pair.1 {
+                    merged_kernel += 1;
+                }
+            }
+        }
+        last_pair = Some(pair);
+        acc.kernel = merged_kernel;
+    }
+    let mut allocations: Vec<(u64, u64)> = if a.allocations.is_empty() {
+        vec![(0, a.working_set_pages)]
+    } else {
+        a.allocations.clone()
+    };
+    let b_allocs: Vec<(u64, u64)> = if b.allocations.is_empty() {
+        vec![(base, b.working_set_pages)]
+    } else {
+        b.allocations.iter().map(|&(o, p)| (o + base, p)).collect()
+    };
+    allocations.extend(b_allocs);
+    Trace {
+        name: format!("{}+{}", a.name, b.name),
+        working_set_pages: base + b.working_set_pages,
+        touched_pages: a.touched_pages + b.touched_pages,
+        allocations,
+        kernels: merged_kernel + 1,
+        accesses: out,
+    }
+}
+
+/// Which tenant an access of an interleaved trace belongs to.
+pub fn tenant_of(access: &Access) -> usize {
+    if access.tb >= (1 << 14) {
+        1
+    } else {
+        0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Scale;
+    use crate::trace::workloads::Workload;
+
+    #[test]
+    fn preserves_all_accesses_and_rebases() {
+        let a = Workload::StreamTriad.generate(Scale::default(), 1);
+        let b = Workload::Hotspot.generate(Scale::default(), 2);
+        let m = interleave(&a, &b);
+        assert_eq!(m.accesses.len(), a.accesses.len() + b.accesses.len());
+        assert!(m.working_set_pages >= a.working_set_pages + b.working_set_pages);
+        assert_eq!(m.touched_pages, a.touched_pages + b.touched_pages);
+        m.validate().unwrap();
+        // tenant B pages all rebased above tenant A's arena
+        for acc in &m.accesses {
+            if tenant_of(acc) == 1 {
+                assert!(acc.page >= a.working_set_pages);
+            } else {
+                assert!(acc.page < a.working_set_pages);
+            }
+        }
+    }
+
+    #[test]
+    fn interleaving_is_proportional() {
+        let a = Workload::StreamTriad.generate(Scale::default(), 1);
+        let b = Workload::Nw.generate(Scale::default(), 2);
+        let m = interleave(&a, &b);
+        // at the midpoint of the merged trace, both tenants should be
+        // roughly half done
+        let mid = &m.accesses[..m.accesses.len() / 2];
+        let b_count = mid.iter().filter(|x| tenant_of(x) == 1).count();
+        let frac = b_count as f64 / (b.accesses.len() as f64);
+        assert!((frac - 0.5).abs() < 0.05, "tenant B progress {frac}");
+    }
+
+    #[test]
+    fn per_tenant_order_preserved() {
+        let a = Workload::Atax.generate(Scale::default(), 1);
+        let b = Workload::TwoDConv.generate(Scale::default(), 2);
+        let m = interleave(&a, &b);
+        let a_pages: Vec<u64> = m
+            .accesses
+            .iter()
+            .filter(|x| tenant_of(x) == 0)
+            .map(|x| x.page)
+            .collect();
+        let orig: Vec<u64> = a.accesses.iter().map(|x| x.page).collect();
+        assert_eq!(a_pages, orig);
+    }
+}

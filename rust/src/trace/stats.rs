@@ -1,0 +1,113 @@
+//! Trace analytics backing Table III (unique page deltas per program
+//! phase) and Fig 5 (delta distributions / pattern visualisation).
+
+use std::collections::{BTreeMap, HashSet};
+
+use crate::trace::Trace;
+
+/// Cumulative unique-delta counts at each of `n_phases` equal instruction
+/// milestones — the paper's "program phase 0/1/2" columns in Table III.
+pub fn unique_deltas_per_phase(trace: &Trace, n_phases: usize) -> Vec<usize> {
+    assert!(n_phases > 0);
+    let deltas = trace.deltas();
+    let total = deltas.len();
+    let mut out = Vec::with_capacity(n_phases);
+    let mut seen: HashSet<i64> = HashSet::new();
+    for ph in 1..=n_phases {
+        let end = total * ph / n_phases;
+        let start = total * (ph - 1) / n_phases;
+        for d in &deltas[start..end] {
+            seen.insert(*d);
+        }
+        out.push(seen.len());
+    }
+    out
+}
+
+/// Delta histogram over a phase window (Fig 5 a/b/c/d series).
+pub fn delta_histogram(
+    trace: &Trace,
+    phase: usize,
+    n_phases: usize,
+) -> BTreeMap<i64, usize> {
+    let deltas = trace.deltas();
+    let total = deltas.len();
+    let start = total * phase / n_phases;
+    let end = total * (phase + 1) / n_phases;
+    let mut hist = BTreeMap::new();
+    for d in &deltas[start..end] {
+        *hist.entry(*d).or_insert(0) += 1;
+    }
+    hist
+}
+
+/// Shannon entropy of a delta histogram — a scalar "how predictable is
+/// this phase" used in EXPERIMENTS.md commentary.
+pub fn delta_entropy(hist: &BTreeMap<i64, usize>) -> f64 {
+    let total: usize = hist.values().sum();
+    if total == 0 {
+        return 0.0;
+    }
+    let mut h = 0.0;
+    for &c in hist.values() {
+        let p = c as f64 / total as f64;
+        h -= p * p.log2();
+    }
+    h
+}
+
+/// Temporal proximity of equal patterns (Fig 5 e/f): fraction of adjacent
+/// access pairs whose classified pattern label is identical. Streaming
+/// workloads score near 1; scattered pattern mixes score low.
+pub fn label_proximity(labels: &[u8]) -> f64 {
+    if labels.len() < 2 {
+        return 1.0;
+    }
+    let same = labels
+        .windows(2)
+        .filter(|w| w[0] == w[1])
+        .count();
+    same as f64 / (labels.len() - 1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Scale;
+    use crate::trace::workloads::Workload;
+
+    #[test]
+    fn unique_deltas_monotone_nondecreasing() {
+        for w in Workload::ALL {
+            let t = w.generate(Scale::default(), 42);
+            let counts = unique_deltas_per_phase(&t, 3);
+            assert_eq!(counts.len(), 3);
+            assert!(counts[0] <= counts[1] && counts[1] <= counts[2],
+                    "{}: {counts:?}", w.name());
+        }
+    }
+
+    #[test]
+    fn histogram_sums_to_phase_len() {
+        let t = Workload::Hotspot.generate(Scale::default(), 1);
+        let h = delta_histogram(&t, 0, 3);
+        let total: usize = h.values().sum();
+        assert_eq!(total, t.accesses.len() / 3);
+    }
+
+    #[test]
+    fn entropy_ordering_streaming_vs_mixed() {
+        let triad = Workload::StreamTriad.generate(Scale::default(), 1);
+        let nw = Workload::Nw.generate(Scale::default(), 1);
+        let e_triad = delta_entropy(&delta_histogram(&triad, 1, 3));
+        let e_nw = delta_entropy(&delta_histogram(&nw, 1, 3));
+        assert!(e_nw > e_triad, "NW {e_nw} vs Triad {e_triad}");
+    }
+
+    #[test]
+    fn proximity_bounds() {
+        assert_eq!(label_proximity(&[1, 1, 1, 1]), 1.0);
+        assert_eq!(label_proximity(&[1, 2, 1, 2]), 0.0);
+        assert_eq!(label_proximity(&[1]), 1.0);
+    }
+}

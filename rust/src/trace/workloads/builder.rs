@@ -1,0 +1,184 @@
+//! Shared machinery for the workload generators: arena layout and a
+//! trace builder that tracks kernel/phase structure and assigns thread
+//! blocks deterministically.
+
+use crate::trace::{Access, Trace};
+
+/// A contiguous page extent inside the managed arena (one
+/// `cudaMallocManaged` allocation).
+#[derive(Debug, Clone, Copy)]
+pub struct Extent {
+    pub base: u64,
+    pub pages: u64,
+}
+
+impl Extent {
+    /// Page holding element `idx` given `elems_per_page`.
+    #[inline]
+    pub fn page_of(&self, idx: u64, elems_per_page: u64) -> u64 {
+        let p = idx / elems_per_page;
+        debug_assert!(p < self.pages, "element index outside extent");
+        self.base + p
+    }
+
+    /// n-th page of the extent.
+    #[inline]
+    pub fn page(&self, n: u64) -> u64 {
+        debug_assert!(n < self.pages);
+        self.base + n
+    }
+}
+
+/// Sequential allocator over the workload's managed arena. Each
+/// allocation is aligned to a 2 MB chunk boundary, as the CUDA driver
+/// aligns `cudaMallocManaged` regions — this keeps every prefetcher tree
+/// within a single allocation (crossing arrays would be unphysical).
+#[derive(Debug, Default)]
+pub struct Arena {
+    next: u64,
+    allocations: Vec<(u64, u64)>,
+}
+
+impl Arena {
+    pub fn new() -> Arena {
+        Arena { next: 0, allocations: Vec::new() }
+    }
+
+    pub fn alloc(&mut self, pages: u64) -> Extent {
+        let chunk = crate::config::PAGES_PER_BB * crate::config::BBS_PER_CHUNK;
+        let base = self.next.div_ceil(chunk) * chunk;
+        let e = Extent { base, pages };
+        self.next = base + pages;
+        self.allocations.push((base, pages));
+        e
+    }
+
+    pub fn total_pages(&self) -> u64 {
+        self.next
+    }
+
+    pub fn allocations(&self) -> &[(u64, u64)] {
+        &self.allocations
+    }
+}
+
+/// Accumulates accesses while tracking the current kernel (phase) id.
+pub struct TraceBuilder {
+    name: String,
+    accesses: Vec<Access>,
+    kernel: u32,
+    started: bool,
+    /// default compute gap between accesses for this benchmark
+    inst_gap: u32,
+}
+
+impl TraceBuilder {
+    pub fn new(name: &str, inst_gap: u32) -> TraceBuilder {
+        TraceBuilder {
+            name: name.to_string(),
+            accesses: Vec::new(),
+            kernel: 0,
+            started: false,
+            inst_gap,
+        }
+    }
+
+    /// Begin the next kernel launch (phase boundary).
+    pub fn next_kernel(&mut self) {
+        if self.started {
+            self.kernel += 1;
+        }
+        self.started = true;
+    }
+
+    pub fn kernel(&self) -> u32 {
+        self.kernel
+    }
+
+    /// Record a page touch. `pc` is a per-benchmark load/store site id; the
+    /// builder namespaces it by kernel so phases have distinct PCs, as real
+    /// kernels do.
+    pub fn touch(&mut self, page: u64, pc: u32, tb: u32, is_write: bool) {
+        debug_assert!(self.started, "touch before next_kernel()");
+        self.accesses.push(Access {
+            page,
+            pc: self.kernel * 16 + pc,
+            tb,
+            kernel: self.kernel,
+            inst_gap: self.inst_gap,
+            is_write,
+        });
+    }
+
+    /// Record a touch with an explicit instruction gap (e.g. heavier
+    /// compute phases).
+    pub fn touch_gap(
+        &mut self,
+        page: u64,
+        pc: u32,
+        tb: u32,
+        is_write: bool,
+        inst_gap: u32,
+    ) {
+        debug_assert!(self.started);
+        self.accesses.push(Access {
+            page,
+            pc: self.kernel * 16 + pc,
+            tb,
+            kernel: self.kernel,
+            inst_gap,
+            is_write,
+        });
+    }
+
+    pub fn finish(self, arena: &Arena) -> Trace {
+        let touched: std::collections::HashSet<u64> =
+            self.accesses.iter().map(|a| a.page).collect();
+        Trace {
+            name: self.name,
+            working_set_pages: arena.total_pages(),
+            touched_pages: touched.len() as u64,
+            allocations: arena.allocations().to_vec(),
+            kernels: self.kernel + 1,
+            accesses: self.accesses,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arena_extents_are_chunk_aligned_and_disjoint() {
+        let mut a = Arena::new();
+        let x = a.alloc(10);
+        let y = a.alloc(5);
+        assert_eq!(x.base, 0);
+        // second allocation starts at the next 2 MB chunk (512 pages)
+        assert_eq!(y.base, 512);
+        assert_eq!(a.total_pages(), 517);
+        assert_eq!(a.allocations(), &[(0, 10), (512, 5)]);
+        assert_eq!(x.page_of(1023, 1024), 0);
+        assert_eq!(x.page_of(1024, 1024), 1);
+        assert_eq!(y.page(4), 516);
+    }
+
+    #[test]
+    fn builder_tracks_kernels_and_pcs() {
+        let mut a = Arena::new();
+        let e = a.alloc(4);
+        let mut b = TraceBuilder::new("t", 5);
+        b.next_kernel();
+        b.touch(e.page(0), 1, 0, false);
+        b.next_kernel();
+        b.touch(e.page(1), 1, 0, true);
+        let t = b.finish(&a);
+        assert_eq!(t.kernels, 2);
+        assert_eq!(t.accesses[0].kernel, 0);
+        assert_eq!(t.accesses[1].kernel, 1);
+        // PCs are namespaced per kernel
+        assert_ne!(t.accesses[0].pc, t.accesses[1].pc);
+        assert!(t.validate().is_ok());
+    }
+}

@@ -1,0 +1,461 @@
+//! The 11 benchmark generators.
+//!
+//! Each function documents the CUDA benchmark it models, the array layout,
+//! the kernel structure, and the published signature it is calibrated to
+//! (Table I thrashing order, Table III delta-vocabulary growth, Table VII
+//! DFA category). All randomness flows from the caller's seed.
+//!
+//! Capacity interplay (the crux of Table I/VI): at 125% oversubscription the
+//! device holds 80% of the working set. Generators are sized so that
+//!
+//! * **MVT/ATAX/Hotspot**: the *reused* array fits in 80% — Belady keeps it
+//!   resident (0 thrash) while LRU/recency policies churn it;
+//! * **BICG/Srad-v2/NW**: the reuse set *exceeds* 80% — every policy,
+//!   including MIN, must thrash (matching their non-zero Belady columns);
+//! * **streaming benchmarks** (AddVectors, StreamTriad, 2DCONV,
+//!   Pathfinder): no page is re-touched after eviction — zero thrash.
+
+use crate::config::Scale;
+use crate::trace::Trace;
+use crate::util::rng::Rng;
+
+use super::builder::{Arena, TraceBuilder};
+
+/// AddVectors: `c[i] = a[i] + b[i]`. Pure streaming over three equal
+/// arrays; three kernel launches cover disjoint thirds (grid-strided
+/// launch). Table III: constant ~55 deltas; zero thrash everywhere.
+pub fn add_vectors(scale: Scale, _seed: u64) -> Trace {
+    let n = scale.pages(680);
+    let mut arena = Arena::new();
+    let a = arena.alloc(n);
+    let b = arena.alloc(n);
+    let c = arena.alloc(n);
+    let mut t = TraceBuilder::new("AddVectors", 6);
+    let third = n / 3;
+    for k in 0..3u64 {
+        t.next_kernel();
+        let (lo, hi) = (k * third, if k == 2 { n } else { (k + 1) * third });
+        for p in lo..hi {
+            let tb = (p / 4) as u32;
+            // 8 warp-steps per page: a,b reads + c write interleaved
+            for _ in 0..2 {
+                t.touch(a.page(p), 0, tb, false);
+                t.touch(b.page(p), 1, tb, false);
+                t.touch(c.page(p), 2, tb, true);
+            }
+        }
+    }
+    t.finish(&arena)
+}
+
+/// StreamTriad: `a[i] = b[i] + s*c[i]` (McCalpin STREAM). Identical
+/// streaming skeleton to AddVectors with a different PC/TB texture —
+/// Table VII's "streaming" row, ~38 constant deltas.
+pub fn stream_triad(scale: Scale, _seed: u64) -> Trace {
+    let n = scale.pages(680);
+    let mut arena = Arena::new();
+    let a = arena.alloc(n);
+    let b = arena.alloc(n);
+    let c = arena.alloc(n);
+    let mut t = TraceBuilder::new("StreamTriad", 4);
+    let third = n / 3;
+    for k in 0..3u64 {
+        t.next_kernel();
+        let (lo, hi) = (k * third, if k == 2 { n } else { (k + 1) * third });
+        for p in lo..hi {
+            let tb = (p / 8) as u32;
+            t.touch(b.page(p), 0, tb, false);
+            t.touch(c.page(p), 1, tb, false);
+            t.touch(b.page(p), 0, tb, false);
+            t.touch(c.page(p), 1, tb, false);
+            t.touch(a.page(p), 2, tb, true);
+        }
+    }
+    t.finish(&arena)
+}
+
+/// ATAX: `y = Aᵀ(Ax)`. Phase 1 streams A row-major with a hot x vector;
+/// phase 2 walks Aᵀ in a *seeded-random column order* (the benchmark's
+/// column accesses coalesce poorly — Table VII files ATAX under "random").
+/// A (1400 pages) fits in the 125% capacity (1600) ⇒ Belady rescues it,
+/// recency policies churn (Table I: baseline 4688 / Belady 0).
+pub fn atax(scale: Scale, seed: u64) -> Trace {
+    let mut rng = Rng::new(seed ^ 0xA7A8);
+    let a_pages = scale.pages(1400);
+    let cols = 64u64; // column groups for the transpose phase
+    let mut arena = Arena::new();
+    let a = arena.alloc(a_pages);
+    let x = arena.alloc(scale.pages(200));
+    let tmp = arena.alloc(scale.pages(200));
+    let y = arena.alloc(cols);
+    let mut t = TraceBuilder::new("ATAX", 8);
+
+    // kernel 0: tmp = A x (row-major stream, x re-read per row)
+    t.next_kernel();
+    let rows = a_pages / 2; // 2 pages per matrix row
+    for r in 0..rows {
+        let tb = (r / 8) as u32;
+        t.touch(a.page(r * 2), 0, tb, false);
+        t.touch(a.page(r * 2 + 1), 0, tb, false);
+        t.touch(x.page(r % x.pages), 1, tb, false);
+        t.touch(tmp.page(r % tmp.pages), 2, tb, true);
+    }
+
+    // kernel 1: y = Aᵀ tmp — columns visited in a random permutation;
+    // within a column group, pages stride by the row pitch.
+    t.next_kernel();
+    let mut order: Vec<u64> = (0..cols).collect();
+    rng.shuffle(&mut order);
+    for (ci, col) in order.iter().enumerate() {
+        let tb = ci as u32;
+        // each column group touches every 32nd page, offset by the column
+        let mut p = col % 32;
+        while p < a_pages {
+            t.touch(a.page(p), 0, tb, false);
+            t.touch(tmp.page(p % tmp.pages), 1, tb, false);
+            p += 32;
+        }
+        t.touch(y.page(*col), 2, tb, true);
+    }
+    t.finish(&arena)
+}
+
+/// Backprop (Rodinia): one epoch of minibatch forward+backward over a
+/// 2-layer MLP. Weights are re-touched every kernel (stay hot under every
+/// policy); inputs stream once per batch ⇒ zero thrash in all strategies
+/// (Table I row of zeros). The backward kernels introduce new strides,
+/// growing the delta vocabulary across phases (Table III: 45→131→141).
+pub fn backprop(scale: Scale, _seed: u64) -> Trace {
+    let mut arena = Arena::new();
+    let w1 = arena.alloc(scale.pages(512));
+    let w2 = arena.alloc(scale.pages(128));
+    let input = arena.alloc(scale.pages(1024));
+    let hidden = arena.alloc(scale.pages(32));
+    let mut t = TraceBuilder::new("Backprop", 12);
+
+    let batches = 4u64;
+    let batch_pages = input.pages / batches;
+    for bi in 0..batches {
+        // forward kernel: stream batch inputs, walk W1 row-major
+        t.next_kernel();
+        for p in 0..batch_pages {
+            let tb = (p / 4) as u32;
+            t.touch(input.page(bi * batch_pages + p), 0, tb, false);
+            t.touch(w1.page(p % w1.pages), 1, tb, false);
+            if p % 8 == 0 {
+                t.touch(hidden.page((p / 8) % hidden.pages), 2, tb, true);
+            }
+        }
+        for p in 0..w2.pages {
+            t.touch(w2.page(p), 3, (p / 4) as u32, false);
+        }
+        // backward kernel: W2ᵀ strided, W1 updated in 4-page tiles
+        t.next_kernel();
+        for p in (0..w2.pages).rev() {
+            t.touch(w2.page(p), 0, (p / 4) as u32, true);
+            t.touch(hidden.page(p % hidden.pages), 1, (p / 4) as u32, false);
+        }
+        let mut p = 0;
+        while p < w1.pages {
+            let tb = (p / 16) as u32;
+            for q in 0..4.min(w1.pages - p) {
+                t.touch(w1.page(p + q), 2, tb, true);
+            }
+            t.touch(input.page(bi * batch_pages + p % batch_pages), 3, tb, false);
+            p += 4;
+        }
+    }
+    t.finish(&arena)
+}
+
+/// BICG: `q = A p; s = Aᵀ r` — two full passes over A per iteration, two
+/// iterations. The reuse set (A = 2000 pages) EXCEEDS 125% capacity
+/// (1760), so even Belady's MIN thrashes (Table I: Belady 2224 — the
+/// highest oracle count after Srad).
+pub fn bicg(scale: Scale, seed: u64) -> Trace {
+    let mut rng = Rng::new(seed ^ 0xB1C6);
+    let a_pages = scale.pages(2000);
+    let mut arena = Arena::new();
+    let a = arena.alloc(a_pages);
+    let vecs = arena.alloc(scale.pages(50));
+    let mut t = TraceBuilder::new("BICG", 8);
+
+    for _iter in 0..2 {
+        // q = A p : row-major stream
+        t.next_kernel();
+        for p in 0..a_pages {
+            let tb = (p / 8) as u32;
+            t.touch(a.page(p), 0, tb, false);
+            if p % 4 == 0 {
+                t.touch(vecs.page((p / 4) % vecs.pages), 1, tb, false);
+            }
+        }
+        // s = Aᵀ r : column-group order with mild shuffling
+        t.next_kernel();
+        let groups = 50u64;
+        let mut order: Vec<u64> = (0..groups).collect();
+        rng.shuffle(&mut order);
+        for (gi, g) in order.iter().enumerate() {
+            let tb = gi as u32;
+            let mut p = *g;
+            while p < a_pages {
+                t.touch(a.page(p), 0, tb, false);
+                p += groups;
+            }
+            t.touch(vecs.page(*g % vecs.pages), 1, tb, true);
+        }
+    }
+    t.finish(&arena)
+}
+
+/// Hotspot (Rodinia): pyramid-tiled 2D stencil. Each kernel iterates a
+/// band of rows 3 times (temporal blocking), then the band slides. Reuse
+/// is band-local (400 pages ≪ capacity) ⇒ smart policies see no thrash;
+/// the baseline's tree prefetcher drags in sibling blocks of the *next*
+/// band mid-iteration and pollutes (Table I: baseline 6144, HPE/Belady 0).
+pub fn hotspot(scale: Scale, _seed: u64) -> Trace {
+    let grid = scale.pages(800);
+    let mut arena = Arena::new();
+    let temp_in = arena.alloc(grid);
+    let temp_out = arena.alloc(grid);
+    let power = arena.alloc(scale.pages(400));
+    let mut t = TraceBuilder::new("Hotspot", 16);
+
+    let band = scale.pages(100);
+    let bands = grid / band;
+    for b in 0..bands {
+        t.next_kernel();
+        for _it in 0..3 {
+            for p in 0..band {
+                let row = b * band + p;
+                let tb = (p / 4) as u32;
+                t.touch(temp_in.page(row), 0, tb, false);
+                // stencil halo: ±1 row
+                if row > 0 {
+                    t.touch(temp_in.page(row - 1), 1, tb, false);
+                }
+                if row + 1 < grid {
+                    t.touch(temp_in.page(row + 1), 2, tb, false);
+                }
+                t.touch(power.page(row % power.pages), 3, tb, false);
+                t.touch(temp_out.page(row), 4, tb, true);
+            }
+        }
+    }
+    t.finish(&arena)
+}
+
+/// MVT: `x1 += A y1; x2 += Aᵀ y2`. Row pass then a regular strided column
+/// pass. A (1350 pages) fits in 125% capacity (1344+…) ⇒ Belady and HPE
+/// keep it (≈0 thrash); LRU evicts the head of A during the row pass and
+/// pays on the column pass (Table I: baseline 2912).
+pub fn mvt(scale: Scale, _seed: u64) -> Trace {
+    let a_pages = scale.pages(1350);
+    let mut arena = Arena::new();
+    let a = arena.alloc(a_pages);
+    let vecs = arena.alloc(scale.pages(330));
+    let mut t = TraceBuilder::new("MVT", 8);
+
+    // kernel 0: row-major pass
+    t.next_kernel();
+    for p in 0..a_pages {
+        let tb = (p / 8) as u32;
+        t.touch(a.page(p), 0, tb, false);
+        if p % 4 == 0 {
+            t.touch(vecs.page((p / 4) % vecs.pages), 1, tb, false);
+        }
+    }
+    // kernel 1: strided column pass (deterministic stride 25)
+    t.next_kernel();
+    let stride = 25u64;
+    for s in 0..stride {
+        let tb = s as u32;
+        let mut p = s;
+        while p < a_pages {
+            t.touch(a.page(p), 0, tb, false);
+            p += stride;
+        }
+        t.touch(vecs.page((s * 7) % vecs.pages), 1, tb, true);
+    }
+    t.finish(&arena)
+}
+
+/// NW (Needleman-Wunsch): anti-diagonal wavefront over a 2D score matrix,
+/// with GPU thread-blocks picking diagonal *tiles* in a randomized order,
+/// then a reverse traceback pass. Every diagonal has its own inter-tile
+/// jump distances ⇒ the delta vocabulary explodes and keeps growing
+/// (Table III: 479 → 830 → 1466); the reuse set exceeds capacity ⇒
+/// everything thrashes (Table I: baseline 29952, Belady 772).
+pub fn nw(scale: Scale, seed: u64) -> Trace {
+    let mut rng = Rng::new(seed ^ 0x0A1D);
+    // score matrix: rows x row_pages layout
+    let rows = scale.pages(48) as usize;           // tile rows
+    let row_pages = scale.pages(40);               // pages per tile row
+    let score_pages = rows as u64 * row_pages;     // 1920 pages at scale 1
+    let mut arena = Arena::new();
+    let score = arena.alloc(score_pages);
+    let refm = arena.alloc(scale.pages(700));
+    let mut t = TraceBuilder::new("NW", 20);
+
+    let diags = rows + row_pages as usize - 1;
+    // forward fill: 4 kernel launches cover the diagonal sweep
+    let diags_per_kernel = diags.div_ceil(4);
+    for (d, _) in (0..diags).enumerate() {
+        if d % diags_per_kernel == 0 {
+            t.next_kernel();
+        }
+        // tiles on diagonal d: (i, d-i) with both coords in range
+        let lo = d.saturating_sub(row_pages as usize - 1);
+        let hi = (d + 1).min(rows);
+        let mut tiles: Vec<usize> = (lo..hi).collect();
+        rng.shuffle(&mut tiles);
+        for (ti, i) in tiles.iter().enumerate() {
+            let j = (d - i) as u64;
+            let page = *i as u64 * row_pages + j;
+            let tb = ti as u32;
+            // read left + up neighbours, write the cell
+            if j > 0 {
+                t.touch(score.page(page - 1), 0, tb, false);
+            }
+            if *i > 0 {
+                t.touch(score.page(page - row_pages), 1, tb, false);
+            }
+            t.touch(refm.page(page % refm.pages), 2, tb, false);
+            t.touch(score.page(page), 3, tb, true);
+        }
+    }
+    // traceback: reverse diagonal walk from the far corner
+    t.next_kernel();
+    let (mut i, mut j) = (rows as u64 - 1, row_pages - 1);
+    loop {
+        let page = i * row_pages + j;
+        t.touch(score.page(page), 0, 0, false);
+        if i == 0 && j == 0 {
+            break;
+        }
+        // biased random walk towards the origin
+        if i == 0 {
+            j -= 1;
+        } else if j == 0 {
+            i -= 1;
+        } else if rng.chance(0.4) {
+            i -= 1;
+        } else if rng.chance(0.6) {
+            j -= 1;
+        } else {
+            i -= 1;
+            j -= 1;
+        }
+    }
+    t.finish(&arena)
+}
+
+/// Pathfinder (Rodinia): dynamic programming down a grid; each row reads
+/// its predecessor and the wall array. The reuse window is two rows ⇒
+/// streaming, zero thrash (Table I row of zeros).
+pub fn pathfinder(scale: Scale, _seed: u64) -> Trace {
+    let wall_pages = scale.pages(1900);
+    let rows = 50u64;
+    let row = wall_pages / rows;
+    let mut arena = Arena::new();
+    let wall = arena.alloc(wall_pages);
+    let result = arena.alloc(row); // DP row buffer (double-buffered in-page)
+    let mut t = TraceBuilder::new("Pathfinder", 6);
+    let rows_per_kernel = rows / 2;
+    for r in 0..rows {
+        if r % rows_per_kernel == 0 {
+            t.next_kernel();
+        }
+        for p in 0..row {
+            let tb = (p / 8) as u32;
+            t.touch(wall.page(r * row + p), 0, tb, false);
+            // read the DP row below (previous), write the current
+            t.touch(result.page(p % result.pages), 1, tb, false);
+            if p % 2 == 0 {
+                t.touch(result.page((p + 1) % result.pages), 2, tb, true);
+            }
+        }
+    }
+    t.finish(&arena)
+}
+
+/// Srad-v2 (Rodinia): two alternating kernels over six arrays (image,
+/// diffusion coefficient, four directional derivatives), two iterations.
+/// Total reuse set (2100 pages) exceeds capacity ⇒ intrinsic thrash even
+/// for MIN (Table I: Belady 3667); vocabulary grows as kernel 2's arrays
+/// join (Table III: 49 → 145 → 170).
+pub fn srad_v2(scale: Scale, _seed: u64) -> Trace {
+    let img_pages = scale.pages(700);
+    let mut arena = Arena::new();
+    let image = arena.alloc(img_pages);
+    let coeff = arena.alloc(img_pages);
+    let dn = arena.alloc(scale.pages(175));
+    let ds = arena.alloc(scale.pages(175));
+    let de = arena.alloc(scale.pages(175));
+    let dw = arena.alloc(scale.pages(175));
+    let mut t = TraceBuilder::new("Srad-v2", 14);
+
+    for _iter in 0..2 {
+        // kernel 1: derivatives + coefficient from the image
+        t.next_kernel();
+        for p in 0..img_pages {
+            let tb = (p / 8) as u32;
+            t.touch(image.page(p), 0, tb, false);
+            if p > 0 {
+                t.touch(image.page(p - 1), 1, tb, false);
+            }
+            if p + 1 < img_pages {
+                t.touch(image.page(p + 1), 2, tb, false);
+            }
+            t.touch(dn.page(p % dn.pages), 3, tb, true);
+            t.touch(ds.page(p % ds.pages), 4, tb, true);
+            t.touch(coeff.page(p), 5, tb, true);
+        }
+        // kernel 2: update image from coefficient + derivatives
+        t.next_kernel();
+        for p in 0..img_pages {
+            let tb = (p / 8) as u32;
+            t.touch(coeff.page(p), 0, tb, false);
+            if p + 1 < img_pages {
+                t.touch(coeff.page(p + 1), 1, tb, false);
+            }
+            t.touch(de.page(p % de.pages), 2, tb, false);
+            t.touch(dw.page(p % dw.pages), 3, tb, false);
+            t.touch(image.page(p), 4, tb, true);
+        }
+    }
+    t.finish(&arena)
+}
+
+/// 2DCONV (Polybench): 3×3 convolution, single pass with a three-row
+/// sliding window. Constant delta vocabulary (Table III: 155 across all
+/// phases), zero thrash, crashes UVMSmart at 150% in the paper.
+pub fn twod_conv(scale: Scale, _seed: u64) -> Trace {
+    let rows = 250u64;
+    let row_pages = scale.pages(4);
+    let n = rows * row_pages;
+    let mut arena = Arena::new();
+    let input = arena.alloc(n);
+    let output = arena.alloc(n);
+    let mut t = TraceBuilder::new("2DCONV", 10);
+
+    let rows_per_kernel = rows / 2;
+    for r in 0..rows {
+        if r % rows_per_kernel == 0 {
+            t.next_kernel();
+        }
+        for p in 0..row_pages {
+            let tb = p as u32;
+            let cur = r * row_pages + p;
+            t.touch(input.page(cur), 0, tb, false);
+            if r > 0 {
+                t.touch(input.page(cur - row_pages), 1, tb, false);
+            }
+            if r + 1 < rows {
+                t.touch(input.page(cur + row_pages), 2, tb, false);
+            }
+            t.touch(output.page(cur), 3, tb, true);
+        }
+    }
+    t.finish(&arena)
+}

@@ -1,0 +1,236 @@
+//! Synthetic generators for the paper's 11 GPGPU benchmarks.
+//!
+//! Each generator reproduces the *page-level* access structure that drives
+//! the paper's evaluation — the prefetch/evict policies and the predictor
+//! only ever observe (page, delta, PC, TB) streams, so matching the
+//! published signatures is what matters:
+//!
+//! * relative thrashing order under the baseline (Table I/VI),
+//! * per-phase delta-vocabulary growth (Table III: NW ≫ Srad-v2 >
+//!   Backprop > … > StreamTriad/2DCONV constant),
+//! * DFA pattern classes (Table VII: StreamTriad=streaming, Hotspot=regular,
+//!   NW=mixed, ATAX=random).
+//!
+//! Layout convention: all arrays of a benchmark live in one managed arena;
+//! an [`Arena`] hands out consecutive page extents (mirroring consecutive
+//! `cudaMallocManaged` calls). Element accesses are pre-coalesced: one
+//! [`Access`] per distinct page touch per warp-step.
+
+mod builder;
+mod generators;
+
+pub use builder::{Arena, Extent, TraceBuilder};
+pub use generators::*;
+
+use crate::config::Scale;
+use crate::trace::Trace;
+
+/// The 11 paper benchmarks (Table I order).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Workload {
+    AddVectors,
+    Atax,
+    Backprop,
+    Bicg,
+    Hotspot,
+    Mvt,
+    Nw,
+    Pathfinder,
+    SradV2,
+    TwoDConv,
+    StreamTriad,
+}
+
+impl Workload {
+    pub const ALL: [Workload; 11] = [
+        Workload::AddVectors,
+        Workload::Atax,
+        Workload::Backprop,
+        Workload::Bicg,
+        Workload::Hotspot,
+        Workload::Mvt,
+        Workload::Nw,
+        Workload::Pathfinder,
+        Workload::SradV2,
+        Workload::TwoDConv,
+        Workload::StreamTriad,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Workload::AddVectors => "AddVectors",
+            Workload::Atax => "ATAX",
+            Workload::Backprop => "Backprop",
+            Workload::Bicg => "BICG",
+            Workload::Hotspot => "Hotspot",
+            Workload::Mvt => "MVT",
+            Workload::Nw => "NW",
+            Workload::Pathfinder => "Pathfinder",
+            Workload::SradV2 => "Srad-v2",
+            Workload::TwoDConv => "2DCONV",
+            Workload::StreamTriad => "StreamTriad",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Workload> {
+        Workload::ALL
+            .iter()
+            .copied()
+            .find(|w| w.name().eq_ignore_ascii_case(s))
+    }
+
+    /// DFA category per paper Table VII.
+    pub fn category(&self) -> &'static str {
+        match self {
+            Workload::AddVectors
+            | Workload::StreamTriad
+            | Workload::TwoDConv
+            | Workload::Pathfinder => "streaming",
+            Workload::Hotspot | Workload::SradV2 | Workload::Backprop => "regular",
+            Workload::Nw => "mixed",
+            Workload::Atax | Workload::Bicg | Workload::Mvt => "random",
+        }
+    }
+
+    /// Generate the benchmark's trace at a given scale and seed.
+    pub fn generate(&self, scale: Scale, seed: u64) -> Trace {
+        let t = match self {
+            Workload::AddVectors => generators::add_vectors(scale, seed),
+            Workload::Atax => generators::atax(scale, seed),
+            Workload::Backprop => generators::backprop(scale, seed),
+            Workload::Bicg => generators::bicg(scale, seed),
+            Workload::Hotspot => generators::hotspot(scale, seed),
+            Workload::Mvt => generators::mvt(scale, seed),
+            Workload::Nw => generators::nw(scale, seed),
+            Workload::Pathfinder => generators::pathfinder(scale, seed),
+            Workload::SradV2 => generators::srad_v2(scale, seed),
+            Workload::TwoDConv => generators::twod_conv(scale, seed),
+            Workload::StreamTriad => generators::stream_triad(scale, seed),
+        };
+        debug_assert_eq!(t.validate(), Ok(()));
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+
+    fn scale1() -> Scale {
+        Scale { factor: 1 }
+    }
+
+    #[test]
+    fn all_traces_validate() {
+        for w in Workload::ALL {
+            let t = w.generate(scale1(), 42);
+            t.validate().unwrap_or_else(|e| panic!("{e}"));
+            assert!(!t.accesses.is_empty(), "{} empty", w.name());
+            assert!(t.working_set_pages > 0);
+        }
+    }
+
+    #[test]
+    fn traces_deterministic_under_seed() {
+        for w in [Workload::Atax, Workload::Nw, Workload::SradV2] {
+            let a = w.generate(scale1(), 7);
+            let b = w.generate(scale1(), 7);
+            assert_eq!(a.accesses, b.accesses, "{}", w.name());
+        }
+    }
+
+    #[test]
+    fn random_workloads_vary_with_seed() {
+        let a = Workload::Atax.generate(scale1(), 1);
+        let b = Workload::Atax.generate(scale1(), 2);
+        assert_ne!(a.accesses, b.accesses);
+    }
+
+    #[test]
+    fn working_set_is_actually_touched() {
+        // touched_pages is accurate, and the declared allocations are not
+        // dramatically larger than what the benchmark actually uses
+        for w in Workload::ALL {
+            let t = w.generate(scale1(), 42);
+            let touched: HashSet<u64> =
+                t.accesses.iter().map(|a| a.page).collect();
+            assert_eq!(touched.len() as u64, t.touched_pages, "{}", w.name());
+            let alloc_pages: u64 =
+                t.allocations.iter().map(|(_, p)| p).sum();
+            let frac = touched.len() as f64 / alloc_pages as f64;
+            assert!(
+                frac > 0.85,
+                "{}: only {:.2} of the allocations is touched",
+                w.name(),
+                frac
+            );
+            // every touched page is inside a declared allocation
+            assert!(touched.iter().all(|&p| t.in_allocation(p)), "{}", w.name());
+        }
+    }
+
+    #[test]
+    fn name_roundtrip() {
+        for w in Workload::ALL {
+            assert_eq!(Workload::from_name(w.name()), Some(w));
+        }
+        assert_eq!(Workload::from_name("nw"), Some(Workload::Nw));
+        assert_eq!(Workload::from_name("nope"), None);
+    }
+
+    #[test]
+    fn scale_grows_working_set() {
+        let s1 = Workload::Bicg.generate(Scale { factor: 1 }, 3);
+        let s2 = Workload::Bicg.generate(Scale { factor: 2 }, 3);
+        assert!(s2.working_set_pages > s1.working_set_pages);
+        assert!(s2.accesses.len() > s1.accesses.len());
+    }
+
+    #[test]
+    fn delta_vocabulary_ordering_matches_table3() {
+        // Table III: NW's unique-delta count dwarfs everything; streaming
+        // benchmarks stay small and constant.
+        let count = |w: Workload| {
+            let t = w.generate(scale1(), 42);
+            let set: HashSet<i64> = t.deltas().into_iter().collect();
+            set.len()
+        };
+        let nw = count(Workload::Nw);
+        let srad = count(Workload::SradV2);
+        let triad = count(Workload::StreamTriad);
+        assert!(nw > 2 * srad, "NW {nw} vs Srad {srad}");
+        assert!(srad > triad, "Srad {srad} vs Triad {triad}");
+    }
+
+    #[test]
+    fn phase_growth_matches_table3() {
+        // NW and Srad-v2 must GROW their delta vocabulary across phases;
+        // StreamTriad and 2DCONV must stay flat.
+        let growth = |w: Workload| {
+            let t = w.generate(scale1(), 42);
+            let deltas = t.deltas();
+            let phases = t.phases();
+            let thirds = [
+                0..phases.len() / 3,
+                phases.len() / 3..2 * phases.len() / 3,
+            ];
+            // cumulative unique deltas after first third vs after second
+            let mut seen: HashSet<i64> = HashSet::new();
+            let mut counts = Vec::new();
+            for third in thirds {
+                for pr in &phases[third] {
+                    for d in &deltas[pr.clone()] {
+                        seen.insert(*d);
+                    }
+                }
+                counts.push(seen.len());
+            }
+            (counts[0], counts[1])
+        };
+        let (nw0, nw1) = growth(Workload::Nw);
+        assert!(nw1 as f64 > nw0 as f64 * 1.3, "NW grows: {nw0} -> {nw1}");
+        let (st0, st1) = growth(Workload::StreamTriad);
+        assert!(st1 <= st0 + 4, "StreamTriad flat: {st0} -> {st1}");
+    }
+}

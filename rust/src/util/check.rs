@@ -1,0 +1,92 @@
+//! Miniature property-testing harness (proptest is not in the vendored
+//! crate set, so we ship the 10% of it the invariants need).
+//!
+//! ```ignore
+//! props(0xC0FFEE, 200, |rng| {
+//!     let n = rng.range(1, 100);
+//!     prop_assert(n > 0, format!("n = {n}"));
+//! });
+//! ```
+//!
+//! Each case gets an independent deterministic RNG stream; on failure the
+//! panic message carries the case index and seed so the exact input can be
+//! replayed with `replay(seed, index, f)`.
+
+use super::rng::Rng;
+
+/// Run `cases` property checks, each with a forked deterministic RNG.
+pub fn props<F: FnMut(&mut Rng)>(seed: u64, cases: u32, mut f: F) {
+    for i in 0..cases {
+        let mut rng = case_rng(seed, i);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+            || f(&mut rng),
+        ));
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .map(String::as_str)
+                .or_else(|| payload.downcast_ref::<&str>().copied())
+                .unwrap_or("<non-string panic>");
+            panic!(
+                "property failed at case {i} (seed {seed:#x}): {msg}\n\
+                 replay with util::check::replay({seed:#x}, {i}, f)"
+            );
+        }
+    }
+}
+
+/// Re-run a single failing case by (seed, index).
+pub fn replay<F: FnOnce(&mut Rng)>(seed: u64, index: u32, f: F) {
+    let mut rng = case_rng(seed, index);
+    f(&mut rng);
+}
+
+fn case_rng(seed: u64, index: u32) -> Rng {
+    Rng::new(seed ^ ((index as u64 + 1).wrapping_mul(0xD1B5_4A32_D192_ED03)))
+}
+
+/// assert! that formats through the property harness.
+pub fn prop_assert(cond: bool, msg: impl AsRef<str>) {
+    if !cond {
+        panic!("{}", msg.as_ref());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_all_cases() {
+        let mut count = 0;
+        props(1, 50, |_| count += 1);
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    fn case_streams_are_deterministic() {
+        let mut first = Vec::new();
+        props(2, 10, |rng| first.push(rng.next_u64()));
+        let mut second = Vec::new();
+        props(2, 10, |rng| second.push(rng.next_u64()));
+        assert_eq!(first, second);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed at case")]
+    fn failure_reports_case_index() {
+        props(3, 100, |rng| {
+            let v = rng.below(10);
+            prop_assert(v != 7, format!("hit {v}"));
+        });
+    }
+
+    #[test]
+    fn replay_reproduces_case_stream() {
+        let mut seen = Vec::new();
+        props(4, 5, |rng| seen.push(rng.next_u64()));
+        let mut replayed = 0;
+        replay(4, 3, |rng| replayed = rng.next_u64());
+        assert_eq!(replayed, seen[3]);
+    }
+}

@@ -1,0 +1,157 @@
+//! Tiny CLI argument parser (no clap in the vendored crate set).
+//!
+//! Supports subcommands, `--flag`, `--key value` / `--key=value`, and
+//! positional arguments, with generated usage text. Only what `repro`'s
+//! launcher needs — deliberately not a general framework.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+}
+
+pub const FLAG_SET: &str = "true";
+
+impl Args {
+    /// Parse raw argv (without the program name). The first token that does
+    /// not start with `-` becomes the subcommand.
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args, String> {
+        let mut out = Args {
+            subcommand: None,
+            positional: Vec::new(),
+            flags: BTreeMap::new(),
+        };
+        let mut iter = argv.into_iter().peekable();
+        while let Some(tok) = iter.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if stripped.is_empty() {
+                    // `--` ends option parsing
+                    out.positional.extend(iter);
+                    break;
+                }
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else {
+                    // value-taking if the next token exists and is not a flag
+                    match iter.peek() {
+                        Some(next) if !next.starts_with("--") => {
+                            let v = iter.next().unwrap();
+                            out.flags.insert(stripped.to_string(), v);
+                        }
+                        _ => {
+                            out.flags
+                                .insert(stripped.to_string(), FLAG_SET.into());
+                        }
+                    }
+                }
+            } else if tok.starts_with('-') && tok.len() > 1 {
+                return Err(format!(
+                    "short options not supported: {tok} (use --long form)"
+                ));
+            } else if out.subcommand.is_none() && out.positional.is_empty() {
+                out.subcommand = Some(tok);
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> Result<Args, String> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    /// Typed lookup with default; errors carry the flag name for usability.
+    pub fn get_parse<T: std::str::FromStr>(
+        &self,
+        key: &str,
+        default: T,
+    ) -> Result<T, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<T>()
+                .map_err(|_| format!("--{key}: cannot parse {v:?}")),
+        }
+    }
+
+    /// Unknown-flag guard: call with the full set of accepted flags.
+    pub fn reject_unknown(&self, accepted: &[&str]) -> Result<(), String> {
+        for k in self.flags.keys() {
+            if !accepted.contains(&k.as_str()) {
+                return Err(format!(
+                    "unknown flag --{k}; accepted: {}",
+                    accepted.join(", ")
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse("exp table1 --oversub 125 --scale=2 --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("exp"));
+        assert_eq!(a.positional, vec!["table1"]);
+        assert_eq!(a.get("oversub"), Some("125"));
+        assert_eq!(a.get("scale"), Some("2"));
+        assert!(a.has("verbose"));
+        assert_eq!(a.get_parse("oversub", 0u32).unwrap(), 125);
+    }
+
+    #[test]
+    fn flag_followed_by_flag_is_boolean() {
+        let a = parse("run --fast --seed 9");
+        assert!(a.has("fast"));
+        assert_eq!(a.get_parse("seed", 0u64).unwrap(), 9);
+    }
+
+    #[test]
+    fn double_dash_stops_parsing() {
+        let a = parse("run -- --not-a-flag");
+        assert_eq!(a.positional, vec!["--not-a-flag"]);
+    }
+
+    #[test]
+    fn rejects_unknown() {
+        let a = parse("run --bogus 1");
+        assert!(a.reject_unknown(&["seed"]).is_err());
+        assert!(a.reject_unknown(&["bogus"]).is_ok());
+    }
+
+    #[test]
+    fn rejects_short_options() {
+        assert!(Args::parse(vec!["-x".to_string()]).is_err());
+    }
+
+    #[test]
+    fn parse_error_message_names_flag() {
+        let a = parse("run --seed abc");
+        let err = a.get_parse("seed", 0u64).unwrap_err();
+        assert!(err.contains("seed"));
+    }
+}

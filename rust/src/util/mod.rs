@@ -1,0 +1,8 @@
+//! Dependency-free substrate utilities: deterministic RNG, JSON, CLI
+//! parsing, a mini property-test harness, and CSV/report helpers.
+
+pub mod check;
+pub mod cli;
+pub mod csv;
+pub mod json;
+pub mod rng;

@@ -1,0 +1,167 @@
+//! Cross-cutting simulator invariants over the full workload × strategy
+//! grid (no PJRT needed). These are the properties DESIGN.md §Key
+//! invariants promises; `DeviceMemory` additionally panics internally on
+//! any capacity or double-install violation, so every run below doubles
+//! as a residency-invariant check.
+
+use uvmio::config::Scale;
+use uvmio::coordinator::{run_rule_based, RunSpec, Strategy};
+use uvmio::trace::workloads::Workload;
+
+const RULE_BASED: [Strategy; 7] = [
+    Strategy::Baseline,
+    Strategy::DemandHpe,
+    Strategy::TreeHpe,
+    Strategy::DemandBelady,
+    Strategy::DemandLru,
+    Strategy::DemandRandom,
+    Strategy::UvmSmart,
+];
+
+#[test]
+fn accounting_identities_hold_everywhere() {
+    for w in Workload::ALL {
+        let trace = w.generate(Scale::default(), 42);
+        for s in RULE_BASED {
+            let spec = RunSpec::new(&trace, 125);
+            let out = run_rule_based(&spec, s);
+            let st = &out.outcome.stats;
+            let name = format!("{}/{}", w.name(), s.name());
+            assert_eq!(st.accesses, trace.accesses.len() as u64, "{name}");
+            // every access either hit, migrated, or was served remotely
+            assert_eq!(
+                st.hits + st.faults,
+                st.accesses,
+                "{name}: hits+faults"
+            );
+            assert!(st.migrations <= st.faults + st.prefetches, "{name}");
+            assert!(st.evictions <= st.migrations, "{name}: evictions");
+            assert!(st.thrash_events <= st.migrations, "{name}: thrash");
+            assert!(
+                st.thrashed_pages.len() as u64 <= st.thrash_events,
+                "{name}: unique ≤ events"
+            );
+            assert!(st.ipc() > 0.0, "{name}: IPC positive");
+        }
+    }
+}
+
+#[test]
+fn no_oversubscription_means_no_thrash() {
+    for w in Workload::ALL {
+        let trace = w.generate(Scale::default(), 42);
+        for s in [Strategy::Baseline, Strategy::DemandLru, Strategy::UvmSmart] {
+            let spec = RunSpec::new(&trace, 100);
+            let out = run_rule_based(&spec, s);
+            assert_eq!(
+                out.outcome.stats.thrash_events,
+                0,
+                "{}/{} thrashed at 100%",
+                w.name(),
+                s.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn belady_thrash_bounded_by_lru_thrash() {
+    // cold misses are policy-independent and thrash = misses - cold, so
+    // MIN's miss-optimality transfers to the thrash metric (demand-only).
+    for w in [
+        Workload::Atax,
+        Workload::Bicg,
+        Workload::Nw,
+        Workload::SradV2,
+        Workload::Mvt,
+        Workload::Hotspot,
+    ] {
+        let trace = w.generate(Scale::default(), 42);
+        for pct in [125u32, 150] {
+            let spec = RunSpec::new(&trace, pct);
+            let min = run_rule_based(&spec, Strategy::DemandBelady);
+            let lru = run_rule_based(&spec, Strategy::DemandLru);
+            assert!(
+                min.outcome.stats.thrash_events <= lru.outcome.stats.thrash_events,
+                "{}@{pct}: Belady {} > LRU {}",
+                w.name(),
+                min.outcome.stats.thrash_events,
+                lru.outcome.stats.thrash_events
+            );
+        }
+    }
+}
+
+#[test]
+fn streaming_workloads_never_thrash_under_baseline() {
+    for w in [
+        Workload::AddVectors,
+        Workload::StreamTriad,
+        Workload::TwoDConv,
+        Workload::Pathfinder,
+        Workload::Backprop,
+    ] {
+        let trace = w.generate(Scale::default(), 42);
+        let spec = RunSpec::new(&trace, 125);
+        let out = run_rule_based(&spec, Strategy::Baseline);
+        assert_eq!(
+            out.outcome.stats.thrash_events,
+            0,
+            "{} thrashed under the baseline (paper Table I row is 0)",
+            w.name()
+        );
+    }
+}
+
+#[test]
+fn oversubscription_monotonically_hurts_ipc() {
+    for w in [Workload::Bicg, Workload::Atax, Workload::Nw] {
+        let trace = w.generate(Scale::default(), 42);
+        let ipc = |pct: u32| {
+            let spec = RunSpec::new(&trace, pct);
+            run_rule_based(&spec, Strategy::Baseline).outcome.stats.ipc()
+        };
+        let (a, b, c) = (ipc(100), ipc(125), ipc(150));
+        assert!(a >= b && b >= c, "{}: {a} {b} {c}", w.name());
+    }
+}
+
+#[test]
+fn crash_emulation_only_fires_on_runaway() {
+    let trace = Workload::Bicg.generate(Scale::default(), 42);
+    // generous threshold: no crash
+    let spec = RunSpec::new(&trace, 125).with_crash_threshold(u64::MAX / 2);
+    assert!(!run_rule_based(&spec, Strategy::Baseline).outcome.crashed);
+    // absurdly low threshold: must crash on this thrasher
+    let spec = RunSpec::new(&trace, 150).with_crash_threshold(10);
+    assert!(run_rule_based(&spec, Strategy::Baseline).outcome.crashed);
+}
+
+#[test]
+fn determinism_across_runs() {
+    let trace = Workload::Nw.generate(Scale::default(), 42);
+    let spec = RunSpec::new(&trace, 125);
+    let a = run_rule_based(&spec, Strategy::Baseline);
+    let b = run_rule_based(&spec, Strategy::Baseline);
+    assert_eq!(a.outcome.stats.cycles, b.outcome.stats.cycles);
+    assert_eq!(a.outcome.stats.thrash_events, b.outcome.stats.thrash_events);
+}
+
+#[test]
+fn uvmsmart_beats_baseline_on_the_thrashers() {
+    // the SOTA comparator must actually be a comparator: strictly less
+    // thrash than tree+LRU on the random/irregular heavy hitters.
+    for w in [Workload::Atax, Workload::Bicg, Workload::Nw] {
+        let trace = w.generate(Scale::default(), 42);
+        let spec = RunSpec::new(&trace, 125);
+        let base = run_rule_based(&spec, Strategy::Baseline);
+        let smart = run_rule_based(&spec, Strategy::UvmSmart);
+        assert!(
+            smart.outcome.stats.thrash_events < base.outcome.stats.thrash_events,
+            "{}: UVMSmart {} >= baseline {}",
+            w.name(),
+            smart.outcome.stats.thrash_events,
+            base.outcome.stats.thrash_events
+        );
+    }
+}
