@@ -11,24 +11,26 @@
 //! traffic while it manages that same traffic — and reports the paper's
 //! headline metrics (thrash reduction, normalized IPC) against the
 //! baseline and UVMSmart, plus the live training-loss trajectory.
+//! Every cell goes through the strategy registry by name.
 //! Results are recorded in EXPERIMENTS.md §End-to-end.
 //!
 //! Requires `make artifacts`. Run:
 //! `cargo run --release --example end_to_end`
 
-use std::rc::Rc;
 use std::time::Instant;
 
+use uvmio::api::{StrategyCtx, StrategyRegistry};
 use uvmio::config::Scale;
-use uvmio::coordinator::{run_intelligent, run_rule_based, RunSpec, Strategy};
-use uvmio::predictor::IntelligentConfig;
+use uvmio::coordinator::RunSpec;
 use uvmio::runtime::{Manifest, Runtime};
 use uvmio::trace::workloads::Workload;
 
 fn main() -> anyhow::Result<()> {
     let t0 = Instant::now();
+    let registry = StrategyRegistry::builtin();
     let runtime = Runtime::new(&Manifest::default_dir())?;
-    let model = Rc::new(runtime.model("predictor")?);
+    let ctx = StrategyCtx::from_runtime(&runtime)?;
+    let model = ctx.model.as_ref().expect("ctx carries the model");
     println!(
         "loaded predictor: {} params, batch {}, seq {}, {} delta classes",
         model.param_count, model.batch, model.seq_len, model.classes
@@ -44,9 +46,10 @@ fn main() -> anyhow::Result<()> {
     for w in suite {
         let trace = w.generate(Scale::default(), 42);
         let spec = RunSpec::new(&trace, 125);
-        let base = run_rule_based(&spec, Strategy::Baseline);
-        let smart = run_rule_based(&spec, Strategy::UvmSmart);
-        let ours = run_intelligent(&spec, &model, &runtime, IntelligentConfig::default())?;
+        let empty = StrategyCtx::default();
+        let base = registry.run("baseline", &spec, &empty)?;
+        let smart = registry.run("uvmsmart", &spec, &empty)?;
+        let ours = registry.run("intelligent", &spec, &ctx)?;
 
         let s = &ours.outcome.stats;
         let vs_base = s.ipc() / base.outcome.stats.ipc();

@@ -5,7 +5,7 @@
 //! Requires `make artifacts`.
 //! Run: `cargo run --release --example multi_tenant [-- --a NW --b 2DCONV]`
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use uvmio::config::Scale;
 use uvmio::coordinator::{feat_dims, multi_accuracy, TrainOpts};
@@ -31,7 +31,7 @@ fn main() -> anyhow::Result<()> {
     );
 
     let runtime = Runtime::new(&Manifest::default_dir())?;
-    let model = Rc::new(runtime.model("predictor")?);
+    let model = Arc::new(runtime.model("predictor")?);
     let dims = feat_dims(&runtime);
 
     let online = multi_accuracy(&model, &dims, &ta, &tb, &TrainOpts::default())?;

@@ -1,40 +1,42 @@
-//! Oversubscription sweep (Fig 3 driver): how each benchmark's IPC
-//! degrades as the device memory shrinks, under the rule-based
-//! strategies. Pure simulator — no artifacts needed.
+//! Oversubscription sweep (Fig 3 driver) on the parallel sweep-runner
+//! API: how each benchmark's IPC degrades as device memory shrinks,
+//! under any registered strategy. Pure simulator — no artifacts needed —
+//! so every cell fans out across the worker pool.
 //!
 //! Run: `cargo run --release --example oversubscription_sweep [-- --strategy uvmsmart]`
 
-use uvmio::config::Scale;
-use uvmio::coordinator::{run_rule_based, RunSpec, Strategy};
+use uvmio::api::{StrategyCtx, StrategyRegistry, SweepRunner, SweepSpec};
 use uvmio::trace::workloads::Workload;
 use uvmio::util::cli::Args;
 
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env().map_err(anyhow::Error::msg)?;
-    let strategy = match args.get_or("strategy", "baseline") {
-        "baseline" => Strategy::Baseline,
-        "uvmsmart" => Strategy::UvmSmart,
-        "demand-hpe" => Strategy::DemandHpe,
-        "demand-belady" => Strategy::DemandBelady,
-        other => anyhow::bail!("unknown strategy {other}"),
-    };
-    let levels = [100u32, 110, 125, 150, 200];
+    let registry = StrategyRegistry::builtin();
+    let strategy = registry.get(args.get_or("strategy", "baseline"))?.name.clone();
+    let levels = vec![100u32, 110, 125, 150, 200];
 
-    println!("strategy: {}", strategy.name());
+    let sweep = SweepSpec::new(Workload::ALL.to_vec(), vec![strategy.clone()])
+        .with_oversub(levels.clone());
+    let records = SweepRunner::new(&registry)
+        .run(&sweep, &StrategyCtx::default(), &mut [])?;
+
+    println!("strategy: {strategy}");
     println!("{:<12} {:>9} {:>9} {:>9} {:>9} {:>9}", "benchmark",
              "100%", "110%", "125%", "150%", "200%");
-    for w in Workload::ALL {
-        let trace = w.generate(Scale::default(), 42);
-        let mut cells = Vec::new();
-        let base_ipc = {
-            let spec = RunSpec::new(&trace, 100);
-            run_rule_based(&spec, strategy).outcome.stats.ipc()
+    // records arrive in grid order: per workload, one cell per level
+    for (wi, w) in Workload::ALL.iter().enumerate() {
+        let per_w = &records[wi * levels.len()..(wi + 1) * levels.len()];
+        let ipc_of = |i: usize| -> anyhow::Result<f64> {
+            per_w[i]
+                .result
+                .as_ref()
+                .map(|c| c.outcome.stats.ipc())
+                .map_err(|e| anyhow::anyhow!("{}: {e}", per_w[i].cell.workload))
         };
-        for pct in levels {
-            let spec = RunSpec::new(&trace, pct);
-            let ipc = run_rule_based(&spec, strategy).outcome.stats.ipc();
-            cells.push(format!("{:.3}", ipc / base_ipc));
-        }
+        let base_ipc = ipc_of(0)?;
+        let cells: Vec<String> = (0..levels.len())
+            .map(|i| Ok(format!("{:.3}", ipc_of(i)? / base_ipc)))
+            .collect::<anyhow::Result<_>>()?;
         println!(
             "{:<12} {:>9} {:>9} {:>9} {:>9} {:>9}",
             w.name(), cells[0], cells[1], cells[2], cells[3], cells[4]

@@ -3,15 +3,15 @@
 //! Generates the Hotspot benchmark trace, runs it under 125% memory
 //! oversubscription with (a) the CUDA-runtime baseline (tree prefetch +
 //! LRU) and (b) the paper's intelligent framework (Transformer page
-//! predictor via PJRT), and prints the headline comparison.
+//! predictor), and prints the headline comparison. Both cells go through
+//! the open strategy registry — the baseline by name with an empty ctx,
+//! the intelligent framework with a ctx built from the artifact runtime.
 //!
 //! Requires `make artifacts` first. Run: `cargo run --release --example quickstart`
 
-use std::rc::Rc;
-
+use uvmio::api::{StrategyCtx, StrategyRegistry};
 use uvmio::config::Scale;
-use uvmio::coordinator::{run_intelligent, run_rule_based, RunSpec, Strategy};
-use uvmio::predictor::IntelligentConfig;
+use uvmio::coordinator::RunSpec;
 use uvmio::runtime::{Manifest, Runtime};
 use uvmio::trace::workloads::Workload;
 
@@ -27,15 +27,17 @@ fn main() -> anyhow::Result<()> {
     let spec = RunSpec::new(&trace, 125);
     println!("device capacity: {} pages\n", spec.cfg.capacity_pages);
 
-    // 3. baseline: NVIDIA's tree prefetcher + LRU eviction
-    let base = run_rule_based(&spec, Strategy::Baseline);
+    // 3. the strategy registry: every strategy is a name, not an enum
+    let registry = StrategyRegistry::builtin();
 
-    // 4. the intelligent framework: DFA pattern classifier -> pattern-
-    //    specific Transformer predictor (AOT HLO via PJRT) -> policy
-    //    engine (prediction frequency table + page set chain)
+    // 4. baseline: NVIDIA's tree prefetcher + LRU eviction
+    let base = registry.run("baseline", &spec, &StrategyCtx::default())?;
+
+    // 5. the intelligent framework: DFA pattern classifier -> pattern-
+    //    specific Transformer predictor (AOT HLO) -> policy engine
+    //    (prediction frequency table + page set chain)
     let runtime = Runtime::new(&Manifest::default_dir())?;
-    let model = Rc::new(runtime.model("predictor")?);
-    let ours = run_intelligent(&spec, &model, &runtime, IntelligentConfig::default())?;
+    let ours = registry.run("intelligent", &spec, &StrategyCtx::from_runtime(&runtime)?)?;
 
     for (name, cell) in [("baseline", &base), ("intelligent", &ours)] {
         let s = &cell.outcome.stats;

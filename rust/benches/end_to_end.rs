@@ -1,34 +1,57 @@
 //! End-to-end grid-cell benchmarks: the wall-clock cost of regenerating
-//! one (workload × strategy) cell of each paper table, including the
-//! full intelligent framework with live PJRT training when artifacts are
-//! present. These are the numbers that bound `repro exp all`.
+//! one (workload × strategy) cell of each paper table — through the
+//! strategy registry, like every production caller — plus the parallel
+//! sweep runner itself (registry dispatch + threading overhead), and the
+//! full intelligent framework with live training when artifacts are
+//! present. These are the numbers that bound `repro exp all` and
+//! `repro sweep`.
 
 #[path = "common/mod.rs"]
 mod common;
 
-use std::rc::Rc;
-
 use common::Bench;
+use uvmio::api::{StrategyCtx, StrategyRegistry, SweepRunner, SweepSpec};
 use uvmio::config::Scale;
-use uvmio::coordinator::{
-    online_accuracy, run_intelligent, run_rule_based, RunSpec, Strategy,
-    TrainOpts,
-};
+use uvmio::coordinator::{online_accuracy, RunSpec, TrainOpts};
 use uvmio::predictor::features::samples_from_trace;
-use uvmio::predictor::IntelligentConfig;
 use uvmio::runtime::{Manifest, Runtime};
 use uvmio::trace::workloads::Workload;
 
 fn main() {
     let b = Bench::new("end_to_end");
+    let registry = StrategyRegistry::builtin();
+    let empty = StrategyCtx::default();
     let trace = Workload::Hotspot.generate(Scale::default(), 42);
     let events = trace.accesses.len() as u64;
 
-    for s in [Strategy::Baseline, Strategy::UvmSmart, Strategy::DemandBelady] {
+    for s in ["baseline", "uvmsmart", "demand-belady"] {
         let spec = RunSpec::new(&trace, 125);
-        let name = format!("cell/Hotspot@125/{}", s.name());
+        let name = format!("cell/Hotspot@125/{s}");
         b.bench(&name, events, || {
-            std::hint::black_box(run_rule_based(&spec, s));
+            std::hint::black_box(registry.run(s, &spec, &empty).unwrap());
+        });
+    }
+
+    // the sweep runner: 3 workloads × 2 strategies × 2 levels, serial
+    // vs one-thread-per-core (measures dispatch + reorder overhead and
+    // the parallel speedup on rule-based cells)
+    let sweep = SweepSpec::new(
+        vec![Workload::Atax, Workload::Bicg, Workload::Hotspot],
+        vec!["baseline".to_string(), "demand-lru".to_string()],
+    )
+    .with_oversub(vec![110, 125]);
+    let cells = sweep.len() as u64;
+    for threads in [1usize, 0] {
+        let name = format!(
+            "sweep/3x2x2/threads={}",
+            if threads == 0 { "auto".to_string() } else { threads.to_string() }
+        );
+        b.bench(&name, cells, || {
+            let records = SweepRunner::new(&registry)
+                .with_threads(threads)
+                .run(&sweep, &empty, &mut [])
+                .unwrap();
+            std::hint::black_box(records);
         });
     }
 
@@ -38,15 +61,13 @@ fn main() {
         return;
     }
     let runtime = Runtime::new(&dir).expect("runtime");
-    let model = Rc::new(runtime.model("predictor").expect("predictor"));
+    let ctx = StrategyCtx::from_runtime(&runtime).expect("predictor");
+    let model = ctx.model.clone().expect("model");
 
-    // the full framework: simulation + online PJRT training + inference
+    // the full framework: simulation + online training + inference
     let spec = RunSpec::new(&trace, 125);
-    b.bench("cell/Hotspot@125/Intelligent", events, || {
-        std::hint::black_box(
-            run_intelligent(&spec, &model, &runtime, IntelligentConfig::default())
-                .unwrap(),
-        );
+    b.bench("cell/Hotspot@125/intelligent", events, || {
+        std::hint::black_box(registry.run("intelligent", &spec, &ctx).unwrap());
     });
 
     // one accuracy harness pass (Fig 4 cell)

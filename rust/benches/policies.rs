@@ -6,6 +6,9 @@
 mod common;
 
 use common::Bench;
+use uvmio::api::{StrategyCtx, StrategyRegistry};
+use uvmio::config::Scale;
+use uvmio::coordinator::RunSpec;
 use uvmio::policy::belady::{belady_for_sequence, count_misses};
 use uvmio::policy::hpe::Hpe;
 use uvmio::policy::lru::Lru;
@@ -85,5 +88,17 @@ fn main() {
         let v = hpe.select_victim(&mem).unwrap();
         hpe.on_evict(v);
         hpe.on_migrate(v, false);
+    });
+
+    // registry dispatch: name lookup + factory construction must stay
+    // negligible next to a cell run (it happens once per sweep cell)
+    let registry = StrategyRegistry::builtin();
+    let ctx = StrategyCtx::default();
+    let trace = uvmio::trace::workloads::Workload::Hotspot
+        .generate(Scale::default(), 42);
+    let spec = RunSpec::new(&trace, 125);
+    b.bench("registry/build/baseline", 1, || {
+        let spec_entry = registry.get("baseline").unwrap();
+        std::hint::black_box(spec_entry.build(&spec, &ctx).unwrap());
     });
 }

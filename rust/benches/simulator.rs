@@ -1,17 +1,21 @@
 //! Simulator throughput benchmarks: trace-event rate through the engine
 //! under each rule-based strategy — L3 must not be the bottleneck
-//! (DESIGN.md §Perf target: ≥ 5 M events/s single thread).
+//! (DESIGN.md §Perf target: ≥ 5 M events/s single thread). Cells run
+//! through the strategy registry, same as production callers.
 
 #[path = "common/mod.rs"]
 mod common;
 
 use common::Bench;
+use uvmio::api::{StrategyCtx, StrategyRegistry};
 use uvmio::config::Scale;
-use uvmio::coordinator::{run_rule_based, RunSpec, Strategy};
+use uvmio::coordinator::RunSpec;
 use uvmio::trace::workloads::Workload;
 
 fn main() {
     let b = Bench::new("simulator");
+    let registry = StrategyRegistry::builtin();
+    let ctx = StrategyCtx::default();
 
     // trace generation itself
     for w in [Workload::Bicg, Workload::Nw, Workload::Hotspot] {
@@ -26,17 +30,17 @@ fn main() {
     let trace = Workload::Bicg.generate(Scale::default(), 42);
     let events = trace.accesses.len() as u64;
     for s in [
-        Strategy::DemandLru,
-        Strategy::Baseline,
-        Strategy::DemandHpe,
-        Strategy::TreeHpe,
-        Strategy::DemandBelady,
-        Strategy::UvmSmart,
+        "demand-lru",
+        "baseline",
+        "demand-hpe",
+        "tree-hpe",
+        "demand-belady",
+        "uvmsmart",
     ] {
         let spec = RunSpec::new(&trace, 125);
-        let name = format!("engine/BICG/{}", s.name());
+        let name = format!("engine/BICG/{s}");
         b.bench(&name, events, || {
-            std::hint::black_box(run_rule_based(&spec, s));
+            std::hint::black_box(registry.run(s, &spec, &ctx).unwrap());
         });
     }
 
@@ -46,7 +50,7 @@ fn main() {
         let spec = RunSpec::new(&trace, 125);
         let name = format!("engine/Hotspot/scale{factor}");
         b.bench(&name, trace.accesses.len() as u64, || {
-            std::hint::black_box(run_rule_based(&spec, Strategy::Baseline));
+            std::hint::black_box(registry.run("baseline", &spec, &ctx).unwrap());
         });
     }
 }

@@ -1,0 +1,49 @@
+//! # `uvmio::api` — the public strategy & sweep surface
+//!
+//! The paper's whole evaluation is a (workload × strategy ×
+//! oversubscription) grid; this module is the one front door to it:
+//!
+//! * [`StrategyRegistry`] — an **open** registry of named strategies.
+//!   The eight paper strategies come pre-registered
+//!   ([`StrategyRegistry::builtin`]); new ones are a single
+//!   [`StrategyRegistry::register`] call with a [`StrategySpec`]
+//!   (factory + display name + needs-artifacts flag + paper-table
+//!   membership). No enum to extend, no driver fork to mirror.
+//! * [`StrategyRegistry::run`] — execute one grid cell for any
+//!   registered name, with the §V-C prediction-overhead post-pass
+//!   applied uniformly via [`crate::policy::PolicyInstrumentation`].
+//! * [`SweepRunner`] — execute a whole [`SweepSpec`] grid across
+//!   threads, keeping artifact-backed strategies on a serialized lane
+//!   (the PJRT client is not thread-safe), and stream [`CellRecord`]s to
+//!   pluggable [`SweepSink`]s (console / CSV / JSON Lines) in
+//!   deterministic grid order — a parallel run is byte-identical to a
+//!   serial one.
+//!
+//! ```no_run
+//! use uvmio::api::{ConsoleSink, StrategyCtx, StrategyRegistry, SweepRunner,
+//!                  SweepSpec, SweepSink};
+//! use uvmio::trace::workloads::Workload;
+//!
+//! let registry = StrategyRegistry::builtin();
+//! let spec = SweepSpec::new(
+//!     Workload::ALL.to_vec(),
+//!     registry.resolve_list("baseline,uvmsmart,demand-belady").unwrap(),
+//! )
+//! .with_oversub(vec![100, 125, 150]);
+//! let mut sinks: Vec<Box<dyn SweepSink>> = vec![Box::new(ConsoleSink::new())];
+//! let records = SweepRunner::new(&registry)
+//!     .run(&spec, &StrategyCtx::default(), &mut sinks)
+//!     .unwrap();
+//! assert_eq!(records.len(), spec.len());
+//! ```
+
+pub mod registry;
+pub mod sink;
+pub mod sweep;
+
+pub use registry::{
+    CellResult, PaperTable, StrategyCtx, StrategyFactory, StrategyRegistry,
+    StrategySpec,
+};
+pub use sink::{ConsoleSink, CsvSink, JsonlSink, record_to_json, SweepSink};
+pub use sweep::{CellId, CellRecord, SweepRunner, SweepSpec};

@@ -1,0 +1,373 @@
+//! The open strategy registry: named [`StrategySpec`] entries mapping a
+//! kebab-case strategy name to a policy factory plus metadata (paper
+//! display name, artifact requirement, paper-table membership).
+//!
+//! The registry replaces the old closed `Strategy` enum and the forked
+//! `run_rule_based` / `run_intelligent` drivers: every strategy — the
+//! paper's eight and anything registered at runtime — executes through
+//! the single [`StrategyRegistry::run`] path, which drives the engine,
+//! reads [`crate::policy::PolicyInstrumentation`] off the policy, and
+//! applies the §V-C prediction-overhead post-pass uniformly.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::coordinator::{feat_dims, RunSpec};
+use crate::policy::belady::Belady;
+use crate::policy::composite::Composite;
+use crate::policy::hpe::Hpe;
+use crate::policy::lru::Lru;
+use crate::policy::random::RandomEvict;
+use crate::policy::tree_prefetch::TreePrefetcher;
+use crate::policy::uvmsmart::UvmSmart;
+use crate::policy::{DemandOnly, Policy};
+use crate::predictor::{FeatDims, IntelligentConfig, IntelligentPolicy};
+use crate::runtime::{ModelRuntime, Runtime};
+use crate::sim::{Engine, RunOutcome};
+
+/// Paper tables a strategy appears in (metadata only; experiments may
+/// select strategies by membership instead of hard-coding name lists).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PaperTable {
+    /// Table I — rule-based thrashing landscape @125%
+    TableI,
+    /// Table II — the HPE × prefetcher pathology
+    TableII,
+    /// Table VI — the full grid including our solution
+    TableVI,
+}
+
+/// Shared, thread-safe policy factory. Factories must be pure with
+/// respect to the run: everything cell-specific arrives via the
+/// [`RunSpec`] (trace, capacity) and [`StrategyCtx`] (model handles).
+pub type StrategyFactory =
+    Arc<dyn Fn(&RunSpec<'_>, &StrategyCtx) -> Result<Box<dyn Policy>> + Send + Sync>;
+
+/// Everything a factory may need beyond the run itself. Rule-based
+/// strategies ignore it; artifact-backed strategies read the compiled
+/// model handle and feature dimensions from here. Under the `pjrt`
+/// feature the model handle is not `Sync`, which is exactly why the
+/// sweep runner hands workers an empty ctx and keeps `needs_artifacts`
+/// strategies on the serialized lane.
+#[derive(Clone, Default)]
+pub struct StrategyCtx {
+    /// compiled predictor (None for rule-based cells)
+    pub model: Option<Arc<ModelRuntime>>,
+    /// feature dimensions from the artifact manifest
+    pub dims: Option<FeatDims>,
+    /// tunables for the intelligent policy (ablation switches included)
+    pub icfg: IntelligentConfig,
+}
+
+impl StrategyCtx {
+    /// Ctx for artifact-backed strategies: compiles (or reuses) the
+    /// `predictor` model and reads dims off the manifest.
+    pub fn from_runtime(runtime: &Runtime) -> Result<StrategyCtx> {
+        let model = Arc::new(runtime.model("predictor")?);
+        Ok(StrategyCtx {
+            dims: Some(feat_dims(runtime)),
+            model: Some(model),
+            icfg: IntelligentConfig::default(),
+        })
+    }
+
+    /// Ctx from an already-compiled model handle.
+    pub fn with_model(model: Arc<ModelRuntime>, dims: FeatDims) -> StrategyCtx {
+        StrategyCtx {
+            model: Some(model),
+            dims: Some(dims),
+            icfg: IntelligentConfig::default(),
+        }
+    }
+
+    /// Replace the intelligent-policy tunables (ablation runs).
+    pub fn with_icfg(mut self, icfg: IntelligentConfig) -> StrategyCtx {
+        self.icfg = icfg;
+        self
+    }
+}
+
+/// One registered strategy: name, factory, metadata.
+#[derive(Clone)]
+pub struct StrategySpec {
+    /// registry key (kebab-case, lowercase): `"demand-belady"`
+    pub name: String,
+    /// paper display label: `"Demand.+Belady."`
+    pub display: String,
+    /// true when the factory needs a compiled model in the ctx; such
+    /// strategies run on the sweep runner's serialized lane
+    pub needs_artifacts: bool,
+    /// paper-table membership (metadata)
+    pub tables: Vec<PaperTable>,
+    factory: StrategyFactory,
+}
+
+impl StrategySpec {
+    /// A new spec with no table membership and no artifact requirement.
+    pub fn new<F>(name: &str, display: &str, factory: F) -> StrategySpec
+    where
+        F: Fn(&RunSpec<'_>, &StrategyCtx) -> Result<Box<dyn Policy>>
+            + Send
+            + Sync
+            + 'static,
+    {
+        StrategySpec {
+            name: name.to_ascii_lowercase(),
+            display: display.to_string(),
+            needs_artifacts: false,
+            tables: Vec::new(),
+            factory: Arc::new(factory),
+        }
+    }
+
+    /// Mark the strategy as requiring AOT artifacts (model in the ctx).
+    pub fn requiring_artifacts(mut self) -> StrategySpec {
+        self.needs_artifacts = true;
+        self
+    }
+
+    /// Declare paper-table membership.
+    pub fn in_tables(mut self, tables: &[PaperTable]) -> StrategySpec {
+        self.tables = tables.to_vec();
+        self
+    }
+
+    /// Instantiate the policy for one run.
+    pub fn build(
+        &self,
+        spec: &RunSpec<'_>,
+        ctx: &StrategyCtx,
+    ) -> Result<Box<dyn Policy>> {
+        (self.factory)(spec, ctx)
+    }
+}
+
+/// Result of one grid cell, with predictor instrumentation when an
+/// artifact-backed policy ran.
+#[derive(Debug, Clone)]
+pub struct CellResult {
+    pub outcome: RunOutcome,
+    /// registry name of the strategy that ran (`"demand-belady"`)
+    pub strategy: String,
+    /// paper display label (`"Demand.+Belady."`)
+    pub display: String,
+    pub inference_calls: u64,
+    pub model_predictions: u64,
+    pub patterns_used: usize,
+    /// final online training loss (NaN for rule-based strategies)
+    pub last_loss: f32,
+}
+
+/// Open registry of named strategies. Construction order is preserved
+/// (it is the column order of "all"-strategy sweeps and listings).
+pub struct StrategyRegistry {
+    order: Vec<String>,
+    entries: BTreeMap<String, StrategySpec>,
+}
+
+impl StrategyRegistry {
+    /// An empty registry (no strategies).
+    pub fn empty() -> StrategyRegistry {
+        StrategyRegistry { order: Vec::new(), entries: BTreeMap::new() }
+    }
+
+    /// The paper's eight strategies, pre-registered under their CLI
+    /// names: `baseline`, `demand-hpe`, `tree-hpe`, `demand-belady`,
+    /// `demand-lru`, `demand-random`, `uvmsmart`, `intelligent`.
+    pub fn builtin() -> StrategyRegistry {
+        use PaperTable::*;
+        let mut r = StrategyRegistry::empty();
+        let mut reg = |s: StrategySpec| {
+            r.register(s).expect("builtin names are unique");
+        };
+        reg(StrategySpec::new("baseline", "Baseline", baseline_factory)
+            .in_tables(&[TableI, TableVI]));
+        reg(StrategySpec::new("demand-hpe", "Demand.+HPE", demand_hpe_factory)
+            .in_tables(&[TableI, TableII, TableVI]));
+        reg(StrategySpec::new("tree-hpe", "Tree.+HPE", tree_hpe_factory)
+            .in_tables(&[TableII, TableVI]));
+        reg(StrategySpec::new(
+            "demand-belady",
+            "Demand.+Belady.",
+            demand_belady_factory,
+        )
+        .in_tables(&[TableI, TableVI]));
+        reg(StrategySpec::new("demand-lru", "Demand.+LRU", demand_lru_factory));
+        reg(StrategySpec::new(
+            "demand-random",
+            "Demand.+Random",
+            demand_random_factory,
+        ));
+        reg(StrategySpec::new("uvmsmart", "UVMSmart", uvmsmart_factory)
+            .in_tables(&[TableI, TableVI]));
+        reg(StrategySpec::new("intelligent", "Our solution", intelligent_factory)
+            .requiring_artifacts()
+            .in_tables(&[TableVI]));
+        r
+    }
+
+    /// Register a strategy; duplicate names are an error.
+    pub fn register(&mut self, spec: StrategySpec) -> Result<()> {
+        if self.entries.contains_key(&spec.name) {
+            bail!("strategy '{}' already registered", spec.name);
+        }
+        self.order.push(spec.name.clone());
+        self.entries.insert(spec.name.clone(), spec);
+        Ok(())
+    }
+
+    /// Look up a strategy (case-insensitive). Unknown names error with
+    /// the full candidate list.
+    pub fn get(&self, name: &str) -> Result<&StrategySpec> {
+        let key = name.to_ascii_lowercase();
+        self.entries.get(&key).ok_or_else(|| {
+            anyhow!(
+                "unknown strategy '{name}'; registered: {}",
+                self.order.join(", ")
+            )
+        })
+    }
+
+    /// Registered names in registration order.
+    pub fn names(&self) -> Vec<&str> {
+        self.order.iter().map(String::as_str).collect()
+    }
+
+    /// Specs carrying a given paper-table membership, in order.
+    pub fn in_table(&self, table: PaperTable) -> Vec<&StrategySpec> {
+        self.order
+            .iter()
+            .map(|n| &self.entries[n])
+            .filter(|s| s.tables.contains(&table))
+            .collect()
+    }
+
+    /// Resolve a user-facing strategy selector: `"all"` or a
+    /// comma-separated name list. Every name is validated.
+    pub fn resolve_list(&self, selector: &str) -> Result<Vec<String>> {
+        if selector.trim().eq_ignore_ascii_case("all") {
+            return Ok(self.order.clone());
+        }
+        let mut out = Vec::new();
+        for part in selector.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            out.push(self.get(part)?.name.clone());
+        }
+        if out.is_empty() {
+            bail!("empty strategy list; registered: {}", self.order.join(", "));
+        }
+        Ok(out)
+    }
+
+    /// Run one grid cell: build the policy, drive the engine over the
+    /// trace, then apply the §V-C overhead post-pass (one
+    /// `prediction_overhead` charge per batched predictor invocation —
+    /// additive on the final cycle count, equivalent to charging inline
+    /// since nothing else in the timing model depends on absolute time).
+    pub fn run(
+        &self,
+        name: &str,
+        spec: &RunSpec<'_>,
+        ctx: &StrategyCtx,
+    ) -> Result<CellResult> {
+        let entry = self.get(name)?;
+        let mut policy = entry.build(spec, ctx)?;
+        let engine = {
+            let e = Engine::new(spec.cfg.clone());
+            match spec.crash_threshold {
+                Some(t) => e.with_crash_threshold(t),
+                None => e,
+            }
+        };
+        let mut outcome = engine.run(spec.trace, policy.as_mut());
+        let instr = policy.instrumentation();
+        if instr.inference_calls > 0 {
+            let overhead = spec.cfg.prediction_overhead * instr.inference_calls;
+            outcome.stats.cycles += overhead;
+            outcome.stats.prediction_overhead_cycles = overhead;
+            outcome.stats.predictions = instr.predictions;
+        }
+        Ok(CellResult {
+            outcome,
+            strategy: entry.name.clone(),
+            display: entry.display.clone(),
+            inference_calls: instr.inference_calls,
+            model_predictions: instr.predictions,
+            patterns_used: instr.patterns_used,
+            last_loss: instr.last_loss,
+        })
+    }
+}
+
+// ---- builtin factories ----------------------------------------------------
+
+fn baseline_factory(
+    _spec: &RunSpec<'_>,
+    _ctx: &StrategyCtx,
+) -> Result<Box<dyn Policy>> {
+    Ok(Box::new(Composite::new(TreePrefetcher::new(), Lru::new())))
+}
+
+fn demand_hpe_factory(
+    _spec: &RunSpec<'_>,
+    _ctx: &StrategyCtx,
+) -> Result<Box<dyn Policy>> {
+    Ok(Box::new(Composite::new(DemandOnly, Hpe::new())))
+}
+
+fn tree_hpe_factory(
+    _spec: &RunSpec<'_>,
+    _ctx: &StrategyCtx,
+) -> Result<Box<dyn Policy>> {
+    Ok(Box::new(Composite::new(TreePrefetcher::new(), Hpe::new())))
+}
+
+fn demand_belady_factory(
+    spec: &RunSpec<'_>,
+    _ctx: &StrategyCtx,
+) -> Result<Box<dyn Policy>> {
+    Ok(Box::new(Composite::new(DemandOnly, Belady::new(spec.trace))))
+}
+
+fn demand_lru_factory(
+    _spec: &RunSpec<'_>,
+    _ctx: &StrategyCtx,
+) -> Result<Box<dyn Policy>> {
+    Ok(Box::new(Composite::new(DemandOnly, Lru::new())))
+}
+
+fn demand_random_factory(
+    _spec: &RunSpec<'_>,
+    _ctx: &StrategyCtx,
+) -> Result<Box<dyn Policy>> {
+    Ok(Box::new(Composite::new(DemandOnly, RandomEvict::new(7))))
+}
+
+fn uvmsmart_factory(
+    spec: &RunSpec<'_>,
+    _ctx: &StrategyCtx,
+) -> Result<Box<dyn Policy>> {
+    Ok(Box::new(UvmSmart::new(spec.cfg.capacity_pages)))
+}
+
+fn intelligent_factory(
+    _spec: &RunSpec<'_>,
+    ctx: &StrategyCtx,
+) -> Result<Box<dyn Policy>> {
+    let model = ctx.model.clone().ok_or_else(|| {
+        anyhow!(
+            "strategy 'intelligent' needs AOT artifacts: load a Runtime \
+             (run `make artifacts`) and build the ctx with \
+             StrategyCtx::from_runtime"
+        )
+    })?;
+    let dims = ctx.dims.ok_or_else(|| {
+        anyhow!("strategy 'intelligent' needs feature dims in the ctx")
+    })?;
+    Ok(Box::new(IntelligentPolicy::new(model, dims, ctx.icfg.clone())))
+}

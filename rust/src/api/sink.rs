@@ -1,0 +1,318 @@
+//! Pluggable result sinks for the sweep runner: console table, CSV and
+//! JSON Lines. Sinks observe cells in deterministic grid order (the
+//! runner re-orders parallel completions), so file output is
+//! byte-identical between serial and parallel runs.
+
+use std::collections::BTreeMap;
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+use super::sweep::CellRecord;
+
+/// A streaming consumer of sweep results.
+pub trait SweepSink {
+    /// One cell completed (called in grid order).
+    fn on_cell(&mut self, rec: &CellRecord) -> Result<()>;
+
+    /// The sweep finished; flush buffers, print summaries.
+    fn finish(&mut self) -> Result<()> {
+        Ok(())
+    }
+}
+
+/// CSV column order shared by [`CsvSink`] and the console header.
+const COLUMNS: &[&str] = &[
+    "workload",
+    "strategy",
+    "oversub",
+    "seed",
+    "status",
+    "thrash_events",
+    "unique_thrashed",
+    "faults",
+    "hits",
+    "migrations",
+    "evictions",
+    "prefetches",
+    "garbage_prefetches",
+    "zero_copy",
+    "delayed_remote",
+    "cycles",
+    "instructions",
+    "ipc",
+    "inference_calls",
+    "predictions",
+    "error",
+];
+
+fn status_of(rec: &CellRecord) -> &'static str {
+    match &rec.result {
+        Ok(r) if r.outcome.crashed => "crashed",
+        Ok(_) => "ok",
+        Err(_) => "error",
+    }
+}
+
+fn csv_fields(rec: &CellRecord) -> Vec<String> {
+    let c = &rec.cell;
+    let mut row = vec![
+        c.workload.clone(),
+        c.strategy.clone(),
+        c.oversub.to_string(),
+        c.seed.to_string(),
+        status_of(rec).to_string(),
+    ];
+    match &rec.result {
+        Ok(r) => {
+            let s = &r.outcome.stats;
+            row.extend([
+                s.thrash_events.to_string(),
+                s.thrashed_pages.len().to_string(),
+                s.faults.to_string(),
+                s.hits.to_string(),
+                s.migrations.to_string(),
+                s.evictions.to_string(),
+                s.prefetches.to_string(),
+                s.garbage_prefetches.to_string(),
+                s.zero_copy.to_string(),
+                s.delayed_remote.to_string(),
+                s.cycles.to_string(),
+                s.instructions.to_string(),
+                format!("{:.6}", s.ipc()),
+                r.inference_calls.to_string(),
+                s.predictions.to_string(),
+                String::new(),
+            ]);
+        }
+        Err(e) => {
+            row.extend((0..COLUMNS.len() - 6).map(|_| String::new()));
+            row.push(e.clone());
+        }
+    }
+    row
+}
+
+/// A cell as a JSON object (stable key order; NaN → null).
+pub fn record_to_json(rec: &CellRecord) -> Json {
+    let mut m = BTreeMap::new();
+    let c = &rec.cell;
+    m.insert("workload".into(), Json::Str(c.workload.clone()));
+    m.insert("strategy".into(), Json::Str(c.strategy.clone()));
+    m.insert("oversub".into(), Json::Num(c.oversub as f64));
+    // seed as a string: Json numbers are f64-backed, and a u64 seed above
+    // 2^53 would silently round — the CSV and JSONL reports must agree
+    // exactly for a cell to be reproducible
+    m.insert("seed".into(), Json::Str(c.seed.to_string()));
+    m.insert("status".into(), Json::Str(status_of(rec).into()));
+    match &rec.result {
+        Ok(r) => {
+            let s = &r.outcome.stats;
+            let mut st = BTreeMap::new();
+            let mut num = |k: &str, v: u64| {
+                st.insert(k.to_string(), Json::Num(v as f64));
+            };
+            num("accesses", s.accesses);
+            num("instructions", s.instructions);
+            num("cycles", s.cycles);
+            num("tlb_hits", s.tlb_hits);
+            num("tlb_misses", s.tlb_misses);
+            num("hits", s.hits);
+            num("faults", s.faults);
+            num("migrations", s.migrations);
+            num("evictions", s.evictions);
+            num("writebacks", s.writebacks);
+            num("zero_copy", s.zero_copy);
+            num("delayed_remote", s.delayed_remote);
+            num("prefetches", s.prefetches);
+            num("garbage_prefetches", s.garbage_prefetches);
+            num("thrash_events", s.thrash_events);
+            num("unique_thrashed", s.thrashed_pages.len() as u64);
+            num("unique_evicted", s.evicted_pages.len() as u64);
+            num("predictions", s.predictions);
+            num("prediction_overhead_cycles", s.prediction_overhead_cycles);
+            num("policy_victim_fallbacks", s.policy_victim_fallbacks);
+            st.insert("ipc".into(), Json::Num(s.ipc()));
+            m.insert("stats".into(), Json::Obj(st));
+            m.insert("crashed".into(), Json::Bool(r.outcome.crashed));
+            m.insert(
+                "inference_calls".into(),
+                Json::Num(r.inference_calls as f64),
+            );
+            m.insert(
+                "patterns_used".into(),
+                Json::Num(r.patterns_used as f64),
+            );
+            m.insert(
+                "last_loss".into(),
+                if r.last_loss.is_finite() {
+                    Json::Num(r.last_loss as f64)
+                } else {
+                    Json::Null
+                },
+            );
+        }
+        Err(e) => {
+            m.insert("error".into(), Json::Str(e.clone()));
+        }
+    }
+    Json::Obj(m)
+}
+
+/// Aligned console lines, one per cell, plus a closing summary.
+#[derive(Default)]
+pub struct ConsoleSink {
+    cells: usize,
+    crashed: usize,
+    errors: usize,
+    header_printed: bool,
+}
+
+impl ConsoleSink {
+    pub fn new() -> ConsoleSink {
+        ConsoleSink::default()
+    }
+}
+
+impl SweepSink for ConsoleSink {
+    fn on_cell(&mut self, rec: &CellRecord) -> Result<()> {
+        if !self.header_printed {
+            self.header_printed = true;
+            println!(
+                "{:<12} {:<14} {:>7} {:>6} {:>9} {:>9} {:>9} {:>8} {:>8}",
+                "workload", "strategy", "oversub", "seed", "thrash",
+                "faults", "prefetch", "IPC", "status"
+            );
+        }
+        self.cells += 1;
+        let c = &rec.cell;
+        match &rec.result {
+            Ok(r) => {
+                let s = &r.outcome.stats;
+                if r.outcome.crashed {
+                    self.crashed += 1;
+                }
+                println!(
+                    "{:<12} {:<14} {:>6}% {:>6} {:>9} {:>9} {:>9} {:>8.4} {:>8}",
+                    c.workload,
+                    c.strategy,
+                    c.oversub,
+                    c.seed,
+                    s.thrash_events,
+                    s.faults,
+                    s.prefetches,
+                    s.ipc(),
+                    status_of(rec)
+                );
+            }
+            Err(e) => {
+                self.errors += 1;
+                println!(
+                    "{:<12} {:<14} {:>6}% {:>6} {:>9} {:>9} {:>9} {:>8} {:>8}  {e}",
+                    c.workload, c.strategy, c.oversub, c.seed, "-", "-", "-",
+                    "-", "error"
+                );
+            }
+        }
+        Ok(())
+    }
+
+    fn finish(&mut self) -> Result<()> {
+        println!(
+            "sweep: {} cells ({} crashed, {} errors)",
+            self.cells, self.crashed, self.errors
+        );
+        Ok(())
+    }
+}
+
+/// RFC-4180-ish CSV over any writer.
+pub struct CsvSink<W: Write> {
+    w: W,
+    header_written: bool,
+}
+
+impl CsvSink<BufWriter<File>> {
+    /// CSV straight to `path`, creating parent directories.
+    pub fn to_path(path: &Path) -> Result<CsvSink<BufWriter<File>>> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("creating {}", dir.display()))?;
+        }
+        let f = File::create(path)
+            .with_context(|| format!("creating {}", path.display()))?;
+        Ok(CsvSink::new(BufWriter::new(f)))
+    }
+}
+
+impl<W: Write> CsvSink<W> {
+    pub fn new(w: W) -> CsvSink<W> {
+        CsvSink { w, header_written: false }
+    }
+}
+
+fn csv_escape(s: &str) -> String {
+    if s.contains(',') || s.contains('"') || s.contains('\n') {
+        format!("\"{}\"", s.replace('"', "\"\""))
+    } else {
+        s.to_string()
+    }
+}
+
+impl<W: Write> SweepSink for CsvSink<W> {
+    fn on_cell(&mut self, rec: &CellRecord) -> Result<()> {
+        if !self.header_written {
+            self.header_written = true;
+            writeln!(self.w, "{}", COLUMNS.join(","))?;
+        }
+        let row: Vec<String> =
+            csv_fields(rec).iter().map(|f| csv_escape(f)).collect();
+        writeln!(self.w, "{}", row.join(","))?;
+        Ok(())
+    }
+
+    fn finish(&mut self) -> Result<()> {
+        self.w.flush()?;
+        Ok(())
+    }
+}
+
+/// JSON Lines (one compact object per cell) over any writer.
+pub struct JsonlSink<W: Write> {
+    w: W,
+}
+
+impl JsonlSink<BufWriter<File>> {
+    /// JSONL straight to `path`, creating parent directories.
+    pub fn to_path(path: &Path) -> Result<JsonlSink<BufWriter<File>>> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("creating {}", dir.display()))?;
+        }
+        let f = File::create(path)
+            .with_context(|| format!("creating {}", path.display()))?;
+        Ok(JsonlSink::new(BufWriter::new(f)))
+    }
+}
+
+impl<W: Write> JsonlSink<W> {
+    pub fn new(w: W) -> JsonlSink<W> {
+        JsonlSink { w }
+    }
+}
+
+impl<W: Write> SweepSink for JsonlSink<W> {
+    fn on_cell(&mut self, rec: &CellRecord) -> Result<()> {
+        writeln!(self.w, "{}", record_to_json(rec).compact())?;
+        Ok(())
+    }
+
+    fn finish(&mut self) -> Result<()> {
+        self.w.flush()?;
+        Ok(())
+    }
+}

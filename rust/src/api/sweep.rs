@@ -1,0 +1,268 @@
+//! The sweep runner: executes a (workload × strategy × oversubscription
+//! × seed) grid across threads and streams per-cell results to pluggable
+//! sinks in deterministic cell order.
+//!
+//! Threading model: every cell is an independent, deterministic
+//! simulation, so rule-based cells fan out across a worker pool (each
+//! worker regenerates its own trace — traces are cheap relative to the
+//! engine run and sharing them would serialize on nothing). Strategies
+//! whose spec is `needs_artifacts` run on the caller's thread instead:
+//! under the `pjrt` feature the compiled-model handle is not `Sync`
+//! (PJRT's CPU client is single-threaded), so those cells share one
+//! serialized lane with the ctx that owns the model. Results are
+//! re-ordered onto the original grid order before they reach the sinks,
+//! which makes a parallel run byte-identical to a serial one.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::thread;
+
+use anyhow::{bail, Result};
+
+use crate::config::Scale;
+use crate::coordinator::RunSpec;
+use crate::trace::workloads::Workload;
+
+use super::registry::{CellResult, StrategyCtx, StrategyRegistry};
+use super::sink::SweepSink;
+
+/// The grid a sweep covers. Cell order (the order sinks observe) is the
+/// nested product: workload → strategy → oversubscription → seed.
+#[derive(Debug, Clone)]
+pub struct SweepSpec {
+    pub workloads: Vec<Workload>,
+    /// registry names; validate with [`StrategyRegistry::resolve_list`]
+    pub strategies: Vec<String>,
+    /// oversubscription levels in percent (100 = no oversubscription)
+    pub oversub: Vec<u32>,
+    pub seeds: Vec<u64>,
+    pub scale: Scale,
+    /// crash emulation threshold applied to every cell (thrash events)
+    pub crash_threshold: Option<u64>,
+}
+
+impl SweepSpec {
+    /// A sweep over the given workloads and strategies @125%, seed 42.
+    pub fn new(workloads: Vec<Workload>, strategies: Vec<String>) -> SweepSpec {
+        SweepSpec {
+            workloads,
+            strategies,
+            oversub: vec![125],
+            seeds: vec![42],
+            scale: Scale::default(),
+            crash_threshold: None,
+        }
+    }
+
+    pub fn with_oversub(mut self, levels: Vec<u32>) -> SweepSpec {
+        self.oversub = levels;
+        self
+    }
+
+    pub fn with_seeds(mut self, seeds: Vec<u64>) -> SweepSpec {
+        self.seeds = seeds;
+        self
+    }
+
+    pub fn with_scale(mut self, scale: Scale) -> SweepSpec {
+        self.scale = scale;
+        self
+    }
+
+    pub fn with_crash_threshold(mut self, t: u64) -> SweepSpec {
+        self.crash_threshold = Some(t);
+        self
+    }
+
+    /// Number of grid cells.
+    pub fn len(&self) -> usize {
+        self.workloads.len()
+            * self.strategies.len()
+            * self.oversub.len()
+            * self.seeds.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Coordinates of one cell (as sinks and reports see them).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CellId {
+    pub workload: String,
+    pub strategy: String,
+    pub oversub: u32,
+    pub seed: u64,
+}
+
+/// One executed cell: its coordinates plus either the full result or the
+/// error string (a failed cell never aborts the sweep).
+#[derive(Debug, Clone)]
+pub struct CellRecord {
+    pub cell: CellId,
+    pub result: Result<CellResult, String>,
+}
+
+/// Internal cell definition (keeps the `Workload` enum for generation).
+#[derive(Debug, Clone)]
+struct Cell {
+    workload: Workload,
+    strategy: String,
+    oversub: u32,
+    seed: u64,
+}
+
+/// Parallel executor over a [`SweepSpec`]. See the module docs for the
+/// threading model.
+pub struct SweepRunner<'r> {
+    registry: &'r StrategyRegistry,
+    threads: usize,
+}
+
+impl<'r> SweepRunner<'r> {
+    pub fn new(registry: &'r StrategyRegistry) -> SweepRunner<'r> {
+        SweepRunner { registry, threads: 0 }
+    }
+
+    /// Worker-thread count for the parallel lane (0 = one per core).
+    pub fn with_threads(mut self, threads: usize) -> SweepRunner<'r> {
+        self.threads = threads;
+        self
+    }
+
+    /// Execute the sweep. `ctx` is consulted only by `needs_artifacts`
+    /// strategies (serialized lane); workers run with an empty ctx.
+    /// Returns all records in grid order; sinks observe the same order.
+    pub fn run(
+        &self,
+        sweep: &SweepSpec,
+        ctx: &StrategyCtx,
+        sinks: &mut [Box<dyn SweepSink + '_>],
+    ) -> Result<Vec<CellRecord>> {
+        if sweep.is_empty() {
+            bail!("empty sweep: need ≥1 workload, strategy, oversub level and seed");
+        }
+        // fail fast on unknown strategy names (with the candidate list)
+        let mut serialized = Vec::with_capacity(sweep.strategies.len());
+        for name in &sweep.strategies {
+            serialized.push(self.registry.get(name)?.needs_artifacts);
+        }
+
+        let mut cells = Vec::with_capacity(sweep.len());
+        let mut parallel_idx = Vec::new();
+        let mut serial_idx = Vec::new();
+        for &w in &sweep.workloads {
+            for (si, strategy) in sweep.strategies.iter().enumerate() {
+                for &oversub in &sweep.oversub {
+                    for &seed in &sweep.seeds {
+                        let idx = cells.len();
+                        if serialized[si] {
+                            serial_idx.push(idx);
+                        } else {
+                            parallel_idx.push(idx);
+                        }
+                        cells.push(Cell {
+                            workload: w,
+                            strategy: strategy.clone(),
+                            oversub,
+                            seed,
+                        });
+                    }
+                }
+            }
+        }
+
+        let threads = if self.threads == 0 {
+            thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            self.threads
+        }
+        .min(parallel_idx.len().max(1));
+
+        let registry = self.registry;
+        let next = AtomicUsize::new(0);
+        let (tx, rx) = mpsc::channel::<(usize, CellRecord)>();
+        let mut ordered: Vec<Option<CellRecord>> = vec![None; cells.len()];
+
+        thread::scope(|s| -> Result<()> {
+            let cells = &cells;
+            let parallel_idx = &parallel_idx;
+            let next = &next;
+            for _ in 0..threads {
+                let tx = tx.clone();
+                s.spawn(move || {
+                    let worker_ctx = StrategyCtx::default();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= parallel_idx.len() {
+                            break;
+                        }
+                        let ci = parallel_idx[i];
+                        let rec = run_one(registry, sweep, &cells[ci], &worker_ctx);
+                        if tx.send((ci, rec)).is_err() {
+                            break; // receiver gone: sweep aborted
+                        }
+                    }
+                });
+            }
+
+            // serialized lane: artifact-backed cells, on this thread,
+            // with the caller's ctx (owns the compiled model)
+            for &ci in &serial_idx {
+                let rec = run_one(registry, sweep, &cells[ci], ctx);
+                let _ = tx.send((ci, rec));
+            }
+            drop(tx);
+
+            // stream to sinks in grid order (reorder buffer)
+            let mut pending: BTreeMap<usize, CellRecord> = BTreeMap::new();
+            let mut emit_next = 0usize;
+            for (idx, rec) in rx {
+                pending.insert(idx, rec);
+                while let Some(rec) = pending.remove(&emit_next) {
+                    for sink in sinks.iter_mut() {
+                        sink.on_cell(&rec)?;
+                    }
+                    ordered[emit_next] = Some(rec);
+                    emit_next += 1;
+                }
+            }
+            for sink in sinks.iter_mut() {
+                sink.finish()?;
+            }
+            Ok(())
+        })?;
+
+        Ok(ordered
+            .into_iter()
+            .map(|r| r.expect("every cell produced a record"))
+            .collect())
+    }
+}
+
+fn run_one(
+    registry: &StrategyRegistry,
+    sweep: &SweepSpec,
+    cell: &Cell,
+    ctx: &StrategyCtx,
+) -> CellRecord {
+    let trace = cell.workload.generate(sweep.scale, cell.seed);
+    let mut spec = RunSpec::new(&trace, cell.oversub);
+    if let Some(t) = sweep.crash_threshold {
+        spec = spec.with_crash_threshold(t);
+    }
+    let result = registry
+        .run(&cell.strategy, &spec, ctx)
+        .map_err(|e| format!("{e:#}"));
+    CellRecord {
+        cell: CellId {
+            workload: cell.workload.name().to_string(),
+            strategy: cell.strategy.clone(),
+            oversub: cell.oversub,
+            seed: cell.seed,
+        },
+        result,
+    }
+}

@@ -1,31 +1,33 @@
-//! Simulation drivers: run a (trace × strategy) cell of the paper's
-//! evaluation grid and post-process prediction overhead.
+//! Run-spec plumbing plus **deprecated shims** over [`crate::api`].
 //!
-//! The overhead model follows §V-C: every batched predictor invocation
-//! charges `prediction_overhead` cycles (the Fig 13 sensitivity axis
-//! sweeps 1→100 µs). The charge is additive on the final cycle count —
-//! equivalent to charging inline, since nothing else in the timing model
-//! depends on absolute time.
+//! The (trace × strategy) drivers that used to live here — a closed
+//! `Strategy` enum and the forked `run_rule_based` / `run_intelligent`
+//! pair — are now thin wrappers over the open strategy registry:
+//! [`crate::api::StrategyRegistry`] owns the strategy catalogue and the
+//! single execution path (including the §V-C prediction-overhead
+//! post-pass). New code should call the registry directly; the shims
+//! exist so historical callers keep compiling during the migration and
+//! will be removed once nothing links against them.
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use anyhow::Result;
 
+use crate::api::{StrategyCtx, StrategyRegistry};
 use crate::config::SimConfig;
-use crate::policy::belady::Belady;
-use crate::policy::composite::Composite;
-use crate::policy::hpe::Hpe;
-use crate::policy::lru::Lru;
-use crate::policy::random::RandomEvict;
-use crate::policy::tree_prefetch::TreePrefetcher;
-use crate::policy::uvmsmart::UvmSmart;
-use crate::policy::DemandOnly;
-use crate::predictor::{FeatDims, IntelligentConfig, IntelligentPolicy};
+use crate::predictor::{FeatDims, IntelligentConfig};
 use crate::runtime::{ModelRuntime, Runtime};
-use crate::sim::{Engine, RunOutcome};
+use crate::sim::RunOutcome;
 use crate::trace::Trace;
 
+pub use crate::api::CellResult;
+
 /// The named strategies of the paper's tables.
+#[deprecated(
+    since = "0.2.0",
+    note = "the strategy set is open now — use registry names \
+            (uvmio::api::StrategyRegistry) instead of enum variants"
+)]
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Strategy {
     /// Tree prefetcher + LRU (the CUDA runtime; "Baseline")
@@ -46,6 +48,7 @@ pub enum Strategy {
     Intelligent,
 }
 
+#[allow(deprecated)]
 impl Strategy {
     pub const TABLE6: [Strategy; 6] = [
         Strategy::Baseline,
@@ -55,6 +58,20 @@ impl Strategy {
         Strategy::DemandHpe,
         Strategy::DemandBelady,
     ];
+
+    /// Registry key of this variant (the open-world strategy name).
+    pub fn registry_name(&self) -> &'static str {
+        match self {
+            Strategy::Baseline => "baseline",
+            Strategy::DemandHpe => "demand-hpe",
+            Strategy::TreeHpe => "tree-hpe",
+            Strategy::DemandBelady => "demand-belady",
+            Strategy::DemandLru => "demand-lru",
+            Strategy::DemandRandom => "demand-random",
+            Strategy::UvmSmart => "uvmsmart",
+            Strategy::Intelligent => "intelligent",
+        }
+    }
 
     pub fn name(&self) -> &'static str {
         match self {
@@ -94,89 +111,37 @@ impl<'a> RunSpec<'a> {
     }
 }
 
-/// Result of one grid cell, with predictor instrumentation when the
-/// intelligent policy ran.
-pub struct CellResult {
-    pub outcome: RunOutcome,
-    pub strategy: Strategy,
-    pub inference_calls: u64,
-    pub model_predictions: u64,
-    pub patterns_used: usize,
-    /// final online training loss (NaN for rule-based strategies)
-    pub last_loss: f32,
-}
-
-fn engine_for(spec: &RunSpec) -> Engine {
-    let e = Engine::new(spec.cfg.clone());
-    match spec.crash_threshold {
-        Some(t) => e.with_crash_threshold(t),
-        None => e,
-    }
-}
-
 /// Run a rule-based strategy (everything except `Intelligent`).
+#[deprecated(
+    since = "0.2.0",
+    note = "use uvmio::api::StrategyRegistry::run with a registry name"
+)]
+#[allow(deprecated)]
 pub fn run_rule_based(spec: &RunSpec, strategy: Strategy) -> CellResult {
-    let outcome = match strategy {
-        Strategy::Baseline => engine_for(spec).run(
-            spec.trace,
-            &mut Composite::new(TreePrefetcher::new(), Lru::new()),
-        ),
-        Strategy::DemandHpe => engine_for(spec)
-            .run(spec.trace, &mut Composite::new(DemandOnly, Hpe::new())),
-        Strategy::TreeHpe => engine_for(spec).run(
-            spec.trace,
-            &mut Composite::new(TreePrefetcher::new(), Hpe::new()),
-        ),
-        Strategy::DemandBelady => engine_for(spec).run(
-            spec.trace,
-            &mut Composite::new(DemandOnly, Belady::new(spec.trace)),
-        ),
-        Strategy::DemandLru => engine_for(spec)
-            .run(spec.trace, &mut Composite::new(DemandOnly, Lru::new())),
-        Strategy::DemandRandom => engine_for(spec).run(
-            spec.trace,
-            &mut Composite::new(DemandOnly, RandomEvict::new(7)),
-        ),
-        Strategy::UvmSmart => engine_for(spec)
-            .run(spec.trace, &mut UvmSmart::new(spec.cfg.capacity_pages)),
-        Strategy::Intelligent => {
-            panic!("use run_intelligent for the learning-based strategy")
-        }
-    };
-    CellResult {
-        outcome,
-        strategy,
-        inference_calls: 0,
-        model_predictions: 0,
-        patterns_used: 0,
-        last_loss: f32::NAN,
+    if strategy == Strategy::Intelligent {
+        panic!("use run_intelligent for the learning-based strategy");
     }
+    StrategyRegistry::builtin()
+        .run(strategy.registry_name(), spec, &StrategyCtx::default())
+        .expect("rule-based strategies cannot fail to construct")
 }
 
 /// Run the intelligent framework. Charges the per-invocation prediction
 /// overhead (§V-C) onto the final cycle count.
+#[deprecated(
+    since = "0.2.0",
+    note = "use uvmio::api::StrategyRegistry::run(\"intelligent\", ..) \
+            with a StrategyCtx built from the runtime"
+)]
 pub fn run_intelligent(
     spec: &RunSpec,
-    rt: &Rc<ModelRuntime>,
+    rt: &Arc<ModelRuntime>,
     runtime: &Runtime,
     icfg: IntelligentConfig,
 ) -> Result<CellResult> {
-    let dims = feat_dims(runtime);
-    let mut policy = IntelligentPolicy::new(Rc::clone(rt), dims, icfg);
-    let mut outcome = engine_for(spec).run(spec.trace, &mut policy);
-    // prediction-overhead injection: one charge per batched invocation
-    let overhead = spec.cfg.prediction_overhead * policy.inference_calls;
-    outcome.stats.cycles += overhead;
-    outcome.stats.prediction_overhead_cycles = overhead;
-    outcome.stats.predictions = policy.predictions;
-    Ok(CellResult {
-        outcome,
-        strategy: Strategy::Intelligent,
-        inference_calls: policy.inference_calls,
-        model_predictions: policy.predictions,
-        patterns_used: policy.patterns_used(),
-        last_loss: policy.last_loss,
-    })
+    let ctx = StrategyCtx::with_model(Arc::clone(rt), feat_dims(runtime))
+        .with_icfg(icfg);
+    StrategyRegistry::builtin().run("intelligent", spec, &ctx)
 }
 
 /// FeatDims straight from the manifest (single source of truth).

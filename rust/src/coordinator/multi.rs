@@ -6,7 +6,7 @@
 //! paper's scalability measurement.
 
 use std::collections::HashSet;
-use std::rc::Rc;
+use std::sync::Arc;
 
 use anyhow::Result;
 
@@ -36,7 +36,7 @@ pub struct MultiReport {
 /// Run the online (or ours, per `opts`) methodology on two interleaved
 /// workloads and report per-tenant top-1 accuracy.
 pub fn multi_accuracy(
-    rt: &Rc<ModelRuntime>,
+    rt: &Arc<ModelRuntime>,
     dims: &FeatDims,
     a: &Trace,
     b: &Trace,

@@ -14,7 +14,7 @@
 //!   from the simulator when available).
 
 use std::collections::HashSet;
-use std::rc::Rc;
+use std::sync::Arc;
 
 use anyhow::Result;
 
@@ -112,7 +112,7 @@ fn eval_top1(
 /// `TrainOpts::ours()` turns them all on). `thrash_pages`, when given,
 /// provides the E∪T page set for the µ term.
 pub fn online_accuracy(
-    rt: &Rc<ModelRuntime>,
+    rt: &Arc<ModelRuntime>,
     dims: &FeatDims,
     samples: &[Sample],
     opts: &TrainOpts,
@@ -204,7 +204,7 @@ pub fn online_accuracy(
 /// samples, then predict everything in temporal order — the paper's
 /// accuracy upper bound.
 pub fn offline_accuracy(
-    rt: &Rc<ModelRuntime>,
+    rt: &Arc<ModelRuntime>,
     dims: &FeatDims,
     samples: &[Sample],
     opts: &TrainOpts,

@@ -8,8 +8,7 @@ use std::collections::HashSet;
 use anyhow::Result;
 
 use crate::coordinator::{
-    multi_accuracy, offline_accuracy, online_accuracy, run_intelligent,
-    run_rule_based, RunSpec, Strategy, TrainOpts,
+    multi_accuracy, offline_accuracy, online_accuracy, RunSpec, TrainOpts,
 };
 use crate::predictor::features::samples_from_trace;
 use crate::predictor::{FeatDims, IntelligentConfig};
@@ -211,9 +210,12 @@ pub fn fig12(ctx: &mut ExpContext) -> Result<()> {
         let trace = w.generate(ctx.opts.scale, ctx.opts.seed);
         let spec = RunSpec::new(&trace, 125);
         let run_mu = |ctx: &mut ExpContext, mu: f32| -> Result<u64> {
-            let (runtime, _) = ctx.predictor()?;
-            let cfg = IntelligentConfig { mu, ..Default::default() };
-            Ok(run_intelligent(&spec, &model, runtime, cfg)?
+            let sctx = ctx
+                .strategy_ctx()?
+                .with_icfg(IntelligentConfig { mu, ..Default::default() });
+            Ok(ctx
+                .registry
+                .run("intelligent", &spec, &sctx)?
                 .outcome
                 .stats
                 .thrash_events)
@@ -222,7 +224,7 @@ pub fn fig12(ctx: &mut ExpContext) -> Result<()> {
         let thrash_with = run_mu(ctx, 0.2)?;
 
         // accuracy side: E ∪ T from a baseline run feeds the mask
-        let base = run_rule_based(&spec, Strategy::Baseline);
+        let base = ctx.run_cell(&spec, "baseline")?;
         let mut pages: HashSet<u64> =
             base.outcome.stats.evicted_pages.clone();
         pages.extend(base.outcome.stats.thrashed_pages.iter().copied());

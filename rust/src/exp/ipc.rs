@@ -1,14 +1,11 @@
 //! IPC experiments: Fig 3 (oversubscription slowdown), Fig 13
 //! (prediction-overhead sensitivity) and Fig 14 (ours vs UVMSmart under
-//! 125% / 150%).
+//! 125% / 150%). All cells run through the strategy registry by name.
 
 use anyhow::Result;
 
 use crate::config::us_to_cycles;
-use crate::coordinator::{
-    run_intelligent, run_rule_based, RunSpec, Strategy,
-};
-use crate::predictor::IntelligentConfig;
+use crate::coordinator::RunSpec;
 use crate::trace::workloads::Workload;
 use crate::util::csv::{fnum, Table};
 
@@ -24,12 +21,12 @@ pub fn fig3(ctx: &mut ExpContext) -> Result<()> {
     let mut slow125 = Vec::new();
     for w in Workload::ALL {
         let trace = w.generate(ctx.opts.scale, ctx.opts.seed);
-        let ipc_at = |pct: u32| {
+        let mut ipc_at = |pct: u32| -> Result<f64> {
             let spec = RunSpec::new(&trace, pct);
-            run_rule_based(&spec, Strategy::Baseline).outcome.stats.ipc()
+            Ok(ctx.run_cell(&spec, "baseline")?.outcome.stats.ipc())
         };
         let (i100, i110, i125, i150) =
-            (ipc_at(100), ipc_at(110), ipc_at(125), ipc_at(150));
+            (ipc_at(100)?, ipc_at(110)?, ipc_at(125)?, ipc_at(150)?);
         let s125 = 100.0 * (1.0 - i125 / i100);
         let s150 = 100.0 * (1.0 - i150 / i100);
         slow125.push(s125);
@@ -57,7 +54,6 @@ pub fn fig3(ctx: &mut ExpContext) -> Result<()> {
 /// additive, §V-C), so each benchmark runs ONCE and the sweep is exact
 /// arithmetic on the invocation count.
 pub fn fig13(ctx: &mut ExpContext) -> Result<()> {
-    let (_, model) = ctx.predictor()?;
     let levels_us = [1.0, 10.0, 20.0, 50.0, 100.0];
     let workloads: Vec<Workload> = if ctx.opts.quick {
         vec![Workload::Atax, Workload::Nw, Workload::Hotspot]
@@ -72,10 +68,8 @@ pub fn fig13(ctx: &mut ExpContext) -> Result<()> {
     for w in &workloads {
         let trace = w.generate(ctx.opts.scale, ctx.opts.seed);
         let spec = RunSpec::new(&trace, 125);
-        let smart = run_rule_based(&spec, Strategy::UvmSmart);
-        let (runtime, _) = ctx.predictor()?;
-        let ours =
-            run_intelligent(&spec, &model, runtime, IntelligentConfig::default())?;
+        let smart = ctx.run_cell(&spec, "uvmsmart")?;
+        let ours = ctx.run_cell(&spec, "intelligent")?;
         // strip the default overhead back out, then sweep
         let raw_cycles =
             ours.outcome.stats.cycles - ours.outcome.stats.prediction_overhead_cycles;
@@ -104,7 +98,6 @@ pub fn fig13(ctx: &mut ExpContext) -> Result<()> {
 /// oversubscription) for UVMSmart and our solution @125% and @150%, with
 /// crash emulation at 150%.
 pub fn fig14(ctx: &mut ExpContext) -> Result<()> {
-    let (_, model) = ctx.predictor()?;
     let workloads: Vec<Workload> = if ctx.opts.quick {
         vec![Workload::Atax, Workload::Nw, Workload::Bicg, Workload::Hotspot]
     } else {
@@ -126,16 +119,10 @@ pub fn fig14(ctx: &mut ExpContext) -> Result<()> {
             if pct >= 150 {
                 spec = spec.with_crash_threshold(crash_at);
             }
-            let base = run_rule_based(&spec, Strategy::Baseline);
+            let base = ctx.run_cell(&spec, "baseline")?;
             let base_ipc = base.outcome.stats.ipc();
-            let smart = run_rule_based(&spec, Strategy::UvmSmart);
-            let (runtime, _) = ctx.predictor()?;
-            let ours = run_intelligent(
-                &spec,
-                &model,
-                runtime,
-                IntelligentConfig::default(),
-            )?;
+            let smart = ctx.run_cell(&spec, "uvmsmart")?;
+            let ours = ctx.run_cell(&spec, "intelligent")?;
             for (mi, cell) in [&smart.outcome, &ours.outcome].into_iter().enumerate() {
                 if cell.crashed {
                     cells.push("CRASH".to_string());

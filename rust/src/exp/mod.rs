@@ -2,19 +2,20 @@
 //! evaluation (DESIGN.md §Experiment index). `repro exp <id>` regenerates
 //! the table/series; `repro exp all` runs the suite. Every experiment
 //! prints a console table AND writes `reports/<id>.csv`.
-
-pub mod accuracy;
-pub mod footprint;
-pub mod ipc;
-pub mod thrash;
-pub mod traces;
+//!
+//! Grid cells run through [`crate::api::StrategyRegistry`] by name —
+//! [`ExpContext::run_cell`] is the one-liner the experiment modules use;
+//! it builds the artifact-backed [`StrategyCtx`] lazily only for
+//! strategies that need one.
 
 use std::path::PathBuf;
-use std::rc::Rc;
+use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
+use crate::api::{CellResult, StrategyCtx, StrategyRegistry};
 use crate::config::Scale;
+use crate::coordinator::RunSpec;
 use crate::runtime::{ModelRuntime, Runtime};
 
 /// Options shared by all experiments.
@@ -39,19 +40,22 @@ impl Default for ExpOpts {
     }
 }
 
-/// Lazily-initialised PJRT context shared across experiments in one
+/// Lazily-initialised runtime context shared across experiments in one
 /// `exp all` invocation (compiling an executable trio costs seconds, so
-/// compiled models are cached by name).
+/// compiled models are cached by name), plus the open strategy registry
+/// every grid cell resolves against.
 pub struct ExpContext {
     pub opts: ExpOpts,
+    pub registry: StrategyRegistry,
     runtime: Option<Runtime>,
-    models: std::collections::HashMap<String, Rc<ModelRuntime>>,
+    models: std::collections::HashMap<String, Arc<ModelRuntime>>,
 }
 
 impl ExpContext {
     pub fn new(opts: ExpOpts) -> ExpContext {
         ExpContext {
             opts,
+            registry: StrategyRegistry::builtin(),
             runtime: None,
             models: std::collections::HashMap::new(),
         }
@@ -65,21 +69,51 @@ impl ExpContext {
     }
 
     /// Compile (or fetch cached) executables for a model by name.
-    pub fn model(&mut self, name: &str) -> Result<Rc<ModelRuntime>> {
+    pub fn model(&mut self, name: &str) -> Result<Arc<ModelRuntime>> {
         if !self.models.contains_key(name) {
             self.ensure_runtime()?;
-            let model = Rc::new(self.runtime.as_ref().unwrap().model(name)?);
+            let model = Arc::new(self.runtime.as_ref().unwrap().model(name)?);
             self.models.insert(name.to_string(), model);
         }
-        Ok(Rc::clone(&self.models[name]))
+        Ok(Arc::clone(&self.models[name]))
     }
 
-    /// The PJRT runtime + compiled predictor, loading on first use.
-    pub fn predictor(&mut self) -> Result<(&Runtime, Rc<ModelRuntime>)> {
+    /// The runtime + compiled predictor, loading on first use.
+    pub fn predictor(&mut self) -> Result<(&Runtime, Arc<ModelRuntime>)> {
         let model = self.model("predictor")?;
         Ok((self.runtime.as_ref().unwrap(), model))
     }
+
+    /// Strategy ctx carrying the compiled predictor (artifact-backed
+    /// strategies); loads the runtime on first use.
+    pub fn strategy_ctx(&mut self) -> Result<StrategyCtx> {
+        let (runtime, model) = self.predictor()?;
+        let dims = crate::coordinator::feat_dims(runtime);
+        Ok(StrategyCtx::with_model(model, dims))
+    }
+
+    /// Run one grid cell by registry name, wiring the artifact ctx only
+    /// when the strategy declares it needs one.
+    pub fn run_cell(
+        &mut self,
+        spec: &RunSpec<'_>,
+        strategy: &str,
+    ) -> Result<CellResult> {
+        let needs = self.registry.get(strategy)?.needs_artifacts;
+        let ctx = if needs {
+            self.strategy_ctx()?
+        } else {
+            StrategyCtx::default()
+        };
+        self.registry.run(strategy, spec, &ctx)
+    }
 }
+
+pub mod accuracy;
+pub mod footprint;
+pub mod ipc;
+pub mod thrash;
+pub mod traces;
 
 pub const ALL: &[&str] = &[
     "table1", "table2", "table3", "table4", "table6", "table7", "fig3",

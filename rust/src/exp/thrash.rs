@@ -1,11 +1,10 @@
 //! Thrashing tables: Table I (rule-based strategies), Table II (the
 //! HPE × prefetcher pathology) and Table VI (the full grid including
-//! our solution).
+//! our solution). All cells run through the strategy registry by name.
 
 use anyhow::Result;
 
-use crate::coordinator::{run_intelligent, run_rule_based, RunSpec, Strategy};
-use crate::predictor::IntelligentConfig;
+use crate::coordinator::RunSpec;
 use crate::trace::workloads::Workload;
 use crate::util::csv::Table;
 
@@ -13,10 +12,10 @@ use super::ExpContext;
 
 const OVERSUB: u32 = 125;
 
-fn thrash_of(ctx: &ExpContext, w: Workload, s: Strategy) -> u64 {
+fn thrash_of(ctx: &mut ExpContext, w: Workload, strategy: &str) -> Result<u64> {
     let trace = w.generate(ctx.opts.scale, ctx.opts.seed);
     let spec = RunSpec::new(&trace, OVERSUB);
-    run_rule_based(&spec, s).outcome.stats.thrash_events
+    Ok(ctx.run_cell(&spec, strategy)?.outcome.stats.thrash_events)
 }
 
 /// Table I: pages thrashed @125% for Baseline / D.+HPE / UVMSmart /
@@ -29,10 +28,10 @@ pub fn table1(ctx: &mut ExpContext) -> Result<()> {
     for w in Workload::ALL {
         t.row(vec![
             w.name().to_string(),
-            thrash_of(ctx, w, Strategy::Baseline).to_string(),
-            thrash_of(ctx, w, Strategy::DemandHpe).to_string(),
-            thrash_of(ctx, w, Strategy::UvmSmart).to_string(),
-            thrash_of(ctx, w, Strategy::DemandBelady).to_string(),
+            thrash_of(ctx, w, "baseline")?.to_string(),
+            thrash_of(ctx, w, "demand-hpe")?.to_string(),
+            thrash_of(ctx, w, "uvmsmart")?.to_string(),
+            thrash_of(ctx, w, "demand-belady")?.to_string(),
         ]);
     }
     print!("{}", t.to_console());
@@ -49,8 +48,8 @@ pub fn table2(ctx: &mut ExpContext) -> Result<()> {
     for w in Workload::ALL {
         t.row(vec![
             w.name().to_string(),
-            thrash_of(ctx, w, Strategy::DemandHpe).to_string(),
-            thrash_of(ctx, w, Strategy::TreeHpe).to_string(),
+            thrash_of(ctx, w, "demand-hpe")?.to_string(),
+            thrash_of(ctx, w, "tree-hpe")?.to_string(),
         ]);
     }
     print!("{}", t.to_console());
@@ -60,7 +59,6 @@ pub fn table2(ctx: &mut ExpContext) -> Result<()> {
 
 /// Table VI: the full strategy grid @125%, including our solution.
 pub fn table6(ctx: &mut ExpContext) -> Result<()> {
-    let (_, model) = ctx.predictor()?;
     let workloads: Vec<Workload> = if ctx.opts.quick {
         vec![Workload::Atax, Workload::Bicg, Workload::Nw, Workload::Hotspot]
     } else {
@@ -84,29 +82,20 @@ pub fn table6(ctx: &mut ExpContext) -> Result<()> {
     for w in &workloads {
         let trace = w.generate(ctx.opts.scale, ctx.opts.seed);
         let spec = RunSpec::new(&trace, OVERSUB);
-        let (runtime, _) = ctx.predictor()?;
-        let ours = run_intelligent(
-            &spec,
-            &model,
-            runtime,
-            IntelligentConfig::default(),
-        )?
-        .outcome
-        .stats
-        .thrash_events;
-        let base = thrash_of(ctx, *w, Strategy::Baseline);
-        let smart = thrash_of(ctx, *w, Strategy::UvmSmart);
+        let ours = ctx.run_cell(&spec, "intelligent")?.outcome.stats.thrash_events;
+        let base = thrash_of(ctx, *w, "baseline")?;
+        let smart = thrash_of(ctx, *w, "uvmsmart")?;
         base_sum += base;
         ours_sum += ours;
         smart_sum += smart;
         t.row(vec![
             w.name().to_string(),
             base.to_string(),
-            thrash_of(ctx, *w, Strategy::TreeHpe).to_string(),
+            thrash_of(ctx, *w, "tree-hpe")?.to_string(),
             smart.to_string(),
             ours.to_string(),
-            thrash_of(ctx, *w, Strategy::DemandHpe).to_string(),
-            thrash_of(ctx, *w, Strategy::DemandBelady).to_string(),
+            thrash_of(ctx, *w, "demand-hpe")?.to_string(),
+            thrash_of(ctx, *w, "demand-belady")?.to_string(),
         ]);
     }
     print!("{}", t.to_console());

@@ -3,7 +3,14 @@
 //! Reproduction of "An Intelligent Framework for Oversubscription
 //! Management in CPU-GPU Unified Memory" (Long, Gong, Zhou 2022).
 //! See DESIGN.md for the full system inventory and experiment index.
+//!
+//! Start at [`api`]: an open [`api::StrategyRegistry`] of named
+//! strategies (the paper's eight pre-registered, new ones registered at
+//! runtime) and an [`api::SweepRunner`] that executes (workload ×
+//! strategy × oversubscription × seed) grids across threads with
+//! deterministic, sink-streamed output.
 
+pub mod api;
 pub mod config;
 pub mod coordinator;
 pub mod exp;

@@ -3,23 +3,26 @@
 //! ```text
 //! repro exp <table1|table2|...|fig14|all> [--quick] [--scale N] [--seed N]
 //! repro simulate --workload NW --strategy baseline --oversub 125
+//! repro sweep --workloads all --strategies baseline,uvmsmart --oversub 100,125,150
 //! repro accuracy --workload Hotspot --method ours
 //! repro info
 //! ```
 //!
-//! Experiments write `reports/<id>.csv` next to the console table.
+//! Experiments write `reports/<id>.csv` next to the console table;
+//! sweeps stream `reports/sweep.csv` + `reports/sweep.jsonl`.
 
 use std::process::ExitCode;
-use std::rc::Rc;
+use std::sync::Arc;
+use std::time::Instant;
 
-use uvmio::config::Scale;
-use uvmio::coordinator::{
-    offline_accuracy, online_accuracy, run_intelligent, run_rule_based,
-    RunSpec, Strategy, TrainOpts,
+use uvmio::api::{
+    ConsoleSink, CsvSink, JsonlSink, StrategyCtx, StrategyRegistry,
+    SweepRunner, SweepSink, SweepSpec,
 };
+use uvmio::config::Scale;
+use uvmio::coordinator::{offline_accuracy, online_accuracy, RunSpec, TrainOpts};
 use uvmio::exp::{self, ExpContext, ExpOpts};
 use uvmio::predictor::features::samples_from_trace;
-use uvmio::predictor::IntelligentConfig;
 use uvmio::runtime::{Manifest, Runtime};
 use uvmio::trace::workloads::Workload;
 use uvmio::util::cli::Args;
@@ -32,12 +35,22 @@ USAGE:
       regenerate a paper table/figure (table1 table2 table3 table4 table6
       table7 fig3 fig4 fig5 fig6 fig10 fig11 fig12 fig13 fig14)
   repro simulate --workload W --strategy S [--oversub PCT] [--scale N] [--seed N]
-      one simulation cell; strategies: baseline demand-hpe tree-hpe
-      demand-belady demand-lru demand-random uvmsmart intelligent
+      one simulation cell; S is ANY registered strategy name
+      (`repro info` lists them; builtin: baseline demand-hpe tree-hpe
+      demand-belady demand-lru demand-random uvmsmart intelligent)
+  repro sweep [--workloads all|W1,W2,..] [--strategies all|S1,S2,..]
+              [--oversub P1,P2,..] [--seeds N1,N2,..] [--threads N]
+              [--scale N] [--reports DIR] [--artifacts DIR]
+      run the (workload × strategy × oversubscription × seed) grid in
+      parallel across threads (artifact-backed strategies run on a
+      serialized lane); streams a console table and writes
+      reports/sweep.csv + reports/sweep.jsonl in deterministic grid
+      order. Defaults: all workloads, the rule-based strategies,
+      oversub 125, seed 42, one thread per core.
   repro accuracy --workload W [--method online|offline|ours] [--seed N]
       predictor accuracy on one workload
   repro info
-      artifact manifest + workload inventory
+      registered strategies + artifact manifest + workload inventory
 ";
 
 fn main() -> ExitCode {
@@ -55,6 +68,7 @@ fn real_main() -> anyhow::Result<()> {
     match args.subcommand.as_deref() {
         Some("exp") => cmd_exp(&args),
         Some("simulate") => cmd_simulate(&args),
+        Some("sweep") => cmd_sweep(&args),
         Some("accuracy") => cmd_accuracy(&args),
         Some("info") => cmd_info(),
         _ => {
@@ -92,20 +106,6 @@ fn cmd_exp(args: &Args) -> anyhow::Result<()> {
     exp::run(&id, &mut ctx)
 }
 
-fn parse_strategy(s: &str) -> anyhow::Result<Strategy> {
-    Ok(match s.to_ascii_lowercase().as_str() {
-        "baseline" => Strategy::Baseline,
-        "demand-hpe" => Strategy::DemandHpe,
-        "tree-hpe" => Strategy::TreeHpe,
-        "demand-belady" => Strategy::DemandBelady,
-        "demand-lru" => Strategy::DemandLru,
-        "demand-random" => Strategy::DemandRandom,
-        "uvmsmart" => Strategy::UvmSmart,
-        "intelligent" => Strategy::Intelligent,
-        other => anyhow::bail!("unknown strategy {other}"),
-    })
-}
-
 fn parse_workload(args: &Args) -> anyhow::Result<Workload> {
     let name = args
         .get("workload")
@@ -114,27 +114,74 @@ fn parse_workload(args: &Args) -> anyhow::Result<Workload> {
         .ok_or_else(|| anyhow::anyhow!("unknown workload {name}"))
 }
 
+/// `all` or a comma-separated workload list.
+fn parse_workloads(selector: &str) -> anyhow::Result<Vec<Workload>> {
+    if selector.trim().eq_ignore_ascii_case("all") {
+        return Ok(Workload::ALL.to_vec());
+    }
+    let mut out = Vec::new();
+    for part in selector.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        out.push(Workload::from_name(part).ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown workload {part}; known: {}",
+                Workload::ALL
+                    .iter()
+                    .map(|w| w.name())
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            )
+        })?);
+    }
+    if out.is_empty() {
+        anyhow::bail!("empty workload list");
+    }
+    Ok(out)
+}
+
+/// Comma-separated typed list; errors carry the flag name.
+fn parse_list<T: std::str::FromStr>(s: &str, flag: &str) -> anyhow::Result<Vec<T>> {
+    let mut out = Vec::new();
+    for part in s.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+        out.push(
+            part.parse::<T>()
+                .map_err(|_| anyhow::anyhow!("--{flag}: cannot parse {part:?}"))?,
+        );
+    }
+    if out.is_empty() {
+        anyhow::bail!("--{flag}: empty list");
+    }
+    Ok(out)
+}
+
 fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
     args.reject_unknown(&["workload", "strategy", "oversub", "scale", "seed", "artifacts"])
         .map_err(anyhow::Error::msg)?;
     let opts = opts_from(args)?;
     let w = parse_workload(args)?;
-    let strategy = parse_strategy(args.get_or("strategy", "baseline"))?;
+    let registry = StrategyRegistry::builtin();
+    let spec_entry = registry.get(args.get_or("strategy", "baseline"))?;
+    let strategy = spec_entry.name.clone();
+    let display = spec_entry.display.clone();
+    let needs_artifacts = spec_entry.needs_artifacts;
     let oversub = args.get_parse("oversub", 125u32).map_err(anyhow::Error::msg)?;
     let trace = w.generate(opts.scale, opts.seed);
     let spec = RunSpec::new(&trace, oversub);
 
-    let cell = if strategy == Strategy::Intelligent {
+    let ctx = if needs_artifacts {
         let runtime = Runtime::new(&opts.artifacts_dir)?;
-        let model = Rc::new(runtime.model("predictor")?);
-        run_intelligent(&spec, &model, &runtime, IntelligentConfig::default())?
+        StrategyCtx::from_runtime(&runtime)?
     } else {
-        run_rule_based(&spec, strategy)
+        StrategyCtx::default()
     };
+    let cell = registry.run(&strategy, &spec, &ctx)?;
     let s = &cell.outcome.stats;
     println!("workload        : {} ({} pages, {} accesses)", trace.name,
              trace.working_set_pages, trace.accesses.len());
-    println!("strategy        : {}", strategy.name());
+    println!("strategy        : {display} ({strategy})");
     println!("oversubscription: {oversub}% (capacity {} pages)", spec.cfg.capacity_pages);
     println!("faults          : {}", s.faults);
     println!("migrations      : {}", s.migrations);
@@ -154,6 +201,73 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
+    args.reject_unknown(&[
+        "workloads", "strategies", "oversub", "seeds", "threads", "scale",
+        "reports", "artifacts",
+    ])
+    .map_err(anyhow::Error::msg)?;
+    let registry = StrategyRegistry::builtin();
+    let workloads = parse_workloads(args.get_or("workloads", "all"))?;
+    let strategies = registry.resolve_list(args.get_or(
+        "strategies",
+        "baseline,demand-hpe,tree-hpe,demand-belady,demand-lru,demand-random,uvmsmart",
+    ))?;
+    let oversub = parse_list::<u32>(args.get_or("oversub", "125"), "oversub")?;
+    let seeds = parse_list::<u64>(args.get_or("seeds", "42"), "seeds")?;
+    let threads =
+        args.get_parse("threads", 0usize).map_err(anyhow::Error::msg)?;
+    let scale = Scale {
+        factor: args.get_parse("scale", 1u32).map_err(anyhow::Error::msg)?,
+    };
+    let reports: std::path::PathBuf = args.get_or("reports", "reports").into();
+
+    // artifact ctx only when an artifact-backed strategy is in the grid
+    let ctx = if strategies
+        .iter()
+        .any(|s| registry.get(s).map(|e| e.needs_artifacts).unwrap_or(false))
+    {
+        let artifacts = args.get_or("artifacts", "");
+        let dir = if artifacts.is_empty() {
+            Manifest::default_dir()
+        } else {
+            artifacts.into()
+        };
+        let runtime = Runtime::new(&dir)?;
+        StrategyCtx::from_runtime(&runtime)?
+    } else {
+        StrategyCtx::default()
+    };
+
+    let sweep = SweepSpec::new(workloads, strategies)
+        .with_oversub(oversub)
+        .with_seeds(seeds)
+        .with_scale(scale);
+    let csv_path = reports.join("sweep.csv");
+    let jsonl_path = reports.join("sweep.jsonl");
+    let mut sinks: Vec<Box<dyn SweepSink>> = vec![
+        Box::new(ConsoleSink::new()),
+        Box::new(CsvSink::to_path(&csv_path)?),
+        Box::new(JsonlSink::to_path(&jsonl_path)?),
+    ];
+    let t0 = Instant::now();
+    let records = SweepRunner::new(&registry)
+        .with_threads(threads)
+        .run(&sweep, &ctx, &mut sinks)?;
+    println!(
+        "{} cells in {:.2?} -> {} + {}",
+        records.len(),
+        t0.elapsed(),
+        csv_path.display(),
+        jsonl_path.display()
+    );
+    let failed = records.iter().filter(|r| r.result.is_err()).count();
+    if failed > 0 {
+        anyhow::bail!("{failed} cell(s) failed — see the error column");
+    }
+    Ok(())
+}
+
 fn cmd_accuracy(args: &Args) -> anyhow::Result<()> {
     args.reject_unknown(&["workload", "method", "scale", "seed", "artifacts"])
         .map_err(anyhow::Error::msg)?;
@@ -161,7 +275,7 @@ fn cmd_accuracy(args: &Args) -> anyhow::Result<()> {
     let w = parse_workload(args)?;
     let method = args.get_or("method", "online").to_string();
     let runtime = Runtime::new(&opts.artifacts_dir)?;
-    let model = Rc::new(runtime.model("predictor")?);
+    let model = Arc::new(runtime.model("predictor")?);
     let dims = uvmio::coordinator::feat_dims(&runtime);
     let trace = w.generate(opts.scale, opts.seed);
     let (samples, vocab) = samples_from_trace(&trace, dims);
@@ -180,6 +294,17 @@ fn cmd_accuracy(args: &Args) -> anyhow::Result<()> {
 }
 
 fn cmd_info() -> anyhow::Result<()> {
+    let registry = StrategyRegistry::builtin();
+    println!("strategies:");
+    for name in registry.names() {
+        let s = registry.get(name)?;
+        println!(
+            "  {:14} {:16} {}",
+            s.name,
+            s.display,
+            if s.needs_artifacts { "[needs artifacts]" } else { "" }
+        );
+    }
     println!("workloads:");
     for w in Workload::ALL {
         let t = w.generate(Scale::default(), 42);

@@ -6,7 +6,16 @@
 //! that these must cooperate (Section III-B: HPE collapses when paired
 //! with the tree prefetcher it wasn't designed for).
 //!
-//! Implemented strategies:
+//! Policies are **named and constructed through the open registry** in
+//! [`crate::api`]: a [`crate::api::StrategySpec`] pairs a kebab-case name
+//! (`"baseline"`, `"demand-belady"`, …) with a factory
+//! `Fn(&RunSpec, &StrategyCtx) -> Box<dyn Policy>`, so adding a strategy
+//! is a single `registry.register(...)` call — no enum edit, no new
+//! driver function. The engine itself stays policy-agnostic and only ever
+//! sees the trait object.
+//!
+//! Built-in strategies (all pre-registered by
+//! [`crate::api::StrategyRegistry::builtin`]):
 //!
 //! | module | paper name | role |
 //! |---|---|---|
@@ -34,10 +43,43 @@ pub mod uvmsmart;
 use crate::sim::{DeviceMemory, FaultAction, Page};
 use crate::trace::Access;
 
+/// Predictor-side counters a policy may expose after a run. The
+/// coordinator uses these for the §V-C overhead injection (one
+/// `prediction_overhead` charge per batched inference) and for the
+/// instrumentation columns of the paper tables. Rule-based policies keep
+/// the all-zero default.
+#[derive(Debug, Clone, Copy)]
+pub struct PolicyInstrumentation {
+    /// batched predictor invocations (overhead is charged per call)
+    pub inference_calls: u64,
+    /// individual page predictions emitted
+    pub predictions: u64,
+    /// pattern-specific models instantiated (Table IV `Patterns`)
+    pub patterns_used: usize,
+    /// final online training loss (NaN when no training ran)
+    pub last_loss: f32,
+}
+
+impl Default for PolicyInstrumentation {
+    fn default() -> Self {
+        PolicyInstrumentation {
+            inference_calls: 0,
+            predictions: 0,
+            patterns_used: 0,
+            last_loss: f32::NAN,
+        }
+    }
+}
+
 /// A complete memory-management strategy (fault action + prefetch +
 /// eviction). The engine calls the hooks in trace order.
 pub trait Policy {
     fn name(&self) -> String;
+
+    /// Predictor instrumentation for overhead accounting (default: none).
+    fn instrumentation(&self) -> PolicyInstrumentation {
+        PolicyInstrumentation::default()
+    }
 
     /// Observe an access (after residency is known, before servicing).
     fn on_access(&mut self, _acc: &Access, _resident: bool) {}

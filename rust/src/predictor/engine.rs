@@ -11,10 +11,10 @@
 //! steps on the pattern-specific weights from the model table.
 
 use std::collections::HashSet;
-use std::rc::Rc;
+use std::sync::Arc;
 
 use crate::policy::dfa::DfaClassifier;
-use crate::policy::Policy;
+use crate::policy::{Policy, PolicyInstrumentation};
 use crate::runtime::ModelRuntime;
 use crate::sim::{DeviceMemory, FaultAction, Page};
 use crate::trace::Access;
@@ -64,7 +64,7 @@ impl Default for IntelligentConfig {
 }
 
 pub struct IntelligentPolicy {
-    rt: Rc<ModelRuntime>,
+    rt: Arc<ModelRuntime>,
     cfg: IntelligentConfig,
     dims: FeatDims,
     wb: WindowBuilder,
@@ -94,7 +94,7 @@ pub struct IntelligentPolicy {
 
 impl IntelligentPolicy {
     pub fn new(
-        rt: Rc<ModelRuntime>,
+        rt: Arc<ModelRuntime>,
         dims: FeatDims,
         cfg: IntelligentConfig,
     ) -> IntelligentPolicy {
@@ -260,6 +260,15 @@ impl IntelligentPolicy {
 impl Policy for IntelligentPolicy {
     fn name(&self) -> String {
         "Intelligent".into()
+    }
+
+    fn instrumentation(&self) -> PolicyInstrumentation {
+        PolicyInstrumentation {
+            inference_calls: self.inference_calls,
+            predictions: self.predictions,
+            patterns_used: self.patterns_used(),
+            last_loss: self.last_loss,
+        }
     }
 
     fn on_access(&mut self, acc: &Access, _resident: bool) {

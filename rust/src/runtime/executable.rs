@@ -11,6 +11,7 @@ use std::rc::Rc;
 use anyhow::{anyhow, bail, Context, Result};
 
 use super::manifest::{ArtifactSpec, Manifest};
+use super::state::{Batch, TrainState};
 
 /// Shared PJRT CPU client.
 pub struct Runtime {
@@ -99,74 +100,6 @@ pub struct ModelRuntime {
     pub batch: usize,
     pub seq_len: usize,
     pub classes: usize,
-}
-
-/// A training/inference minibatch in flat row-major layout.
-#[derive(Debug, Clone, Default)]
-pub struct Batch {
-    /// B×T feature windows (i32 vocab indices)
-    pub addr: Vec<i32>,
-    pub delta: Vec<i32>,
-    pub pc: Vec<i32>,
-    pub tb: Vec<i32>,
-    /// B labels (next-delta classes)
-    pub labels: Vec<i32>,
-    /// number of *valid* rows (≤ B; the rest is padding)
-    pub rows: usize,
-}
-
-impl Batch {
-    pub fn validate(&self, b: usize, t: usize) -> Result<()> {
-        if self.addr.len() != b * t
-            || self.delta.len() != b * t
-            || self.pc.len() != b * t
-            || self.tb.len() != b * t
-            || self.labels.len() != b
-        {
-            bail!(
-                "batch shape mismatch: features {}/{}/{}/{} labels {} vs B={b} T={t}",
-                self.addr.len(),
-                self.delta.len(),
-                self.pc.len(),
-                self.tb.len(),
-                self.labels.len()
-            );
-        }
-        if self.rows == 0 || self.rows > b {
-            bail!("batch rows {} outside 1..={b}", self.rows);
-        }
-        Ok(())
-    }
-}
-
-/// Mutable training state: flat parameters + Adam slots + the frozen
-/// previous model for LUCIR distillation.
-#[derive(Debug, Clone)]
-pub struct TrainState {
-    pub params: Vec<f32>,
-    pub prev_params: Vec<f32>,
-    pub m: Vec<f32>,
-    pub v: Vec<f32>,
-    pub step: i32,
-}
-
-impl TrainState {
-    pub fn fresh(params: Vec<f32>) -> TrainState {
-        let n = params.len();
-        TrainState {
-            prev_params: params.clone(),
-            params,
-            m: vec![0.0; n],
-            v: vec![0.0; n],
-            step: 0,
-        }
-    }
-
-    /// Freeze the current weights as the LUCIR "previous model" — called
-    /// at incremental-task boundaries (each online fine-tune round).
-    pub fn snapshot_prev(&mut self) {
-        self.prev_params.clone_from(&self.params);
-    }
 }
 
 fn lit_2d(v: &[i32], b: usize, t: usize) -> Result<xla::Literal> {

@@ -1,11 +1,32 @@
-//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`) produced
-//! by `python/compile/aot.py` and executes them on the CPU PJRT client.
-//! This is the ONLY bridge between the rust request path and the
-//! python-authored compute graphs — and it crosses at build time, via HLO
-//! text, never via a python interpreter.
+//! Model runtime: loads the AOT artifacts (`artifacts/*.hlo.txt` +
+//! `manifest.json`) produced by `python/compile/aot.py` and exposes typed
+//! `forward` / `train_step` / `init_params` entry points to the predictor.
+//!
+//! Two interchangeable backends sit behind one public surface:
+//!
+//! * **`pjrt` feature** (`executable.rs`) — the real thing: HLO text →
+//!   `XlaComputation` → PJRT CPU client. This is the ONLY bridge between
+//!   the rust request path and the python-authored compute graphs, and it
+//!   crosses at build time, via HLO text, never via a python interpreter.
+//!   The PJRT client is **not** thread-safe; `ModelRuntime` is
+//!   deliberately `!Send` here, which is why the sweep runner keeps
+//!   artifact-backed strategies on a serialized lane.
+//! * **default** (`stub.rs`) — a deterministic, dependency-free stand-in
+//!   with the same API, so the simulator/policy/sweep stack builds and
+//!   tests from a clean checkout (no `xla` crate, no artifacts).
 
-pub mod executable;
 pub mod manifest;
+pub mod state;
 
-pub use executable::{Batch, Executable, ModelRuntime, Runtime, TrainState};
+#[cfg(feature = "pjrt")]
+pub mod executable;
+#[cfg(not(feature = "pjrt"))]
+pub mod stub;
+
+#[cfg(feature = "pjrt")]
+pub use executable::{Executable, ModelRuntime, Runtime};
+#[cfg(not(feature = "pjrt"))]
+pub use stub::{Executable, ModelRuntime, Runtime};
+
 pub use manifest::{ArgSpec, ArtifactSpec, Manifest, ModelEntry};
+pub use state::{Batch, TrainState};

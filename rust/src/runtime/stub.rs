@@ -1,0 +1,353 @@
+//! Dependency-free stand-in for the PJRT runtime (default build, no
+//! `pjrt` feature). Presents the exact public surface of
+//! `executable::{Runtime, Executable, ModelRuntime}` so every layer above
+//! — predictor engine, coordinator, sweep runner, experiments — compiles
+//! and runs from a clean checkout with neither the `xla` crate nor AOT
+//! artifacts installed.
+//!
+//! The stub model is NOT the paper's Transformer: it is a deterministic
+//! multinomial logistic-regression head over hashed window features,
+//! trained with Adam on the same loss shape (cross-entropy + the µ
+//! thrashing penalty; the λ LUCIR distillation term is accepted and
+//! ignored — there is no previous-model logit to distil against). That is
+//! enough to exercise the full online train-predict plumbing
+//! deterministically; accuracy claims require `--features pjrt` plus
+//! `make artifacts`.
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use super::manifest::{ArtifactSpec, Manifest};
+use super::state::{Batch, TrainState};
+
+/// Hashed-feature dimensionality of the stub's linear head.
+const FEATS: usize = 64;
+const LR: f32 = 0.05;
+const BETA1: f32 = 0.9;
+const BETA2: f32 = 0.999;
+const EPS: f32 = 1e-8;
+
+/// Manifest-only "runtime": no PJRT client is created.
+pub struct Runtime {
+    pub manifest: Manifest,
+}
+
+impl Runtime {
+    /// Load the manifest from `dir`. Fails (actionably) when the AOT
+    /// artifacts have not been generated, mirroring the real backend.
+    pub fn new(dir: &Path) -> Result<Runtime> {
+        Ok(Runtime { manifest: Manifest::load(dir)? })
+    }
+
+    /// "Compile" one artifact: record its signature; nothing executes.
+    pub fn compile(&self, spec: &ArtifactSpec) -> Result<Executable> {
+        Ok(Executable { spec: spec.clone() })
+    }
+
+    /// Load a model entry by name (dimensions from the manifest).
+    pub fn model(&self, name: &str) -> Result<ModelRuntime> {
+        let entry = self.manifest.model(name)?;
+        Ok(ModelRuntime {
+            name: name.to_string(),
+            param_count: entry.param_count,
+            batch: self.manifest.batch,
+            seq_len: self.manifest.seq_len,
+            classes: self.manifest.delta_vocab,
+        })
+    }
+}
+
+/// Signature-only stand-in for a compiled artifact.
+pub struct Executable {
+    pub spec: ArtifactSpec,
+}
+
+/// One model-table entry's worth of entry points, backed by the stub
+/// linear head instead of compiled HLO.
+pub struct ModelRuntime {
+    pub name: String,
+    pub param_count: usize,
+    pub batch: usize,
+    pub seq_len: usize,
+    pub classes: usize,
+}
+
+/// SplitMix64 — deterministic parameter init, identical across platforms.
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+fn feature_hash(val: i32, salt: u64, pos: usize) -> usize {
+    let mut x = (val as u64)
+        .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        .wrapping_add(salt.wrapping_mul(0xBF58_476D_1CE4_E5B9))
+        .wrapping_add(pos as u64);
+    x ^= x >> 33;
+    x = x.wrapping_mul(0xFF51_AFD7_ED55_8CCD);
+    x ^= x >> 33;
+    (x % FEATS as u64) as usize
+}
+
+impl ModelRuntime {
+    /// Fresh flat parameters from a seed, `param_count` long (the full
+    /// vector is honoured so footprint accounting matches the manifest;
+    /// only the leading `classes × (FEATS+1)` entries are trained).
+    pub fn init_params(&self, seed: u32) -> Result<Vec<f32>> {
+        let mut sm = (seed as u64) ^ 0xA0_5EED;
+        let params = (0..self.param_count)
+            .map(|_| {
+                let bits = splitmix64(&mut sm);
+                // uniform in [-0.05, 0.05]
+                ((bits >> 11) as f32 / (1u64 << 53) as f32 - 0.5) * 0.1
+            })
+            .collect();
+        Ok(params)
+    }
+
+    /// Index of weight `f` (or the bias at `f == FEATS`) for class `c`,
+    /// wrapped so tiny synthetic manifests still work.
+    fn widx(&self, c: usize, f: usize) -> usize {
+        (c * (FEATS + 1) + f) % self.param_count.max(1)
+    }
+
+    /// Per-row hashed feature vector (position-salted counts, normalised).
+    fn featurise(&self, batch: &Batch, row: usize) -> [f32; FEATS] {
+        let t = self.seq_len;
+        let mut feat = [0.0f32; FEATS];
+        for pos in 0..t {
+            let i = row * t + pos;
+            feat[feature_hash(batch.addr[i], 1, pos)] += 1.0;
+            feat[feature_hash(batch.delta[i], 2, pos)] += 1.0;
+            feat[feature_hash(batch.pc[i], 3, pos)] += 1.0;
+            feat[feature_hash(batch.tb[i], 4, pos)] += 1.0;
+        }
+        let norm = 1.0 / (4 * t.max(1)) as f32;
+        for f in feat.iter_mut() {
+            *f *= norm;
+        }
+        feat
+    }
+
+    fn row_logits(&self, params: &[f32], feat: &[f32; FEATS]) -> Vec<f32> {
+        (0..self.classes)
+            .map(|c| {
+                let mut z = params[self.widx(c, FEATS)];
+                for (f, x) in feat.iter().enumerate() {
+                    z += params[self.widx(c, f)] * x;
+                }
+                z
+            })
+            .collect()
+    }
+
+    /// Forward pass: logits for each valid row, row-major `rows × classes`.
+    pub fn forward(&self, params: &[f32], batch: &Batch) -> Result<Vec<f32>> {
+        batch.validate(self.batch, self.seq_len)?;
+        if params.len() != self.param_count {
+            bail!("stub forward: {} params, expected {}", params.len(), self.param_count);
+        }
+        let mut logits = Vec::with_capacity(batch.rows * self.classes);
+        for row in 0..batch.rows {
+            let feat = self.featurise(batch, row);
+            logits.extend(self.row_logits(params, &feat));
+        }
+        Ok(logits)
+    }
+
+    /// One Adam step over cross-entropy + the µ thrashing penalty
+    /// (`thrash_mask[c] = 1.0` marks delta-classes in E∪T). λ is accepted
+    /// for signature parity but unused — see the module docs.
+    pub fn train_step(
+        &self,
+        state: &mut TrainState,
+        batch: &Batch,
+        thrash_mask: &[f32],
+        _lambda: f32,
+        mu: f32,
+    ) -> Result<f32> {
+        batch.validate(self.batch, self.seq_len)?;
+        if thrash_mask.len() != self.classes {
+            bail!("thrash mask {} != classes {}", thrash_mask.len(), self.classes);
+        }
+        if state.params.len() != self.param_count {
+            bail!("stub train: {} params, expected {}", state.params.len(), self.param_count);
+        }
+        let rows = batch.rows;
+        let mut grad = vec![0.0f32; self.classes * (FEATS + 1)];
+        let mut loss = 0.0f32;
+        for row in 0..rows {
+            let feat = self.featurise(batch, row);
+            let logits = self.row_logits(&state.params, &feat);
+            // stable softmax
+            let mx = logits.iter().cloned().fold(f32::MIN, f32::max);
+            let exp: Vec<f32> = logits.iter().map(|z| (z - mx).exp()).collect();
+            let zsum: f32 = exp.iter().sum();
+            let p: Vec<f32> = exp.iter().map(|e| e / zsum).collect();
+            let label = batch.labels[row].clamp(0, self.classes as i32 - 1) as usize;
+            let masked_mass: f32 =
+                p.iter().zip(thrash_mask).map(|(pi, mi)| pi * mi).sum();
+            loss += -p[label].max(1e-12).ln() + mu * masked_mass;
+            for c in 0..self.classes {
+                // d(CE)/dz_c = p_c - 1{c=label};
+                // d(masked_mass)/dz_c = p_c (mask_c - masked_mass)
+                let mut d = p[c] - if c == label { 1.0 } else { 0.0 };
+                d += mu * p[c] * (thrash_mask[c] - masked_mass);
+                let d = d / rows as f32;
+                for (f, x) in feat.iter().enumerate() {
+                    grad[c * (FEATS + 1) + f] += d * x;
+                }
+                grad[c * (FEATS + 1) + FEATS] += d;
+            }
+        }
+        // Adam on the trained prefix (m/v slots live at the same indices)
+        state.step += 1;
+        let t = state.step as f32;
+        let bc1 = 1.0 - BETA1.powf(t);
+        let bc2 = 1.0 - BETA2.powf(t);
+        for c in 0..self.classes {
+            for f in 0..=FEATS {
+                let gi = c * (FEATS + 1) + f;
+                let pi = self.widx(c, f);
+                let g = grad[gi];
+                state.m[pi] = BETA1 * state.m[pi] + (1.0 - BETA1) * g;
+                state.v[pi] = BETA2 * state.v[pi] + (1.0 - BETA2) * g * g;
+                let mhat = state.m[pi] / bc1;
+                let vhat = state.v[pi] / bc2;
+                state.params[pi] -= LR * mhat / (vhat.sqrt() + EPS);
+            }
+        }
+        Ok(loss / rows as f32)
+    }
+
+    /// Top-1 class per valid row from a flat logits buffer.
+    pub fn top1(&self, logits: &[f32]) -> Vec<usize> {
+        logits
+            .chunks_exact(self.classes)
+            .map(|row| {
+                row.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(i, _)| i)
+                    .unwrap_or(0)
+            })
+            .collect()
+    }
+
+    /// Top-k classes per row (k small), descending score.
+    pub fn topk(&self, logits: &[f32], k: usize) -> Vec<Vec<usize>> {
+        logits
+            .chunks_exact(self.classes)
+            .map(|row| {
+                let mut idx: Vec<usize> = (0..row.len()).collect();
+                idx.sort_unstable_by(|&a, &b| {
+                    row[b].partial_cmp(&row[a]).unwrap()
+                });
+                idx.truncate(k);
+                idx
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk_model() -> ModelRuntime {
+        ModelRuntime {
+            name: "stub".into(),
+            param_count: 8 * (FEATS + 1),
+            batch: 4,
+            seq_len: 3,
+            classes: 8,
+        }
+    }
+
+    fn mk_batch(m: &ModelRuntime, seed: u64) -> Batch {
+        let mut x = seed | 1;
+        let mut next = |hi: usize| -> i32 {
+            x ^= x << 13;
+            x ^= x >> 7;
+            x ^= x << 17;
+            (x % hi as u64) as i32
+        };
+        let mut b = Batch::default();
+        for _ in 0..m.batch {
+            for _ in 0..m.seq_len {
+                b.addr.push(next(32));
+                b.delta.push(next(m.classes));
+                b.pc.push(next(16));
+                b.tb.push(next(16));
+            }
+            b.labels.push(next(m.classes));
+        }
+        b.rows = m.batch;
+        b
+    }
+
+    #[test]
+    fn init_is_deterministic_per_seed() {
+        let m = mk_model();
+        assert_eq!(m.init_params(3).unwrap(), m.init_params(3).unwrap());
+        assert_ne!(m.init_params(3).unwrap(), m.init_params(4).unwrap());
+        assert_eq!(m.init_params(0).unwrap().len(), m.param_count);
+    }
+
+    #[test]
+    fn training_reduces_loss_on_a_fixed_batch() {
+        let m = mk_model();
+        let batch = mk_batch(&m, 42);
+        let mut state = TrainState::fresh(m.init_params(0).unwrap());
+        let mask = vec![0.0; m.classes];
+        let first = m.train_step(&mut state, &batch, &mask, 0.0, 0.0).unwrap();
+        let mut last = first;
+        for _ in 0..60 {
+            last = m.train_step(&mut state, &batch, &mask, 0.0, 0.0).unwrap();
+        }
+        assert!(last < first, "loss did not drop: {first} -> {last}");
+        assert!(last.is_finite());
+    }
+
+    #[test]
+    fn forward_shape_and_determinism() {
+        let m = mk_model();
+        let batch = mk_batch(&m, 7);
+        let p = m.init_params(1).unwrap();
+        let a = m.forward(&p, &batch).unwrap();
+        let b = m.forward(&p, &batch).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(a.len(), batch.rows * m.classes);
+        assert!(a.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn mu_term_suppresses_masked_classes() {
+        let m = mk_model();
+        let batch = mk_batch(&m, 9);
+        let run = |mu: f32| -> f32 {
+            let mut state = TrainState::fresh(m.init_params(0).unwrap());
+            let mut mask = vec![0.0; m.classes];
+            for &l in &batch.labels {
+                mask[l as usize] = 1.0;
+            }
+            for _ in 0..20 {
+                m.train_step(&mut state, &batch, &mask, 0.0, mu).unwrap();
+            }
+            let logits = m.forward(&state.params, &batch).unwrap();
+            let mut mass = 0.0;
+            for (row, &label) in logits.chunks_exact(m.classes).zip(&batch.labels) {
+                let mx = row.iter().cloned().fold(f32::MIN, f32::max);
+                let exp: Vec<f32> = row.iter().map(|v| (v - mx).exp()).collect();
+                let z: f32 = exp.iter().sum();
+                mass += exp[label as usize] / z;
+            }
+            mass / batch.rows as f32
+        };
+        assert!(run(4.0) < run(0.0));
+    }
+}

@@ -30,7 +30,7 @@ use std::collections::HashMap;
 /// Result of a run: final stats plus the crash determination used by the
 /// 150% experiments (the paper reports ATAX/NW/2DCONV crashing under
 /// UVMSmart at 150% oversubscription).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct RunOutcome {
     pub stats: Stats,
     /// True if thrashing exceeded the runaway threshold (the analogue of
@@ -152,11 +152,22 @@ impl Engine {
     }
 
     fn handle_fault(&mut self, acc: &crate::trace::Access, policy: &mut dyn Policy) {
-        // fault path is comparatively cold; a flat config copy is fine
-        let cfg = self.cfg.clone();
+        // copy only the scalar knobs this path reads — no per-fault
+        // SimConfig clone (the old flat copy dragged the whole struct
+        // through the cache on every far-fault)
+        let SimConfig {
+            interval_faults,
+            delay_threshold,
+            zero_copy_latency,
+            far_fault_latency,
+            fault_mshrs,
+            transfer_cycles_per_page,
+            warp_overlap,
+            ..
+        } = self.cfg;
         self.stats.faults += 1;
         self.faults_in_interval += 1;
-        if self.faults_in_interval >= cfg.interval_faults {
+        if self.faults_in_interval >= interval_faults {
             self.faults_in_interval = 0;
             policy.on_interval();
         }
@@ -166,12 +177,12 @@ impl Engine {
             FaultAction::Delay => {
                 let c = self.delay_counters.entry(acc.page).or_insert(0);
                 *c += 1;
-                if *c >= cfg.delay_threshold {
+                if *c >= delay_threshold {
                     self.delay_counters.remove(&acc.page);
                     FaultAction::Migrate
                 } else {
                     self.stats.delayed_remote += 1;
-                    self.stats.cycles += cfg.zero_copy_latency;
+                    self.stats.cycles += zero_copy_latency;
                     return;
                 }
             }
@@ -181,14 +192,14 @@ impl Engine {
         match effective {
             FaultAction::ZeroCopy => {
                 self.stats.zero_copy += 1;
-                self.stats.cycles += cfg.zero_copy_latency;
+                self.stats.cycles += zero_copy_latency;
             }
             FaultAction::Migrate => {
                 // fault batching: join the in-flight batch if one is live
                 // and has MSHR headroom, else open a new batch.
                 let now = self.stats.cycles;
-                if now >= self.batch_done || self.batch_faults >= cfg.fault_mshrs {
-                    self.batch_done = now + cfg.far_fault_latency;
+                if now >= self.batch_done || self.batch_faults >= fault_mshrs {
+                    self.batch_done = now + far_fault_latency;
                     self.batch_faults = 1;
                 } else {
                     self.batch_faults += 1;
@@ -196,9 +207,9 @@ impl Engine {
                 // the migration transfer queues on the link after the
                 // fault service completes
                 let start = self.batch_done.max(self.link_free);
-                let done = start + cfg.transfer_cycles_per_page;
+                let done = start + transfer_cycles_per_page;
                 self.link_free = done;
-                let stall = (done - now) / cfg.warp_overlap;
+                let stall = (done - now) / warp_overlap;
                 self.stats.cycles += stall;
 
                 self.admit(acc.page, policy, false);

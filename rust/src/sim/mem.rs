@@ -93,9 +93,13 @@ impl DeviceMemory {
         self.frames.keys().copied()
     }
 
-    /// Any resident page — the engine's last-resort victim fallback.
+    /// A resident page — the engine's last-resort victim fallback. Scans
+    /// for the minimum page number rather than taking HashMap iteration
+    /// order: the fallback is rare (it is counted as a policy bug), and
+    /// a seed-dependent choice here would break the sweep runner's
+    /// serial-vs-parallel byte-identical determinism contract.
     pub fn any_page(&self) -> Option<Page> {
-        self.frames.keys().next().copied()
+        self.frames.keys().min().copied()
     }
 }
 

@@ -9,7 +9,7 @@ use std::collections::HashSet;
 
 use super::Page;
 
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct Stats {
     // volume
     pub accesses: u64,

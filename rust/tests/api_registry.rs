@@ -1,0 +1,213 @@
+//! Tests for the open strategy registry and the parallel sweep runner:
+//! name round-trips, unknown-name diagnostics, runtime registration of a
+//! custom strategy through the sweep path (no enum edits anywhere), and
+//! byte-identical determinism between serial and parallel sweeps.
+
+use uvmio::api::{
+    CellRecord, record_to_json, StrategyCtx, StrategyRegistry, StrategySpec,
+    SweepRunner, SweepSpec,
+};
+use uvmio::config::Scale;
+use uvmio::coordinator::RunSpec;
+use uvmio::policy::lru::Lru;
+use uvmio::policy::{DemandOnly, Policy};
+use uvmio::trace::workloads::Workload;
+
+const BUILTIN: [&str; 8] = [
+    "baseline",
+    "demand-hpe",
+    "tree-hpe",
+    "demand-belady",
+    "demand-lru",
+    "demand-random",
+    "uvmsmart",
+    "intelligent",
+];
+
+#[test]
+fn every_builtin_name_resolves() {
+    let registry = StrategyRegistry::builtin();
+    assert_eq!(registry.names(), BUILTIN.to_vec());
+    for name in BUILTIN {
+        let spec = registry.get(name).unwrap();
+        assert_eq!(spec.name, name);
+        assert!(!spec.display.is_empty());
+        // lookup is case-insensitive
+        assert_eq!(registry.get(&name.to_uppercase()).unwrap().name, name);
+    }
+    assert!(registry.get("intelligent").unwrap().needs_artifacts);
+    assert!(!registry.get("baseline").unwrap().needs_artifacts);
+}
+
+#[test]
+fn every_rule_based_builtin_constructs_and_runs() {
+    let registry = StrategyRegistry::builtin();
+    let trace = Workload::Hotspot.generate(Scale::default(), 42);
+    let spec = RunSpec::new(&trace, 125);
+    let ctx = StrategyCtx::default();
+    for name in BUILTIN {
+        if registry.get(name).unwrap().needs_artifacts {
+            continue;
+        }
+        let cell = registry.run(name, &spec, &ctx).unwrap();
+        assert_eq!(cell.strategy, name);
+        assert_eq!(cell.outcome.stats.accesses, trace.accesses.len() as u64);
+        // rule-based cells never charge prediction overhead
+        assert_eq!(cell.inference_calls, 0);
+        assert_eq!(cell.outcome.stats.prediction_overhead_cycles, 0);
+    }
+}
+
+#[test]
+fn unknown_name_errors_with_candidates() {
+    let registry = StrategyRegistry::builtin();
+    let err = format!("{:#}", registry.get("belady-2000").unwrap_err());
+    assert!(err.contains("belady-2000"), "{err}");
+    for name in BUILTIN {
+        assert!(err.contains(name), "candidate {name} missing from: {err}");
+    }
+    // same diagnostics through the list resolver and the sweep runner
+    assert!(registry.resolve_list("baseline,nope").is_err());
+    let sweep = SweepSpec::new(
+        vec![Workload::Hotspot],
+        vec!["nope".to_string()],
+    );
+    let err = SweepRunner::new(&registry)
+        .run(&sweep, &StrategyCtx::default(), &mut [])
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("unknown strategy"));
+}
+
+#[test]
+fn intelligent_without_artifacts_is_actionable() {
+    let registry = StrategyRegistry::builtin();
+    let trace = Workload::Hotspot.generate(Scale::default(), 42);
+    let spec = RunSpec::new(&trace, 125);
+    let err = registry
+        .run("intelligent", &spec, &StrategyCtx::default())
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("artifacts"));
+}
+
+#[test]
+fn resolve_list_handles_all_and_duplicated_whitespace() {
+    let registry = StrategyRegistry::builtin();
+    assert_eq!(registry.resolve_list("all").unwrap(), BUILTIN.to_vec());
+    assert_eq!(
+        registry.resolve_list(" baseline , uvmsmart ").unwrap(),
+        vec!["baseline".to_string(), "uvmsmart".to_string()]
+    );
+}
+
+#[test]
+fn duplicate_registration_is_rejected() {
+    let mut registry = StrategyRegistry::builtin();
+    let dup = StrategySpec::new("baseline", "Baseline again", |_, _| {
+        Ok(Box::new(uvmio::policy::composite::Composite::new(
+            DemandOnly,
+            Lru::new(),
+        )) as Box<dyn Policy>)
+    });
+    assert!(registry.register(dup).is_err());
+}
+
+/// The acceptance-criterion path: a strategy registered AT RUNTIME runs
+/// through the same sweep machinery as the builtins, with no enum edits.
+#[test]
+fn runtime_registered_strategy_runs_through_the_sweep() {
+    let mut registry = StrategyRegistry::builtin();
+    registry
+        .register(StrategySpec::new(
+            "my-demand-lru",
+            "Custom D.+LRU",
+            |_, _| {
+                Ok(Box::new(uvmio::policy::composite::Composite::new(
+                    DemandOnly,
+                    Lru::new(),
+                )) as Box<dyn Policy>)
+            },
+        ))
+        .unwrap();
+
+    let sweep = SweepSpec::new(
+        vec![Workload::Bicg],
+        registry.resolve_list("demand-lru,my-demand-lru").unwrap(),
+    )
+    .with_oversub(vec![125]);
+    let records = SweepRunner::new(&registry)
+        .with_threads(2)
+        .run(&sweep, &StrategyCtx::default(), &mut [])
+        .unwrap();
+    assert_eq!(records.len(), 2);
+    let builtin = records[0].result.as_ref().unwrap();
+    let custom = records[1].result.as_ref().unwrap();
+    assert_eq!(records[1].cell.strategy, "my-demand-lru");
+    // identical policy under a new name -> identical simulation
+    assert_eq!(builtin.outcome.stats, custom.outcome.stats);
+}
+
+fn jsonl_of(records: &[CellRecord]) -> String {
+    records
+        .iter()
+        .map(|r| record_to_json(r).compact())
+        .collect::<Vec<_>>()
+        .join("\n")
+}
+
+/// Determinism: a parallel sweep must produce byte-identical `Stats`
+/// (and serialized records) to a serial run for a fixed seed.
+#[test]
+fn parallel_sweep_is_byte_identical_to_serial() {
+    let registry = StrategyRegistry::builtin();
+    let sweep = SweepSpec::new(
+        vec![Workload::Atax, Workload::Bicg, Workload::Hotspot],
+        registry
+            .resolve_list("baseline,uvmsmart,demand-belady,demand-random")
+            .unwrap(),
+    )
+    .with_oversub(vec![110, 125, 150])
+    .with_seeds(vec![42, 7]);
+
+    let ctx = StrategyCtx::default();
+    let serial = SweepRunner::new(&registry)
+        .with_threads(1)
+        .run(&sweep, &ctx, &mut [])
+        .unwrap();
+    let parallel = SweepRunner::new(&registry)
+        .with_threads(4)
+        .run(&sweep, &ctx, &mut [])
+        .unwrap();
+
+    assert_eq!(serial.len(), sweep.len());
+    assert_eq!(serial.len(), parallel.len());
+    for (a, b) in serial.iter().zip(&parallel) {
+        assert_eq!(a.cell, b.cell);
+        let (sa, sb) = (
+            &a.result.as_ref().unwrap().outcome.stats,
+            &b.result.as_ref().unwrap().outcome.stats,
+        );
+        assert_eq!(sa, sb, "{:?} diverged between serial and parallel", a.cell);
+    }
+    // byte-identical serialized output (what the JSONL sink writes)
+    assert_eq!(jsonl_of(&serial), jsonl_of(&parallel));
+}
+
+#[test]
+fn sweep_grid_order_is_the_nested_product() {
+    let registry = StrategyRegistry::builtin();
+    let sweep = SweepSpec::new(
+        vec![Workload::Atax, Workload::Hotspot],
+        registry.resolve_list("baseline,demand-lru").unwrap(),
+    )
+    .with_oversub(vec![110, 125]);
+    let records = SweepRunner::new(&registry)
+        .run(&sweep, &StrategyCtx::default(), &mut [])
+        .unwrap();
+    assert_eq!(records.len(), 8);
+    assert_eq!(records[0].cell.workload, "ATAX");
+    assert_eq!(records[0].cell.strategy, "baseline");
+    assert_eq!(records[0].cell.oversub, 110);
+    assert_eq!(records[1].cell.oversub, 125);
+    assert_eq!(records[2].cell.strategy, "demand-lru");
+    assert_eq!(records[4].cell.workload, "Hotspot");
+}

@@ -45,23 +45,41 @@ fn synthetic_batch(rt: &Runtime, seed: u64) -> Batch {
 }
 
 #[test]
-fn predictor_full_round_trip() {
+fn predictor_round_trip_any_backend() {
+    // backend-agnostic contract: deterministic init, well-shaped finite
+    // forward, train_step advances state — holds for the stub too
     let Some(rt) = runtime() else { return };
-    let model = rt.model("predictor").expect("compile predictor trio");
-
-    // init is deterministic per seed
+    let model = rt.model("predictor").expect("predictor");
     let p1 = model.init_params(7).unwrap();
     let p2 = model.init_params(7).unwrap();
     let p3 = model.init_params(8).unwrap();
     assert_eq!(p1.len(), model.param_count);
     assert_eq!(p1, p2);
     assert_ne!(p1, p3);
-
-    // forward: finite logits, right arity
     let batch = synthetic_batch(&rt, 42);
     let logits = model.forward(&p1, &batch).unwrap();
-    assert_eq!(logits.len(), model.batch * model.classes);
+    assert_eq!(logits.len(), batch.rows * model.classes);
     assert!(logits.iter().all(|x| x.is_finite()));
+    let mut state = TrainState::fresh(p1);
+    let mask = vec![0.0f32; model.classes];
+    let loss = model.train_step(&mut state, &batch, &mask, 0.1, 0.0).unwrap();
+    assert!(loss.is_finite());
+    assert_eq!(state.step, 1);
+}
+
+#[test]
+fn predictor_full_round_trip() {
+    // accuracy-sensitive: the real Transformer must substantially fit a
+    // learnable batch; the stub makes no such promise
+    if !cfg!(feature = "pjrt") {
+        eprintln!("skipping: learning assertions need --features pjrt");
+        return;
+    }
+    let Some(rt) = runtime() else { return };
+    let model = rt.model("predictor").expect("compile predictor trio");
+
+    let p1 = model.init_params(7).unwrap();
+    let batch = synthetic_batch(&rt, 42);
 
     // training on a fixed batch reduces the loss substantially
     let mut state = TrainState::fresh(p1);

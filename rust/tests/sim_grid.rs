@@ -2,21 +2,30 @@
 //! grid (no PJRT needed). These are the properties DESIGN.md §Key
 //! invariants promises; `DeviceMemory` additionally panics internally on
 //! any capacity or double-install violation, so every run below doubles
-//! as a residency-invariant check.
+//! as a residency-invariant check. All cells run through the strategy
+//! registry by name — the deprecated enum shim keeps one compat test at
+//! the bottom.
 
+use uvmio::api::{CellResult, StrategyCtx, StrategyRegistry};
 use uvmio::config::Scale;
-use uvmio::coordinator::{run_rule_based, RunSpec, Strategy};
+use uvmio::coordinator::RunSpec;
 use uvmio::trace::workloads::Workload;
 
-const RULE_BASED: [Strategy; 7] = [
-    Strategy::Baseline,
-    Strategy::DemandHpe,
-    Strategy::TreeHpe,
-    Strategy::DemandBelady,
-    Strategy::DemandLru,
-    Strategy::DemandRandom,
-    Strategy::UvmSmart,
+const RULE_BASED: [&str; 7] = [
+    "baseline",
+    "demand-hpe",
+    "tree-hpe",
+    "demand-belady",
+    "demand-lru",
+    "demand-random",
+    "uvmsmart",
 ];
+
+fn run(spec: &RunSpec, strategy: &str) -> CellResult {
+    StrategyRegistry::builtin()
+        .run(strategy, spec, &StrategyCtx::default())
+        .expect("rule-based cell")
+}
 
 #[test]
 fn accounting_identities_hold_everywhere() {
@@ -24,9 +33,9 @@ fn accounting_identities_hold_everywhere() {
         let trace = w.generate(Scale::default(), 42);
         for s in RULE_BASED {
             let spec = RunSpec::new(&trace, 125);
-            let out = run_rule_based(&spec, s);
+            let out = run(&spec, s);
             let st = &out.outcome.stats;
-            let name = format!("{}/{}", w.name(), s.name());
+            let name = format!("{}/{s}", w.name());
             assert_eq!(st.accesses, trace.accesses.len() as u64, "{name}");
             // every access either hit, migrated, or was served remotely
             assert_eq!(
@@ -50,15 +59,14 @@ fn accounting_identities_hold_everywhere() {
 fn no_oversubscription_means_no_thrash() {
     for w in Workload::ALL {
         let trace = w.generate(Scale::default(), 42);
-        for s in [Strategy::Baseline, Strategy::DemandLru, Strategy::UvmSmart] {
+        for s in ["baseline", "demand-lru", "uvmsmart"] {
             let spec = RunSpec::new(&trace, 100);
-            let out = run_rule_based(&spec, s);
+            let out = run(&spec, s);
             assert_eq!(
                 out.outcome.stats.thrash_events,
                 0,
-                "{}/{} thrashed at 100%",
-                w.name(),
-                s.name()
+                "{}/{s} thrashed at 100%",
+                w.name()
             );
         }
     }
@@ -79,8 +87,8 @@ fn belady_thrash_bounded_by_lru_thrash() {
         let trace = w.generate(Scale::default(), 42);
         for pct in [125u32, 150] {
             let spec = RunSpec::new(&trace, pct);
-            let min = run_rule_based(&spec, Strategy::DemandBelady);
-            let lru = run_rule_based(&spec, Strategy::DemandLru);
+            let min = run(&spec, "demand-belady");
+            let lru = run(&spec, "demand-lru");
             assert!(
                 min.outcome.stats.thrash_events <= lru.outcome.stats.thrash_events,
                 "{}@{pct}: Belady {} > LRU {}",
@@ -103,7 +111,7 @@ fn streaming_workloads_never_thrash_under_baseline() {
     ] {
         let trace = w.generate(Scale::default(), 42);
         let spec = RunSpec::new(&trace, 125);
-        let out = run_rule_based(&spec, Strategy::Baseline);
+        let out = run(&spec, "baseline");
         assert_eq!(
             out.outcome.stats.thrash_events,
             0,
@@ -119,7 +127,7 @@ fn oversubscription_monotonically_hurts_ipc() {
         let trace = w.generate(Scale::default(), 42);
         let ipc = |pct: u32| {
             let spec = RunSpec::new(&trace, pct);
-            run_rule_based(&spec, Strategy::Baseline).outcome.stats.ipc()
+            run(&spec, "baseline").outcome.stats.ipc()
         };
         let (a, b, c) = (ipc(100), ipc(125), ipc(150));
         assert!(a >= b && b >= c, "{}: {a} {b} {c}", w.name());
@@ -131,18 +139,18 @@ fn crash_emulation_only_fires_on_runaway() {
     let trace = Workload::Bicg.generate(Scale::default(), 42);
     // generous threshold: no crash
     let spec = RunSpec::new(&trace, 125).with_crash_threshold(u64::MAX / 2);
-    assert!(!run_rule_based(&spec, Strategy::Baseline).outcome.crashed);
+    assert!(!run(&spec, "baseline").outcome.crashed);
     // absurdly low threshold: must crash on this thrasher
     let spec = RunSpec::new(&trace, 150).with_crash_threshold(10);
-    assert!(run_rule_based(&spec, Strategy::Baseline).outcome.crashed);
+    assert!(run(&spec, "baseline").outcome.crashed);
 }
 
 #[test]
 fn determinism_across_runs() {
     let trace = Workload::Nw.generate(Scale::default(), 42);
     let spec = RunSpec::new(&trace, 125);
-    let a = run_rule_based(&spec, Strategy::Baseline);
-    let b = run_rule_based(&spec, Strategy::Baseline);
+    let a = run(&spec, "baseline");
+    let b = run(&spec, "baseline");
     assert_eq!(a.outcome.stats.cycles, b.outcome.stats.cycles);
     assert_eq!(a.outcome.stats.thrash_events, b.outcome.stats.thrash_events);
 }
@@ -154,8 +162,8 @@ fn uvmsmart_beats_baseline_on_the_thrashers() {
     for w in [Workload::Atax, Workload::Bicg, Workload::Nw] {
         let trace = w.generate(Scale::default(), 42);
         let spec = RunSpec::new(&trace, 125);
-        let base = run_rule_based(&spec, Strategy::Baseline);
-        let smart = run_rule_based(&spec, Strategy::UvmSmart);
+        let base = run(&spec, "baseline");
+        let smart = run(&spec, "uvmsmart");
         assert!(
             smart.outcome.stats.thrash_events < base.outcome.stats.thrash_events,
             "{}: UVMSmart {} >= baseline {}",
@@ -164,4 +172,19 @@ fn uvmsmart_beats_baseline_on_the_thrashers() {
             base.outcome.stats.thrash_events
         );
     }
+}
+
+#[test]
+#[allow(deprecated)]
+fn deprecated_enum_shim_matches_registry_path() {
+    // the old enum API must keep producing byte-identical stats while it
+    // lives (it now routes through the registry internally)
+    use uvmio::coordinator::{run_rule_based, Strategy};
+    let trace = Workload::Bicg.generate(Scale::default(), 42);
+    let spec = RunSpec::new(&trace, 125);
+    let via_enum = run_rule_based(&spec, Strategy::Baseline);
+    let via_registry = run(&spec, "baseline");
+    assert_eq!(via_enum.outcome.stats, via_registry.outcome.stats);
+    assert_eq!(via_enum.strategy, "baseline");
+    assert_eq!(Strategy::Baseline.registry_name(), "baseline");
 }
