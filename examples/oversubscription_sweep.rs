@@ -5,7 +5,10 @@
 //!
 //! Run: `cargo run --release --example oversubscription_sweep [-- --strategy uvmsmart]`
 
+use std::sync::Arc;
+
 use uvmio::api::{StrategyCtx, StrategyRegistry, SweepRunner, SweepSpec};
+use uvmio::corpus::TraceCache;
 use uvmio::trace::workloads::Workload;
 use uvmio::util::cli::Args;
 
@@ -15,9 +18,13 @@ fn main() -> anyhow::Result<()> {
     let strategy = registry.get(args.get_or("strategy", "baseline"))?.name.clone();
     let levels = vec![100u32, 110, 125, 150, 200];
 
+    // one shared trace per workload serves all five oversubscription
+    // levels (the runner would otherwise use a private per-run cache)
+    let cache = Arc::new(TraceCache::new());
     let sweep = SweepSpec::new(Workload::ALL.to_vec(), vec![strategy.clone()])
         .with_oversub(levels.clone());
     let records = SweepRunner::new(&registry)
+        .with_cache(Arc::clone(&cache))
         .run(&sweep, &StrategyCtx::default(), &mut [])?;
 
     println!("strategy: {strategy}");
@@ -43,5 +50,10 @@ fn main() -> anyhow::Result<()> {
         );
     }
     println!("\n(values are IPC normalized to the 100% — no oversubscription — run)");
+    let cs = cache.stats();
+    println!(
+        "trace cache: {} built once, {} cells shared them",
+        cs.builds, cs.hits
+    );
     Ok(())
 }

@@ -1,0 +1,82 @@
+//! Corpus benchmarks: `.uvmt` encode/decode throughput vs regeneration,
+//! cache hit latency, and the sweep-level payoff of the shared trace
+//! cache (the number that justifies the subsystem — a warm cache turns
+//! every repeated cell's trace cost into an `Arc` clone).
+
+#[path = "common/mod.rs"]
+mod common;
+
+use std::sync::Arc;
+
+use common::Bench;
+use uvmio::api::{StrategyCtx, StrategyRegistry, SweepRunner, SweepSpec};
+use uvmio::config::Scale;
+use uvmio::corpus::{format as uvmt, TraceCache};
+use uvmio::trace::workloads::Workload;
+
+fn main() {
+    let b = Bench::new("corpus");
+
+    // NW is the delta-heavy worst case; StreamTriad the best case
+    for w in [Workload::Nw, Workload::StreamTriad] {
+        let t = w.generate(Scale::default(), 42);
+        let n = t.accesses.len() as u64;
+        let bytes = uvmt::encode(&t, "bench");
+        println!(
+            "# {}: {} accesses -> {} uvmt bytes ({:.2} B/access)",
+            w.name(),
+            n,
+            bytes.len(),
+            bytes.len() as f64 / n as f64
+        );
+        b.bench(&format!("generate/{}", w.name()), n, || {
+            std::hint::black_box(w.generate(Scale::default(), 42));
+        });
+        b.bench(&format!("encode/{}", w.name()), n, || {
+            std::hint::black_box(uvmt::encode(&t, "bench"));
+        });
+        b.bench(&format!("decode/{}", w.name()), n, || {
+            std::hint::black_box(uvmt::decode(&bytes).unwrap());
+        });
+    }
+
+    // cache hit path: lock + lookup + Arc clone
+    let cache = TraceCache::new();
+    cache
+        .get_builtin(Workload::Hotspot, Scale::default(), 42)
+        .unwrap();
+    b.bench("cache/hit/Hotspot", 1, || {
+        std::hint::black_box(
+            cache
+                .get_builtin(Workload::Hotspot, Scale::default(), 42)
+                .unwrap(),
+        );
+    });
+
+    // sweep payoff: same grid, private per-run cache vs shared warm cache
+    let registry = StrategyRegistry::builtin();
+    let sweep = SweepSpec::new(
+        vec![Workload::Atax, Workload::Bicg, Workload::Hotspot],
+        vec!["baseline".to_string(), "demand-lru".to_string()],
+    )
+    .with_oversub(vec![110, 125])
+    .with_seeds(vec![42, 7]);
+    let cells = sweep.len() as u64;
+    let empty = StrategyCtx::default();
+
+    b.bench("sweep/3x2x2x2/cold-cache", cells, || {
+        let records = SweepRunner::new(&registry)
+            .run(&sweep, &empty, &mut [])
+            .unwrap();
+        std::hint::black_box(records);
+    });
+
+    let shared = Arc::new(TraceCache::new());
+    b.bench("sweep/3x2x2x2/warm-shared-cache", cells, || {
+        let records = SweepRunner::new(&registry)
+            .with_cache(Arc::clone(&shared))
+            .run(&sweep, &empty, &mut [])
+            .unwrap();
+        std::hint::black_box(records);
+    });
+}

@@ -17,7 +17,12 @@
 //!   (the PJRT client is not thread-safe), and stream [`CellRecord`]s to
 //!   pluggable [`SweepSink`]s (console / CSV / JSON Lines) in
 //!   deterministic grid order — a parallel run is byte-identical to a
-//!   serial one.
+//!   serial one. Both lanes draw traces from a shared
+//!   [`crate::corpus::TraceCache`] (see [`SweepRunner::with_cache`]):
+//!   each (workload, scale, seed) trace is built once per run and shared
+//!   as `Arc<Trace>`. Workload slots ([`SweepWorkload`]) accept builtin
+//!   generators or any [`crate::corpus::TraceSource`] — corpus entries,
+//!   imported CSV / UVM-fault-log traces, `A+B` multi-tenant pairs.
 //!
 //! ```no_run
 //! use uvmio::api::{ConsoleSink, StrategyCtx, StrategyRegistry, SweepRunner,
@@ -46,4 +51,4 @@ pub use registry::{
     StrategySpec,
 };
 pub use sink::{ConsoleSink, CsvSink, JsonlSink, record_to_json, SweepSink};
-pub use sweep::{CellId, CellRecord, SweepRunner, SweepSpec};
+pub use sweep::{CellId, CellRecord, SweepRunner, SweepSpec, SweepWorkload};

@@ -8,6 +8,12 @@
 //! the single [`StrategyRegistry::run`] path, which drives the engine,
 //! reads [`crate::policy::PolicyInstrumentation`] off the policy, and
 //! applies the §V-C prediction-overhead post-pass uniformly.
+//!
+//! A cell's trace arrives via the [`RunSpec`]; grid executors obtain it
+//! from the shared [`crate::corpus::TraceCache`] (one immutable
+//! `Arc<Trace>` per workload × scale × seed) rather than regenerating
+//! per cell — factories therefore must treat `spec.trace` as shared
+//! read-only data.
 
 use std::collections::BTreeMap;
 use std::sync::Arc;

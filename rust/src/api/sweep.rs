@@ -3,55 +3,124 @@
 //! sinks in deterministic cell order.
 //!
 //! Threading model: every cell is an independent, deterministic
-//! simulation, so rule-based cells fan out across a worker pool (each
-//! worker regenerates its own trace — traces are cheap relative to the
-//! engine run and sharing them would serialize on nothing). Strategies
-//! whose spec is `needs_artifacts` run on the caller's thread instead:
-//! under the `pjrt` feature the compiled-model handle is not `Sync`
-//! (PJRT's CPU client is single-threaded), so those cells share one
-//! serialized lane with the ctx that owns the model. Results are
+//! simulation, so rule-based cells fan out across a worker pool.
+//! Strategies whose spec is `needs_artifacts` run on the caller's thread
+//! instead: under the `pjrt` feature the compiled-model handle is not
+//! `Sync` (PJRT's CPU client is single-threaded), so those cells share
+//! one serialized lane with the ctx that owns the model. Results are
 //! re-ordered onto the original grid order before they reach the sinks,
 //! which makes a parallel run byte-identical to a serial one.
+//!
+//! Traces: both lanes draw from one shared
+//! [`TraceCache`](crate::corpus::TraceCache) — each distinct
+//! (workload, scale, seed) trace is built exactly once per run and
+//! handed out as `Arc<Trace>`, instead of being regenerated per cell.
+//! Pass a cache with [`SweepRunner::with_cache`] to share traces across
+//! sweeps (a store-backed cache additionally persists builtin traces
+//! across processes); otherwise each `run` uses a private one. Workload slots are open: a builtin
+//! generator or any [`TraceSource`](crate::corpus::TraceSource) — a
+//! corpus entry, a CSV dump, a UVM fault log, or an `A+B` multi-tenant
+//! composition — via [`SweepWorkload`].
 
 use std::collections::BTreeMap;
+use std::fmt;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::mpsc;
+use std::sync::{mpsc, Arc};
 use std::thread;
 
 use anyhow::{bail, Result};
 
 use crate::config::Scale;
 use crate::coordinator::RunSpec;
+use crate::corpus::{TraceCache, TraceSource};
 use crate::trace::workloads::Workload;
+use crate::trace::Trace;
 
 use super::registry::{CellResult, StrategyCtx, StrategyRegistry};
 use super::sink::SweepSink;
+
+/// One workload slot of a sweep: a builtin synthetic generator, or any
+/// trace source (corpus entry, imported file, multi-tenant composition).
+#[derive(Clone)]
+pub enum SweepWorkload {
+    Builtin(Workload),
+    Source(Arc<dyn TraceSource>),
+}
+
+impl SweepWorkload {
+    /// Display name (what `CellId::workload` carries).
+    pub fn name(&self) -> String {
+        match self {
+            SweepWorkload::Builtin(w) => w.name().to_string(),
+            SweepWorkload::Source(s) => s.name(),
+        }
+    }
+
+    /// The shared trace for one cell, via the cache.
+    fn load_cached(
+        &self,
+        cache: &TraceCache,
+        scale: Scale,
+        seed: u64,
+    ) -> Result<Arc<Trace>> {
+        match self {
+            SweepWorkload::Builtin(w) => cache.get_builtin(*w, scale, seed),
+            SweepWorkload::Source(s) => cache.get_source(s.as_ref(), scale, seed),
+        }
+    }
+}
+
+impl fmt::Debug for SweepWorkload {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "SweepWorkload({})", self.name())
+    }
+}
+
+impl From<Workload> for SweepWorkload {
+    fn from(w: Workload) -> SweepWorkload {
+        SweepWorkload::Builtin(w)
+    }
+}
+
+impl From<Arc<dyn TraceSource>> for SweepWorkload {
+    fn from(s: Arc<dyn TraceSource>) -> SweepWorkload {
+        SweepWorkload::Source(s)
+    }
+}
 
 /// The grid a sweep covers. Cell order (the order sinks observe) is the
 /// nested product: workload → strategy → oversubscription → seed.
 #[derive(Debug, Clone)]
 pub struct SweepSpec {
-    pub workloads: Vec<Workload>,
+    pub workloads: Vec<SweepWorkload>,
     /// registry names; validate with [`StrategyRegistry::resolve_list`]
     pub strategies: Vec<String>,
     /// oversubscription levels in percent (100 = no oversubscription)
     pub oversub: Vec<u32>,
     pub seeds: Vec<u64>,
     pub scale: Scale,
-    /// crash emulation threshold applied to every cell (thrash events)
+    /// crash emulation threshold (thrash events) applied to every cell
+    /// whose oversubscription level has no entry in `crash_threshold_at`
     pub crash_threshold: Option<u64>,
+    /// per-oversubscription-level crash thresholds (Fig 14: crashes are
+    /// a phenomenon of *specific* levels — 150% crashes, 125% does not)
+    pub crash_threshold_at: BTreeMap<u32, u64>,
 }
 
 impl SweepSpec {
     /// A sweep over the given workloads and strategies @125%, seed 42.
-    pub fn new(workloads: Vec<Workload>, strategies: Vec<String>) -> SweepSpec {
+    pub fn new<W: Into<SweepWorkload>>(
+        workloads: Vec<W>,
+        strategies: Vec<String>,
+    ) -> SweepSpec {
         SweepSpec {
-            workloads,
+            workloads: workloads.into_iter().map(Into::into).collect(),
             strategies,
             oversub: vec![125],
             seeds: vec![42],
             scale: Scale::default(),
             crash_threshold: None,
+            crash_threshold_at: BTreeMap::new(),
         }
     }
 
@@ -70,9 +139,27 @@ impl SweepSpec {
         self
     }
 
+    /// Global crash threshold (fallback for levels without an override).
     pub fn with_crash_threshold(mut self, t: u64) -> SweepSpec {
         self.crash_threshold = Some(t);
         self
+    }
+
+    /// Crash threshold for cells at one oversubscription level, e.g.
+    /// `.with_crash_threshold_at(150, t)` to reproduce the Fig-14 crash
+    /// columns while @125% cells run uncapped.
+    pub fn with_crash_threshold_at(mut self, level: u32, t: u64) -> SweepSpec {
+        self.crash_threshold_at.insert(level, t);
+        self
+    }
+
+    /// Effective crash threshold for a level: the per-level override if
+    /// present, else the global threshold, else none.
+    pub fn crash_threshold_for(&self, oversub: u32) -> Option<u64> {
+        self.crash_threshold_at
+            .get(&oversub)
+            .copied()
+            .or(self.crash_threshold)
     }
 
     /// Number of grid cells.
@@ -105,10 +192,10 @@ pub struct CellRecord {
     pub result: Result<CellResult, String>,
 }
 
-/// Internal cell definition (keeps the `Workload` enum for generation).
+/// Internal cell definition (keeps the workload handle for loading).
 #[derive(Debug, Clone)]
 struct Cell {
-    workload: Workload,
+    workload: SweepWorkload,
     strategy: String,
     oversub: u32,
     seed: u64,
@@ -119,16 +206,27 @@ struct Cell {
 pub struct SweepRunner<'r> {
     registry: &'r StrategyRegistry,
     threads: usize,
+    cache: Option<Arc<TraceCache>>,
 }
 
 impl<'r> SweepRunner<'r> {
     pub fn new(registry: &'r StrategyRegistry) -> SweepRunner<'r> {
-        SweepRunner { registry, threads: 0 }
+        SweepRunner { registry, threads: 0, cache: None }
     }
 
     /// Worker-thread count for the parallel lane (0 = one per core).
     pub fn with_threads(mut self, threads: usize) -> SweepRunner<'r> {
         self.threads = threads;
+        self
+    }
+
+    /// Share a trace cache across runs; when the cache is backed by a
+    /// [`crate::corpus::CorpusStore`], builtin workload traces are also
+    /// persisted/reloaded across processes. Without this, each `run`
+    /// uses a private cache — traces are still built only once *within*
+    /// the run.
+    pub fn with_cache(mut self, cache: Arc<TraceCache>) -> SweepRunner<'r> {
+        self.cache = Some(cache);
         self
     }
 
@@ -153,7 +251,7 @@ impl<'r> SweepRunner<'r> {
         let mut cells = Vec::with_capacity(sweep.len());
         let mut parallel_idx = Vec::new();
         let mut serial_idx = Vec::new();
-        for &w in &sweep.workloads {
+        for w in &sweep.workloads {
             for (si, strategy) in sweep.strategies.iter().enumerate() {
                 for &oversub in &sweep.oversub {
                     for &seed in &sweep.seeds {
@@ -164,7 +262,7 @@ impl<'r> SweepRunner<'r> {
                             parallel_idx.push(idx);
                         }
                         cells.push(Cell {
-                            workload: w,
+                            workload: w.clone(),
                             strategy: strategy.clone(),
                             oversub,
                             seed,
@@ -180,6 +278,12 @@ impl<'r> SweepRunner<'r> {
             self.threads
         }
         .min(parallel_idx.len().max(1));
+
+        let owned_cache = match &self.cache {
+            Some(c) => Arc::clone(c),
+            None => Arc::new(TraceCache::new()),
+        };
+        let cache: &TraceCache = &owned_cache;
 
         let registry = self.registry;
         let next = AtomicUsize::new(0);
@@ -200,7 +304,8 @@ impl<'r> SweepRunner<'r> {
                             break;
                         }
                         let ci = parallel_idx[i];
-                        let rec = run_one(registry, sweep, &cells[ci], &worker_ctx);
+                        let rec =
+                            run_one(registry, sweep, &cells[ci], &worker_ctx, cache);
                         if tx.send((ci, rec)).is_err() {
                             break; // receiver gone: sweep aborted
                         }
@@ -209,9 +314,10 @@ impl<'r> SweepRunner<'r> {
             }
 
             // serialized lane: artifact-backed cells, on this thread,
-            // with the caller's ctx (owns the compiled model)
+            // with the caller's ctx (owns the compiled model); traces
+            // come from the same shared cache as the worker lane
             for &ci in &serial_idx {
-                let rec = run_one(registry, sweep, &cells[ci], ctx);
+                let rec = run_one(registry, sweep, &cells[ci], ctx, cache);
                 let _ = tx.send((ci, rec));
             }
             drop(tx);
@@ -247,22 +353,26 @@ fn run_one(
     sweep: &SweepSpec,
     cell: &Cell,
     ctx: &StrategyCtx,
+    cache: &TraceCache,
 ) -> CellRecord {
-    let trace = cell.workload.generate(sweep.scale, cell.seed);
+    let id = CellId {
+        workload: cell.workload.name(),
+        strategy: cell.strategy.clone(),
+        oversub: cell.oversub,
+        seed: cell.seed,
+    };
+    let trace = match cell.workload.load_cached(cache, sweep.scale, cell.seed) {
+        Ok(t) => t,
+        Err(e) => {
+            return CellRecord { cell: id, result: Err(format!("{e:#}")) };
+        }
+    };
     let mut spec = RunSpec::new(&trace, cell.oversub);
-    if let Some(t) = sweep.crash_threshold {
+    if let Some(t) = sweep.crash_threshold_for(cell.oversub) {
         spec = spec.with_crash_threshold(t);
     }
     let result = registry
         .run(&cell.strategy, &spec, ctx)
         .map_err(|e| format!("{e:#}"));
-    CellRecord {
-        cell: CellId {
-            workload: cell.workload.name().to_string(),
-            strategy: cell.strategy.clone(),
-            oversub: cell.oversub,
-            seed: cell.seed,
-        },
-        result,
-    }
+    CellRecord { cell: id, result }
 }

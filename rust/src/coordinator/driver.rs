@@ -1,91 +1,20 @@
-//! Run-spec plumbing plus **deprecated shims** over [`crate::api`].
+//! Run-spec plumbing over [`crate::api`].
 //!
 //! The (trace × strategy) drivers that used to live here — a closed
 //! `Strategy` enum and the forked `run_rule_based` / `run_intelligent`
-//! pair — are now thin wrappers over the open strategy registry:
-//! [`crate::api::StrategyRegistry`] owns the strategy catalogue and the
-//! single execution path (including the §V-C prediction-overhead
-//! post-pass). New code should call the registry directly; the shims
-//! exist so historical callers keep compiling during the migration and
-//! will be removed once nothing links against them.
+//! pair — are gone: [`crate::api::StrategyRegistry`] owns the strategy
+//! catalogue and the single execution path (including the §V-C
+//! prediction-overhead post-pass), and every caller addresses
+//! strategies by registry name. What remains here is the per-run
+//! plumbing: [`RunSpec`], [`feat_dims`], [`normalized_ipc`].
 
-use std::sync::Arc;
-
-use anyhow::Result;
-
-use crate::api::{StrategyCtx, StrategyRegistry};
 use crate::config::SimConfig;
-use crate::predictor::{FeatDims, IntelligentConfig};
-use crate::runtime::{ModelRuntime, Runtime};
+use crate::predictor::FeatDims;
+use crate::runtime::Runtime;
 use crate::sim::RunOutcome;
 use crate::trace::Trace;
 
 pub use crate::api::CellResult;
-
-/// The named strategies of the paper's tables.
-#[deprecated(
-    since = "0.2.0",
-    note = "the strategy set is open now — use registry names \
-            (uvmio::api::StrategyRegistry) instead of enum variants"
-)]
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum Strategy {
-    /// Tree prefetcher + LRU (the CUDA runtime; "Baseline")
-    Baseline,
-    /// Demand + HPE
-    DemandHpe,
-    /// Tree prefetcher + HPE (the Table II pathology)
-    TreeHpe,
-    /// Demand + Belady MIN (theoretical upper bound)
-    DemandBelady,
-    /// Demand + LRU
-    DemandLru,
-    /// Demand + Random
-    DemandRandom,
-    /// UVMSmart adaptive runtime (SOTA comparator)
-    UvmSmart,
-    /// Our intelligent framework (requires artifacts)
-    Intelligent,
-}
-
-#[allow(deprecated)]
-impl Strategy {
-    pub const TABLE6: [Strategy; 6] = [
-        Strategy::Baseline,
-        Strategy::TreeHpe,
-        Strategy::UvmSmart,
-        Strategy::Intelligent,
-        Strategy::DemandHpe,
-        Strategy::DemandBelady,
-    ];
-
-    /// Registry key of this variant (the open-world strategy name).
-    pub fn registry_name(&self) -> &'static str {
-        match self {
-            Strategy::Baseline => "baseline",
-            Strategy::DemandHpe => "demand-hpe",
-            Strategy::TreeHpe => "tree-hpe",
-            Strategy::DemandBelady => "demand-belady",
-            Strategy::DemandLru => "demand-lru",
-            Strategy::DemandRandom => "demand-random",
-            Strategy::UvmSmart => "uvmsmart",
-            Strategy::Intelligent => "intelligent",
-        }
-    }
-
-    pub fn name(&self) -> &'static str {
-        match self {
-            Strategy::Baseline => "Baseline",
-            Strategy::DemandHpe => "Demand.+HPE",
-            Strategy::TreeHpe => "Tree.+HPE",
-            Strategy::DemandBelady => "Demand.+Belady.",
-            Strategy::DemandLru => "Demand.+LRU",
-            Strategy::DemandRandom => "Demand.+Random",
-            Strategy::UvmSmart => "UVMSmart",
-            Strategy::Intelligent => "Our solution",
-        }
-    }
-}
 
 /// Everything a single simulation run needs.
 pub struct RunSpec<'a> {
@@ -109,39 +38,6 @@ impl<'a> RunSpec<'a> {
         self.crash_threshold = Some(t);
         self
     }
-}
-
-/// Run a rule-based strategy (everything except `Intelligent`).
-#[deprecated(
-    since = "0.2.0",
-    note = "use uvmio::api::StrategyRegistry::run with a registry name"
-)]
-#[allow(deprecated)]
-pub fn run_rule_based(spec: &RunSpec, strategy: Strategy) -> CellResult {
-    if strategy == Strategy::Intelligent {
-        panic!("use run_intelligent for the learning-based strategy");
-    }
-    StrategyRegistry::builtin()
-        .run(strategy.registry_name(), spec, &StrategyCtx::default())
-        .expect("rule-based strategies cannot fail to construct")
-}
-
-/// Run the intelligent framework. Charges the per-invocation prediction
-/// overhead (§V-C) onto the final cycle count.
-#[deprecated(
-    since = "0.2.0",
-    note = "use uvmio::api::StrategyRegistry::run(\"intelligent\", ..) \
-            with a StrategyCtx built from the runtime"
-)]
-pub fn run_intelligent(
-    spec: &RunSpec,
-    rt: &Arc<ModelRuntime>,
-    runtime: &Runtime,
-    icfg: IntelligentConfig,
-) -> Result<CellResult> {
-    let ctx = StrategyCtx::with_model(Arc::clone(rt), feat_dims(runtime))
-        .with_icfg(icfg);
-    StrategyRegistry::builtin().run("intelligent", spec, &ctx)
 }
 
 /// FeatDims straight from the manifest (single source of truth).

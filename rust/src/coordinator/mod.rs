@@ -4,18 +4,16 @@
 //! Cell execution lives in [`crate::api`] now: strategies are looked up
 //! by name in an open [`crate::api::StrategyRegistry`] and whole grids
 //! run through [`crate::api::SweepRunner`]. What remains here is the
-//! run-spec plumbing ([`RunSpec`], [`feat_dims`], [`normalized_ipc`]),
-//! the training/accuracy harnesses ([`trainer`], [`multi`]) that operate
-//! on sample streams rather than grid cells, and deprecated shims
-//! (`Strategy`, `run_rule_based`, `run_intelligent`) kept only for
-//! historical callers.
+//! run-spec plumbing ([`RunSpec`], [`feat_dims`], [`normalized_ipc`])
+//! and the training/accuracy harnesses ([`trainer`], [`multi`]) that
+//! operate on sample streams rather than grid cells. The deprecated
+//! PR-1 shims (`Strategy`, `run_rule_based`, `run_intelligent`) are
+//! removed — address strategies by registry name.
 
 pub mod driver;
 pub mod multi;
 pub mod trainer;
 
-#[allow(deprecated)]
-pub use driver::{run_intelligent, run_rule_based, Strategy};
 pub use driver::{feat_dims, normalized_ipc, CellResult, RunSpec};
 pub use multi::{multi_accuracy, MultiReport};
 pub use trainer::{offline_accuracy, online_accuracy, AccuracyReport, TrainOpts};

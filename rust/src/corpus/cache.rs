@@ -1,0 +1,316 @@
+//! `TraceCache` — the shared in-memory half of the corpus.
+//!
+//! Every consumer of a trace (sweep workers, the serialized artifact
+//! lane, the `exp` harnesses) asks the cache instead of calling
+//! `Workload::generate` directly; the cache hands out `Arc<Trace>` so
+//! one immutable copy per (workload × scale × seed) is shared across
+//! threads instead of being regenerated per grid cell. Optionally
+//! backed by a [`CorpusStore`]: *builtin* misses are first looked up on
+//! disk (`.uvmt` decode is much cheaper than regeneration for the big
+//! irregular workloads) and freshly generated traces are persisted so
+//! the next process shares them too. [`TraceSource`] loads (corpus
+//! names, `csv:`/`uvmlog:` files, compositions) are cached in memory
+//! only — corpus-named sources already read from the store, and file
+//! sources re-parse their file once per process.
+//!
+//! Concurrency: a global map mutex held only for slot lookup, plus one
+//! mutex per key held across that key's construction. Distinct traces
+//! build in parallel across sweep workers, while two requests for the
+//! SAME key serialize — which is what makes "each trace is built
+//! exactly once" a hard guarantee ([`CacheStats::builds`] counts
+//! constructions) rather than a race.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+use crate::config::Scale;
+use crate::trace::workloads::Workload;
+use crate::trace::Trace;
+
+use super::source::TraceSource;
+use super::store::CorpusStore;
+
+/// Cache effectiveness counters (monotone since construction).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// requests served from memory (shared `Arc` handed out)
+    pub hits: u64,
+    /// traces constructed (generated or loaded through a source)
+    pub builds: u64,
+    /// misses satisfied by decoding a `.uvmt` from the backing store
+    pub store_loads: u64,
+    /// freshly generated traces persisted to the backing store
+    pub store_writes: u64,
+}
+
+impl CacheStats {
+    /// Total cache misses (every one produced exactly one trace).
+    pub fn misses(&self) -> u64 {
+        self.builds + self.store_loads
+    }
+}
+
+/// One per-key slot: its mutex is held across that key's construction,
+/// so the same trace is never built twice while distinct keys proceed
+/// in parallel.
+type Slot = Arc<Mutex<Option<Arc<Trace>>>>;
+
+/// How a freshly constructed trace came to be (for the stats).
+enum Origin {
+    /// built by a generator or source load; `persisted` = also written
+    /// to the backing store
+    Built { persisted: bool },
+    /// decoded from the backing store
+    StoreLoaded,
+}
+
+/// Process-wide cache of immutable traces. `Sync`: share it by
+/// reference (or `Arc`) across sweep workers.
+pub struct TraceCache {
+    map: Mutex<HashMap<String, Slot>>,
+    store: Option<CorpusStore>,
+    hits: AtomicU64,
+    builds: AtomicU64,
+    store_loads: AtomicU64,
+    store_writes: AtomicU64,
+}
+
+impl Default for TraceCache {
+    fn default() -> Self {
+        TraceCache::new()
+    }
+}
+
+impl TraceCache {
+    /// A purely in-memory cache.
+    pub fn new() -> TraceCache {
+        TraceCache {
+            map: Mutex::new(HashMap::new()),
+            store: None,
+            hits: AtomicU64::new(0),
+            builds: AtomicU64::new(0),
+            store_loads: AtomicU64::new(0),
+            store_writes: AtomicU64::new(0),
+        }
+    }
+
+    /// A cache backed by an on-disk corpus: builtin misses consult the
+    /// store, fresh generations are persisted to it.
+    pub fn with_store(store: CorpusStore) -> TraceCache {
+        let mut c = TraceCache::new();
+        c.store = Some(store);
+        c
+    }
+
+    pub fn store(&self) -> Option<&CorpusStore> {
+        self.store.as_ref()
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            builds: self.builds.load(Ordering::Relaxed),
+            store_loads: self.store_loads.load(Ordering::Relaxed),
+            store_writes: self.store_writes.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Distinct trace slots currently resident.
+    pub fn len(&self) -> usize {
+        self.map.lock().unwrap_or_else(|p| p.into_inner()).len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Drop every resident trace (outstanding `Arc`s stay alive).
+    pub fn clear(&self) {
+        self.map.lock().unwrap_or_else(|p| p.into_inner()).clear();
+    }
+
+    /// The slot for `key`, creating it if absent. Global lock held only
+    /// for this lookup.
+    fn slot(&self, key: &str) -> Slot {
+        let mut map = self.map.lock().unwrap_or_else(|p| p.into_inner());
+        match map.get(key) {
+            Some(s) => Arc::clone(s),
+            None => {
+                let s = Slot::default();
+                map.insert(key.to_string(), Arc::clone(&s));
+                s
+            }
+        }
+    }
+
+    /// Hit the slot or construct via `build` with only the per-key lock
+    /// held. A failed build leaves the slot empty, so a later call
+    /// retries.
+    fn get_or_build(
+        &self,
+        key: &str,
+        build: impl FnOnce() -> Result<(Trace, Origin)>,
+    ) -> Result<Arc<Trace>> {
+        let slot = self.slot(key);
+        let mut guard = slot.lock().unwrap_or_else(|p| p.into_inner());
+        if let Some(t) = guard.as_ref() {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(Arc::clone(t));
+        }
+        let (trace, origin) = build()?;
+        match origin {
+            Origin::Built { persisted } => {
+                self.builds.fetch_add(1, Ordering::Relaxed);
+                if persisted {
+                    self.store_writes.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            Origin::StoreLoaded => {
+                self.store_loads.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        let arc = Arc::new(trace);
+        *guard = Some(Arc::clone(&arc));
+        Ok(arc)
+    }
+
+    /// The shared trace of a builtin workload at (scale, seed) —
+    /// generated at most once per process, loaded from / persisted to
+    /// the backing store when one is attached.
+    pub fn get_builtin(
+        &self,
+        workload: Workload,
+        scale: Scale,
+        seed: u64,
+    ) -> Result<Arc<Trace>> {
+        let key = CorpusStore::generated_key(workload.name(), scale, seed);
+        self.get_or_build(&key, || {
+            if let Some(store) = &self.store {
+                if let Some(t) = store.get(&key)? {
+                    return Ok((t, Origin::StoreLoaded));
+                }
+            }
+            let t = workload.generate(scale, seed);
+            let persisted = match &self.store {
+                Some(store) => {
+                    store.put(&key, &t)?;
+                    true
+                }
+                None => false,
+            };
+            Ok((t, Origin::Built { persisted }))
+        })
+    }
+
+    /// The shared trace of any [`TraceSource`], keyed by the source's
+    /// cache key (which folds in scale/seed only for parameterized
+    /// sources — a corpus- or file-backed trace is one copy total).
+    /// Cached in memory only; see the module docs.
+    pub fn get_source(
+        &self,
+        src: &dyn TraceSource,
+        scale: Scale,
+        seed: u64,
+    ) -> Result<Arc<Trace>> {
+        let key = src.cache_key(scale, seed);
+        self.get_or_build(&key, || {
+            Ok((src.load(scale, seed)?, Origin::Built { persisted: false }))
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hits_share_one_arc() {
+        let cache = TraceCache::new();
+        let a = cache.get_builtin(Workload::Hotspot, Scale::default(), 42).unwrap();
+        let b = cache.get_builtin(Workload::Hotspot, Scale::default(), 42).unwrap();
+        assert!(Arc::ptr_eq(&a, &b));
+        let s = cache.stats();
+        assert_eq!((s.builds, s.hits), (1, 1));
+        // a different seed is a different trace
+        let c = cache.get_builtin(Workload::Hotspot, Scale::default(), 7).unwrap();
+        assert!(!Arc::ptr_eq(&a, &c));
+        assert_eq!(cache.stats().builds, 2);
+        assert_eq!(cache.len(), 2);
+    }
+
+    #[test]
+    fn store_backed_cache_persists_and_reloads() {
+        let dir = std::env::temp_dir().join(format!(
+            "uvmio-cache-test-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        {
+            let cache =
+                TraceCache::with_store(CorpusStore::open(&dir).unwrap());
+            cache.get_builtin(Workload::Bicg, Scale::default(), 42).unwrap();
+            let s = cache.stats();
+            assert_eq!((s.builds, s.store_writes, s.store_loads), (1, 1, 0));
+        }
+        {
+            // a fresh process-equivalent: the miss is served from disk
+            let cache =
+                TraceCache::with_store(CorpusStore::open(&dir).unwrap());
+            let t = cache.get_builtin(Workload::Bicg, Scale::default(), 42).unwrap();
+            assert_eq!(t.name, "BICG");
+            let s = cache.stats();
+            assert_eq!((s.builds, s.store_loads), (0, 1));
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn concurrent_gets_build_once() {
+        let cache = Arc::new(TraceCache::new());
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                let cache = Arc::clone(&cache);
+                s.spawn(move || {
+                    cache
+                        .get_builtin(Workload::Nw, Scale::default(), 42)
+                        .unwrap();
+                });
+            }
+        });
+        let st = cache.stats();
+        assert_eq!(st.builds, 1);
+        assert_eq!(st.hits, 7);
+    }
+
+    #[test]
+    fn failed_build_leaves_slot_retryable() {
+        struct Flaky(std::sync::atomic::AtomicBool);
+        impl TraceSource for Flaky {
+            fn id(&self) -> String {
+                "flaky".into()
+            }
+            fn name(&self) -> String {
+                "flaky".into()
+            }
+            fn parameterized(&self) -> bool {
+                false
+            }
+            fn load(&self, _s: Scale, _r: u64) -> Result<Trace> {
+                if self.0.swap(false, Ordering::SeqCst) {
+                    anyhow::bail!("transient");
+                }
+                Ok(Workload::Mvt.generate(Scale::default(), 1))
+            }
+        }
+        let cache = TraceCache::new();
+        let src = Flaky(std::sync::atomic::AtomicBool::new(true));
+        assert!(cache.get_source(&src, Scale::default(), 0).is_err());
+        // the failure did not poison the slot: the retry succeeds
+        let t = cache.get_source(&src, Scale::default(), 0).unwrap();
+        assert_eq!(t.name, "MVT");
+        assert_eq!(cache.stats().builds, 1);
+    }
+}

@@ -1,0 +1,378 @@
+//! `.uvmt` — the corpus's compact, versioned, checksummed binary trace
+//! format.
+//!
+//! Layout (all integers little-endian in the fixed header, LEB128
+//! varints in the body):
+//!
+//! ```text
+//! [0..4)   magic  "UVMT"
+//! [4..6)   format version (u16, currently 1)
+//! [6..8)   reserved (0)
+//! [8..16)  FNV-1a 64 checksum of the body (u64)
+//! [16..24) body length in bytes (u64)
+//! [24..)   body:
+//!   key                 vstr  — store key / provenance label
+//!   name                vstr  — Trace::name
+//!   working_set_pages   varint
+//!   touched_pages       varint
+//!   kernels             varint
+//!   allocations         varint count, then (base varint, pages varint) each
+//!   n_accesses          varint
+//!   accesses, delta-encoded per access:
+//!     zigzag(page  - prev_page)      varint
+//!     zigzag(pc    - prev_pc)        varint
+//!     zigzag(tb    - prev_tb)        varint
+//!     zigzag(kernel - prev_kernel)   varint
+//!     (inst_gap << 1) | is_write     varint
+//! ```
+//!
+//! Delta-encoding pages and varint-packing every field exploits the
+//! spatial locality the whole paper is about: streaming workloads
+//! compress to a few bytes per access vs the 32-byte in-memory
+//! [`Access`].
+//! [`decode`] is the exact inverse of [`encode`] — the round-trip is
+//! lossless for every field of [`Trace`], including the allocation map
+//! the prefetcher relies on. A flipped bit anywhere in the body fails
+//! the checksum; a truncated file fails the length check; a future
+//! on-disk revision bumps `VERSION` and old readers reject it cleanly.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::trace::{Access, Trace};
+use crate::util::hash::fnv1a64;
+
+/// File magic: "UVMT".
+pub const MAGIC: [u8; 4] = *b"UVMT";
+/// On-disk format version this build reads and writes.
+pub const VERSION: u16 = 1;
+/// Fixed container header size (magic + version + reserved + checksum +
+/// body length).
+pub const HEADER_LEN: usize = 24;
+
+// ---- varint / zigzag primitives -------------------------------------------
+
+fn put_varint(out: &mut Vec<u8>, mut v: u64) {
+    while v >= 0x80 {
+        out.push((v as u8) | 0x80);
+        v >>= 7;
+    }
+    out.push(v as u8);
+}
+
+fn get_varint(buf: &[u8], pos: &mut usize) -> Result<u64> {
+    let mut v: u64 = 0;
+    let mut shift: u32 = 0;
+    loop {
+        let b = *buf
+            .get(*pos)
+            .ok_or_else(|| anyhow!("uvmt: truncated varint at byte {}", *pos))?;
+        *pos += 1;
+        if shift > 63 {
+            bail!("uvmt: varint wider than 64 bits at byte {}", *pos);
+        }
+        v |= ((b & 0x7f) as u64) << shift;
+        if b & 0x80 == 0 {
+            return Ok(v);
+        }
+        shift += 7;
+    }
+}
+
+fn zigzag(v: i64) -> u64 {
+    (v.wrapping_shl(1) ^ (v >> 63)) as u64
+}
+
+fn unzigzag(v: u64) -> i64 {
+    ((v >> 1) as i64) ^ -((v & 1) as i64)
+}
+
+fn put_vstr(out: &mut Vec<u8>, s: &str) {
+    put_varint(out, s.len() as u64);
+    out.extend_from_slice(s.as_bytes());
+}
+
+fn get_vstr(buf: &[u8], pos: &mut usize) -> Result<String> {
+    let len = get_varint(buf, pos)? as usize;
+    let end = pos
+        .checked_add(len)
+        .filter(|&e| e <= buf.len())
+        .ok_or_else(|| anyhow!("uvmt: truncated string at byte {}", *pos))?;
+    let s = std::str::from_utf8(&buf[*pos..end])
+        .map_err(|e| anyhow!("uvmt: invalid utf-8 in string: {e}"))?
+        .to_string();
+    *pos = end;
+    Ok(s)
+}
+
+// ---- metadata --------------------------------------------------------------
+
+/// The header-level facts of a `.uvmt` file — everything `corpus list`
+/// shows without decoding the access stream.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct UvmtMeta {
+    /// store key / provenance label (`gen:ATAX:s1:r42`, `import:…`)
+    pub key: String,
+    /// `Trace::name`
+    pub name: String,
+    pub working_set_pages: u64,
+    pub touched_pages: u64,
+    pub kernels: u32,
+    pub allocations: Vec<(u64, u64)>,
+    /// access count
+    pub accesses: u64,
+}
+
+// ---- encode ----------------------------------------------------------------
+
+fn encode_body(trace: &Trace, key: &str) -> Vec<u8> {
+    // ~3 bytes/access is a generous steady-state estimate
+    let mut b = Vec::with_capacity(64 + key.len() + trace.accesses.len() * 3);
+    put_vstr(&mut b, key);
+    put_vstr(&mut b, &trace.name);
+    put_varint(&mut b, trace.working_set_pages);
+    put_varint(&mut b, trace.touched_pages);
+    put_varint(&mut b, trace.kernels as u64);
+    put_varint(&mut b, trace.allocations.len() as u64);
+    for &(base, pages) in &trace.allocations {
+        put_varint(&mut b, base);
+        put_varint(&mut b, pages);
+    }
+    put_varint(&mut b, trace.accesses.len() as u64);
+    let (mut page, mut pc, mut tb, mut kernel) = (0u64, 0u32, 0u32, 0u32);
+    for a in &trace.accesses {
+        put_varint(&mut b, zigzag(a.page as i64 - page as i64));
+        put_varint(&mut b, zigzag(a.pc as i64 - pc as i64));
+        put_varint(&mut b, zigzag(a.tb as i64 - tb as i64));
+        put_varint(&mut b, zigzag(a.kernel as i64 - kernel as i64));
+        put_varint(&mut b, ((a.inst_gap as u64) << 1) | (a.is_write as u64));
+        page = a.page;
+        pc = a.pc;
+        tb = a.tb;
+        kernel = a.kernel;
+    }
+    b
+}
+
+/// Serialize a trace (with its store key) to `.uvmt` bytes.
+pub fn encode(trace: &Trace, key: &str) -> Vec<u8> {
+    let body = encode_body(trace, key);
+    let mut out = Vec::with_capacity(HEADER_LEN + body.len());
+    out.extend_from_slice(&MAGIC);
+    out.extend_from_slice(&VERSION.to_le_bytes());
+    out.extend_from_slice(&0u16.to_le_bytes());
+    out.extend_from_slice(&fnv1a64(&body).to_le_bytes());
+    out.extend_from_slice(&(body.len() as u64).to_le_bytes());
+    out.extend_from_slice(&body);
+    out
+}
+
+// ---- decode ----------------------------------------------------------------
+
+/// Verify the container (magic, version, length, checksum) and return
+/// the body slice.
+fn checked_body(bytes: &[u8]) -> Result<&[u8]> {
+    if bytes.len() < HEADER_LEN {
+        bail!("uvmt: file shorter than the {HEADER_LEN}-byte header");
+    }
+    if bytes[0..4] != MAGIC {
+        bail!("uvmt: bad magic (not a .uvmt file)");
+    }
+    let version = u16::from_le_bytes([bytes[4], bytes[5]]);
+    if version != VERSION {
+        bail!("uvmt: unsupported format version {version} (this build reads {VERSION})");
+    }
+    let checksum = u64::from_le_bytes(bytes[8..16].try_into().unwrap());
+    let body_len = u64::from_le_bytes(bytes[16..24].try_into().unwrap());
+    let body = &bytes[HEADER_LEN..];
+    if body_len != body.len() as u64 {
+        bail!(
+            "uvmt: body length mismatch (header says {body_len}, file has {})",
+            body.len()
+        );
+    }
+    let actual = fnv1a64(body);
+    if actual != checksum {
+        bail!(
+            "uvmt: checksum mismatch (header {checksum:016x}, body {actual:016x}) — corrupt file"
+        );
+    }
+    Ok(body)
+}
+
+fn parse_meta(body: &[u8], pos: &mut usize) -> Result<UvmtMeta> {
+    let key = get_vstr(body, pos)?;
+    let name = get_vstr(body, pos)?;
+    let working_set_pages = get_varint(body, pos)?;
+    let touched_pages = get_varint(body, pos)?;
+    let kernels_raw = get_varint(body, pos)?;
+    let kernels = u32::try_from(kernels_raw)
+        .map_err(|_| anyhow!("uvmt: kernel count {kernels_raw} exceeds u32"))?;
+    let n_allocs = get_varint(body, pos)? as usize;
+    // cap pre-allocation: a corrupt count must not OOM the reader
+    let mut allocations = Vec::with_capacity(n_allocs.min(4096));
+    for _ in 0..n_allocs {
+        let base = get_varint(body, pos)?;
+        let pages = get_varint(body, pos)?;
+        allocations.push((base, pages));
+    }
+    let accesses = get_varint(body, pos)?;
+    Ok(UvmtMeta {
+        key,
+        name,
+        working_set_pages,
+        touched_pages,
+        kernels,
+        allocations,
+        accesses,
+    })
+}
+
+/// Read only the metadata of a `.uvmt` byte buffer (container checks
+/// included — `stat` on a corrupt file is an error, which is what lets
+/// `corpus gc` find torn writes).
+pub fn stat(bytes: &[u8]) -> Result<UvmtMeta> {
+    let body = checked_body(bytes)?;
+    let mut pos = 0usize;
+    parse_meta(body, &mut pos)
+}
+
+/// Decode a `.uvmt` byte buffer back into the trace and its store key.
+/// Exact inverse of [`encode`].
+pub fn decode(bytes: &[u8]) -> Result<(Trace, String)> {
+    let body = checked_body(bytes)?;
+    let mut pos = 0usize;
+    let meta = parse_meta(body, &mut pos)?;
+    let n = usize::try_from(meta.accesses)
+        .map_err(|_| anyhow!("uvmt: access count {} exceeds usize", meta.accesses))?;
+    let mut accesses = Vec::with_capacity(n.min(1 << 24));
+    let (mut page, mut pc, mut tb, mut kernel) = (0i64, 0i64, 0i64, 0i64);
+    for i in 0..n {
+        let dp = unzigzag(get_varint(body, &mut pos)?);
+        let dpc = unzigzag(get_varint(body, &mut pos)?);
+        let dtb = unzigzag(get_varint(body, &mut pos)?);
+        let dk = unzigzag(get_varint(body, &mut pos)?);
+        let gw = get_varint(body, &mut pos)?;
+        // checked arithmetic: corrupt deltas must error, not wrap (or
+        // panic the debug build)
+        let bad = || anyhow!("uvmt: access {i} field overflow");
+        page = page.checked_add(dp).ok_or_else(bad)?;
+        pc = pc.checked_add(dpc).ok_or_else(bad)?;
+        tb = tb.checked_add(dtb).ok_or_else(bad)?;
+        kernel = kernel.checked_add(dk).ok_or_else(bad)?;
+        if page < 0 {
+            bail!("uvmt: access {i} decodes to a negative page");
+        }
+        let inst_gap = u32::try_from(gw >> 1)
+            .map_err(|_| anyhow!("uvmt: access {i} inst_gap exceeds u32"))?;
+        accesses.push(Access {
+            page: page as u64,
+            pc: u32::try_from(pc)
+                .map_err(|_| anyhow!("uvmt: access {i} pc out of range"))?,
+            tb: u32::try_from(tb)
+                .map_err(|_| anyhow!("uvmt: access {i} tb out of range"))?,
+            kernel: u32::try_from(kernel)
+                .map_err(|_| anyhow!("uvmt: access {i} kernel out of range"))?,
+            inst_gap,
+            is_write: gw & 1 == 1,
+        });
+    }
+    if pos != body.len() {
+        bail!(
+            "uvmt: {} trailing byte(s) after the access stream",
+            body.len() - pos
+        );
+    }
+    let trace = Trace {
+        name: meta.name,
+        working_set_pages: meta.working_set_pages,
+        touched_pages: meta.touched_pages,
+        allocations: meta.allocations,
+        kernels: meta.kernels,
+        accesses,
+    };
+    Ok((trace, meta.key))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Scale;
+    use crate::trace::workloads::Workload;
+
+    #[test]
+    fn varint_roundtrip() {
+        let mut buf = Vec::new();
+        let vals = [0u64, 1, 127, 128, 300, u32::MAX as u64, u64::MAX];
+        for &v in &vals {
+            put_varint(&mut buf, v);
+        }
+        let mut pos = 0;
+        for &v in &vals {
+            assert_eq!(get_varint(&buf, &mut pos).unwrap(), v);
+        }
+        assert_eq!(pos, buf.len());
+    }
+
+    #[test]
+    fn zigzag_roundtrip() {
+        for v in [0i64, 1, -1, 63, -64, i64::MAX, i64::MIN] {
+            assert_eq!(unzigzag(zigzag(v)), v);
+        }
+    }
+
+    #[test]
+    fn encode_decode_roundtrip_one_workload() {
+        let t = Workload::Nw.generate(Scale::default(), 42);
+        let bytes = encode(&t, "gen:NW:s1:r42");
+        let (back, key) = decode(&bytes).unwrap();
+        assert_eq!(key, "gen:NW:s1:r42");
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn stat_reads_meta_without_decoding() {
+        let t = Workload::Hotspot.generate(Scale::default(), 42);
+        let bytes = encode(&t, "k");
+        let m = stat(&bytes).unwrap();
+        assert_eq!(m.name, t.name);
+        assert_eq!(m.accesses, t.accesses.len() as u64);
+        assert_eq!(m.allocations, t.allocations);
+        assert_eq!(m.kernels, t.kernels);
+    }
+
+    #[test]
+    fn corruption_is_detected() {
+        let t = Workload::Atax.generate(Scale::default(), 7);
+        let bytes = encode(&t, "k");
+        // flipped magic
+        let mut bad = bytes.clone();
+        bad[0] ^= 0xff;
+        assert!(decode(&bad).unwrap_err().to_string().contains("magic"));
+        // unsupported version
+        let mut bad = bytes.clone();
+        bad[4] = 0xff;
+        assert!(decode(&bad).unwrap_err().to_string().contains("version"));
+        // flipped body bit -> checksum
+        let mut bad = bytes.clone();
+        let last = bad.len() - 1;
+        bad[last] ^= 0x01;
+        assert!(decode(&bad).unwrap_err().to_string().contains("checksum"));
+        // truncation -> length mismatch
+        let bad = &bytes[..bytes.len() - 3];
+        assert!(decode(bad).unwrap_err().to_string().contains("length"));
+        // header-only file
+        assert!(decode(&bytes[..10]).is_err());
+    }
+
+    #[test]
+    fn compression_beats_in_memory_size() {
+        let t = Workload::StreamTriad.generate(Scale::default(), 42);
+        let bytes = encode(&t, "k");
+        let in_memory = t.accesses.len() * std::mem::size_of::<Access>();
+        assert!(
+            bytes.len() * 3 < in_memory,
+            "uvmt {} bytes vs in-memory {in_memory}",
+            bytes.len()
+        );
+    }
+}

@@ -1,0 +1,323 @@
+//! External-trace ingestion: parse CSV page-access dumps and UVM
+//! fault-log text into [`Trace`]s the simulator can run.
+//!
+//! Two text formats are accepted:
+//!
+//! * **CSV** (`page,pc,tb,kernel,inst_gap,is_write` — any column order,
+//!   headers required, all but `page` optional): the lossless
+//!   interchange format. This is what another simulator, a GPGPU-Sim
+//!   hook, or a spreadsheet of hand-written accesses exports.
+//! * **UVM fault log** (`[timestamp-µs] address [r|w]` per line, `#`
+//!   comments): the shape of real `nvidia-uvm` fault captures used by
+//!   the UVM-prefetching literature. Addresses are page-aligned and
+//!   rebased so the lowest page is 0; timestamps (when present) become
+//!   `inst_gap` via the Table V clock, so the timing model sees the
+//!   log's real inter-fault gaps.
+//!
+//! Both parsers reject non-monotone kernel ids and validate the
+//! resulting trace before it reaches the corpus — a malformed import
+//! fails loudly at `repro corpus import` time, never inside a sweep.
+
+use std::fs;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::config::{us_to_cycles, PAGE_SIZE};
+use crate::trace::{Access, Trace};
+
+/// Load a CSV access trace from a file. See [`parse_csv`].
+pub fn csv_trace(path: &Path, name: &str) -> Result<Trace> {
+    let text = fs::read_to_string(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    parse_csv(&text, name).with_context(|| format!("parsing {}", path.display()))
+}
+
+/// Load a UVM fault log from a file. See [`parse_uvm_fault_log`].
+pub fn uvm_fault_log_trace(path: &Path, name: &str) -> Result<Trace> {
+    let text = fs::read_to_string(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    parse_uvm_fault_log(&text, name)
+        .with_context(|| format!("parsing {}", path.display()))
+}
+
+fn parse_bool(s: &str, line_no: usize) -> Result<bool> {
+    match s.trim().to_ascii_lowercase().as_str() {
+        "1" | "true" | "w" | "write" | "st" | "store" => Ok(true),
+        "0" | "false" | "r" | "read" | "ld" | "load" | "" => Ok(false),
+        other => bail!("line {line_no}: cannot parse is_write value {other:?}"),
+    }
+}
+
+fn finish_trace(name: &str, mut accesses: Vec<Access>) -> Result<Trace> {
+    if accesses.is_empty() {
+        bail!("no accesses parsed");
+    }
+    let max_page = accesses.iter().map(|a| a.page).max().unwrap_or(0);
+    let touched: std::collections::HashSet<u64> =
+        accesses.iter().map(|a| a.page).collect();
+    // guarantee the phase-count invariant Trace::validate checks even if
+    // the input skipped kernel ids: compress ids to a dense 0..k range
+    let mut remap: std::collections::BTreeMap<u32, u32> = Default::default();
+    for a in &accesses {
+        let next = remap.len() as u32;
+        remap.entry(a.kernel).or_insert(next);
+    }
+    for a in accesses.iter_mut() {
+        a.kernel = remap[&a.kernel];
+    }
+    let trace = Trace {
+        name: name.to_string(),
+        working_set_pages: max_page + 1,
+        touched_pages: touched.len() as u64,
+        allocations: Vec::new(), // one allocation spanning the arena
+        kernels: remap.len() as u32,
+        accesses,
+    };
+    trace.validate().map_err(|e| anyhow!("imported trace invalid: {e}"))?;
+    Ok(trace)
+}
+
+/// Parse a CSV access trace. Header row is required and names the
+/// columns; `page` is mandatory, `pc`/`tb`/`kernel`/`inst_gap` default
+/// to 0 and `is_write` to false when absent. Kernel ids must be
+/// non-decreasing (they delimit program phases).
+pub fn parse_csv(text: &str, name: &str) -> Result<Trace> {
+    let mut lines = text
+        .lines()
+        .enumerate()
+        .map(|(i, l)| (i + 1, l.trim()))
+        .filter(|(_, l)| !l.is_empty() && !l.starts_with('#'));
+    let (_, header) = lines
+        .next()
+        .ok_or_else(|| anyhow!("empty file (need a header row)"))?;
+    let cols: Vec<String> = header
+        .split(',')
+        .map(|c| c.trim().to_ascii_lowercase())
+        .collect();
+    let col = |want: &str| cols.iter().position(|c| c == want);
+    let c_page = col("page")
+        .ok_or_else(|| anyhow!("header {header:?} has no 'page' column"))?;
+    let (c_pc, c_tb, c_kernel, c_gap, c_write) = (
+        col("pc"),
+        col("tb"),
+        col("kernel"),
+        col("inst_gap"),
+        col("is_write"),
+    );
+
+    let mut accesses = Vec::new();
+    let mut last_kernel = 0u32;
+    for (line_no, line) in lines {
+        let fields: Vec<&str> = line.split(',').map(str::trim).collect();
+        let field = |idx: Option<usize>| -> Option<&str> {
+            idx.and_then(|i| fields.get(i).copied())
+        };
+        // u32 fields parse via u32 directly: an out-of-range value is a
+        // loud per-line error, never a silent truncation
+        let num32 = |idx: Option<usize>, what: &str| -> Result<u32> {
+            match field(idx) {
+                None | Some("") => Ok(0),
+                Some(v) => v.parse::<u32>().map_err(|_| {
+                    anyhow!(
+                        "line {line_no}: cannot parse {what} value {v:?} \
+                         (want an integer < 2^32)"
+                    )
+                }),
+            }
+        };
+        let page = field(Some(c_page))
+            .filter(|v| !v.is_empty())
+            .ok_or_else(|| anyhow!("line {line_no}: missing page value"))?
+            .parse::<u64>()
+            .map_err(|_| anyhow!("line {line_no}: cannot parse page"))?;
+        let kernel = num32(c_kernel, "kernel")?;
+        if kernel < last_kernel {
+            bail!(
+                "line {line_no}: kernel id {kernel} went backwards (was {last_kernel}); \
+                 kernel ids must be non-decreasing"
+            );
+        }
+        last_kernel = kernel;
+        accesses.push(Access {
+            page,
+            pc: num32(c_pc, "pc")?,
+            tb: num32(c_tb, "tb")?,
+            kernel,
+            inst_gap: num32(c_gap, "inst_gap")?,
+            is_write: parse_bool(field(c_write).unwrap_or("0"), line_no)?,
+        });
+    }
+    finish_trace(name, accesses)
+}
+
+/// Parse a UVM fault log: one fault per line as
+/// `[timestamp-µs] address [r|w]` (address hex `0x…` or decimal bytes;
+/// lines starting with `#` are comments). Addresses are page-aligned
+/// and rebased to a zero-based arena; timestamp deltas become
+/// `inst_gap` cycles.
+pub fn parse_uvm_fault_log(text: &str, name: &str) -> Result<Trace> {
+    struct Fault {
+        addr: u64,
+        ts_us: Option<f64>,
+        is_write: bool,
+    }
+    let parse_addr = |s: &str, line_no: usize| -> Result<u64> {
+        let parsed = match s.strip_prefix("0x").or_else(|| s.strip_prefix("0X")) {
+            Some(hex) => u64::from_str_radix(hex, 16),
+            None => s.parse::<u64>(),
+        };
+        parsed.map_err(|_| anyhow!("line {line_no}: cannot parse address {s:?}"))
+    };
+    let is_rw = |s: &str| matches!(s.to_ascii_lowercase().as_str(), "r" | "w");
+
+    let mut faults = Vec::new();
+    for (line_no, raw) in text.lines().enumerate() {
+        let line_no = line_no + 1;
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let tok: Vec<&str> = line.split_whitespace().collect();
+        let (ts_us, addr_tok, rw_tok) = match tok.as_slice() {
+            [a] => (None, *a, None),
+            [a, b] if is_rw(b) => (None, *a, Some(*b)),
+            [a, b] => (Some(*a), *b, None),
+            [a, b, c] => (Some(*a), *b, Some(*c)),
+            _ => bail!("line {line_no}: expected `[timestamp] address [r|w]`"),
+        };
+        let ts_us = match ts_us {
+            None => None,
+            Some(t) => Some(t.parse::<f64>().map_err(|_| {
+                anyhow!("line {line_no}: cannot parse timestamp {t:?}")
+            })?),
+        };
+        let is_write = match rw_tok {
+            None => false,
+            Some(t) => match t.to_ascii_lowercase().as_str() {
+                "w" => true,
+                "r" => false,
+                other => bail!("line {line_no}: access kind {other:?} (want r|w)"),
+            },
+        };
+        faults.push(Fault {
+            addr: parse_addr(addr_tok, line_no)?,
+            ts_us,
+            is_write,
+        });
+    }
+    if faults.is_empty() {
+        bail!("no faults parsed");
+    }
+
+    let min_page = faults.iter().map(|f| f.addr / PAGE_SIZE).min().unwrap();
+    let mut accesses = Vec::with_capacity(faults.len());
+    let mut prev_ts: Option<f64> = None;
+    for f in &faults {
+        let gap_cycles = match (prev_ts, f.ts_us) {
+            (Some(p), Some(t)) if t > p => us_to_cycles(t - p).min(u32::MAX as u64),
+            _ => 0,
+        };
+        if f.ts_us.is_some() {
+            prev_ts = f.ts_us;
+        }
+        accesses.push(Access {
+            page: f.addr / PAGE_SIZE - min_page,
+            pc: 0,
+            tb: 0,
+            kernel: 0,
+            inst_gap: gap_cycles as u32,
+            is_write: f.is_write,
+        });
+    }
+    finish_trace(name, accesses)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_full_columns() {
+        let text = "\
+page,pc,tb,kernel,inst_gap,is_write
+0,1,0,0,4,0
+1,1,0,0,4,1
+5,2,1,1,2,true
+";
+        let t = parse_csv(text, "mini").unwrap();
+        assert_eq!(t.name, "mini");
+        assert_eq!(t.accesses.len(), 3);
+        assert_eq!(t.working_set_pages, 6);
+        assert_eq!(t.touched_pages, 3);
+        assert_eq!(t.kernels, 2);
+        assert!(t.accesses[1].is_write);
+        assert!(t.accesses[2].is_write);
+        assert_eq!(t.accesses[2].kernel, 1);
+        t.validate().unwrap();
+    }
+
+    #[test]
+    fn csv_minimal_and_reordered_columns() {
+        let t = parse_csv("is_write,page\nw,3\nr,4\n", "m").unwrap();
+        assert_eq!(t.accesses.len(), 2);
+        assert!(t.accesses[0].is_write);
+        assert_eq!(t.accesses[1].page, 4);
+        assert_eq!(t.kernels, 1);
+    }
+
+    #[test]
+    fn csv_sparse_kernel_ids_are_compressed() {
+        let t = parse_csv("page,kernel\n0,0\n1,5\n2,9\n", "m").unwrap();
+        let ks: Vec<u32> = t.accesses.iter().map(|a| a.kernel).collect();
+        assert_eq!(ks, vec![0, 1, 2]);
+        assert_eq!(t.kernels, 3);
+        t.validate().unwrap();
+    }
+
+    #[test]
+    fn csv_rejects_backwards_kernels_and_garbage() {
+        assert!(parse_csv("page,kernel\n0,1\n1,0\n", "m")
+            .unwrap_err()
+            .to_string()
+            .contains("backwards"));
+        assert!(parse_csv("pc,tb\n0,0\n", "m").is_err()); // no page column
+        assert!(parse_csv("page\nxyz\n", "m").is_err());
+        assert!(parse_csv("", "m").is_err());
+        assert!(parse_csv("page\n", "m").is_err()); // header only
+        // u32 overflow is an error, not a silent truncation
+        let err = parse_csv("page,inst_gap\n0,4294967296\n", "m")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("inst_gap"), "{err}");
+    }
+
+    #[test]
+    fn fault_log_rebases_and_times() {
+        let text = "\
+# ts_us address kind
+10.0 0x7f0001000 r
+12.0 0x7f0003000 w
+15.0 0x7f0001000 r
+";
+        let t = parse_uvm_fault_log(text, "log").unwrap();
+        assert_eq!(t.accesses.len(), 3);
+        assert_eq!(t.accesses[0].page, 0);
+        assert_eq!(t.accesses[1].page, 2);
+        assert!(t.accesses[1].is_write);
+        assert_eq!(t.accesses[0].inst_gap, 0);
+        assert!(t.accesses[1].inst_gap > 0); // 2 µs of Table-V cycles
+        assert_eq!(t.working_set_pages, 3);
+        t.validate().unwrap();
+    }
+
+    #[test]
+    fn fault_log_bare_addresses() {
+        let t = parse_uvm_fault_log("4096\n8192\n4096\n", "log").unwrap();
+        assert_eq!(t.accesses.len(), 3);
+        assert_eq!(t.accesses[0].page, 0);
+        assert_eq!(t.accesses[1].page, 1);
+        assert!(parse_uvm_fault_log("", "log").is_err());
+        assert!(parse_uvm_fault_log("zzz\n", "log").is_err());
+    }
+}

@@ -1,0 +1,66 @@
+//! # `uvmio::corpus` — the content-addressed trace corpus
+//!
+//! The whole evaluation runs on memory-access traces, and before this
+//! module every consumer regenerated them from scratch: each sweep cell,
+//! each experiment table, each bench called `Workload::generate` on its
+//! own private copy. The corpus turns traces into first-class, cacheable,
+//! importable artifacts, in four layers:
+//!
+//! * [`format`] — `.uvmt`, a compact versioned binary trace format
+//!   (delta-encoded pages, varint fields, FNV-1a-checksummed header)
+//!   with a lossless [`Trace`](crate::trace::Trace) round-trip.
+//! * [`CorpusStore`] — a content-addressed on-disk store: one `.uvmt`
+//!   per key (hash of workload × scale × seed, or of imported content),
+//!   atomic temp-file-plus-rename writes, `list`/`stat`/`gc`.
+//! * [`TraceCache`] — the process-wide cache handing out `Arc<Trace>`
+//!   so sweep workers, the serialized artifact lane, and the `exp`
+//!   harnesses share one immutable copy per (workload, scale, seed)
+//!   instead of regenerating per cell; optionally store-backed so
+//!   builtin-workload copies are shared across *processes* too.
+//! * [`TraceSource`] / [`parse_source`] — the ingestion layer loading
+//!   generator-built, corpus-stored, and imported CSV / UVM-fault-log
+//!   traces uniformly, including `A+B` multi-tenant compositions via
+//!   [`crate::trace::multi::interleave`].
+//!
+//! The CLI surface is `repro corpus <build|import|list|gc>` plus
+//! `repro sweep --corpus DIR`; the library surface starts at
+//! [`TraceCache`] (hand one to
+//! [`SweepRunner::with_cache`](crate::api::SweepRunner::with_cache)).
+//!
+//! ```no_run
+//! use std::sync::Arc;
+//! use uvmio::api::{StrategyCtx, StrategyRegistry, SweepRunner, SweepSpec};
+//! use uvmio::corpus::{CorpusStore, TraceCache};
+//! use uvmio::trace::workloads::Workload;
+//!
+//! let registry = StrategyRegistry::builtin();
+//! let cache = Arc::new(TraceCache::with_store(
+//!     CorpusStore::open("corpus").unwrap(),
+//! ));
+//! let sweep = SweepSpec::new(
+//!     Workload::ALL.to_vec(),
+//!     registry.resolve_list("baseline,uvmsmart").unwrap(),
+//! )
+//! .with_seeds(vec![42, 7]);
+//! let records = SweepRunner::new(&registry)
+//!     .with_cache(Arc::clone(&cache))
+//!     .run(&sweep, &StrategyCtx::default(), &mut [])
+//!     .unwrap();
+//! // every (workload, seed) trace was built exactly once:
+//! assert_eq!(cache.stats().misses(), Workload::ALL.len() as u64 * 2);
+//! assert_eq!(records.len(), sweep.len());
+//! ```
+
+pub mod cache;
+pub mod format;
+pub mod import;
+pub mod source;
+pub mod store;
+
+pub use cache::{CacheStats, TraceCache};
+pub use format::UvmtMeta;
+pub use source::{
+    parse_source, CorpusSource, CsvSource, FaultLogSource, GeneratorSource,
+    InterleaveSource, TraceSource,
+};
+pub use store::{CorpusEntry, CorpusStore, GcReport, GC_TMP_GRACE};

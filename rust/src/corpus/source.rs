@@ -1,0 +1,340 @@
+//! `TraceSource` — the uniform ingestion layer between "where traces
+//! come from" and every consumer.
+//!
+//! A source is anything that can produce a [`Trace`]: a builtin
+//! synthetic generator, a named corpus entry, an external CSV dump, a
+//! UVM fault log, or the `+`-composition of two sources interleaved
+//! into one multi-tenant trace (via [`crate::trace::multi::interleave`]).
+//! The sweep runner and CLI never care which: they hold an
+//! `Arc<dyn TraceSource>`, ask [`TraceCache::get_source`] for the
+//! shared trace, and key the cache with [`TraceSource::cache_key`] —
+//! which folds scale/seed in only for sources whose output actually
+//! depends on them.
+//!
+//! [`parse_source`] is the CLI grammar:
+//!
+//! ```text
+//! NW                  builtin generator (any Workload name)
+//! corpus:mytrace      corpus entry by trace name (needs a store)
+//! mytrace             same, when the name is not a builtin workload
+//! csv:path/to.csv     CSV access dump, loaded directly from the file
+//! uvmlog:fault.log    UVM fault log, loaded directly from the file
+//! NW+corpus:mytrace   two sources interleaved as concurrent tenants
+//! ```
+//!
+//! `csv:`/`uvmlog:` consume the REST of the spec as the file path (so
+//! paths may contain `+`); compose a file source as the right-hand
+//! tenant of a `+` pair.
+//!
+//! [`TraceCache`]: super::TraceCache
+//! [`TraceCache::get_source`]: super::TraceCache::get_source
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::config::Scale;
+use crate::trace::workloads::Workload;
+use crate::trace::{multi, Trace};
+
+use super::import;
+use super::store::CorpusStore;
+
+/// Anything that can produce a trace. Object-safe; implementations are
+/// shared across sweep workers as `Arc<dyn TraceSource>`.
+pub trait TraceSource: Send + Sync {
+    /// Stable identity, used for cache/store keying (`gen:NW`,
+    /// `corpus:mytrace`, `csv:dump.csv`, `gen:NW+corpus:mytrace`).
+    fn id(&self) -> String;
+
+    /// Display name (what sweep records and reports show).
+    fn name(&self) -> String;
+
+    /// Does `load` output depend on (scale, seed)? File- and
+    /// corpus-backed traces are fixed artifacts; generators are not.
+    fn parameterized(&self) -> bool {
+        true
+    }
+
+    /// Produce the trace. Called at most once per distinct cache key
+    /// when loads go through [`super::TraceCache`].
+    fn load(&self, scale: Scale, seed: u64) -> Result<Trace>;
+
+    /// Cache key: the identity, plus scale/seed iff they matter.
+    fn cache_key(&self, scale: Scale, seed: u64) -> String {
+        if self.parameterized() {
+            format!("{}:s{}:r{seed}", self.id(), scale.factor)
+        } else {
+            self.id()
+        }
+    }
+}
+
+/// A builtin synthetic generator as a source. Its cache key equals
+/// [`CorpusStore::generated_key`], so composed and direct uses of the
+/// same workload share one cached trace.
+pub struct GeneratorSource(pub Workload);
+
+impl TraceSource for GeneratorSource {
+    fn id(&self) -> String {
+        format!("gen:{}", self.0.name())
+    }
+
+    fn name(&self) -> String {
+        self.0.name().to_string()
+    }
+
+    fn load(&self, scale: Scale, seed: u64) -> Result<Trace> {
+        Ok(self.0.generate(scale, seed))
+    }
+}
+
+/// A corpus entry addressed by trace name.
+pub struct CorpusSource {
+    store: CorpusStore,
+    name: String,
+}
+
+impl CorpusSource {
+    pub fn new(store: CorpusStore, name: &str) -> CorpusSource {
+        CorpusSource { store, name: name.to_string() }
+    }
+}
+
+impl TraceSource for CorpusSource {
+    fn id(&self) -> String {
+        format!("corpus:{}", self.name)
+    }
+
+    fn name(&self) -> String {
+        self.name.clone()
+    }
+
+    fn parameterized(&self) -> bool {
+        false
+    }
+
+    fn load(&self, _scale: Scale, _seed: u64) -> Result<Trace> {
+        self.store.find_named(&self.name)?.ok_or_else(|| {
+            anyhow!(
+                "no corpus entry named '{}' in {} (see `repro corpus list`)",
+                self.name,
+                self.store.dir().display()
+            )
+        })
+    }
+}
+
+/// A CSV access dump loaded straight from a file (no store needed).
+pub struct CsvSource {
+    path: PathBuf,
+    name: String,
+}
+
+impl CsvSource {
+    pub fn new(path: impl Into<PathBuf>) -> CsvSource {
+        let path = path.into();
+        let name = path
+            .file_stem()
+            .map(|s| s.to_string_lossy().into_owned())
+            .unwrap_or_else(|| "csv-trace".to_string());
+        CsvSource { path, name }
+    }
+}
+
+impl TraceSource for CsvSource {
+    fn id(&self) -> String {
+        format!("csv:{}", self.path.display())
+    }
+
+    fn name(&self) -> String {
+        self.name.clone()
+    }
+
+    fn parameterized(&self) -> bool {
+        false
+    }
+
+    fn load(&self, _scale: Scale, _seed: u64) -> Result<Trace> {
+        import::csv_trace(&self.path, &self.name)
+    }
+}
+
+/// A UVM fault log loaded straight from a file.
+pub struct FaultLogSource {
+    path: PathBuf,
+    name: String,
+}
+
+impl FaultLogSource {
+    pub fn new(path: impl Into<PathBuf>) -> FaultLogSource {
+        let path = path.into();
+        let name = path
+            .file_stem()
+            .map(|s| s.to_string_lossy().into_owned())
+            .unwrap_or_else(|| "uvm-log".to_string());
+        FaultLogSource { path, name }
+    }
+}
+
+impl TraceSource for FaultLogSource {
+    fn id(&self) -> String {
+        format!("uvmlog:{}", self.path.display())
+    }
+
+    fn name(&self) -> String {
+        self.name.clone()
+    }
+
+    fn parameterized(&self) -> bool {
+        false
+    }
+
+    fn load(&self, _scale: Scale, _seed: u64) -> Result<Trace> {
+        import::uvm_fault_log_trace(&self.path, &self.name)
+    }
+}
+
+/// Two sources interleaved as concurrent tenants (the Table VII
+/// multi-tenant methodology): tenant B gets a perturbed seed so two
+/// copies of the same generator still produce distinct streams.
+pub struct InterleaveSource {
+    a: Arc<dyn TraceSource>,
+    b: Arc<dyn TraceSource>,
+}
+
+impl InterleaveSource {
+    pub fn new(a: Arc<dyn TraceSource>, b: Arc<dyn TraceSource>) -> InterleaveSource {
+        InterleaveSource { a, b }
+    }
+}
+
+impl TraceSource for InterleaveSource {
+    fn id(&self) -> String {
+        format!("{}+{}", self.a.id(), self.b.id())
+    }
+
+    fn name(&self) -> String {
+        format!("{}+{}", self.a.name(), self.b.name())
+    }
+
+    fn parameterized(&self) -> bool {
+        self.a.parameterized() || self.b.parameterized()
+    }
+
+    fn load(&self, scale: Scale, seed: u64) -> Result<Trace> {
+        let ta = self.a.load(scale, seed)?;
+        let tb = self.b.load(scale, seed ^ 1)?;
+        Ok(multi::interleave(&ta, &tb))
+    }
+}
+
+/// Parse a workload/source selector (see the module docs for the
+/// grammar). `store` is required only to resolve corpus names.
+///
+/// File prefixes bind tighter than `+`: `csv:a+b.csv` is ONE file whose
+/// path contains a `+`, so a file source composes only as the RIGHT
+/// tenant (`NW+csv:a.csv`), and everything after its prefix is the path.
+pub fn parse_source(
+    spec: &str,
+    store: Option<&CorpusStore>,
+) -> Result<Arc<dyn TraceSource>> {
+    let spec = spec.trim();
+    if spec.is_empty() {
+        bail!("empty workload spec");
+    }
+    if let Some(path) = spec.strip_prefix("csv:") {
+        return Ok(Arc::new(CsvSource::new(path)));
+    }
+    if let Some(path) = spec.strip_prefix("uvmlog:") {
+        return Ok(Arc::new(FaultLogSource::new(path)));
+    }
+    if let Some((a, b)) = spec.split_once('+') {
+        let a = parse_source(a, store)?;
+        let b = parse_source(b, store)?;
+        return Ok(Arc::new(InterleaveSource::new(a, b)));
+    }
+    if let Some(w) = Workload::from_name(spec) {
+        return Ok(Arc::new(GeneratorSource(w)));
+    }
+    let name = spec.strip_prefix("corpus:").unwrap_or(spec);
+    match store {
+        Some(s) => Ok(Arc::new(CorpusSource::new(s.clone(), name))),
+        None => bail!(
+            "unknown workload '{spec}': not a builtin ({}) and no corpus \
+             directory to resolve it against (pass --corpus DIR, or use \
+             csv:/uvmlog: prefixes for files)",
+            Workload::ALL
+                .iter()
+                .map(|w| w.name())
+                .collect::<Vec<_>>()
+                .join(", ")
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generator_source_matches_store_key() {
+        let src = GeneratorSource(Workload::Atax);
+        assert_eq!(
+            src.cache_key(Scale::default(), 42),
+            CorpusStore::generated_key("ATAX", Scale::default(), 42)
+        );
+        let t = src.load(Scale::default(), 42).unwrap();
+        assert_eq!(t, Workload::Atax.generate(Scale::default(), 42));
+    }
+
+    #[test]
+    fn parse_grammar() {
+        let g = parse_source("nw", None).unwrap();
+        assert_eq!(g.name(), "NW");
+        assert!(g.parameterized());
+
+        let pair = parse_source("NW+Hotspot", None).unwrap();
+        assert_eq!(pair.name(), "NW+Hotspot");
+        assert_eq!(pair.id(), "gen:NW+gen:Hotspot");
+        let t = pair.load(Scale::default(), 42).unwrap();
+        t.validate().unwrap();
+
+        let csv = parse_source("csv:/tmp/foo.csv", None).unwrap();
+        assert_eq!(csv.name(), "foo");
+        assert!(!csv.parameterized());
+        assert_eq!(csv.cache_key(Scale::default(), 1), csv.id());
+
+        // a + inside a file path is part of the path, not a composition…
+        let plus = parse_source("csv:/tmp/batch+1.csv", None).unwrap();
+        assert_eq!(plus.id(), "csv:/tmp/batch+1.csv");
+        // …while a file source still composes as the right-hand tenant
+        let mixed = parse_source("NW+csv:/tmp/foo.csv", None).unwrap();
+        assert_eq!(mixed.name(), "NW+foo");
+
+        assert!(parse_source("", None).is_err());
+        let err = parse_source("mystery", None).unwrap_err().to_string();
+        assert!(err.contains("mystery"), "{err}");
+        assert!(err.contains("--corpus"), "{err}");
+    }
+
+    #[test]
+    fn corpus_source_resolves_by_name() {
+        let dir = std::env::temp_dir().join(format!(
+            "uvmio-source-test-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let store = CorpusStore::open(&dir).unwrap();
+        let t = Workload::TwoDConv.generate(Scale::default(), 5);
+        store.import(&t).unwrap();
+        // explicit corpus: prefix forces store resolution even for a
+        // name that would otherwise hit the builtin generator
+        let src = parse_source("corpus:2DCONV", Some(&store)).unwrap();
+        assert_eq!(src.id(), "corpus:2DCONV");
+        let loaded = src.load(Scale::default(), 0).unwrap();
+        assert_eq!(loaded, t);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

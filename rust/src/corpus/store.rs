@@ -1,0 +1,361 @@
+//! `CorpusStore` — the content-addressed on-disk half of the corpus.
+//!
+//! A store is a flat directory of `.uvmt` files named by the FNV-1a 64
+//! hash of their *key*: `gen:<workload>:s<scale>:r<seed>` for
+//! generator-built traces (same identity → same file, so rebuilding is
+//! idempotent) and `import:<content-hash>:<name>` for ingested external
+//! traces (same bytes → same file, so re-importing is idempotent too).
+//! The key is also stored *inside* the file, which makes every entry
+//! self-describing: `list` recovers provenance without an index file,
+//! and `get` detects hash collisions by comparing the stored key.
+//!
+//! Writes are atomic — encode to a private temp file in the same
+//! directory, then `rename` into place — so a killed `repro corpus
+//! build` or a crashed sweep never publishes a torn `.uvmt`. `gc`
+//! sweeps up the two failure residues that can still accumulate:
+//! orphaned temp files and corrupt/unreadable `.uvmt` entries.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::Scale;
+use crate::trace::Trace;
+use crate::util::hash::fnv1a64;
+
+use super::format::{self, UvmtMeta};
+
+/// Monotone counter making temp-file names unique across threads.
+static TMP_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// Temp files younger than this are presumed to belong to a live
+/// writer and are skipped by [`CorpusStore::gc`]. A put writes and
+/// renames in well under a second; a temp file this old is an orphan.
+pub const GC_TMP_GRACE: std::time::Duration = std::time::Duration::from_secs(60);
+
+/// One `.uvmt` entry as `list`/`gc` see it: the file, its size, and
+/// either its metadata or the reason it failed to parse.
+#[derive(Debug, Clone)]
+pub struct CorpusEntry {
+    pub path: PathBuf,
+    pub bytes: u64,
+    /// `Ok(meta)` for healthy entries, `Err(why)` for corrupt ones.
+    pub meta: std::result::Result<UvmtMeta, String>,
+}
+
+/// What `gc` did.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct GcReport {
+    /// corrupt `.uvmt` files and orphaned temp files removed
+    pub removed_files: usize,
+    pub reclaimed_bytes: u64,
+    /// healthy entries left in place
+    pub kept: usize,
+}
+
+/// A content-addressed directory of `.uvmt` traces. Cheap to clone
+/// (it is just the directory path); all state lives on disk.
+#[derive(Debug, Clone)]
+pub struct CorpusStore {
+    dir: PathBuf,
+}
+
+impl CorpusStore {
+    /// Open (creating if needed) a corpus directory.
+    pub fn open(dir: impl Into<PathBuf>) -> Result<CorpusStore> {
+        let dir = dir.into();
+        fs::create_dir_all(&dir)
+            .with_context(|| format!("creating corpus dir {}", dir.display()))?;
+        Ok(CorpusStore { dir })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Store key of a generator-built trace: workload × scale × seed.
+    pub fn generated_key(workload: &str, scale: Scale, seed: u64) -> String {
+        format!("gen:{workload}:s{}:r{seed}", scale.factor)
+    }
+
+    /// Store key of an imported trace: hash of its canonical encoding.
+    pub fn import_key(trace: &Trace) -> String {
+        let content = format::encode(trace, "");
+        format!("import:{:016x}:{}", fnv1a64(&content), trace.name)
+    }
+
+    /// On-disk path an entry with this key lives at.
+    pub fn path_for(&self, key: &str) -> PathBuf {
+        self.dir.join(format!("{:016x}.uvmt", fnv1a64(key.as_bytes())))
+    }
+
+    /// Is an entry with this key present (no integrity check)?
+    pub fn contains(&self, key: &str) -> bool {
+        self.path_for(key).exists()
+    }
+
+    /// Atomically write `trace` under `key`; returns the final path.
+    /// Overwrites an existing entry with the same key (idempotent puts).
+    pub fn put(&self, key: &str, trace: &Trace) -> Result<PathBuf> {
+        let path = self.path_for(key);
+        let bytes = format::encode(trace, key);
+        let tmp = self.dir.join(format!(
+            ".tmp-{}-{}.uvmt",
+            std::process::id(),
+            TMP_SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        fs::write(&tmp, &bytes)
+            .with_context(|| format!("writing {}", tmp.display()))?;
+        // rename within one directory is atomic: readers see either the
+        // old complete file or the new complete file, never a torn one
+        fs::rename(&tmp, &path).with_context(|| {
+            let _ = fs::remove_file(&tmp);
+            format!("publishing {}", path.display())
+        })?;
+        Ok(path)
+    }
+
+    /// Load the entry stored under `key`, verifying checksum and key.
+    pub fn get(&self, key: &str) -> Result<Option<Trace>> {
+        let path = self.path_for(key);
+        let bytes = match fs::read(&path) {
+            Ok(b) => b,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+            Err(e) => {
+                return Err(e).with_context(|| format!("reading {}", path.display()))
+            }
+        };
+        let (trace, stored_key) = format::decode(&bytes)
+            .with_context(|| format!("decoding {}", path.display()))?;
+        if stored_key != key {
+            bail!(
+                "corpus key collision at {}: wanted '{key}', file holds '{stored_key}'",
+                path.display()
+            );
+        }
+        Ok(Some(trace))
+    }
+
+    /// Import an external trace under its content hash. Returns
+    /// `(key, path)`.
+    pub fn import(&self, trace: &Trace) -> Result<(String, PathBuf)> {
+        let key = CorpusStore::import_key(trace);
+        let path = self.put(&key, trace)?;
+        Ok((key, path))
+    }
+
+    /// Find the unique entry whose *trace name* is `name` (how imported
+    /// traces are addressed from `repro sweep --workloads <name>`).
+    /// Each candidate file is read once: the match is decoded from the
+    /// bytes already in hand, corrupt entries are skipped.
+    pub fn find_named(&self, name: &str) -> Result<Option<Trace>> {
+        let mut found: Option<(PathBuf, Trace)> = None;
+        for path in self.entry_paths()? {
+            let bytes = match fs::read(&path) {
+                Ok(b) => b,
+                Err(_) => continue, // raced with gc / concurrent rewrite
+            };
+            match format::stat(&bytes) {
+                Ok(meta) if meta.name == name => {
+                    if let Some((prev, _)) = &found {
+                        bail!(
+                            "corpus has multiple entries named '{name}' ({} and {}); \
+                             address one by key or gc the stale one",
+                            prev.display(),
+                            path.display()
+                        );
+                    }
+                    let (trace, _key) = format::decode(&bytes)
+                        .with_context(|| format!("decoding {}", path.display()))?;
+                    found = Some((path, trace));
+                }
+                _ => {} // different name, or corrupt (gc's job)
+            }
+        }
+        Ok(found.map(|(_, t)| t))
+    }
+
+    /// Paths of every non-temp `.uvmt` file, sorted for determinism.
+    fn entry_paths(&self) -> Result<Vec<PathBuf>> {
+        let mut out = Vec::new();
+        let rd = fs::read_dir(&self.dir)
+            .with_context(|| format!("listing {}", self.dir.display()))?;
+        for entry in rd {
+            let path = entry?.path();
+            if path.extension().and_then(|e| e.to_str()) != Some("uvmt") {
+                continue;
+            }
+            if path
+                .file_name()
+                .and_then(|n| n.to_str())
+                .is_some_and(|n| n.starts_with(".tmp-"))
+            {
+                continue;
+            }
+            out.push(path);
+        }
+        out.sort();
+        Ok(out)
+    }
+
+    /// Every `.uvmt` entry (healthy or corrupt), sorted by file name
+    /// for deterministic listings.
+    pub fn entries(&self) -> Result<Vec<CorpusEntry>> {
+        let mut out = Vec::new();
+        for path in self.entry_paths()? {
+            let (bytes, meta) = match fs::read(&path) {
+                Ok(b) => (
+                    b.len() as u64,
+                    format::stat(&b).map_err(|e| format!("{e:#}")),
+                ),
+                Err(e) => (0, Err(format!("unreadable: {e}"))),
+            };
+            out.push(CorpusEntry { path, bytes, meta });
+        }
+        Ok(out)
+    }
+
+    /// Metadata for one key without decoding the access stream.
+    pub fn stat(&self, key: &str) -> Result<Option<UvmtMeta>> {
+        let path = self.path_for(key);
+        let bytes = match fs::read(&path) {
+            Ok(b) => b,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+            Err(e) => {
+                return Err(e).with_context(|| format!("reading {}", path.display()))
+            }
+        };
+        Ok(Some(format::stat(&bytes).with_context(|| {
+            format!("stat {}", path.display())
+        })?))
+    }
+
+    /// Remove corrupt entries and orphaned temp files; keep everything
+    /// healthy. Safe to run concurrently with readers (removal is
+    /// per-file; a reader either got the file before or sees NotFound)
+    /// and with writers: a temp file younger than [`GC_TMP_GRACE`] is
+    /// assumed to belong to a live writer and left alone.
+    pub fn gc(&self) -> Result<GcReport> {
+        self.gc_with_grace(GC_TMP_GRACE)
+    }
+
+    /// [`CorpusStore::gc`] with an explicit temp-file grace period
+    /// (tests use zero to collect temp files immediately).
+    pub fn gc_with_grace(&self, grace: std::time::Duration) -> Result<GcReport> {
+        let mut report = GcReport::default();
+        // orphaned temp files from killed writers
+        let rd = fs::read_dir(&self.dir)
+            .with_context(|| format!("listing {}", self.dir.display()))?;
+        for entry in rd {
+            let entry = entry?;
+            let path = entry.path();
+            let is_tmp = path
+                .file_name()
+                .and_then(|n| n.to_str())
+                .is_some_and(|n| n.starts_with(".tmp-"));
+            if is_tmp {
+                let meta = entry.metadata().ok();
+                let age = meta
+                    .as_ref()
+                    .and_then(|m| m.modified().ok())
+                    .and_then(|t| t.elapsed().ok());
+                // a fresh temp file is a live writer mid-put, not an
+                // orphan — only unknown or stale mtimes are fair game
+                if matches!(age, Some(a) if a < grace) {
+                    continue;
+                }
+                let bytes = meta.map(|m| m.len()).unwrap_or(0);
+                fs::remove_file(&path)
+                    .with_context(|| format!("removing {}", path.display()))?;
+                report.removed_files += 1;
+                report.reclaimed_bytes += bytes;
+            }
+        }
+        // corrupt entries
+        for e in self.entries()? {
+            match e.meta {
+                Ok(_) => report.kept += 1,
+                Err(_) => {
+                    fs::remove_file(&e.path)
+                        .with_context(|| format!("removing {}", e.path.display()))?;
+                    report.removed_files += 1;
+                    report.reclaimed_bytes += e.bytes;
+                }
+            }
+        }
+        Ok(report)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::workloads::Workload;
+
+    fn tmp_store(tag: &str) -> CorpusStore {
+        let dir = std::env::temp_dir().join(format!(
+            "uvmio-store-test-{}-{tag}",
+            std::process::id()
+        ));
+        let _ = fs::remove_dir_all(&dir);
+        CorpusStore::open(dir).unwrap()
+    }
+
+    #[test]
+    fn put_get_roundtrip_and_idempotence() {
+        let store = tmp_store("putget");
+        let t = Workload::Bicg.generate(Scale::default(), 42);
+        let key = CorpusStore::generated_key(&t.name, Scale::default(), 42);
+        assert!(!store.contains(&key));
+        assert!(store.get(&key).unwrap().is_none());
+        let p1 = store.put(&key, &t).unwrap();
+        let p2 = store.put(&key, &t).unwrap(); // idempotent overwrite
+        assert_eq!(p1, p2);
+        let back = store.get(&key).unwrap().unwrap();
+        assert_eq!(back, t);
+        let meta = store.stat(&key).unwrap().unwrap();
+        assert_eq!(meta.key, key);
+        assert_eq!(meta.accesses, t.accesses.len() as u64);
+        let _ = fs::remove_dir_all(store.dir());
+    }
+
+    #[test]
+    fn import_is_content_addressed() {
+        let store = tmp_store("import");
+        let t = Workload::Mvt.generate(Scale::default(), 1);
+        let (k1, p1) = store.import(&t).unwrap();
+        let (k2, p2) = store.import(&t).unwrap();
+        assert_eq!(k1, k2);
+        assert_eq!(p1, p2);
+        assert!(k1.starts_with("import:"));
+        let found = store.find_named(&t.name).unwrap().unwrap();
+        assert_eq!(found, t);
+        assert!(store.find_named("no-such-trace").unwrap().is_none());
+        let _ = fs::remove_dir_all(store.dir());
+    }
+
+    #[test]
+    fn gc_removes_corrupt_and_temp_files() {
+        let store = tmp_store("gc");
+        let t = Workload::Pathfinder.generate(Scale::default(), 3);
+        let key = CorpusStore::generated_key(&t.name, Scale::default(), 3);
+        store.put(&key, &t).unwrap();
+        // a torn write residue and a corrupt entry
+        fs::write(store.dir().join(".tmp-999-0.uvmt"), b"partial").unwrap();
+        fs::write(store.dir().join("deadbeefdeadbeef.uvmt"), b"garbage").unwrap();
+        assert_eq!(store.entries().unwrap().len(), 2); // temp excluded
+        // the default grace period protects the fresh temp file…
+        let rep = store.gc().unwrap();
+        assert_eq!(rep.removed_files, 1); // corrupt entry only
+        // …zero grace collects it too
+        let rep = store.gc_with_grace(std::time::Duration::ZERO).unwrap();
+        assert_eq!(rep.removed_files, 1);
+        assert_eq!(rep.kept, 1);
+        assert!(rep.reclaimed_bytes > 0);
+        // healthy entry survived
+        assert_eq!(store.get(&key).unwrap().unwrap(), t);
+        let _ = fs::remove_dir_all(store.dir());
+    }
+}

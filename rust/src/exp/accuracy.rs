@@ -45,7 +45,7 @@ pub fn fig4(ctx: &mut ExpContext) -> Result<()> {
     );
     let mut losses = Vec::new();
     for w in workload_set(ctx) {
-        let trace = w.generate(ctx.opts.scale, ctx.opts.seed);
+        let trace = ctx.trace(w)?;
         let (samples, _) = samples_from_trace(&trace, dims);
         let online = online_accuracy(
             &model, &dims, &samples, &TrainOpts::default(), None,
@@ -75,7 +75,7 @@ pub fn fig4(ctx: &mut ExpContext) -> Result<()> {
 pub fn fig6(ctx: &mut ExpContext) -> Result<()> {
     let dims = dims_of(ctx)?;
     let (_, model) = ctx.predictor()?;
-    let trace = Workload::Hotspot.generate(ctx.opts.scale, ctx.opts.seed);
+    let trace = ctx.trace(Workload::Hotspot)?;
     let (samples, _) = samples_from_trace(&trace, dims);
 
     let offline =
@@ -135,7 +135,7 @@ pub fn fig10(ctx: &mut ExpContext) -> Result<()> {
     );
     let mut sums = [0.0f64; 4];
     for w in &workloads {
-        let trace = w.generate(ctx.opts.scale, ctx.opts.seed);
+        let trace = ctx.trace(*w)?;
         let (samples, _) = samples_from_trace(&trace, dims);
         let mut row = vec![w.name().to_string()];
         for (i, a) in arch.iter().enumerate() {
@@ -169,7 +169,7 @@ pub fn fig11(ctx: &mut ExpContext) -> Result<()> {
     );
     let mut improvements = Vec::new();
     for w in workload_set(ctx) {
-        let trace = w.generate(ctx.opts.scale, ctx.opts.seed);
+        let trace = ctx.trace(w)?;
         let (samples, _) = samples_from_trace(&trace, dims);
         let online = online_accuracy(
             &model, &dims, &samples, &TrainOpts::default(), None,
@@ -207,7 +207,7 @@ pub fn fig12(ctx: &mut ExpContext) -> Result<()> {
         &["Benchmark", "Thrash w/o", "Thrash w.", "Top-1 w/o", "Top-1 w."],
     );
     for w in focus {
-        let trace = w.generate(ctx.opts.scale, ctx.opts.seed);
+        let trace = ctx.trace(w)?;
         let spec = RunSpec::new(&trace, 125);
         let run_mu = |ctx: &mut ExpContext, mu: f32| -> Result<u64> {
             let sctx = ctx
@@ -276,8 +276,8 @@ pub fn table7(ctx: &mut ExpContext) -> Result<()> {
     let mut gains = Vec::new();
     for a in &rows {
         for b in &cols {
-            let ta = a.generate(ctx.opts.scale, ctx.opts.seed);
-            let tb = b.generate(ctx.opts.scale, ctx.opts.seed ^ 1);
+            let ta = ctx.trace(*a)?;
+            let tb = ctx.trace_seeded(*b, ctx.opts.seed ^ 1)?;
             let online =
                 multi_accuracy(&model, &dims, &ta, &tb, &TrainOpts::default())?;
             let ours =

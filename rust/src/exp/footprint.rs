@@ -47,7 +47,7 @@ pub fn table4(ctx: &mut ExpContext) -> Result<()> {
         &["Benchmark", "Params.(MB)", "Acti.(MB)", "Patterns", "Total(MB)"],
     );
     for w in Workload::ALL {
-        let trace = w.generate(ctx.opts.scale, ctx.opts.seed);
+        let trace = ctx.trace(w)?;
         let patterns = patterns_in_trace(&trace);
         let total = (params_mb * 2.0 + act_mb) * patterns as f64;
         t.row(vec![

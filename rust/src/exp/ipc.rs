@@ -20,7 +20,7 @@ pub fn fig3(ctx: &mut ExpContext) -> Result<()> {
     );
     let mut slow125 = Vec::new();
     for w in Workload::ALL {
-        let trace = w.generate(ctx.opts.scale, ctx.opts.seed);
+        let trace = ctx.trace(w)?;
         let mut ipc_at = |pct: u32| -> Result<f64> {
             let spec = RunSpec::new(&trace, pct);
             Ok(ctx.run_cell(&spec, "baseline")?.outcome.stats.ipc())
@@ -66,7 +66,7 @@ pub fn fig13(ctx: &mut ExpContext) -> Result<()> {
     );
     let mut sums = [0.0f64; 5];
     for w in &workloads {
-        let trace = w.generate(ctx.opts.scale, ctx.opts.seed);
+        let trace = ctx.trace(*w)?;
         let spec = RunSpec::new(&trace, 125);
         let smart = ctx.run_cell(&spec, "uvmsmart")?;
         let ours = ctx.run_cell(&spec, "intelligent")?;
@@ -110,7 +110,7 @@ pub fn fig14(ctx: &mut ExpContext) -> Result<()> {
     let mut geo = [[0.0f64; 2]; 2]; // [oversub][method] log-sums
     let mut counts = [[0usize; 2]; 2];
     for w in &workloads {
-        let trace = w.generate(ctx.opts.scale, ctx.opts.seed);
+        let trace = ctx.trace(*w)?;
         let mut cells = Vec::new();
         for (oi, pct) in [125u32, 150].into_iter().enumerate() {
             // crash emulation at 150%: runaway thrash kills the run

@@ -16,7 +16,10 @@ use anyhow::{bail, Result};
 use crate::api::{CellResult, StrategyCtx, StrategyRegistry};
 use crate::config::Scale;
 use crate::coordinator::RunSpec;
+use crate::corpus::TraceCache;
 use crate::runtime::{ModelRuntime, Runtime};
+use crate::trace::workloads::Workload;
+use crate::trace::Trace;
 
 /// Options shared by all experiments.
 pub struct ExpOpts {
@@ -43,10 +46,14 @@ impl Default for ExpOpts {
 /// Lazily-initialised runtime context shared across experiments in one
 /// `exp all` invocation (compiling an executable trio costs seconds, so
 /// compiled models are cached by name), plus the open strategy registry
-/// every grid cell resolves against.
+/// every grid cell resolves against and the shared trace cache: every
+/// table/figure that touches a workload asks [`ExpContext::trace`], so
+/// one `Arc<Trace>` per (workload, scale, seed) serves the whole suite
+/// instead of each experiment regenerating its own copies.
 pub struct ExpContext {
     pub opts: ExpOpts,
     pub registry: StrategyRegistry,
+    pub cache: TraceCache,
     runtime: Option<Runtime>,
     models: std::collections::HashMap<String, Arc<ModelRuntime>>,
 }
@@ -56,9 +63,21 @@ impl ExpContext {
         ExpContext {
             opts,
             registry: StrategyRegistry::builtin(),
+            cache: TraceCache::new(),
             runtime: None,
             models: std::collections::HashMap::new(),
         }
+    }
+
+    /// The shared trace of a workload at the experiment's scale/seed.
+    pub fn trace(&self, w: Workload) -> Result<Arc<Trace>> {
+        self.cache.get_builtin(w, self.opts.scale, self.opts.seed)
+    }
+
+    /// The shared trace at an explicit seed (multi-tenant pairs perturb
+    /// tenant B's seed).
+    pub fn trace_seeded(&self, w: Workload, seed: u64) -> Result<Arc<Trace>> {
+        self.cache.get_builtin(w, self.opts.scale, seed)
     }
 
     fn ensure_runtime(&mut self) -> Result<&Runtime> {

@@ -13,7 +13,7 @@ use super::ExpContext;
 const OVERSUB: u32 = 125;
 
 fn thrash_of(ctx: &mut ExpContext, w: Workload, strategy: &str) -> Result<u64> {
-    let trace = w.generate(ctx.opts.scale, ctx.opts.seed);
+    let trace = ctx.trace(w)?;
     let spec = RunSpec::new(&trace, OVERSUB);
     Ok(ctx.run_cell(&spec, strategy)?.outcome.stats.thrash_events)
 }
@@ -80,7 +80,7 @@ pub fn table6(ctx: &mut ExpContext) -> Result<()> {
     let mut ours_sum = 0u64;
     let mut smart_sum = 0u64;
     for w in &workloads {
-        let trace = w.generate(ctx.opts.scale, ctx.opts.seed);
+        let trace = ctx.trace(*w)?;
         let spec = RunSpec::new(&trace, OVERSUB);
         let ours = ctx.run_cell(&spec, "intelligent")?.outcome.stats.thrash_events;
         let base = thrash_of(ctx, *w, "baseline")?;

@@ -23,7 +23,7 @@ pub fn table3(ctx: &mut ExpContext) -> Result<()> {
         &["Benchmark", "Phase 0", "Phase 1", "Phase 2"],
     );
     for w in Workload::ALL {
-        let trace = w.generate(ctx.opts.scale, ctx.opts.seed);
+        let trace = ctx.trace(w)?;
         let counts = unique_deltas_per_phase(&trace, 3);
         t.row(vec![
             w.name().to_string(),
@@ -56,7 +56,7 @@ pub fn fig5(ctx: &mut ExpContext) -> Result<()> {
         &["benchmark", "phase", "delta", "count"],
     );
     for w in focus {
-        let trace = w.generate(ctx.opts.scale, ctx.opts.seed);
+        let trace = ctx.trace(w)?;
         for phase in 0..3 {
             let hist = delta_histogram(&trace, phase, 3);
             // pattern labels over windows of the phase (DFA classes 0-5,

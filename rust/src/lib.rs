@@ -8,11 +8,17 @@
 //! strategies (the paper's eight pre-registered, new ones registered at
 //! runtime) and an [`api::SweepRunner`] that executes (workload ×
 //! strategy × oversubscription × seed) grids across threads with
-//! deterministic, sink-streamed output.
+//! deterministic, sink-streamed output. Traces feed in through
+//! [`corpus`]: a content-addressed `.uvmt` store plus a process-wide
+//! [`corpus::TraceCache`] sharing one immutable `Arc<Trace>` per
+//! (workload, scale, seed) across every consumer, and a
+//! [`corpus::TraceSource`] ingestion layer for external CSV /
+//! UVM-fault-log workloads.
 
 pub mod api;
 pub mod config;
 pub mod coordinator;
+pub mod corpus;
 pub mod exp;
 pub mod policy;
 pub mod predictor;

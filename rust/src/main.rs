@@ -4,23 +4,28 @@
 //! repro exp <table1|table2|...|fig14|all> [--quick] [--scale N] [--seed N]
 //! repro simulate --workload NW --strategy baseline --oversub 125
 //! repro sweep --workloads all --strategies baseline,uvmsmart --oversub 100,125,150
+//! repro corpus build --workloads all --seeds 42,7
+//! repro corpus import faults.csv --name myapp
 //! repro accuracy --workload Hotspot --method ours
 //! repro info
 //! ```
 //!
 //! Experiments write `reports/<id>.csv` next to the console table;
-//! sweeps stream `reports/sweep.csv` + `reports/sweep.jsonl`.
+//! sweeps stream `reports/sweep.csv` + `reports/sweep.jsonl`; the trace
+//! corpus lives in `corpus/` (override with `--corpus DIR`).
 
+use std::path::PathBuf;
 use std::process::ExitCode;
 use std::sync::Arc;
 use std::time::Instant;
 
 use uvmio::api::{
     ConsoleSink, CsvSink, JsonlSink, StrategyCtx, StrategyRegistry,
-    SweepRunner, SweepSink, SweepSpec,
+    SweepRunner, SweepSink, SweepSpec, SweepWorkload,
 };
 use uvmio::config::Scale;
 use uvmio::coordinator::{offline_accuracy, online_accuracy, RunSpec, TrainOpts};
+use uvmio::corpus::{self, CorpusStore, TraceCache};
 use uvmio::exp::{self, ExpContext, ExpOpts};
 use uvmio::predictor::features::samples_from_trace;
 use uvmio::runtime::{Manifest, Runtime};
@@ -40,13 +45,31 @@ USAGE:
       demand-belady demand-lru demand-random uvmsmart intelligent)
   repro sweep [--workloads all|W1,W2,..] [--strategies all|S1,S2,..]
               [--oversub P1,P2,..] [--seeds N1,N2,..] [--threads N]
-              [--scale N] [--reports DIR] [--artifacts DIR]
+              [--scale N] [--reports DIR] [--artifacts DIR] [--corpus DIR]
+              [--crash-at L=T,..]
       run the (workload × strategy × oversubscription × seed) grid in
       parallel across threads (artifact-backed strategies run on a
       serialized lane); streams a console table and writes
       reports/sweep.csv + reports/sweep.jsonl in deterministic grid
       order. Defaults: all workloads, the rule-based strategies,
-      oversub 125, seed 42, one thread per core.
+      oversub 125, seed 42, one thread per core. Traces are built once
+      per (workload, scale, seed) via a shared cache; with --corpus DIR
+      they are also persisted to / reloaded from the .uvmt store, and
+      workload names may be corpus entries, csv:FILE / uvmlog:FILE
+      imports, or A+B multi-tenant compositions. --crash-at maps an
+      oversubscription level to a crash threshold (thrash events), e.g.
+      --crash-at 150=100000 reproduces the Fig-14 crash columns.
+  repro corpus build [--workloads all|W1,..] [--scale N] [--seeds N1,..]
+              [--corpus DIR]
+      generate builtin traces into the corpus (.uvmt, content-addressed)
+  repro corpus import <file> [--name N] [--format csv|uvmlog] [--corpus DIR]
+      ingest an external trace (CSV page-access dump or UVM fault log),
+      validate it, and store it under its content hash; afterwards
+      `repro sweep --corpus DIR --workloads N` runs it by name
+  repro corpus list [--corpus DIR]
+      list corpus entries (name, size, provenance key), flag corrupt ones
+  repro corpus gc [--corpus DIR]
+      remove corrupt entries and orphaned temp files
   repro accuracy --workload W [--method online|offline|ours] [--seed N]
       predictor accuracy on one workload
   repro info
@@ -69,6 +92,7 @@ fn real_main() -> anyhow::Result<()> {
         Some("exp") => cmd_exp(&args),
         Some("simulate") => cmd_simulate(&args),
         Some("sweep") => cmd_sweep(&args),
+        Some("corpus") => cmd_corpus(&args),
         Some("accuracy") => cmd_accuracy(&args),
         Some("info") => cmd_info(),
         _ => {
@@ -201,14 +225,60 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Workload selectors for a sweep: builtin names, corpus entries,
+/// `csv:`/`uvmlog:` files, `A+B` compositions (see `uvmio::corpus`).
+fn parse_sweep_workloads(
+    selector: &str,
+    store: Option<&CorpusStore>,
+) -> anyhow::Result<Vec<SweepWorkload>> {
+    if selector.trim().eq_ignore_ascii_case("all") {
+        return Ok(Workload::ALL.into_iter().map(SweepWorkload::from).collect());
+    }
+    let mut out = Vec::new();
+    for part in selector.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+        match Workload::from_name(part) {
+            Some(w) => out.push(SweepWorkload::from(w)),
+            None => out.push(SweepWorkload::from(corpus::parse_source(part, store)?)),
+        }
+    }
+    if out.is_empty() {
+        anyhow::bail!("empty workload list");
+    }
+    Ok(out)
+}
+
+/// `--crash-at 150=100000,125=200000` → per-level thresholds.
+fn parse_crash_at(s: &str) -> anyhow::Result<Vec<(u32, u64)>> {
+    let mut out = Vec::new();
+    for part in s.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+        let (level, t) = part
+            .split_once('=')
+            .ok_or_else(|| anyhow::anyhow!("--crash-at: want LEVEL=THRESHOLD, got {part:?}"))?;
+        out.push((
+            level.trim().parse::<u32>().map_err(|_| {
+                anyhow::anyhow!("--crash-at: cannot parse level {level:?}")
+            })?,
+            t.trim().parse::<u64>().map_err(|_| {
+                anyhow::anyhow!("--crash-at: cannot parse threshold {t:?}")
+            })?,
+        ));
+    }
+    Ok(out)
+}
+
 fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
     args.reject_unknown(&[
         "workloads", "strategies", "oversub", "seeds", "threads", "scale",
-        "reports", "artifacts",
+        "reports", "artifacts", "corpus", "crash-at",
     ])
     .map_err(anyhow::Error::msg)?;
     let registry = StrategyRegistry::builtin();
-    let workloads = parse_workloads(args.get_or("workloads", "all"))?;
+    let store = match args.get("corpus") {
+        Some(dir) => Some(CorpusStore::open(dir)?),
+        None => None,
+    };
+    let workloads =
+        parse_sweep_workloads(args.get_or("workloads", "all"), store.as_ref())?;
     let strategies = registry.resolve_list(args.get_or(
         "strategies",
         "baseline,demand-hpe,tree-hpe,demand-belady,demand-lru,demand-random,uvmsmart",
@@ -220,7 +290,7 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
     let scale = Scale {
         factor: args.get_parse("scale", 1u32).map_err(anyhow::Error::msg)?,
     };
-    let reports: std::path::PathBuf = args.get_or("reports", "reports").into();
+    let reports: PathBuf = args.get_or("reports", "reports").into();
 
     // artifact ctx only when an artifact-backed strategy is in the grid
     let ctx = if strategies
@@ -239,10 +309,20 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
         StrategyCtx::default()
     };
 
-    let sweep = SweepSpec::new(workloads, strategies)
+    let mut sweep = SweepSpec::new(workloads, strategies)
         .with_oversub(oversub)
         .with_seeds(seeds)
         .with_scale(scale);
+    for (level, t) in parse_crash_at(args.get_or("crash-at", ""))? {
+        sweep = sweep.with_crash_threshold_at(level, t);
+    }
+
+    // one shared trace cache for both lanes; corpus-backed when asked
+    let cache = Arc::new(match store {
+        Some(s) => TraceCache::with_store(s),
+        None => TraceCache::new(),
+    });
+
     let csv_path = reports.join("sweep.csv");
     let jsonl_path = reports.join("sweep.jsonl");
     let mut sinks: Vec<Box<dyn SweepSink>> = vec![
@@ -253,7 +333,9 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
     let t0 = Instant::now();
     let records = SweepRunner::new(&registry)
         .with_threads(threads)
+        .with_cache(Arc::clone(&cache))
         .run(&sweep, &ctx, &mut sinks)?;
+    let cs = cache.stats();
     println!(
         "{} cells in {:.2?} -> {} + {}",
         records.len(),
@@ -261,11 +343,171 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
         csv_path.display(),
         jsonl_path.display()
     );
+    println!(
+        "trace cache: {} built, {} loaded from corpus, {} persisted, {} shared hits",
+        cs.builds, cs.store_loads, cs.store_writes, cs.hits
+    );
     let failed = records.iter().filter(|r| r.result.is_err()).count();
     if failed > 0 {
         anyhow::bail!("{failed} cell(s) failed — see the error column");
     }
     Ok(())
+}
+
+fn cmd_corpus(args: &Args) -> anyhow::Result<()> {
+    let verb = args
+        .positional
+        .first()
+        .map(String::as_str)
+        .unwrap_or("list");
+    let open_store = || CorpusStore::open(args.get_or("corpus", "corpus"));
+    match verb {
+        "build" => {
+            args.reject_unknown(&["workloads", "scale", "seeds", "corpus"])
+                .map_err(anyhow::Error::msg)?;
+            let workloads = parse_workloads(args.get_or("workloads", "all"))?;
+            let seeds = parse_list::<u64>(args.get_or("seeds", "42"), "seeds")?;
+            let scale = Scale {
+                factor: args
+                    .get_parse("scale", 1u32)
+                    .map_err(anyhow::Error::msg)?,
+            };
+            let cache = TraceCache::with_store(open_store()?);
+            for &w in &workloads {
+                for &seed in &seeds {
+                    let t = cache.get_builtin(w, scale, seed)?;
+                    println!(
+                        "  {:12} s{} r{:<6} {:>8} accesses, {:>6} pages",
+                        w.name(),
+                        scale.factor,
+                        seed,
+                        t.accesses.len(),
+                        t.working_set_pages
+                    );
+                }
+            }
+            let s = cache.stats();
+            println!(
+                "corpus build: {} generated, {} already present (dir {})",
+                s.builds,
+                s.store_loads,
+                cache.store().unwrap().dir().display()
+            );
+            Ok(())
+        }
+        "import" => {
+            args.reject_unknown(&["name", "format", "corpus"])
+                .map_err(anyhow::Error::msg)?;
+            let file = args.positional.get(1).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "usage: repro corpus import <file> [--name N] \
+                     [--format csv|uvmlog] [--corpus DIR]"
+                )
+            })?;
+            let path = PathBuf::from(file);
+            let default_name = path
+                .file_stem()
+                .map(|s| s.to_string_lossy().into_owned())
+                .unwrap_or_else(|| "imported".to_string());
+            let name = args
+                .get("name")
+                .map(|s| s.to_string())
+                .unwrap_or(default_name);
+            let is_csv = path
+                .extension()
+                .and_then(|e| e.to_str())
+                .is_some_and(|e| e.eq_ignore_ascii_case("csv"));
+            let format =
+                args.get_or("format", if is_csv { "csv" } else { "uvmlog" });
+            let trace = match format {
+                "csv" => corpus::import::csv_trace(&path, &name)?,
+                "uvmlog" | "log" | "faultlog" => {
+                    corpus::import::uvm_fault_log_trace(&path, &name)?
+                }
+                other => anyhow::bail!("--format {other}: want csv or uvmlog"),
+            };
+            let store = open_store()?;
+            let (key, out) = store.import(&trace)?;
+            println!(
+                "imported '{}': {} accesses, {} pages touched, {} kernel phase(s)",
+                trace.name,
+                trace.accesses.len(),
+                trace.touched_pages,
+                trace.kernels
+            );
+            println!("  key  {key}");
+            println!("  file {}", out.display());
+            println!(
+                "run it:  repro sweep --corpus {} --workloads {}",
+                store.dir().display(),
+                trace.name
+            );
+            Ok(())
+        }
+        "list" => {
+            args.reject_unknown(&["corpus"]).map_err(anyhow::Error::msg)?;
+            let store = open_store()?;
+            let entries = store.entries()?;
+            if entries.is_empty() {
+                println!("corpus {} is empty", store.dir().display());
+                return Ok(());
+            }
+            println!(
+                "{:<16} {:>10} {:>8} {:>7} {:>8}  {}",
+                "name", "accesses", "pages", "kernels", "KiB", "key"
+            );
+            let mut corrupt = 0usize;
+            for e in &entries {
+                match &e.meta {
+                    Ok(m) => println!(
+                        "{:<16} {:>10} {:>8} {:>7} {:>8}  {}",
+                        m.name,
+                        m.accesses,
+                        m.working_set_pages,
+                        m.kernels,
+                        e.bytes / 1024,
+                        m.key
+                    ),
+                    Err(why) => {
+                        corrupt += 1;
+                        println!(
+                            "CORRUPT {} ({} bytes): {why}",
+                            e.path.display(),
+                            e.bytes
+                        );
+                    }
+                }
+            }
+            println!(
+                "{} entr{} in {}{}",
+                entries.len(),
+                if entries.len() == 1 { "y" } else { "ies" },
+                store.dir().display(),
+                if corrupt > 0 {
+                    format!(" ({corrupt} corrupt — run `repro corpus gc`)")
+                } else {
+                    String::new()
+                }
+            );
+            Ok(())
+        }
+        "gc" => {
+            args.reject_unknown(&["corpus"]).map_err(anyhow::Error::msg)?;
+            let store = open_store()?;
+            let rep = store.gc()?;
+            println!(
+                "corpus gc: removed {} file(s), reclaimed {} KiB, kept {} entr{}",
+                rep.removed_files,
+                rep.reclaimed_bytes / 1024,
+                rep.kept,
+                if rep.kept == 1 { "y" } else { "ies" }
+            );
+            Ok(())
+        }
+        other => anyhow::bail!(
+            "unknown corpus verb {other:?}; known: build import list gc"
+        ),
+    }
 }
 
 fn cmd_accuracy(args: &Args) -> anyhow::Result<()> {

@@ -30,7 +30,7 @@ pub struct Access {
 }
 
 /// A complete workload trace.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Trace {
     pub name: String,
     /// Arena span in pages, including chunk-alignment padding between

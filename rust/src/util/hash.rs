@@ -1,0 +1,76 @@
+//! FNV-1a hashing: the dependency-free content hash used by the trace
+//! corpus (`crate::corpus`) for store keys and `.uvmt` checksums.
+//!
+//! FNV-1a is not cryptographic — it is a cheap, stable, well-distributed
+//! 64-bit digest, which is exactly what content-addressing a few hundred
+//! corpus files and integrity-checking a trace payload need. Keys are
+//! derived from *identity strings* (workload × scale × seed) or file
+//! bytes, so collisions would require adversarial inputs we do not
+//! defend against.
+
+/// 64-bit FNV-1a over a byte slice.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Streaming FNV-1a accumulator (same digest as [`fnv1a64`] over the
+/// concatenation of all `update` calls).
+#[derive(Debug, Clone)]
+pub struct Fnv1a64(u64);
+
+impl Default for Fnv1a64 {
+    fn default() -> Self {
+        Fnv1a64::new()
+    }
+}
+
+impl Fnv1a64 {
+    pub fn new() -> Fnv1a64 {
+        Fnv1a64(0xcbf2_9ce4_8422_2325)
+    }
+
+    pub fn update(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+
+    pub fn digest(&self) -> u64 {
+        self.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vectors() {
+        // standard FNV-1a test vectors
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn streaming_matches_one_shot() {
+        let mut h = Fnv1a64::new();
+        h.update(b"foo");
+        h.update(b"bar");
+        assert_eq!(h.digest(), fnv1a64(b"foobar"));
+    }
+
+    #[test]
+    fn distinct_keys_distinct_hashes() {
+        assert_ne!(
+            fnv1a64(b"gen:ATAX:s1:r42"),
+            fnv1a64(b"gen:ATAX:s1:r43")
+        );
+    }
+}

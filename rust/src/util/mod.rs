@@ -1,8 +1,10 @@
-//! Dependency-free substrate utilities: deterministic RNG, JSON, CLI
-//! parsing, a mini property-test harness, and CSV/report helpers.
+//! Dependency-free substrate utilities: deterministic RNG, FNV hashing,
+//! JSON, CLI parsing, a mini property-test harness, and CSV/report
+//! helpers.
 
 pub mod check;
 pub mod cli;
 pub mod csv;
+pub mod hash;
 pub mod json;
 pub mod rng;

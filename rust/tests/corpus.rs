@@ -1,0 +1,392 @@
+//! Corpus integration tests: lossless `.uvmt` round-trips on every
+//! builtin workload, shared-cache object identity across sweep cells,
+//! corrupted-file rejection, byte-identical cached-vs-uncached sweeps,
+//! per-level crash thresholds, and the full import→store→sweep-by-name
+//! path (including through the `repro` binary itself).
+
+use std::fs;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use uvmio::api::{
+    record_to_json, CellRecord, StrategyCtx, StrategyRegistry, SweepRunner,
+    SweepSpec, SweepWorkload,
+};
+use uvmio::config::Scale;
+use uvmio::corpus::{
+    format as uvmt, parse_source, CorpusStore, CsvSource, TraceCache,
+};
+use uvmio::trace::multi::interleave;
+use uvmio::trace::workloads::Workload;
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "uvmio-corpus-it-{}-{tag}",
+        std::process::id()
+    ));
+    let _ = fs::remove_dir_all(&dir);
+    fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Satellite requirement: encode/decode round-trip on EVERY builtin
+/// workload, allocations metadata included.
+#[test]
+fn uvmt_roundtrip_every_builtin_workload() {
+    for w in Workload::ALL {
+        let t = w.generate(Scale::default(), 42);
+        let key = CorpusStore::generated_key(&t.name, Scale::default(), 42);
+        let bytes = uvmt::encode(&t, &key);
+        let (back, back_key) = uvmt::decode(&bytes).unwrap();
+        assert_eq!(back_key, key, "{}", w.name());
+        assert_eq!(back, t, "{} round-trip not lossless", w.name());
+        assert!(!back.allocations.is_empty() || t.allocations.is_empty());
+        back.validate().unwrap();
+    }
+}
+
+/// Interleaved multi-tenant traces carry a multi-allocation map and
+/// non-trivial kernel structure — they must round-trip too.
+#[test]
+fn uvmt_roundtrip_interleaved_trace() {
+    let a = Workload::StreamTriad.generate(Scale::default(), 1);
+    let b = Workload::Nw.generate(Scale::default(), 2);
+    let m = interleave(&a, &b);
+    assert!(m.allocations.len() >= 2);
+    let bytes = uvmt::encode(&m, "pair");
+    let (back, _) = uvmt::decode(&bytes).unwrap();
+    assert_eq!(back, m);
+}
+
+#[test]
+fn corrupted_files_are_rejected_and_gcable() {
+    let dir = tmp_dir("corrupt");
+    let store = CorpusStore::open(&dir).unwrap();
+    let t = Workload::Hotspot.generate(Scale::default(), 42);
+    let key = CorpusStore::generated_key(&t.name, Scale::default(), 42);
+    let path = store.put(&key, &t).unwrap();
+
+    // flip one payload byte on disk: get() must fail checksum, not
+    // silently hand back a wrong trace
+    let mut bytes = fs::read(&path).unwrap();
+    let last = bytes.len() - 1;
+    bytes[last] ^= 0x40;
+    fs::write(&path, &bytes).unwrap();
+    let err = format!("{:#}", store.get(&key).unwrap_err());
+    assert!(err.contains("checksum"), "{err}");
+
+    // gc removes it (plus a stray temp file, with zero grace so the
+    // fresh temp counts as orphaned) and reports the reclaim
+    fs::write(dir.join(".tmp-1-1.uvmt"), b"torn").unwrap();
+    let rep = store.gc_with_grace(std::time::Duration::ZERO).unwrap();
+    assert_eq!(rep.removed_files, 2);
+    assert_eq!(rep.kept, 0);
+    assert!(store.get(&key).unwrap().is_none());
+    let _ = fs::remove_dir_all(&dir);
+}
+
+/// Cache identity: the SAME `Arc<Trace>` must be handed to every
+/// consumer of one (workload, scale, seed).
+#[test]
+fn cache_hands_out_one_arc_per_identity() {
+    let cache = TraceCache::new();
+    let a = cache
+        .get_builtin(Workload::SradV2, Scale::default(), 42)
+        .unwrap();
+    let b = cache
+        .get_builtin(Workload::SradV2, Scale::default(), 42)
+        .unwrap();
+    assert!(Arc::ptr_eq(&a, &b));
+    let other_seed = cache
+        .get_builtin(Workload::SradV2, Scale::default(), 7)
+        .unwrap();
+    assert!(!Arc::ptr_eq(&a, &other_seed));
+    let s = cache.stats();
+    assert_eq!(s.builds, 2);
+    assert_eq!(s.hits, 1);
+}
+
+fn jsonl_of(records: &[CellRecord]) -> String {
+    records
+        .iter()
+        .map(|r| record_to_json(r).compact())
+        .collect::<Vec<_>>()
+        .join("\n")
+}
+
+/// The acceptance-criterion sweep: ≥3 strategies × 2 oversubscription
+/// levels × 2 seeds with a shared cache builds each (workload, seed)
+/// trace EXACTLY once (asserted via cache stats) and produces
+/// byte-identical records to a cache-less serial run.
+#[test]
+fn cached_parallel_sweep_builds_once_and_matches_serial() {
+    let registry = StrategyRegistry::builtin();
+    let workloads = vec![Workload::Atax, Workload::Hotspot];
+    let sweep = SweepSpec::new(
+        workloads.clone(),
+        registry
+            .resolve_list("baseline,uvmsmart,demand-belady")
+            .unwrap(),
+    )
+    .with_oversub(vec![110, 125])
+    .with_seeds(vec![42, 7]);
+    assert_eq!(sweep.len(), 2 * 3 * 2 * 2);
+
+    let dir = tmp_dir("accept");
+    let csv_a = dir.join("serial.csv");
+    let csv_b = dir.join("parallel.csv");
+
+    let ctx = StrategyCtx::default();
+    // cache-less serial reference: a fresh runner with its own private
+    // per-run cache, one thread
+    let mut sinks_a: Vec<Box<dyn uvmio::api::SweepSink>> =
+        vec![Box::new(uvmio::api::CsvSink::to_path(&csv_a).unwrap())];
+    let serial = SweepRunner::new(&registry)
+        .with_threads(1)
+        .run(&sweep, &ctx, &mut sinks_a)
+        .unwrap();
+
+    // shared-cache parallel run
+    let cache = Arc::new(TraceCache::new());
+    let mut sinks_b: Vec<Box<dyn uvmio::api::SweepSink>> =
+        vec![Box::new(uvmio::api::CsvSink::to_path(&csv_b).unwrap())];
+    let parallel = SweepRunner::new(&registry)
+        .with_threads(4)
+        .with_cache(Arc::clone(&cache))
+        .run(&sweep, &ctx, &mut sinks_b)
+        .unwrap();
+
+    // byte-identical CSV files
+    assert_eq!(fs::read(&csv_a).unwrap(), fs::read(&csv_b).unwrap());
+    let _ = fs::remove_dir_all(&dir);
+
+    // each (workload, seed) pair built exactly once, every other cell
+    // was a shared hit
+    let stats = cache.stats();
+    let distinct = (workloads.len() * 2) as u64;
+    assert_eq!(stats.builds, distinct, "{stats:?}");
+    assert_eq!(stats.hits, sweep.len() as u64 - distinct, "{stats:?}");
+
+    // byte-identical serialized output
+    assert_eq!(jsonl_of(&serial), jsonl_of(&parallel));
+
+    // re-running on the warm cache builds nothing new
+    let again = SweepRunner::new(&registry)
+        .with_threads(2)
+        .with_cache(Arc::clone(&cache))
+        .run(&sweep, &ctx, &mut [])
+        .unwrap();
+    assert_eq!(cache.stats().builds, distinct);
+    assert_eq!(jsonl_of(&serial), jsonl_of(&again));
+}
+
+/// Per-level crash thresholds: only cells at the configured
+/// oversubscription level crash.
+#[test]
+fn per_level_crash_threshold_applies_to_its_level_only() {
+    let registry = StrategyRegistry::builtin();
+    let sweep = SweepSpec::new(
+        vec![Workload::Atax],
+        registry.resolve_list("baseline").unwrap(),
+    )
+    .with_oversub(vec![110, 150])
+    .with_crash_threshold_at(150, 1); // any thrash at all crashes @150
+    assert_eq!(sweep.crash_threshold_for(150), Some(1));
+    assert_eq!(sweep.crash_threshold_for(110), None);
+
+    let records = SweepRunner::new(&registry)
+        .run(&sweep, &StrategyCtx::default(), &mut [])
+        .unwrap();
+    assert_eq!(records.len(), 2);
+    let at = |oversub: u32| {
+        records
+            .iter()
+            .find(|r| r.cell.oversub == oversub)
+            .unwrap()
+            .result
+            .as_ref()
+            .unwrap()
+            .outcome
+            .crashed
+    };
+    assert!(!at(110), "110% must not crash");
+    assert!(at(150), "150% with threshold 1 must crash (ATAX thrashes)");
+}
+
+/// End-to-end ingestion at the library level: write a CSV, import it
+/// into a store, then sweep it BY NAME next to a builtin workload.
+#[test]
+fn imported_csv_runs_through_sweep_by_name() {
+    let dir = tmp_dir("sweepcsv");
+    // a small strided two-phase workload
+    let csv_path = dir.join("myapp.csv");
+    let mut csv = String::from("page,pc,tb,kernel,inst_gap,is_write\n");
+    for k in 0..2u32 {
+        for i in 0..256u64 {
+            csv.push_str(&format!("{},{},{},{k},4,{}\n", (i * 3) % 128, k, i % 8, i % 2));
+        }
+    }
+    fs::write(&csv_path, &csv).unwrap();
+
+    // import (what `repro corpus import` does)
+    let store = CorpusStore::open(dir.join("corpus")).unwrap();
+    let trace = uvmio::corpus::import::csv_trace(&csv_path, "myapp").unwrap();
+    let (key, _) = store.import(&trace).unwrap();
+    assert!(key.starts_with("import:"));
+
+    // resolve by name (what `repro sweep --corpus … --workloads myapp` does)
+    let src = parse_source("myapp", Some(&store)).unwrap();
+    let registry = StrategyRegistry::builtin();
+    let cache = Arc::new(TraceCache::with_store(
+        CorpusStore::open(dir.join("corpus")).unwrap(),
+    ));
+    let sweep = SweepSpec::new(
+        vec![SweepWorkload::from(src), SweepWorkload::from(Workload::Atax)],
+        registry.resolve_list("baseline,demand-lru").unwrap(),
+    )
+    .with_seeds(vec![42, 7]);
+    let records = SweepRunner::new(&registry)
+        .with_threads(2)
+        .with_cache(Arc::clone(&cache))
+        .run(&sweep, &StrategyCtx::default(), &mut [])
+        .unwrap();
+    assert_eq!(records.len(), 8);
+    for r in &records {
+        assert!(r.result.is_ok(), "{:?}: {:?}", r.cell, r.result);
+    }
+    assert_eq!(records[0].cell.workload, "myapp");
+    // the imported trace is seed-independent: ONE build serves both
+    // seeds; ATAX builds once per seed
+    assert_eq!(cache.stats().builds, 1 + 2);
+    let _ = fs::remove_dir_all(&dir);
+}
+
+/// A CSV file can also run directly (no store) via the csv: prefix.
+#[test]
+fn csv_source_runs_without_a_store() {
+    let dir = tmp_dir("directcsv");
+    let csv_path = dir.join("direct.csv");
+    fs::write(&csv_path, "page\n0\n1\n2\n3\n2\n1\n0\n").unwrap();
+    let src = CsvSource::new(&csv_path);
+    let registry = StrategyRegistry::builtin();
+    let sweep = SweepSpec::new(
+        vec![SweepWorkload::Source(Arc::new(src))],
+        registry.resolve_list("baseline").unwrap(),
+    );
+    let records = SweepRunner::new(&registry)
+        .run(&sweep, &StrategyCtx::default(), &mut [])
+        .unwrap();
+    assert_eq!(records.len(), 1);
+    assert_eq!(records[0].cell.workload, "direct");
+    assert!(records[0].result.is_ok(), "{:?}", records[0].result);
+    let _ = fs::remove_dir_all(&dir);
+}
+
+/// A missing corpus entry fails the CELL (with an actionable error),
+/// never the whole sweep.
+#[test]
+fn missing_corpus_entry_fails_cell_not_sweep() {
+    let dir = tmp_dir("missing");
+    let store = CorpusStore::open(dir.join("corpus")).unwrap();
+    let src = parse_source("corpus:ghost", Some(&store)).unwrap();
+    let registry = StrategyRegistry::builtin();
+    let sweep = SweepSpec::new(
+        vec![SweepWorkload::from(src), SweepWorkload::from(Workload::Bicg)],
+        registry.resolve_list("baseline").unwrap(),
+    );
+    let records = SweepRunner::new(&registry)
+        .run(&sweep, &StrategyCtx::default(), &mut [])
+        .unwrap();
+    assert_eq!(records.len(), 2);
+    let err = records[0].result.as_ref().unwrap_err();
+    assert!(err.contains("ghost"), "{err}");
+    assert!(records[1].result.is_ok());
+    let _ = fs::remove_dir_all(&dir);
+}
+
+/// The whole CLI path through the real binary: corpus build → import →
+/// list → sweep by name → gc.
+#[test]
+fn repro_binary_corpus_workflow() {
+    let dir = tmp_dir("cli");
+    let corpus = dir.join("corpus");
+    let reports = dir.join("reports");
+    let bin = env!("CARGO_BIN_EXE_repro");
+    let run = |cli: &[&str]| {
+        let out = std::process::Command::new(bin)
+            .args(cli)
+            .current_dir(&dir)
+            .output()
+            .expect("spawn repro");
+        assert!(
+            out.status.success(),
+            "repro {cli:?} failed:\nstdout: {}\nstderr: {}",
+            String::from_utf8_lossy(&out.stdout),
+            String::from_utf8_lossy(&out.stderr)
+        );
+        String::from_utf8_lossy(&out.stdout).into_owned()
+    };
+    let corpus_s = corpus.to_str().unwrap();
+    let reports_s = reports.to_str().unwrap();
+
+    // build two builtin traces into the corpus
+    run(&[
+        "corpus", "build", "--workloads", "ATAX,Hotspot", "--corpus", corpus_s,
+    ]);
+
+    // import a CSV trace
+    let csv_path = dir.join("webapp.csv");
+    let mut csv = String::from("page,kernel,is_write\n");
+    for i in 0..512u64 {
+        csv.push_str(&format!("{},0,{}\n", i % 96, i % 3 == 0));
+    }
+    fs::write(&csv_path, &csv).unwrap();
+    let out = run(&[
+        "corpus", "import", csv_path.to_str().unwrap(), "--name", "webapp",
+        "--corpus", corpus_s,
+    ]);
+    assert!(out.contains("imported 'webapp'"), "{out}");
+
+    // list shows all three entries
+    let out = run(&["corpus", "list", "--corpus", corpus_s]);
+    assert!(out.contains("webapp"), "{out}");
+    assert!(out.contains("ATAX"), "{out}");
+    assert!(out.contains("3 entries"), "{out}");
+
+    // sweep the imported trace BY NAME, drawing builtins from the corpus
+    let out = run(&[
+        "sweep", "--corpus", corpus_s, "--workloads", "webapp,ATAX",
+        "--strategies", "baseline,uvmsmart", "--reports", reports_s,
+    ]);
+    assert!(out.contains("webapp"), "{out}");
+    assert!(reports.join("sweep.csv").exists());
+    let csv_report = fs::read_to_string(reports.join("sweep.csv")).unwrap();
+    assert!(csv_report.contains("webapp,baseline"), "{csv_report}");
+    assert!(csv_report.contains("webapp,uvmsmart"), "{csv_report}");
+
+    // gc keeps everything healthy
+    let out = run(&["corpus", "gc", "--corpus", corpus_s]);
+    assert!(out.contains("kept 3"), "{out}");
+    let _ = fs::remove_dir_all(&dir);
+}
+
+/// parse_source grammar smoke test for the composed multi-tenant case
+/// through a real sweep.
+#[test]
+fn composed_pair_runs_through_sweep() {
+    let registry = StrategyRegistry::builtin();
+    let src = parse_source("StreamTriad+Hotspot", None).unwrap();
+    let cache = Arc::new(TraceCache::new());
+    let sweep = SweepSpec::new(
+        vec![SweepWorkload::from(src)],
+        registry.resolve_list("baseline").unwrap(),
+    );
+    let records = SweepRunner::new(&registry)
+        .with_cache(Arc::clone(&cache))
+        .run(&sweep, &StrategyCtx::default(), &mut [])
+        .unwrap();
+    assert_eq!(records.len(), 1);
+    assert_eq!(records[0].cell.workload, "StreamTriad+Hotspot");
+    assert!(records[0].result.is_ok(), "{:?}", records[0].result);
+    assert_eq!(cache.stats().builds, 1);
+}

@@ -3,8 +3,7 @@
 //! invariants promises; `DeviceMemory` additionally panics internally on
 //! any capacity or double-install violation, so every run below doubles
 //! as a residency-invariant check. All cells run through the strategy
-//! registry by name — the deprecated enum shim keeps one compat test at
-//! the bottom.
+//! registry by name.
 
 use uvmio::api::{CellResult, StrategyCtx, StrategyRegistry};
 use uvmio::config::Scale;
@@ -172,19 +171,4 @@ fn uvmsmart_beats_baseline_on_the_thrashers() {
             base.outcome.stats.thrash_events
         );
     }
-}
-
-#[test]
-#[allow(deprecated)]
-fn deprecated_enum_shim_matches_registry_path() {
-    // the old enum API must keep producing byte-identical stats while it
-    // lives (it now routes through the registry internally)
-    use uvmio::coordinator::{run_rule_based, Strategy};
-    let trace = Workload::Bicg.generate(Scale::default(), 42);
-    let spec = RunSpec::new(&trace, 125);
-    let via_enum = run_rule_based(&spec, Strategy::Baseline);
-    let via_registry = run(&spec, "baseline");
-    assert_eq!(via_enum.outcome.stats, via_registry.outcome.stats);
-    assert_eq!(via_enum.strategy, "baseline");
-    assert_eq!(Strategy::Baseline.registry_name(), "baseline");
 }
