@@ -1,14 +1,24 @@
-//! Multi-tenant scalability demo (Table VII driver): two GPGPU workloads
-//! from different DFA categories share one GPU; the predictor must learn
-//! both interleaved pattern streams at once.
+//! Multi-tenant demo: two GPGPU workloads from different DFA categories
+//! share one GPU.
 //!
-//! Requires `make artifacts`.
+//! Part 1 (no artifacts needed) runs them through the online
+//! [`MultiTenantScheduler`]: both tenants contend for one device memory
+//! live, with per-tenant fault attribution, under each schedule policy.
+//! Part 2 (Table VII driver, requires `make artifacts`) shows the
+//! predictor learning both interleaved pattern streams at once.
+//!
 //! Run: `cargo run --release --example multi_tenant [-- --a NW --b 2DCONV]`
 
 use std::sync::Arc;
 
 use uvmio::config::Scale;
-use uvmio::coordinator::{feat_dims, multi_accuracy, TrainOpts};
+use uvmio::coordinator::{
+    feat_dims, multi_accuracy, MultiTenantScheduler, SchedulePolicy,
+    TenantSpec, TrainOpts,
+};
+use uvmio::policy::composite::Composite;
+use uvmio::policy::lru::Lru;
+use uvmio::policy::tree_prefetch::TreePrefetcher;
 use uvmio::runtime::{Manifest, Runtime};
 use uvmio::trace::multi::interleave;
 use uvmio::trace::workloads::Workload;
@@ -30,6 +40,36 @@ fn main() -> anyhow::Result<()> {
         merged.accesses.len(), merged.touched_pages
     );
 
+    // ---- part 1: online co-simulation over shared device memory ----
+    println!(
+        "\nonline scheduler @125% oversubscription (baseline policy):\n{:<14} {:>10} {:>10} {:>10} {:>10} {:>8}",
+        "schedule", "A faults", "B faults", "thrash", "cycles", "ipc"
+    );
+    for (name, schedule) in [
+        ("proportional", SchedulePolicy::Proportional),
+        ("round-robin", SchedulePolicy::RoundRobin),
+        ("fault-aware", SchedulePolicy::FaultAware),
+    ] {
+        let out = MultiTenantScheduler::new()
+            .with_schedule(schedule)
+            .add_tenant(TenantSpec::from_trace(&ta))
+            .add_tenant(TenantSpec::from_trace(&tb))
+            .run(
+                125,
+                Box::new(Composite::new(TreePrefetcher::new(), Lru::new())),
+            )?;
+        println!(
+            "{:<14} {:>10} {:>10} {:>10} {:>10} {:>8.4}",
+            name,
+            out.tenants[0].faults,
+            out.tenants[1].faults,
+            out.outcome.stats.thrash_events,
+            out.outcome.stats.cycles,
+            out.outcome.stats.ipc()
+        );
+    }
+
+    // ---- part 2: per-tenant predictor accuracy (Table VII) ----
     let runtime = Runtime::new(&Manifest::default_dir())?;
     let model = Arc::new(runtime.model("predictor")?);
     let dims = feat_dims(&runtime);

@@ -53,4 +53,44 @@ fn main() {
             std::hint::black_box(registry.run("baseline", &spec, &ctx).unwrap());
         });
     }
+
+    // session push loop vs the batch wrapper: the resumable API must not
+    // tax the hot path (Engine::run IS a session feed, so these two
+    // numbers bound the redesign's overhead at ~zero)
+    {
+        use uvmio::sim::{Arena, Session};
+        let trace = Workload::Bicg.generate(Scale::default(), 42);
+        let spec = RunSpec::new(&trace, 125);
+        let events = trace.accesses.len() as u64;
+        b.bench("session/BICG/push-loop", events, || {
+            let policy = registry
+                .get("baseline")
+                .unwrap()
+                .build(&spec, &ctx)
+                .unwrap();
+            let mut session =
+                Session::new(spec.cfg.clone(), Arena::of_trace(&trace), policy);
+            for acc in &trace.accesses {
+                session.push(acc);
+            }
+            std::hint::black_box(session.finish());
+        });
+        // snapshot sampling cost on top of the push loop
+        b.bench("session/BICG/push+snapshot", events, || {
+            let policy = registry
+                .get("baseline")
+                .unwrap()
+                .build(&spec, &ctx)
+                .unwrap();
+            let mut session =
+                Session::new(spec.cfg.clone(), Arena::of_trace(&trace), policy);
+            for (i, acc) in trace.accesses.iter().enumerate() {
+                session.push(acc);
+                if i % 1024 == 0 {
+                    std::hint::black_box(session.snapshot());
+                }
+            }
+            std::hint::black_box(session.finish());
+        });
+    }
 }

@@ -17,7 +17,10 @@
 //!   (the PJRT client is not thread-safe), and stream [`CellRecord`]s to
 //!   pluggable [`SweepSink`]s (console / CSV / JSON Lines) in
 //!   deterministic grid order — a parallel run is byte-identical to a
-//!   serial one. Both lanes draw traces from a shared
+//!   serial one. Cells execute on the resumable [`crate::sim::Session`]
+//!   core, so [`SweepRunner::with_progress`] can stream mid-run
+//!   snapshots (via session [`crate::sim::Observer`]s) without touching
+//!   the ordered sink output. Both lanes draw traces from a shared
 //!   [`crate::corpus::TraceCache`] (see [`SweepRunner::with_cache`]):
 //!   each (workload, scale, seed) trace is built once per run and shared
 //!   as `Arc<Trace>`. Workload slots ([`SweepWorkload`]) accept builtin

@@ -31,7 +31,7 @@ use crate::policy::uvmsmart::UvmSmart;
 use crate::policy::{DemandOnly, Policy};
 use crate::predictor::{FeatDims, IntelligentConfig, IntelligentPolicy};
 use crate::runtime::{ModelRuntime, Runtime};
-use crate::sim::{Engine, RunOutcome};
+use crate::sim::{Arena, Observer, RunOutcome, Session};
 
 /// Paper tables a strategy appears in (metadata only; experiments may
 /// select strategies by membership instead of hard-coding name lists).
@@ -270,7 +270,7 @@ impl StrategyRegistry {
         Ok(out)
     }
 
-    /// Run one grid cell: build the policy, drive the engine over the
+    /// Run one grid cell: build the policy, drive a [`Session`] over the
     /// trace, then apply the §V-C overhead post-pass (one
     /// `prediction_overhead` charge per batched predictor invocation —
     /// additive on the final cycle count, equivalent to charging inline
@@ -281,17 +281,32 @@ impl StrategyRegistry {
         spec: &RunSpec<'_>,
         ctx: &StrategyCtx,
     ) -> Result<CellResult> {
+        self.run_observed(name, spec, ctx, Vec::new())
+    }
+
+    /// [`StrategyRegistry::run`] with [`Observer`]s attached to the
+    /// underlying session — mid-run observability (progress snapshots,
+    /// event tracing) for any registered strategy, same final result.
+    pub fn run_observed<'o>(
+        &self,
+        name: &str,
+        spec: &RunSpec<'_>,
+        ctx: &StrategyCtx,
+        observers: Vec<Box<dyn Observer + 'o>>,
+    ) -> Result<CellResult> {
         let entry = self.get(name)?;
-        let mut policy = entry.build(spec, ctx)?;
-        let engine = {
-            let e = Engine::new(spec.cfg.clone());
-            match spec.crash_threshold {
-                Some(t) => e.with_crash_threshold(t),
-                None => e,
-            }
-        };
-        let mut outcome = engine.run(spec.trace, policy.as_mut());
-        let instr = policy.instrumentation();
+        let policy = entry.build(spec, ctx)?;
+        let mut session =
+            Session::new(spec.cfg.clone(), Arena::of_trace(spec.trace), policy);
+        if let Some(t) = spec.crash_threshold {
+            session = session.with_crash_threshold(t);
+        }
+        for o in observers {
+            session.add_observer(o);
+        }
+        session.feed(spec.trace.accesses.iter().copied());
+        let instr = session.policy().instrumentation();
+        let mut outcome = session.finish();
         if instr.inference_calls > 0 {
             let overhead = spec.cfg.prediction_overhead * instr.inference_calls;
             outcome.stats.cycles += overhead;

@@ -33,6 +33,7 @@ use anyhow::{bail, Result};
 use crate::config::Scale;
 use crate::coordinator::RunSpec;
 use crate::corpus::{TraceCache, TraceSource};
+use crate::sim::{Observer, SimEvent, Stats};
 use crate::trace::workloads::Workload;
 use crate::trace::Trace;
 
@@ -207,16 +208,27 @@ pub struct SweepRunner<'r> {
     registry: &'r StrategyRegistry,
     threads: usize,
     cache: Option<Arc<TraceCache>>,
+    progress_every: Option<u64>,
 }
 
 impl<'r> SweepRunner<'r> {
     pub fn new(registry: &'r StrategyRegistry) -> SweepRunner<'r> {
-        SweepRunner { registry, threads: 0, cache: None }
+        SweepRunner { registry, threads: 0, cache: None, progress_every: None }
     }
 
     /// Worker-thread count for the parallel lane (0 = one per core).
     pub fn with_threads(mut self, threads: usize) -> SweepRunner<'r> {
         self.threads = threads;
+        self
+    }
+
+    /// Emit a mid-run snapshot line (stderr) for every cell each time it
+    /// accumulates another `every_faults` faults — live observability
+    /// for long sweeps, powered by the session [`Observer`] hook. Lines
+    /// from parallel workers interleave; the ordered sinks are
+    /// unaffected. 0 disables.
+    pub fn with_progress(mut self, every_faults: u64) -> SweepRunner<'r> {
+        self.progress_every = (every_faults > 0).then_some(every_faults);
         self
     }
 
@@ -286,6 +298,7 @@ impl<'r> SweepRunner<'r> {
         let cache: &TraceCache = &owned_cache;
 
         let registry = self.registry;
+        let progress = self.progress_every;
         let next = AtomicUsize::new(0);
         let (tx, rx) = mpsc::channel::<(usize, CellRecord)>();
         let mut ordered: Vec<Option<CellRecord>> = vec![None; cells.len()];
@@ -304,8 +317,9 @@ impl<'r> SweepRunner<'r> {
                             break;
                         }
                         let ci = parallel_idx[i];
-                        let rec =
-                            run_one(registry, sweep, &cells[ci], &worker_ctx, cache);
+                        let rec = run_one(
+                            registry, sweep, &cells[ci], &worker_ctx, cache, progress,
+                        );
                         if tx.send((ci, rec)).is_err() {
                             break; // receiver gone: sweep aborted
                         }
@@ -317,7 +331,7 @@ impl<'r> SweepRunner<'r> {
             // with the caller's ctx (owns the compiled model); traces
             // come from the same shared cache as the worker lane
             for &ci in &serial_idx {
-                let rec = run_one(registry, sweep, &cells[ci], ctx, cache);
+                let rec = run_one(registry, sweep, &cells[ci], ctx, cache, progress);
                 let _ = tx.send((ci, rec));
             }
             drop(tx);
@@ -354,6 +368,7 @@ fn run_one(
     cell: &Cell,
     ctx: &StrategyCtx,
     cache: &TraceCache,
+    progress_every: Option<u64>,
 ) -> CellRecord {
     let id = CellId {
         workload: cell.workload.name(),
@@ -371,8 +386,67 @@ fn run_one(
     if let Some(t) = sweep.crash_threshold_for(cell.oversub) {
         spec = spec.with_crash_threshold(t);
     }
+    let observers: Vec<Box<dyn Observer>> = match progress_every {
+        Some(every) => vec![Box::new(ProgressObserver::new(
+            format!(
+                "{}/{}@{}% r{}",
+                id.workload, id.strategy, id.oversub, id.seed
+            ),
+            every,
+            trace.accesses.len() as u64,
+        ))],
+        None => Vec::new(),
+    };
     let result = registry
-        .run(&cell.strategy, &spec, ctx)
+        .run_observed(&cell.strategy, &spec, ctx, observers)
         .map_err(|e| format!("{e:#}"));
     CellRecord { cell: id, result }
+}
+
+/// Per-cell progress reporter: prints a snapshot line to stderr every
+/// `every` faults (faults are where simulated time is actually spent, so
+/// hit-heavy stretches stay silent), plus one line on crash.
+struct ProgressObserver {
+    label: String,
+    every: u64,
+    next_at: u64,
+    total_accesses: u64,
+}
+
+impl ProgressObserver {
+    fn new(label: String, every: u64, total_accesses: u64) -> ProgressObserver {
+        ProgressObserver { label, every, next_at: every, total_accesses }
+    }
+
+    fn report(&self, stats: &Stats, crashed: bool) {
+        let pct = if self.total_accesses == 0 {
+            0.0
+        } else {
+            100.0 * stats.accesses as f64 / self.total_accesses as f64
+        };
+        eprintln!(
+            "[{}] {:5.1}%  {} accesses, {} faults, {} migrations, {} thrash, ipc {:.4}{}",
+            self.label,
+            pct,
+            stats.accesses,
+            stats.faults,
+            stats.migrations,
+            stats.thrash_events,
+            stats.ipc(),
+            if crashed { "  CRASHED" } else { "" },
+        );
+    }
+}
+
+impl Observer for ProgressObserver {
+    fn on_event(&mut self, event: &SimEvent, stats: &Stats) {
+        match event {
+            SimEvent::Fault { .. } if stats.faults >= self.next_at => {
+                self.next_at = stats.faults + self.every;
+                self.report(stats, false);
+            }
+            SimEvent::Crash { .. } => self.report(stats, true),
+            _ => {}
+        }
+    }
 }

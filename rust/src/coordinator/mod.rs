@@ -3,17 +3,28 @@
 //!
 //! Cell execution lives in [`crate::api`] now: strategies are looked up
 //! by name in an open [`crate::api::StrategyRegistry`] and whole grids
-//! run through [`crate::api::SweepRunner`]. What remains here is the
-//! run-spec plumbing ([`RunSpec`], [`feat_dims`], [`normalized_ipc`])
-//! and the training/accuracy harnesses ([`trainer`], [`multi`]) that
-//! operate on sample streams rather than grid cells. The deprecated
-//! PR-1 shims (`Strategy`, `run_rule_based`, `run_intelligent`) are
-//! removed — address strategies by registry name.
+//! run through [`crate::api::SweepRunner`] (both sit on the resumable
+//! [`crate::sim::Session`] core). What remains here is the run-spec
+//! plumbing ([`RunSpec`], [`feat_dims`], [`normalized_ipc`]), the
+//! training/accuracy harnesses ([`trainer`], [`multi`]) that operate on
+//! sample streams rather than grid cells, and the online
+//! [`MultiTenantScheduler`]: N live tenant streams (materialized traces
+//! or streaming `.uvmt` readers) time-sliced over one shared session —
+//! one device memory, one link, one policy — with per-tenant fault
+//! attribution. `trace::multi::interleave` remains the offline
+//! compatibility source; the scheduler's
+//! [`SchedulePolicy::Proportional`](multi::SchedulePolicy) mode
+//! reproduces it bit-for-bit while
+//! [`SchedulePolicy::FaultAware`](multi::SchedulePolicy) reacts to
+//! simulation state the way an offline merge never can.
 
 pub mod driver;
 pub mod multi;
 pub mod trainer;
 
 pub use driver::{feat_dims, normalized_ipc, CellResult, RunSpec};
-pub use multi::{multi_accuracy, MultiReport};
+pub use multi::{
+    multi_accuracy, MultiOutcome, MultiReport, MultiTenantScheduler,
+    SchedulePolicy, TenantReport, TenantSpec,
+};
 pub use trainer::{offline_accuracy, online_accuracy, AccuracyReport, TrainOpts};

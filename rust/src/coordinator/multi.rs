@@ -1,27 +1,388 @@
-//! Multi-workload (concurrent-tenant) accuracy harness — Table VII.
+//! Concurrent-tenant machinery: the online [`MultiTenantScheduler`] and
+//! the Table VII accuracy harness ([`multi_accuracy`]).
 //!
-//! Two workloads run concurrently (see [`crate::trace::multi`]); the
-//! predictor sees the merged access stream — more classes arriving
-//! faster, interleaved patterns — and we report per-tenant top-1, the
-//! paper's scalability measurement.
+//! Historically multi-tenancy meant `trace::multi::interleave`:
+//! pre-compose two traces offline, then replay the merged trace through
+//! the batch engine. That can never let tenants *react* to each other —
+//! the merge order is fixed before the first fault is simulated. The
+//! [`MultiTenantScheduler`] replaces that: N live tenant streams (a
+//! materialized trace or a streaming `.uvmt`
+//! [`TraceReader`](crate::corpus::format::TraceReader)) are time-sliced
+//! *online* into one shared [`Session`] — one device memory, one PCIe
+//! link, one policy — so tenant B's working set really does evict
+//! tenant A's pages mid-run, and the schedule itself may depend on
+//! simulation state ([`SchedulePolicy::FaultAware`] throttles the
+//! tenant that faults most, something an offline interleave cannot
+//! express). Under [`SchedulePolicy::Proportional`] the scheduler
+//! reproduces `interleave`'s merge order exactly, so the old path
+//! remains available as a byte-identical compatibility mode (pinned by
+//! the `scheduler_matches_interleaved_engine` test).
+//!
+//! The accuracy harness below is unchanged: the predictor sees the
+//! merged access stream — more classes arriving faster, interleaved
+//! patterns — and we report per-tenant top-1, the paper's scalability
+//! measurement.
 
 use std::collections::HashSet;
 use std::sync::Arc;
 
-use anyhow::Result;
+use anyhow::{bail, Context, Result};
 
-use crate::config::PAGES_PER_BB;
+use crate::config::{PAGES_PER_BB, SimConfig};
 use crate::policy::dfa::classify_blocks;
+use crate::policy::{Policy, PolicyInstrumentation};
 use crate::predictor::features::{
     pack_batch, FeatDims, Sample,
 };
 use crate::predictor::model_table::ModelTable;
 use crate::runtime::ModelRuntime;
+use crate::sim::{Arena, RunOutcome, Session};
 use crate::trace::multi::{interleave, tenant_of};
-use crate::trace::Trace;
+use crate::trace::{Access, Trace};
 use crate::util::rng::Rng;
 
 use super::trainer::TrainOpts;
+
+// ---- online multi-tenant scheduling ---------------------------------------
+
+/// Per-tenant PC namespace stride (matches `trace::multi::interleave`).
+const PC_STRIDE: u32 = 1 << 12;
+/// Per-tenant TB namespace stride (matches `trace::multi::interleave`
+/// and `trace::multi::tenant_of`).
+const TB_STRIDE: u32 = 1 << 14;
+
+/// How the scheduler picks which live tenant issues the next access.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SchedulePolicy {
+    /// Largest-remainder progress scheduling: advance the tenant whose
+    /// completed fraction is lowest (ties to the lower index). With two
+    /// trace-backed tenants this reproduces
+    /// [`crate::trace::multi::interleave`]'s merge order exactly — the
+    /// compatibility mode.
+    #[default]
+    Proportional,
+    /// Strict rotation over tenants with input remaining.
+    RoundRobin,
+    /// Contention-aware: advance the tenant with the fewest faults so
+    /// far (ties to the lower index). A thrashing tenant is throttled
+    /// while well-behaved tenants make progress — the online behaviour
+    /// an offline pre-interleave cannot express.
+    FaultAware,
+}
+
+/// One tenant of a multi-tenant run: a name, its local arena geometry,
+/// and a live access stream. Build one from a materialized trace
+/// ([`TenantSpec::from_trace`]) or a streaming `.uvmt` reader
+/// ([`TenantSpec::from_reader`]) — the scheduler never materializes the
+/// stream.
+pub struct TenantSpec<'a> {
+    pub name: String,
+    /// tenant-local arena (pages are rebased into the shared arena)
+    pub arena: Arena,
+    /// distinct pages the tenant touches (working-set share for the
+    /// oversubscription capacity computation)
+    pub touched_pages: u64,
+    /// total accesses the stream will yield (scheduling weight)
+    pub accesses: u64,
+    stream: Box<dyn Iterator<Item = Result<Access>> + 'a>,
+}
+
+impl<'a> TenantSpec<'a> {
+    /// A tenant replaying a materialized trace.
+    pub fn from_trace(trace: &'a Trace) -> TenantSpec<'a> {
+        TenantSpec {
+            name: trace.name.clone(),
+            arena: Arena::of_trace(trace),
+            touched_pages: trace.touched_pages,
+            accesses: trace.accesses.len() as u64,
+            stream: Box::new(trace.accesses.iter().copied().map(Ok)),
+        }
+    }
+
+    /// A tenant streaming from a `.uvmt` corpus entry — arena, touched
+    /// set and length all come from the header, so the access vector is
+    /// never materialized.
+    pub fn from_reader<R: std::io::Read + 'a>(
+        reader: crate::corpus::format::TraceReader<R>,
+    ) -> TenantSpec<'a> {
+        let meta = reader.meta().clone();
+        TenantSpec {
+            name: meta.name,
+            arena: Arena::new(meta.working_set_pages, meta.allocations),
+            touched_pages: meta.touched_pages,
+            accesses: meta.accesses,
+            stream: Box::new(reader),
+        }
+    }
+
+    /// A tenant from any access iterator plus explicit geometry (tests,
+    /// synthetic streams).
+    pub fn from_stream(
+        name: &str,
+        arena: Arena,
+        touched_pages: u64,
+        accesses: u64,
+        stream: impl Iterator<Item = Result<Access>> + 'a,
+    ) -> TenantSpec<'a> {
+        TenantSpec {
+            name: name.to_string(),
+            arena,
+            touched_pages,
+            accesses,
+            stream: Box::new(stream),
+        }
+    }
+}
+
+/// Per-tenant attribution from a shared run. `accesses = hits + faults`
+/// per tenant, and the per-tenant columns sum to the combined
+/// [`RunOutcome`]'s stats (pinned by the scheduler tests).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TenantReport {
+    pub name: String,
+    /// page-rebase offset of this tenant inside the shared arena
+    pub base: u64,
+    pub accesses: u64,
+    pub hits: u64,
+    pub faults: u64,
+}
+
+/// Result of a multi-tenant run: the combined outcome plus per-tenant
+/// attribution and the policy's predictor instrumentation.
+#[derive(Debug, Clone)]
+pub struct MultiOutcome {
+    pub outcome: RunOutcome,
+    pub tenants: Vec<TenantReport>,
+    pub instrumentation: PolicyInstrumentation,
+}
+
+/// Time-slices N live tenant streams over one shared [`Session`] —
+/// true online multi-tenancy (see the module docs). Construction is
+/// builder-style: add tenants, pick a [`SchedulePolicy`], then
+/// [`MultiTenantScheduler::run`] with the policy under test.
+#[derive(Default)]
+pub struct MultiTenantScheduler<'a> {
+    tenants: Vec<TenantSpec<'a>>,
+    schedule: SchedulePolicy,
+    crash_threshold: Option<u64>,
+    cfg: Option<SimConfig>,
+}
+
+impl<'a> MultiTenantScheduler<'a> {
+    pub fn new() -> MultiTenantScheduler<'a> {
+        MultiTenantScheduler::default()
+    }
+
+    pub fn add_tenant(mut self, tenant: TenantSpec<'a>) -> Self {
+        self.tenants.push(tenant);
+        self
+    }
+
+    pub fn with_schedule(mut self, schedule: SchedulePolicy) -> Self {
+        self.schedule = schedule;
+        self
+    }
+
+    /// Crash emulation threshold on the *combined* thrash count.
+    pub fn with_crash_threshold(mut self, threshold: u64) -> Self {
+        self.crash_threshold = Some(threshold);
+        self
+    }
+
+    /// Override the base [`SimConfig`] (capacity is still derived from
+    /// the oversubscription level at [`MultiTenantScheduler::run`]).
+    pub fn with_config(mut self, cfg: SimConfig) -> Self {
+        self.cfg = Some(cfg);
+        self
+    }
+
+    /// Run all tenants to completion (or crash) under `policy`, sharing
+    /// one device memory sized so the *combined* touched working set is
+    /// oversubscribed by `oversub_percent`.
+    pub fn run(
+        self,
+        oversub_percent: u32,
+        policy: Box<dyn Policy + 'a>,
+    ) -> Result<MultiOutcome> {
+        let MultiTenantScheduler { mut tenants, schedule, crash_threshold, cfg } = self;
+        if tenants.is_empty() {
+            bail!("multi-tenant run needs at least one tenant");
+        }
+        if tenants.len() > (u32::MAX / TB_STRIDE) as usize {
+            bail!("too many tenants for the TB namespace");
+        }
+
+        // Rebase each tenant above its predecessor on a chunk boundary
+        // (prefetcher trees must never straddle tenants) — the same
+        // layout `trace::multi::interleave` produces.
+        let chunk = crate::config::PAGES_PER_BB * crate::config::BBS_PER_CHUNK;
+        let mut bases = Vec::with_capacity(tenants.len());
+        let mut cursor = 0u64;
+        let mut allocations: Vec<(u64, u64)> = Vec::new();
+        let mut touched_total = 0u64;
+        for t in &tenants {
+            bases.push(cursor);
+            if t.arena.allocations.is_empty() {
+                allocations.push((cursor, t.arena.working_set_pages));
+            } else {
+                allocations.extend(
+                    t.arena.allocations.iter().map(|&(o, p)| (o + cursor, p)),
+                );
+            }
+            touched_total += t.touched_pages;
+            cursor = (cursor + t.arena.working_set_pages).div_ceil(chunk) * chunk;
+        }
+        let last = tenants.len() - 1;
+        let working_set = bases[last] + tenants[last].arena.working_set_pages;
+        let shared_arena = Arena::new(working_set, allocations);
+
+        let cfg = cfg
+            .unwrap_or_default()
+            .with_oversubscription(touched_total, oversub_percent);
+        let mut session = Session::new(cfg, shared_arena, policy);
+        if let Some(t) = crash_threshold {
+            session = session.with_crash_threshold(t);
+        }
+
+        let n = tenants.len();
+        let mut reports: Vec<TenantReport> = tenants
+            .iter()
+            .zip(&bases)
+            .map(|(t, &base)| TenantReport {
+                name: t.name.clone(),
+                base,
+                accesses: 0,
+                hits: 0,
+                faults: 0,
+            })
+            .collect();
+        // produced counts drive Proportional; `done` marks streams that
+        // ended (at their declared length, or early if the hint lied)
+        let mut produced = vec![0u64; n];
+        let mut done = vec![false; n];
+        for (i, t) in tenants.iter().enumerate() {
+            done[i] = t.accesses == 0;
+        }
+        let mut rr_cursor = 0usize;
+        // online kernel re-monotonisation, same rule as interleave: a
+        // phase boundary is a kernel change between consecutive merged
+        // accesses of the SAME tenant
+        let mut merged_kernel = 0u32;
+        let mut last_pair: Option<(usize, u32)> = None;
+
+        loop {
+            let Some(ti) = pick_tenant(
+                schedule,
+                &tenants,
+                &produced,
+                &done,
+                &reports,
+                &mut rr_cursor,
+            ) else {
+                break; // every stream drained
+            };
+            let acc = match tenants[ti].stream.next() {
+                Some(Ok(a)) => a,
+                Some(Err(e)) => {
+                    return Err(e).with_context(|| {
+                        format!("tenant '{}' stream failed", tenants[ti].name)
+                    });
+                }
+                None => {
+                    done[ti] = true; // shorter than declared; retire it
+                    continue;
+                }
+            };
+            produced[ti] += 1;
+            if produced[ti] >= tenants[ti].accesses {
+                done[ti] = true;
+            }
+
+            if let Some((lt, lk)) = last_pair {
+                if lt == ti && lk != acc.kernel {
+                    merged_kernel += 1;
+                }
+            }
+            last_pair = Some((ti, acc.kernel));
+
+            let global = Access {
+                page: acc.page + bases[ti],
+                pc: acc.pc + PC_STRIDE * ti as u32,
+                tb: acc.tb + TB_STRIDE * ti as u32,
+                kernel: merged_kernel,
+                ..acc
+            };
+            let step = session.push(&global);
+            reports[ti].accesses += 1;
+            if step.hit {
+                reports[ti].hits += 1;
+            } else {
+                reports[ti].faults += 1;
+            }
+            if step.crashed {
+                break;
+            }
+        }
+
+        let instrumentation = session.policy().instrumentation();
+        Ok(MultiOutcome {
+            outcome: session.finish(),
+            tenants: reports,
+            instrumentation,
+        })
+    }
+}
+
+/// Pick the next tenant with input remaining, or `None` when all are
+/// done. Deterministic for every schedule.
+fn pick_tenant(
+    schedule: SchedulePolicy,
+    tenants: &[TenantSpec<'_>],
+    produced: &[u64],
+    done: &[bool],
+    reports: &[TenantReport],
+    rr_cursor: &mut usize,
+) -> Option<usize> {
+    let n = tenants.len();
+    let live = (0..n).filter(|&i| !done[i]);
+    match schedule {
+        SchedulePolicy::Proportional => {
+            // lowest completed fraction wins, ties to the lower index —
+            // the same comparison interleave() performs (f64 division
+            // included, so the merge orders agree bit-for-bit)
+            let mut best: Option<(usize, f64)> = None;
+            for i in live {
+                let frac = produced[i] as f64 / tenants[i].accesses as f64;
+                match best {
+                    Some((_, bf)) if bf <= frac => {}
+                    _ => best = Some((i, frac)),
+                }
+            }
+            best.map(|(i, _)| i)
+        }
+        SchedulePolicy::RoundRobin => {
+            for off in 0..n {
+                let i = (*rr_cursor + off) % n;
+                if !done[i] {
+                    *rr_cursor = (i + 1) % n;
+                    return Some(i);
+                }
+            }
+            None
+        }
+        SchedulePolicy::FaultAware => {
+            let mut best: Option<(usize, u64)> = None;
+            for i in live {
+                let f = reports[i].faults;
+                match best {
+                    Some((_, bf)) if bf <= f => {}
+                    _ => best = Some((i, f)),
+                }
+            }
+            best.map(|(i, _)| i)
+        }
+    }
+}
 
 /// Per-tenant accuracy from a concurrent run.
 #[derive(Debug, Clone)]
@@ -137,4 +498,138 @@ pub fn multi_accuracy(
         train_steps,
         patterns_used: table.patterns_used(),
     })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Scale;
+    use crate::policy::composite::Composite;
+    use crate::policy::lru::Lru;
+    use crate::policy::DemandOnly;
+    use crate::sim::Engine;
+    use crate::trace::workloads::Workload;
+
+    fn demand_lru() -> Box<dyn Policy> {
+        Box::new(Composite::new(DemandOnly, Lru::new()))
+    }
+
+    /// The compatibility contract: under Proportional scheduling the
+    /// online scheduler produces byte-identical stats to the batch
+    /// engine replaying `interleave(a, b)`.
+    #[test]
+    fn scheduler_matches_interleaved_engine() {
+        let a = Workload::StreamTriad.generate(Scale::default(), 1);
+        let b = Workload::Hotspot.generate(Scale::default(), 2);
+        let merged = interleave(&a, &b);
+        let cfg = SimConfig::default().with_oversubscription(merged.touched_pages, 125);
+        let reference = Engine::new(cfg)
+            .run(&merged, &mut Composite::new(DemandOnly, Lru::new()));
+
+        let out = MultiTenantScheduler::new()
+            .add_tenant(TenantSpec::from_trace(&a))
+            .add_tenant(TenantSpec::from_trace(&b))
+            .run(125, demand_lru())
+            .unwrap();
+        assert_eq!(out.outcome, reference);
+        // attribution sums to the combined run
+        let acc_sum: u64 = out.tenants.iter().map(|t| t.accesses).sum();
+        let fault_sum: u64 = out.tenants.iter().map(|t| t.faults).sum();
+        let hit_sum: u64 = out.tenants.iter().map(|t| t.hits).sum();
+        assert_eq!(acc_sum, reference.stats.accesses);
+        assert_eq!(fault_sum, reference.stats.faults);
+        assert_eq!(hit_sum, reference.stats.hits);
+        assert_eq!(out.tenants[0].name, a.name);
+        assert_eq!(out.tenants[1].name, b.name);
+        assert_eq!(out.tenants[0].base, 0);
+        assert!(out.tenants[1].base >= a.working_set_pages);
+    }
+
+    fn synthetic_tenant<'a>(name: &str, pages: &'a [u64]) -> TenantSpec<'a> {
+        let ws = pages.iter().copied().max().unwrap_or(0) + 1;
+        let touched: std::collections::HashSet<u64> =
+            pages.iter().copied().collect();
+        TenantSpec::from_stream(
+            name,
+            Arena::new(ws, Vec::new()),
+            touched.len() as u64,
+            pages.len() as u64,
+            pages.iter().map(|&p| {
+                Ok(Access {
+                    page: p,
+                    pc: 0,
+                    tb: 0,
+                    kernel: 0,
+                    inst_gap: 4,
+                    is_write: false,
+                })
+            }),
+        )
+    }
+
+    #[test]
+    fn round_robin_alternates_and_attributes() {
+        let pa = [0u64, 1, 2, 3];
+        let pb = [0u64, 1]; // rebased above tenant A's chunk
+        let out = MultiTenantScheduler::new()
+            .with_schedule(SchedulePolicy::RoundRobin)
+            .add_tenant(synthetic_tenant("a", &pa))
+            .add_tenant(synthetic_tenant("b", &pb))
+            .run(100, demand_lru())
+            .unwrap();
+        assert_eq!(out.tenants[0].accesses, 4);
+        assert_eq!(out.tenants[1].accesses, 2);
+        // everything cold-faults exactly once at 100% (no eviction)
+        assert_eq!(out.outcome.stats.faults, 6);
+        assert_eq!(out.outcome.stats.thrash_events, 0);
+        assert!(!out.outcome.crashed);
+        assert_eq!(
+            out.tenants[0].hits + out.tenants[0].faults,
+            out.tenants[0].accesses
+        );
+    }
+
+    #[test]
+    fn fault_aware_throttles_the_thrasher() {
+        // tenant A streams fresh pages (faults every access); tenant B
+        // re-touches one page (hits after the first fault). FaultAware
+        // must let B finish long before A.
+        let pa: Vec<u64> = (0..64).collect();
+        let pb: Vec<u64> = vec![0; 64];
+        let out = MultiTenantScheduler::new()
+            .with_schedule(SchedulePolicy::FaultAware)
+            .add_tenant(synthetic_tenant("fresh", &pa))
+            .add_tenant(synthetic_tenant("hot", &pb))
+            .run(100, demand_lru())
+            .unwrap();
+        assert_eq!(out.tenants[0].faults, 64);
+        assert_eq!(out.tenants[1].faults, 1);
+        assert_eq!(out.tenants[1].hits, 63);
+        let total = out.outcome.stats.faults;
+        assert_eq!(total, 65);
+    }
+
+    #[test]
+    fn crash_threshold_applies_to_combined_run() {
+        // two tenants cycling over more pages than capacity thrash the
+        // shared memory; a tiny threshold must crash the combined run
+        // and stop both feeds early.
+        let pa: Vec<u64> = (0..8).cycle().take(400).collect();
+        let pb: Vec<u64> = (0..8).cycle().take(400).collect();
+        let out = MultiTenantScheduler::new()
+            .add_tenant(synthetic_tenant("a", &pa))
+            .add_tenant(synthetic_tenant("b", &pb))
+            .with_crash_threshold(10)
+            .run(150, demand_lru())
+            .unwrap();
+        assert!(out.outcome.crashed);
+        let consumed: u64 = out.tenants.iter().map(|t| t.accesses).sum();
+        assert!(consumed < 800, "crash must stop the schedule");
+        assert_eq!(consumed, out.outcome.stats.accesses);
+    }
+
+    #[test]
+    fn empty_scheduler_is_an_error() {
+        assert!(MultiTenantScheduler::new().run(125, demand_lru()).is_err());
+    }
 }

@@ -34,8 +34,20 @@ use super::source::TraceSource;
 use super::store::CorpusStore;
 
 /// Cache effectiveness counters (monotone since construction).
+///
+/// Accounting invariant: every lookup resolves to exactly one of a
+/// memory hit, a build, a store load, or a failure, so at quiescence
+/// (no `get_*` call in flight)
+/// `hits + builds + store_loads + failures == lookups` —
+/// [`CacheStats::consistent`] checks it, and the cache tests assert it.
+/// Before `lookups`/`failures` existed, an errored build or a store
+/// entry produced by a concurrent in-process builder could leave the
+/// counters telling an incomplete story with no way to notice; the
+/// invariant makes any such under-report a loud test failure.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct CacheStats {
+    /// total `get_builtin` / `get_source` calls
+    pub lookups: u64,
     /// requests served from memory (shared `Arc` handed out)
     pub hits: u64,
     /// traces constructed (generated or loaded through a source)
@@ -44,12 +56,19 @@ pub struct CacheStats {
     pub store_loads: u64,
     /// freshly generated traces persisted to the backing store
     pub store_writes: u64,
+    /// lookups whose build/load errored (the slot stays retryable)
+    pub failures: u64,
 }
 
 impl CacheStats {
     /// Total cache misses (every one produced exactly one trace).
     pub fn misses(&self) -> u64 {
         self.builds + self.store_loads
+    }
+
+    /// The accounting invariant; holds whenever no lookup is in flight.
+    pub fn consistent(&self) -> bool {
+        self.hits + self.builds + self.store_loads + self.failures == self.lookups
     }
 }
 
@@ -72,10 +91,12 @@ enum Origin {
 pub struct TraceCache {
     map: Mutex<HashMap<String, Slot>>,
     store: Option<CorpusStore>,
+    lookups: AtomicU64,
     hits: AtomicU64,
     builds: AtomicU64,
     store_loads: AtomicU64,
     store_writes: AtomicU64,
+    failures: AtomicU64,
 }
 
 impl Default for TraceCache {
@@ -90,10 +111,12 @@ impl TraceCache {
         TraceCache {
             map: Mutex::new(HashMap::new()),
             store: None,
+            lookups: AtomicU64::new(0),
             hits: AtomicU64::new(0),
             builds: AtomicU64::new(0),
             store_loads: AtomicU64::new(0),
             store_writes: AtomicU64::new(0),
+            failures: AtomicU64::new(0),
         }
     }
 
@@ -111,10 +134,12 @@ impl TraceCache {
 
     pub fn stats(&self) -> CacheStats {
         CacheStats {
+            lookups: self.lookups.load(Ordering::Relaxed),
             hits: self.hits.load(Ordering::Relaxed),
             builds: self.builds.load(Ordering::Relaxed),
             store_loads: self.store_loads.load(Ordering::Relaxed),
             store_writes: self.store_writes.load(Ordering::Relaxed),
+            failures: self.failures.load(Ordering::Relaxed),
         }
     }
 
@@ -148,19 +173,28 @@ impl TraceCache {
 
     /// Hit the slot or construct via `build` with only the per-key lock
     /// held. A failed build leaves the slot empty, so a later call
-    /// retries.
+    /// retries. Every path through here settles exactly one `lookups`
+    /// increment into hit / build / store-load / failure — the
+    /// [`CacheStats::consistent`] invariant.
     fn get_or_build(
         &self,
         key: &str,
         build: impl FnOnce() -> Result<(Trace, Origin)>,
     ) -> Result<Arc<Trace>> {
+        self.lookups.fetch_add(1, Ordering::Relaxed);
         let slot = self.slot(key);
         let mut guard = slot.lock().unwrap_or_else(|p| p.into_inner());
         if let Some(t) = guard.as_ref() {
             self.hits.fetch_add(1, Ordering::Relaxed);
             return Ok(Arc::clone(t));
         }
-        let (trace, origin) = build()?;
+        let (trace, origin) = match build() {
+            Ok(v) => v,
+            Err(e) => {
+                self.failures.fetch_add(1, Ordering::Relaxed);
+                return Err(e);
+            }
+        };
         match origin {
             Origin::Built { persisted } => {
                 self.builds.fetch_add(1, Ordering::Relaxed);
@@ -233,11 +267,15 @@ mod tests {
         let b = cache.get_builtin(Workload::Hotspot, Scale::default(), 42).unwrap();
         assert!(Arc::ptr_eq(&a, &b));
         let s = cache.stats();
-        assert_eq!((s.builds, s.hits), (1, 1));
+        assert_eq!((s.builds, s.hits, s.lookups), (1, 1, 2));
+        assert!(s.consistent(), "{s:?}");
         // a different seed is a different trace
         let c = cache.get_builtin(Workload::Hotspot, Scale::default(), 7).unwrap();
         assert!(!Arc::ptr_eq(&a, &c));
-        assert_eq!(cache.stats().builds, 2);
+        let s = cache.stats();
+        assert_eq!(s.builds, 2);
+        assert_eq!(s.lookups, 3);
+        assert!(s.consistent(), "{s:?}");
         assert_eq!(cache.len(), 2);
     }
 
@@ -263,7 +301,41 @@ mod tests {
             assert_eq!(t.name, "BICG");
             let s = cache.stats();
             assert_eq!((s.builds, s.store_loads), (0, 1));
+            assert!(s.consistent(), "{s:?}");
         }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// A second cache instance sharing the same store in the same
+    /// process (a concurrent builder elsewhere wrote the entry): the
+    /// lookup must settle as a store LOAD, not vanish or masquerade as a
+    /// build — exactly what the invariant pins down.
+    #[test]
+    fn store_entry_from_concurrent_builder_counts_as_load() {
+        let dir = std::env::temp_dir().join(format!(
+            "uvmio-cache-conc-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let builder =
+            TraceCache::with_store(CorpusStore::open(&dir).unwrap());
+        let consumer =
+            TraceCache::with_store(CorpusStore::open(&dir).unwrap());
+        // "concurrent" builder persists the entry first
+        builder.get_builtin(Workload::Atax, Scale::default(), 3).unwrap();
+        // the other cache's miss is satisfied from the store
+        consumer.get_builtin(Workload::Atax, Scale::default(), 3).unwrap();
+        consumer.get_builtin(Workload::Atax, Scale::default(), 3).unwrap();
+        let b = builder.stats();
+        assert_eq!((b.lookups, b.builds, b.store_writes), (1, 1, 1), "{b:?}");
+        assert!(b.consistent(), "{b:?}");
+        let c = consumer.stats();
+        assert_eq!(
+            (c.lookups, c.hits, c.builds, c.store_loads),
+            (2, 1, 0, 1),
+            "{c:?}"
+        );
+        assert!(c.consistent(), "{c:?}");
         let _ = std::fs::remove_dir_all(&dir);
     }
 
@@ -283,6 +355,8 @@ mod tests {
         let st = cache.stats();
         assert_eq!(st.builds, 1);
         assert_eq!(st.hits, 7);
+        assert_eq!(st.lookups, 8);
+        assert!(st.consistent(), "{st:?}");
     }
 
     #[test]
@@ -308,9 +382,15 @@ mod tests {
         let cache = TraceCache::new();
         let src = Flaky(std::sync::atomic::AtomicBool::new(true));
         assert!(cache.get_source(&src, Scale::default(), 0).is_err());
+        // the failed lookup is accounted, not dropped
+        let s = cache.stats();
+        assert_eq!((s.lookups, s.failures, s.builds), (1, 1, 0), "{s:?}");
+        assert!(s.consistent(), "{s:?}");
         // the failure did not poison the slot: the retry succeeds
         let t = cache.get_source(&src, Scale::default(), 0).unwrap();
         assert_eq!(t.name, "MVT");
-        assert_eq!(cache.stats().builds, 1);
+        let s = cache.stats();
+        assert_eq!((s.lookups, s.failures, s.builds), (2, 1, 1), "{s:?}");
+        assert!(s.consistent(), "{s:?}");
     }
 }

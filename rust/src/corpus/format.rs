@@ -35,11 +35,25 @@
 //! the prefetcher relies on. A flipped bit anywhere in the body fails
 //! the checksum; a truncated file fails the length check; a future
 //! on-disk revision bumps `VERSION` and old readers reject it cleanly.
+//!
+//! Two decode paths share the format:
+//!
+//! * [`decode`] — materializing: container checks up front (checksum
+//!   verified before any access is produced), returns a full [`Trace`].
+//! * [`TraceReader`] — streaming: yields accesses one at a time in O(1)
+//!   memory, so a [`crate::sim::Session`] can run a corpus entry whose
+//!   decoded access vector would not fit in RAM. The checksum is
+//!   accumulated incrementally and verified when the stream ends — a
+//!   corrupt file errors at the corrupt byte or at end-of-stream, never
+//!   silently completes.
 
-use anyhow::{anyhow, bail, Result};
+use std::io::Read;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
 
 use crate::trace::{Access, Trace};
-use crate::util::hash::fnv1a64;
+use crate::util::hash::{fnv1a64, Fnv1a64};
 
 /// File magic: "UVMT".
 pub const MAGIC: [u8; 4] = *b"UVMT";
@@ -168,21 +182,28 @@ pub fn encode(trace: &Trace, key: &str) -> Vec<u8> {
 
 // ---- decode ----------------------------------------------------------------
 
+/// Validate the fixed header and extract `(checksum, body_len)`.
+fn parse_header(header: &[u8; HEADER_LEN]) -> Result<(u64, u64)> {
+    if header[0..4] != MAGIC {
+        bail!("uvmt: bad magic (not a .uvmt file)");
+    }
+    let version = u16::from_le_bytes([header[4], header[5]]);
+    if version != VERSION {
+        bail!("uvmt: unsupported format version {version} (this build reads {VERSION})");
+    }
+    let checksum = u64::from_le_bytes(header[8..16].try_into().unwrap());
+    let body_len = u64::from_le_bytes(header[16..24].try_into().unwrap());
+    Ok((checksum, body_len))
+}
+
 /// Verify the container (magic, version, length, checksum) and return
 /// the body slice.
 fn checked_body(bytes: &[u8]) -> Result<&[u8]> {
     if bytes.len() < HEADER_LEN {
         bail!("uvmt: file shorter than the {HEADER_LEN}-byte header");
     }
-    if bytes[0..4] != MAGIC {
-        bail!("uvmt: bad magic (not a .uvmt file)");
-    }
-    let version = u16::from_le_bytes([bytes[4], bytes[5]]);
-    if version != VERSION {
-        bail!("uvmt: unsupported format version {version} (this build reads {VERSION})");
-    }
-    let checksum = u64::from_le_bytes(bytes[8..16].try_into().unwrap());
-    let body_len = u64::from_le_bytes(bytes[16..24].try_into().unwrap());
+    let header: &[u8; HEADER_LEN] = bytes[..HEADER_LEN].try_into().unwrap();
+    let (checksum, body_len) = parse_header(header)?;
     let body = &bytes[HEADER_LEN..];
     if body_len != body.len() as u64 {
         bail!(
@@ -237,51 +258,21 @@ pub fn stat(bytes: &[u8]) -> Result<UvmtMeta> {
 }
 
 /// Decode a `.uvmt` byte buffer back into the trace and its store key.
-/// Exact inverse of [`encode`].
+/// Exact inverse of [`encode`]. Container checks (magic, version,
+/// length, checksum) run up front so corruption fails fast; the access
+/// loop then delegates to the same [`TraceReader`] the streaming path
+/// uses — one decoder, two entry points, no drift between them.
 pub fn decode(bytes: &[u8]) -> Result<(Trace, String)> {
-    let body = checked_body(bytes)?;
-    let mut pos = 0usize;
-    let meta = parse_meta(body, &mut pos)?;
-    let n = usize::try_from(meta.accesses)
-        .map_err(|_| anyhow!("uvmt: access count {} exceeds usize", meta.accesses))?;
+    checked_body(bytes)?;
+    let mut reader = TraceReader::new(std::io::Cursor::new(bytes))?;
+    let n = usize::try_from(reader.meta().accesses).map_err(|_| {
+        anyhow!("uvmt: access count {} exceeds usize", reader.meta().accesses)
+    })?;
     let mut accesses = Vec::with_capacity(n.min(1 << 24));
-    let (mut page, mut pc, mut tb, mut kernel) = (0i64, 0i64, 0i64, 0i64);
-    for i in 0..n {
-        let dp = unzigzag(get_varint(body, &mut pos)?);
-        let dpc = unzigzag(get_varint(body, &mut pos)?);
-        let dtb = unzigzag(get_varint(body, &mut pos)?);
-        let dk = unzigzag(get_varint(body, &mut pos)?);
-        let gw = get_varint(body, &mut pos)?;
-        // checked arithmetic: corrupt deltas must error, not wrap (or
-        // panic the debug build)
-        let bad = || anyhow!("uvmt: access {i} field overflow");
-        page = page.checked_add(dp).ok_or_else(bad)?;
-        pc = pc.checked_add(dpc).ok_or_else(bad)?;
-        tb = tb.checked_add(dtb).ok_or_else(bad)?;
-        kernel = kernel.checked_add(dk).ok_or_else(bad)?;
-        if page < 0 {
-            bail!("uvmt: access {i} decodes to a negative page");
-        }
-        let inst_gap = u32::try_from(gw >> 1)
-            .map_err(|_| anyhow!("uvmt: access {i} inst_gap exceeds u32"))?;
-        accesses.push(Access {
-            page: page as u64,
-            pc: u32::try_from(pc)
-                .map_err(|_| anyhow!("uvmt: access {i} pc out of range"))?,
-            tb: u32::try_from(tb)
-                .map_err(|_| anyhow!("uvmt: access {i} tb out of range"))?,
-            kernel: u32::try_from(kernel)
-                .map_err(|_| anyhow!("uvmt: access {i} kernel out of range"))?,
-            inst_gap,
-            is_write: gw & 1 == 1,
-        });
+    while let Some(a) = reader.next_access()? {
+        accesses.push(a);
     }
-    if pos != body.len() {
-        bail!(
-            "uvmt: {} trailing byte(s) after the access stream",
-            body.len() - pos
-        );
-    }
+    let meta = reader.into_meta();
     let trace = Trace {
         name: meta.name,
         working_set_pages: meta.working_set_pages,
@@ -291,6 +282,256 @@ pub fn decode(bytes: &[u8]) -> Result<(Trace, String)> {
         accesses,
     };
     Ok((trace, meta.key))
+}
+
+// ---- streaming decode ------------------------------------------------------
+
+/// Body-byte source for the streaming reader: pulls from the underlying
+/// `Read`, feeds every byte through the running FNV-1a digest, and
+/// enforces the header-declared body length.
+struct BodyReader<R: Read> {
+    src: R,
+    hasher: Fnv1a64,
+    consumed: u64,
+    len: u64,
+}
+
+impl<R: Read> BodyReader<R> {
+    fn byte(&mut self) -> Result<u8> {
+        if self.consumed >= self.len {
+            bail!(
+                "uvmt: body ended at byte {} but more data was expected \
+                 (header-declared length too short or file corrupt)",
+                self.consumed
+            );
+        }
+        let mut b = [0u8; 1];
+        self.src.read_exact(&mut b).map_err(|e| {
+            anyhow!("uvmt: truncated body at byte {}: {e}", self.consumed)
+        })?;
+        self.hasher.update(&b);
+        self.consumed += 1;
+        Ok(b[0])
+    }
+
+    fn varint(&mut self) -> Result<u64> {
+        let mut v: u64 = 0;
+        let mut shift: u32 = 0;
+        loop {
+            let b = self.byte()?;
+            if shift > 63 {
+                bail!("uvmt: varint wider than 64 bits at byte {}", self.consumed);
+            }
+            v |= ((b & 0x7f) as u64) << shift;
+            if b & 0x80 == 0 {
+                return Ok(v);
+            }
+            shift += 7;
+        }
+    }
+
+    fn vstr(&mut self) -> Result<String> {
+        let len = self.varint()? as usize;
+        if (len as u64) > self.len.saturating_sub(self.consumed) {
+            bail!("uvmt: truncated string at byte {}", self.consumed);
+        }
+        let mut buf = vec![0u8; len];
+        for slot in buf.iter_mut() {
+            *slot = self.byte()?;
+        }
+        String::from_utf8(buf)
+            .map_err(|e| anyhow!("uvmt: invalid utf-8 in string: {e}"))
+    }
+
+    /// End-of-stream checks: every declared body byte consumed and the
+    /// accumulated digest matches the header checksum.
+    fn verify_end(&mut self, expect_checksum: u64) -> Result<()> {
+        if self.consumed != self.len {
+            bail!(
+                "uvmt: {} trailing byte(s) after the access stream",
+                self.len - self.consumed
+            );
+        }
+        let actual = self.hasher.digest();
+        if actual != expect_checksum {
+            bail!(
+                "uvmt: checksum mismatch (header {expect_checksum:016x}, \
+                 body {actual:016x}) — corrupt file"
+            );
+        }
+        Ok(())
+    }
+}
+
+/// Streaming `.uvmt` decoder: parses the header and metadata up front,
+/// then yields [`Access`]es one at a time without ever materializing the
+/// access vector — O(1) memory regardless of trace length, which is what
+/// lets a [`crate::sim::Session`] run corpus entries larger than RAM.
+///
+/// Integrity: the body checksum is accumulated as bytes stream through
+/// and verified when the last access is yielded (or when the iterator is
+/// polled past the end). Corruption therefore surfaces as an `Err` at
+/// the corrupt byte or at end-of-stream — a fully consumed, error-free
+/// stream carries exactly the same guarantee as [`decode`].
+///
+/// Implements `Iterator<Item = Result<Access>>` (fused after the first
+/// error), so it plugs straight into
+/// [`crate::sim::Session::feed_results`].
+pub struct TraceReader<R: Read> {
+    body: BodyReader<R>,
+    meta: UvmtMeta,
+    checksum: u64,
+    /// accesses not yet yielded
+    remaining: u64,
+    prev: [i64; 4],
+    /// end-of-stream verification already performed
+    verified: bool,
+    /// a decode error was returned; the stream is fused
+    failed: bool,
+}
+
+impl TraceReader<std::io::BufReader<std::fs::File>> {
+    /// Open a `.uvmt` file for streaming (buffered).
+    pub fn open(path: &Path) -> Result<Self> {
+        let f = std::fs::File::open(path)
+            .with_context(|| format!("opening {}", path.display()))?;
+        TraceReader::new(std::io::BufReader::new(f))
+            .with_context(|| format!("reading {}", path.display()))
+    }
+}
+
+impl<R: Read> TraceReader<R> {
+    /// Wrap any byte source; validates the container header and parses
+    /// the metadata immediately (so [`TraceReader::meta`] is available
+    /// before the first access is pulled).
+    pub fn new(mut src: R) -> Result<TraceReader<R>> {
+        let mut header = [0u8; HEADER_LEN];
+        src.read_exact(&mut header).map_err(|e| {
+            anyhow!("uvmt: file shorter than the {HEADER_LEN}-byte header: {e}")
+        })?;
+        let (checksum, body_len) = parse_header(&header)?;
+        let mut body =
+            BodyReader { src, hasher: Fnv1a64::new(), consumed: 0, len: body_len };
+        let key = body.vstr()?;
+        let name = body.vstr()?;
+        let working_set_pages = body.varint()?;
+        let touched_pages = body.varint()?;
+        let kernels_raw = body.varint()?;
+        let kernels = u32::try_from(kernels_raw)
+            .map_err(|_| anyhow!("uvmt: kernel count {kernels_raw} exceeds u32"))?;
+        let n_allocs = body.varint()? as usize;
+        // cap pre-allocation: a corrupt count must not OOM the reader
+        let mut allocations = Vec::with_capacity(n_allocs.min(4096));
+        for _ in 0..n_allocs {
+            let base = body.varint()?;
+            let pages = body.varint()?;
+            allocations.push((base, pages));
+        }
+        let accesses = body.varint()?;
+        let meta = UvmtMeta {
+            key,
+            name,
+            working_set_pages,
+            touched_pages,
+            kernels,
+            allocations,
+            accesses,
+        };
+        Ok(TraceReader {
+            body,
+            remaining: meta.accesses,
+            meta,
+            checksum,
+            prev: [0; 4],
+            verified: false,
+            failed: false,
+        })
+    }
+
+    /// Header-level metadata (available before any access is decoded).
+    pub fn meta(&self) -> &UvmtMeta {
+        &self.meta
+    }
+
+    /// Consume the reader, keeping its metadata (e.g. after draining
+    /// the access stream).
+    pub fn into_meta(self) -> UvmtMeta {
+        self.meta
+    }
+
+    /// Accesses not yet yielded.
+    pub fn remaining(&self) -> u64 {
+        self.remaining
+    }
+
+    /// Decode the next access; `Ok(None)` at a (verified) end of stream.
+    pub fn next_access(&mut self) -> Result<Option<Access>> {
+        if self.failed {
+            return Ok(None);
+        }
+        match self.next_inner() {
+            Ok(v) => Ok(v),
+            Err(e) => {
+                self.failed = true;
+                Err(e)
+            }
+        }
+    }
+
+    fn next_inner(&mut self) -> Result<Option<Access>> {
+        if self.remaining == 0 {
+            if !self.verified {
+                self.verified = true;
+                self.body.verify_end(self.checksum)?;
+            }
+            return Ok(None);
+        }
+        let i = self.meta.accesses - self.remaining;
+        let dp = unzigzag(self.body.varint()?);
+        let dpc = unzigzag(self.body.varint()?);
+        let dtb = unzigzag(self.body.varint()?);
+        let dk = unzigzag(self.body.varint()?);
+        let gw = self.body.varint()?;
+        // checked arithmetic: corrupt deltas must error, not wrap
+        let bad = || anyhow!("uvmt: access {i} field overflow");
+        let [page, pc, tb, kernel] = &mut self.prev;
+        *page = page.checked_add(dp).ok_or_else(bad)?;
+        *pc = pc.checked_add(dpc).ok_or_else(bad)?;
+        *tb = tb.checked_add(dtb).ok_or_else(bad)?;
+        *kernel = kernel.checked_add(dk).ok_or_else(bad)?;
+        if *page < 0 {
+            bail!("uvmt: access {i} decodes to a negative page");
+        }
+        let inst_gap = u32::try_from(gw >> 1)
+            .map_err(|_| anyhow!("uvmt: access {i} inst_gap exceeds u32"))?;
+        let access = Access {
+            page: *page as u64,
+            pc: u32::try_from(*pc)
+                .map_err(|_| anyhow!("uvmt: access {i} pc out of range"))?,
+            tb: u32::try_from(*tb)
+                .map_err(|_| anyhow!("uvmt: access {i} tb out of range"))?,
+            kernel: u32::try_from(*kernel)
+                .map_err(|_| anyhow!("uvmt: access {i} kernel out of range"))?,
+            inst_gap,
+            is_write: gw & 1 == 1,
+        };
+        self.remaining -= 1;
+        if self.remaining == 0 {
+            // verify eagerly so a fully drained `for` loop cannot miss a
+            // bad checksum by never polling past the last item
+            self.verified = true;
+            self.body.verify_end(self.checksum)?;
+        }
+        Ok(Some(access))
+    }
+}
+
+impl<R: Read> Iterator for TraceReader<R> {
+    type Item = Result<Access>;
+
+    fn next(&mut self) -> Option<Self::Item> {
+        self.next_access().transpose()
+    }
 }
 
 #[cfg(test)]
@@ -362,6 +603,78 @@ mod tests {
         assert!(decode(bad).unwrap_err().to_string().contains("length"));
         // header-only file
         assert!(decode(&bytes[..10]).is_err());
+    }
+
+    #[test]
+    fn streaming_reader_matches_materialized_decode() {
+        let t = Workload::Bicg.generate(Scale::default(), 42);
+        let bytes = encode(&t, "gen:BICG:s1:r42");
+        let mut r = TraceReader::new(std::io::Cursor::new(&bytes)).unwrap();
+        assert_eq!(r.meta().key, "gen:BICG:s1:r42");
+        assert_eq!(r.meta().name, t.name);
+        assert_eq!(r.meta().accesses, t.accesses.len() as u64);
+        assert_eq!(r.meta().allocations, t.allocations);
+        assert_eq!(r.remaining(), t.accesses.len() as u64);
+        let mut streamed = Vec::new();
+        while let Some(a) = r.next_access().unwrap() {
+            streamed.push(a);
+        }
+        assert_eq!(streamed, t.accesses);
+        assert_eq!(r.remaining(), 0);
+        // polling past the end keeps returning a clean None
+        assert!(r.next_access().unwrap().is_none());
+    }
+
+    #[test]
+    fn streaming_reader_iterator_interface() {
+        let t = Workload::Hotspot.generate(Scale::default(), 7);
+        let bytes = encode(&t, "k");
+        let r = TraceReader::new(std::io::Cursor::new(&bytes)).unwrap();
+        let streamed: Result<Vec<Access>> = r.collect();
+        assert_eq!(streamed.unwrap(), t.accesses);
+    }
+
+    #[test]
+    fn streaming_reader_detects_corruption() {
+        let t = Workload::Atax.generate(Scale::default(), 7);
+        let bytes = encode(&t, "k");
+
+        // flipped final body bit: every access decodes, checksum fails
+        // at end-of-stream — the error cannot be missed by a drain loop
+        let mut bad = bytes.clone();
+        let last = bad.len() - 1;
+        bad[last] ^= 0x01;
+        let mut r = TraceReader::new(std::io::Cursor::new(&bad)).unwrap();
+        let mut err = None;
+        while err.is_none() {
+            match r.next_access() {
+                Ok(Some(_)) => {}
+                Ok(None) => panic!("corrupt stream completed cleanly"),
+                Err(e) => err = Some(e.to_string()),
+            }
+        }
+        assert!(err.unwrap().contains("checksum"));
+        // the iterator is fused after the error
+        assert!(r.next_access().unwrap().is_none());
+
+        // truncation: read_exact fails mid-stream
+        let cut = &bytes[..bytes.len() - 3];
+        let mut r = TraceReader::new(std::io::Cursor::new(cut)).unwrap();
+        let mut saw_err = false;
+        for item in &mut r {
+            if let Err(e) = item {
+                assert!(e.to_string().contains("truncated"), "{e}");
+                saw_err = true;
+                break;
+            }
+        }
+        assert!(saw_err);
+
+        // bad magic / short header fail at construction
+        assert!(TraceReader::new(std::io::Cursor::new(&bytes[..10])).is_err());
+        let mut bad = bytes.clone();
+        bad[0] ^= 0xff;
+        assert!(TraceReader::new(std::io::Cursor::new(&bad)).is_err());
     }
 
     #[test]

@@ -8,7 +8,10 @@
 //!
 //! * [`format`] — `.uvmt`, a compact versioned binary trace format
 //!   (delta-encoded pages, varint fields, FNV-1a-checksummed header)
-//!   with a lossless [`Trace`](crate::trace::Trace) round-trip.
+//!   with a lossless [`Trace`](crate::trace::Trace) round-trip, plus a
+//!   streaming [`TraceReader`] that yields accesses in O(1) memory so a
+//!   [`crate::sim::Session`] can run corpus entries larger than RAM
+//!   (feed it to [`crate::sim::Session::feed_results`]).
 //! * [`CorpusStore`] — a content-addressed on-disk store: one `.uvmt`
 //!   per key (hash of workload × scale × seed, or of imported content),
 //!   atomic temp-file-plus-rename writes, `list`/`stat`/`gc`.
@@ -22,7 +25,7 @@
 //!   traces uniformly, including `A+B` multi-tenant compositions via
 //!   [`crate::trace::multi::interleave`].
 //!
-//! The CLI surface is `repro corpus <build|import|list|gc>` plus
+//! The CLI surface is `repro corpus <build|import|export|list|gc>` plus
 //! `repro sweep --corpus DIR`; the library surface starts at
 //! [`TraceCache`] (hand one to
 //! [`SweepRunner::with_cache`](crate::api::SweepRunner::with_cache)).
@@ -58,7 +61,7 @@ pub mod source;
 pub mod store;
 
 pub use cache::{CacheStats, TraceCache};
-pub use format::UvmtMeta;
+pub use format::{TraceReader, UvmtMeta};
 pub use source::{
     parse_source, CorpusSource, CsvSource, FaultLogSource, GeneratorSource,
     InterleaveSource, TraceSource,

@@ -148,18 +148,32 @@ impl CorpusStore {
 
     /// Find the unique entry whose *trace name* is `name` (how imported
     /// traces are addressed from `repro sweep --workloads <name>`).
-    /// Each candidate file is read once: the match is decoded from the
-    /// bytes already in hand, corrupt entries are skipped.
+    /// Name lookup is header-only ([`CorpusStore::find_named_path`]);
+    /// only the match is decoded.
     pub fn find_named(&self, name: &str) -> Result<Option<Trace>> {
-        let mut found: Option<(PathBuf, Trace)> = None;
+        let Some(path) = self.find_named_path(name)? else {
+            return Ok(None);
+        };
+        let bytes = fs::read(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let (trace, _key) = format::decode(&bytes)
+            .with_context(|| format!("decoding {}", path.display()))?;
+        Ok(Some(trace))
+    }
+
+    /// The on-disk path of the unique entry whose trace name is `name`.
+    /// Candidates are probed with a header-only streaming parse — O(1)
+    /// memory per entry regardless of entry size, so name lookup never
+    /// loads an access stream (the larger-than-RAM export path depends
+    /// on this). Entries whose header fails to parse are skipped (they
+    /// are `gc`'s business); body corruption surfaces when the chosen
+    /// entry is actually read.
+    pub fn find_named_path(&self, name: &str) -> Result<Option<PathBuf>> {
+        let mut found: Option<PathBuf> = None;
         for path in self.entry_paths()? {
-            let bytes = match fs::read(&path) {
-                Ok(b) => b,
-                Err(_) => continue, // raced with gc / concurrent rewrite
-            };
-            match format::stat(&bytes) {
-                Ok(meta) if meta.name == name => {
-                    if let Some((prev, _)) = &found {
+            match format::TraceReader::open(&path) {
+                Ok(r) if r.meta().name == name => {
+                    if let Some(prev) = &found {
                         bail!(
                             "corpus has multiple entries named '{name}' ({} and {}); \
                              address one by key or gc the stale one",
@@ -167,14 +181,36 @@ impl CorpusStore {
                             path.display()
                         );
                     }
-                    let (trace, _key) = format::decode(&bytes)
-                        .with_context(|| format!("decoding {}", path.display()))?;
-                    found = Some((path, trace));
+                    found = Some(path);
                 }
-                _ => {} // different name, or corrupt (gc's job)
+                // different name, corrupt header (gc's job), or raced
+                // with gc / concurrent rewrite
+                _ => {}
             }
         }
-        Ok(found.map(|(_, t)| t))
+        Ok(found)
+    }
+
+    /// A streaming reader over the entry stored under `key` (verifying
+    /// the stored key matches, as [`CorpusStore::get`] does). The access
+    /// stream is decoded lazily — see [`format::TraceReader`].
+    pub fn reader(
+        &self,
+        key: &str,
+    ) -> Result<Option<format::TraceReader<std::io::BufReader<fs::File>>>> {
+        let path = self.path_for(key);
+        if !path.exists() {
+            return Ok(None);
+        }
+        let reader = format::TraceReader::open(&path)?;
+        if reader.meta().key != key {
+            bail!(
+                "corpus key collision at {}: wanted '{key}', file holds '{}'",
+                path.display(),
+                reader.meta().key
+            );
+        }
+        Ok(Some(reader))
     }
 
     /// Paths of every non-temp `.uvmt` file, sorted for determinism.
@@ -333,6 +369,32 @@ mod tests {
         let found = store.find_named(&t.name).unwrap().unwrap();
         assert_eq!(found, t);
         assert!(store.find_named("no-such-trace").unwrap().is_none());
+        let _ = fs::remove_dir_all(store.dir());
+    }
+
+    #[test]
+    fn streaming_reader_and_named_path() {
+        let store = tmp_store("reader");
+        let t = Workload::Nw.generate(Scale::default(), 9);
+        let key = CorpusStore::generated_key(&t.name, Scale::default(), 9);
+        store.put(&key, &t).unwrap();
+
+        // streaming by key: meta first, then the exact access stream
+        let mut r = store.reader(&key).unwrap().unwrap();
+        assert_eq!(r.meta().key, key);
+        assert_eq!(r.meta().accesses, t.accesses.len() as u64);
+        let mut n = 0usize;
+        while let Some(a) = r.next_access().unwrap() {
+            assert_eq!(a, t.accesses[n]);
+            n += 1;
+        }
+        assert_eq!(n, t.accesses.len());
+        assert!(store.reader("gen:GHOST:s1:r0").unwrap().is_none());
+
+        // path lookup by trace name matches the key-derived path
+        let path = store.find_named_path(&t.name).unwrap().unwrap();
+        assert_eq!(path, store.path_for(&key));
+        assert!(store.find_named_path("ghost").unwrap().is_none());
         let _ = fs::remove_dir_all(store.dir());
     }
 

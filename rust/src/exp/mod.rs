@@ -16,7 +16,7 @@ use anyhow::{bail, Result};
 use crate::api::{CellResult, StrategyCtx, StrategyRegistry};
 use crate::config::Scale;
 use crate::coordinator::RunSpec;
-use crate::corpus::TraceCache;
+use crate::corpus::{CorpusStore, TraceCache};
 use crate::runtime::{ModelRuntime, Runtime};
 use crate::trace::workloads::Workload;
 use crate::trace::Trace;
@@ -27,6 +27,10 @@ pub struct ExpOpts {
     pub seed: u64,
     pub reports_dir: PathBuf,
     pub artifacts_dir: PathBuf,
+    /// back the shared [`TraceCache`] with an on-disk corpus: traces
+    /// generated for one `repro exp` invocation are persisted as
+    /// `.uvmt` and reloaded by later processes (`--corpus DIR`)
+    pub corpus_dir: Option<PathBuf>,
     /// trim PJRT-heavy experiments (fewer workloads / groups)
     pub quick: bool,
 }
@@ -38,6 +42,7 @@ impl Default for ExpOpts {
             seed: 42,
             reports_dir: PathBuf::from("reports"),
             artifacts_dir: crate::runtime::Manifest::default_dir(),
+            corpus_dir: None,
             quick: false,
         }
     }
@@ -59,14 +64,21 @@ pub struct ExpContext {
 }
 
 impl ExpContext {
-    pub fn new(opts: ExpOpts) -> ExpContext {
-        ExpContext {
+    /// Build a context; with `ExpOpts::corpus_dir` set the trace cache
+    /// is store-backed, so exp traces survive across processes (and are
+    /// shared with `repro sweep --corpus DIR` / `repro corpus build`).
+    pub fn new(opts: ExpOpts) -> Result<ExpContext> {
+        let cache = match &opts.corpus_dir {
+            Some(dir) => TraceCache::with_store(CorpusStore::open(dir)?),
+            None => TraceCache::new(),
+        };
+        Ok(ExpContext {
             opts,
             registry: StrategyRegistry::builtin(),
-            cache: TraceCache::new(),
+            cache,
             runtime: None,
             models: std::collections::HashMap::new(),
-        }
+        })
     }
 
     /// The shared trace of a workload at the experiment's scale/seed.

@@ -14,6 +14,15 @@
 //! (workload, scale, seed) across every consumer, and a
 //! [`corpus::TraceSource`] ingestion layer for external CSV /
 //! UVM-fault-log workloads.
+//!
+//! Underneath it all sits the resumable [`sim::Session`]: accesses are
+//! pushed (or streamed — a [`corpus::TraceReader`] decodes `.uvmt`
+//! entries in O(1) memory), typed [`sim::SimEvent`]s reach registered
+//! [`sim::Observer`]s as they happen, [`sim::Session::snapshot`] reads
+//! metrics mid-run, and the [`coordinator::MultiTenantScheduler`]
+//! time-slices N live tenants over one shared session for true online
+//! multi-tenancy. [`sim::Engine::run`] is a thin batch wrapper over the
+//! same core.
 
 pub mod api;
 pub mod config;

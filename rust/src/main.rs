@@ -37,8 +37,12 @@ repro — intelligent UVM oversubscription management (paper reproduction)
 
 USAGE:
   repro exp <id|all> [--quick] [--scale N] [--seed N] [--reports DIR]
+            [--corpus DIR]
       regenerate a paper table/figure (table1 table2 table3 table4 table6
-      table7 fig3 fig4 fig5 fig6 fig10 fig11 fig12 fig13 fig14)
+      table7 fig3 fig4 fig5 fig6 fig10 fig11 fig12 fig13 fig14). With
+      --corpus DIR the experiment trace cache is backed by the .uvmt
+      store: traces generated once are persisted and reloaded by later
+      runs (shared with `repro sweep --corpus` and `repro corpus build`)
   repro simulate --workload W --strategy S [--oversub PCT] [--scale N] [--seed N]
       one simulation cell; S is ANY registered strategy name
       (`repro info` lists them; builtin: baseline demand-hpe tree-hpe
@@ -46,7 +50,7 @@ USAGE:
   repro sweep [--workloads all|W1,W2,..] [--strategies all|S1,S2,..]
               [--oversub P1,P2,..] [--seeds N1,N2,..] [--threads N]
               [--scale N] [--reports DIR] [--artifacts DIR] [--corpus DIR]
-              [--crash-at L=T,..]
+              [--crash-at L=T,..] [--progress [N]]
       run the (workload × strategy × oversubscription × seed) grid in
       parallel across threads (artifact-backed strategies run on a
       serialized lane); streams a console table and writes
@@ -59,6 +63,8 @@ USAGE:
       imports, or A+B multi-tenant compositions. --crash-at maps an
       oversubscription level to a crash threshold (thrash events), e.g.
       --crash-at 150=100000 reproduces the Fig-14 crash columns.
+      --progress streams a mid-run snapshot line (stderr) per cell every
+      N faults (default 100000) — live observability for long sweeps.
   repro corpus build [--workloads all|W1,..] [--scale N] [--seeds N1,..]
               [--corpus DIR]
       generate builtin traces into the corpus (.uvmt, content-addressed)
@@ -66,6 +72,11 @@ USAGE:
       ingest an external trace (CSV page-access dump or UVM fault log),
       validate it, and store it under its content hash; afterwards
       `repro sweep --corpus DIR --workloads N` runs it by name
+  repro corpus export <name> [--csv FILE] [--key KEY] [--corpus DIR]
+      stream a corpus entry back out as a CSV access dump (the exact
+      inverse of `import --format csv`; decodes lazily, so entries
+      larger than RAM export fine). --key addresses an entry directly
+      when several share a trace name
   repro corpus list [--corpus DIR]
       list corpus entries (name, size, provenance key), flag corrupt ones
   repro corpus gc [--corpus DIR]
@@ -115,19 +126,30 @@ fn opts_from(args: &Args) -> anyhow::Result<ExpOpts> {
     if let Some(dir) = args.get("artifacts") {
         opts.artifacts_dir = dir.into();
     }
+    if let Some(dir) = args.get("corpus") {
+        opts.corpus_dir = Some(dir.into());
+    }
     Ok(opts)
 }
 
 fn cmd_exp(args: &Args) -> anyhow::Result<()> {
-    args.reject_unknown(&["quick", "scale", "seed", "reports", "artifacts"])
+    args.reject_unknown(&["quick", "scale", "seed", "reports", "artifacts", "corpus"])
         .map_err(anyhow::Error::msg)?;
     let id = args
         .positional
         .first()
         .cloned()
         .unwrap_or_else(|| "all".to_string());
-    let mut ctx = ExpContext::new(opts_from(args)?);
-    exp::run(&id, &mut ctx)
+    let mut ctx = ExpContext::new(opts_from(args)?)?;
+    exp::run(&id, &mut ctx)?;
+    let cs = ctx.cache.stats();
+    if ctx.opts.corpus_dir.is_some() {
+        eprintln!(
+            "trace cache: {} built, {} loaded from corpus, {} persisted, {} shared hits",
+            cs.builds, cs.store_loads, cs.store_writes, cs.hits
+        );
+    }
+    Ok(())
 }
 
 fn parse_workload(args: &Args) -> anyhow::Result<Workload> {
@@ -269,7 +291,7 @@ fn parse_crash_at(s: &str) -> anyhow::Result<Vec<(u32, u64)>> {
 fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
     args.reject_unknown(&[
         "workloads", "strategies", "oversub", "seeds", "threads", "scale",
-        "reports", "artifacts", "corpus", "crash-at",
+        "reports", "artifacts", "corpus", "crash-at", "progress",
     ])
     .map_err(anyhow::Error::msg)?;
     let registry = StrategyRegistry::builtin();
@@ -330,10 +352,21 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
         Box::new(CsvSink::to_path(&csv_path)?),
         Box::new(JsonlSink::to_path(&jsonl_path)?),
     ];
+    // `--progress` alone uses the default cadence; `--progress N`
+    // overrides it (N = faults between snapshot lines)
+    let progress = match args.get("progress") {
+        None => 0,
+        Some(uvmio::util::cli::FLAG_SET) => 100_000,
+        Some(v) => v.parse::<u64>().map_err(|_| {
+            anyhow::anyhow!("--progress: cannot parse {v:?} (want a fault count)")
+        })?,
+    };
+
     let t0 = Instant::now();
     let records = SweepRunner::new(&registry)
         .with_threads(threads)
         .with_cache(Arc::clone(&cache))
+        .with_progress(progress)
         .run(&sweep, &ctx, &mut sinks)?;
     let cs = cache.stats();
     println!(
@@ -444,6 +477,72 @@ fn cmd_corpus(args: &Args) -> anyhow::Result<()> {
             );
             Ok(())
         }
+        "export" => {
+            args.reject_unknown(&["csv", "key", "corpus"])
+                .map_err(anyhow::Error::msg)?;
+            let store = open_store()?;
+            // stream: header metadata first, then one CSV row per access
+            // — the entry's access vector is never materialized
+            let (label, mut reader) = match args.get("key") {
+                Some(key) => {
+                    // store.reader verifies the stored key, so a hash
+                    // collision cannot silently export the wrong entry
+                    let r = store.reader(key)?.ok_or_else(|| {
+                        anyhow::anyhow!(
+                            "no corpus entry under key '{key}' in {}",
+                            store.dir().display()
+                        )
+                    })?;
+                    (key.to_string(), r)
+                }
+                None => {
+                    let name = args.positional.get(1).ok_or_else(|| {
+                        anyhow::anyhow!(
+                            "usage: repro corpus export <name> [--csv FILE] \
+                             [--key KEY] [--corpus DIR]"
+                        )
+                    })?;
+                    let path = store.find_named_path(name)?.ok_or_else(|| {
+                        anyhow::anyhow!(
+                            "no corpus entry named '{name}' in {} \
+                             (see `repro corpus list`)",
+                            store.dir().display()
+                        )
+                    })?;
+                    (name.clone(), uvmio::corpus::TraceReader::open(&path)?)
+                }
+            };
+            let out_path: PathBuf = args
+                .get("csv")
+                .map(Into::into)
+                .unwrap_or_else(|| PathBuf::from(format!("{}.csv", reader.meta().name)));
+            use std::io::Write;
+            let mut w = std::io::BufWriter::new(
+                std::fs::File::create(&out_path).map_err(|e| {
+                    anyhow::anyhow!("creating {}: {e}", out_path.display())
+                })?,
+            );
+            writeln!(w, "page,pc,tb,kernel,inst_gap,is_write")?;
+            let mut rows = 0u64;
+            while let Some(a) = reader.next_access()? {
+                writeln!(
+                    w,
+                    "{},{},{},{},{},{}",
+                    a.page, a.pc, a.tb, a.kernel, a.inst_gap, a.is_write as u8
+                )?;
+                rows += 1;
+            }
+            w.flush()?;
+            println!(
+                "exported '{label}' -> {} ({rows} accesses)",
+                out_path.display()
+            );
+            println!(
+                "re-import it:  repro corpus import {} --format csv",
+                out_path.display()
+            );
+            Ok(())
+        }
         "list" => {
             args.reject_unknown(&["corpus"]).map_err(anyhow::Error::msg)?;
             let store = open_store()?;
@@ -505,7 +604,7 @@ fn cmd_corpus(args: &Args) -> anyhow::Result<()> {
             Ok(())
         }
         other => anyhow::bail!(
-            "unknown corpus verb {other:?}; known: build import list gc"
+            "unknown corpus verb {other:?}; known: build import export list gc"
         ),
     }
 }

@@ -113,6 +113,52 @@ pub trait Policy {
     fn on_kernel_boundary(&mut self, _kernel: u32) {}
 }
 
+/// Forwarding impl so a borrowed policy drives a simulation that wants
+/// ownership: `Box<&mut P>` is a `Box<dyn Policy + '_>`, which is how
+/// [`crate::sim::Engine::run`] (which borrows its policy) wraps the
+/// owning [`crate::sim::Session`] API.
+impl<P: Policy + ?Sized> Policy for &mut P {
+    fn name(&self) -> String {
+        (**self).name()
+    }
+
+    fn instrumentation(&self) -> PolicyInstrumentation {
+        (**self).instrumentation()
+    }
+
+    fn on_access(&mut self, acc: &Access, resident: bool) {
+        (**self).on_access(acc, resident)
+    }
+
+    fn fault_action(&mut self, page: Page) -> FaultAction {
+        (**self).fault_action(page)
+    }
+
+    fn prefetch(&mut self, acc: &Access) -> Vec<Page> {
+        (**self).prefetch(acc)
+    }
+
+    fn select_victim(&mut self, mem: &DeviceMemory) -> Option<Page> {
+        (**self).select_victim(mem)
+    }
+
+    fn on_migrate(&mut self, page: Page, via_prefetch: bool) {
+        (**self).on_migrate(page, via_prefetch)
+    }
+
+    fn on_evict(&mut self, page: Page) {
+        (**self).on_evict(page)
+    }
+
+    fn on_interval(&mut self) {
+        (**self).on_interval()
+    }
+
+    fn on_kernel_boundary(&mut self, kernel: u32) {
+        (**self).on_kernel_boundary(kernel)
+    }
+}
+
 /// Eviction-only strategies that compose with any prefetcher via
 /// [`composite::Composite`].
 pub trait Evictor {

@@ -1,5 +1,12 @@
-//! The simulation engine: drives a trace through a policy under the
-//! Table V timing model.
+//! The batch front door to the simulator: drive a whole trace through a
+//! policy under the Table V timing model.
+//!
+//! `Engine` is a thin wrapper over [`Session`] — it builds a session
+//! from the trace's [`Arena`], feeds every access, and returns the
+//! [`RunOutcome`]. The two paths are byte-identical by construction
+//! (the `session_matches_engine_*` integration tests pin it); use a
+//! [`Session`] directly for streaming ingestion, mid-run snapshots,
+//! observers, or multi-tenant co-simulation.
 //!
 //! Timing model (all values in GPU core cycles):
 //!
@@ -22,58 +29,21 @@
 
 use crate::config::SimConfig;
 use crate::policy::Policy;
-use crate::sim::{DeviceMemory, FaultAction, Page, Stats, Tlb};
+use crate::sim::session::{Arena, Session};
 use crate::trace::Trace;
 
-use std::collections::HashMap;
+pub use crate::sim::session::RunOutcome;
 
-/// Result of a run: final stats plus the crash determination used by the
-/// 150% experiments (the paper reports ATAX/NW/2DCONV crashing under
-/// UVMSmart at 150% oversubscription).
-#[derive(Debug, Clone, PartialEq, Eq)]
-pub struct RunOutcome {
-    pub stats: Stats,
-    /// True if thrashing exceeded the runaway threshold (the analogue of
-    /// the benchmark crashing in the paper's simulator).
-    pub crashed: bool,
-}
-
+/// One-shot batch runner over a materialized [`Trace`].
 pub struct Engine {
     cfg: SimConfig,
-    mem: DeviceMemory,
-    tlb: Tlb,
-    stats: Stats,
-    /// cycle when the PCIe link becomes free
-    link_free: u64,
-    /// cycle when the current fault batch's service completes
-    batch_done: u64,
-    /// faults currently sharing the batch (bounded by MSHR count)
-    batch_faults: usize,
-    /// soft-pin remote-touch counters (delayed migration)
-    delay_counters: HashMap<Page, u32>,
-    faults_in_interval: u32,
-    current_kernel: u32,
-    /// runaway threshold: thrash events before declaring a crash
     crash_threshold: u64,
 }
 
 impl Engine {
     pub fn new(cfg: SimConfig) -> Engine {
-        let cap = cfg.capacity_pages;
-        assert!(cap > 0, "SimConfig.capacity_pages not set");
-        Engine {
-            mem: DeviceMemory::new(cap),
-            tlb: Tlb::new(cfg.tlb_entries),
-            stats: Stats::default(),
-            link_free: 0,
-            batch_done: 0,
-            batch_faults: 0,
-            delay_counters: HashMap::new(),
-            faults_in_interval: 0,
-            current_kernel: 0,
-            crash_threshold: u64::MAX,
-            cfg,
-        }
+        assert!(cfg.capacity_pages > 0, "SimConfig.capacity_pages not set");
+        Engine { cfg, crash_threshold: u64::MAX }
     }
 
     /// Enable crash emulation: a run whose thrash events exceed
@@ -83,184 +53,13 @@ impl Engine {
         self
     }
 
-    pub fn memory(&self) -> &DeviceMemory {
-        &self.mem
-    }
-
-    pub fn stats(&self) -> &Stats {
-        &self.stats
-    }
-
-    /// Run the whole trace under `policy`.
-    pub fn run(mut self, trace: &Trace, policy: &mut dyn Policy) -> RunOutcome {
-        for acc in &trace.accesses {
-            if acc.kernel != self.current_kernel {
-                self.current_kernel = acc.kernel;
-                policy.on_kernel_boundary(acc.kernel);
-            }
-            self.step(acc, policy, trace);
-            if self.stats.thrash_events > self.crash_threshold {
-                return RunOutcome { stats: self.stats, crashed: true };
-            }
-        }
-        RunOutcome { stats: self.stats, crashed: false }
-    }
-
-    fn step(
-        &mut self,
-        acc: &crate::trace::Access,
-        policy: &mut dyn Policy,
-        trace: &Trace,
-    ) {
-        // hot path: plain scalar reads, no per-step config copies
-        let (tlb_hit_latency, walk_latency) =
-            (self.cfg.tlb_hit_latency, self.cfg.walk_latency);
-        let hit_latency = self.cfg.dram_latency / self.cfg.warp_overlap;
-        self.stats.accesses += 1;
-        self.stats.instructions += acc.inst_gap as u64 + 1;
-        self.stats.cycles += acc.inst_gap as u64;
-
-        // translation
-        if self.tlb.access(acc.page) {
-            self.stats.tlb_hits += 1;
-            self.stats.cycles += tlb_hit_latency;
-        } else {
-            self.stats.tlb_misses += 1;
-            self.stats.cycles += walk_latency;
-        }
-
-        let resident = self.mem.resident(acc.page);
-        policy.on_access(acc, resident);
-
-        if resident {
-            self.stats.hits += 1;
-            self.mem.touch(acc.page, acc.is_write);
-            self.stats.cycles += hit_latency;
-        } else {
-            self.handle_fault(acc, policy);
-            // prefetching is fault-triggered (the driver schedules
-            // prefetch DMA while servicing the far-fault batch);
-            // candidates must lie inside a managed allocation.
-            let candidates = policy.prefetch(acc);
-            for page in candidates {
-                if !trace.in_allocation(page) || self.mem.resident(page) {
-                    continue;
-                }
-                self.admit(page, policy, true);
-            }
-        }
-    }
-
-    fn handle_fault(&mut self, acc: &crate::trace::Access, policy: &mut dyn Policy) {
-        // copy only the scalar knobs this path reads — no per-fault
-        // SimConfig clone (the old flat copy dragged the whole struct
-        // through the cache on every far-fault)
-        let SimConfig {
-            interval_faults,
-            delay_threshold,
-            zero_copy_latency,
-            far_fault_latency,
-            fault_mshrs,
-            transfer_cycles_per_page,
-            warp_overlap,
-            ..
-        } = self.cfg;
-        self.stats.faults += 1;
-        self.faults_in_interval += 1;
-        if self.faults_in_interval >= interval_faults {
-            self.faults_in_interval = 0;
-            policy.on_interval();
-        }
-
-        let action = policy.fault_action(acc.page);
-        let effective = match action {
-            FaultAction::Delay => {
-                let c = self.delay_counters.entry(acc.page).or_insert(0);
-                *c += 1;
-                if *c >= delay_threshold {
-                    self.delay_counters.remove(&acc.page);
-                    FaultAction::Migrate
-                } else {
-                    self.stats.delayed_remote += 1;
-                    self.stats.cycles += zero_copy_latency;
-                    return;
-                }
-            }
-            other => other,
-        };
-
-        match effective {
-            FaultAction::ZeroCopy => {
-                self.stats.zero_copy += 1;
-                self.stats.cycles += zero_copy_latency;
-            }
-            FaultAction::Migrate => {
-                // fault batching: join the in-flight batch if one is live
-                // and has MSHR headroom, else open a new batch.
-                let now = self.stats.cycles;
-                if now >= self.batch_done || self.batch_faults >= fault_mshrs {
-                    self.batch_done = now + far_fault_latency;
-                    self.batch_faults = 1;
-                } else {
-                    self.batch_faults += 1;
-                }
-                // the migration transfer queues on the link after the
-                // fault service completes
-                let start = self.batch_done.max(self.link_free);
-                let done = start + transfer_cycles_per_page;
-                self.link_free = done;
-                let stall = (done - now) / warp_overlap;
-                self.stats.cycles += stall;
-
-                self.admit(acc.page, policy, false);
-                self.mem.touch(acc.page, acc.is_write);
-            }
-            FaultAction::Delay => unreachable!("resolved above"),
-        }
-    }
-
-    /// Bring a page into device memory, evicting as needed.
-    fn admit(&mut self, page: Page, policy: &mut dyn Policy, via_prefetch: bool) {
-        while self.mem.is_full() {
-            let victim = match policy.select_victim(&self.mem) {
-                Some(v) if self.mem.resident(v) && v != page => v,
-                _ => {
-                    self.stats.policy_victim_fallbacks += 1;
-                    match self.mem.any_page() {
-                        Some(v) => v,
-                        None => break, // capacity 0 handled by ctor assert
-                    }
-                }
-            };
-            let frame = self.mem.evict(victim).expect("victim resident");
-            self.tlb.invalidate(victim);
-            self.stats
-                .note_eviction(victim, frame.prefetched_untouched, frame.dirty);
-            if frame.dirty {
-                // writeback occupies the link but does not stall the SMs
-                self.link_free =
-                    self.link_free.max(self.stats.cycles) + self.cfg.transfer_cycles_per_page;
-            }
-            policy.on_evict(victim);
-        }
-        // prefetch transfers ride the link in the background
-        if via_prefetch {
-            self.stats.prefetches += 1;
-            self.link_free =
-                self.link_free.max(self.stats.cycles) + self.cfg.transfer_cycles_per_page;
-        }
-        self.mem.install(page, self.stats.cycles, via_prefetch);
-        self.stats.note_migration(page);
-        policy.on_migrate(page, via_prefetch);
-    }
-
-    /// Charge predictor inference overhead (called by learning-based
-    /// policies through the coordinator).
-    pub fn charge_prediction(&mut self, batch: u64) {
-        self.stats.predictions += batch;
-        let cost = self.cfg.prediction_overhead;
-        self.stats.prediction_overhead_cycles += cost;
-        self.stats.cycles += cost;
+    /// Run the whole trace under `policy`. Equivalent to feeding every
+    /// access of `trace` into a fresh [`Session`].
+    pub fn run(self, trace: &Trace, policy: &mut dyn Policy) -> RunOutcome {
+        let mut session = Session::new(self.cfg, Arena::of_trace(trace), Box::new(policy))
+            .with_crash_threshold(self.crash_threshold);
+        session.feed(trace.accesses.iter().copied());
+        session.finish()
     }
 }
 

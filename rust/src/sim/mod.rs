@@ -10,15 +10,30 @@
 //! The engine is policy-agnostic: everything strategy-specific (what to
 //! prefetch, whom to evict, migrate vs pin) lives behind
 //! [`crate::policy::Policy`].
+//!
+//! Two front doors share one timing core:
+//!
+//! * [`Session`] — the resumable, event-driven API: push accesses one at
+//!   a time (or stream them with [`Session::feed`] /
+//!   [`Session::feed_results`]), register [`Observer`]s for typed
+//!   [`SimEvent`]s, read a [`MetricsSnapshot`] mid-run, and let the
+//!   per-step crash check stop runaway thrashers. This is what
+//!   streaming `.uvmt` ingestion and the online multi-tenant scheduler
+//!   ([`crate::coordinator::MultiTenantScheduler`]) build on.
+//! * [`Engine`] — the one-shot batch wrapper over `Session` for callers
+//!   that hold a materialized [`crate::trace::Trace`]; byte-identical
+//!   stats by construction.
 
 pub mod engine;
 pub mod mem;
+pub mod session;
 pub mod stats;
 pub mod tlb;
 
-pub use engine::{Engine, RunOutcome};
+pub use engine::Engine;
 pub use mem::DeviceMemory;
-pub use stats::Stats;
+pub use session::{Arena, Observer, RunOutcome, Session, SimEvent, StepResult};
+pub use stats::{MetricsSnapshot, Stats};
 pub use tlb::Tlb;
 
 /// Virtual page number.

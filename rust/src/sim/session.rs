@@ -1,0 +1,617 @@
+//! `Session` — the resumable, event-driven core of the simulator.
+//!
+//! [`crate::sim::Engine::run`] consumes a fully materialized
+//! [`Trace`](crate::trace::Trace) and returns once at the end; a
+//! `Session` is the same timing model turned inside out. Accesses are
+//! *pushed* one at a time ([`Session::push`]) or streamed from any
+//! iterator ([`Session::feed`], [`Session::feed_results`] for fallible
+//! streams such as [`crate::corpus::format::TraceReader`]), which buys
+//! three capabilities the batch API cannot offer:
+//!
+//! * **streaming ingestion** — a `.uvmt` corpus entry larger than RAM
+//!   runs through [`Session::feed_results`] without ever materializing
+//!   its access vector;
+//! * **mid-run observability** — [`Session::snapshot`] returns a cheap
+//!   [`MetricsSnapshot`] at any point, and typed [`SimEvent`]s (fault,
+//!   migrate, evict, thrash, interval, kernel boundary, crash) are
+//!   delivered to registered [`Observer`]s as they happen;
+//! * **co-simulation** — several live input streams can share one
+//!   session (see [`crate::coordinator::MultiTenantScheduler`]), so
+//!   concurrent tenants contend for device memory *online* instead of
+//!   being pre-interleaved into one offline trace.
+//!
+//! Because a session has no trace in hand, the managed-allocation map
+//! the prefetch filter needs arrives up front as an [`Arena`] (built
+//! from a trace, or from a `.uvmt` header via
+//! [`crate::corpus::format::UvmtMeta`]).
+//!
+//! `Engine::run` is a thin wrapper over `Session` — the two paths
+//! produce byte-identical [`Stats`] by construction, and the
+//! `session_matches_engine_*` integration tests pin that equivalence.
+
+use std::collections::HashMap;
+
+use crate::config::SimConfig;
+use crate::policy::Policy;
+use crate::sim::{DeviceMemory, FaultAction, Page, Stats, Tlb};
+use crate::sim::stats::MetricsSnapshot;
+use crate::trace::Access;
+
+/// Result of a run: final stats plus the crash determination used by the
+/// 150% experiments (the paper reports ATAX/NW/2DCONV crashing under
+/// UVMSmart at 150% oversubscription).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RunOutcome {
+    pub stats: Stats,
+    /// True if thrashing exceeded the runaway threshold (the analogue of
+    /// the benchmark crashing in the paper's simulator).
+    pub crashed: bool,
+}
+
+/// The managed-address-space geometry a session simulates against: the
+/// arena span and the `cudaMallocManaged` allocation map. Mirrors the
+/// corresponding fields of [`crate::trace::Trace`] — prefetch candidates
+/// outside every allocation are dropped, exactly as the batch engine
+/// drops them via `Trace::in_allocation`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Arena {
+    /// Arena span in pages, including chunk-alignment padding.
+    pub working_set_pages: u64,
+    /// (base, pages) of each managed allocation; empty means "one
+    /// allocation covering the whole arena".
+    pub allocations: Vec<(u64, u64)>,
+}
+
+impl Arena {
+    pub fn new(working_set_pages: u64, allocations: Vec<(u64, u64)>) -> Arena {
+        Arena { working_set_pages, allocations }
+    }
+
+    /// The arena of a materialized trace.
+    pub fn of_trace(trace: &crate::trace::Trace) -> Arena {
+        Arena {
+            working_set_pages: trace.working_set_pages,
+            allocations: trace.allocations.clone(),
+        }
+    }
+
+    /// Is `page` inside some managed allocation? Must stay equivalent to
+    /// [`crate::trace::Trace::in_allocation`] (the engine-equivalence
+    /// contract depends on it).
+    pub fn in_allocation(&self, page: u64) -> bool {
+        if self.allocations.is_empty() {
+            return page < self.working_set_pages;
+        }
+        self.allocations
+            .iter()
+            .any(|&(base, pages)| page >= base && page < base + pages)
+    }
+}
+
+/// A typed simulation event, delivered to [`Observer`]s the moment it
+/// happens. Events carry the *effective* decision (e.g. a `Delay` fault
+/// that crossed the soft-pin threshold surfaces as `Migrate`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SimEvent {
+    /// A far-fault was serviced with the given effective action.
+    Fault { page: Page, action: FaultAction },
+    /// A page became resident (demand migration or prefetch).
+    Migrate { page: Page, via_prefetch: bool },
+    /// A page was evicted; `dirty` pages additionally occupy the link
+    /// for writeback.
+    Evict { page: Page, dirty: bool },
+    /// A migration re-installed a previously evicted page.
+    Thrash { page: Page },
+    /// An eviction interval elapsed (`SimConfig::interval_faults`
+    /// faults); `index` counts intervals since the session started.
+    Interval { index: u64 },
+    /// The input stream crossed a kernel (phase) boundary.
+    KernelBoundary { kernel: u32 },
+    /// Thrashing crossed the crash threshold; the session stops
+    /// consuming input.
+    Crash { thrash_events: u64 },
+}
+
+/// A registered event consumer. Observers see each [`SimEvent`] plus the
+/// stats as of that event; they must not assume any particular event
+/// spacing (hit-only stretches emit nothing).
+pub trait Observer {
+    fn on_event(&mut self, event: &SimEvent, stats: &Stats);
+}
+
+/// What one pushed access did.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct StepResult {
+    /// The page was resident (no fault).
+    pub hit: bool,
+    /// Effective fault-service action when the access faulted (`None`
+    /// on hits and on pushes ignored after a crash).
+    pub action: Option<FaultAction>,
+    /// The session has crossed its crash threshold; further pushes are
+    /// no-ops.
+    pub crashed: bool,
+}
+
+/// A resumable simulation: same timing model as [`crate::sim::Engine`],
+/// driven access-by-access. See the module docs for the API shape and
+/// [`crate::sim::engine`] for the timing model itself.
+pub struct Session<'p> {
+    cfg: SimConfig,
+    arena: Arena,
+    mem: DeviceMemory,
+    tlb: Tlb,
+    stats: Stats,
+    /// cycle when the PCIe link becomes free
+    link_free: u64,
+    /// cycle when the current fault batch's service completes
+    batch_done: u64,
+    /// faults currently sharing the batch (bounded by MSHR count)
+    batch_faults: usize,
+    /// soft-pin remote-touch counters (delayed migration)
+    delay_counters: HashMap<Page, u32>,
+    faults_in_interval: u32,
+    intervals: u64,
+    current_kernel: u32,
+    /// runaway threshold: thrash events before declaring a crash
+    crash_threshold: u64,
+    crashed: bool,
+    policy: Box<dyn Policy + 'p>,
+    observers: Vec<Box<dyn Observer + 'p>>,
+}
+
+impl<'p> Session<'p> {
+    pub fn new(
+        cfg: SimConfig,
+        arena: Arena,
+        policy: Box<dyn Policy + 'p>,
+    ) -> Session<'p> {
+        let cap = cfg.capacity_pages;
+        assert!(cap > 0, "SimConfig.capacity_pages not set");
+        Session {
+            mem: DeviceMemory::new(cap),
+            tlb: Tlb::new(cfg.tlb_entries),
+            stats: Stats::default(),
+            link_free: 0,
+            batch_done: 0,
+            batch_faults: 0,
+            delay_counters: HashMap::new(),
+            faults_in_interval: 0,
+            intervals: 0,
+            current_kernel: 0,
+            crash_threshold: u64::MAX,
+            crashed: false,
+            observers: Vec::new(),
+            cfg,
+            arena,
+            policy,
+        }
+    }
+
+    /// Enable crash emulation: once thrash events exceed `threshold` the
+    /// session marks itself crashed and ignores further input (the
+    /// 150% experiments' analogue of the benchmark crashing).
+    pub fn with_crash_threshold(mut self, threshold: u64) -> Session<'p> {
+        self.crash_threshold = threshold;
+        self
+    }
+
+    /// Register an event consumer. Sessions with no observers pay
+    /// nothing for the event plumbing.
+    pub fn add_observer(&mut self, observer: Box<dyn Observer + 'p>) {
+        self.observers.push(observer);
+    }
+
+    pub fn memory(&self) -> &DeviceMemory {
+        &self.mem
+    }
+
+    pub fn stats(&self) -> &Stats {
+        &self.stats
+    }
+
+    pub fn crashed(&self) -> bool {
+        self.crashed
+    }
+
+    /// The policy driving this session (e.g. to read
+    /// [`crate::policy::PolicyInstrumentation`] before [`Session::finish`]).
+    pub fn policy(&self) -> &(dyn Policy + 'p) {
+        &*self.policy
+    }
+
+    pub fn policy_mut(&mut self) -> &mut (dyn Policy + 'p) {
+        &mut *self.policy
+    }
+
+    /// Cheap point-in-time metrics, readable mid-run without perturbing
+    /// the simulation.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let mut snap = self.stats.snapshot();
+        snap.resident_pages = self.mem.used();
+        snap.crashed = self.crashed;
+        snap
+    }
+
+    /// Simulate one access. After a crash this is a no-op that keeps
+    /// reporting `crashed` (so `feed` loops terminate cleanly).
+    pub fn push(&mut self, acc: &Access) -> StepResult {
+        if self.crashed {
+            return StepResult { hit: false, action: None, crashed: true };
+        }
+        if acc.kernel != self.current_kernel {
+            self.current_kernel = acc.kernel;
+            self.policy.on_kernel_boundary(acc.kernel);
+            self.emit(SimEvent::KernelBoundary { kernel: acc.kernel });
+        }
+        let result = self.step(acc);
+        if self.stats.thrash_events > self.crash_threshold {
+            self.crashed = true;
+            self.emit(SimEvent::Crash { thrash_events: self.stats.thrash_events });
+            return StepResult { crashed: true, ..result };
+        }
+        result
+    }
+
+    /// Push every access of an infallible stream; stops at a crash.
+    /// Returns the last [`StepResult`] (default for an empty stream).
+    pub fn feed<I>(&mut self, accesses: I) -> StepResult
+    where
+        I: IntoIterator<Item = Access>,
+    {
+        let mut last = StepResult { crashed: self.crashed, ..StepResult::default() };
+        for acc in accesses {
+            last = self.push(&acc);
+            if last.crashed {
+                break;
+            }
+        }
+        last
+    }
+
+    /// Push every access of a fallible stream (e.g. a streaming `.uvmt`
+    /// decoder); stops at the first stream error or at a crash.
+    pub fn feed_results<I, E>(&mut self, accesses: I) -> Result<StepResult, E>
+    where
+        I: IntoIterator<Item = Result<Access, E>>,
+    {
+        let mut last = StepResult { crashed: self.crashed, ..StepResult::default() };
+        for acc in accesses {
+            last = self.push(&acc?);
+            if last.crashed {
+                break;
+            }
+        }
+        Ok(last)
+    }
+
+    /// Consume the session: final stats plus the crash determination.
+    pub fn finish(self) -> RunOutcome {
+        RunOutcome { stats: self.stats, crashed: self.crashed }
+    }
+
+    /// Charge predictor inference overhead (called by learning-based
+    /// policies through the coordinator).
+    pub fn charge_prediction(&mut self, batch: u64) {
+        self.stats.predictions += batch;
+        let cost = self.cfg.prediction_overhead;
+        self.stats.prediction_overhead_cycles += cost;
+        self.stats.cycles += cost;
+    }
+
+    #[inline]
+    fn emit(&mut self, event: SimEvent) {
+        if self.observers.is_empty() {
+            return;
+        }
+        let stats = &self.stats;
+        for o in self.observers.iter_mut() {
+            o.on_event(&event, stats);
+        }
+    }
+
+    fn step(&mut self, acc: &Access) -> StepResult {
+        // hot path: plain scalar reads, no per-step config copies
+        let (tlb_hit_latency, walk_latency) =
+            (self.cfg.tlb_hit_latency, self.cfg.walk_latency);
+        let hit_latency = self.cfg.dram_latency / self.cfg.warp_overlap;
+        self.stats.accesses += 1;
+        self.stats.instructions += acc.inst_gap as u64 + 1;
+        self.stats.cycles += acc.inst_gap as u64;
+
+        // translation
+        if self.tlb.access(acc.page) {
+            self.stats.tlb_hits += 1;
+            self.stats.cycles += tlb_hit_latency;
+        } else {
+            self.stats.tlb_misses += 1;
+            self.stats.cycles += walk_latency;
+        }
+
+        let resident = self.mem.resident(acc.page);
+        self.policy.on_access(acc, resident);
+
+        if resident {
+            self.stats.hits += 1;
+            self.mem.touch(acc.page, acc.is_write);
+            self.stats.cycles += hit_latency;
+            StepResult { hit: true, action: None, crashed: false }
+        } else {
+            let action = self.handle_fault(acc);
+            // prefetching is fault-triggered (the driver schedules
+            // prefetch DMA while servicing the far-fault batch);
+            // candidates must lie inside a managed allocation.
+            let candidates = self.policy.prefetch(acc);
+            for page in candidates {
+                if !self.arena.in_allocation(page) || self.mem.resident(page) {
+                    continue;
+                }
+                self.admit(page, true);
+            }
+            StepResult { hit: false, action: Some(action), crashed: false }
+        }
+    }
+
+    fn handle_fault(&mut self, acc: &Access) -> FaultAction {
+        // copy only the scalar knobs this path reads — no per-fault
+        // SimConfig clone (the old flat copy dragged the whole struct
+        // through the cache on every far-fault)
+        let SimConfig {
+            interval_faults,
+            delay_threshold,
+            zero_copy_latency,
+            far_fault_latency,
+            fault_mshrs,
+            transfer_cycles_per_page,
+            warp_overlap,
+            ..
+        } = self.cfg;
+        self.stats.faults += 1;
+        self.faults_in_interval += 1;
+        if self.faults_in_interval >= interval_faults {
+            self.faults_in_interval = 0;
+            self.intervals += 1;
+            self.policy.on_interval();
+            self.emit(SimEvent::Interval { index: self.intervals });
+        }
+
+        let action = self.policy.fault_action(acc.page);
+        let effective = match action {
+            FaultAction::Delay => {
+                let c = self.delay_counters.entry(acc.page).or_insert(0);
+                *c += 1;
+                if *c >= delay_threshold {
+                    self.delay_counters.remove(&acc.page);
+                    FaultAction::Migrate
+                } else {
+                    self.stats.delayed_remote += 1;
+                    self.stats.cycles += zero_copy_latency;
+                    self.emit(SimEvent::Fault {
+                        page: acc.page,
+                        action: FaultAction::Delay,
+                    });
+                    return FaultAction::Delay;
+                }
+            }
+            other => other,
+        };
+
+        self.emit(SimEvent::Fault { page: acc.page, action: effective });
+        match effective {
+            FaultAction::ZeroCopy => {
+                self.stats.zero_copy += 1;
+                self.stats.cycles += zero_copy_latency;
+            }
+            FaultAction::Migrate => {
+                // fault batching: join the in-flight batch if one is live
+                // and has MSHR headroom, else open a new batch.
+                let now = self.stats.cycles;
+                if now >= self.batch_done || self.batch_faults >= fault_mshrs {
+                    self.batch_done = now + far_fault_latency;
+                    self.batch_faults = 1;
+                } else {
+                    self.batch_faults += 1;
+                }
+                // the migration transfer queues on the link after the
+                // fault service completes
+                let start = self.batch_done.max(self.link_free);
+                let done = start + transfer_cycles_per_page;
+                self.link_free = done;
+                let stall = (done - now) / warp_overlap;
+                self.stats.cycles += stall;
+
+                self.admit(acc.page, false);
+                self.mem.touch(acc.page, acc.is_write);
+            }
+            FaultAction::Delay => unreachable!("resolved above"),
+        }
+        effective
+    }
+
+    /// Bring a page into device memory, evicting as needed.
+    fn admit(&mut self, page: Page, via_prefetch: bool) {
+        while self.mem.is_full() {
+            let victim = match self.policy.select_victim(&self.mem) {
+                Some(v) if self.mem.resident(v) && v != page => v,
+                _ => {
+                    self.stats.policy_victim_fallbacks += 1;
+                    match self.mem.any_page() {
+                        Some(v) => v,
+                        None => break, // capacity 0 handled by ctor assert
+                    }
+                }
+            };
+            let frame = self.mem.evict(victim).expect("victim resident");
+            self.tlb.invalidate(victim);
+            self.stats
+                .note_eviction(victim, frame.prefetched_untouched, frame.dirty);
+            if frame.dirty {
+                // writeback occupies the link but does not stall the SMs
+                self.link_free =
+                    self.link_free.max(self.stats.cycles) + self.cfg.transfer_cycles_per_page;
+            }
+            self.policy.on_evict(victim);
+            self.emit(SimEvent::Evict { page: victim, dirty: frame.dirty });
+        }
+        // prefetch transfers ride the link in the background
+        if via_prefetch {
+            self.stats.prefetches += 1;
+            self.link_free =
+                self.link_free.max(self.stats.cycles) + self.cfg.transfer_cycles_per_page;
+        }
+        self.mem.install(page, self.stats.cycles, via_prefetch);
+        let thrashed = self.stats.note_migration(page);
+        self.policy.on_migrate(page, via_prefetch);
+        self.emit(SimEvent::Migrate { page, via_prefetch });
+        if thrashed {
+            self.emit(SimEvent::Thrash { page });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::policy::composite::Composite;
+    use crate::policy::lru::Lru;
+    use crate::policy::DemandOnly;
+    use crate::trace::{Access, Trace};
+
+    fn mk_trace(pages: &[u64], ws: u64) -> Trace {
+        Trace::from_accesses(
+            "t",
+            ws,
+            1,
+            pages
+                .iter()
+                .map(|&p| Access {
+                    page: p,
+                    pc: 0,
+                    tb: 0,
+                    kernel: 0,
+                    inst_gap: 4,
+                    is_write: false,
+                })
+                .collect(),
+        )
+    }
+
+    fn demand_lru() -> Box<dyn Policy> {
+        Box::new(Composite::new(DemandOnly, Lru::new()))
+    }
+
+    fn session_for(trace: &Trace, capacity: u64) -> Session<'static> {
+        let cfg = SimConfig { capacity_pages: capacity, ..Default::default() };
+        Session::new(cfg, Arena::of_trace(trace), demand_lru())
+    }
+
+    /// Observer recording every event kind it sees.
+    #[derive(Default)]
+    struct Recorder {
+        faults: usize,
+        migrates: usize,
+        evicts: usize,
+        thrashes: usize,
+        crashes: usize,
+    }
+
+    impl Observer for std::rc::Rc<std::cell::RefCell<Recorder>> {
+        fn on_event(&mut self, event: &SimEvent, _stats: &Stats) {
+            let mut r = self.borrow_mut();
+            match event {
+                SimEvent::Fault { .. } => r.faults += 1,
+                SimEvent::Migrate { .. } => r.migrates += 1,
+                SimEvent::Evict { .. } => r.evicts += 1,
+                SimEvent::Thrash { .. } => r.thrashes += 1,
+                SimEvent::Crash { .. } => r.crashes += 1,
+                _ => {}
+            }
+        }
+    }
+
+    #[test]
+    fn push_reports_hits_and_faults() {
+        let t = mk_trace(&[0, 1, 0], 2);
+        let mut s = session_for(&t, 2);
+        let r = s.push(&t.accesses[0]);
+        assert!(!r.hit);
+        assert_eq!(r.action, Some(FaultAction::Migrate));
+        let r = s.push(&t.accesses[1]);
+        assert!(!r.hit);
+        let r = s.push(&t.accesses[2]);
+        assert!(r.hit);
+        assert_eq!(r.action, None);
+        let out = s.finish();
+        assert_eq!(out.stats.hits, 1);
+        assert_eq!(out.stats.faults, 2);
+        assert!(!out.crashed);
+    }
+
+    #[test]
+    fn events_match_stats() {
+        let seq: Vec<u64> = (0..4).cycle().take(40).collect();
+        let t = mk_trace(&seq, 4);
+        let rec = std::rc::Rc::new(std::cell::RefCell::new(Recorder::default()));
+        let mut s = session_for(&t, 3);
+        s.add_observer(Box::new(std::rc::Rc::clone(&rec)));
+        s.feed(t.accesses.iter().copied());
+        let out = s.finish();
+        let r = rec.borrow();
+        assert_eq!(r.faults as u64, out.stats.faults);
+        assert_eq!(r.migrates as u64, out.stats.migrations);
+        assert_eq!(r.evicts as u64, out.stats.evictions);
+        assert_eq!(r.thrashes as u64, out.stats.thrash_events);
+        assert_eq!(r.crashes, 0);
+    }
+
+    #[test]
+    fn crash_stops_consuming_input() {
+        let seq: Vec<u64> = (0..4).cycle().take(400).collect();
+        let t = mk_trace(&seq, 4);
+        let rec = std::rc::Rc::new(std::cell::RefCell::new(Recorder::default()));
+        let cfg = SimConfig { capacity_pages: 2, ..Default::default() };
+        let mut s = Session::new(cfg, Arena::of_trace(&t), demand_lru())
+            .with_crash_threshold(50);
+        s.add_observer(Box::new(std::rc::Rc::clone(&rec)));
+        let last = s.feed(t.accesses.iter().copied());
+        assert!(last.crashed);
+        assert!(s.crashed());
+        let consumed = s.stats().accesses;
+        assert!(consumed < t.accesses.len() as u64, "crash must stop the feed");
+        // pushes after a crash are inert
+        let r = s.push(&t.accesses[0]);
+        assert!(r.crashed);
+        assert_eq!(s.stats().accesses, consumed);
+        assert_eq!(rec.borrow().crashes, 1);
+        assert!(s.finish().crashed);
+    }
+
+    #[test]
+    fn snapshot_is_cheap_and_consistent() {
+        let t = mk_trace(&[0, 1, 2, 0, 1, 2], 3);
+        let mut s = session_for(&t, 3);
+        let before = s.snapshot();
+        assert_eq!(before.accesses, 0);
+        s.feed(t.accesses.iter().copied());
+        let after = s.snapshot();
+        assert_eq!(after.accesses, 6);
+        assert_eq!(after.faults, 3);
+        assert_eq!(after.resident_pages, 3);
+        assert!(!after.crashed);
+        let out = s.finish();
+        assert_eq!(out.stats.snapshot().accesses, after.accesses);
+    }
+
+    #[test]
+    fn arena_matches_trace_semantics() {
+        let t = mk_trace(&[0, 1], 8);
+        let a = Arena::of_trace(&t);
+        for p in 0..10 {
+            assert_eq!(a.in_allocation(p), t.in_allocation(p), "page {p}");
+        }
+        let multi = Arena::new(100, vec![(0, 4), (32, 8)]);
+        assert!(multi.in_allocation(3));
+        assert!(!multi.in_allocation(4));
+        assert!(multi.in_allocation(39));
+        assert!(!multi.in_allocation(99));
+    }
+}

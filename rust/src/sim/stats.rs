@@ -41,6 +41,62 @@ pub struct Stats {
     pub policy_victim_fallbacks: u64,
 }
 
+/// A cheap, `Copy` point-in-time view of [`Stats`] — every counter, none
+/// of the page sets. This is what [`crate::sim::Session::snapshot`] hands
+/// out mid-run: taking one never perturbs the simulation and costs a
+/// couple dozen word copies, so observers and progress reporters can
+/// sample as often as they like.
+///
+/// `resident_pages` and `crashed` are session-level facts; they stay at
+/// their defaults when the snapshot is taken straight off a [`Stats`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct MetricsSnapshot {
+    pub accesses: u64,
+    pub instructions: u64,
+    pub cycles: u64,
+    pub tlb_hits: u64,
+    pub tlb_misses: u64,
+    pub hits: u64,
+    pub faults: u64,
+    pub migrations: u64,
+    pub evictions: u64,
+    pub writebacks: u64,
+    pub zero_copy: u64,
+    pub delayed_remote: u64,
+    pub prefetches: u64,
+    pub garbage_prefetches: u64,
+    pub thrash_events: u64,
+    /// distinct pages ever thrashed (`thrashed_pages.len()`)
+    pub thrashed_unique: u64,
+    /// distinct pages ever evicted (`evicted_pages.len()`)
+    pub evicted_unique: u64,
+    pub predictions: u64,
+    pub prediction_overhead_cycles: u64,
+    pub policy_victim_fallbacks: u64,
+    /// pages resident in device memory when the snapshot was taken
+    /// (session-level; 0 from [`Stats::snapshot`])
+    pub resident_pages: u64,
+    /// session crossed its crash threshold (session-level; false from
+    /// [`Stats::snapshot`])
+    pub crashed: bool,
+}
+
+impl MetricsSnapshot {
+    pub fn ipc(&self) -> f64 {
+        if self.cycles == 0 {
+            return 0.0;
+        }
+        self.instructions as f64 / self.cycles as f64
+    }
+
+    pub fn fault_rate(&self) -> f64 {
+        if self.accesses == 0 {
+            return 0.0;
+        }
+        self.faults as f64 / self.accesses as f64
+    }
+}
+
 impl Stats {
     pub fn ipc(&self) -> f64 {
         if self.cycles == 0 {
@@ -76,11 +132,44 @@ impl Stats {
     }
 
     /// Record a migration; detects thrashing (re-migration after evict).
-    pub fn note_migration(&mut self, page: Page) {
+    /// Returns true when this migration was a thrash event, so the
+    /// session can surface it as a typed [`crate::sim::SimEvent`].
+    pub fn note_migration(&mut self, page: Page) -> bool {
         self.migrations += 1;
         if self.evicted_pages.contains(&page) {
             self.thrash_events += 1;
             self.thrashed_pages.insert(page);
+            return true;
+        }
+        false
+    }
+
+    /// Point-in-time copy of every counter (no page sets). See
+    /// [`MetricsSnapshot`].
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            accesses: self.accesses,
+            instructions: self.instructions,
+            cycles: self.cycles,
+            tlb_hits: self.tlb_hits,
+            tlb_misses: self.tlb_misses,
+            hits: self.hits,
+            faults: self.faults,
+            migrations: self.migrations,
+            evictions: self.evictions,
+            writebacks: self.writebacks,
+            zero_copy: self.zero_copy,
+            delayed_remote: self.delayed_remote,
+            prefetches: self.prefetches,
+            garbage_prefetches: self.garbage_prefetches,
+            thrash_events: self.thrash_events,
+            thrashed_unique: self.thrashed_pages.len() as u64,
+            evicted_unique: self.evicted_pages.len() as u64,
+            predictions: self.predictions,
+            prediction_overhead_cycles: self.prediction_overhead_cycles,
+            policy_victim_fallbacks: self.policy_victim_fallbacks,
+            resident_pages: 0,
+            crashed: false,
         }
     }
 }
@@ -92,18 +181,38 @@ mod tests {
     #[test]
     fn thrash_requires_prior_eviction() {
         let mut s = Stats::default();
-        s.note_migration(1);
+        assert!(!s.note_migration(1));
         assert_eq!(s.thrash_events, 0);
         s.note_eviction(1, false, false);
-        s.note_migration(1);
+        assert!(s.note_migration(1));
         assert_eq!(s.thrash_events, 1);
         assert!(s.thrashed_pages.contains(&1));
         // repeated churn keeps counting events but the page set dedups
         s.note_eviction(1, false, true);
-        s.note_migration(1);
+        assert!(s.note_migration(1));
         assert_eq!(s.thrash_events, 2);
         assert_eq!(s.thrashed_pages.len(), 1);
         assert_eq!(s.writebacks, 1);
+    }
+
+    #[test]
+    fn snapshot_copies_counters_and_set_sizes() {
+        let mut s = Stats::default();
+        s.accesses = 10;
+        s.instructions = 50;
+        s.cycles = 25;
+        s.note_eviction(3, false, true);
+        s.note_migration(3);
+        let snap = s.snapshot();
+        assert_eq!(snap.accesses, 10);
+        assert_eq!(snap.thrash_events, 1);
+        assert_eq!(snap.thrashed_unique, 1);
+        assert_eq!(snap.evicted_unique, 1);
+        assert_eq!(snap.writebacks, 1);
+        assert!(!snap.crashed);
+        assert_eq!(snap.resident_pages, 0);
+        assert!((snap.ipc() - 2.0).abs() < 1e-12);
+        assert!((snap.fault_rate() - 0.0).abs() < 1e-12);
     }
 
     #[test]

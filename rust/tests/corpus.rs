@@ -161,11 +161,13 @@ fn cached_parallel_sweep_builds_once_and_matches_serial() {
     let _ = fs::remove_dir_all(&dir);
 
     // each (workload, seed) pair built exactly once, every other cell
-    // was a shared hit
+    // was a shared hit; the accounting invariant holds at quiescence
     let stats = cache.stats();
     let distinct = (workloads.len() * 2) as u64;
     assert_eq!(stats.builds, distinct, "{stats:?}");
     assert_eq!(stats.hits, sweep.len() as u64 - distinct, "{stats:?}");
+    assert_eq!(stats.lookups, sweep.len() as u64, "{stats:?}");
+    assert!(stats.consistent(), "{stats:?}");
 
     // byte-identical serialized output
     assert_eq!(jsonl_of(&serial), jsonl_of(&parallel));
@@ -176,7 +178,10 @@ fn cached_parallel_sweep_builds_once_and_matches_serial() {
         .with_cache(Arc::clone(&cache))
         .run(&sweep, &ctx, &mut [])
         .unwrap();
-    assert_eq!(cache.stats().builds, distinct);
+    let stats = cache.stats();
+    assert_eq!(stats.builds, distinct);
+    assert_eq!(stats.lookups, 2 * sweep.len() as u64, "{stats:?}");
+    assert!(stats.consistent(), "{stats:?}");
     assert_eq!(jsonl_of(&serial), jsonl_of(&again));
 }
 
@@ -257,7 +262,9 @@ fn imported_csv_runs_through_sweep_by_name() {
     assert_eq!(records[0].cell.workload, "myapp");
     // the imported trace is seed-independent: ONE build serves both
     // seeds; ATAX builds once per seed
-    assert_eq!(cache.stats().builds, 1 + 2);
+    let stats = cache.stats();
+    assert_eq!(stats.builds, 1 + 2);
+    assert!(stats.consistent(), "{stats:?}");
     let _ = fs::remove_dir_all(&dir);
 }
 
@@ -364,9 +371,41 @@ fn repro_binary_corpus_workflow() {
     assert!(csv_report.contains("webapp,baseline"), "{csv_report}");
     assert!(csv_report.contains("webapp,uvmsmart"), "{csv_report}");
 
-    // gc keeps everything healthy
+    // export the imported trace back out as CSV (streamed) — the
+    // inverse of import — and re-import it under a new name
+    let exported = dir.join("webapp-export.csv");
+    let out = run(&[
+        "corpus", "export", "webapp", "--csv", exported.to_str().unwrap(),
+        "--corpus", corpus_s,
+    ]);
+    assert!(out.contains("exported 'webapp'"), "{out}");
+    assert!(out.contains("512 accesses"), "{out}");
+    let roundtrip =
+        uvmio::corpus::import::csv_trace(&exported, "webapp").unwrap();
+    let original = uvmio::corpus::import::csv_trace(&csv_path, "webapp").unwrap();
+    assert_eq!(roundtrip, original, "export -> import must be lossless");
+    let out = run(&[
+        "corpus", "import", exported.to_str().unwrap(), "--name", "webapp2",
+        "--corpus", corpus_s,
+    ]);
+    assert!(out.contains("imported 'webapp2'"), "{out}");
+
+    // exporting a missing name fails loudly
+    let status = std::process::Command::new(bin)
+        .args(["corpus", "export", "ghost", "--corpus", corpus_s])
+        .current_dir(&dir)
+        .output()
+        .expect("spawn repro");
+    assert!(!status.status.success());
+    assert!(
+        String::from_utf8_lossy(&status.stderr).contains("ghost"),
+        "{}",
+        String::from_utf8_lossy(&status.stderr)
+    );
+
+    // gc keeps everything healthy (2 builtins + webapp + webapp2)
     let out = run(&["corpus", "gc", "--corpus", corpus_s]);
-    assert!(out.contains("kept 3"), "{out}");
+    assert!(out.contains("kept 4"), "{out}");
     let _ = fs::remove_dir_all(&dir);
 }
 

@@ -1,0 +1,387 @@
+//! Session-API integration tests: the acceptance criteria of the
+//! Session redesign.
+//!
+//! * `Engine::run` is a thin wrapper over `sim::Session` — a manually
+//!   driven session (per-access `push`, mid-run `snapshot`s, observers
+//!   attached) must produce *byte-identical* `Stats`/`RunOutcome` for
+//!   every builtin workload × {baseline, tree+hpe} × two
+//!   oversubscription levels.
+//! * Snapshots are monotone: no counter ever decreases as accesses are
+//!   pushed.
+//! * A streaming-decode session over a `.uvmt` corpus entry matches the
+//!   materialized path exactly.
+//! * The two-tenant scheduler attributes every access/fault to a
+//!   tenant, summing to the combined run, and its Proportional mode is
+//!   byte-identical to the engine over `interleave(a, b)`.
+
+use uvmio::api::{StrategyCtx, StrategyRegistry};
+use uvmio::config::Scale;
+use uvmio::coordinator::{
+    MultiTenantScheduler, RunSpec, SchedulePolicy, TenantSpec,
+};
+use uvmio::corpus::{CorpusStore, TraceReader};
+use uvmio::sim::{
+    Arena, MetricsSnapshot, Observer, Session, SimEvent, Stats,
+};
+use uvmio::trace::multi::interleave;
+use uvmio::trace::workloads::Workload;
+use uvmio::trace::Trace;
+
+/// Build a registered strategy's policy for a spec (rule-based ctx).
+fn build_policy(
+    registry: &StrategyRegistry,
+    name: &str,
+    spec: &RunSpec<'_>,
+) -> Box<dyn uvmio::policy::Policy> {
+    registry
+        .get(name)
+        .unwrap()
+        .build(spec, &StrategyCtx::default())
+        .unwrap()
+}
+
+/// Counting observer: proves event delivery never perturbs the run.
+#[derive(Default)]
+struct Counter(usize);
+
+impl Observer for Counter {
+    fn on_event(&mut self, _event: &SimEvent, _stats: &Stats) {
+        self.0 += 1;
+    }
+}
+
+/// Acceptance criterion: all 11 builtin workloads × {baseline,
+/// tree-hpe} × {125%, 150%} — the engine path and a manually driven
+/// session (push loop + observers + periodic snapshots) must agree
+/// byte-for-byte.
+#[test]
+fn session_matches_engine_on_every_builtin_workload() {
+    let registry = StrategyRegistry::builtin();
+    for w in Workload::ALL {
+        let trace = w.generate(Scale::default(), 42);
+        for strategy in ["baseline", "tree-hpe"] {
+            for oversub in [125u32, 150] {
+                let spec = RunSpec::new(&trace, oversub);
+                let reference = registry
+                    .run(strategy, &spec, &StrategyCtx::default())
+                    .unwrap()
+                    .outcome;
+
+                let policy = build_policy(&registry, strategy, &spec);
+                let mut session = Session::new(
+                    spec.cfg.clone(),
+                    Arena::of_trace(&trace),
+                    policy,
+                );
+                session.add_observer(Box::new(Counter::default()));
+                let mut snaps = 0usize;
+                for (i, acc) in trace.accesses.iter().enumerate() {
+                    session.push(acc);
+                    if i % 1000 == 0 {
+                        // mid-run snapshots must not perturb anything
+                        let _ = session.snapshot();
+                        snaps += 1;
+                    }
+                }
+                assert!(snaps > 0);
+                let outcome = session.finish();
+                assert_eq!(
+                    outcome,
+                    reference,
+                    "{}/{strategy}@{oversub}%: session != engine",
+                    w.name()
+                );
+            }
+        }
+    }
+}
+
+/// Crash parity: when the engine path crashes, the push path crashes at
+/// the same access with the same stats.
+#[test]
+fn session_crash_matches_engine_crash() {
+    let registry = StrategyRegistry::builtin();
+    let trace = Workload::Bicg.generate(Scale::default(), 42);
+    let spec = RunSpec::new(&trace, 150).with_crash_threshold(10);
+    let reference = registry
+        .run("baseline", &spec, &StrategyCtx::default())
+        .unwrap()
+        .outcome;
+    assert!(reference.crashed);
+
+    let policy = build_policy(&registry, "baseline", &spec);
+    let mut session =
+        Session::new(spec.cfg.clone(), Arena::of_trace(&trace), policy)
+            .with_crash_threshold(10);
+    for acc in &trace.accesses {
+        if session.push(acc).crashed {
+            break;
+        }
+    }
+    assert_eq!(session.finish(), reference);
+}
+
+fn assert_monotone(prev: &MetricsSnapshot, next: &MetricsSnapshot) {
+    let pairs = [
+        (prev.accesses, next.accesses, "accesses"),
+        (prev.instructions, next.instructions, "instructions"),
+        (prev.cycles, next.cycles, "cycles"),
+        (prev.tlb_hits, next.tlb_hits, "tlb_hits"),
+        (prev.tlb_misses, next.tlb_misses, "tlb_misses"),
+        (prev.hits, next.hits, "hits"),
+        (prev.faults, next.faults, "faults"),
+        (prev.migrations, next.migrations, "migrations"),
+        (prev.evictions, next.evictions, "evictions"),
+        (prev.writebacks, next.writebacks, "writebacks"),
+        (prev.zero_copy, next.zero_copy, "zero_copy"),
+        (prev.delayed_remote, next.delayed_remote, "delayed_remote"),
+        (prev.prefetches, next.prefetches, "prefetches"),
+        (prev.garbage_prefetches, next.garbage_prefetches, "garbage"),
+        (prev.thrash_events, next.thrash_events, "thrash_events"),
+        (prev.thrashed_unique, next.thrashed_unique, "thrashed_unique"),
+        (prev.evicted_unique, next.evicted_unique, "evicted_unique"),
+    ];
+    for (p, n, name) in pairs {
+        assert!(p <= n, "{name} went backwards: {p} -> {n}");
+    }
+}
+
+/// Snapshot monotonicity: sampled after every push across a thrashing
+/// run, no counter ever decreases, and the final snapshot agrees with
+/// the final stats.
+#[test]
+fn snapshots_are_monotone() {
+    let registry = StrategyRegistry::builtin();
+    let trace = Workload::Atax.generate(Scale::default(), 42);
+    let spec = RunSpec::new(&trace, 150);
+    let policy = build_policy(&registry, "baseline", &spec);
+    let mut session =
+        Session::new(spec.cfg.clone(), Arena::of_trace(&trace), policy);
+    let mut prev = session.snapshot();
+    for acc in &trace.accesses {
+        session.push(acc);
+        let next = session.snapshot();
+        assert_monotone(&prev, &next);
+        prev = next;
+    }
+    assert_eq!(prev.accesses, trace.accesses.len() as u64);
+    let outcome = session.finish();
+    assert_eq!(outcome.stats.snapshot().thrash_events, prev.thrash_events);
+}
+
+/// Acceptance criterion: a streaming-decode session over a `.uvmt`
+/// corpus entry produces the same stats as the materialized path — the
+/// access vector is never rebuilt in memory.
+#[test]
+fn streaming_uvmt_session_matches_materialized_run() {
+    let dir = std::env::temp_dir().join(format!(
+        "uvmio-session-stream-{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    let store = CorpusStore::open(&dir).unwrap();
+    let registry = StrategyRegistry::builtin();
+
+    for w in [Workload::Bicg, Workload::Nw] {
+        let trace = w.generate(Scale::default(), 42);
+        let key = CorpusStore::generated_key(&trace.name, Scale::default(), 42);
+        store.put(&key, &trace).unwrap();
+
+        let spec = RunSpec::new(&trace, 125);
+        let reference = registry
+            .run("baseline", &spec, &StrategyCtx::default())
+            .unwrap()
+            .outcome;
+
+        // streaming path: arena and geometry from the header only
+        let mut reader = store.reader(&key).unwrap().unwrap();
+        let arena = Arena::new(
+            reader.meta().working_set_pages,
+            reader.meta().allocations.clone(),
+        );
+        assert_eq!(reader.meta().touched_pages, trace.touched_pages);
+        let policy = build_policy(&registry, "baseline", &spec);
+        let mut session = Session::new(spec.cfg.clone(), arena, policy);
+        session.feed_results(&mut reader).unwrap();
+        let outcome = session.finish();
+        assert_eq!(outcome, reference, "{}: streaming != materialized", w.name());
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Two-tenant scheduler: per-tenant fault attribution sums to the
+/// combined run, and Proportional mode equals the engine over the
+/// pre-interleaved trace (the compatibility contract).
+#[test]
+fn two_tenant_scheduler_attribution_sums_to_combined_run() {
+    let registry = StrategyRegistry::builtin();
+    let a = Workload::Atax.generate(Scale::default(), 42);
+    let b = Workload::TwoDConv.generate(Scale::default(), 43);
+    let merged = interleave(&a, &b);
+    let spec = RunSpec::new(&merged, 125);
+    let reference = registry
+        .run("baseline", &spec, &StrategyCtx::default())
+        .unwrap()
+        .outcome;
+
+    let policy = build_policy(&registry, "baseline", &spec);
+    let out = MultiTenantScheduler::new()
+        .with_schedule(SchedulePolicy::Proportional)
+        .add_tenant(TenantSpec::from_trace(&a))
+        .add_tenant(TenantSpec::from_trace(&b))
+        .run(125, policy)
+        .unwrap();
+
+    assert_eq!(out.outcome, reference, "scheduler != engine(interleave)");
+    assert_eq!(out.tenants.len(), 2);
+    let fault_sum: u64 = out.tenants.iter().map(|t| t.faults).sum();
+    let acc_sum: u64 = out.tenants.iter().map(|t| t.accesses).sum();
+    let hit_sum: u64 = out.tenants.iter().map(|t| t.hits).sum();
+    assert_eq!(fault_sum, out.outcome.stats.faults, "fault attribution");
+    assert_eq!(acc_sum, out.outcome.stats.accesses, "access attribution");
+    assert_eq!(hit_sum, out.outcome.stats.hits, "hit attribution");
+    for t in &out.tenants {
+        assert_eq!(t.hits + t.faults, t.accesses, "{}: hits+faults", t.name);
+        assert!(t.faults > 0, "{}: a live tenant must fault", t.name);
+    }
+}
+
+/// Tenants can stream from `.uvmt` readers — the multi-tenant run never
+/// materializes either access vector, and still matches the
+/// trace-backed scheduler bit-for-bit.
+#[test]
+fn scheduler_streams_tenants_from_corpus() {
+    let dir = std::env::temp_dir().join(format!(
+        "uvmio-session-mt-stream-{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    let store = CorpusStore::open(&dir).unwrap();
+    let registry = StrategyRegistry::builtin();
+    let a = Workload::StreamTriad.generate(Scale::default(), 1);
+    let b = Workload::Hotspot.generate(Scale::default(), 2);
+    let (ka, kb) = (
+        CorpusStore::generated_key(&a.name, Scale::default(), 1),
+        CorpusStore::generated_key(&b.name, Scale::default(), 2),
+    );
+    store.put(&ka, &a).unwrap();
+    store.put(&kb, &b).unwrap();
+
+    let merged = interleave(&a, &b);
+    let spec = RunSpec::new(&merged, 125);
+    let trace_backed = MultiTenantScheduler::new()
+        .add_tenant(TenantSpec::from_trace(&a))
+        .add_tenant(TenantSpec::from_trace(&b))
+        .run(125, build_policy(&registry, "baseline", &spec))
+        .unwrap();
+
+    let ra: TraceReader<_> = store.reader(&ka).unwrap().unwrap();
+    let rb: TraceReader<_> = store.reader(&kb).unwrap().unwrap();
+    let streamed = MultiTenantScheduler::new()
+        .add_tenant(TenantSpec::from_reader(ra))
+        .add_tenant(TenantSpec::from_reader(rb))
+        .run(125, build_policy(&registry, "baseline", &spec))
+        .unwrap();
+
+    assert_eq!(streamed.outcome, trace_backed.outcome);
+    assert_eq!(streamed.tenants, trace_backed.tenants);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The FaultAware schedule produces a different (contention-reactive)
+/// execution than the offline interleave — the capability pre-composed
+/// traces cannot express — while conserving per-tenant totals.
+#[test]
+fn fault_aware_schedule_diverges_from_offline_interleave() {
+    let registry = StrategyRegistry::builtin();
+    let a = Workload::Atax.generate(Scale::default(), 42);
+    let b = Workload::StreamTriad.generate(Scale::default(), 43);
+    let merged = interleave(&a, &b);
+    let spec = RunSpec::new(&merged, 125);
+
+    let proportional = MultiTenantScheduler::new()
+        .add_tenant(TenantSpec::from_trace(&a))
+        .add_tenant(TenantSpec::from_trace(&b))
+        .run(125, build_policy(&registry, "baseline", &spec))
+        .unwrap();
+    let fault_aware = MultiTenantScheduler::new()
+        .with_schedule(SchedulePolicy::FaultAware)
+        .add_tenant(TenantSpec::from_trace(&a))
+        .add_tenant(TenantSpec::from_trace(&b))
+        .run(125, build_policy(&registry, "baseline", &spec))
+        .unwrap();
+
+    // both runs consume every access of both tenants
+    for out in [&proportional, &fault_aware] {
+        assert_eq!(
+            out.tenants[0].accesses,
+            a.accesses.len() as u64,
+            "tenant A fully consumed"
+        );
+        assert_eq!(out.tenants[1].accesses, b.accesses.len() as u64);
+    }
+    // but the online, state-dependent schedule is a different execution
+    assert_ne!(
+        proportional.outcome.stats.cycles,
+        fault_aware.outcome.stats.cycles,
+        "FaultAware must not degenerate to the offline merge order"
+    );
+}
+
+/// Determinism: driving the same session twice (including through the
+/// registry observer path) yields identical outcomes.
+#[test]
+fn observed_runs_are_deterministic() {
+    let registry = StrategyRegistry::builtin();
+    let trace = Workload::Nw.generate(Scale::default(), 42);
+    let spec = RunSpec::new(&trace, 125);
+    let a = registry
+        .run_observed(
+            "baseline",
+            &spec,
+            &StrategyCtx::default(),
+            vec![Box::new(Counter::default())],
+        )
+        .unwrap();
+    let b = registry
+        .run("baseline", &spec, &StrategyCtx::default())
+        .unwrap();
+    assert_eq!(a.outcome, b.outcome, "observers changed the outcome");
+}
+
+/// Sanity for external streams: feeding a hand-built trace through the
+/// public API gives the documented hit/fault accounting.
+#[test]
+fn feed_results_propagates_stream_errors() {
+    let registry = StrategyRegistry::builtin();
+    let trace = Trace::from_accesses(
+        "tiny",
+        4,
+        1,
+        (0..4u64)
+            .map(|p| uvmio::trace::Access {
+                page: p,
+                pc: 0,
+                tb: 0,
+                kernel: 0,
+                inst_gap: 1,
+                is_write: false,
+            })
+            .collect(),
+    );
+    let spec = RunSpec::new(&trace, 100);
+    let policy = build_policy(&registry, "demand-lru", &spec);
+    let mut session =
+        Session::new(spec.cfg.clone(), Arena::of_trace(&trace), policy);
+    let stream = trace.accesses.iter().enumerate().map(|(i, a)| {
+        if i == 2 {
+            Err("stream broke")
+        } else {
+            Ok(*a)
+        }
+    });
+    let err = session.feed_results(stream).unwrap_err();
+    assert_eq!(err, "stream broke");
+    // the two accesses before the error were simulated
+    assert_eq!(session.stats().accesses, 2);
+}
