@@ -92,5 +92,54 @@ fn main() {
             }
             std::hint::black_box(session.finish());
         });
+        // the clock refactor must not tax the hot path under a swapped
+        // cost model either
+        b.bench("session/BICG/coherent-link", events, || {
+            use uvmio::sim::CoherentLink;
+            let policy = registry
+                .get("baseline")
+                .unwrap()
+                .build(&spec, &ctx)
+                .unwrap();
+            let mut session =
+                Session::new(spec.cfg.clone(), Arena::of_trace(&trace), policy)
+                    .with_cost_model(Box::new(CoherentLink::new(&spec.cfg)));
+            for acc in &trace.accesses {
+                session.push(acc);
+            }
+            std::hint::black_box(session.finish());
+        });
+    }
+
+    // online two-tenant scheduler: pick + rebase + attribution overhead
+    // per access, across the reactive schedules
+    {
+        use uvmio::coordinator::{
+            MultiTenantScheduler, SchedulePolicy, TenantSpec,
+        };
+        let a = Workload::Atax.generate(Scale::default(), 42);
+        let bt = Workload::Hotspot.generate(Scale::default(), 43);
+        let events = (a.accesses.len() + bt.accesses.len()) as u64;
+        for (name, schedule) in [
+            ("proportional", SchedulePolicy::Proportional),
+            ("bandwidth-fair", SchedulePolicy::BandwidthFair),
+        ] {
+            let spec = RunSpec::new(&a, 125);
+            let bench_name = format!("scheduler/ATAX+Hotspot/{name}");
+            b.bench(&bench_name, events, || {
+                let policy = registry
+                    .get("baseline")
+                    .unwrap()
+                    .build(&spec, &ctx)
+                    .unwrap();
+                let out = MultiTenantScheduler::new()
+                    .with_schedule(schedule)
+                    .add_tenant(TenantSpec::from_trace(&a))
+                    .add_tenant(TenantSpec::from_trace(&bt))
+                    .run(125, policy)
+                    .unwrap();
+                std::hint::black_box(out);
+            });
+        }
     }
 }

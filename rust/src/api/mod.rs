@@ -50,8 +50,11 @@ pub mod sink;
 pub mod sweep;
 
 pub use registry::{
-    CellResult, PaperTable, StrategyCtx, StrategyFactory, StrategyRegistry,
-    StrategySpec,
+    apply_prediction_overhead, CellResult, PaperTable, StrategyCtx,
+    StrategyFactory, StrategyRegistry, StrategySpec,
 };
 pub use sink::{ConsoleSink, CsvSink, JsonlSink, record_to_json, SweepSink};
-pub use sweep::{CellId, CellRecord, SweepRunner, SweepSpec, SweepWorkload};
+pub use sweep::{
+    CellId, CellRecord, ProgressObserver, ScheduledWorkload, SweepRunner,
+    SweepSpec, SweepWorkload,
+};

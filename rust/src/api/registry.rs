@@ -20,7 +20,8 @@ use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::coordinator::{feat_dims, RunSpec};
+use crate::config::SimConfig;
+use crate::coordinator::{feat_dims, RunSpec, TenantReport};
 use crate::policy::belady::Belady;
 use crate::policy::composite::Composite;
 use crate::policy::hpe::Hpe;
@@ -28,7 +29,7 @@ use crate::policy::lru::Lru;
 use crate::policy::random::RandomEvict;
 use crate::policy::tree_prefetch::TreePrefetcher;
 use crate::policy::uvmsmart::UvmSmart;
-use crate::policy::{DemandOnly, Policy};
+use crate::policy::{DemandOnly, Policy, PolicyInstrumentation};
 use crate::predictor::{FeatDims, IntelligentConfig, IntelligentPolicy};
 use crate::runtime::{ModelRuntime, Runtime};
 use crate::sim::{Arena, Observer, RunOutcome, Session};
@@ -105,6 +106,11 @@ pub struct StrategySpec {
     /// true when the factory needs a compiled model in the ctx; such
     /// strategies run on the sweep runner's serialized lane
     pub needs_artifacts: bool,
+    /// true when the factory reads `spec.trace` (whole-trace knowledge,
+    /// e.g. the Belady oracle); such strategies cannot run on streamed
+    /// sessions or scheduler-backed sweep cells, where no materialized
+    /// merged trace exists
+    pub needs_trace: bool,
     /// paper-table membership (metadata)
     pub tables: Vec<PaperTable>,
     factory: StrategyFactory,
@@ -123,6 +129,7 @@ impl StrategySpec {
             name: name.to_ascii_lowercase(),
             display: display.to_string(),
             needs_artifacts: false,
+            needs_trace: false,
             tables: Vec::new(),
             factory: Arc::new(factory),
         }
@@ -131,6 +138,14 @@ impl StrategySpec {
     /// Mark the strategy as requiring AOT artifacts (model in the ctx).
     pub fn requiring_artifacts(mut self) -> StrategySpec {
         self.needs_artifacts = true;
+        self
+    }
+
+    /// Mark the strategy's factory as reading `spec.trace` (offline
+    /// whole-trace knowledge — it cannot drive streamed or
+    /// scheduler-backed runs).
+    pub fn requiring_trace(mut self) -> StrategySpec {
+        self.needs_trace = true;
         self
     }
 
@@ -164,6 +179,33 @@ pub struct CellResult {
     pub patterns_used: usize,
     /// final online training loss (NaN for rule-based strategies)
     pub last_loss: f32,
+    /// per-tenant attribution when the cell ran through the online
+    /// [`crate::coordinator::MultiTenantScheduler`] (scheduler-backed
+    /// sweep cells); empty for single-tenant cells
+    pub tenants: Vec<TenantReport>,
+}
+
+/// The §V-C prediction-overhead post-pass, applied uniformly by every
+/// execution path ([`StrategyRegistry::run`], scheduler-backed sweep
+/// cells, `repro simulate --stream`): one `prediction_overhead` charge
+/// per batched predictor invocation, additive on the final cycle count —
+/// equivalent to charging inline, since nothing else in the timing model
+/// depends on absolute time. No-op for rule-based runs
+/// (`inference_calls == 0`). The overhead lands on the *combined* stats
+/// only; per-tenant [`TenantReport::cycles`] rows keep summing to the
+/// simulated (pre-post-pass) cycles.
+pub fn apply_prediction_overhead(
+    outcome: &mut RunOutcome,
+    instr: &PolicyInstrumentation,
+    cfg: &SimConfig,
+) {
+    if instr.inference_calls == 0 {
+        return;
+    }
+    let overhead = cfg.prediction_overhead * instr.inference_calls;
+    outcome.stats.cycles += overhead;
+    outcome.stats.prediction_overhead_cycles = overhead;
+    outcome.stats.predictions = instr.predictions;
 }
 
 /// Open registry of named strategies. Construction order is preserved
@@ -199,6 +241,7 @@ impl StrategyRegistry {
             "Demand.+Belady.",
             demand_belady_factory,
         )
+        .requiring_trace()
         .in_tables(&[TableI, TableVI]));
         reg(StrategySpec::new("demand-lru", "Demand.+LRU", demand_lru_factory));
         reg(StrategySpec::new(
@@ -307,12 +350,7 @@ impl StrategyRegistry {
         session.feed(spec.trace.accesses.iter().copied());
         let instr = session.policy().instrumentation();
         let mut outcome = session.finish();
-        if instr.inference_calls > 0 {
-            let overhead = spec.cfg.prediction_overhead * instr.inference_calls;
-            outcome.stats.cycles += overhead;
-            outcome.stats.prediction_overhead_cycles = overhead;
-            outcome.stats.predictions = instr.predictions;
-        }
+        apply_prediction_overhead(&mut outcome, &instr, &spec.cfg);
         Ok(CellResult {
             outcome,
             strategy: entry.name.clone(),
@@ -321,6 +359,7 @@ impl StrategyRegistry {
             model_predictions: instr.predictions,
             patterns_used: instr.patterns_used,
             last_loss: instr.last_loss,
+            tenants: Vec::new(),
         })
     }
 }

@@ -155,6 +155,28 @@ pub fn record_to_json(rec: &CellRecord) -> Json {
                     Json::Null
                 },
             );
+            // scheduler-backed cells: per-tenant attribution rows
+            // (cycles sum to the simulated combined run)
+            if !r.tenants.is_empty() {
+                let rows = r
+                    .tenants
+                    .iter()
+                    .map(|t| {
+                        let mut o = BTreeMap::new();
+                        o.insert("name".to_string(), Json::Str(t.name.clone()));
+                        let mut num = |k: &str, v: u64| {
+                            o.insert(k.to_string(), Json::Num(v as f64));
+                        };
+                        num("accesses", t.accesses);
+                        num("hits", t.hits);
+                        num("faults", t.faults);
+                        num("cycles", t.cycles);
+                        num("link_cycles", t.link_cycles);
+                        Json::Obj(o)
+                    })
+                    .collect();
+                m.insert("tenants".into(), Json::Arr(rows));
+            }
         }
         Err(e) => {
             m.insert("error".into(), Json::Str(e.clone()));

@@ -20,7 +20,11 @@
 //! across processes); otherwise each `run` uses a private one. Workload slots are open: a builtin
 //! generator or any [`TraceSource`](crate::corpus::TraceSource) — a
 //! corpus entry, a CSV dump, a UVM fault log, or an `A+B` multi-tenant
-//! composition — via [`SweepWorkload`].
+//! composition — via [`SweepWorkload`]. A [`ScheduledWorkload`] slot
+//! instead runs its tenants through the *online*
+//! [`MultiTenantScheduler`] (one shared session, per-tenant cycle/fault
+//! attribution on the [`CellResult`]), rather than replaying an offline
+//! pre-interleave.
 
 use std::collections::BTreeMap;
 use std::fmt;
@@ -30,22 +34,62 @@ use std::thread;
 
 use anyhow::{bail, Result};
 
-use crate::config::Scale;
-use crate::coordinator::RunSpec;
+use crate::config::{Scale, SimConfig};
+use crate::coordinator::{
+    MultiTenantScheduler, RunSpec, SchedulePolicy, TenantSpec,
+};
 use crate::corpus::{TraceCache, TraceSource};
 use crate::sim::{Observer, SimEvent, Stats};
 use crate::trace::workloads::Workload;
 use crate::trace::Trace;
 
-use super::registry::{CellResult, StrategyCtx, StrategyRegistry};
+use super::registry::{
+    apply_prediction_overhead, CellResult, StrategyCtx, StrategyRegistry,
+};
 use super::sink::SweepSink;
 
-/// One workload slot of a sweep: a builtin synthetic generator, or any
-/// trace source (corpus entry, imported file, multi-tenant composition).
+/// An online multi-tenant sweep cell: N tenant trace sources time-sliced
+/// through the [`MultiTenantScheduler`] under one [`SchedulePolicy`],
+/// instead of being pre-interleaved offline into a single trace. For
+/// **two** tenants under [`SchedulePolicy::Proportional`] the cell's
+/// stats are byte-identical to the offline `A+B`
+/// [`crate::corpus::InterleaveSource`] cell (the scheduler's
+/// compatibility contract; with 3+ tenants the flat proportional merge
+/// intentionally differs from a nested pairwise `A+B+C` interleave, in
+/// both merge order and per-tenant seeding). The other schedules react
+/// to simulation state — per-tenant faults, link occupancy — which no
+/// offline merge can express. The resulting [`CellResult`] carries the
+/// per-tenant attribution rows.
+#[derive(Clone)]
+pub struct ScheduledWorkload {
+    pub tenants: Vec<Arc<dyn TraceSource>>,
+    pub schedule: SchedulePolicy,
+}
+
+impl ScheduledWorkload {
+    pub fn new(
+        tenants: Vec<Arc<dyn TraceSource>>,
+        schedule: SchedulePolicy,
+    ) -> ScheduledWorkload {
+        ScheduledWorkload { tenants, schedule }
+    }
+
+    /// Display name: `sched:A+B@fault-aware`.
+    pub fn name(&self) -> String {
+        let tenants: Vec<String> =
+            self.tenants.iter().map(|t| t.name()).collect();
+        format!("sched:{}@{}", tenants.join("+"), self.schedule.name())
+    }
+}
+
+/// One workload slot of a sweep: a builtin synthetic generator, any
+/// trace source (corpus entry, imported file, offline multi-tenant
+/// composition), or an online scheduler-backed multi-tenant cell.
 #[derive(Clone)]
 pub enum SweepWorkload {
     Builtin(Workload),
     Source(Arc<dyn TraceSource>),
+    Scheduled(ScheduledWorkload),
 }
 
 impl SweepWorkload {
@@ -54,19 +98,7 @@ impl SweepWorkload {
         match self {
             SweepWorkload::Builtin(w) => w.name().to_string(),
             SweepWorkload::Source(s) => s.name(),
-        }
-    }
-
-    /// The shared trace for one cell, via the cache.
-    fn load_cached(
-        &self,
-        cache: &TraceCache,
-        scale: Scale,
-        seed: u64,
-    ) -> Result<Arc<Trace>> {
-        match self {
-            SweepWorkload::Builtin(w) => cache.get_builtin(*w, scale, seed),
-            SweepWorkload::Source(s) => cache.get_source(s.as_ref(), scale, seed),
+            SweepWorkload::Scheduled(s) => s.name(),
         }
     }
 }
@@ -86,6 +118,12 @@ impl From<Workload> for SweepWorkload {
 impl From<Arc<dyn TraceSource>> for SweepWorkload {
     fn from(s: Arc<dyn TraceSource>) -> SweepWorkload {
         SweepWorkload::Source(s)
+    }
+}
+
+impl From<ScheduledWorkload> for SweepWorkload {
+    fn from(s: ScheduledWorkload) -> SweepWorkload {
+        SweepWorkload::Scheduled(s)
     }
 }
 
@@ -376,11 +414,41 @@ fn run_one(
         oversub: cell.oversub,
         seed: cell.seed,
     };
-    let trace = match cell.workload.load_cached(cache, sweep.scale, cell.seed) {
-        Ok(t) => t,
-        Err(e) => {
-            return CellRecord { cell: id, result: Err(format!("{e:#}")) };
+    let label = format!(
+        "{}/{}@{}% r{}",
+        id.workload, id.strategy, id.oversub, id.seed
+    );
+    let result = match &cell.workload {
+        SweepWorkload::Scheduled(s) => run_scheduled_cell(
+            registry, sweep, cell, s, &label, ctx, cache, progress_every,
+        ),
+        _ => run_single_cell(
+            registry, sweep, cell, &label, ctx, cache, progress_every,
+        ),
+    }
+    .map_err(|e| format!("{e:#}"));
+    CellRecord { cell: id, result }
+}
+
+/// A single-tenant cell: one shared trace through the registry's
+/// session path.
+fn run_single_cell(
+    registry: &StrategyRegistry,
+    sweep: &SweepSpec,
+    cell: &Cell,
+    label: &str,
+    ctx: &StrategyCtx,
+    cache: &TraceCache,
+    progress_every: Option<u64>,
+) -> Result<CellResult> {
+    let trace = match &cell.workload {
+        SweepWorkload::Builtin(w) => {
+            cache.get_builtin(*w, sweep.scale, cell.seed)?
         }
+        SweepWorkload::Source(s) => {
+            cache.get_source(s.as_ref(), sweep.scale, cell.seed)?
+        }
+        SweepWorkload::Scheduled(_) => unreachable!("dispatched in run_one"),
     };
     let mut spec = RunSpec::new(&trace, cell.oversub);
     if let Some(t) = sweep.crash_threshold_for(cell.oversub) {
@@ -388,25 +456,115 @@ fn run_one(
     }
     let observers: Vec<Box<dyn Observer>> = match progress_every {
         Some(every) => vec![Box::new(ProgressObserver::new(
-            format!(
-                "{}/{}@{}% r{}",
-                id.workload, id.strategy, id.oversub, id.seed
-            ),
+            label.to_string(),
             every,
             trace.accesses.len() as u64,
         ))],
         None => Vec::new(),
     };
-    let result = registry
-        .run_observed(&cell.strategy, &spec, ctx, observers)
-        .map_err(|e| format!("{e:#}"));
-    CellRecord { cell: id, result }
+    registry.run_observed(&cell.strategy, &spec, ctx, observers)
 }
 
-/// Per-cell progress reporter: prints a snapshot line to stderr every
+/// A scheduler-backed multi-tenant cell: the tenants' traces are loaded
+/// through the same shared cache, then time-sliced *online* through the
+/// [`MultiTenantScheduler`] — one device memory, one interconnect, one
+/// policy — with the per-tenant attribution rows carried on the
+/// [`CellResult`].
+#[allow(clippy::too_many_arguments)]
+fn run_scheduled_cell(
+    registry: &StrategyRegistry,
+    sweep: &SweepSpec,
+    cell: &Cell,
+    sched_workload: &ScheduledWorkload,
+    label: &str,
+    ctx: &StrategyCtx,
+    cache: &TraceCache,
+    progress_every: Option<u64>,
+) -> Result<CellResult> {
+    let entry = registry.get(&cell.strategy)?;
+    if entry.needs_trace {
+        bail!(
+            "strategy '{}' needs the full merged trace (offline oracle); \
+             run it on an offline interleaved 'A+B' source instead of a \
+             scheduled cell",
+            entry.name
+        );
+    }
+    if sched_workload.tenants.is_empty() {
+        bail!("scheduled cell '{}' has no tenants", sched_workload.name());
+    }
+    let mut traces: Vec<Arc<Trace>> =
+        Vec::with_capacity(sched_workload.tenants.len());
+    for (i, t) in sched_workload.tenants.iter().enumerate() {
+        // tenant i's seed is perturbed by its index, so two copies of
+        // one generator still produce distinct streams; for TWO tenants
+        // this matches InterleaveSource's right-hand seed ^ 1 rule, so
+        // `sched:A+B@proportional` reproduces the offline `A+B` cell
+        // byte-for-byte (3+ tenants have no offline equivalent to match
+        // — nested pairwise interleave seeds and merges differently)
+        traces.push(cache.get_source(
+            t.as_ref(),
+            sweep.scale,
+            cell.seed ^ i as u64,
+        )?);
+    }
+
+    // the combined capacity the scheduler will also derive (same sum,
+    // same formula) — computed here so capacity-aware factories
+    // (uvmsmart) see the real shared-memory size
+    let touched: u64 = traces.iter().map(|t| t.touched_pages).sum();
+    let cfg =
+        SimConfig::default().with_oversubscription(touched, cell.oversub);
+    let spec = RunSpec {
+        trace: &traces[0],
+        oversub_percent: cell.oversub,
+        cfg,
+        crash_threshold: sweep.crash_threshold_for(cell.oversub),
+    };
+    let policy = entry.build(&spec, ctx)?;
+
+    let mut sched = MultiTenantScheduler::new()
+        .with_schedule(sched_workload.schedule)
+        .with_config(spec.cfg.clone());
+    for t in &traces {
+        sched = sched.add_tenant(TenantSpec::from_trace(t));
+    }
+    if let Some(t) = spec.crash_threshold {
+        sched = sched.with_crash_threshold(t);
+    }
+    if let Some(every) = progress_every {
+        let total: u64 = traces.iter().map(|t| t.accesses.len() as u64).sum();
+        sched = sched.add_observer(Box::new(ProgressObserver::new(
+            label.to_string(),
+            every,
+            total,
+        )));
+    }
+
+    let out = sched.run(cell.oversub, policy)?;
+    let instr = out.instrumentation;
+    let mut outcome = out.outcome;
+    // the overhead lands on the combined run only — TenantReport.cycles
+    // keeps summing to the simulated cycles (see the helper's docs)
+    apply_prediction_overhead(&mut outcome, &instr, &spec.cfg);
+    Ok(CellResult {
+        outcome,
+        strategy: entry.name.clone(),
+        display: entry.display.clone(),
+        inference_calls: instr.inference_calls,
+        model_predictions: instr.predictions,
+        patterns_used: instr.patterns_used,
+        last_loss: instr.last_loss,
+        tenants: out.tenants,
+    })
+}
+
+/// Per-run progress reporter: prints a snapshot line to stderr every
 /// `every` faults (faults are where simulated time is actually spent, so
-/// hit-heavy stretches stay silent), plus one line on crash.
-struct ProgressObserver {
+/// hit-heavy stretches stay silent), plus one line on crash. Attachable
+/// to any session-backed run — sweep cells, scheduler runs,
+/// `repro simulate --stream`.
+pub struct ProgressObserver {
     label: String,
     every: u64,
     next_at: u64,
@@ -414,7 +572,8 @@ struct ProgressObserver {
 }
 
 impl ProgressObserver {
-    fn new(label: String, every: u64, total_accesses: u64) -> ProgressObserver {
+    /// `total_accesses` drives the percent column (0 = unknown).
+    pub fn new(label: String, every: u64, total_accesses: u64) -> ProgressObserver {
         ProgressObserver { label, every, next_at: every, total_accesses }
     }
 

@@ -83,6 +83,14 @@ impl Default for SimConfig {
 }
 
 impl SimConfig {
+    /// SM-visible latency of a resident (device-DRAM) access: DRAM
+    /// latency divided by the warp-overlap factor, integer division —
+    /// the Table V semantics [`crate::sim::clock::TableV`] prices
+    /// [`crate::sim::clock::CostEvent::ResidentHit`] with.
+    pub fn resident_access_latency(&self) -> u64 {
+        self.dram_latency / self.warp_overlap
+    }
+
     /// Capacity for an oversubscription level in percent: 125 means the
     /// working set is 125% of device memory, i.e. capacity = WS/1.25.
     pub fn with_oversubscription(mut self, working_set_pages: u64, percent: u32) -> Self {

@@ -10,13 +10,17 @@
 //! sample streams rather than grid cells, and the online
 //! [`MultiTenantScheduler`]: N live tenant streams (materialized traces
 //! or streaming `.uvmt` readers) time-sliced over one shared session —
-//! one device memory, one link, one policy — with per-tenant fault
-//! attribution. `trace::multi::interleave` remains the offline
-//! compatibility source; the scheduler's
+//! one device memory, one [`crate::sim::Interconnect`], one policy —
+//! with per-tenant fault *and cycle* attribution (every charge lands on
+//! the issuing tenant at the [`crate::sim::Clock::charge`] choke
+//! point). `trace::multi::interleave` remains the offline compatibility
+//! source; the scheduler's
 //! [`SchedulePolicy::Proportional`](multi::SchedulePolicy) mode
 //! reproduces it bit-for-bit while
-//! [`SchedulePolicy::FaultAware`](multi::SchedulePolicy) reacts to
-//! simulation state the way an offline merge never can.
+//! [`SchedulePolicy::FaultAware`](multi::SchedulePolicy) and
+//! [`SchedulePolicy::BandwidthFair`](multi::SchedulePolicy) react to
+//! simulation state (fault counts, link occupancy) the way an offline
+//! merge never can.
 
 pub mod driver;
 pub mod multi;

@@ -12,11 +12,19 @@
 //! link, one policy — so tenant B's working set really does evict
 //! tenant A's pages mid-run, and the schedule itself may depend on
 //! simulation state ([`SchedulePolicy::FaultAware`] throttles the
-//! tenant that faults most, something an offline interleave cannot
-//! express). Under [`SchedulePolicy::Proportional`] the scheduler
-//! reproduces `interleave`'s merge order exactly, so the old path
-//! remains available as a byte-identical compatibility mode (pinned by
-//! the `scheduler_matches_interleaved_engine` test).
+//! tenant that faults most; [`SchedulePolicy::BandwidthFair`] throttles
+//! the tenant hogging the shared [`crate::sim::Interconnect`] — neither
+//! is expressible offline). Under [`SchedulePolicy::Proportional`] the
+//! scheduler reproduces `interleave`'s merge order exactly, so the old
+//! path remains available as a byte-identical compatibility mode
+//! (pinned by the `scheduler_matches_interleaved_engine` test).
+//!
+//! Attribution rides the timing layer: the scheduler tells the session
+//! which tenant is issuing ([`Session::set_tenant`]) and every cycle
+//! charge lands on that tenant at the [`crate::sim::Clock::charge`]
+//! choke point, so each [`TenantReport`] carries `cycles` (summing
+//! exactly to the combined run) and `link_cycles` (its share of
+//! interconnect occupancy) next to the fault attribution.
 //!
 //! The accuracy harness below is unchanged: the predictor sees the
 //! merged access stream — more classes arriving faster, interleaved
@@ -36,7 +44,7 @@ use crate::predictor::features::{
 };
 use crate::predictor::model_table::ModelTable;
 use crate::runtime::ModelRuntime;
-use crate::sim::{Arena, RunOutcome, Session};
+use crate::sim::{Arena, Observer, RunOutcome, Session};
 use crate::trace::multi::{interleave, tenant_of};
 use crate::trace::{Access, Trace};
 use crate::util::rng::Rng;
@@ -68,6 +76,44 @@ pub enum SchedulePolicy {
     /// while well-behaved tenants make progress — the online behaviour
     /// an offline pre-interleave cannot express.
     FaultAware,
+    /// Bandwidth-fair: advance the tenant that has reserved the least
+    /// interconnect occupancy so far (ties to the lower index), per the
+    /// session's shared [`crate::sim::Interconnect`]. The tenant hogging
+    /// the link — demand transfers, prefetches, writebacks all count —
+    /// is throttled until the others catch up on link time.
+    BandwidthFair,
+}
+
+impl SchedulePolicy {
+    /// Every policy, in CLI/display order.
+    pub const ALL: [SchedulePolicy; 4] = [
+        SchedulePolicy::Proportional,
+        SchedulePolicy::RoundRobin,
+        SchedulePolicy::FaultAware,
+        SchedulePolicy::BandwidthFair,
+    ];
+
+    /// Stable kebab-case name (CLI selector, sweep cell labels).
+    pub fn name(&self) -> &'static str {
+        match self {
+            SchedulePolicy::Proportional => "proportional",
+            SchedulePolicy::RoundRobin => "round-robin",
+            SchedulePolicy::FaultAware => "fault-aware",
+            SchedulePolicy::BandwidthFair => "bandwidth-fair",
+        }
+    }
+
+    /// Parse a CLI selector (case-insensitive; `rr` is accepted for
+    /// round-robin).
+    pub fn from_name(s: &str) -> Option<SchedulePolicy> {
+        match s.to_ascii_lowercase().as_str() {
+            "proportional" => Some(SchedulePolicy::Proportional),
+            "round-robin" | "rr" => Some(SchedulePolicy::RoundRobin),
+            "fault-aware" => Some(SchedulePolicy::FaultAware),
+            "bandwidth-fair" => Some(SchedulePolicy::BandwidthFair),
+            _ => None,
+        }
+    }
 }
 
 /// One tenant of a multi-tenant run: a name, its local arena geometry,
@@ -135,8 +181,9 @@ impl<'a> TenantSpec<'a> {
 }
 
 /// Per-tenant attribution from a shared run. `accesses = hits + faults`
-/// per tenant, and the per-tenant columns sum to the combined
-/// [`RunOutcome`]'s stats (pinned by the scheduler tests).
+/// per tenant, and the per-tenant columns — including `cycles`, billed
+/// at the session's [`crate::sim::Clock::charge`] choke point — sum to
+/// the combined [`RunOutcome`]'s stats (pinned by the scheduler tests).
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct TenantReport {
     pub name: String,
@@ -145,6 +192,18 @@ pub struct TenantReport {
     pub accesses: u64,
     pub hits: u64,
     pub faults: u64,
+    /// cycles billed to this tenant; tenant cycles sum exactly to the
+    /// *simulated* combined run's `Stats.cycles` under every
+    /// [`SchedulePolicy`]. (One caveat downstream: sweep cells running
+    /// an inference strategy additionally apply the §V-C
+    /// prediction-overhead post-pass to the combined stats only — see
+    /// [`crate::api::apply_prediction_overhead`] — so there the record's
+    /// final `cycles` exceeds the tenant-row sum by exactly that
+    /// overhead.)
+    pub cycles: u64,
+    /// interconnect occupancy this tenant reserved (demand transfers,
+    /// prefetches, writebacks) — the bandwidth-fair schedule's signal
+    pub link_cycles: u64,
 }
 
 /// Result of a multi-tenant run: the combined outcome plus per-tenant
@@ -166,6 +225,7 @@ pub struct MultiTenantScheduler<'a> {
     schedule: SchedulePolicy,
     crash_threshold: Option<u64>,
     cfg: Option<SimConfig>,
+    observers: Vec<Box<dyn Observer + 'a>>,
 }
 
 impl<'a> MultiTenantScheduler<'a> {
@@ -196,6 +256,14 @@ impl<'a> MultiTenantScheduler<'a> {
         self
     }
 
+    /// Register a [`crate::sim::Observer`] on the shared session —
+    /// mid-run observability (progress snapshots, event tracing) for
+    /// the combined run, same as single-tenant sessions.
+    pub fn add_observer(mut self, observer: Box<dyn Observer + 'a>) -> Self {
+        self.observers.push(observer);
+        self
+    }
+
     /// Run all tenants to completion (or crash) under `policy`, sharing
     /// one device memory sized so the *combined* touched working set is
     /// oversubscribed by `oversub_percent`.
@@ -204,7 +272,13 @@ impl<'a> MultiTenantScheduler<'a> {
         oversub_percent: u32,
         policy: Box<dyn Policy + 'a>,
     ) -> Result<MultiOutcome> {
-        let MultiTenantScheduler { mut tenants, schedule, crash_threshold, cfg } = self;
+        let MultiTenantScheduler {
+            mut tenants,
+            schedule,
+            crash_threshold,
+            cfg,
+            observers,
+        } = self;
         if tenants.is_empty() {
             bail!("multi-tenant run needs at least one tenant");
         }
@@ -243,6 +317,9 @@ impl<'a> MultiTenantScheduler<'a> {
         if let Some(t) = crash_threshold {
             session = session.with_crash_threshold(t);
         }
+        for o in observers {
+            session.add_observer(o);
+        }
 
         let n = tenants.len();
         let mut reports: Vec<TenantReport> = tenants
@@ -254,6 +331,8 @@ impl<'a> MultiTenantScheduler<'a> {
                 accesses: 0,
                 hits: 0,
                 faults: 0,
+                cycles: 0,
+                link_cycles: 0,
             })
             .collect();
         // produced counts drive Proportional; `done` marks streams that
@@ -312,6 +391,7 @@ impl<'a> MultiTenantScheduler<'a> {
                 kernel: merged_kernel,
                 ..acc
             };
+            session.set_tenant(ti);
             let step = session.push(&global);
             reports[ti].accesses += 1;
             if step.hit {
@@ -319,6 +399,14 @@ impl<'a> MultiTenantScheduler<'a> {
             } else {
                 reports[ti].faults += 1;
             }
+            // refresh this tenant's attribution (only its own pushes can
+            // change it, so the other rows stay current): cycles feed
+            // the report, link occupancy additionally drives the
+            // BandwidthFair pick below
+            reports[ti].cycles =
+                session.tenant_cycles().get(ti).copied().unwrap_or(0);
+            reports[ti].link_cycles =
+                session.tenant_link_cycles().get(ti).copied().unwrap_or(0);
             if step.crashed {
                 break;
             }
@@ -377,6 +465,20 @@ fn pick_tenant(
                 match best {
                     Some((_, bf)) if bf <= f => {}
                     _ => best = Some((i, f)),
+                }
+            }
+            best.map(|(i, _)| i)
+        }
+        SchedulePolicy::BandwidthFair => {
+            // least interconnect occupancy reserved so far wins, ties to
+            // the lower index — the link hog is throttled until the
+            // others catch up on link time
+            let mut best: Option<(usize, u64)> = None;
+            for i in live {
+                let l = reports[i].link_cycles;
+                match best {
+                    Some((_, bl)) if bl <= l => {}
+                    _ => best = Some((i, l)),
                 }
             }
             best.map(|(i, _)| i)
@@ -607,6 +709,67 @@ mod tests {
         assert_eq!(out.tenants[1].hits, 63);
         let total = out.outcome.stats.faults;
         assert_eq!(total, 65);
+    }
+
+    #[test]
+    fn bandwidth_fair_throttles_the_link_hog() {
+        // tenant A streams fresh pages (every access reserves a demand
+        // transfer on the link); tenant B re-touches one page (one
+        // transfer ever). BandwidthFair must keep handing B the slot —
+        // B finishes with one fault while A pays the link bill.
+        let pa: Vec<u64> = (0..64).collect();
+        let pb: Vec<u64> = vec![0; 64];
+        let out = MultiTenantScheduler::new()
+            .with_schedule(SchedulePolicy::BandwidthFair)
+            .add_tenant(synthetic_tenant("hog", &pa))
+            .add_tenant(synthetic_tenant("light", &pb))
+            .run(100, demand_lru())
+            .unwrap();
+        assert_eq!(out.tenants[0].faults, 64);
+        assert_eq!(out.tenants[1].faults, 1);
+        assert_eq!(out.tenants[1].hits, 63);
+        assert!(
+            out.tenants[0].link_cycles > out.tenants[1].link_cycles,
+            "the hog ({}) must out-reserve the light tenant ({})",
+            out.tenants[0].link_cycles,
+            out.tenants[1].link_cycles
+        );
+    }
+
+    #[test]
+    fn tenant_cycles_sum_to_combined_run() {
+        let pa: Vec<u64> = (0..32).cycle().take(200).collect();
+        let pb: Vec<u64> = (0..8).cycle().take(200).collect();
+        for schedule in SchedulePolicy::ALL {
+            let out = MultiTenantScheduler::new()
+                .with_schedule(schedule)
+                .add_tenant(synthetic_tenant("a", &pa))
+                .add_tenant(synthetic_tenant("b", &pb))
+                .run(125, demand_lru())
+                .unwrap();
+            let cycle_sum: u64 = out.tenants.iter().map(|t| t.cycles).sum();
+            assert_eq!(
+                cycle_sum,
+                out.outcome.stats.cycles,
+                "{}: tenant cycles must sum to the combined run",
+                schedule.name()
+            );
+            for t in &out.tenants {
+                assert!(t.cycles > 0, "{}: live tenant bills cycles", t.name);
+            }
+        }
+    }
+
+    #[test]
+    fn schedule_policy_names_round_trip() {
+        for p in SchedulePolicy::ALL {
+            assert_eq!(SchedulePolicy::from_name(p.name()), Some(p));
+        }
+        assert_eq!(
+            SchedulePolicy::from_name("RR"),
+            Some(SchedulePolicy::RoundRobin)
+        );
+        assert_eq!(SchedulePolicy::from_name("nope"), None);
     }
 
     #[test]

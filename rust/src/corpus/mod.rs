@@ -63,7 +63,7 @@ pub mod store;
 pub use cache::{CacheStats, TraceCache};
 pub use format::{TraceReader, UvmtMeta};
 pub use source::{
-    parse_source, CorpusSource, CsvSource, FaultLogSource, GeneratorSource,
-    InterleaveSource, TraceSource,
+    parse_source, parse_tenants, CorpusSource, CsvSource, FaultLogSource,
+    GeneratorSource, InterleaveSource, TraceSource,
 };
 pub use store::{CorpusEntry, CorpusStore, GcReport, GC_TMP_GRACE};

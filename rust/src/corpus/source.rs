@@ -274,6 +274,40 @@ pub fn parse_source(
     }
 }
 
+/// Split a `+`-composed spec into its tenant sources *without*
+/// interleaving them — the input grammar of scheduler-backed
+/// (`sched:A+B`) sweep cells, where the merge order is decided online by
+/// [`crate::coordinator::MultiTenantScheduler`] instead of offline by
+/// [`crate::trace::multi::interleave`].
+///
+/// Same binding rules as [`parse_source`]: a `csv:`/`uvmlog:` prefix
+/// consumes the rest of the spec as a file path (so file sources compose
+/// only as the rightmost tenant). A spec with no `+` yields one tenant.
+pub fn parse_tenants(
+    spec: &str,
+    store: Option<&CorpusStore>,
+) -> Result<Vec<Arc<dyn TraceSource>>> {
+    let mut out: Vec<Arc<dyn TraceSource>> = Vec::new();
+    let mut rest = spec.trim();
+    loop {
+        if rest.starts_with("csv:") || rest.starts_with("uvmlog:") {
+            out.push(parse_source(rest, store)?);
+            break;
+        }
+        match rest.split_once('+') {
+            Some((head, tail)) => {
+                out.push(parse_source(head, store)?);
+                rest = tail;
+            }
+            None => {
+                out.push(parse_source(rest, store)?);
+                break;
+            }
+        }
+    }
+    Ok(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -317,6 +351,27 @@ mod tests {
         let err = parse_source("mystery", None).unwrap_err().to_string();
         assert!(err.contains("mystery"), "{err}");
         assert!(err.contains("--corpus"), "{err}");
+    }
+
+    #[test]
+    fn parse_tenants_splits_without_interleaving() {
+        let ts = parse_tenants("NW+Hotspot+ATAX", None).unwrap();
+        assert_eq!(ts.len(), 3);
+        assert_eq!(ts[0].name(), "NW");
+        assert_eq!(ts[1].name(), "Hotspot");
+        assert_eq!(ts[2].name(), "ATAX");
+
+        // a file source consumes the rest of the spec (path may hold +)
+        let ts = parse_tenants("NW+csv:/tmp/a+b.csv", None).unwrap();
+        assert_eq!(ts.len(), 2);
+        assert_eq!(ts[1].id(), "csv:/tmp/a+b.csv");
+
+        // no '+': a single tenant
+        let ts = parse_tenants("Hotspot", None).unwrap();
+        assert_eq!(ts.len(), 1);
+
+        assert!(parse_tenants("", None).is_err());
+        assert!(parse_tenants("NW+", None).is_err());
     }
 
     #[test]

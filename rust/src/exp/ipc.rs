@@ -50,9 +50,11 @@ pub fn fig3(ctx: &mut ExpContext) -> Result<()> {
 /// Fig 13: normalized IPC (vs UVMSmart) at prediction overheads of
 /// 1/10/20/50/100 µs per batched invocation, 125% oversubscription.
 ///
-/// The simulator's schedule is overhead-independent (the charge is
-/// additive, §V-C), so each benchmark runs ONCE and the sweep is exact
-/// arithmetic on the invocation count.
+/// The simulator's schedule is overhead-independent — the §V-C charge
+/// ([`crate::sim::CostEvent::Prediction`], priced by the cost model in
+/// [`crate::sim::clock`]) is purely additive on the cycle count — so
+/// each benchmark runs ONCE and the sweep is exact arithmetic on the
+/// invocation count.
 pub fn fig13(ctx: &mut ExpContext) -> Result<()> {
     let levels_us = [1.0, 10.0, 20.0, 50.0, 100.0];
     let workloads: Vec<Workload> = if ctx.opts.quick {

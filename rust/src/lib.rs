@@ -22,7 +22,12 @@
 //! metrics mid-run, and the [`coordinator::MultiTenantScheduler`]
 //! time-slices N live tenants over one shared session for true online
 //! multi-tenancy. [`sim::Engine::run`] is a thin batch wrapper over the
-//! same core.
+//! same core. Time itself is priced by the [`sim::clock`] layer: a
+//! pluggable [`sim::CostModel`] (Table V by default, a Grace-Hopper
+//! style [`sim::CoherentLink`] included) charging typed events against
+//! shared resources — one [`sim::Interconnect`], one
+//! [`sim::FaultBatcher`] — with per-tenant cycle attribution at the
+//! [`sim::Clock::charge`] choke point.
 
 pub mod api;
 pub mod config;

@@ -3,7 +3,9 @@
 //! ```text
 //! repro exp <table1|table2|...|fig14|all> [--quick] [--scale N] [--seed N]
 //! repro simulate --workload NW --strategy baseline --oversub 125
+//! repro simulate --stream corpus:myapp --corpus corpus --progress
 //! repro sweep --workloads all --strategies baseline,uvmsmart --oversub 100,125,150
+//! repro sweep --workloads sched:NW+Hotspot --schedule bandwidth-fair
 //! repro corpus build --workloads all --seeds 42,7
 //! repro corpus import faults.csv --name myapp
 //! repro accuracy --workload Hotspot --method ours
@@ -20,16 +22,21 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use uvmio::api::{
-    ConsoleSink, CsvSink, JsonlSink, StrategyCtx, StrategyRegistry,
+    apply_prediction_overhead, ConsoleSink, CsvSink, JsonlSink,
+    ProgressObserver, ScheduledWorkload, StrategyCtx, StrategyRegistry,
     SweepRunner, SweepSink, SweepSpec, SweepWorkload,
 };
-use uvmio::config::Scale;
-use uvmio::coordinator::{offline_accuracy, online_accuracy, RunSpec, TrainOpts};
+use uvmio::config::{Scale, SimConfig};
+use uvmio::coordinator::{
+    offline_accuracy, online_accuracy, RunSpec, SchedulePolicy, TrainOpts,
+};
 use uvmio::corpus::{self, CorpusStore, TraceCache};
 use uvmio::exp::{self, ExpContext, ExpOpts};
 use uvmio::predictor::features::samples_from_trace;
 use uvmio::runtime::{Manifest, Runtime};
+use uvmio::sim::{Arena, Session};
 use uvmio::trace::workloads::Workload;
+use uvmio::trace::Trace;
 use uvmio::util::cli::Args;
 
 const USAGE: &str = "\
@@ -47,10 +54,17 @@ USAGE:
       one simulation cell; S is ANY registered strategy name
       (`repro info` lists them; builtin: baseline demand-hpe tree-hpe
       demand-belady demand-lru demand-random uvmsmart intelligent)
+  repro simulate --stream corpus:NAME [--strategy S] [--oversub PCT]
+              [--corpus DIR] [--progress [N]]
+      one-off streamed run: decode the named .uvmt corpus entry access
+      by access through a Session in O(1) memory (entries larger than
+      RAM stream fine); --progress prints a mid-run snapshot line every
+      N faults (default 100000). Oracle strategies that need the whole
+      trace up front (demand-belady) are rejected
   repro sweep [--workloads all|W1,W2,..] [--strategies all|S1,S2,..]
               [--oversub P1,P2,..] [--seeds N1,N2,..] [--threads N]
               [--scale N] [--reports DIR] [--artifacts DIR] [--corpus DIR]
-              [--crash-at L=T,..] [--progress [N]]
+              [--crash-at L=T,..] [--progress [N]] [--schedule POLICY]
       run the (workload × strategy × oversubscription × seed) grid in
       parallel across threads (artifact-backed strategies run on a
       serialized lane); streams a console table and writes
@@ -60,7 +74,13 @@ USAGE:
       per (workload, scale, seed) via a shared cache; with --corpus DIR
       they are also persisted to / reloaded from the .uvmt store, and
       workload names may be corpus entries, csv:FILE / uvmlog:FILE
-      imports, or A+B multi-tenant compositions. --crash-at maps an
+      imports, or A+B multi-tenant compositions. sched:A+B cells run
+      their tenants through the ONLINE MultiTenantScheduler (shared
+      device memory + interconnect, per-tenant cycle/fault attribution
+      in sweep.jsonl) instead of an offline pre-interleave; --schedule
+      picks the policy for all sched: cells (proportional, round-robin,
+      fault-aware, bandwidth-fair; default proportional — for two
+      tenants byte-identical to the offline A+B merge). --crash-at maps an
       oversubscription level to a crash threshold (thrash events), e.g.
       --crash-at 150=100000 reproduces the Fig-14 crash columns.
       --progress streams a mid-run snapshot line (stderr) per cell every
@@ -203,9 +223,138 @@ fn parse_list<T: std::str::FromStr>(s: &str, flag: &str) -> anyhow::Result<Vec<T
     Ok(out)
 }
 
+/// `--progress` alone uses the default cadence; `--progress N` overrides
+/// it (N = faults between snapshot lines); absent = disabled.
+fn parse_progress(args: &Args) -> anyhow::Result<u64> {
+    match args.get("progress") {
+        None => Ok(0),
+        Some(uvmio::util::cli::FLAG_SET) => Ok(100_000),
+        Some(v) => v.parse::<u64>().map_err(|_| {
+            anyhow::anyhow!("--progress: cannot parse {v:?} (want a fault count)")
+        }),
+    }
+}
+
+/// The `simulate --stream` path: run a `.uvmt` corpus entry through a
+/// streaming [`Session`] (O(1) memory — the access vector is never
+/// materialized), with optional mid-run progress snapshots.
+fn cmd_simulate_stream(args: &Args, stream: &str) -> anyhow::Result<()> {
+    // flags of the materialized path are ignored by a streamed run —
+    // reject them loudly instead of silently doing something else
+    for flag in ["workload", "scale", "seed"] {
+        if args.has(flag) {
+            anyhow::bail!(
+                "--{flag} does not apply to `repro simulate --stream` \
+                 (the stream names the input; geometry comes from the \
+                 .uvmt header)"
+            );
+        }
+    }
+    let opts = opts_from(args)?;
+    let store = CorpusStore::open(args.get_or("corpus", "corpus"))?;
+    let name = stream.strip_prefix("corpus:").unwrap_or(stream);
+    let path = store.find_named_path(name)?.ok_or_else(|| {
+        anyhow::anyhow!(
+            "no corpus entry named '{name}' in {} (see `repro corpus list`)",
+            store.dir().display()
+        )
+    })?;
+    let mut reader = uvmio::corpus::TraceReader::open(&path)?;
+    let meta = reader.meta().clone();
+
+    let registry = StrategyRegistry::builtin();
+    let entry = registry.get(args.get_or("strategy", "baseline"))?;
+    if entry.needs_trace {
+        anyhow::bail!(
+            "strategy '{}' needs the whole trace up front (offline oracle) \
+             and cannot drive a streamed session; use \
+             `repro simulate --workload` instead",
+            entry.name
+        );
+    }
+    let oversub = args.get_parse("oversub", 125u32).map_err(anyhow::Error::msg)?;
+
+    // the placeholder trace only parameterizes the policy factory —
+    // geometry and capacity come from the .uvmt header
+    let placeholder = Trace::from_accesses(
+        &meta.name,
+        meta.working_set_pages,
+        meta.kernels,
+        Vec::new(),
+    );
+    let cfg = SimConfig::default().with_oversubscription(meta.touched_pages, oversub);
+    let spec = RunSpec {
+        trace: &placeholder,
+        oversub_percent: oversub,
+        cfg,
+        crash_threshold: None,
+    };
+    let ctx = if entry.needs_artifacts {
+        let runtime = Runtime::new(&opts.artifacts_dir)?;
+        StrategyCtx::from_runtime(&runtime)?
+    } else {
+        StrategyCtx::default()
+    };
+    let policy = entry.build(&spec, &ctx)?;
+
+    let arena = Arena::new(meta.working_set_pages, meta.allocations.clone());
+    let mut session = Session::new(spec.cfg.clone(), arena, policy);
+    let progress = parse_progress(args)?;
+    if progress > 0 {
+        session.add_observer(Box::new(ProgressObserver::new(
+            format!("{}/{}@{}%", meta.name, entry.name, oversub),
+            progress,
+            meta.accesses,
+        )));
+    }
+    session.feed_results(&mut reader)?;
+
+    // same §V-C prediction-overhead post-pass as the registry path
+    let instr = session.policy().instrumentation();
+    let mut outcome = session.finish();
+    apply_prediction_overhead(&mut outcome, &instr, &spec.cfg);
+
+    let s = &outcome.stats;
+    println!("stream          : {} ({} pages, {} accesses, .uvmt streamed)",
+             meta.name, meta.working_set_pages, meta.accesses);
+    println!("strategy        : {} ({})", entry.display, entry.name);
+    println!("oversubscription: {oversub}% (capacity {} pages)", spec.cfg.capacity_pages);
+    println!("faults          : {}", s.faults);
+    println!("migrations      : {}", s.migrations);
+    println!("evictions       : {}", s.evictions);
+    println!("prefetches      : {} (garbage {})", s.prefetches, s.garbage_prefetches);
+    println!("zero-copy       : {}", s.zero_copy);
+    println!("pages thrashed  : {} events / {} unique", s.thrash_events,
+             s.thrashed_pages.len());
+    println!("IPC             : {:.4}", s.ipc());
+    if instr.inference_calls > 0 {
+        println!("inference calls : {} ({} predictions, {} patterns)",
+                 instr.inference_calls, instr.predictions, instr.patterns_used);
+    }
+    if outcome.crashed {
+        println!("status          : CRASHED (runaway thrashing)");
+    }
+    Ok(())
+}
+
 fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
-    args.reject_unknown(&["workload", "strategy", "oversub", "scale", "seed", "artifacts"])
-        .map_err(anyhow::Error::msg)?;
+    args.reject_unknown(&[
+        "workload", "strategy", "oversub", "scale", "seed", "artifacts",
+        "stream", "corpus", "progress",
+    ])
+    .map_err(anyhow::Error::msg)?;
+    if let Some(stream) = args.get("stream") {
+        let stream = stream.to_string();
+        return cmd_simulate_stream(args, &stream);
+    }
+    // stream-only flags would be silently ignored here — reject loudly
+    for flag in ["corpus", "progress"] {
+        if args.has(flag) {
+            anyhow::bail!(
+                "--{flag} applies only to `repro simulate --stream corpus:NAME`"
+            );
+        }
+    }
     let opts = opts_from(args)?;
     let w = parse_workload(args)?;
     let registry = StrategyRegistry::builtin();
@@ -248,16 +397,27 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
 }
 
 /// Workload selectors for a sweep: builtin names, corpus entries,
-/// `csv:`/`uvmlog:` files, `A+B` compositions (see `uvmio::corpus`).
+/// `csv:`/`uvmlog:` files, `A+B` offline compositions (see
+/// `uvmio::corpus`), or `sched:A+B` scheduler-backed cells whose
+/// tenants run through the online `MultiTenantScheduler` under
+/// `schedule`.
 fn parse_sweep_workloads(
     selector: &str,
     store: Option<&CorpusStore>,
+    schedule: SchedulePolicy,
 ) -> anyhow::Result<Vec<SweepWorkload>> {
     if selector.trim().eq_ignore_ascii_case("all") {
         return Ok(Workload::ALL.into_iter().map(SweepWorkload::from).collect());
     }
     let mut out = Vec::new();
     for part in selector.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+        if let Some(tenants) = part.strip_prefix("sched:") {
+            let tenants = corpus::parse_tenants(tenants, store)?;
+            out.push(SweepWorkload::from(ScheduledWorkload::new(
+                tenants, schedule,
+            )));
+            continue;
+        }
         match Workload::from_name(part) {
             Some(w) => out.push(SweepWorkload::from(w)),
             None => out.push(SweepWorkload::from(corpus::parse_source(part, store)?)),
@@ -291,7 +451,7 @@ fn parse_crash_at(s: &str) -> anyhow::Result<Vec<(u32, u64)>> {
 fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
     args.reject_unknown(&[
         "workloads", "strategies", "oversub", "seeds", "threads", "scale",
-        "reports", "artifacts", "corpus", "crash-at", "progress",
+        "reports", "artifacts", "corpus", "crash-at", "progress", "schedule",
     ])
     .map_err(anyhow::Error::msg)?;
     let registry = StrategyRegistry::builtin();
@@ -299,8 +459,24 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
         Some(dir) => Some(CorpusStore::open(dir)?),
         None => None,
     };
-    let workloads =
-        parse_sweep_workloads(args.get_or("workloads", "all"), store.as_ref())?;
+    let schedule = match args.get("schedule") {
+        None => SchedulePolicy::default(),
+        Some(s) => SchedulePolicy::from_name(s).ok_or_else(|| {
+            anyhow::anyhow!(
+                "--schedule: unknown policy {s:?}; known: {}",
+                SchedulePolicy::ALL
+                    .iter()
+                    .map(|p| p.name())
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            )
+        })?,
+    };
+    let workloads = parse_sweep_workloads(
+        args.get_or("workloads", "all"),
+        store.as_ref(),
+        schedule,
+    )?;
     let strategies = registry.resolve_list(args.get_or(
         "strategies",
         "baseline,demand-hpe,tree-hpe,demand-belady,demand-lru,demand-random,uvmsmart",
@@ -352,15 +528,7 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
         Box::new(CsvSink::to_path(&csv_path)?),
         Box::new(JsonlSink::to_path(&jsonl_path)?),
     ];
-    // `--progress` alone uses the default cadence; `--progress N`
-    // overrides it (N = faults between snapshot lines)
-    let progress = match args.get("progress") {
-        None => 0,
-        Some(uvmio::util::cli::FLAG_SET) => 100_000,
-        Some(v) => v.parse::<u64>().map_err(|_| {
-            anyhow::anyhow!("--progress: cannot parse {v:?} (want a fault count)")
-        })?,
-    };
+    let progress = parse_progress(args)?;
 
     let t0 = Instant::now();
     let records = SweepRunner::new(&registry)

@@ -1,0 +1,572 @@
+//! `sim::clock` — the timing layer: a pluggable [`CostModel`] pricing
+//! typed [`CostEvent`]s against first-class shared resources
+//! ([`Interconnect`], [`FaultBatcher`]), with per-tenant cycle
+//! attribution at the single [`Clock::charge`] choke point.
+//!
+//! Historically the Table V arithmetic was ~30 inlined
+//! `stats.cycles += …` statements scattered through the session's fault
+//! path. Extracting it buys three things:
+//!
+//! * the model is **swappable** — [`TableV`] reproduces the paper's
+//!   discrete-GPU-over-PCIe numbers byte-for-byte (pinned by the
+//!   `session_matches_engine_*` equivalence suite), while
+//!   [`CoherentLink`] prices the same simulation flow like a
+//!   Grace-Hopper-style coherent-link system (cf. "Harnessing
+//!   Integrated CPU-GPU System Memory for HPC"): identical faults,
+//!   migrations and evictions, different cycle bill;
+//! * shared resources are **first-class** — one [`Interconnect`] and one
+//!   [`FaultBatcher`] per session, so concurrent tenants visibly contend
+//!   for link bandwidth and MSHR headroom instead of mutating a raw
+//!   `link_free: u64`;
+//! * every charge is **attributable** — [`Clock::charge`] bills the
+//!   current tenant ([`Clock::set_tenant`]), which is what per-tenant
+//!   cycle accounting in
+//!   [`crate::coordinator::MultiTenantScheduler`] and the
+//!   bandwidth-fair schedule are built on.
+//!
+//! # The Table V timing model
+//!
+//! All values in GPU core cycles (moved here from `sim::engine`, which
+//! now only documents the batch wrapper):
+//!
+//! * compute: each access carries `inst_gap` compute instructions — one
+//!   cycle each (the SMs' issue width is folded into the gap scale);
+//! * translation: TLB hit = 1 cycle, miss = page-walk latency;
+//! * resident access: DRAM latency divided by the warp-overlap factor
+//!   (the GTO scheduler hides most of it);
+//! * far-fault: faults *batch* — a fault arriving while a batch is being
+//!   serviced joins it and shares the 45 µs service latency (modelling
+//!   the UVM driver's fault coalescing through the MSHRs); each migrated
+//!   page additionally occupies the PCIe link for its transfer time;
+//! * zero-copy / delayed remote access: fixed remote latency, no
+//!   migration;
+//! * prefetches ride the link in the background: they cost link occupancy
+//!   (delaying later demand transfers — this is how "aggressive
+//!   prefetching hurts" emerges) but never stall the SMs directly;
+//! * predictor-driven policies charge `prediction_overhead` per
+//!   invocation batch (the Fig 13 sensitivity axis).
+
+use crate::config::SimConfig;
+
+/// One SM-visible timing event, priced by a [`CostModel`]. The
+/// *simulation flow* (what faults, what migrates, who gets evicted) is
+/// decided by the session and its policy; a cost event only asks "what
+/// does this cost, given the shared resources right now?".
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CostEvent {
+    /// `gap` compute instructions issued before the access.
+    Compute { gap: u64 },
+    /// Address translation hit the TLB.
+    TlbHit,
+    /// TLB miss: a page-table walk.
+    TlbMiss,
+    /// The access hit device memory (page resident).
+    ResidentHit,
+    /// Remote access over the interconnect without migration — hard pin
+    /// / zero-copy, or a delayed-migration (soft pin) remote touch.
+    RemoteAccess,
+    /// Far-fault demand migration: join the fault batch, queue the page
+    /// transfer on the interconnect, stall until it lands.
+    DemandMigration,
+    /// Background page transfer — prefetch in, dirty writeback out. It
+    /// occupies the interconnect (delaying later demand transfers) but
+    /// never stalls the SMs directly.
+    LinkTransfer,
+    /// One batched predictor invocation (the §V-C overhead charge).
+    Prediction,
+}
+
+/// PCIe-link (or coherent-link) occupancy with FIFO queueing: a
+/// transfer starts when both the link is free and its `earliest` start
+/// cycle has passed. Replaces the session's raw `link_free: u64`, and
+/// additionally attributes busy cycles to the tenant that reserved them
+/// (the signal the bandwidth-fair schedule reacts to).
+#[derive(Debug, Clone, Default)]
+pub struct Interconnect {
+    free_at: u64,
+    busy_total: u64,
+    tenant: usize,
+    busy_by_tenant: Vec<u64>,
+}
+
+impl Interconnect {
+    pub fn new() -> Interconnect {
+        Interconnect::default()
+    }
+
+    /// Queue a `cycles`-long transfer that cannot start before
+    /// `earliest`; returns its completion cycle. The link is busy (and
+    /// the current tenant billed) for exactly `cycles`.
+    pub fn reserve(&mut self, earliest: u64, cycles: u64) -> u64 {
+        let start = self.free_at.max(earliest);
+        let done = start + cycles;
+        self.free_at = done;
+        self.busy_total += cycles;
+        if self.tenant >= self.busy_by_tenant.len() {
+            self.busy_by_tenant.resize(self.tenant + 1, 0);
+        }
+        self.busy_by_tenant[self.tenant] += cycles;
+        done
+    }
+
+    /// First cycle at which the link is idle again.
+    pub fn free_at(&self) -> u64 {
+        self.free_at
+    }
+
+    /// Total cycles of link occupancy ever reserved.
+    pub fn busy_total(&self) -> u64 {
+        self.busy_total
+    }
+
+    /// Link occupancy reserved by each tenant (indexed by tenant id;
+    /// tenants that never transferred may be absent).
+    pub fn busy_by_tenant(&self) -> &[u64] {
+        &self.busy_by_tenant
+    }
+
+    fn set_tenant(&mut self, tenant: usize) {
+        self.tenant = tenant;
+    }
+}
+
+/// The GMMU's fault-coalescing window: a far-fault arriving while a
+/// batch is in service joins it (sharing the service latency) as long as
+/// the batch has MSHR headroom; otherwise a new batch opens. Replaces
+/// the session's inline `batch_done`/`batch_faults` bookkeeping.
+#[derive(Debug, Clone, Default)]
+pub struct FaultBatcher {
+    done_at: u64,
+    in_flight: usize,
+    batches: u64,
+}
+
+impl FaultBatcher {
+    pub fn new() -> FaultBatcher {
+        FaultBatcher::default()
+    }
+
+    /// Register one far-fault at cycle `now`: join the live batch if one
+    /// is in service with headroom under `mshrs`, else open a new batch
+    /// completing at `now + service_latency`. Returns the cycle the
+    /// fault's (shared) service completes.
+    pub fn join(&mut self, now: u64, service_latency: u64, mshrs: usize) -> u64 {
+        if now >= self.done_at || self.in_flight >= mshrs {
+            self.done_at = now + service_latency;
+            self.in_flight = 1;
+            self.batches += 1;
+        } else {
+            self.in_flight += 1;
+        }
+        self.done_at
+    }
+
+    /// Cycle the current batch's service completes.
+    pub fn done_at(&self) -> u64 {
+        self.done_at
+    }
+
+    /// Batches opened so far (coalescing effectiveness =
+    /// faults / batches).
+    pub fn batches(&self) -> u64 {
+        self.batches
+    }
+}
+
+/// The shared hardware a [`CostModel`] prices against: one interconnect
+/// and one fault batcher per session, contended by every tenant.
+#[derive(Debug, Clone, Default)]
+pub struct SharedResources {
+    pub interconnect: Interconnect,
+    pub batcher: FaultBatcher,
+}
+
+/// Prices [`CostEvent`]s. `charge` returns the SM-visible stall cycles
+/// to add to the run clock and may reserve shared resources (link
+/// occupancy, batch membership) as a side effect.
+///
+/// Implementations must be deterministic: the session's byte-identical
+/// serial≡parallel and engine≡session contracts extend to any cost
+/// model, not just [`TableV`].
+pub trait CostModel: Send {
+    /// Display name (`"table-v"`, `"coherent-link"`).
+    fn name(&self) -> &str;
+
+    /// Price one event at cycle `now` against the shared resources.
+    fn charge(&self, now: u64, event: CostEvent, shared: &mut SharedResources) -> u64;
+}
+
+/// The paper's Table V discrete-GPU-over-PCIe model — the default, and
+/// byte-for-byte identical to the arithmetic that used to live inline in
+/// the session (pinned by the `session_matches_engine_*` suite).
+#[derive(Debug, Clone)]
+pub struct TableV {
+    tlb_hit_latency: u64,
+    walk_latency: u64,
+    resident_latency: u64,
+    zero_copy_latency: u64,
+    far_fault_latency: u64,
+    transfer_cycles_per_page: u64,
+    fault_mshrs: usize,
+    warp_overlap: u64,
+    prediction_overhead: u64,
+}
+
+impl TableV {
+    pub fn new(cfg: &SimConfig) -> TableV {
+        TableV {
+            tlb_hit_latency: cfg.tlb_hit_latency,
+            walk_latency: cfg.walk_latency,
+            resident_latency: cfg.resident_access_latency(),
+            zero_copy_latency: cfg.zero_copy_latency,
+            far_fault_latency: cfg.far_fault_latency,
+            transfer_cycles_per_page: cfg.transfer_cycles_per_page,
+            fault_mshrs: cfg.fault_mshrs,
+            warp_overlap: cfg.warp_overlap,
+            prediction_overhead: cfg.prediction_overhead,
+        }
+    }
+}
+
+impl CostModel for TableV {
+    fn name(&self) -> &str {
+        "table-v"
+    }
+
+    fn charge(&self, now: u64, event: CostEvent, shared: &mut SharedResources) -> u64 {
+        match event {
+            CostEvent::Compute { gap } => gap,
+            CostEvent::TlbHit => self.tlb_hit_latency,
+            CostEvent::TlbMiss => self.walk_latency,
+            CostEvent::ResidentHit => self.resident_latency,
+            CostEvent::RemoteAccess => self.zero_copy_latency,
+            CostEvent::DemandMigration => {
+                // fault batching: join the in-flight batch if one is
+                // live and has MSHR headroom, else open a new batch;
+                // the migration transfer then queues on the link after
+                // the fault service completes.
+                let batch_done =
+                    shared
+                        .batcher
+                        .join(now, self.far_fault_latency, self.fault_mshrs);
+                let done = shared
+                    .interconnect
+                    .reserve(batch_done, self.transfer_cycles_per_page);
+                (done - now) / self.warp_overlap
+            }
+            CostEvent::LinkTransfer => {
+                shared
+                    .interconnect
+                    .reserve(now, self.transfer_cycles_per_page);
+                0
+            }
+            CostEvent::Prediction => self.prediction_overhead,
+        }
+    }
+}
+
+/// A Grace-Hopper-style coherent-link model: the CPU and GPU share one
+/// hardware-coherent address space over an NVLink-C2C-class fabric
+/// (cf. "Harnessing Integrated CPU-GPU System Memory for HPC"), so a
+/// far-fault no longer pays the UVM driver's 45 µs software service —
+/// migrations queue straight onto the (much faster) link, and remote
+/// accesses complete at a small multiple of local DRAM latency.
+///
+/// The *simulation flow* is untouched: the same faults occur, the same
+/// pages migrate, the same victims are evicted — only the cycle bill
+/// changes. Swapping this in via [`crate::sim::Session::with_cost_model`]
+/// answers "what would this workload/policy pair cost on coherent
+/// hardware?" without touching the policy layer.
+#[derive(Debug, Clone)]
+pub struct CoherentLink {
+    tlb_hit_latency: u64,
+    walk_latency: u64,
+    resident_latency: u64,
+    remote_latency: u64,
+    transfer_cycles_per_page: u64,
+    warp_overlap: u64,
+    prediction_overhead: u64,
+}
+
+/// C2C-class fabric bandwidth multiple over the Table V PCIe 3.0 link.
+const COHERENT_LINK_SPEEDUP: u64 = 7;
+/// Coherent remote load latency as a multiple of local DRAM latency.
+const COHERENT_REMOTE_FACTOR: u64 = 3;
+
+impl CoherentLink {
+    /// Derive the coherent-link pricing from a Table V base config
+    /// (same clock, same DRAM/TLB numbers, different fabric).
+    pub fn new(cfg: &SimConfig) -> CoherentLink {
+        CoherentLink {
+            tlb_hit_latency: cfg.tlb_hit_latency,
+            walk_latency: cfg.walk_latency,
+            resident_latency: cfg.resident_access_latency(),
+            remote_latency: (COHERENT_REMOTE_FACTOR * cfg.dram_latency)
+                / cfg.warp_overlap,
+            transfer_cycles_per_page: (cfg.transfer_cycles_per_page
+                / COHERENT_LINK_SPEEDUP)
+                .max(1),
+            warp_overlap: cfg.warp_overlap,
+            prediction_overhead: cfg.prediction_overhead,
+        }
+    }
+}
+
+impl CostModel for CoherentLink {
+    fn name(&self) -> &str {
+        "coherent-link"
+    }
+
+    fn charge(&self, now: u64, event: CostEvent, shared: &mut SharedResources) -> u64 {
+        match event {
+            CostEvent::Compute { gap } => gap,
+            CostEvent::TlbHit => self.tlb_hit_latency,
+            CostEvent::TlbMiss => self.walk_latency,
+            CostEvent::ResidentHit => self.resident_latency,
+            CostEvent::RemoteAccess => self.remote_latency,
+            CostEvent::DemandMigration => {
+                // hardware coherence resolves the fault at memory
+                // latency — no driver batch window; the page transfer
+                // still queues on the (shared) link.
+                let done = shared
+                    .interconnect
+                    .reserve(now, self.transfer_cycles_per_page);
+                (done - now) / self.warp_overlap
+            }
+            CostEvent::LinkTransfer => {
+                shared
+                    .interconnect
+                    .reserve(now, self.transfer_cycles_per_page);
+                0
+            }
+            CostEvent::Prediction => self.prediction_overhead,
+        }
+    }
+}
+
+/// Dispatch for the active model: the default [`TableV`] is stored
+/// inline and statically dispatched (the per-access hot path — compute,
+/// TLB, resident hit — stays a matched constant add, no vtable), while
+/// user-supplied models go through the boxed trait object.
+enum ModelDispatch {
+    TableV(TableV),
+    Custom(Box<dyn CostModel>),
+}
+
+impl ModelDispatch {
+    #[inline]
+    fn charge(&self, now: u64, event: CostEvent, shared: &mut SharedResources) -> u64 {
+        match self {
+            ModelDispatch::TableV(m) => m.charge(now, event, shared),
+            ModelDispatch::Custom(m) => m.charge(now, event, shared),
+        }
+    }
+
+    fn name(&self) -> &str {
+        match self {
+            ModelDispatch::TableV(m) => CostModel::name(m),
+            ModelDispatch::Custom(m) => m.name(),
+        }
+    }
+}
+
+/// The session's clock: a [`CostModel`] plus the [`SharedResources`] it
+/// prices against, with per-tenant attribution of every charge. All
+/// simulated time flows through [`Clock::charge`] — there is no other
+/// way a session accumulates cycles — which is what makes the per-tenant
+/// `cycles` columns sum *exactly* to the combined run.
+pub struct Clock {
+    model: ModelDispatch,
+    shared: SharedResources,
+    tenant: usize,
+    cycles_by_tenant: Vec<u64>,
+}
+
+impl Clock {
+    /// A clock pricing with the default [`TableV`] model (statically
+    /// dispatched — the common case pays no virtual call).
+    pub fn table_v(cfg: &SimConfig) -> Clock {
+        Clock::from_dispatch(ModelDispatch::TableV(TableV::new(cfg)))
+    }
+
+    /// A clock pricing with any [`CostModel`].
+    pub fn with_model(model: Box<dyn CostModel>) -> Clock {
+        Clock::from_dispatch(ModelDispatch::Custom(model))
+    }
+
+    fn from_dispatch(model: ModelDispatch) -> Clock {
+        Clock {
+            model,
+            shared: SharedResources::default(),
+            tenant: 0,
+            cycles_by_tenant: vec![0],
+        }
+    }
+
+    /// Name of the active cost model.
+    pub fn model_name(&self) -> &str {
+        self.model.name()
+    }
+
+    /// Attribute subsequent charges (cycles and link occupancy) to
+    /// `tenant`. Single-tenant sessions never call this and bill
+    /// everything to tenant 0.
+    pub fn set_tenant(&mut self, tenant: usize) {
+        self.tenant = tenant;
+        if tenant >= self.cycles_by_tenant.len() {
+            self.cycles_by_tenant.resize(tenant + 1, 0);
+        }
+        self.shared.interconnect.set_tenant(tenant);
+    }
+
+    /// Price `event` at cycle `now`, bill the current tenant, and return
+    /// the stall cycles the caller must add to its run clock.
+    pub fn charge(&mut self, now: u64, event: CostEvent) -> u64 {
+        let cost = self.model.charge(now, event, &mut self.shared);
+        self.cycles_by_tenant[self.tenant] += cost;
+        cost
+    }
+
+    /// Cycles billed to each tenant so far; sums to every cycle ever
+    /// returned by [`Clock::charge`].
+    pub fn cycles_by_tenant(&self) -> &[u64] {
+        &self.cycles_by_tenant
+    }
+
+    /// The shared interconnect (link occupancy, per-tenant busy cycles).
+    pub fn interconnect(&self) -> &Interconnect {
+        &self.shared.interconnect
+    }
+
+    /// The shared fault batcher (MSHR coalescing window).
+    pub fn batcher(&self) -> &FaultBatcher {
+        &self.shared.batcher
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn interconnect_queues_fifo() {
+        let mut link = Interconnect::new();
+        // idle link: starts at `earliest`
+        assert_eq!(link.reserve(100, 50), 150);
+        // busy link: queues behind the previous transfer
+        assert_eq!(link.reserve(0, 50), 200);
+        // far-future earliest: link idles until then
+        assert_eq!(link.reserve(1000, 50), 1050);
+        assert_eq!(link.free_at(), 1050);
+        assert_eq!(link.busy_total(), 150);
+    }
+
+    #[test]
+    fn interconnect_attributes_busy_cycles() {
+        let mut link = Interconnect::new();
+        link.reserve(0, 10);
+        link.set_tenant(2);
+        link.reserve(0, 30);
+        link.reserve(0, 30);
+        assert_eq!(link.busy_by_tenant(), &[10, 0, 60]);
+        assert_eq!(link.busy_total(), 70);
+    }
+
+    #[test]
+    fn batcher_coalesces_within_mshr_window() {
+        let mut b = FaultBatcher::new();
+        // first fault opens a batch
+        assert_eq!(b.join(0, 100, 2), 100);
+        // second joins it (same completion), filling the MSHRs
+        assert_eq!(b.join(10, 100, 2), 100);
+        // third arrives in-window but out of headroom: new batch
+        assert_eq!(b.join(20, 100, 2), 120);
+        // a fault after the batch completes opens a fresh one
+        assert_eq!(b.join(200, 100, 2), 300);
+        assert_eq!(b.batches(), 3);
+    }
+
+    #[test]
+    fn table_v_prices_match_config() {
+        let cfg = SimConfig { capacity_pages: 1, ..Default::default() };
+        let m = TableV::new(&cfg);
+        let mut sh = SharedResources::default();
+        assert_eq!(m.charge(0, CostEvent::Compute { gap: 7 }, &mut sh), 7);
+        assert_eq!(m.charge(0, CostEvent::TlbHit, &mut sh), cfg.tlb_hit_latency);
+        assert_eq!(m.charge(0, CostEvent::TlbMiss, &mut sh), cfg.walk_latency);
+        assert_eq!(
+            m.charge(0, CostEvent::ResidentHit, &mut sh),
+            cfg.dram_latency / cfg.warp_overlap
+        );
+        assert_eq!(
+            m.charge(0, CostEvent::RemoteAccess, &mut sh),
+            cfg.zero_copy_latency
+        );
+        assert_eq!(
+            m.charge(0, CostEvent::Prediction, &mut sh),
+            cfg.prediction_overhead
+        );
+        // background transfers stall nothing but occupy the link
+        assert_eq!(m.charge(0, CostEvent::LinkTransfer, &mut sh), 0);
+        assert_eq!(sh.interconnect.busy_total(), cfg.transfer_cycles_per_page);
+    }
+
+    #[test]
+    fn table_v_migration_replays_inline_arithmetic() {
+        // the exact pre-refactor sequence: batch service then link
+        // queueing then warp-overlapped stall
+        let cfg = SimConfig { capacity_pages: 1, ..Default::default() };
+        let m = TableV::new(&cfg);
+        let mut sh = SharedResources::default();
+        let now = 1000;
+        let stall = m.charge(now, CostEvent::DemandMigration, &mut sh);
+        let batch_done = now + cfg.far_fault_latency;
+        let done = batch_done + cfg.transfer_cycles_per_page;
+        assert_eq!(stall, (done - now) / cfg.warp_overlap);
+        assert_eq!(sh.batcher.done_at(), batch_done);
+        assert_eq!(sh.interconnect.free_at(), done);
+        // a second fault in-window shares the batch but queues its
+        // transfer behind the first
+        let stall2 = m.charge(now + 10, CostEvent::DemandMigration, &mut sh);
+        assert_eq!(sh.batcher.done_at(), batch_done, "joined, not reopened");
+        let done2 = done + cfg.transfer_cycles_per_page;
+        assert_eq!(stall2, (done2 - (now + 10)) / cfg.warp_overlap);
+    }
+
+    #[test]
+    fn coherent_link_is_cheaper_per_migration() {
+        let cfg = SimConfig { capacity_pages: 1, ..Default::default() };
+        let pcie = TableV::new(&cfg);
+        let c2c = CoherentLink::new(&cfg);
+        let (mut sa, mut sb) =
+            (SharedResources::default(), SharedResources::default());
+        let a = pcie.charge(0, CostEvent::DemandMigration, &mut sa);
+        let b = c2c.charge(0, CostEvent::DemandMigration, &mut sb);
+        assert!(b < a, "coherent migration ({b}) must undercut PCIe ({a})");
+        let ra = pcie.charge(0, CostEvent::RemoteAccess, &mut sa);
+        let rb = c2c.charge(0, CostEvent::RemoteAccess, &mut sb);
+        assert!(rb < ra, "coherent remote access must undercut zero-copy");
+    }
+
+    #[test]
+    fn clock_attributes_every_charge() {
+        let cfg = SimConfig { capacity_pages: 1, ..Default::default() };
+        let mut clock = Clock::table_v(&cfg);
+        let a = clock.charge(0, CostEvent::Compute { gap: 5 });
+        clock.set_tenant(1);
+        let b = clock.charge(0, CostEvent::TlbMiss);
+        let c = clock.charge(0, CostEvent::DemandMigration);
+        assert_eq!(clock.cycles_by_tenant(), &[a, b + c]);
+        assert_eq!(
+            clock.cycles_by_tenant().iter().sum::<u64>(),
+            a + b + c,
+            "attribution must conserve total cycles"
+        );
+        // link occupancy billed to the reserving tenant
+        assert_eq!(
+            clock.interconnect().busy_by_tenant(),
+            &[0, cfg.transfer_cycles_per_page]
+        );
+        assert_eq!(clock.model_name(), "table-v");
+    }
+}

@@ -1,31 +1,17 @@
 //! The batch front door to the simulator: drive a whole trace through a
-//! policy under the Table V timing model.
+//! policy under the default (Table V) timing model.
 //!
 //! `Engine` is a thin wrapper over [`Session`] — it builds a session
 //! from the trace's [`Arena`], feeds every access, and returns the
 //! [`RunOutcome`]. The two paths are byte-identical by construction
 //! (the `session_matches_engine_*` integration tests pin it); use a
 //! [`Session`] directly for streaming ingestion, mid-run snapshots,
-//! observers, or multi-tenant co-simulation.
+//! observers, multi-tenant co-simulation, or a non-default
+//! [`crate::sim::CostModel`].
 //!
-//! Timing model (all values in GPU core cycles):
-//!
-//! * compute: each access carries `inst_gap` compute instructions — one
-//!   cycle each (the SMs' issue width is folded into the gap scale);
-//! * translation: TLB hit = 1 cycle, miss = page-walk latency;
-//! * resident access: DRAM latency divided by the warp-overlap factor
-//!   (the GTO scheduler hides most of it);
-//! * far-fault: faults *batch* — a fault arriving while a batch is being
-//!   serviced joins it and shares the 45 µs service latency (modelling
-//!   the UVM driver's fault coalescing through the MSHRs); each migrated
-//!   page additionally occupies the PCIe link for its transfer time;
-//! * zero-copy / delayed remote access: fixed remote latency, no
-//!   migration;
-//! * prefetches ride the link in the background: they cost link occupancy
-//!   (delaying later demand transfers — this is how "aggressive
-//!   prefetching hurts" emerges) but never stall the SMs directly;
-//! * predictor-driven policies charge `prediction_overhead` per
-//!   invocation batch (the Fig 13 sensitivity axis).
+//! The timing model itself (compute / translation / resident access /
+//! fault batching / link occupancy / prediction overhead) is documented
+//! where it now lives: [`crate::sim::clock`].
 
 use crate::config::SimConfig;
 use crate::policy::Policy;

@@ -23,13 +23,25 @@
 //! * [`Engine`] — the one-shot batch wrapper over `Session` for callers
 //!   that hold a materialized [`crate::trace::Trace`]; byte-identical
 //!   stats by construction.
+//!
+//! The timing model itself lives in [`clock`]: a pluggable [`CostModel`]
+//! ([`TableV`] by default, [`clock::CoherentLink`] for
+//! Grace-Hopper-style hardware) pricing typed [`CostEvent`]s against
+//! first-class shared resources ([`Interconnect`], [`FaultBatcher`]),
+//! with per-tenant cycle attribution at the [`Clock::charge`] choke
+//! point.
 
+pub mod clock;
 pub mod engine;
 pub mod mem;
 pub mod session;
 pub mod stats;
 pub mod tlb;
 
+pub use clock::{
+    Clock, CoherentLink, CostEvent, CostModel, FaultBatcher, Interconnect,
+    TableV,
+};
 pub use engine::Engine;
 pub use mem::DeviceMemory;
 pub use session::{Arena, Observer, RunOutcome, Session, SimEvent, StepResult};

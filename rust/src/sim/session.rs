@@ -33,6 +33,7 @@ use std::collections::HashMap;
 
 use crate::config::SimConfig;
 use crate::policy::Policy;
+use crate::sim::clock::{Clock, CostEvent, CostModel};
 use crate::sim::{DeviceMemory, FaultAction, Page, Stats, Tlb};
 use crate::sim::stats::MetricsSnapshot;
 use crate::trace::Access;
@@ -134,19 +135,19 @@ pub struct StepResult {
 
 /// A resumable simulation: same timing model as [`crate::sim::Engine`],
 /// driven access-by-access. See the module docs for the API shape and
-/// [`crate::sim::engine`] for the timing model itself.
+/// [`crate::sim::clock`] for the timing model itself — every cycle this
+/// session accumulates flows through [`Clock::charge`], priced by a
+/// pluggable [`CostModel`] (default: the paper's Table V) against the
+/// session's shared [`crate::sim::clock::Interconnect`] and
+/// [`crate::sim::clock::FaultBatcher`].
 pub struct Session<'p> {
     cfg: SimConfig,
     arena: Arena,
     mem: DeviceMemory,
     tlb: Tlb,
     stats: Stats,
-    /// cycle when the PCIe link becomes free
-    link_free: u64,
-    /// cycle when the current fault batch's service completes
-    batch_done: u64,
-    /// faults currently sharing the batch (bounded by MSHR count)
-    batch_faults: usize,
+    /// the timing layer: cost model + shared resources + attribution
+    clock: Clock,
     /// soft-pin remote-touch counters (delayed migration)
     delay_counters: HashMap<Page, u32>,
     faults_in_interval: u32,
@@ -171,9 +172,7 @@ impl<'p> Session<'p> {
             mem: DeviceMemory::new(cap),
             tlb: Tlb::new(cfg.tlb_entries),
             stats: Stats::default(),
-            link_free: 0,
-            batch_done: 0,
-            batch_faults: 0,
+            clock: Clock::table_v(&cfg),
             delay_counters: HashMap::new(),
             faults_in_interval: 0,
             intervals: 0,
@@ -195,6 +194,16 @@ impl<'p> Session<'p> {
         self
     }
 
+    /// Replace the timing model (default: [`crate::sim::clock::TableV`]
+    /// built from the session's config). Swapping the model changes the
+    /// cycle bill, never the simulation flow — faults, migrations and
+    /// evictions are identical under every model. Call before the first
+    /// push: the replacement starts from idle shared resources.
+    pub fn with_cost_model(mut self, model: Box<dyn CostModel>) -> Session<'p> {
+        self.clock = Clock::with_model(model);
+        self
+    }
+
     /// Register an event consumer. Sessions with no observers pay
     /// nothing for the event plumbing.
     pub fn add_observer(&mut self, observer: Box<dyn Observer + 'p>) {
@@ -213,6 +222,30 @@ impl<'p> Session<'p> {
         self.crashed
     }
 
+    /// The timing layer: active cost model, shared interconnect /
+    /// fault-batcher state, per-tenant attribution.
+    pub fn clock(&self) -> &Clock {
+        &self.clock
+    }
+
+    /// Attribute subsequent charges to `tenant` (the multi-tenant
+    /// scheduler calls this before each push). Single-tenant sessions
+    /// bill everything to tenant 0.
+    pub fn set_tenant(&mut self, tenant: usize) {
+        self.clock.set_tenant(tenant);
+    }
+
+    /// Cycles billed per tenant; sums exactly to `stats().cycles`.
+    pub fn tenant_cycles(&self) -> &[u64] {
+        self.clock.cycles_by_tenant()
+    }
+
+    /// Interconnect occupancy reserved per tenant (demand transfers,
+    /// prefetches, writebacks) — the bandwidth-fair schedule's signal.
+    pub fn tenant_link_cycles(&self) -> &[u64] {
+        self.clock.interconnect().busy_by_tenant()
+    }
+
     /// The policy driving this session (e.g. to read
     /// [`crate::policy::PolicyInstrumentation`] before [`Session::finish`]).
     pub fn policy(&self) -> &(dyn Policy + 'p) {
@@ -228,6 +261,7 @@ impl<'p> Session<'p> {
     pub fn snapshot(&self) -> MetricsSnapshot {
         let mut snap = self.stats.snapshot();
         snap.resident_pages = self.mem.used();
+        snap.link_busy_cycles = self.clock.interconnect().busy_total();
         snap.crashed = self.crashed;
         snap
     }
@@ -289,13 +323,30 @@ impl<'p> Session<'p> {
         RunOutcome { stats: self.stats, crashed: self.crashed }
     }
 
-    /// Charge predictor inference overhead (called by learning-based
-    /// policies through the coordinator).
+    /// Charge predictor inference overhead *inline*, attributed to the
+    /// current tenant. This is the online alternative to the §V-C
+    /// post-pass ([`crate::api::apply_prediction_overhead`], driven by
+    /// [`crate::policy::PolicyInstrumentation::inference_calls`]):
+    /// drivers must use one or the other, never both — a policy that
+    /// charges inline here AND reports `inference_calls` would be
+    /// double-charged (and have its overhead counters overwritten) by
+    /// the post-pass. No builtin execution path calls this today; every
+    /// builtin driver uses the post-pass.
     pub fn charge_prediction(&mut self, batch: u64) {
         self.stats.predictions += batch;
-        let cost = self.cfg.prediction_overhead;
+        let cost = self.charge(CostEvent::Prediction);
         self.stats.prediction_overhead_cycles += cost;
+    }
+
+    /// The one place simulated time advances: price `event` through the
+    /// clock at the current cycle, add the stall to the run clock, and
+    /// return it. Attribution (per-tenant cycles, link occupancy) rides
+    /// along inside the clock.
+    #[inline]
+    fn charge(&mut self, event: CostEvent) -> u64 {
+        let cost = self.clock.charge(self.stats.cycles, event);
         self.stats.cycles += cost;
+        cost
     }
 
     #[inline]
@@ -310,21 +361,17 @@ impl<'p> Session<'p> {
     }
 
     fn step(&mut self, acc: &Access) -> StepResult {
-        // hot path: plain scalar reads, no per-step config copies
-        let (tlb_hit_latency, walk_latency) =
-            (self.cfg.tlb_hit_latency, self.cfg.walk_latency);
-        let hit_latency = self.cfg.dram_latency / self.cfg.warp_overlap;
         self.stats.accesses += 1;
         self.stats.instructions += acc.inst_gap as u64 + 1;
-        self.stats.cycles += acc.inst_gap as u64;
+        self.charge(CostEvent::Compute { gap: acc.inst_gap as u64 });
 
         // translation
         if self.tlb.access(acc.page) {
             self.stats.tlb_hits += 1;
-            self.stats.cycles += tlb_hit_latency;
+            self.charge(CostEvent::TlbHit);
         } else {
             self.stats.tlb_misses += 1;
-            self.stats.cycles += walk_latency;
+            self.charge(CostEvent::TlbMiss);
         }
 
         let resident = self.mem.resident(acc.page);
@@ -333,7 +380,7 @@ impl<'p> Session<'p> {
         if resident {
             self.stats.hits += 1;
             self.mem.touch(acc.page, acc.is_write);
-            self.stats.cycles += hit_latency;
+            self.charge(CostEvent::ResidentHit);
             StepResult { hit: true, action: None, crashed: false }
         } else {
             let action = self.handle_fault(acc);
@@ -352,19 +399,8 @@ impl<'p> Session<'p> {
     }
 
     fn handle_fault(&mut self, acc: &Access) -> FaultAction {
-        // copy only the scalar knobs this path reads — no per-fault
-        // SimConfig clone (the old flat copy dragged the whole struct
-        // through the cache on every far-fault)
-        let SimConfig {
-            interval_faults,
-            delay_threshold,
-            zero_copy_latency,
-            far_fault_latency,
-            fault_mshrs,
-            transfer_cycles_per_page,
-            warp_overlap,
-            ..
-        } = self.cfg;
+        let (interval_faults, delay_threshold) =
+            (self.cfg.interval_faults, self.cfg.delay_threshold);
         self.stats.faults += 1;
         self.faults_in_interval += 1;
         if self.faults_in_interval >= interval_faults {
@@ -384,7 +420,7 @@ impl<'p> Session<'p> {
                     FaultAction::Migrate
                 } else {
                     self.stats.delayed_remote += 1;
-                    self.stats.cycles += zero_copy_latency;
+                    self.charge(CostEvent::RemoteAccess);
                     self.emit(SimEvent::Fault {
                         page: acc.page,
                         action: FaultAction::Delay,
@@ -399,26 +435,13 @@ impl<'p> Session<'p> {
         match effective {
             FaultAction::ZeroCopy => {
                 self.stats.zero_copy += 1;
-                self.stats.cycles += zero_copy_latency;
+                self.charge(CostEvent::RemoteAccess);
             }
             FaultAction::Migrate => {
-                // fault batching: join the in-flight batch if one is live
-                // and has MSHR headroom, else open a new batch.
-                let now = self.stats.cycles;
-                if now >= self.batch_done || self.batch_faults >= fault_mshrs {
-                    self.batch_done = now + far_fault_latency;
-                    self.batch_faults = 1;
-                } else {
-                    self.batch_faults += 1;
-                }
-                // the migration transfer queues on the link after the
-                // fault service completes
-                let start = self.batch_done.max(self.link_free);
-                let done = start + transfer_cycles_per_page;
-                self.link_free = done;
-                let stall = (done - now) / warp_overlap;
-                self.stats.cycles += stall;
-
+                // fault batching + link queueing + warp-overlapped
+                // stall, all priced by the cost model against the
+                // shared resources (see `sim::clock`)
+                self.charge(CostEvent::DemandMigration);
                 self.admit(acc.page, false);
                 self.mem.touch(acc.page, acc.is_write);
             }
@@ -446,8 +469,7 @@ impl<'p> Session<'p> {
                 .note_eviction(victim, frame.prefetched_untouched, frame.dirty);
             if frame.dirty {
                 // writeback occupies the link but does not stall the SMs
-                self.link_free =
-                    self.link_free.max(self.stats.cycles) + self.cfg.transfer_cycles_per_page;
+                self.charge(CostEvent::LinkTransfer);
             }
             self.policy.on_evict(victim);
             self.emit(SimEvent::Evict { page: victim, dirty: frame.dirty });
@@ -455,8 +477,7 @@ impl<'p> Session<'p> {
         // prefetch transfers ride the link in the background
         if via_prefetch {
             self.stats.prefetches += 1;
-            self.link_free =
-                self.link_free.max(self.stats.cycles) + self.cfg.transfer_cycles_per_page;
+            self.charge(CostEvent::LinkTransfer);
         }
         self.mem.install(page, self.stats.cycles, via_prefetch);
         let thrashed = self.stats.note_migration(page);

@@ -76,6 +76,11 @@ pub struct MetricsSnapshot {
     /// pages resident in device memory when the snapshot was taken
     /// (session-level; 0 from [`Stats::snapshot`])
     pub resident_pages: u64,
+    /// total interconnect occupancy reserved so far — demand transfers,
+    /// prefetches and writebacks, per the session's
+    /// [`crate::sim::clock::Interconnect`] (session-level; 0 from
+    /// [`Stats::snapshot`])
+    pub link_busy_cycles: u64,
     /// session crossed its crash threshold (session-level; false from
     /// [`Stats::snapshot`])
     pub crashed: bool,
@@ -169,6 +174,7 @@ impl Stats {
             prediction_overhead_cycles: self.prediction_overhead_cycles,
             policy_victim_fallbacks: self.policy_victim_fallbacks,
             resident_pages: 0,
+            link_busy_cycles: 0,
             crashed: false,
         }
     }

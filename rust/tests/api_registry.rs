@@ -4,11 +4,12 @@
 //! byte-identical determinism between serial and parallel sweeps.
 
 use uvmio::api::{
-    CellRecord, record_to_json, StrategyCtx, StrategyRegistry, StrategySpec,
-    SweepRunner, SweepSpec,
+    CellRecord, record_to_json, ScheduledWorkload, StrategyCtx,
+    StrategyRegistry, StrategySpec, SweepRunner, SweepSpec, SweepWorkload,
 };
 use uvmio::config::Scale;
-use uvmio::coordinator::RunSpec;
+use uvmio::coordinator::{RunSpec, SchedulePolicy};
+use uvmio::corpus::{parse_source, parse_tenants};
 use uvmio::policy::lru::Lru;
 use uvmio::policy::{DemandOnly, Policy};
 use uvmio::trace::workloads::Workload;
@@ -190,6 +191,130 @@ fn parallel_sweep_is_byte_identical_to_serial() {
     }
     // byte-identical serialized output (what the JSONL sink writes)
     assert_eq!(jsonl_of(&serial), jsonl_of(&parallel));
+}
+
+/// Scheduler-backed sweep cells: a `sched:A+B` cell under Proportional
+/// produces byte-identical stats to the offline `A+B` interleave cell
+/// (the scheduler's compatibility contract, now holding through the
+/// whole sweep pipeline), and additionally carries per-tenant
+/// attribution whose cycles sum to the combined run.
+#[test]
+fn scheduled_proportional_cell_matches_offline_interleave() {
+    let registry = StrategyRegistry::builtin();
+    let offline = parse_source("NW+Hotspot", None).unwrap();
+    let tenants = parse_tenants("NW+Hotspot", None).unwrap();
+    let sweep = SweepSpec::new(
+        vec![
+            SweepWorkload::from(offline),
+            SweepWorkload::from(ScheduledWorkload::new(
+                tenants,
+                SchedulePolicy::Proportional,
+            )),
+        ],
+        registry.resolve_list("baseline").unwrap(),
+    );
+    let records = SweepRunner::new(&registry)
+        .run(&sweep, &StrategyCtx::default(), &mut [])
+        .unwrap();
+    assert_eq!(records.len(), 2);
+    let off = records[0].result.as_ref().unwrap();
+    let sched = records[1].result.as_ref().unwrap();
+    assert_eq!(records[1].cell.workload, "sched:NW+Hotspot@proportional");
+    assert_eq!(
+        off.outcome, sched.outcome,
+        "Proportional scheduled cell != offline interleave cell"
+    );
+    // offline cells carry no attribution; scheduled cells do, and the
+    // per-tenant cycles sum to the combined run
+    assert!(off.tenants.is_empty());
+    assert_eq!(sched.tenants.len(), 2);
+    let cycle_sum: u64 = sched.tenants.iter().map(|t| t.cycles).sum();
+    assert_eq!(cycle_sum, sched.outcome.stats.cycles);
+    // the JSONL record surfaces the tenant rows
+    let json = record_to_json(&records[1]);
+    let rows = json.get("tenants").and_then(|t| t.as_arr()).unwrap();
+    assert_eq!(rows.len(), 2);
+}
+
+/// A reactive schedule produces a genuinely different execution than
+/// the offline merge — through the sweep pipeline, not just the raw
+/// scheduler API.
+#[test]
+fn bandwidth_fair_scheduled_cell_diverges_from_offline() {
+    let registry = StrategyRegistry::builtin();
+    let offline = parse_source("ATAX+StreamTriad", None).unwrap();
+    let tenants = parse_tenants("ATAX+StreamTriad", None).unwrap();
+    let sweep = SweepSpec::new(
+        vec![
+            SweepWorkload::from(offline),
+            SweepWorkload::from(ScheduledWorkload::new(
+                tenants,
+                SchedulePolicy::BandwidthFair,
+            )),
+        ],
+        registry.resolve_list("baseline").unwrap(),
+    );
+    let records = SweepRunner::new(&registry)
+        .run(&sweep, &StrategyCtx::default(), &mut [])
+        .unwrap();
+    let off = records[0].result.as_ref().unwrap();
+    let sched = records[1].result.as_ref().unwrap();
+    // same total work…
+    assert_eq!(off.outcome.stats.accesses, sched.outcome.stats.accesses);
+    // …different (state-reactive) execution
+    assert_ne!(
+        off.outcome.stats.cycles, sched.outcome.stats.cycles,
+        "BandwidthFair must not degenerate to the offline merge order"
+    );
+}
+
+/// Whole-trace oracle strategies cannot drive a scheduled cell: the
+/// cell fails with an actionable error, the sweep itself survives.
+#[test]
+fn scheduled_cell_rejects_trace_oracle_strategies() {
+    let registry = StrategyRegistry::builtin();
+    assert!(registry.get("demand-belady").unwrap().needs_trace);
+    assert!(!registry.get("baseline").unwrap().needs_trace);
+    let tenants = parse_tenants("NW+Hotspot", None).unwrap();
+    let sweep = SweepSpec::new(
+        vec![SweepWorkload::from(ScheduledWorkload::new(
+            tenants,
+            SchedulePolicy::RoundRobin,
+        ))],
+        registry.resolve_list("demand-belady,baseline").unwrap(),
+    );
+    let records = SweepRunner::new(&registry)
+        .run(&sweep, &StrategyCtx::default(), &mut [])
+        .unwrap();
+    assert_eq!(records.len(), 2);
+    let err = records[0].result.as_ref().unwrap_err();
+    assert!(err.contains("demand-belady"), "{err}");
+    assert!(err.contains("oracle"), "{err}");
+    assert!(records[1].result.is_ok(), "baseline cell must still run");
+}
+
+/// Scheduled cells honour per-level crash thresholds on the combined
+/// run, reported as a crashed cell (not an error).
+#[test]
+fn scheduled_cell_crashes_on_combined_threshold() {
+    let registry = StrategyRegistry::builtin();
+    let tenants = parse_tenants("BICG+BICG", None).unwrap();
+    let sweep = SweepSpec::new(
+        vec![SweepWorkload::from(ScheduledWorkload::new(
+            tenants,
+            SchedulePolicy::RoundRobin,
+        ))],
+        registry.resolve_list("baseline").unwrap(),
+    )
+    .with_oversub(vec![150])
+    .with_crash_threshold_at(150, 10);
+    let records = SweepRunner::new(&registry)
+        .run(&sweep, &StrategyCtx::default(), &mut [])
+        .unwrap();
+    let cell = records[0].result.as_ref().unwrap();
+    assert!(cell.outcome.crashed, "combined run must trip the threshold");
+    let consumed: u64 = cell.tenants.iter().map(|t| t.accesses).sum();
+    assert_eq!(consumed, cell.outcome.stats.accesses);
 }
 
 #[test]

@@ -371,6 +371,25 @@ fn repro_binary_corpus_workflow() {
     assert!(csv_report.contains("webapp,baseline"), "{csv_report}");
     assert!(csv_report.contains("webapp,uvmsmart"), "{csv_report}");
 
+    // one-off streamed run over the imported entry: the .uvmt decodes
+    // access by access through a Session (O(1) memory), with mid-run
+    // progress snapshots on stderr
+    let out = run(&[
+        "simulate", "--stream", "corpus:webapp", "--strategy", "demand-lru",
+        "--oversub", "125", "--corpus", corpus_s, "--progress", "100",
+    ]);
+    assert!(out.contains(".uvmt streamed"), "{out}");
+    assert!(out.contains("IPC"), "{out}");
+
+    // a scheduler-backed multi-tenant sweep cell: tenants time-sliced
+    // online instead of pre-interleaved offline
+    let out = run(&[
+        "sweep", "--corpus", corpus_s, "--workloads", "sched:webapp+ATAX",
+        "--strategies", "baseline", "--schedule", "bandwidth-fair",
+        "--reports", reports_s,
+    ]);
+    assert!(out.contains("sched:webapp+ATAX@bandwidth-fair"), "{out}");
+
     // export the imported trace back out as CSV (streamed) — the
     // inverse of import — and re-import it under a new name
     let exported = dir.join("webapp-export.csv");

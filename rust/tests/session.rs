@@ -21,7 +21,8 @@ use uvmio::coordinator::{
 };
 use uvmio::corpus::{CorpusStore, TraceReader};
 use uvmio::sim::{
-    Arena, MetricsSnapshot, Observer, Session, SimEvent, Stats,
+    Arena, CoherentLink, MetricsSnapshot, Observer, Session, SimEvent, Stats,
+    TableV,
 };
 use uvmio::trace::multi::interleave;
 use uvmio::trace::workloads::Workload;
@@ -140,6 +141,7 @@ fn assert_monotone(prev: &MetricsSnapshot, next: &MetricsSnapshot) {
         (prev.thrash_events, next.thrash_events, "thrash_events"),
         (prev.thrashed_unique, next.thrashed_unique, "thrashed_unique"),
         (prev.evicted_unique, next.evicted_unique, "evicted_unique"),
+        (prev.link_busy_cycles, next.link_busy_cycles, "link_busy_cycles"),
     ];
     for (p, n, name) in pairs {
         assert!(p <= n, "{name} went backwards: {p} -> {n}");
@@ -326,6 +328,136 @@ fn fault_aware_schedule_diverges_from_offline_interleave() {
         fault_aware.outcome.stats.cycles,
         "FaultAware must not degenerate to the offline merge order"
     );
+}
+
+/// Cost-model refactor pin: a session with an *explicitly* constructed
+/// Table V model is byte-identical to the default, for every builtin
+/// workload (the default IS TableV, and `with_cost_model` introduces no
+/// drift).
+#[test]
+fn explicit_table_v_cost_model_matches_default() {
+    let registry = StrategyRegistry::builtin();
+    for w in [Workload::Atax, Workload::Hotspot, Workload::Nw] {
+        let trace = w.generate(Scale::default(), 42);
+        let spec = RunSpec::new(&trace, 125);
+        let reference = registry
+            .run("baseline", &spec, &StrategyCtx::default())
+            .unwrap()
+            .outcome;
+
+        let policy = build_policy(&registry, "baseline", &spec);
+        let mut session =
+            Session::new(spec.cfg.clone(), Arena::of_trace(&trace), policy)
+                .with_cost_model(Box::new(TableV::new(&spec.cfg)));
+        session.feed(trace.accesses.iter().copied());
+        assert_eq!(session.finish(), reference, "{}: TableV != default", w.name());
+    }
+}
+
+/// Swapping the cost model changes the cycle bill, never the simulation
+/// flow: under the Grace-Hopper-style coherent-link model the same
+/// faults occur, the same pages migrate, and the run is strictly
+/// cheaper than over PCIe.
+#[test]
+fn coherent_link_model_changes_cycles_not_flow() {
+    let registry = StrategyRegistry::builtin();
+    let trace = Workload::Bicg.generate(Scale::default(), 42);
+    let spec = RunSpec::new(&trace, 125);
+    let reference = registry
+        .run("baseline", &spec, &StrategyCtx::default())
+        .unwrap()
+        .outcome;
+
+    let policy = build_policy(&registry, "baseline", &spec);
+    let mut session =
+        Session::new(spec.cfg.clone(), Arena::of_trace(&trace), policy)
+            .with_cost_model(Box::new(CoherentLink::new(&spec.cfg)));
+    session.feed(trace.accesses.iter().copied());
+    let coherent = session.finish();
+
+    let (c, p) = (&coherent.stats, &reference.stats);
+    assert_eq!(c.faults, p.faults, "flow must not depend on the cost model");
+    assert_eq!(c.migrations, p.migrations);
+    assert_eq!(c.evictions, p.evictions);
+    assert_eq!(c.hits, p.hits);
+    assert_eq!(c.thrash_events, p.thrash_events);
+    assert_eq!(c.instructions, p.instructions);
+    assert!(
+        c.cycles < p.cycles,
+        "coherent link ({}) must undercut PCIe ({})",
+        c.cycles,
+        p.cycles
+    );
+}
+
+/// The acceptance criterion for per-tenant cycle attribution: under
+/// EVERY schedule policy, tenant cycles sum exactly to the combined
+/// run's `Stats.cycles` (every charge flows through the clock's choke
+/// point), and the same holds for accesses/hits/faults.
+#[test]
+fn tenant_cycles_sum_to_combined_run_under_every_schedule() {
+    let registry = StrategyRegistry::builtin();
+    let a = Workload::Atax.generate(Scale::default(), 42);
+    let b = Workload::Hotspot.generate(Scale::default(), 43);
+    let merged = interleave(&a, &b);
+    let spec = RunSpec::new(&merged, 125);
+    for schedule in SchedulePolicy::ALL {
+        let out = MultiTenantScheduler::new()
+            .with_schedule(schedule)
+            .add_tenant(TenantSpec::from_trace(&a))
+            .add_tenant(TenantSpec::from_trace(&b))
+            .run(125, build_policy(&registry, "baseline", &spec))
+            .unwrap();
+        let cycle_sum: u64 = out.tenants.iter().map(|t| t.cycles).sum();
+        assert_eq!(
+            cycle_sum,
+            out.outcome.stats.cycles,
+            "{}: tenant cycles must sum to the combined run",
+            schedule.name()
+        );
+        let acc_sum: u64 = out.tenants.iter().map(|t| t.accesses).sum();
+        assert_eq!(acc_sum, out.outcome.stats.accesses, "{}", schedule.name());
+        for t in &out.tenants {
+            assert!(t.cycles > 0, "{}: live tenant bills cycles", t.name);
+        }
+    }
+}
+
+/// Observer asserting snapshot monotonicity on every event it sees.
+struct MonotoneChecker {
+    prev: MetricsSnapshot,
+}
+
+impl Observer for MonotoneChecker {
+    fn on_event(&mut self, _event: &SimEvent, stats: &Stats) {
+        let next = stats.snapshot();
+        assert_monotone(&self.prev, &next);
+        self.prev = next;
+    }
+}
+
+/// `MetricsSnapshot` stays monotone under the scheduler: interleaving
+/// tenants (and throttling them mid-run) never makes any combined
+/// counter go backwards.
+#[test]
+fn snapshots_stay_monotone_under_the_scheduler() {
+    let registry = StrategyRegistry::builtin();
+    let a = Workload::Atax.generate(Scale::default(), 42);
+    let b = Workload::StreamTriad.generate(Scale::default(), 43);
+    let merged = interleave(&a, &b);
+    let spec = RunSpec::new(&merged, 150);
+    for schedule in [SchedulePolicy::BandwidthFair, SchedulePolicy::FaultAware] {
+        let out = MultiTenantScheduler::new()
+            .with_schedule(schedule)
+            .add_tenant(TenantSpec::from_trace(&a))
+            .add_tenant(TenantSpec::from_trace(&b))
+            .add_observer(Box::new(MonotoneChecker {
+                prev: MetricsSnapshot::default(),
+            }))
+            .run(150, build_policy(&registry, "baseline", &spec))
+            .unwrap();
+        assert!(out.outcome.stats.faults > 0);
+    }
 }
 
 /// Determinism: driving the same session twice (including through the
