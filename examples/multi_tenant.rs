@@ -49,7 +49,11 @@ fn main() -> anyhow::Result<()> {
         "schedule", "A faults", "B faults", "A cycles", "B cycles",
         "A link%", "thrash", "ipc"
     );
-    for schedule in SchedulePolicy::ALL {
+    let mut schedules: Vec<SchedulePolicy> = SchedulePolicy::ALL.to_vec();
+    // priority/QoS-weighted time-slicing: tenant A gets 3 slots per B slot
+    schedules.push(SchedulePolicy::Weighted(vec![3, 1]));
+    for schedule in schedules {
+        let label = schedule.name();
         let out = MultiTenantScheduler::new()
             .with_schedule(schedule)
             .add_tenant(TenantSpec::from_trace(&ta))
@@ -63,7 +67,7 @@ fn main() -> anyhow::Result<()> {
         let link_total = (a.link_cycles + b.link_cycles).max(1);
         println!(
             "{:<14} {:>10} {:>10} {:>12} {:>12} {:>7.1}% {:>7} {:>8.4}",
-            schedule.name(),
+            label,
             a.faults,
             b.faults,
             a.cycles,

@@ -24,7 +24,7 @@ fn main() {
     let trace = Workload::Hotspot.generate(Scale::default(), 42);
     let events = trace.accesses.len() as u64;
 
-    for s in ["baseline", "uvmsmart", "demand-belady"] {
+    for s in ["baseline", "uvmsmart", "demand-belady", "tree-evict"] {
         let spec = RunSpec::new(&trace, 125);
         let name = format!("cell/Hotspot@125/{s}");
         b.bench(&name, events, || {

@@ -133,7 +133,7 @@ fn main() {
                     .build(&spec, &ctx)
                     .unwrap();
                 let out = MultiTenantScheduler::new()
-                    .with_schedule(schedule)
+                    .with_schedule(schedule.clone())
                     .add_tenant(TenantSpec::from_trace(&a))
                     .add_tenant(TenantSpec::from_trace(&bt))
                     .run(125, policy)

@@ -4,11 +4,14 @@
 //! oversubscription) grid; this module is the one front door to it:
 //!
 //! * [`StrategyRegistry`] — an **open** registry of named strategies.
-//!   The eight paper strategies come pre-registered
-//!   ([`StrategyRegistry::builtin`]); new ones are a single
+//!   The paper strategies come pre-registered
+//!   ([`StrategyRegistry::builtin`], including the pre-eviction
+//!   `tree-evict` configuration); new ones are a single
 //!   [`StrategyRegistry::register`] call with a [`StrategySpec`]
-//!   (factory + display name + needs-artifacts flag + paper-table
-//!   membership). No enum to extend, no driver fork to mirror.
+//!   (a `Box<dyn DecisionPolicy>` factory + display name +
+//!   needs-artifacts flag + paper-table membership — old-style pull
+//!   policies register via [`crate::policy::LegacyPolicyAdapter`]).
+//!   No enum to extend, no driver fork to mirror.
 //! * [`StrategyRegistry::run`] — execute one grid cell for any
 //!   registered name, with the §V-C prediction-overhead post-pass
 //!   applied uniformly via [`crate::policy::PolicyInstrumentation`].

@@ -4,10 +4,13 @@
 //!
 //! The registry replaces the old closed `Strategy` enum and the forked
 //! `run_rule_based` / `run_intelligent` drivers: every strategy — the
-//! paper's eight and anything registered at runtime — executes through
-//! the single [`StrategyRegistry::run`] path, which drives the engine,
+//! builtins and anything registered at runtime — executes through the
+//! single [`StrategyRegistry::run`] path, which drives the engine,
 //! reads [`crate::policy::PolicyInstrumentation`] off the policy, and
-//! applies the §V-C prediction-overhead post-pass uniformly.
+//! applies the §V-C prediction-overhead post-pass uniformly. Factories
+//! produce [`crate::policy::DecisionPolicy`] trait objects (the
+//! directive protocol); old-style pull policies register by wrapping
+//! themselves in a [`crate::policy::LegacyPolicyAdapter`].
 //!
 //! A cell's trace arrives via the [`RunSpec`]; grid executors obtain it
 //! from the shared [`crate::corpus::TraceCache`] (one immutable
@@ -27,12 +30,13 @@ use crate::policy::composite::Composite;
 use crate::policy::hpe::Hpe;
 use crate::policy::lru::Lru;
 use crate::policy::random::RandomEvict;
+use crate::policy::tree_evict::TreeEvict;
 use crate::policy::tree_prefetch::TreePrefetcher;
 use crate::policy::uvmsmart::UvmSmart;
-use crate::policy::{DemandOnly, Policy, PolicyInstrumentation};
+use crate::policy::{DecisionPolicy, DemandOnly, PolicyInstrumentation};
 use crate::predictor::{FeatDims, IntelligentConfig, IntelligentPolicy};
 use crate::runtime::{ModelRuntime, Runtime};
-use crate::sim::{Arena, Observer, RunOutcome, Session};
+use crate::sim::{Arena, CostModelKind, Observer, RunOutcome, Session};
 
 /// Paper tables a strategy appears in (metadata only; experiments may
 /// select strategies by membership instead of hard-coding name lists).
@@ -49,8 +53,13 @@ pub enum PaperTable {
 /// Shared, thread-safe policy factory. Factories must be pure with
 /// respect to the run: everything cell-specific arrives via the
 /// [`RunSpec`] (trace, capacity) and [`StrategyCtx`] (model handles).
-pub type StrategyFactory =
-    Arc<dyn Fn(&RunSpec<'_>, &StrategyCtx) -> Result<Box<dyn Policy>> + Send + Sync>;
+/// Old-style pull policies are registered by wrapping them in a
+/// [`crate::policy::LegacyPolicyAdapter`] inside the factory.
+pub type StrategyFactory = Arc<
+    dyn Fn(&RunSpec<'_>, &StrategyCtx) -> Result<Box<dyn DecisionPolicy>>
+        + Send
+        + Sync,
+>;
 
 /// Everything a factory may need beyond the run itself. Rule-based
 /// strategies ignore it; artifact-backed strategies read the compiled
@@ -120,7 +129,7 @@ impl StrategySpec {
     /// A new spec with no table membership and no artifact requirement.
     pub fn new<F>(name: &str, display: &str, factory: F) -> StrategySpec
     where
-        F: Fn(&RunSpec<'_>, &StrategyCtx) -> Result<Box<dyn Policy>>
+        F: Fn(&RunSpec<'_>, &StrategyCtx) -> Result<Box<dyn DecisionPolicy>>
             + Send
             + Sync
             + 'static,
@@ -160,7 +169,7 @@ impl StrategySpec {
         &self,
         spec: &RunSpec<'_>,
         ctx: &StrategyCtx,
-    ) -> Result<Box<dyn Policy>> {
+    ) -> Result<Box<dyn DecisionPolicy>> {
         (self.factory)(spec, ctx)
     }
 }
@@ -221,9 +230,10 @@ impl StrategyRegistry {
         StrategyRegistry { order: Vec::new(), entries: BTreeMap::new() }
     }
 
-    /// The paper's eight strategies, pre-registered under their CLI
-    /// names: `baseline`, `demand-hpe`, `tree-hpe`, `demand-belady`,
-    /// `demand-lru`, `demand-random`, `uvmsmart`, `intelligent`.
+    /// The paper's strategies, pre-registered under their CLI names:
+    /// `baseline`, `demand-hpe`, `tree-hpe`, `tree-evict` (the proactive
+    /// pre-eviction configuration), `demand-belady`, `demand-lru`,
+    /// `demand-random`, `uvmsmart`, `intelligent`.
     pub fn builtin() -> StrategyRegistry {
         use PaperTable::*;
         let mut r = StrategyRegistry::empty();
@@ -236,6 +246,12 @@ impl StrategyRegistry {
             .in_tables(&[TableI, TableII, TableVI]));
         reg(StrategySpec::new("tree-hpe", "Tree.+HPE", tree_hpe_factory)
             .in_tables(&[TableII, TableVI]));
+        reg(StrategySpec::new(
+            "tree-evict",
+            "Tree.+PreEvict",
+            tree_evict_factory,
+        )
+        .in_tables(&[TableI]));
         reg(StrategySpec::new(
             "demand-belady",
             "Demand.+Belady.",
@@ -341,6 +357,11 @@ impl StrategyRegistry {
         let policy = entry.build(spec, ctx)?;
         let mut session =
             Session::new(spec.cfg.clone(), Arena::of_trace(spec.trace), policy);
+        if spec.cost_model != CostModelKind::default() {
+            // the default TableV stays on the statically-dispatched fast
+            // path; only non-default models swap the clock
+            session = session.with_cost_model(spec.cost_model.build(&spec.cfg));
+        }
         if let Some(t) = spec.crash_threshold {
             session = session.with_crash_threshold(t);
         }
@@ -369,56 +390,70 @@ impl StrategyRegistry {
 fn baseline_factory(
     _spec: &RunSpec<'_>,
     _ctx: &StrategyCtx,
-) -> Result<Box<dyn Policy>> {
+) -> Result<Box<dyn DecisionPolicy>> {
     Ok(Box::new(Composite::new(TreePrefetcher::new(), Lru::new())))
 }
 
 fn demand_hpe_factory(
     _spec: &RunSpec<'_>,
     _ctx: &StrategyCtx,
-) -> Result<Box<dyn Policy>> {
+) -> Result<Box<dyn DecisionPolicy>> {
     Ok(Box::new(Composite::new(DemandOnly, Hpe::new())))
 }
 
 fn tree_hpe_factory(
     _spec: &RunSpec<'_>,
     _ctx: &StrategyCtx,
-) -> Result<Box<dyn Policy>> {
+) -> Result<Box<dyn DecisionPolicy>> {
     Ok(Box::new(Composite::new(TreePrefetcher::new(), Hpe::new())))
+}
+
+/// Ganguly et al.'s tree pre-eviction, in its directive configuration:
+/// the drain queue is emitted as background `pre_evict` directives and
+/// prefetch bursts are bounded by available frames — the first builtin
+/// whose eviction traffic overlaps compute.
+fn tree_evict_factory(
+    _spec: &RunSpec<'_>,
+    _ctx: &StrategyCtx,
+) -> Result<Box<dyn DecisionPolicy>> {
+    Ok(Box::new(
+        Composite::new(TreePrefetcher::new(), TreeEvict::proactive())
+            .with_pressure_aware_prefetch(),
+    ))
 }
 
 fn demand_belady_factory(
     spec: &RunSpec<'_>,
     _ctx: &StrategyCtx,
-) -> Result<Box<dyn Policy>> {
+) -> Result<Box<dyn DecisionPolicy>> {
     Ok(Box::new(Composite::new(DemandOnly, Belady::new(spec.trace))))
 }
 
 fn demand_lru_factory(
     _spec: &RunSpec<'_>,
     _ctx: &StrategyCtx,
-) -> Result<Box<dyn Policy>> {
+) -> Result<Box<dyn DecisionPolicy>> {
     Ok(Box::new(Composite::new(DemandOnly, Lru::new())))
 }
 
 fn demand_random_factory(
     _spec: &RunSpec<'_>,
     _ctx: &StrategyCtx,
-) -> Result<Box<dyn Policy>> {
+) -> Result<Box<dyn DecisionPolicy>> {
     Ok(Box::new(Composite::new(DemandOnly, RandomEvict::new(7))))
 }
 
 fn uvmsmart_factory(
     spec: &RunSpec<'_>,
     _ctx: &StrategyCtx,
-) -> Result<Box<dyn Policy>> {
+) -> Result<Box<dyn DecisionPolicy>> {
     Ok(Box::new(UvmSmart::new(spec.cfg.capacity_pages)))
 }
 
 fn intelligent_factory(
     _spec: &RunSpec<'_>,
     ctx: &StrategyCtx,
-) -> Result<Box<dyn Policy>> {
+) -> Result<Box<dyn DecisionPolicy>> {
     let model = ctx.model.clone().ok_or_else(|| {
         anyhow!(
             "strategy 'intelligent' needs AOT artifacts: load a Runtime \

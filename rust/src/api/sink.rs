@@ -31,6 +31,7 @@ const COLUMNS: &[&str] = &[
     "strategy",
     "oversub",
     "seed",
+    "cost_model",
     "status",
     "thrash_events",
     "unique_thrashed",
@@ -40,6 +41,9 @@ const COLUMNS: &[&str] = &[
     "evictions",
     "prefetches",
     "garbage_prefetches",
+    "pre_evictions",
+    "evictions_avoided",
+    "background_link_cycles",
     "zero_copy",
     "delayed_remote",
     "cycles",
@@ -49,6 +53,10 @@ const COLUMNS: &[&str] = &[
     "predictions",
     "error",
 ];
+
+/// Cell-coordinate columns preceding `status` (the prefix every row —
+/// including error rows — carries).
+const ID_COLUMNS: usize = 6;
 
 fn status_of(rec: &CellRecord) -> &'static str {
     match &rec.result {
@@ -65,6 +73,7 @@ fn csv_fields(rec: &CellRecord) -> Vec<String> {
         c.strategy.clone(),
         c.oversub.to_string(),
         c.seed.to_string(),
+        c.cost_model.name().to_string(),
         status_of(rec).to_string(),
     ];
     match &rec.result {
@@ -79,6 +88,9 @@ fn csv_fields(rec: &CellRecord) -> Vec<String> {
                 s.evictions.to_string(),
                 s.prefetches.to_string(),
                 s.garbage_prefetches.to_string(),
+                s.pre_evictions.to_string(),
+                s.evictions_avoided.to_string(),
+                s.background_link_cycles.to_string(),
                 s.zero_copy.to_string(),
                 s.delayed_remote.to_string(),
                 s.cycles.to_string(),
@@ -90,7 +102,9 @@ fn csv_fields(rec: &CellRecord) -> Vec<String> {
             ]);
         }
         Err(e) => {
-            row.extend((0..COLUMNS.len() - 6).map(|_| String::new()));
+            row.extend(
+                (0..COLUMNS.len() - ID_COLUMNS - 1).map(|_| String::new()),
+            );
             row.push(e.clone());
         }
     }
@@ -108,6 +122,7 @@ pub fn record_to_json(rec: &CellRecord) -> Json {
     // 2^53 would silently round — the CSV and JSONL reports must agree
     // exactly for a cell to be reproducible
     m.insert("seed".into(), Json::Str(c.seed.to_string()));
+    m.insert("cost_model".into(), Json::Str(c.cost_model.name().into()));
     m.insert("status".into(), Json::Str(status_of(rec).into()));
     match &rec.result {
         Ok(r) => {
@@ -130,6 +145,9 @@ pub fn record_to_json(rec: &CellRecord) -> Json {
             num("delayed_remote", s.delayed_remote);
             num("prefetches", s.prefetches);
             num("garbage_prefetches", s.garbage_prefetches);
+            num("pre_evictions", s.pre_evictions);
+            num("evictions_avoided", s.evictions_avoided);
+            num("background_link_cycles", s.background_link_cycles);
             num("thrash_events", s.thrash_events);
             num("unique_thrashed", s.thrashed_pages.len() as u64);
             num("unique_evicted", s.evicted_pages.len() as u64);

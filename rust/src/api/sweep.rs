@@ -39,7 +39,7 @@ use crate::coordinator::{
     MultiTenantScheduler, RunSpec, SchedulePolicy, TenantSpec,
 };
 use crate::corpus::{TraceCache, TraceSource};
-use crate::sim::{Observer, SimEvent, Stats};
+use crate::sim::{CostModelKind, MetricsSnapshot, Observer, SimEvent};
 use crate::trace::workloads::Workload;
 use crate::trace::Trace;
 
@@ -144,6 +144,9 @@ pub struct SweepSpec {
     /// per-oversubscription-level crash thresholds (Fig 14: crashes are
     /// a phenomenon of *specific* levels — 150% crashes, 125% does not)
     pub crash_threshold_at: BTreeMap<u32, u64>,
+    /// timing model pricing every cell (default Table V); recorded as a
+    /// per-cell column in the CSV/JSONL reports
+    pub cost_model: CostModelKind,
 }
 
 impl SweepSpec {
@@ -160,6 +163,7 @@ impl SweepSpec {
             scale: Scale::default(),
             crash_threshold: None,
             crash_threshold_at: BTreeMap::new(),
+            cost_model: CostModelKind::default(),
         }
     }
 
@@ -175,6 +179,14 @@ impl SweepSpec {
 
     pub fn with_scale(mut self, scale: Scale) -> SweepSpec {
         self.scale = scale;
+        self
+    }
+
+    /// Price every cell with a non-default [`CostModelKind`]
+    /// (`repro sweep --cost-model coherent-link`). Identical simulation
+    /// flow, different cycle bill.
+    pub fn with_cost_model(mut self, kind: CostModelKind) -> SweepSpec {
+        self.cost_model = kind;
         self
     }
 
@@ -221,6 +233,9 @@ pub struct CellId {
     pub strategy: String,
     pub oversub: u32,
     pub seed: u64,
+    /// the timing model that priced this cell (a report column: grids
+    /// swept under different models stay distinguishable downstream)
+    pub cost_model: CostModelKind,
 }
 
 /// One executed cell: its coordinates plus either the full result or the
@@ -413,6 +428,7 @@ fn run_one(
         strategy: cell.strategy.clone(),
         oversub: cell.oversub,
         seed: cell.seed,
+        cost_model: sweep.cost_model,
     };
     let label = format!(
         "{}/{}@{}% r{}",
@@ -450,7 +466,8 @@ fn run_single_cell(
         }
         SweepWorkload::Scheduled(_) => unreachable!("dispatched in run_one"),
     };
-    let mut spec = RunSpec::new(&trace, cell.oversub);
+    let mut spec =
+        RunSpec::new(&trace, cell.oversub).with_cost_model(sweep.cost_model);
     if let Some(t) = sweep.crash_threshold_for(cell.oversub) {
         spec = spec.with_crash_threshold(t);
     }
@@ -520,12 +537,14 @@ fn run_scheduled_cell(
         oversub_percent: cell.oversub,
         cfg,
         crash_threshold: sweep.crash_threshold_for(cell.oversub),
+        cost_model: sweep.cost_model,
     };
     let policy = entry.build(&spec, ctx)?;
 
     let mut sched = MultiTenantScheduler::new()
-        .with_schedule(sched_workload.schedule)
-        .with_config(spec.cfg.clone());
+        .with_schedule(sched_workload.schedule.clone())
+        .with_config(spec.cfg.clone())
+        .with_cost_model(sweep.cost_model);
     for t in &traces {
         sched = sched.add_tenant(TenantSpec::from_trace(t));
     }
@@ -577,34 +596,43 @@ impl ProgressObserver {
         ProgressObserver { label, every, next_at: every, total_accesses }
     }
 
-    fn report(&self, stats: &Stats, crashed: bool) {
+    fn report(&self, snap: &MetricsSnapshot, crashed: bool) {
         let pct = if self.total_accesses == 0 {
             0.0
         } else {
-            100.0 * stats.accesses as f64 / self.total_accesses as f64
+            100.0 * snap.accesses as f64 / self.total_accesses as f64
         };
         eprintln!(
-            "[{}] {:5.1}%  {} accesses, {} faults, {} migrations, {} thrash, ipc {:.4}{}",
+            "[{}] {:5.1}%  {} accesses, {} faults, {} migrations, {} thrash, \
+             link {} busy ({} bg), ipc {:.4}{}",
             self.label,
             pct,
-            stats.accesses,
-            stats.faults,
-            stats.migrations,
-            stats.thrash_events,
-            stats.ipc(),
+            snap.accesses,
+            snap.faults,
+            snap.migrations,
+            snap.thrash_events,
+            snap.link_busy_cycles,
+            snap.background_link_cycles,
+            snap.ipc(),
             if crashed { "  CRASHED" } else { "" },
         );
     }
 }
 
 impl Observer for ProgressObserver {
-    fn on_event(&mut self, event: &SimEvent, stats: &Stats) {
+    /// Only faults and crashes can trigger a report line — migrations,
+    /// evictions and thrash events cost the session nothing here.
+    fn interested(&self, event: &SimEvent) -> bool {
+        matches!(event, SimEvent::Fault { .. } | SimEvent::Crash { .. })
+    }
+
+    fn on_event(&mut self, event: &SimEvent, snap: &MetricsSnapshot) {
         match event {
-            SimEvent::Fault { .. } if stats.faults >= self.next_at => {
-                self.next_at = stats.faults + self.every;
-                self.report(stats, false);
+            SimEvent::Fault { .. } if snap.faults >= self.next_at => {
+                self.next_at = snap.faults + self.every;
+                self.report(snap, false);
             }
-            SimEvent::Crash { .. } => self.report(stats, true),
+            SimEvent::Crash { .. } => self.report(snap, true),
             _ => {}
         }
     }

@@ -11,7 +11,7 @@
 use crate::config::SimConfig;
 use crate::predictor::FeatDims;
 use crate::runtime::Runtime;
-use crate::sim::RunOutcome;
+use crate::sim::{CostModelKind, RunOutcome};
 use crate::trace::Trace;
 
 pub use crate::api::CellResult;
@@ -23,6 +23,8 @@ pub struct RunSpec<'a> {
     pub cfg: SimConfig,
     /// crash emulation threshold (thrash events); None = never crash
     pub crash_threshold: Option<u64>,
+    /// timing model pricing the run (default: the paper's Table V)
+    pub cost_model: CostModelKind,
 }
 
 impl<'a> RunSpec<'a> {
@@ -31,11 +33,25 @@ impl<'a> RunSpec<'a> {
         // actually touches (chunk-alignment padding is never resident)
         let cfg = SimConfig::default()
             .with_oversubscription(trace.touched_pages, oversub_percent);
-        RunSpec { trace, oversub_percent, cfg, crash_threshold: None }
+        RunSpec {
+            trace,
+            oversub_percent,
+            cfg,
+            crash_threshold: None,
+            cost_model: CostModelKind::default(),
+        }
     }
 
     pub fn with_crash_threshold(mut self, t: u64) -> Self {
         self.crash_threshold = Some(t);
+        self
+    }
+
+    /// Price the run with a non-default [`CostModelKind`] (the flow —
+    /// faults, migrations, evictions — is model-independent; only the
+    /// cycle bill changes).
+    pub fn with_cost_model(mut self, kind: CostModelKind) -> Self {
+        self.cost_model = kind;
         self
     }
 }

@@ -20,7 +20,12 @@
 //! [`SchedulePolicy::FaultAware`](multi::SchedulePolicy) and
 //! [`SchedulePolicy::BandwidthFair`](multi::SchedulePolicy) react to
 //! simulation state (fault counts, link occupancy) the way an offline
-//! merge never can.
+//! merge never can, and
+//! [`SchedulePolicy::Weighted`](multi::SchedulePolicy) time-slices by
+//! per-tenant priority/QoS weights (`--schedule weighted:3,1`).
+//! Scheduler-driven policies speak the directive protocol
+//! ([`crate::policy::DecisionPolicy`]), like every other session
+//! consumer.
 
 pub mod driver;
 pub mod multi;

@@ -38,13 +38,13 @@ use anyhow::{bail, Context, Result};
 
 use crate::config::{PAGES_PER_BB, SimConfig};
 use crate::policy::dfa::classify_blocks;
-use crate::policy::{Policy, PolicyInstrumentation};
+use crate::policy::{DecisionPolicy, PolicyInstrumentation};
 use crate::predictor::features::{
     pack_batch, FeatDims, Sample,
 };
 use crate::predictor::model_table::ModelTable;
 use crate::runtime::ModelRuntime;
-use crate::sim::{Arena, Observer, RunOutcome, Session};
+use crate::sim::{Arena, CostModelKind, Observer, RunOutcome, Session};
 use crate::trace::multi::{interleave, tenant_of};
 use crate::trace::{Access, Trace};
 use crate::util::rng::Rng;
@@ -60,7 +60,7 @@ const PC_STRIDE: u32 = 1 << 12;
 const TB_STRIDE: u32 = 1 << 14;
 
 /// How the scheduler picks which live tenant issues the next access.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
 pub enum SchedulePolicy {
     /// Largest-remainder progress scheduling: advance the tenant whose
     /// completed fraction is lowest (ties to the lower index). With two
@@ -82,10 +82,20 @@ pub enum SchedulePolicy {
     /// the link — demand transfers, prefetches, writebacks all count —
     /// is throttled until the others catch up on link time.
     BandwidthFair,
+    /// Priority/QoS-weighted time-slicing: tenant `i` receives issue
+    /// slots in proportion to `weights[i]` (deterministic
+    /// largest-remainder — advance the live tenant with the lowest
+    /// `produced/weight` ratio, ties to the lower index). Tenants
+    /// beyond the weight vector default to weight 1; a zero weight is
+    /// rejected at parse time and clamped to 1 if constructed directly.
+    /// CLI: `--schedule weighted:3,1`.
+    Weighted(Vec<u32>),
 }
 
 impl SchedulePolicy {
-    /// Every policy, in CLI/display order.
+    /// Every non-parameterized policy, in CLI/display order
+    /// ([`SchedulePolicy::Weighted`] needs a weight vector and is
+    /// spelled `weighted:W1,W2,…`).
     pub const ALL: [SchedulePolicy; 4] = [
         SchedulePolicy::Proportional,
         SchedulePolicy::RoundRobin,
@@ -94,19 +104,43 @@ impl SchedulePolicy {
     ];
 
     /// Stable kebab-case name (CLI selector, sweep cell labels).
-    pub fn name(&self) -> &'static str {
+    /// Weighted schedules carry their weights: `weighted:3,1`.
+    pub fn name(&self) -> String {
         match self {
-            SchedulePolicy::Proportional => "proportional",
-            SchedulePolicy::RoundRobin => "round-robin",
-            SchedulePolicy::FaultAware => "fault-aware",
-            SchedulePolicy::BandwidthFair => "bandwidth-fair",
+            SchedulePolicy::Proportional => "proportional".into(),
+            SchedulePolicy::RoundRobin => "round-robin".into(),
+            SchedulePolicy::FaultAware => "fault-aware".into(),
+            SchedulePolicy::BandwidthFair => "bandwidth-fair".into(),
+            SchedulePolicy::Weighted(w) => format!(
+                "weighted:{}",
+                w.iter()
+                    .map(u32::to_string)
+                    .collect::<Vec<_>>()
+                    .join(",")
+            ),
         }
     }
 
     /// Parse a CLI selector (case-insensitive; `rr` is accepted for
-    /// round-robin).
+    /// round-robin; `weighted:3,1` carries per-tenant weights, all of
+    /// which must be positive integers).
     pub fn from_name(s: &str) -> Option<SchedulePolicy> {
-        match s.to_ascii_lowercase().as_str() {
+        let s = s.to_ascii_lowercase();
+        if let Some(spec) = s.strip_prefix("weighted:") {
+            let mut weights = Vec::new();
+            for part in spec.split(',') {
+                let w = part.trim().parse::<u32>().ok()?;
+                if w == 0 {
+                    return None; // a zero-weight tenant would starve
+                }
+                weights.push(w);
+            }
+            if weights.is_empty() {
+                return None;
+            }
+            return Some(SchedulePolicy::Weighted(weights));
+        }
+        match s.as_str() {
             "proportional" => Some(SchedulePolicy::Proportional),
             "round-robin" | "rr" => Some(SchedulePolicy::RoundRobin),
             "fault-aware" => Some(SchedulePolicy::FaultAware),
@@ -225,6 +259,7 @@ pub struct MultiTenantScheduler<'a> {
     schedule: SchedulePolicy,
     crash_threshold: Option<u64>,
     cfg: Option<SimConfig>,
+    cost_model: CostModelKind,
     observers: Vec<Box<dyn Observer + 'a>>,
 }
 
@@ -256,6 +291,14 @@ impl<'a> MultiTenantScheduler<'a> {
         self
     }
 
+    /// Price the shared session with a non-default
+    /// [`crate::sim::CostModelKind`] — identical simulation flow,
+    /// different cycle bill, same per-tenant attribution invariants.
+    pub fn with_cost_model(mut self, kind: CostModelKind) -> Self {
+        self.cost_model = kind;
+        self
+    }
+
     /// Register a [`crate::sim::Observer`] on the shared session —
     /// mid-run observability (progress snapshots, event tracing) for
     /// the combined run, same as single-tenant sessions.
@@ -270,13 +313,14 @@ impl<'a> MultiTenantScheduler<'a> {
     pub fn run(
         self,
         oversub_percent: u32,
-        policy: Box<dyn Policy + 'a>,
+        policy: Box<dyn DecisionPolicy + 'a>,
     ) -> Result<MultiOutcome> {
         let MultiTenantScheduler {
             mut tenants,
             schedule,
             crash_threshold,
             cfg,
+            cost_model,
             observers,
         } = self;
         if tenants.is_empty() {
@@ -313,7 +357,10 @@ impl<'a> MultiTenantScheduler<'a> {
         let cfg = cfg
             .unwrap_or_default()
             .with_oversubscription(touched_total, oversub_percent);
-        let mut session = Session::new(cfg, shared_arena, policy);
+        let mut session = Session::new(cfg.clone(), shared_arena, policy);
+        if cost_model != CostModelKind::default() {
+            session = session.with_cost_model(cost_model.build(&cfg));
+        }
         if let Some(t) = crash_threshold {
             session = session.with_crash_threshold(t);
         }
@@ -351,7 +398,7 @@ impl<'a> MultiTenantScheduler<'a> {
 
         loop {
             let Some(ti) = pick_tenant(
-                schedule,
+                &schedule,
                 &tenants,
                 &produced,
                 &done,
@@ -424,7 +471,7 @@ impl<'a> MultiTenantScheduler<'a> {
 /// Pick the next tenant with input remaining, or `None` when all are
 /// done. Deterministic for every schedule.
 fn pick_tenant(
-    schedule: SchedulePolicy,
+    schedule: &SchedulePolicy,
     tenants: &[TenantSpec<'_>],
     produced: &[u64],
     done: &[bool],
@@ -482,6 +529,24 @@ fn pick_tenant(
                 }
             }
             best.map(|(i, _)| i)
+        }
+        SchedulePolicy::Weighted(weights) => {
+            // lowest produced/weight ratio wins (largest-remainder),
+            // ties to the lower index; cross-multiplied to stay
+            // integral, in u128 so huge streams cannot overflow
+            let mut best: Option<(usize, u128, u128)> = None;
+            for i in live {
+                let w = weights.get(i).copied().unwrap_or(1).max(1) as u128;
+                let p = produced[i] as u128;
+                let better = match best {
+                    Some((_, bp, bw)) => p * bw < bp * w,
+                    None => true,
+                };
+                if better {
+                    best = Some((i, p, w));
+                }
+            }
+            best.map(|(i, _, _)| i)
         }
     }
 }
@@ -612,7 +677,7 @@ mod tests {
     use crate::sim::Engine;
     use crate::trace::workloads::Workload;
 
-    fn demand_lru() -> Box<dyn Policy> {
+    fn demand_lru() -> Box<dyn DecisionPolicy> {
         Box::new(Composite::new(DemandOnly, Lru::new()))
     }
 
@@ -740,7 +805,10 @@ mod tests {
     fn tenant_cycles_sum_to_combined_run() {
         let pa: Vec<u64> = (0..32).cycle().take(200).collect();
         let pb: Vec<u64> = (0..8).cycle().take(200).collect();
-        for schedule in SchedulePolicy::ALL {
+        let mut schedules: Vec<SchedulePolicy> = SchedulePolicy::ALL.to_vec();
+        schedules.push(SchedulePolicy::Weighted(vec![3, 1]));
+        for schedule in schedules {
+            let name = schedule.name();
             let out = MultiTenantScheduler::new()
                 .with_schedule(schedule)
                 .add_tenant(synthetic_tenant("a", &pa))
@@ -749,13 +817,11 @@ mod tests {
                 .unwrap();
             let cycle_sum: u64 = out.tenants.iter().map(|t| t.cycles).sum();
             assert_eq!(
-                cycle_sum,
-                out.outcome.stats.cycles,
-                "{}: tenant cycles must sum to the combined run",
-                schedule.name()
+                cycle_sum, out.outcome.stats.cycles,
+                "{name}: tenant cycles must sum to the combined run",
             );
             for t in &out.tenants {
-                assert!(t.cycles > 0, "{}: live tenant bills cycles", t.name);
+                assert!(t.cycles > 0, "{name}: live tenant bills cycles");
             }
         }
     }
@@ -763,13 +829,70 @@ mod tests {
     #[test]
     fn schedule_policy_names_round_trip() {
         for p in SchedulePolicy::ALL {
-            assert_eq!(SchedulePolicy::from_name(p.name()), Some(p));
+            assert_eq!(SchedulePolicy::from_name(&p.name()), Some(p));
         }
         assert_eq!(
             SchedulePolicy::from_name("RR"),
             Some(SchedulePolicy::RoundRobin)
         );
+        let weighted = SchedulePolicy::Weighted(vec![3, 1]);
+        assert_eq!(weighted.name(), "weighted:3,1");
+        assert_eq!(
+            SchedulePolicy::from_name("weighted:3,1"),
+            Some(weighted)
+        );
+        assert_eq!(SchedulePolicy::from_name("weighted:"), None);
+        assert_eq!(SchedulePolicy::from_name("weighted:3,0"), None, "zero starves");
+        assert_eq!(SchedulePolicy::from_name("weighted:x"), None);
         assert_eq!(SchedulePolicy::from_name("nope"), None);
+    }
+
+    #[test]
+    fn weighted_schedule_allocates_slots_by_weight() {
+        // equal-length tenants, weights 3:1 — while both are live, A
+        // must issue three accesses for each of B's; with equal lengths
+        // A finishes first and B drains the tail.
+        let pa: Vec<u64> = (0..16).cycle().take(120).collect();
+        let pb: Vec<u64> = (0..16).cycle().take(120).collect();
+        let out = MultiTenantScheduler::new()
+            .with_schedule(SchedulePolicy::Weighted(vec![3, 1]))
+            .add_tenant(synthetic_tenant("hi", &pa))
+            .add_tenant(synthetic_tenant("lo", &pb))
+            .run(100, demand_lru())
+            .unwrap();
+        assert_eq!(out.tenants[0].accesses, 120);
+        assert_eq!(out.tenants[1].accesses, 120);
+        // at the moment A (weight 3) ran out, B (weight 1) had ~1/3 of
+        // its stream done: the combined run still completes both.
+        assert_eq!(out.outcome.stats.accesses, 240);
+    }
+
+    #[test]
+    fn weighted_ratio_holds_while_both_live() {
+        // deterministic largest-remainder: after 4k merged slots with
+        // weights 3:1, tenant A issued 3k and tenant B 1k. Observe it
+        // via a huge B stream so A's weight dominates until A drains.
+        let pa: Vec<u64> = vec![0; 300];
+        let pb: Vec<u64> = vec![0; 4000];
+        let out = MultiTenantScheduler::new()
+            .with_schedule(SchedulePolicy::Weighted(vec![3, 1]))
+            .add_tenant(synthetic_tenant("hi", &pa))
+            .add_tenant(synthetic_tenant("lo", &pb))
+            .run(100, demand_lru())
+            .unwrap();
+        // both streams complete regardless of weighting
+        assert_eq!(out.tenants[0].accesses, 300);
+        assert_eq!(out.tenants[1].accesses, 4000);
+        // missing weights default to 1: a third tenant still runs
+        let pc: Vec<u64> = vec![0; 50];
+        let out = MultiTenantScheduler::new()
+            .with_schedule(SchedulePolicy::Weighted(vec![2]))
+            .add_tenant(synthetic_tenant("a", &pa))
+            .add_tenant(synthetic_tenant("b", &pb))
+            .add_tenant(synthetic_tenant("c", &pc))
+            .run(100, demand_lru())
+            .unwrap();
+        assert_eq!(out.tenants[2].accesses, 50);
     }
 
     #[test]

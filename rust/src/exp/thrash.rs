@@ -18,12 +18,22 @@ fn thrash_of(ctx: &mut ExpContext, w: Workload, strategy: &str) -> Result<u64> {
     Ok(ctx.run_cell(&spec, strategy)?.outcome.stats.thrash_events)
 }
 
-/// Table I: pages thrashed @125% for Baseline / D.+HPE / UVMSmart /
-/// D.+Belady (the rule-based landscape + the oracle bound).
+/// Table I: pages thrashed @125% for the rule-based landscape — the
+/// paper's four columns plus the directive-API `tree-evict`
+/// configuration (tree prefetch + background pre-eviction), so the
+/// first strategy whose eviction traffic overlaps compute sits next to
+/// its reactive peers — and the oracle bound.
 pub fn table1(ctx: &mut ExpContext) -> Result<()> {
     let mut t = Table::new(
         "Table I — pages thrashed @125% oversubscription (rule-based)",
-        &["Benchmark", "Baseline", "D.+HPE", "UVMSmart", "D.+Belady."],
+        &[
+            "Benchmark",
+            "Baseline",
+            "D.+HPE",
+            "UVMSmart",
+            "T.+PreEvict",
+            "D.+Belady.",
+        ],
     );
     for w in Workload::ALL {
         t.row(vec![
@@ -31,6 +41,7 @@ pub fn table1(ctx: &mut ExpContext) -> Result<()> {
             thrash_of(ctx, w, "baseline")?.to_string(),
             thrash_of(ctx, w, "demand-hpe")?.to_string(),
             thrash_of(ctx, w, "uvmsmart")?.to_string(),
+            thrash_of(ctx, w, "tree-evict")?.to_string(),
             thrash_of(ctx, w, "demand-belady")?.to_string(),
         ]);
     }

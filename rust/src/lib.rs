@@ -22,10 +22,17 @@
 //! metrics mid-run, and the [`coordinator::MultiTenantScheduler`]
 //! time-slices N live tenants over one shared session for true online
 //! multi-tenancy. [`sim::Engine::run`] is a thin batch wrapper over the
-//! same core. Time itself is priced by the [`sim::clock`] layer: a
-//! pluggable [`sim::CostModel`] (Table V by default, a Grace-Hopper
-//! style [`sim::CoherentLink`] included) charging typed events against
-//! shared resources — one [`sim::Interconnect`], one
+//! same core. Policies speak the **directive protocol** of
+//! [`policy::DecisionPolicy`]: the session narrates
+//! [`policy::MemEvent`]s and executes the returned
+//! [`policy::Decisions`] — fault actions, prefetch sets, and
+//! first-class **pre-evictions** through a slack-scheduled
+//! background-transfer queue (legacy pull policies run unchanged via
+//! [`policy::LegacyPolicyAdapter`]). Time itself is priced by the
+//! [`sim::clock`] layer: a pluggable [`sim::CostModel`] (Table V by
+//! default, a Grace-Hopper style [`sim::CoherentLink`] included,
+//! selectable by name via [`sim::CostModelKind`]) charging typed events
+//! against shared resources — one [`sim::Interconnect`], one
 //! [`sim::FaultBatcher`] — with per-tenant cycle attribution at the
 //! [`sim::Clock::charge`] choke point.
 

@@ -6,6 +6,7 @@
 //! repro simulate --stream corpus:myapp --corpus corpus --progress
 //! repro sweep --workloads all --strategies baseline,uvmsmart --oversub 100,125,150
 //! repro sweep --workloads sched:NW+Hotspot --schedule bandwidth-fair
+//! repro sweep --workloads sched:NW+Hotspot --schedule weighted:3,1 --cost-model coherent-link
 //! repro corpus build --workloads all --seeds 42,7
 //! repro corpus import faults.csv --name myapp
 //! repro accuracy --workload Hotspot --method ours
@@ -34,7 +35,7 @@ use uvmio::corpus::{self, CorpusStore, TraceCache};
 use uvmio::exp::{self, ExpContext, ExpOpts};
 use uvmio::predictor::features::samples_from_trace;
 use uvmio::runtime::{Manifest, Runtime};
-use uvmio::sim::{Arena, Session};
+use uvmio::sim::{Arena, CostModelKind, Session};
 use uvmio::trace::workloads::Workload;
 use uvmio::trace::Trace;
 use uvmio::util::cli::Args;
@@ -51,11 +52,17 @@ USAGE:
       store: traces generated once are persisted and reloaded by later
       runs (shared with `repro sweep --corpus` and `repro corpus build`)
   repro simulate --workload W --strategy S [--oversub PCT] [--scale N] [--seed N]
+              [--cost-model table-v|coherent-link]
       one simulation cell; S is ANY registered strategy name
       (`repro info` lists them; builtin: baseline demand-hpe tree-hpe
-      demand-belady demand-lru demand-random uvmsmart intelligent)
+      tree-evict demand-belady demand-lru demand-random uvmsmart
+      intelligent — tree-evict is the directive-API pre-eviction
+      configuration: its drain traffic runs on the background-transfer
+      queue and overlaps compute). --cost-model swaps the timing model
+      (default table-v, the paper's PCIe pricing; coherent-link prices
+      the same run like Grace-Hopper-class hardware)
   repro simulate --stream corpus:NAME [--strategy S] [--oversub PCT]
-              [--corpus DIR] [--progress [N]]
+              [--corpus DIR] [--progress [N]] [--cost-model M]
       one-off streamed run: decode the named .uvmt corpus entry access
       by access through a Session in O(1) memory (entries larger than
       RAM stream fine); --progress prints a mid-run snapshot line every
@@ -65,6 +72,7 @@ USAGE:
               [--oversub P1,P2,..] [--seeds N1,N2,..] [--threads N]
               [--scale N] [--reports DIR] [--artifacts DIR] [--corpus DIR]
               [--crash-at L=T,..] [--progress [N]] [--schedule POLICY]
+              [--cost-model table-v|coherent-link]
       run the (workload × strategy × oversubscription × seed) grid in
       parallel across threads (artifact-backed strategies run on a
       serialized lane); streams a console table and writes
@@ -79,12 +87,17 @@ USAGE:
       device memory + interconnect, per-tenant cycle/fault attribution
       in sweep.jsonl) instead of an offline pre-interleave; --schedule
       picks the policy for all sched: cells (proportional, round-robin,
-      fault-aware, bandwidth-fair; default proportional — for two
-      tenants byte-identical to the offline A+B merge). --crash-at maps an
-      oversubscription level to a crash threshold (thrash events), e.g.
+      fault-aware, bandwidth-fair, weighted:W1,W2,.. for priority/QoS
+      time-slicing — tenant i gets slots in proportion to Wi; default
+      proportional — for two tenants byte-identical to the offline A+B
+      merge). --cost-model prices every cell (recorded as a per-cell
+      column in sweep.csv/jsonl). --crash-at maps an oversubscription
+      level to a crash threshold (thrash events), e.g.
       --crash-at 150=100000 reproduces the Fig-14 crash columns.
       --progress streams a mid-run snapshot line (stderr) per cell every
-      N faults (default 100000) — live observability for long sweeps.
+      N faults (default 100000), including link occupancy (total +
+      background pre-eviction cycles) — live observability for long
+      sweeps.
   repro corpus build [--workloads all|W1,..] [--scale N] [--seeds N1,..]
               [--corpus DIR]
       generate builtin traces into the corpus (.uvmt, content-addressed)
@@ -223,6 +236,23 @@ fn parse_list<T: std::str::FromStr>(s: &str, flag: &str) -> anyhow::Result<Vec<T
     Ok(out)
 }
 
+/// `--cost-model table-v|coherent-link` (default: the paper's Table V).
+fn parse_cost_model(args: &Args) -> anyhow::Result<CostModelKind> {
+    match args.get("cost-model") {
+        None => Ok(CostModelKind::default()),
+        Some(s) => CostModelKind::from_name(s).ok_or_else(|| {
+            anyhow::anyhow!(
+                "--cost-model: unknown model {s:?}; known: {}",
+                CostModelKind::ALL
+                    .iter()
+                    .map(|k| k.name())
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            )
+        }),
+    }
+}
+
 /// `--progress` alone uses the default cadence; `--progress N` overrides
 /// it (N = faults between snapshot lines); absent = disabled.
 fn parse_progress(args: &Args) -> anyhow::Result<u64> {
@@ -282,12 +312,14 @@ fn cmd_simulate_stream(args: &Args, stream: &str) -> anyhow::Result<()> {
         meta.kernels,
         Vec::new(),
     );
+    let cost_model = parse_cost_model(args)?;
     let cfg = SimConfig::default().with_oversubscription(meta.touched_pages, oversub);
     let spec = RunSpec {
         trace: &placeholder,
         oversub_percent: oversub,
         cfg,
         crash_threshold: None,
+        cost_model,
     };
     let ctx = if entry.needs_artifacts {
         let runtime = Runtime::new(&opts.artifacts_dir)?;
@@ -299,6 +331,9 @@ fn cmd_simulate_stream(args: &Args, stream: &str) -> anyhow::Result<()> {
 
     let arena = Arena::new(meta.working_set_pages, meta.allocations.clone());
     let mut session = Session::new(spec.cfg.clone(), arena, policy);
+    if cost_model != CostModelKind::default() {
+        session = session.with_cost_model(cost_model.build(&spec.cfg));
+    }
     let progress = parse_progress(args)?;
     if progress > 0 {
         session.add_observer(Box::new(ProgressObserver::new(
@@ -319,9 +354,11 @@ fn cmd_simulate_stream(args: &Args, stream: &str) -> anyhow::Result<()> {
              meta.name, meta.working_set_pages, meta.accesses);
     println!("strategy        : {} ({})", entry.display, entry.name);
     println!("oversubscription: {oversub}% (capacity {} pages)", spec.cfg.capacity_pages);
+    println!("cost model      : {}", cost_model.name());
     println!("faults          : {}", s.faults);
     println!("migrations      : {}", s.migrations);
-    println!("evictions       : {}", s.evictions);
+    println!("evictions       : {} ({} pre-evicted, {} avoided)",
+             s.evictions, s.pre_evictions, s.evictions_avoided);
     println!("prefetches      : {} (garbage {})", s.prefetches, s.garbage_prefetches);
     println!("zero-copy       : {}", s.zero_copy);
     println!("pages thrashed  : {} events / {} unique", s.thrash_events,
@@ -340,7 +377,7 @@ fn cmd_simulate_stream(args: &Args, stream: &str) -> anyhow::Result<()> {
 fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
     args.reject_unknown(&[
         "workload", "strategy", "oversub", "scale", "seed", "artifacts",
-        "stream", "corpus", "progress",
+        "stream", "corpus", "progress", "cost-model",
     ])
     .map_err(anyhow::Error::msg)?;
     if let Some(stream) = args.get("stream") {
@@ -363,8 +400,9 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
     let display = spec_entry.display.clone();
     let needs_artifacts = spec_entry.needs_artifacts;
     let oversub = args.get_parse("oversub", 125u32).map_err(anyhow::Error::msg)?;
+    let cost_model = parse_cost_model(args)?;
     let trace = w.generate(opts.scale, opts.seed);
-    let spec = RunSpec::new(&trace, oversub);
+    let spec = RunSpec::new(&trace, oversub).with_cost_model(cost_model);
 
     let ctx = if needs_artifacts {
         let runtime = Runtime::new(&opts.artifacts_dir)?;
@@ -378,9 +416,11 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
              trace.working_set_pages, trace.accesses.len());
     println!("strategy        : {display} ({strategy})");
     println!("oversubscription: {oversub}% (capacity {} pages)", spec.cfg.capacity_pages);
+    println!("cost model      : {}", cost_model.name());
     println!("faults          : {}", s.faults);
     println!("migrations      : {}", s.migrations);
-    println!("evictions       : {}", s.evictions);
+    println!("evictions       : {} ({} pre-evicted, {} avoided)",
+             s.evictions, s.pre_evictions, s.evictions_avoided);
     println!("prefetches      : {} (garbage {})", s.prefetches, s.garbage_prefetches);
     println!("zero-copy       : {}", s.zero_copy);
     println!("pages thrashed  : {} events / {} unique", s.thrash_events,
@@ -414,7 +454,8 @@ fn parse_sweep_workloads(
         if let Some(tenants) = part.strip_prefix("sched:") {
             let tenants = corpus::parse_tenants(tenants, store)?;
             out.push(SweepWorkload::from(ScheduledWorkload::new(
-                tenants, schedule,
+                tenants,
+                schedule.clone(),
             )));
             continue;
         }
@@ -452,6 +493,7 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
     args.reject_unknown(&[
         "workloads", "strategies", "oversub", "seeds", "threads", "scale",
         "reports", "artifacts", "corpus", "crash-at", "progress", "schedule",
+        "cost-model",
     ])
     .map_err(anyhow::Error::msg)?;
     let registry = StrategyRegistry::builtin();
@@ -463,7 +505,8 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
         None => SchedulePolicy::default(),
         Some(s) => SchedulePolicy::from_name(s).ok_or_else(|| {
             anyhow::anyhow!(
-                "--schedule: unknown policy {s:?}; known: {}",
+                "--schedule: unknown policy {s:?}; known: {}, weighted:W1,W2,.. \
+                 (positive integer weights)",
                 SchedulePolicy::ALL
                     .iter()
                     .map(|p| p.name())
@@ -479,7 +522,8 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
     )?;
     let strategies = registry.resolve_list(args.get_or(
         "strategies",
-        "baseline,demand-hpe,tree-hpe,demand-belady,demand-lru,demand-random,uvmsmart",
+        "baseline,demand-hpe,tree-hpe,tree-evict,demand-belady,demand-lru,\
+         demand-random,uvmsmart",
     ))?;
     let oversub = parse_list::<u32>(args.get_or("oversub", "125"), "oversub")?;
     let seeds = parse_list::<u64>(args.get_or("seeds", "42"), "seeds")?;
@@ -510,7 +554,8 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
     let mut sweep = SweepSpec::new(workloads, strategies)
         .with_oversub(oversub)
         .with_seeds(seeds)
-        .with_scale(scale);
+        .with_scale(scale)
+        .with_cost_model(parse_cost_model(args)?);
     for (level, t) in parse_crash_at(args.get_or("crash-at", ""))? {
         sweep = sweep.with_crash_threshold_at(level, t);
     }

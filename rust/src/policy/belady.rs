@@ -7,6 +7,12 @@
 //! Implementation: per-page queues of future access positions built in one
 //! pass, plus a lazy max-heap of (next_use, page) entries; stale entries
 //! are discarded at pop time, giving amortised O(log n) eviction.
+//!
+//! MIN stays a reactive [`Evictor`] under the decision API: its
+//! optimality proof is about *which* page to evict when a frame is
+//! needed, so emitting `pre_evict` directives early could only match,
+//! never beat, the demand-time choice — the oracle bound is cleanest
+//! left pull-only.
 
 use std::collections::{BinaryHeap, HashMap, VecDeque};
 

@@ -6,57 +6,106 @@
 //! `Composite::new(TreePrefetcher::new(), Hpe::new(..))` — the composition
 //! is where the paper's cooperation problem lives, so it deserves a
 //! first-class type.
+//!
+//! The composite speaks the directive protocol
+//! ([`crate::policy::DecisionPolicy`]): leaf prefetchers and evictors
+//! keep their narrow traits, and the composite translates
+//! [`MemEvent`]s into the old hook calls in the exact order the
+//! pre-redesign engine used — so a plain composite is byte-identical to
+//! its historical pull-style behaviour. Two opt-ins go further:
+//!
+//! * an evictor's [`Evictor::pre_evict`] candidates are forwarded as
+//!   `pre_evict` directives at every fault-serviced decision point
+//!   (reactive evictors return none, so nothing changes for them);
+//! * [`Composite::with_pressure_aware_prefetch`] bounds the prefetch
+//!   set by the frames actually available (free frames + this
+//!   decision's pre-evictions), so prefetching under memory pressure
+//!   stops force-evicting warm pages — the §IV-D cooperation the old
+//!   pull API could not express, because `prefetch()` never saw
+//!   occupancy.
 
-use crate::sim::{DeviceMemory, Page};
+use crate::sim::Page;
 use crate::trace::Access;
 
-use super::{Evictor, Policy, Prefetcher};
+use super::{
+    DecisionPolicy, Decisions, Evictor, MemEvent, MemView, Prefetcher,
+};
 
 pub struct Composite<P: Prefetcher, E: Evictor> {
     pub prefetcher: P,
     pub evictor: E,
+    /// bound prefetch admissions by available frames (off by default —
+    /// the faithful paper-baseline behaviour prefetches unconditionally)
+    pressure_aware: bool,
 }
 
 impl<P: Prefetcher, E: Evictor> Composite<P, E> {
     pub fn new(prefetcher: P, evictor: E) -> Self {
-        Composite { prefetcher, evictor }
+        Composite { prefetcher, evictor, pressure_aware: false }
+    }
+
+    /// Truncate each prefetch burst to the frames it can occupy without
+    /// forcing demand-path evictions: current free frames plus the
+    /// frames this decision's own pre-evictions are about to free.
+    pub fn with_pressure_aware_prefetch(mut self) -> Self {
+        self.pressure_aware = true;
+        self
     }
 }
 
-impl<P: Prefetcher, E: Evictor> Policy for Composite<P, E> {
+impl<P: Prefetcher, E: Evictor> DecisionPolicy for Composite<P, E> {
     fn name(&self) -> String {
         format!("{}.+{}", self.prefetcher.name(), self.evictor.name())
     }
 
-    fn on_access(&mut self, acc: &Access, resident: bool) {
-        self.prefetcher.on_access(acc, resident);
-        self.evictor.on_access(acc, resident);
-    }
-
-    fn prefetch(&mut self, acc: &Access) -> Vec<Page> {
-        self.prefetcher.prefetch(acc)
-    }
-
-    fn select_victim(&mut self, mem: &DeviceMemory) -> Option<Page> {
-        self.evictor.select_victim(mem)
-    }
-
-    fn on_migrate(&mut self, page: Page, via_prefetch: bool) {
-        self.prefetcher.on_migrate(page, via_prefetch);
-        self.evictor.on_migrate(page, via_prefetch);
-    }
-
-    fn on_evict(&mut self, page: Page) {
-        self.prefetcher.on_evict(page);
-        self.evictor.on_evict(page);
-    }
-
-    fn on_interval(&mut self) {
-        self.evictor.on_interval();
-    }
-
-    fn on_kernel_boundary(&mut self, kernel: u32) {
-        self.evictor.on_kernel_boundary(kernel);
+    fn decide(&mut self, event: &MemEvent<'_>, view: &MemView<'_>) -> Decisions {
+        match *event {
+            MemEvent::Access { acc, resident } => {
+                self.prefetcher.on_access(acc, resident);
+                self.evictor.on_access(acc, resident);
+                Decisions::none()
+            }
+            // composites service every fault by migration (the default)
+            MemEvent::Fault { .. } => Decisions::none(),
+            MemEvent::FaultServiced { acc, .. } => {
+                let mut prefetch = self.prefetcher.prefetch(acc);
+                let pre_evict = self.evictor.pre_evict(view);
+                if self.pressure_aware {
+                    // count only the pre-evictions the slack rule will
+                    // execute now — dirty pages held back by a busy
+                    // link free nothing yet
+                    let budget = (view.free_frames() as usize)
+                        .saturating_add(view.pre_evictable_now(&pre_evict));
+                    if prefetch.len() > budget {
+                        prefetch.truncate(budget);
+                    }
+                }
+                Decisions::none()
+                    .with_prefetch(prefetch)
+                    .with_pre_evict(pre_evict)
+            }
+            MemEvent::VictimNeeded { .. } => {
+                Decisions::victim(self.evictor.select_victim(view.memory()))
+            }
+            MemEvent::Migrated { page, via_prefetch } => {
+                self.prefetcher.on_migrate(page, via_prefetch);
+                self.evictor.on_migrate(page, via_prefetch);
+                Decisions::none()
+            }
+            MemEvent::Evicted { page, .. } => {
+                self.prefetcher.on_evict(page);
+                self.evictor.on_evict(page);
+                Decisions::none()
+            }
+            MemEvent::Interval { .. } => {
+                self.evictor.on_interval();
+                Decisions::none()
+            }
+            MemEvent::KernelBoundary { kernel } => {
+                self.evictor.on_kernel_boundary(kernel);
+                Decisions::none()
+            }
+        }
     }
 }
 
@@ -66,6 +115,15 @@ mod tests {
     use crate::policy::lru::Lru;
     use crate::policy::tree_prefetch::TreePrefetcher;
     use crate::policy::DemandOnly;
+    use crate::sim::DeviceMemory;
+
+    fn acc(page: Page) -> Access {
+        Access { page, pc: 0, tb: 0, kernel: 0, inst_gap: 0, is_write: false }
+    }
+
+    fn view(mem: &DeviceMemory) -> MemView<'_> {
+        MemView::new(mem, 0, 0, 0)
+    }
 
     #[test]
     fn names_follow_paper_convention() {
@@ -77,8 +135,71 @@ mod tests {
 
     #[test]
     fn demand_only_never_prefetches() {
+        let mem = DeviceMemory::new(8);
         let mut c = Composite::new(DemandOnly, Lru::new());
-        let acc = Access { page: 0, pc: 0, tb: 0, kernel: 0, inst_gap: 0, is_write: false };
-        assert!(Policy::prefetch(&mut c, &acc).is_empty());
+        let a = acc(0);
+        let d = c.decide(
+            &MemEvent::FaultServiced {
+                acc: &a,
+                action: crate::sim::FaultAction::Migrate,
+            },
+            &view(&mem),
+        );
+        assert!(d.prefetch.is_empty());
+        assert!(d.pre_evict.is_empty());
+    }
+
+    #[test]
+    fn victim_comes_from_the_evictor() {
+        let mem = DeviceMemory::new(8);
+        let mut c = Composite::new(DemandOnly, Lru::new());
+        for p in [3, 4] {
+            c.decide(
+                &MemEvent::Migrated { page: p, via_prefetch: false },
+                &view(&mem),
+            );
+        }
+        let d = c.decide(&MemEvent::VictimNeeded { incoming: 9 }, &view(&mem));
+        assert_eq!(d.victim, Some(3), "LRU order");
+    }
+
+    #[test]
+    fn pressure_aware_prefetch_is_bounded_by_free_frames() {
+        // tree prefetcher wants the rest of the faulted basic block
+        // (15 pages); with only 2 free frames and no pre-evictions the
+        // pressure-aware composite truncates to 2.
+        let mut mem = DeviceMemory::new(3);
+        mem.install(100, 0, false); // unrelated resident page
+        let mut c = Composite::new(TreePrefetcher::new(), Lru::new())
+            .with_pressure_aware_prefetch();
+        c.decide(
+            &MemEvent::Migrated { page: 0, via_prefetch: false },
+            &view(&mem),
+        );
+        let a = acc(0);
+        let d = c.decide(
+            &MemEvent::FaultServiced {
+                acc: &a,
+                action: crate::sim::FaultAction::Migrate,
+            },
+            &view(&mem),
+        );
+        assert_eq!(d.prefetch.len(), 2, "bounded by the 2 free frames");
+        assert_eq!(d.prefetch, vec![1, 2], "nearest candidates kept");
+
+        // the plain composite is unbounded (faithful baseline)
+        let mut plain = Composite::new(TreePrefetcher::new(), Lru::new());
+        plain.decide(
+            &MemEvent::Migrated { page: 0, via_prefetch: false },
+            &view(&mem),
+        );
+        let d = plain.decide(
+            &MemEvent::FaultServiced {
+                acc: &a,
+                action: crate::sim::FaultAction::Migrate,
+            },
+            &view(&mem),
+        );
+        assert_eq!(d.prefetch.len(), 15);
     }
 }

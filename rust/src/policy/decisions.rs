@@ -1,0 +1,512 @@
+//! The directive-based decision protocol between the engine and a
+//! policy: typed [`MemEvent`]s in, batched [`Decisions`] out.
+//!
+//! The original `Policy` trait was nine imperative pull hooks
+//! (`on_access`, `fault_action`, `prefetch`, `select_victim`, …) that
+//! the engine called at fixed points, each answering one narrow
+//! question. That shape cannot express the paper's headline mechanism:
+//! *pre-eviction* (§IV-D) — moving victims out over the link **ahead**
+//! of memory pressure so demand migrations never stall behind
+//! evictions. A pull hook only runs when the engine already needs a
+//! frame; by then the eviction is on the critical path.
+//!
+//! [`DecisionPolicy`] inverts that: the engine narrates the simulation
+//! as [`MemEvent`]s (mirroring the [`crate::sim::SimEvent`] vocabulary
+//! — access, fault, interval, kernel boundary, plus the decision points
+//! those imply) and the policy answers each with a [`Decisions`] value:
+//! the fault-service action, a prefetch set, a **pre-evict set** routed
+//! to the session's background-transfer queue, and optional pin hints.
+//! A read-only [`MemView`] accompanies every event, so policies reason
+//! about residency, occupancy and link state without groping
+//! `DeviceMemory` (or worse, mirroring engine state they cannot see).
+//!
+//! Which [`Decisions`] fields the engine honours depends on the event —
+//! the protocol is deliberately narrow to keep re-entrancy impossible:
+//!
+//! | event | honoured fields |
+//! |---|---|
+//! | [`MemEvent::Fault`] | `fault_action` |
+//! | [`MemEvent::FaultServiced`] | `prefetch`, `pre_evict` |
+//! | [`MemEvent::Interval`] | `pre_evict` |
+//! | [`MemEvent::VictimNeeded`] | `victim` |
+//! | every event | `pin` / `unpin` |
+//!
+//! Old-style [`Policy`] implementations keep working through
+//! [`LegacyPolicyAdapter`], which replays the exact pull-hook call
+//! order the pre-redesign engine used — a legacy policy driven through
+//! the adapter is byte-identical to its historical behaviour (pinned by
+//! the adapter-equivalence suite in `tests/decisions.rs`).
+
+use crate::sim::mem::Frame;
+use crate::sim::{DeviceMemory, FaultAction, Page};
+use crate::trace::Access;
+
+use super::{Policy, PolicyInstrumentation};
+
+/// One engine-side event a policy is asked to decide on. Mirrors the
+/// [`crate::sim::SimEvent`] vocabulary from the policy's perspective:
+/// notifications (`Access`, `Migrated`, `Evicted`, `Interval`,
+/// `KernelBoundary`) interleaved with the three decision points
+/// (`Fault`, `FaultServiced`, `VictimNeeded`).
+#[derive(Debug, Clone, Copy)]
+pub enum MemEvent<'a> {
+    /// An access is about to be serviced; `resident` is the residency
+    /// determination the engine just made.
+    Access { acc: &'a Access, resident: bool },
+    /// A far-fault needs a service action (`Decisions::fault_action`;
+    /// `None` defaults to [`FaultAction::Migrate`]).
+    Fault { acc: &'a Access },
+    /// The fault was serviced with `action` (the *effective* action —
+    /// a `Delay` that crossed the soft-pin threshold surfaces as
+    /// `Migrate`). This is the batched decision point: the driver
+    /// schedules prefetch and pre-eviction DMA while the fault batch is
+    /// in flight, so `prefetch` and `pre_evict` are honoured here.
+    FaultServiced { acc: &'a Access, action: FaultAction },
+    /// A demand admission needs a frame NOW; `Decisions::victim` names
+    /// the page to evict (must be resident and ≠ `incoming`, else the
+    /// engine falls back and counts `policy_victim_fallbacks`).
+    VictimNeeded { incoming: Page },
+    /// A page became resident (demand migration or prefetch).
+    Migrated { page: Page, via_prefetch: bool },
+    /// A page was evicted; `pre_evicted` distinguishes a background
+    /// pre-eviction from a demand-path eviction.
+    Evicted { page: Page, pre_evicted: bool },
+    /// An eviction interval elapsed (`SimConfig::interval_faults`).
+    Interval { index: u64 },
+    /// The input stream crossed a kernel (phase) boundary.
+    KernelBoundary { kernel: u32 },
+}
+
+/// Read-only residency / occupancy / clock context handed to every
+/// [`DecisionPolicy::decide`] call. This is the sanctioned way for a
+/// policy to see engine state: occupancy for pressure heuristics,
+/// per-frame metadata (touch counts, dirty bits) for warmth guards,
+/// link state for background-traffic pacing.
+#[derive(Clone, Copy)]
+pub struct MemView<'a> {
+    mem: &'a DeviceMemory,
+    now: u64,
+    link_free_at: u64,
+    link_busy_cycles: u64,
+}
+
+impl<'a> MemView<'a> {
+    pub fn new(
+        mem: &'a DeviceMemory,
+        now: u64,
+        link_free_at: u64,
+        link_busy_cycles: u64,
+    ) -> MemView<'a> {
+        MemView { mem, now, link_free_at, link_busy_cycles }
+    }
+
+    /// The device memory itself (resident set + frame metadata).
+    pub fn memory(&self) -> &'a DeviceMemory {
+        self.mem
+    }
+
+    pub fn resident(&self, page: Page) -> bool {
+        self.mem.resident(page)
+    }
+
+    /// Frame metadata of a resident page (touch count, dirty bit,
+    /// install cycle, prefetched-untouched flag).
+    pub fn frame(&self, page: Page) -> Option<&'a Frame> {
+        self.mem.frame(page)
+    }
+
+    pub fn used(&self) -> u64 {
+        self.mem.used()
+    }
+
+    pub fn capacity(&self) -> u64 {
+        self.mem.capacity()
+    }
+
+    /// Frames currently free (`capacity - used`).
+    pub fn free_frames(&self) -> u64 {
+        self.mem.capacity() - self.mem.used()
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.mem.is_full()
+    }
+
+    /// Current simulated cycle.
+    pub fn now(&self) -> u64 {
+        self.now
+    }
+
+    /// First cycle at which the shared interconnect is idle again.
+    pub fn link_free_at(&self) -> u64 {
+        self.link_free_at
+    }
+
+    /// True when the interconnect is idle right now — the slack window
+    /// the background-transfer queue schedules dirty writebacks into.
+    pub fn link_idle(&self) -> bool {
+        self.link_free_at <= self.now
+    }
+
+    /// Total interconnect occupancy reserved so far.
+    pub fn link_busy_cycles(&self) -> u64 {
+        self.link_busy_cycles
+    }
+
+    /// Of `pages` (a prospective `pre_evict` set), how many the
+    /// background-transfer queue could actually free **right now**
+    /// under its slack rule: clean resident pages drop immediately,
+    /// while at most one dirty page writes back — and only if the link
+    /// is idle. Policies bounding prefetch bursts by available frames
+    /// should use this, not `pages.len()`, so held-back dirty
+    /// candidates are not double-counted as free frames.
+    pub fn pre_evictable_now(&self, pages: &[Page]) -> usize {
+        let mut dirty_budget = usize::from(self.link_idle());
+        let mut n = 0;
+        for &p in pages {
+            match self.frame(p) {
+                Some(f) if !f.dirty => n += 1,
+                Some(_) if dirty_budget > 0 => {
+                    dirty_budget -= 1;
+                    n += 1;
+                }
+                _ => {}
+            }
+        }
+        n
+    }
+}
+
+/// The batched answer to one [`MemEvent`]. Fields the current event
+/// does not honour (see the module-level table) are ignored. The
+/// default value decides nothing — return it from notification events.
+#[derive(Debug, Clone, Default)]
+pub struct Decisions {
+    /// How to service the fault (honoured on [`MemEvent::Fault`];
+    /// `None` defaults to [`FaultAction::Migrate`]).
+    pub fault_action: Option<FaultAction>,
+    /// Eviction victim (honoured on [`MemEvent::VictimNeeded`]).
+    pub victim: Option<Page>,
+    /// Pages to prefetch; the engine filters non-allocated and resident
+    /// candidates and admits the rest as background link transfers
+    /// (honoured on [`MemEvent::FaultServiced`]).
+    pub prefetch: Vec<Page>,
+    /// Resident pages to pre-evict through the session's
+    /// background-transfer queue (honoured on
+    /// [`MemEvent::FaultServiced`] and [`MemEvent::Interval`]); dirty
+    /// pages write back over the link only when it has slack, so
+    /// background eviction traffic yields to demand migrations.
+    pub pre_evict: Vec<Page>,
+    /// Pin hints: pinned pages are exempt from background pre-eviction
+    /// (demand-path victim choices are the policy's own and are not
+    /// filtered). Honoured on every event.
+    pub pin: Vec<Page>,
+    /// Release previously pinned pages. Honoured on every event.
+    pub unpin: Vec<Page>,
+}
+
+impl Decisions {
+    /// Decide nothing (the right answer to pure notifications).
+    pub fn none() -> Decisions {
+        Decisions::default()
+    }
+
+    /// A fault-service decision.
+    pub fn fault(action: FaultAction) -> Decisions {
+        Decisions { fault_action: Some(action), ..Decisions::default() }
+    }
+
+    /// A victim nomination (None lets the engine fall back).
+    pub fn victim(page: Option<Page>) -> Decisions {
+        Decisions { victim: page, ..Decisions::default() }
+    }
+
+    pub fn with_prefetch(mut self, pages: Vec<Page>) -> Decisions {
+        self.prefetch = pages;
+        self
+    }
+
+    pub fn with_pre_evict(mut self, pages: Vec<Page>) -> Decisions {
+        self.pre_evict = pages;
+        self
+    }
+
+    pub fn with_pin(mut self, pages: Vec<Page>) -> Decisions {
+        self.pin = pages;
+        self
+    }
+
+    pub fn with_unpin(mut self, pages: Vec<Page>) -> Decisions {
+        self.unpin = pages;
+        self
+    }
+}
+
+/// A complete memory-management strategy under the directive protocol:
+/// the engine narrates [`MemEvent`]s, the policy answers each with a
+/// [`Decisions`] value. See the module docs for which fields each event
+/// honours. Implementations must be deterministic — the sweep runner's
+/// serial ≡ parallel byte-identity contract extends through the
+/// background-transfer queue.
+pub trait DecisionPolicy {
+    fn name(&self) -> String;
+
+    /// Predictor instrumentation for overhead accounting (default: none).
+    fn instrumentation(&self) -> PolicyInstrumentation {
+        PolicyInstrumentation::default()
+    }
+
+    /// The single decision entry point.
+    fn decide(&mut self, event: &MemEvent<'_>, view: &MemView<'_>) -> Decisions;
+}
+
+/// Forwarding impl so a borrowed policy drives an owning session —
+/// [`crate::sim::Engine::run`] borrows its policy and wraps the borrow.
+impl<P: DecisionPolicy + ?Sized> DecisionPolicy for &mut P {
+    fn name(&self) -> String {
+        (**self).name()
+    }
+
+    fn instrumentation(&self) -> PolicyInstrumentation {
+        (**self).instrumentation()
+    }
+
+    fn decide(&mut self, event: &MemEvent<'_>, view: &MemView<'_>) -> Decisions {
+        (**self).decide(event, view)
+    }
+}
+
+impl<P: DecisionPolicy + ?Sized> DecisionPolicy for Box<P> {
+    fn name(&self) -> String {
+        (**self).name()
+    }
+
+    fn instrumentation(&self) -> PolicyInstrumentation {
+        (**self).instrumentation()
+    }
+
+    fn decide(&mut self, event: &MemEvent<'_>, view: &MemView<'_>) -> Decisions {
+        (**self).decide(event, view)
+    }
+}
+
+/// Adapts any old-style pull [`Policy`] to the decision protocol by
+/// replaying the pre-redesign engine's exact hook order: `on_access` at
+/// [`MemEvent::Access`], `fault_action` at [`MemEvent::Fault`],
+/// `prefetch` at [`MemEvent::FaultServiced`] (i.e. *after* the demand
+/// migration, exactly when the old engine queried it), `select_victim`
+/// at [`MemEvent::VictimNeeded`], and the notification hooks at their
+/// events. An adapted policy therefore produces byte-identical
+/// simulations to the historical engine; it never emits `pre_evict`
+/// directives (the old trait cannot express them).
+pub struct LegacyPolicyAdapter<P: Policy + ?Sized> {
+    inner: P,
+}
+
+impl<P: Policy> LegacyPolicyAdapter<P> {
+    pub fn new(inner: P) -> LegacyPolicyAdapter<P> {
+        LegacyPolicyAdapter { inner }
+    }
+}
+
+impl<P: Policy + ?Sized> LegacyPolicyAdapter<P> {
+    /// The wrapped legacy policy.
+    pub fn inner(&self) -> &P {
+        &self.inner
+    }
+
+    pub fn inner_mut(&mut self) -> &mut P {
+        &mut self.inner
+    }
+}
+
+impl<P: Policy + ?Sized> DecisionPolicy for LegacyPolicyAdapter<P> {
+    fn name(&self) -> String {
+        self.inner.name()
+    }
+
+    fn instrumentation(&self) -> PolicyInstrumentation {
+        self.inner.instrumentation()
+    }
+
+    fn decide(&mut self, event: &MemEvent<'_>, view: &MemView<'_>) -> Decisions {
+        match *event {
+            MemEvent::Access { acc, resident } => {
+                self.inner.on_access(acc, resident);
+                Decisions::none()
+            }
+            MemEvent::Fault { acc } => {
+                Decisions::fault(self.inner.fault_action(acc.page))
+            }
+            MemEvent::FaultServiced { acc, .. } => {
+                Decisions::none().with_prefetch(self.inner.prefetch(acc))
+            }
+            MemEvent::VictimNeeded { .. } => {
+                Decisions::victim(self.inner.select_victim(view.memory()))
+            }
+            MemEvent::Migrated { page, via_prefetch } => {
+                self.inner.on_migrate(page, via_prefetch);
+                Decisions::none()
+            }
+            MemEvent::Evicted { page, .. } => {
+                self.inner.on_evict(page);
+                Decisions::none()
+            }
+            MemEvent::Interval { .. } => {
+                self.inner.on_interval();
+                Decisions::none()
+            }
+            MemEvent::KernelBoundary { kernel } => {
+                self.inner.on_kernel_boundary(kernel);
+                Decisions::none()
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::FaultAction;
+
+    fn acc(page: Page) -> Access {
+        Access { page, pc: 0, tb: 0, kernel: 0, inst_gap: 0, is_write: false }
+    }
+
+    /// A legacy policy recording its hook-call order.
+    #[derive(Default)]
+    struct Spy {
+        calls: Vec<&'static str>,
+    }
+
+    impl Policy for Spy {
+        fn name(&self) -> String {
+            "spy".into()
+        }
+
+        fn on_access(&mut self, _acc: &Access, _resident: bool) {
+            self.calls.push("on_access");
+        }
+
+        fn fault_action(&mut self, _page: Page) -> FaultAction {
+            self.calls.push("fault_action");
+            FaultAction::ZeroCopy
+        }
+
+        fn prefetch(&mut self, acc: &Access) -> Vec<Page> {
+            self.calls.push("prefetch");
+            vec![acc.page + 1]
+        }
+
+        fn select_victim(&mut self, _mem: &DeviceMemory) -> Option<Page> {
+            self.calls.push("select_victim");
+            Some(9)
+        }
+
+        fn on_migrate(&mut self, _page: Page, _via_prefetch: bool) {
+            self.calls.push("on_migrate");
+        }
+
+        fn on_evict(&mut self, _page: Page) {
+            self.calls.push("on_evict");
+        }
+
+        fn on_interval(&mut self) {
+            self.calls.push("on_interval");
+        }
+
+        fn on_kernel_boundary(&mut self, _kernel: u32) {
+            self.calls.push("on_kernel_boundary");
+        }
+    }
+
+    #[test]
+    fn adapter_routes_every_event_to_its_hook() {
+        let mem = DeviceMemory::new(4);
+        let view = MemView::new(&mem, 0, 0, 0);
+        let a = acc(5);
+        let mut ad = LegacyPolicyAdapter::new(Spy::default());
+
+        let d = ad.decide(&MemEvent::Access { acc: &a, resident: false }, &view);
+        assert!(d.fault_action.is_none() && d.prefetch.is_empty());
+        let d = ad.decide(&MemEvent::Fault { acc: &a }, &view);
+        assert_eq!(d.fault_action, Some(FaultAction::ZeroCopy));
+        let d = ad.decide(
+            &MemEvent::FaultServiced { acc: &a, action: FaultAction::Migrate },
+            &view,
+        );
+        assert_eq!(d.prefetch, vec![6]);
+        assert!(d.pre_evict.is_empty(), "legacy policies cannot pre-evict");
+        let d = ad.decide(&MemEvent::VictimNeeded { incoming: 5 }, &view);
+        assert_eq!(d.victim, Some(9));
+        ad.decide(&MemEvent::Migrated { page: 5, via_prefetch: false }, &view);
+        ad.decide(&MemEvent::Evicted { page: 9, pre_evicted: false }, &view);
+        ad.decide(&MemEvent::Interval { index: 1 }, &view);
+        ad.decide(&MemEvent::KernelBoundary { kernel: 2 }, &view);
+        assert_eq!(
+            ad.inner().calls,
+            vec![
+                "on_access",
+                "fault_action",
+                "prefetch",
+                "select_victim",
+                "on_migrate",
+                "on_evict",
+                "on_interval",
+                "on_kernel_boundary",
+            ]
+        );
+    }
+
+    #[test]
+    fn view_exposes_residency_and_link_state() {
+        let mut mem = DeviceMemory::new(3);
+        mem.install(7, 10, false);
+        mem.touch(7, true);
+        let view = MemView::new(&mem, 100, 150, 40);
+        assert!(view.resident(7));
+        assert!(!view.resident(8));
+        assert_eq!(view.used(), 1);
+        assert_eq!(view.capacity(), 3);
+        assert_eq!(view.free_frames(), 2);
+        assert!(!view.is_full());
+        assert_eq!(view.now(), 100);
+        assert!(!view.link_idle(), "busy until 150");
+        assert_eq!(view.link_busy_cycles(), 40);
+        let f = view.frame(7).unwrap();
+        assert!(f.dirty);
+        assert_eq!(f.touches, 1);
+    }
+
+    #[test]
+    fn pre_evictable_now_honours_the_slack_rule() {
+        let mut mem = DeviceMemory::new(8);
+        for p in [1u64, 2, 3] {
+            mem.install(p, 0, false);
+        }
+        mem.touch(2, true); // dirty
+        mem.touch(3, true); // dirty
+        let pages = [1u64, 2, 3, 99]; // 99: not resident
+        // idle link: clean page 1 + ONE dirty page can free now
+        let idle = MemView::new(&mem, 100, 50, 0);
+        assert_eq!(idle.pre_evictable_now(&pages), 2);
+        // busy link: only the clean page frees
+        let busy = MemView::new(&mem, 100, 500, 0);
+        assert_eq!(busy.pre_evictable_now(&pages), 1);
+    }
+
+    #[test]
+    fn decisions_builders_compose() {
+        let d = Decisions::fault(FaultAction::Delay)
+            .with_prefetch(vec![1, 2])
+            .with_pre_evict(vec![3])
+            .with_pin(vec![4])
+            .with_unpin(vec![5]);
+        assert_eq!(d.fault_action, Some(FaultAction::Delay));
+        assert_eq!(d.prefetch, vec![1, 2]);
+        assert_eq!(d.pre_evict, vec![3]);
+        assert_eq!(d.pin, vec![4]);
+        assert_eq!(d.unpin, vec![5]);
+        assert!(Decisions::none().victim.is_none());
+    }
+}

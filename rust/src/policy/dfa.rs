@@ -9,6 +9,11 @@
 //!
 //! `Streaming`, `Random`, `Mixed` × (reuse? `LinearReuse`/`RandomReuse`/
 //! `MixedReuse`).
+//!
+//! Not a policy itself: [`DfaClassifier`] is the shared *detection
+//! engine* that UVMSmart and the intelligent framework embed. Under the
+//! decision API its owners feed it from `Migrated` events (demand
+//! traffic only) and close segments at `KernelBoundary` events.
 
 use std::collections::HashSet;
 

@@ -17,6 +17,11 @@
 //! "regular" and letting a streaming burst flush the warm set —
 //! "Tree.+HPE" loses by orders of magnitude while "Demand.+HPE" is
 //! near-optimal. We reproduce the mechanism, not just the outcome.
+//!
+//! HPE is a reactive [`Evictor`] (pulled at `VictimNeeded` decisions;
+//! no `pre_evict` directives) — its chain rotation rides the
+//! composite's `Interval` event, exactly as it rode `on_interval`
+//! before the decision-API redesign.
 
 use std::collections::{HashMap, VecDeque};
 

@@ -4,6 +4,10 @@
 //! True LRU over pages: O(log n) via a tick-indexed BTreeMap. The paper
 //! notes ideal LRU is too expensive in hardware; the simulator models the
 //! idealised policy, as GPGPU-Sim does.
+//!
+//! A purely reactive [`Evictor`]: it answers `select_victim` pulls from
+//! the composite's `VictimNeeded` decision and never emits `pre_evict`
+//! directives (the [`crate::policy::Evictor::pre_evict`] default).
 
 use std::collections::{BTreeMap, HashMap};
 

@@ -1,18 +1,31 @@
 //! Memory-management policies: the strategy axis of every experiment.
 //!
-//! A [`Policy`] bundles the three decisions the UVM runtime makes —
-//! how to *service a fault* (migrate / zero-copy / delayed), what to
-//! *prefetch*, and whom to *evict* — because the paper's central claim is
-//! that these must cooperate (Section III-B: HPE collapses when paired
-//! with the tree prefetcher it wasn't designed for).
+//! The engine-facing surface is the **directive-based decision
+//! protocol** in [`decisions`]: a [`DecisionPolicy`] receives typed
+//! [`MemEvent`]s (access / fault / interval / kernel boundary plus the
+//! decision points those imply) together with a read-only [`MemView`]
+//! of residency, occupancy and link state, and answers each with a
+//! batched [`Decisions`] value — fault action, prefetch set,
+//! **pre-evict set** (routed to the session's background-transfer
+//! queue) and pin hints. This is what lets a policy overlap eviction
+//! traffic with compute the way the paper's §IV-D engine does; the old
+//! reactive [`Policy`] pull trait is kept as a legacy surface and
+//! bridged byte-identically through [`LegacyPolicyAdapter`].
+//!
+//! A policy bundles the decisions the UVM runtime makes — how to
+//! *service a fault* (migrate / zero-copy / delayed), what to
+//! *prefetch*, whom to *evict* and whom to *pre-evict* — because the
+//! paper's central claim is that these must cooperate (Section III-B:
+//! HPE collapses when paired with the tree prefetcher it wasn't
+//! designed for).
 //!
 //! Policies are **named and constructed through the open registry** in
-//! [`crate::api`]: a [`crate::api::StrategySpec`] pairs a kebab-case name
-//! (`"baseline"`, `"demand-belady"`, …) with a factory
-//! `Fn(&RunSpec, &StrategyCtx) -> Box<dyn Policy>`, so adding a strategy
-//! is a single `registry.register(...)` call — no enum edit, no new
-//! driver function. The engine itself stays policy-agnostic and only ever
-//! sees the trait object.
+//! [`crate::api`]: a [`crate::api::StrategySpec`] pairs a kebab-case
+//! name (`"baseline"`, `"demand-belady"`, …) with a factory
+//! `Fn(&RunSpec, &StrategyCtx) -> Box<dyn DecisionPolicy>`, so adding a
+//! strategy is a single `registry.register(...)` call — no enum edit,
+//! no new driver function. The engine itself stays policy-agnostic and
+//! only ever sees the trait object.
 //!
 //! Built-in strategies (all pre-registered by
 //! [`crate::api::StrategyRegistry::builtin`]):
@@ -22,16 +35,26 @@
 //! | `lru` | Baseline eviction | CUDA driver's LRU (GTC'17) |
 //! | `random` | Random | Zheng et al. comparison point |
 //! | `tree_prefetch` | Tree. | NVIDIA driver's tree prefetcher (Ganguly) |
-//! | `tree_evict` | tree pre-eviction | inverse-threshold heuristic |
+//! | `tree_evict` | Tree.+PreEvict | inverse-threshold pre-eviction; the |
+//! |              |                | proactive mode emits `pre_evict` |
+//! |              |                | directives (registry: `tree-evict`) |
 //! | `belady` | D.+Belady. | MIN oracle upper bound |
 //! | `hpe` | HPE | hierarchical page eviction (Yu et al.) |
 //! | `uvmsmart` | UVMSmart | adaptive DFA-driven runtime (Ganguly) |
 //! | `dfa` | — | the 6-class access-pattern classifier both |
 //! |       |   | UVMSmart and our framework share |
 //! | `composite` | Baseline / Tree.+HPE / D.+X | prefetcher × evictor glue |
+//! | `decisions` | — | the decision protocol + legacy adapter |
+//!
+//! Leaf building blocks keep the narrow [`Evictor`] / [`Prefetcher`]
+//! traits and compose into a [`DecisionPolicy`] via
+//! [`composite::Composite`]; [`Evictor::pre_evict`] is the hook a
+//! proactive evictor uses to surface background pre-eviction
+//! candidates through the composite.
 
 pub mod belady;
 pub mod composite;
+pub mod decisions;
 pub mod dfa;
 pub mod hpe;
 pub mod lru;
@@ -42,6 +65,10 @@ pub mod uvmsmart;
 
 use crate::sim::{DeviceMemory, FaultAction, Page};
 use crate::trace::Access;
+
+pub use decisions::{
+    DecisionPolicy, Decisions, LegacyPolicyAdapter, MemEvent, MemView,
+};
 
 /// Predictor-side counters a policy may expose after a run. The
 /// coordinator uses these for the §V-C overhead injection (one
@@ -71,8 +98,22 @@ impl Default for PolicyInstrumentation {
     }
 }
 
-/// A complete memory-management strategy (fault action + prefetch +
-/// eviction). The engine calls the hooks in trace order.
+/// The **legacy** pull-style strategy surface: nine imperative hooks the
+/// pre-redesign engine called at fixed points. In-tree strategies have
+/// migrated to [`DecisionPolicy`]; this trait remains for external /
+/// hand-rolled policies, which run unchanged (and byte-identically to
+/// the historical engine) through [`LegacyPolicyAdapter`]:
+///
+/// ```no_run
+/// # use uvmio::policy::{LegacyPolicyAdapter, Policy};
+/// # use uvmio::sim::{Arena, Session};
+/// # use uvmio::config::SimConfig;
+/// # fn wrap(cfg: SimConfig, arena: Arena, old: Box<dyn Policy>) {
+/// let session =
+///     Session::new(cfg, arena, Box::new(LegacyPolicyAdapter::new(old)));
+/// # let _ = session;
+/// # }
+/// ```
 pub trait Policy {
     fn name(&self) -> String;
 
@@ -113,11 +154,53 @@ pub trait Policy {
     fn on_kernel_boundary(&mut self, _kernel: u32) {}
 }
 
-/// Forwarding impl so a borrowed policy drives a simulation that wants
-/// ownership: `Box<&mut P>` is a `Box<dyn Policy + '_>`, which is how
-/// [`crate::sim::Engine::run`] (which borrows its policy) wraps the
-/// owning [`crate::sim::Session`] API.
+/// Forwarding impl so a borrowed legacy policy can be adapted without
+/// giving up ownership.
 impl<P: Policy + ?Sized> Policy for &mut P {
+    fn name(&self) -> String {
+        (**self).name()
+    }
+
+    fn instrumentation(&self) -> PolicyInstrumentation {
+        (**self).instrumentation()
+    }
+
+    fn on_access(&mut self, acc: &Access, resident: bool) {
+        (**self).on_access(acc, resident)
+    }
+
+    fn fault_action(&mut self, page: Page) -> FaultAction {
+        (**self).fault_action(page)
+    }
+
+    fn prefetch(&mut self, acc: &Access) -> Vec<Page> {
+        (**self).prefetch(acc)
+    }
+
+    fn select_victim(&mut self, mem: &DeviceMemory) -> Option<Page> {
+        (**self).select_victim(mem)
+    }
+
+    fn on_migrate(&mut self, page: Page, via_prefetch: bool) {
+        (**self).on_migrate(page, via_prefetch)
+    }
+
+    fn on_evict(&mut self, page: Page) {
+        (**self).on_evict(page)
+    }
+
+    fn on_interval(&mut self) {
+        (**self).on_interval()
+    }
+
+    fn on_kernel_boundary(&mut self, kernel: u32) {
+        (**self).on_kernel_boundary(kernel)
+    }
+}
+
+/// Boxed legacy policies are policies too — this is what lets
+/// [`LegacyPolicyAdapter`] wrap a `Box<dyn Policy>` directly.
+impl<P: Policy + ?Sized> Policy for Box<P> {
     fn name(&self) -> String {
         (**self).name()
     }
@@ -165,6 +248,17 @@ pub trait Evictor {
     fn name(&self) -> String;
     fn on_access(&mut self, _acc: &Access, _resident: bool) {}
     fn select_victim(&mut self, mem: &DeviceMemory) -> Option<Page>;
+
+    /// Background pre-eviction candidates, drained by the composite at
+    /// each fault-serviced decision point and routed to the session's
+    /// background-transfer queue. Reactive evictors keep the empty
+    /// default; a proactive evictor (e.g.
+    /// [`tree_evict::TreeEvict::proactive`]) returns the victims it
+    /// wants moved out *before* memory pressure forces the issue.
+    fn pre_evict(&mut self, _view: &MemView<'_>) -> Vec<Page> {
+        Vec::new()
+    }
+
     fn on_migrate(&mut self, _page: Page, _via_prefetch: bool) {}
     fn on_evict(&mut self, _page: Page) {}
     fn on_interval(&mut self) {}

@@ -1,6 +1,8 @@
 //! Random eviction (Zheng et al. HPCA'16 comparison point): a uniformly
 //! random resident page, irrespective of recency. Sometimes beats LRU on
-//! thrashing patterns precisely because it is recency-blind.
+//! thrashing patterns precisely because it is recency-blind. Reactive
+//! only — it never emits `pre_evict` directives (randomly draining
+//! frames ahead of pressure would be noise, not policy).
 
 use std::collections::HashMap;
 

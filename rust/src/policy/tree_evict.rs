@@ -4,9 +4,27 @@
 //! leaves under it are scheduled for pre-eviction — the intuition being
 //! that a draining region will not be re-referenced soon.
 //!
-//! Used by the ablation benches (`policies` bench) and available to the
-//! experiment harness as an alternative evictor; falls back to LRU order
-//! when the pre-eviction queue is empty.
+//! Two drain modes:
+//!
+//! * [`TreeEvict::new`] — **reactive** (the historical behaviour, kept
+//!   byte-identical): scheduled pages sit in a queue that
+//!   `select_victim` consumes at demand-eviction time, LRU as fallback.
+//!   The "pre"-eviction never actually happens early — it only biases
+//!   the demand-time victim choice.
+//! * [`TreeEvict::proactive`] — **directive-based**: the drain queue is
+//!   emitted through [`Evictor::pre_evict`], so the session's
+//!   background-transfer queue moves the pages out *ahead* of memory
+//!   pressure, overlapping the eviction traffic with compute (the
+//!   §IV-D mechanism). A warmth guard consults the
+//!   [`MemView`] frame metadata and skips drain candidates that kept
+//!   accumulating touches after their region started draining — the
+//!   correction the reactive mode cannot make, and the reason the
+//!   proactive mode thrashes less. Demand-time `select_victim` still
+//!   prefers any not-yet-drained queue entry, LRU as fallback.
+//!
+//! Registered as the `tree-evict` strategy (proactive mode composed
+//! with the tree prefetcher under pressure-aware prefetch bounding);
+//! also used by the ablation benches (`policies` bench).
 
 use std::collections::{HashMap, VecDeque};
 
@@ -15,28 +33,61 @@ use crate::sim::{DeviceMemory, Page};
 use crate::trace::Access;
 
 use super::lru::Lru;
-use super::Evictor;
+use super::{Evictor, MemView};
 
 const PAGES_PER_CHUNK: u64 = PAGES_PER_BB * BBS_PER_CHUNK;
 const NODES: usize = 2 * BBS_PER_CHUNK as usize;
+
+/// Touch-count ceiling for proactive draining: a drain candidate with
+/// more accumulated touches than this is warm — leave it to the demand
+/// path instead of pre-evicting it. (A demand-migrated page starts at
+/// one touch; prefetched pages at zero.)
+const DRAIN_TOUCH_GUARD: u32 = 2;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum DrainMode {
+    /// queue consumed at demand-eviction time only (historical)
+    Reactive,
+    /// queue emitted as `pre_evict` directives (background eviction)
+    Proactive,
+}
 
 #[derive(Debug)]
 pub struct TreeEvict {
     valid: HashMap<u64, [u16; NODES]>, // chunk -> heap counters
     resident: HashMap<Page, ()>,
-    /// pages scheduled for pre-eviction (drained by select_victim)
+    /// pages scheduled for pre-eviction (drained by select_victim in
+    /// reactive mode, by pre_evict directives in proactive mode)
     queue: VecDeque<Page>,
     fallback: Lru,
+    mode: DrainMode,
 }
 
 impl TreeEvict {
+    /// Reactive drain mode — byte-identical to the historical policy.
     pub fn new() -> TreeEvict {
+        TreeEvict::with_mode(DrainMode::Reactive)
+    }
+
+    /// Proactive drain mode: scheduled pages are emitted as background
+    /// pre-eviction directives (see the module docs).
+    pub fn proactive() -> TreeEvict {
+        TreeEvict::with_mode(DrainMode::Proactive)
+    }
+
+    fn with_mode(mode: DrainMode) -> TreeEvict {
         TreeEvict {
             valid: HashMap::new(),
             resident: HashMap::new(),
             queue: VecDeque::new(),
             fallback: Lru::new(),
+            mode,
         }
+    }
+
+    /// True when built with [`TreeEvict::proactive`].
+    pub fn is_proactive(&self) -> bool {
+        self.mode == DrainMode::Proactive
     }
 
     fn leaf(page: Page) -> (u64, usize) {
@@ -123,6 +174,30 @@ impl Evictor for TreeEvict {
         self.fallback.on_evict(page);
     }
 
+    fn pre_evict(&mut self, view: &MemView<'_>) -> Vec<Page> {
+        if self.mode != DrainMode::Proactive {
+            return Vec::new();
+        }
+        let mut out = Vec::new();
+        while let Some(p) = self.queue.pop_front() {
+            if !self.resident.contains_key(&p) {
+                continue; // stale entry
+            }
+            // warmth guard: a candidate still collecting touches since
+            // its region started draining is not cold — drop it from
+            // the drain (a later region collapse may re-schedule it)
+            let warm = view
+                .frame(p)
+                .map(|f| f.touches > DRAIN_TOUCH_GUARD)
+                .unwrap_or(true);
+            if warm {
+                continue;
+            }
+            out.push(p);
+        }
+        out
+    }
+
     fn select_victim(&mut self, mem: &DeviceMemory) -> Option<Page> {
         while let Some(p) = self.queue.pop_front() {
             if self.resident.contains_key(&p) {
@@ -177,5 +252,50 @@ mod tests {
             t.on_evict(p);
         }
         assert_eq!(t.select_victim(&mem), None);
+    }
+
+    #[test]
+    fn reactive_mode_emits_no_directives() {
+        let mem = DeviceMemory::new(1024);
+        let mut t = TreeEvict::new();
+        for p in 0..16 {
+            t.on_migrate(p, false);
+        }
+        t.on_evict(3);
+        let view = MemView::new(&mem, 0, 0, 0);
+        assert!(t.pre_evict(&view).is_empty());
+        assert!(!t.is_proactive());
+        // the queue is intact for demand-time consumption
+        assert!(t.select_victim(&mem).is_some());
+    }
+
+    #[test]
+    fn proactive_mode_emits_cold_drain_candidates() {
+        // the device-memory mirror supplies the frame metadata the
+        // warmth guard reads
+        let mut mem = DeviceMemory::new(1024);
+        let mut t = TreeEvict::proactive();
+        assert!(t.is_proactive());
+        for p in 0..16u64 {
+            mem.install(p, 0, false);
+            mem.touch(p, false); // one touch each (cold)
+            t.on_migrate(p, false);
+        }
+        // page 5 is hot: touched well past the guard
+        for _ in 0..8 {
+            mem.touch(5, false);
+        }
+        let _ = mem.evict(3);
+        t.on_evict(3);
+        let view = MemView::new(&mem, 0, 0, 0);
+        let drained = t.pre_evict(&view);
+        assert!(!drained.is_empty(), "draining node emits directives");
+        assert!(
+            !drained.contains(&5),
+            "warm page must survive the drain: {drained:?}"
+        );
+        assert!(!drained.contains(&3), "already-evicted page is stale");
+        // queue fully consumed: a second call emits nothing new
+        assert!(t.pre_evict(&view).is_empty());
     }
 }

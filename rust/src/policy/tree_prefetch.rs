@@ -7,6 +7,11 @@
 //! the whole faulted basic block; and for every non-leaf node whose
 //! resident ("valid") size exceeds 50% of its capacity, the remaining
 //! non-valid pages under that node are scheduled as prefetches.
+//!
+//! Under the decision API the composite queries this prefetcher at the
+//! `FaultServiced` decision point — *after* the demand migration, the
+//! same ordering the old `prefetch()` hook had (the tree must see the
+//! faulted page as valid before expanding its neighbourhood).
 
 use std::collections::HashMap;
 

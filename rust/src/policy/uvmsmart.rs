@@ -13,14 +13,21 @@
 //! pattern→mechanism binding is chosen from *profiling-phase* traffic and
 //! turns stale when later phases shift (§III-B), and pinned pages burden
 //! paged memory.
+//!
+//! Speaks the directive protocol ([`DecisionPolicy`]) natively, but
+//! deliberately emits **no** `pre_evict` directives: UVMSmart is the
+//! comparator, and pre-eviction is precisely what it lacks next to the
+//! intelligent framework.
 
-use crate::sim::{DeviceMemory, FaultAction, Page};
+use crate::sim::{FaultAction, Page};
 use crate::trace::Access;
 
 use super::dfa::{DfaClassifier, Pattern};
 use super::lru::Lru;
 use super::tree_prefetch::TreePrefetcher;
-use super::{Evictor, Policy, Prefetcher};
+use super::{
+    DecisionPolicy, Decisions, Evictor, MemEvent, MemView, Prefetcher,
+};
 
 pub struct UvmSmart {
     dfa: DfaClassifier,
@@ -55,19 +62,10 @@ impl UvmSmart {
     fn under_pressure(&self) -> bool {
         self.evictions_seen > 0 || self.resident * 10 >= self.capacity * 9
     }
-}
 
-impl Policy for UvmSmart {
-    fn name(&self) -> String {
-        "UVMSmart".into()
-    }
-
-    fn on_access(&mut self, acc: &Access, resident: bool) {
-        self.evictor.on_access(acc, resident);
-        self.prefetcher.on_access(acc, resident);
-    }
-
-    fn fault_action(&mut self, _page: Page) -> FaultAction {
+    /// The augmented memory module's fault-service choice (exposed for
+    /// the unit tests).
+    pub fn fault_action_for(&mut self, _page: Page) -> FaultAction {
         if !self.under_pressure() {
             return FaultAction::Migrate;
         }
@@ -82,10 +80,12 @@ impl Policy for UvmSmart {
         }
     }
 
-    fn prefetch(&mut self, acc: &Access) -> Vec<Page> {
-        // dynamic policy engine: tree prefetch only for linear patterns;
-        // random traffic gets demand paging (garbage prefetches would
-        // evict useful pages under pressure).
+    /// The dynamic policy engine's prefetch choice (exposed for the
+    /// unit tests).
+    pub fn prefetch_for(&mut self, acc: &Access) -> Vec<Page> {
+        // tree prefetch only for linear patterns; random traffic gets
+        // demand paging (garbage prefetches would evict useful pages
+        // under pressure).
         if self.pattern.is_linear()
             || (!self.under_pressure() && !self.pattern.is_random())
         {
@@ -94,31 +94,54 @@ impl Policy for UvmSmart {
             Vec::new()
         }
     }
+}
 
-    fn select_victim(&mut self, mem: &DeviceMemory) -> Option<Page> {
-        self.evictor.select_victim(mem)
+impl DecisionPolicy for UvmSmart {
+    fn name(&self) -> String {
+        "UVMSmart".into()
     }
 
-    fn on_migrate(&mut self, page: Page, via_prefetch: bool) {
-        self.resident += 1;
-        // the detection engine watches *demand* traffic: prefetch DMA is
-        // block-sorted by construction and would masquerade as linear
-        if !via_prefetch {
-            self.dfa.note_transfer(page);
+    fn decide(&mut self, event: &MemEvent<'_>, view: &MemView<'_>) -> Decisions {
+        match *event {
+            MemEvent::Access { acc, resident } => {
+                self.evictor.on_access(acc, resident);
+                self.prefetcher.on_access(acc, resident);
+                Decisions::none()
+            }
+            MemEvent::Fault { acc } => {
+                Decisions::fault(self.fault_action_for(acc.page))
+            }
+            MemEvent::FaultServiced { acc, .. } => {
+                Decisions::none().with_prefetch(self.prefetch_for(acc))
+            }
+            MemEvent::VictimNeeded { .. } => {
+                Decisions::victim(self.evictor.select_victim(view.memory()))
+            }
+            MemEvent::Migrated { page, via_prefetch } => {
+                self.resident += 1;
+                // the detection engine watches *demand* traffic:
+                // prefetch DMA is block-sorted by construction and would
+                // masquerade as linear
+                if !via_prefetch {
+                    self.dfa.note_transfer(page);
+                }
+                self.prefetcher.on_migrate(page, via_prefetch);
+                self.evictor.on_migrate(page, via_prefetch);
+                Decisions::none()
+            }
+            MemEvent::Evicted { page, .. } => {
+                self.resident = self.resident.saturating_sub(1);
+                self.evictions_seen += 1;
+                self.prefetcher.on_evict(page);
+                self.evictor.on_evict(page);
+                Decisions::none()
+            }
+            MemEvent::Interval { .. } => Decisions::none(),
+            MemEvent::KernelBoundary { .. } => {
+                self.pattern = self.dfa.kernel_boundary();
+                Decisions::none()
+            }
         }
-        self.prefetcher.on_migrate(page, via_prefetch);
-        self.evictor.on_migrate(page, via_prefetch);
-    }
-
-    fn on_evict(&mut self, page: Page) {
-        self.resident = self.resident.saturating_sub(1);
-        self.evictions_seen += 1;
-        self.prefetcher.on_evict(page);
-        self.evictor.on_evict(page);
-    }
-
-    fn on_kernel_boundary(&mut self, _kernel: u32) {
-        self.pattern = self.dfa.kernel_boundary();
     }
 }
 
@@ -126,7 +149,7 @@ impl Policy for UvmSmart {
 mod tests {
     use super::*;
     use crate::config::SimConfig;
-    use crate::sim::Engine;
+    use crate::sim::{DeviceMemory, Engine};
     use crate::trace::{Access as A, Trace};
 
     fn trace_of(pages: Vec<(u64, u32)>, ws: u64, kernels: u32) -> Trace {
@@ -148,38 +171,62 @@ mod tests {
         )
     }
 
+    /// Drive the migrate/evict/boundary notifications through decide(),
+    /// the way the session does.
+    fn notify_migrate(u: &mut UvmSmart, mem: &DeviceMemory, page: Page) {
+        u.decide(
+            &MemEvent::Migrated { page, via_prefetch: false },
+            &MemView::new(mem, 0, 0, 0),
+        );
+    }
+
     #[test]
     fn no_pressure_always_migrates() {
         let mut u = UvmSmart::new(1000);
-        assert_eq!(u.fault_action(5), FaultAction::Migrate);
+        assert_eq!(u.fault_action_for(5), FaultAction::Migrate);
     }
 
     #[test]
     fn random_pattern_under_pressure_pins() {
+        let mem = DeviceMemory::new(16);
         let mut u = UvmSmart::new(10);
         // random-looking transfer stream, then a kernel boundary
         for i in 0..32u64 {
             let bb = (i * i * 2654435761 >> 5) % 997;
-            u.on_migrate(bb * 16, false);
+            notify_migrate(&mut u, &mem, bb * 16);
         }
-        u.on_kernel_boundary(1);
+        u.decide(
+            &MemEvent::KernelBoundary { kernel: 1 },
+            &MemView::new(&mem, 0, 0, 0),
+        );
         assert!(u.pattern().is_random());
-        u.on_evict(0); // pressure begins
-        assert_eq!(u.fault_action(5), FaultAction::ZeroCopy);
+        u.decide(
+            &MemEvent::Evicted { page: 0, pre_evicted: false },
+            &MemView::new(&mem, 0, 0, 0),
+        ); // pressure begins
+        assert_eq!(u.fault_action_for(5), FaultAction::ZeroCopy);
     }
 
     #[test]
     fn linear_pattern_keeps_prefetching() {
+        let mem = DeviceMemory::new(16);
         let mut u = UvmSmart::new(10_000);
         for p in 0..64u64 {
-            u.on_migrate(p, false);
+            notify_migrate(&mut u, &mem, p);
         }
-        u.on_kernel_boundary(1);
-        assert!(u.pattern().is_linear());
-        let pf = Policy::prefetch(
-            &mut u,
-            &A { page: 64, pc: 0, tb: 0, kernel: 1, inst_gap: 0, is_write: false },
+        u.decide(
+            &MemEvent::KernelBoundary { kernel: 1 },
+            &MemView::new(&mem, 0, 0, 0),
         );
+        assert!(u.pattern().is_linear());
+        let pf = u.prefetch_for(&A {
+            page: 64,
+            pc: 0,
+            tb: 0,
+            kernel: 1,
+            inst_gap: 0,
+            is_write: false,
+        });
         // page 64 starts bb 4; nothing of it is resident yet, so the tree
         // prefetcher completes the block
         assert!(pf.contains(&65));
@@ -190,6 +237,7 @@ mod tests {
         // a random-reuse workload over capacity: UVMSmart's pinning must
         // thrash less than the migrate-everything baseline
         use crate::policy::composite::Composite;
+        use crate::policy::lru::Lru;
         use crate::util::rng::Rng;
         let mut rng = Rng::new(9);
         let ws = 600u64;

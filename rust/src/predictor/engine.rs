@@ -9,14 +9,26 @@
 //! Online fine-tuning: every `train_group` samples, snapshot the LUCIR
 //! "previous model", build the thrash mask from E∪T, and run a few Adam
 //! steps on the pattern-specific weights from the model table.
+//!
+//! The policy speaks the directive protocol
+//! ([`crate::policy::DecisionPolicy`]) natively, and — per Fig 7 step 7
+//! ("prefetching, pre-eviction, pinning") — performs **pre-eviction**
+//! as a first-class decision when [`IntelligentConfig::pre_evict`] is
+//! on: under memory pressure it emits never-predicted pages from the
+//! oldest page-set-chain partition as `pre_evict` directives (moved out
+//! by the session's background-transfer queue ahead of demand
+//! pressure), and bounds each prefetch burst by the frames actually
+//! available so predicted prefetches stop force-evicting warm pages.
 
 use std::collections::HashSet;
 use std::sync::Arc;
 
 use crate::policy::dfa::DfaClassifier;
-use crate::policy::{Policy, PolicyInstrumentation};
+use crate::policy::{
+    DecisionPolicy, Decisions, MemEvent, MemView, PolicyInstrumentation,
+};
 use crate::runtime::ModelRuntime;
-use crate::sim::{DeviceMemory, FaultAction, Page};
+use crate::sim::{FaultAction, Page};
 use crate::trace::Access;
 use crate::util::rng::Rng;
 
@@ -44,6 +56,12 @@ pub struct IntelligentConfig {
     pub pattern_aware: bool,
     /// cap on prefetches returned per access
     pub prefetch_burst: usize,
+    /// first-class pre-eviction (Fig 7 step 7): under pressure, emit
+    /// never-predicted chain pages as background pre-evict directives
+    /// and bound prefetch bursts by available frames. `false` restores
+    /// the purely reactive pre-redesign behaviour (the ablation the
+    /// pre-eviction tests compare against).
+    pub pre_evict: bool,
     pub seed: u64,
 }
 
@@ -58,10 +76,14 @@ impl Default for IntelligentConfig {
             mu: 0.2,
             pattern_aware: true,
             prefetch_burst: 256,
+            pre_evict: true,
             seed: 0xF00D,
         }
     }
 }
+
+/// Most pre-evict directives emitted per fault-serviced decision.
+const PRE_EVICT_BURST: usize = 8;
 
 pub struct IntelligentPolicy {
     rt: Arc<ModelRuntime>,
@@ -257,21 +279,10 @@ impl IntelligentPolicy {
     }
 }
 
-impl Policy for IntelligentPolicy {
-    fn name(&self) -> String {
-        "Intelligent".into()
-    }
-
-    fn instrumentation(&self) -> PolicyInstrumentation {
-        PolicyInstrumentation {
-            inference_calls: self.inference_calls,
-            predictions: self.predictions,
-            patterns_used: self.patterns_used(),
-            last_loss: self.last_loss,
-        }
-    }
-
-    fn on_access(&mut self, acc: &Access, _resident: bool) {
+impl IntelligentPolicy {
+    /// Featurise one access, firing batched inference / fine-tune rounds
+    /// as buffers fill (the per-access half of Fig 7).
+    fn observe_access(&mut self, acc: &Access) {
         if let Some(window) = self.wb.current_window() {
             self.infer_buf
                 .push((window, self.wb.last_page().unwrap_or(0)));
@@ -288,15 +299,15 @@ impl Policy for IntelligentPolicy {
         }
     }
 
-    fn fault_action(&mut self, page: Page) -> FaultAction {
-        // The GMMU accepts pinning decisions from the policy engine
-        // (paper Fig 7 step 7: "prefetching, pre-eviction, pinning").
-        // Under memory pressure, a faulting page that the predictor does
-        // NOT expect to be re-used soon (absent from the prediction
-        // frequency table) on a random-pattern phase is served by
-        // delayed migration instead of paying the full far-fault +
-        // migration cost — the accuracy-gated analogue of UVMSmart's
-        // augmented memory module.
+    /// The GMMU accepts pinning decisions from the policy engine
+    /// (paper Fig 7 step 7: "prefetching, pre-eviction, pinning").
+    /// Under memory pressure, a faulting page that the predictor does
+    /// NOT expect to be re-used soon (absent from the prediction
+    /// frequency table) on a random-pattern phase is served by
+    /// delayed migration instead of paying the full far-fault +
+    /// migration cost — the accuracy-gated analogue of UVMSmart's
+    /// augmented memory module.
+    fn fault_action_for(&mut self, page: Page) -> FaultAction {
         if !self.evicted.is_empty()
             && self.dfa.classify_current().is_random()
             && self.freq.frequency(page) < 0
@@ -307,37 +318,112 @@ impl Policy for IntelligentPolicy {
         }
     }
 
-    fn prefetch(&mut self, _acc: &Access) -> Vec<Page> {
-        let n = self.cfg.prefetch_burst.min(self.prefetch_queue.len());
-        self.prefetch_queue.drain(..n).collect()
-    }
-
-    fn select_victim(&mut self, _mem: &DeviceMemory) -> Option<Page> {
-        self.chain.victim(&self.freq, 64)
-    }
-
-    fn on_migrate(&mut self, page: Page, via_prefetch: bool) {
-        self.chain.insert(page);
-        if self.evicted.contains(&page) {
-            self.thrashed.insert(page);
+    /// Pre-eviction candidates: under pressure, pop chain victims (the
+    /// same oldest-partition / lowest-frequency order demand eviction
+    /// uses) as long as they are *never-predicted* pages. The first
+    /// predicted-warm candidate stops the scan and is reinstated — only
+    /// pages the predictor has no expectation of reusing leave early.
+    /// `faulted` (the page whose fault we are servicing) is never a
+    /// candidate.
+    fn pre_evict_candidates(
+        &mut self,
+        view: &MemView<'_>,
+        faulted: Page,
+    ) -> Vec<Page> {
+        // pressure gate: ≥ ~97% occupancy (32 free frames per 1024)
+        if view.free_frames() * 32 >= view.capacity().max(32) {
+            return Vec::new();
         }
-        if !via_prefetch {
-            self.dfa.note_transfer(page);
+        let mut out = Vec::new();
+        while out.len() < PRE_EVICT_BURST {
+            match self.chain.victim(&self.freq, 64) {
+                Some(p) if p != faulted && self.freq.frequency(p) < 0 => {
+                    out.push(p);
+                }
+                Some(p) => {
+                    // predicted-warm (or the faulting page): put it
+                    // back and stop — everything older was colder
+                    self.chain.insert(p);
+                    break;
+                }
+                None => break,
+            }
+        }
+        out
+    }
+}
+
+impl DecisionPolicy for IntelligentPolicy {
+    fn name(&self) -> String {
+        "Intelligent".into()
+    }
+
+    fn instrumentation(&self) -> PolicyInstrumentation {
+        PolicyInstrumentation {
+            inference_calls: self.inference_calls,
+            predictions: self.predictions,
+            patterns_used: self.patterns_used(),
+            last_loss: self.last_loss,
         }
     }
 
-    fn on_evict(&mut self, page: Page) {
-        self.chain.remove(page);
-        self.evicted.insert(page);
-    }
-
-    fn on_interval(&mut self) {
-        self.chain.rotate();
-        self.freq.on_interval();
-    }
-
-    fn on_kernel_boundary(&mut self, _kernel: u32) {
-        self.dfa.kernel_boundary();
+    fn decide(&mut self, event: &MemEvent<'_>, view: &MemView<'_>) -> Decisions {
+        match *event {
+            MemEvent::Access { acc, .. } => {
+                self.observe_access(acc);
+                Decisions::none()
+            }
+            MemEvent::Fault { acc } => {
+                Decisions::fault(self.fault_action_for(acc.page))
+            }
+            MemEvent::FaultServiced { acc, .. } => {
+                let mut d = Decisions::none();
+                if self.cfg.pre_evict {
+                    d.pre_evict = self.pre_evict_candidates(view, acc.page);
+                }
+                let mut burst =
+                    self.cfg.prefetch_burst.min(self.prefetch_queue.len());
+                if self.cfg.pre_evict {
+                    // prefetch only into frames that exist: free now, or
+                    // freed by the pre-evictions the slack rule will
+                    // actually execute (held-back dirty pages count 0)
+                    burst = burst.min(
+                        (view.free_frames() as usize).saturating_add(
+                            view.pre_evictable_now(&d.pre_evict),
+                        ),
+                    );
+                }
+                d.prefetch = self.prefetch_queue.drain(..burst).collect();
+                d
+            }
+            MemEvent::VictimNeeded { .. } => {
+                Decisions::victim(self.chain.victim(&self.freq, 64))
+            }
+            MemEvent::Migrated { page, via_prefetch } => {
+                self.chain.insert(page);
+                if self.evicted.contains(&page) {
+                    self.thrashed.insert(page);
+                }
+                if !via_prefetch {
+                    self.dfa.note_transfer(page);
+                }
+                Decisions::none()
+            }
+            MemEvent::Evicted { page, .. } => {
+                self.chain.remove(page);
+                self.evicted.insert(page);
+                Decisions::none()
+            }
+            MemEvent::Interval { .. } => {
+                self.chain.rotate();
+                self.freq.on_interval();
+                Decisions::none()
+            }
+            MemEvent::KernelBoundary { .. } => {
+                self.dfa.kernel_boundary();
+                Decisions::none()
+            }
+        }
     }
 }
 

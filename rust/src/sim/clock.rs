@@ -45,6 +45,29 @@
 //!   prefetching hurts" emerges) but never stall the SMs directly;
 //! * predictor-driven policies charge `prediction_overhead` per
 //!   invocation batch (the Fig 13 sensitivity axis).
+//!
+//! # The background-queue slack rule
+//!
+//! Pre-evictions issued through `policy::Decisions::pre_evict` execute
+//! off the session's background-transfer queue, **slack-scheduled** so
+//! background traffic yields to demand migrations:
+//!
+//! * a **clean** page is dropped for free — its host copy is already
+//!   valid, so no transfer is needed;
+//! * a **dirty** page needs a writeback transfer, and the queue only
+//!   starts one while the [`Interconnect`] is *idle*
+//!   (`free_at() <= now`). The writeback is priced as
+//!   [`CostEvent::LinkTransfer`] — link occupancy, zero SM stall — and
+//!   recorded in `Stats::background_link_cycles`;
+//! * because that first writeback makes the link busy again, at most
+//!   **one dirty writeback per idle-link window** issues; the remaining
+//!   dirty candidates are held on the queue for a later drain (the
+//!   queue drains at fault-handling time, where the driver is busy with
+//!   the fault batch anyway).
+//!
+//! Demand-path writebacks, by contrast, reserve the link immediately
+//! (FIFO-queued behind whatever is in flight): the demand path may
+//! delay background traffic, never the reverse.
 
 use crate::config::SimConfig;
 
@@ -194,6 +217,53 @@ pub trait CostModel: Send {
 
     /// Price one event at cycle `now` against the shared resources.
     fn charge(&self, now: u64, event: CostEvent, shared: &mut SharedResources) -> u64;
+}
+
+/// A nameable cost-model choice — the CLI / sweep-grid handle for the
+/// two in-tree [`CostModel`]s. Library callers with a custom model use
+/// [`crate::sim::Session::with_cost_model`] directly; this enum exists
+/// so `repro simulate --cost-model coherent-link` and per-cell sweep
+/// columns have a stable, parseable name for each builtin model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum CostModelKind {
+    /// The paper's Table V discrete-GPU-over-PCIe pricing ([`TableV`]).
+    #[default]
+    TableV,
+    /// Grace-Hopper-style coherent-link pricing ([`CoherentLink`]).
+    CoherentLink,
+}
+
+impl CostModelKind {
+    /// Every builtin model, in CLI/display order.
+    pub const ALL: [CostModelKind; 2] =
+        [CostModelKind::TableV, CostModelKind::CoherentLink];
+
+    /// Stable kebab-case name (CLI selector, sweep report column).
+    pub fn name(&self) -> &'static str {
+        match self {
+            CostModelKind::TableV => "table-v",
+            CostModelKind::CoherentLink => "coherent-link",
+        }
+    }
+
+    /// Parse a CLI selector (case-insensitive).
+    pub fn from_name(s: &str) -> Option<CostModelKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "table-v" | "tablev" | "pcie" => Some(CostModelKind::TableV),
+            "coherent-link" | "coherent" | "c2c" => {
+                Some(CostModelKind::CoherentLink)
+            }
+            _ => None,
+        }
+    }
+
+    /// Instantiate the model for a config.
+    pub fn build(&self, cfg: &SimConfig) -> Box<dyn CostModel> {
+        match self {
+            CostModelKind::TableV => Box::new(TableV::new(cfg)),
+            CostModelKind::CoherentLink => Box::new(CoherentLink::new(cfg)),
+        }
+    }
 }
 
 /// The paper's Table V discrete-GPU-over-PCIe model — the default, and
@@ -546,6 +616,21 @@ mod tests {
         let ra = pcie.charge(0, CostEvent::RemoteAccess, &mut sa);
         let rb = c2c.charge(0, CostEvent::RemoteAccess, &mut sb);
         assert!(rb < ra, "coherent remote access must undercut zero-copy");
+    }
+
+    #[test]
+    fn cost_model_kind_round_trips_and_builds() {
+        for kind in CostModelKind::ALL {
+            assert_eq!(CostModelKind::from_name(kind.name()), Some(kind));
+            let cfg = SimConfig { capacity_pages: 1, ..Default::default() };
+            assert_eq!(kind.build(&cfg).name(), kind.name());
+        }
+        assert_eq!(
+            CostModelKind::from_name("C2C"),
+            Some(CostModelKind::CoherentLink)
+        );
+        assert_eq!(CostModelKind::from_name("nope"), None);
+        assert_eq!(CostModelKind::default(), CostModelKind::TableV);
     }
 
     #[test]

@@ -14,7 +14,7 @@
 //! where it now lives: [`crate::sim::clock`].
 
 use crate::config::SimConfig;
-use crate::policy::Policy;
+use crate::policy::DecisionPolicy;
 use crate::sim::session::{Arena, Session};
 use crate::trace::Trace;
 
@@ -40,8 +40,14 @@ impl Engine {
     }
 
     /// Run the whole trace under `policy`. Equivalent to feeding every
-    /// access of `trace` into a fresh [`Session`].
-    pub fn run(self, trace: &Trace, policy: &mut dyn Policy) -> RunOutcome {
+    /// access of `trace` into a fresh [`Session`]. (Old-style pull
+    /// policies go through [`crate::policy::LegacyPolicyAdapter`]
+    /// first.)
+    pub fn run(
+        self,
+        trace: &Trace,
+        policy: &mut dyn DecisionPolicy,
+    ) -> RunOutcome {
         let mut session = Session::new(self.cfg, Arena::of_trace(trace), Box::new(policy))
             .with_crash_threshold(self.crash_threshold);
         session.feed(trace.accesses.iter().copied());

@@ -8,8 +8,13 @@
 //! the paper's Table V via [`crate::config::SimConfig`].
 //!
 //! The engine is policy-agnostic: everything strategy-specific (what to
-//! prefetch, whom to evict, migrate vs pin) lives behind
-//! [`crate::policy::Policy`].
+//! prefetch, whom to evict or **pre-evict**, migrate vs pin) lives
+//! behind the directive protocol of [`crate::policy::DecisionPolicy`] —
+//! the session narrates [`crate::policy::MemEvent`]s and executes the
+//! returned [`crate::policy::Decisions`], including background
+//! pre-evictions through the session's slack-scheduled transfer queue
+//! (old-style [`crate::policy::Policy`] implementations run through
+//! [`crate::policy::LegacyPolicyAdapter`]).
 //!
 //! Two front doors share one timing core:
 //!
@@ -39,11 +44,11 @@ pub mod stats;
 pub mod tlb;
 
 pub use clock::{
-    Clock, CoherentLink, CostEvent, CostModel, FaultBatcher, Interconnect,
-    TableV,
+    Clock, CoherentLink, CostEvent, CostModel, CostModelKind, FaultBatcher,
+    Interconnect, TableV,
 };
 pub use engine::Engine;
-pub use mem::DeviceMemory;
+pub use mem::{DeviceMemory, Frame};
 pub use session::{Arena, Observer, RunOutcome, Session, SimEvent, StepResult};
 pub use stats::{MetricsSnapshot, Stats};
 pub use tlb::Tlb;

@@ -13,12 +13,27 @@
 //!   its access vector;
 //! * **mid-run observability** — [`Session::snapshot`] returns a cheap
 //!   [`MetricsSnapshot`] at any point, and typed [`SimEvent`]s (fault,
-//!   migrate, evict, thrash, interval, kernel boundary, crash) are
-//!   delivered to registered [`Observer`]s as they happen;
+//!   migrate, evict, pre-evict, thrash, interval, kernel boundary,
+//!   crash) are delivered to registered [`Observer`]s as they happen;
 //! * **co-simulation** — several live input streams can share one
 //!   session (see [`crate::coordinator::MultiTenantScheduler`]), so
 //!   concurrent tenants contend for device memory *online* instead of
 //!   being pre-interleaved into one offline trace.
+//!
+//! The session drives its policy through the **directive protocol** of
+//! [`crate::policy::DecisionPolicy`]: it narrates
+//! [`crate::policy::MemEvent`]s and executes the returned
+//! [`crate::policy::Decisions`] — fault actions and prefetches
+//! inline, and **pre-evictions through the background-transfer
+//! queue**: directive pages are queued, then drained at fault time
+//! under the slack rule (clean pages drop free; a dirty page writes
+//! back over the interconnect only while the link is idle, so
+//! background eviction traffic yields to demand migrations — see the
+//! timing-model doc in [`crate::sim::clock`]). Frames freed this way
+//! let later demand admissions skip the synchronous eviction entirely
+//! (`Stats::evictions_avoided`). Old-style pull
+//! [`crate::policy::Policy`] implementations run unchanged through
+//! [`crate::policy::LegacyPolicyAdapter`].
 //!
 //! Because a session has no trace in hand, the managed-allocation map
 //! the prefetch filter needs arrives up front as an [`Arena`] (built
@@ -29,14 +44,19 @@
 //! produce byte-identical [`Stats`] by construction, and the
 //! `session_matches_engine_*` integration tests pin that equivalence.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet, VecDeque};
 
 use crate::config::SimConfig;
-use crate::policy::Policy;
+use crate::policy::{DecisionPolicy, Decisions, MemEvent, MemView};
 use crate::sim::clock::{Clock, CostEvent, CostModel};
-use crate::sim::{DeviceMemory, FaultAction, Page, Stats, Tlb};
 use crate::sim::stats::MetricsSnapshot;
+use crate::sim::{DeviceMemory, FaultAction, Page, Stats, Tlb};
 use crate::trace::Access;
+
+/// Background-transfer queue bound: pre-evict directives beyond this
+/// evict the oldest queue entries first (they simply never pre-evict —
+/// the demand path still can).
+const BACKGROUND_QUEUE_CAP: usize = 4096;
 
 /// Result of a run: final stats plus the crash determination used by the
 /// 150% experiments (the paper reports ATAX/NW/2DCONV crashing under
@@ -98,9 +118,12 @@ pub enum SimEvent {
     Fault { page: Page, action: FaultAction },
     /// A page became resident (demand migration or prefetch).
     Migrate { page: Page, via_prefetch: bool },
-    /// A page was evicted; `dirty` pages additionally occupy the link
-    /// for writeback.
+    /// A page was evicted on the demand path; `dirty` pages additionally
+    /// occupy the link for writeback.
     Evict { page: Page, dirty: bool },
+    /// A page was pre-evicted by the background-transfer queue, ahead of
+    /// memory pressure; `dirty` pages wrote back during link slack.
+    PreEvict { page: Page, dirty: bool },
     /// A migration re-installed a previously evicted page.
     Thrash { page: Page },
     /// An eviction interval elapsed (`SimConfig::interval_faults`
@@ -113,11 +136,21 @@ pub enum SimEvent {
     Crash { thrash_events: u64 },
 }
 
-/// A registered event consumer. Observers see each [`SimEvent`] plus the
-/// stats as of that event; they must not assume any particular event
-/// spacing (hit-only stretches emit nothing).
+/// A registered event consumer. Observers see each [`SimEvent`] plus a
+/// full [`MetricsSnapshot`] as of that event (session-level context —
+/// resident pages, link occupancy — included); they must not assume any
+/// particular event spacing (hit-only stretches emit nothing).
 pub trait Observer {
-    fn on_event(&mut self, event: &SimEvent, stats: &Stats);
+    /// Cheap pre-filter: the session materializes a snapshot (and calls
+    /// [`Observer::on_event`]) only for events some observer is
+    /// interested in. The default accepts everything; sparse consumers
+    /// like progress reporters override it so high-frequency events on
+    /// the hot path cost nothing.
+    fn interested(&self, _event: &SimEvent) -> bool {
+        true
+    }
+
+    fn on_event(&mut self, event: &SimEvent, snapshot: &MetricsSnapshot);
 }
 
 /// What one pushed access did.
@@ -156,7 +189,15 @@ pub struct Session<'p> {
     /// runaway threshold: thrash events before declaring a crash
     crash_threshold: u64,
     crashed: bool,
-    policy: Box<dyn Policy + 'p>,
+    /// the background-transfer queue: pre-evict directives awaiting a
+    /// drain opportunity (see `drain_background` for the slack rule)
+    background: VecDeque<Page>,
+    /// pages pinned by policy hint — exempt from background pre-eviction
+    pinned: HashSet<Page>,
+    /// frames freed by pre-eviction and not yet consumed by an admit —
+    /// the `evictions_avoided` accounting credit
+    preevict_credit: u64,
+    policy: Box<dyn DecisionPolicy + 'p>,
     observers: Vec<Box<dyn Observer + 'p>>,
 }
 
@@ -164,7 +205,7 @@ impl<'p> Session<'p> {
     pub fn new(
         cfg: SimConfig,
         arena: Arena,
-        policy: Box<dyn Policy + 'p>,
+        policy: Box<dyn DecisionPolicy + 'p>,
     ) -> Session<'p> {
         let cap = cfg.capacity_pages;
         assert!(cap > 0, "SimConfig.capacity_pages not set");
@@ -179,6 +220,9 @@ impl<'p> Session<'p> {
             current_kernel: 0,
             crash_threshold: u64::MAX,
             crashed: false,
+            background: VecDeque::new(),
+            pinned: HashSet::new(),
+            preevict_credit: 0,
             observers: Vec::new(),
             cfg,
             arena,
@@ -248,12 +292,18 @@ impl<'p> Session<'p> {
 
     /// The policy driving this session (e.g. to read
     /// [`crate::policy::PolicyInstrumentation`] before [`Session::finish`]).
-    pub fn policy(&self) -> &(dyn Policy + 'p) {
+    pub fn policy(&self) -> &(dyn DecisionPolicy + 'p) {
         &*self.policy
     }
 
-    pub fn policy_mut(&mut self) -> &mut (dyn Policy + 'p) {
+    pub fn policy_mut(&mut self) -> &mut (dyn DecisionPolicy + 'p) {
         &mut *self.policy
+    }
+
+    /// Pages currently queued on the background-transfer queue (pre-evict
+    /// directives awaiting a drain opportunity).
+    pub fn background_pending(&self) -> usize {
+        self.background.len()
     }
 
     /// Cheap point-in-time metrics, readable mid-run without perturbing
@@ -274,7 +324,8 @@ impl<'p> Session<'p> {
         }
         if acc.kernel != self.current_kernel {
             self.current_kernel = acc.kernel;
-            self.policy.on_kernel_boundary(acc.kernel);
+            let d = self.decide(MemEvent::KernelBoundary { kernel: acc.kernel });
+            self.apply_hints(&d);
             self.emit(SimEvent::KernelBoundary { kernel: acc.kernel });
         }
         let result = self.step(acc);
@@ -349,14 +400,52 @@ impl<'p> Session<'p> {
         cost
     }
 
+    /// Consult the policy on one event, with a read-only view of the
+    /// session's residency / occupancy / clock state.
+    fn decide(&mut self, event: MemEvent<'_>) -> Decisions {
+        let view = MemView::new(
+            &self.mem,
+            self.stats.cycles,
+            self.clock.interconnect().free_at(),
+            self.clock.interconnect().busy_total(),
+        );
+        self.policy.decide(&event, &view)
+    }
+
+    /// Honour the pin/unpin hints a decision carries (valid on every
+    /// event).
+    fn apply_hints(&mut self, d: &Decisions) {
+        for &p in &d.pin {
+            self.pinned.insert(p);
+        }
+        for &p in &d.unpin {
+            self.pinned.remove(&p);
+        }
+    }
+
+    /// Queue a decision's pre-evict directives onto the background
+    /// transfer queue (bounded: oldest directives fall off first).
+    fn queue_pre_evictions(&mut self, d: &mut Decisions) {
+        for p in d.pre_evict.drain(..) {
+            if self.background.len() >= BACKGROUND_QUEUE_CAP {
+                self.background.pop_front();
+            }
+            self.background.push_back(p);
+        }
+    }
+
     #[inline]
     fn emit(&mut self, event: SimEvent) {
-        if self.observers.is_empty() {
+        if self.observers.is_empty()
+            || !self.observers.iter().any(|o| o.interested(&event))
+        {
             return;
         }
-        let stats = &self.stats;
+        let snap = self.snapshot();
         for o in self.observers.iter_mut() {
-            o.on_event(&event, stats);
+            if o.interested(&event) {
+                o.on_event(&event, &snap);
+            }
         }
     }
 
@@ -375,7 +464,8 @@ impl<'p> Session<'p> {
         }
 
         let resident = self.mem.resident(acc.page);
-        self.policy.on_access(acc, resident);
+        let d = self.decide(MemEvent::Access { acc, resident });
+        self.apply_hints(&d);
 
         if resident {
             self.stats.hits += 1;
@@ -383,12 +473,21 @@ impl<'p> Session<'p> {
             self.charge(CostEvent::ResidentHit);
             StepResult { hit: true, action: None, crashed: false }
         } else {
+            // the driver services its background queue while it is
+            // handling the fault anyway: frames freed here let the
+            // demand admission below skip its synchronous eviction
+            self.drain_background();
             let action = self.handle_fault(acc);
-            // prefetching is fault-triggered (the driver schedules
-            // prefetch DMA while servicing the far-fault batch);
+            // the batched decision point: prefetch and pre-eviction DMA
+            // are scheduled while the far-fault batch is in flight;
             // candidates must lie inside a managed allocation.
-            let candidates = self.policy.prefetch(acc);
-            for page in candidates {
+            let mut d = self.decide(MemEvent::FaultServiced { acc, action });
+            self.apply_hints(&d);
+            self.queue_pre_evictions(&mut d);
+            // drain before admitting prefetches so they land in the
+            // frames this decision's pre-evictions just freed
+            self.drain_background();
+            for page in d.prefetch {
                 if !self.arena.in_allocation(page) || self.mem.resident(page) {
                     continue;
                 }
@@ -406,11 +505,15 @@ impl<'p> Session<'p> {
         if self.faults_in_interval >= interval_faults {
             self.faults_in_interval = 0;
             self.intervals += 1;
-            self.policy.on_interval();
+            let mut d = self.decide(MemEvent::Interval { index: self.intervals });
+            self.apply_hints(&d);
+            self.queue_pre_evictions(&mut d);
             self.emit(SimEvent::Interval { index: self.intervals });
         }
 
-        let action = self.policy.fault_action(acc.page);
+        let d = self.decide(MemEvent::Fault { acc });
+        self.apply_hints(&d);
+        let action = d.fault_action.unwrap_or(FaultAction::Migrate);
         let effective = match action {
             FaultAction::Delay => {
                 let c = self.delay_counters.entry(acc.page).or_insert(0);
@@ -450,10 +553,63 @@ impl<'p> Session<'p> {
         effective
     }
 
+    /// Drain the background-transfer queue under the slack rule: skip
+    /// (and drop) non-resident or pinned pages; drop a clean page for
+    /// free; write a dirty page back only while the interconnect is
+    /// idle — at most one dirty writeback per idle-link window, the
+    /// rest are held for a later drain. Background traffic therefore
+    /// never queues ahead of a demand transfer that is already in
+    /// flight.
+    fn drain_background(&mut self) {
+        if self.background.is_empty() {
+            return;
+        }
+        let mut held: VecDeque<Page> = VecDeque::new();
+        while let Some(page) = self.background.pop_front() {
+            if !self.mem.resident(page) || self.pinned.contains(&page) {
+                continue; // stale or pinned: drop the directive
+            }
+            let dirty = self.mem.frame(page).map(|f| f.dirty).unwrap_or(false);
+            if dirty && self.clock.interconnect().free_at() > self.stats.cycles {
+                held.push_back(page); // no slack: hold for a later drain
+                continue;
+            }
+            let frame = self.mem.evict(page).expect("checked resident");
+            self.tlb.invalidate(page);
+            self.stats
+                .note_eviction(page, frame.prefetched_untouched, frame.dirty);
+            self.stats.pre_evictions += 1;
+            self.preevict_credit += 1;
+            if frame.dirty {
+                // background writeback: occupies the link, stalls nothing
+                let before = self.clock.interconnect().busy_total();
+                self.charge(CostEvent::LinkTransfer);
+                self.stats.background_link_cycles +=
+                    self.clock.interconnect().busy_total() - before;
+            }
+            let d = self.decide(MemEvent::Evicted { page, pre_evicted: true });
+            self.apply_hints(&d);
+            self.emit(SimEvent::PreEvict { page, dirty: frame.dirty });
+        }
+        self.background = held;
+    }
+
     /// Bring a page into device memory, evicting as needed.
     fn admit(&mut self, page: Page, via_prefetch: bool) {
+        let free = self.mem.capacity() - self.mem.used();
+        if self.preevict_credit > 0 && free > 0 && free <= self.preevict_credit {
+            // every currently-free frame is attributable to a background
+            // pre-eviction (free ≤ outstanding credit), so without
+            // pre-eviction this admission would have paid a synchronous
+            // eviction right here; admissions into organically-free
+            // headroom do not consume credit
+            self.preevict_credit -= 1;
+            self.stats.evictions_avoided += 1;
+        }
         while self.mem.is_full() {
-            let victim = match self.policy.select_victim(&self.mem) {
+            let d = self.decide(MemEvent::VictimNeeded { incoming: page });
+            self.apply_hints(&d);
+            let victim = match d.victim {
                 Some(v) if self.mem.resident(v) && v != page => v,
                 _ => {
                     self.stats.policy_victim_fallbacks += 1;
@@ -471,7 +627,11 @@ impl<'p> Session<'p> {
                 // writeback occupies the link but does not stall the SMs
                 self.charge(CostEvent::LinkTransfer);
             }
-            self.policy.on_evict(victim);
+            let d = self.decide(MemEvent::Evicted {
+                page: victim,
+                pre_evicted: false,
+            });
+            self.apply_hints(&d);
             self.emit(SimEvent::Evict { page: victim, dirty: frame.dirty });
         }
         // prefetch transfers ride the link in the background
@@ -481,7 +641,8 @@ impl<'p> Session<'p> {
         }
         self.mem.install(page, self.stats.cycles, via_prefetch);
         let thrashed = self.stats.note_migration(page);
-        self.policy.on_migrate(page, via_prefetch);
+        let d = self.decide(MemEvent::Migrated { page, via_prefetch });
+        self.apply_hints(&d);
         self.emit(SimEvent::Migrate { page, via_prefetch });
         if thrashed {
             self.emit(SimEvent::Thrash { page });
@@ -516,7 +677,7 @@ mod tests {
         )
     }
 
-    fn demand_lru() -> Box<dyn Policy> {
+    fn demand_lru() -> Box<dyn DecisionPolicy> {
         Box::new(Composite::new(DemandOnly, Lru::new()))
     }
 
@@ -531,17 +692,19 @@ mod tests {
         faults: usize,
         migrates: usize,
         evicts: usize,
+        pre_evicts: usize,
         thrashes: usize,
         crashes: usize,
     }
 
     impl Observer for std::rc::Rc<std::cell::RefCell<Recorder>> {
-        fn on_event(&mut self, event: &SimEvent, _stats: &Stats) {
+        fn on_event(&mut self, event: &SimEvent, _snap: &MetricsSnapshot) {
             let mut r = self.borrow_mut();
             match event {
                 SimEvent::Fault { .. } => r.faults += 1,
                 SimEvent::Migrate { .. } => r.migrates += 1,
                 SimEvent::Evict { .. } => r.evicts += 1,
+                SimEvent::PreEvict { .. } => r.pre_evicts += 1,
                 SimEvent::Thrash { .. } => r.thrashes += 1,
                 SimEvent::Crash { .. } => r.crashes += 1,
                 _ => {}
@@ -580,6 +743,10 @@ mod tests {
         assert_eq!(r.faults as u64, out.stats.faults);
         assert_eq!(r.migrates as u64, out.stats.migrations);
         assert_eq!(r.evicts as u64, out.stats.evictions);
+        assert_eq!(r.pre_evicts, 0, "reactive policy never pre-evicts");
+        assert_eq!(out.stats.pre_evictions, 0);
+        assert_eq!(out.stats.evictions_avoided, 0);
+        assert_eq!(out.stats.background_link_cycles, 0);
         assert_eq!(r.thrashes as u64, out.stats.thrash_events);
         assert_eq!(r.crashes, 0);
     }
@@ -634,5 +801,166 @@ mod tests {
         assert!(!multi.in_allocation(4));
         assert!(multi.in_allocation(39));
         assert!(!multi.in_allocation(99));
+    }
+
+    /// A minimal directive policy: LRU demand eviction, plus a pre-evict
+    /// directive for one named page at every fault-serviced point.
+    struct PreEvictOne {
+        inner: Composite<DemandOnly, Lru>,
+        target: Page,
+    }
+
+    impl DecisionPolicy for PreEvictOne {
+        fn name(&self) -> String {
+            "pre-evict-one".into()
+        }
+
+        fn decide(
+            &mut self,
+            event: &MemEvent<'_>,
+            view: &MemView<'_>,
+        ) -> Decisions {
+            let mut d = self.inner.decide(event, view);
+            if let MemEvent::FaultServiced { .. } = event {
+                d.pre_evict.push(self.target);
+            }
+            d
+        }
+    }
+
+    #[test]
+    fn pre_evict_directive_frees_the_frame_in_background() {
+        // touch 0..3 (capacity 4, full), then fault on 4: the directive
+        // pre-evicts page 0 during the fault, so the *next* admission
+        // finds a free frame instead of paying a synchronous eviction.
+        let t = mk_trace(&[0, 1, 2, 3, 4, 5], 6);
+        let cfg = SimConfig { capacity_pages: 4, ..Default::default() };
+        let rec = std::rc::Rc::new(std::cell::RefCell::new(Recorder::default()));
+        let mut s = Session::new(
+            cfg,
+            Arena::of_trace(&t),
+            Box::new(PreEvictOne {
+                inner: Composite::new(DemandOnly, Lru::new()),
+                target: 0,
+            }),
+        );
+        s.add_observer(Box::new(std::rc::Rc::clone(&rec)));
+        // each fault queues a directive for page 0; the next fault's
+        // drain executes it (page 0 resident, clean → dropped for free)
+        for acc in &t.accesses {
+            s.push(acc);
+        }
+        let out = s.finish();
+        assert!(out.stats.pre_evictions >= 1, "directive must execute");
+        assert!(rec.borrow().pre_evicts >= 1);
+        assert!(
+            out.stats.evictions_avoided >= 1,
+            "a later admit must consume the freed frame: {:?}",
+            out.stats
+        );
+        // pre-evicted page 0 was clean: no background link occupancy
+        assert_eq!(out.stats.background_link_cycles, 0);
+    }
+
+    /// Observer with a pre-filter: sees only the events it declared
+    /// interest in (the session skips snapshot work for the rest).
+    struct FaultsOnly(std::rc::Rc<std::cell::RefCell<usize>>);
+
+    impl Observer for FaultsOnly {
+        fn interested(&self, event: &SimEvent) -> bool {
+            matches!(event, SimEvent::Fault { .. })
+        }
+
+        fn on_event(&mut self, event: &SimEvent, _snap: &MetricsSnapshot) {
+            assert!(matches!(event, SimEvent::Fault { .. }));
+            *self.0.borrow_mut() += 1;
+        }
+    }
+
+    #[test]
+    fn disinterested_observers_are_filtered() {
+        let seq: Vec<u64> = (0..4).cycle().take(40).collect();
+        let t = mk_trace(&seq, 4);
+        let seen = std::rc::Rc::new(std::cell::RefCell::new(0usize));
+        let mut s = session_for(&t, 3);
+        s.add_observer(Box::new(FaultsOnly(std::rc::Rc::clone(&seen))));
+        s.feed(t.accesses.iter().copied());
+        let out = s.finish();
+        assert_eq!(*seen.borrow() as u64, out.stats.faults);
+    }
+
+    #[test]
+    fn pinned_pages_survive_pre_eviction() {
+        struct PinThenPreEvict {
+            inner: Composite<DemandOnly, Lru>,
+        }
+        impl DecisionPolicy for PinThenPreEvict {
+            fn name(&self) -> String {
+                "pin-then-pre-evict".into()
+            }
+            fn decide(
+                &mut self,
+                event: &MemEvent<'_>,
+                view: &MemView<'_>,
+            ) -> Decisions {
+                let mut d = self.inner.decide(event, view);
+                if let MemEvent::FaultServiced { .. } = event {
+                    d.pin.push(0);
+                    d.pre_evict.push(0);
+                }
+                d
+            }
+        }
+        let t = mk_trace(&[0, 1, 2, 3, 4, 5], 6);
+        let cfg = SimConfig { capacity_pages: 6, ..Default::default() };
+        let mut s = Session::new(
+            cfg,
+            Arena::of_trace(&t),
+            Box::new(PinThenPreEvict {
+                inner: Composite::new(DemandOnly, Lru::new()),
+            }),
+        );
+        s.feed(t.accesses.iter().copied());
+        assert!(s.memory().resident(0), "pinned page must stay resident");
+        let out = s.finish();
+        assert_eq!(out.stats.pre_evictions, 0, "pin defeats the directive");
+    }
+
+    #[test]
+    fn dirty_pre_eviction_waits_for_link_slack_and_bills_background() {
+        // a WRITE to page 0 makes it dirty; the pre-eviction must then
+        // reserve link occupancy, billed as background cycles.
+        let a = |page: u64, is_write: bool| Access {
+            page,
+            pc: 0,
+            tb: 0,
+            kernel: 0,
+            inst_gap: 4,
+            is_write,
+        };
+        let mut accesses = vec![a(0, true)];
+        // long hit stretch on page 1 lets the link drain to idle
+        accesses.resize(20_002, a(1, false));
+        // a final fault triggers the drain once slack exists
+        accesses.push(a(2, false));
+        let t = Trace::from_accesses("dirty", 4, 1, accesses);
+        let cfg = SimConfig { capacity_pages: 4, ..Default::default() };
+        let mut s = Session::new(
+            cfg,
+            Arena::of_trace(&t),
+            Box::new(PreEvictOne {
+                inner: Composite::new(DemandOnly, Lru::new()),
+                target: 0,
+            }),
+        );
+        s.feed(t.accesses.iter().copied());
+        let out = s.finish();
+        assert!(out.stats.pre_evictions >= 1, "{:?}", out.stats);
+        assert!(
+            out.stats.background_link_cycles > 0,
+            "dirty pre-eviction must occupy the link: {:?}",
+            out.stats
+        );
+        assert_eq!(out.stats.writebacks, out.stats.pre_evictions);
     }
 }

@@ -29,6 +29,16 @@ pub struct Stats {
     // prefetching
     pub prefetches: u64,
     pub garbage_prefetches: u64, // prefetched, evicted untouched
+    // background pre-eviction (the policy::Decisions pre_evict path)
+    /// pages evicted by the background-transfer queue, ahead of pressure
+    pub pre_evictions: u64,
+    /// demand/prefetch admissions whose only free headroom came from
+    /// prior pre-evictions (free frames ≤ outstanding pre-evict credit)
+    /// — each would otherwise have paid a synchronous eviction
+    pub evictions_avoided: u64,
+    /// interconnect occupancy reserved by background pre-eviction
+    /// writebacks (slack-scheduled; see `sim::clock`'s timing-model doc)
+    pub background_link_cycles: u64,
     // thrashing
     pub thrash_events: u64,
     pub thrashed_pages: HashSet<Page>,
@@ -65,6 +75,12 @@ pub struct MetricsSnapshot {
     pub delayed_remote: u64,
     pub prefetches: u64,
     pub garbage_prefetches: u64,
+    /// background pre-evictions executed so far
+    pub pre_evictions: u64,
+    /// admissions that found a pre-evicted frame free (no sync eviction)
+    pub evictions_avoided: u64,
+    /// link occupancy reserved by background pre-eviction writebacks
+    pub background_link_cycles: u64,
     pub thrash_events: u64,
     /// distinct pages ever thrashed (`thrashed_pages.len()`)
     pub thrashed_unique: u64,
@@ -167,6 +183,9 @@ impl Stats {
             delayed_remote: self.delayed_remote,
             prefetches: self.prefetches,
             garbage_prefetches: self.garbage_prefetches,
+            pre_evictions: self.pre_evictions,
+            evictions_avoided: self.evictions_avoided,
+            background_link_cycles: self.background_link_cycles,
             thrash_events: self.thrash_events,
             thrashed_unique: self.thrashed_pages.len() as u64,
             evicted_unique: self.evicted_pages.len() as u64,

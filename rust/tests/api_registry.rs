@@ -11,13 +11,14 @@ use uvmio::config::Scale;
 use uvmio::coordinator::{RunSpec, SchedulePolicy};
 use uvmio::corpus::{parse_source, parse_tenants};
 use uvmio::policy::lru::Lru;
-use uvmio::policy::{DemandOnly, Policy};
+use uvmio::policy::{DecisionPolicy, DemandOnly, LegacyPolicyAdapter, Policy};
 use uvmio::trace::workloads::Workload;
 
-const BUILTIN: [&str; 8] = [
+const BUILTIN: [&str; 9] = [
     "baseline",
     "demand-hpe",
     "tree-hpe",
+    "tree-evict",
     "demand-belady",
     "demand-lru",
     "demand-random",
@@ -107,13 +108,45 @@ fn duplicate_registration_is_rejected() {
         Ok(Box::new(uvmio::policy::composite::Composite::new(
             DemandOnly,
             Lru::new(),
-        )) as Box<dyn Policy>)
+        )) as Box<dyn DecisionPolicy>)
     });
     assert!(registry.register(dup).is_err());
 }
 
+/// A hand-rolled OLD-STYLE pull policy: registered through the adapter,
+/// it must behave exactly like the native demand-lru strategy.
+struct PullDemandLru {
+    lru: Lru,
+}
+
+impl Policy for PullDemandLru {
+    fn name(&self) -> String {
+        "Demand.+LRU".into()
+    }
+
+    fn on_access(&mut self, acc: &uvmio::trace::Access, resident: bool) {
+        uvmio::policy::Evictor::on_access(&mut self.lru, acc, resident);
+    }
+
+    fn select_victim(
+        &mut self,
+        mem: &uvmio::sim::DeviceMemory,
+    ) -> Option<uvmio::sim::Page> {
+        uvmio::policy::Evictor::select_victim(&mut self.lru, mem)
+    }
+
+    fn on_migrate(&mut self, page: uvmio::sim::Page, via_prefetch: bool) {
+        uvmio::policy::Evictor::on_migrate(&mut self.lru, page, via_prefetch);
+    }
+
+    fn on_evict(&mut self, page: uvmio::sim::Page) {
+        uvmio::policy::Evictor::on_evict(&mut self.lru, page);
+    }
+}
+
 /// The acceptance-criterion path: a strategy registered AT RUNTIME runs
-/// through the same sweep machinery as the builtins, with no enum edits.
+/// through the same sweep machinery as the builtins, with no enum edits
+/// — here an old-style pull policy, bridged by the legacy adapter.
 #[test]
 fn runtime_registered_strategy_runs_through_the_sweep() {
     let mut registry = StrategyRegistry::builtin();
@@ -122,10 +155,9 @@ fn runtime_registered_strategy_runs_through_the_sweep() {
             "my-demand-lru",
             "Custom D.+LRU",
             |_, _| {
-                Ok(Box::new(uvmio::policy::composite::Composite::new(
-                    DemandOnly,
-                    Lru::new(),
-                )) as Box<dyn Policy>)
+                Ok(Box::new(LegacyPolicyAdapter::new(PullDemandLru {
+                    lru: Lru::new(),
+                })) as Box<dyn DecisionPolicy>)
             },
         ))
         .unwrap();
@@ -163,7 +195,9 @@ fn parallel_sweep_is_byte_identical_to_serial() {
     let sweep = SweepSpec::new(
         vec![Workload::Atax, Workload::Bicg, Workload::Hotspot],
         registry
-            .resolve_list("baseline,uvmsmart,demand-belady,demand-random")
+            .resolve_list(
+                "baseline,uvmsmart,demand-belady,demand-random,tree-evict",
+            )
             .unwrap(),
     )
     .with_oversub(vec![110, 125, 150])

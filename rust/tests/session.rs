@@ -21,8 +21,7 @@ use uvmio::coordinator::{
 };
 use uvmio::corpus::{CorpusStore, TraceReader};
 use uvmio::sim::{
-    Arena, CoherentLink, MetricsSnapshot, Observer, Session, SimEvent, Stats,
-    TableV,
+    Arena, CoherentLink, MetricsSnapshot, Observer, Session, SimEvent, TableV,
 };
 use uvmio::trace::multi::interleave;
 use uvmio::trace::workloads::Workload;
@@ -33,7 +32,7 @@ fn build_policy(
     registry: &StrategyRegistry,
     name: &str,
     spec: &RunSpec<'_>,
-) -> Box<dyn uvmio::policy::Policy> {
+) -> Box<dyn uvmio::policy::DecisionPolicy> {
     registry
         .get(name)
         .unwrap()
@@ -46,7 +45,7 @@ fn build_policy(
 struct Counter(usize);
 
 impl Observer for Counter {
-    fn on_event(&mut self, _event: &SimEvent, _stats: &Stats) {
+    fn on_event(&mut self, _event: &SimEvent, _snap: &MetricsSnapshot) {
         self.0 += 1;
     }
 }
@@ -138,6 +137,13 @@ fn assert_monotone(prev: &MetricsSnapshot, next: &MetricsSnapshot) {
         (prev.delayed_remote, next.delayed_remote, "delayed_remote"),
         (prev.prefetches, next.prefetches, "prefetches"),
         (prev.garbage_prefetches, next.garbage_prefetches, "garbage"),
+        (prev.pre_evictions, next.pre_evictions, "pre_evictions"),
+        (prev.evictions_avoided, next.evictions_avoided, "evictions_avoided"),
+        (
+            prev.background_link_cycles,
+            next.background_link_cycles,
+            "background_link_cycles",
+        ),
         (prev.thrash_events, next.thrash_events, "thrash_events"),
         (prev.thrashed_unique, next.thrashed_unique, "thrashed_unique"),
         (prev.evicted_unique, next.evicted_unique, "evicted_unique"),
@@ -429,10 +435,9 @@ struct MonotoneChecker {
 }
 
 impl Observer for MonotoneChecker {
-    fn on_event(&mut self, _event: &SimEvent, stats: &Stats) {
-        let next = stats.snapshot();
-        assert_monotone(&self.prev, &next);
-        self.prev = next;
+    fn on_event(&mut self, _event: &SimEvent, snap: &MetricsSnapshot) {
+        assert_monotone(&self.prev, snap);
+        self.prev = *snap;
     }
 }
 

@@ -10,10 +10,11 @@ use uvmio::config::Scale;
 use uvmio::coordinator::RunSpec;
 use uvmio::trace::workloads::Workload;
 
-const RULE_BASED: [&str; 7] = [
+const RULE_BASED: [&str; 8] = [
     "baseline",
     "demand-hpe",
     "tree-hpe",
+    "tree-evict",
     "demand-belady",
     "demand-lru",
     "demand-random",
