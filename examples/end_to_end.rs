@@ -22,7 +22,7 @@ use std::time::Instant;
 use uvmio::api::{StrategyCtx, StrategyRegistry};
 use uvmio::config::Scale;
 use uvmio::coordinator::RunSpec;
-use uvmio::runtime::{Manifest, Runtime};
+use uvmio::runtime::{Manifest, ModelBackend, Runtime};
 use uvmio::trace::workloads::Workload;
 
 fn main() -> anyhow::Result<()> {
@@ -33,7 +33,7 @@ fn main() -> anyhow::Result<()> {
     let model = ctx.model.as_ref().expect("ctx carries the model");
     println!(
         "loaded predictor: {} params, batch {}, seq {}, {} delta classes",
-        model.param_count, model.batch, model.seq_len, model.classes
+        model.param_count(), model.batch(), model.seq_len(), model.classes()
     );
 
     let suite = [Workload::Atax, Workload::Bicg, Workload::Mvt];

@@ -19,7 +19,7 @@ use uvmio::coordinator::{
 use uvmio::policy::composite::Composite;
 use uvmio::policy::lru::Lru;
 use uvmio::policy::tree_prefetch::TreePrefetcher;
-use uvmio::runtime::{Manifest, Runtime};
+use uvmio::runtime::{Manifest, ModelBackend, Runtime};
 use uvmio::trace::multi::interleave;
 use uvmio::trace::workloads::Workload;
 use uvmio::util::cli::Args;
@@ -80,7 +80,7 @@ fn main() -> anyhow::Result<()> {
 
     // ---- part 2: per-tenant predictor accuracy (Table VII) ----
     let runtime = Runtime::new(&Manifest::default_dir())?;
-    let model = Arc::new(runtime.model("predictor")?);
+    let model: Arc<dyn ModelBackend> = Arc::new(runtime.model("predictor")?);
     let dims = feat_dims(&runtime);
 
     let online = multi_accuracy(&model, &dims, &ta, &tb, &TrainOpts::default())?;

@@ -1,7 +1,8 @@
 //! Learning-stack benchmarks: the structures on the prediction path
-//! (frequency table, page-set chain, window builder, batch packing) and
-//! — when artifacts are built — the PJRT inference / train-step
-//! latencies that set the Fig 13 overhead budget.
+//! (frequency table, page-set chain, window builder, batch packing),
+//! the native predictor's forward / train-step latencies (always
+//! available — no artifacts needed), and — when artifacts are built —
+//! the PJRT latencies that set the Fig 13 overhead budget.
 
 #[path = "common/mod.rs"]
 mod common;
@@ -12,8 +13,8 @@ use uvmio::predictor::chain::PageSetChain;
 use uvmio::predictor::features::{
     pack_batch, samples_from_trace, FeatDims, WindowBuilder,
 };
-use uvmio::predictor::FreqTable;
-use uvmio::runtime::{Manifest, Runtime, TrainState};
+use uvmio::predictor::{native_dims, FreqTable, NativeModel};
+use uvmio::runtime::{Manifest, ModelBackend, Runtime, TrainState};
 use uvmio::trace::workloads::Workload;
 use uvmio::util::rng::Rng;
 
@@ -80,6 +81,27 @@ fn main() {
     b.bench("features/pack_batch64", 64, || {
         std::hint::black_box(pack_batch(&samples[..64], 64, 10));
     });
+
+    // native predictor latencies (artifact-free; this is the inference
+    // cost the intelligent-native strategy pays per batched call)
+    {
+        let ndims = native_dims();
+        let model = NativeModel::for_model("predictor").expect("native model");
+        let (nsamples, _) = samples_from_trace(&trace, ndims);
+        let params = model.init_params(0).unwrap();
+        let nb = model.batch();
+        let batch = pack_batch(&nsamples[..nb], nb, ndims.seq_len);
+        b.bench("native/forward/batch32", nb as u64, || {
+            std::hint::black_box(model.forward(&params, &batch).unwrap());
+        });
+        let mut state = TrainState::fresh(params);
+        let mask = vec![0.0f32; model.classes()];
+        b.bench("native/train_step/batch32", nb as u64, || {
+            std::hint::black_box(
+                model.train_step(&mut state, &batch, &mask, 0.5, 0.2).unwrap(),
+            );
+        });
+    }
 
     // PJRT latencies (skipped when artifacts are absent)
     let dir = Manifest::default_dir();

@@ -34,8 +34,10 @@ use crate::policy::tree_evict::TreeEvict;
 use crate::policy::tree_prefetch::TreePrefetcher;
 use crate::policy::uvmsmart::UvmSmart;
 use crate::policy::{DecisionPolicy, DemandOnly, PolicyInstrumentation};
-use crate::predictor::{FeatDims, IntelligentConfig, IntelligentPolicy};
-use crate::runtime::{ModelRuntime, Runtime};
+use crate::predictor::{
+    native_dims, FeatDims, IntelligentConfig, IntelligentPolicy, NativeModel,
+};
+use crate::runtime::{ModelBackend, Runtime};
 use crate::sim::{Arena, CostModelKind, Observer, RunOutcome, Session};
 
 /// Paper tables a strategy appears in (metadata only; experiments may
@@ -69,9 +71,9 @@ pub type StrategyFactory = Arc<
 /// strategies on the serialized lane.
 #[derive(Clone, Default)]
 pub struct StrategyCtx {
-    /// compiled predictor (None for rule-based cells)
-    pub model: Option<Arc<ModelRuntime>>,
-    /// feature dimensions from the artifact manifest
+    /// predictor backend handle (None for rule-based cells)
+    pub model: Option<Arc<dyn ModelBackend>>,
+    /// feature dimensions (artifact manifest or native defaults)
     pub dims: Option<FeatDims>,
     /// tunables for the intelligent policy (ablation switches included)
     pub icfg: IntelligentConfig,
@@ -81,7 +83,7 @@ impl StrategyCtx {
     /// Ctx for artifact-backed strategies: compiles (or reuses) the
     /// `predictor` model and reads dims off the manifest.
     pub fn from_runtime(runtime: &Runtime) -> Result<StrategyCtx> {
-        let model = Arc::new(runtime.model("predictor")?);
+        let model: Arc<dyn ModelBackend> = Arc::new(runtime.model("predictor")?);
         Ok(StrategyCtx {
             dims: Some(feat_dims(runtime)),
             model: Some(model),
@@ -89,8 +91,8 @@ impl StrategyCtx {
         })
     }
 
-    /// Ctx from an already-compiled model handle.
-    pub fn with_model(model: Arc<ModelRuntime>, dims: FeatDims) -> StrategyCtx {
+    /// Ctx from an already-constructed backend handle.
+    pub fn with_model(model: Arc<dyn ModelBackend>, dims: FeatDims) -> StrategyCtx {
         StrategyCtx {
             model: Some(model),
             dims: Some(dims),
@@ -233,7 +235,8 @@ impl StrategyRegistry {
     /// The paper's strategies, pre-registered under their CLI names:
     /// `baseline`, `demand-hpe`, `tree-hpe`, `tree-evict` (the proactive
     /// pre-eviction configuration), `demand-belady`, `demand-lru`,
-    /// `demand-random`, `uvmsmart`, `intelligent`.
+    /// `demand-random`, `uvmsmart`, `intelligent`, and
+    /// `intelligent-native` (the artifact-free backend; parallel lane).
     pub fn builtin() -> StrategyRegistry {
         use PaperTable::*;
         let mut r = StrategyRegistry::empty();
@@ -270,6 +273,12 @@ impl StrategyRegistry {
         reg(StrategySpec::new("intelligent", "Our solution", intelligent_factory)
             .requiring_artifacts()
             .in_tables(&[TableVI]));
+        reg(StrategySpec::new(
+            "intelligent-native",
+            "Ours (native)",
+            intelligent_native_factory,
+        )
+        .in_tables(&[TableVI]));
         r
     }
 
@@ -465,4 +474,22 @@ fn intelligent_factory(
         anyhow!("strategy 'intelligent' needs feature dims in the ctx")
     })?;
     Ok(Box::new(IntelligentPolicy::new(model, dims, ctx.icfg.clone())))
+}
+
+/// The same policy engine on the artifact-free native backend. The
+/// factory constructs its own model (seeded by the engine's model table,
+/// so results are deterministic), which is why `needs_artifacts` stays
+/// false and the strategy runs on the parallel sweep lane — the native
+/// model is `Send + Sync`, unlike the PJRT client.
+fn intelligent_native_factory(
+    _spec: &RunSpec<'_>,
+    ctx: &StrategyCtx,
+) -> Result<Box<dyn DecisionPolicy>> {
+    let model: Arc<dyn ModelBackend> =
+        Arc::new(NativeModel::for_model("predictor")?);
+    Ok(Box::new(IntelligentPolicy::new(
+        model,
+        native_dims(),
+        ctx.icfg.clone(),
+    )))
 }

@@ -43,7 +43,7 @@ use crate::predictor::features::{
     pack_batch, FeatDims, Sample,
 };
 use crate::predictor::model_table::ModelTable;
-use crate::runtime::ModelRuntime;
+use crate::runtime::ModelBackend;
 use crate::sim::{Arena, CostModelKind, Observer, RunOutcome, Session};
 use crate::trace::multi::{interleave, tenant_of};
 use crate::trace::{Access, Trace};
@@ -564,7 +564,7 @@ pub struct MultiReport {
 /// Run the online (or ours, per `opts`) methodology on two interleaved
 /// workloads and report per-tenant top-1 accuracy.
 pub fn multi_accuracy(
-    rt: &Arc<ModelRuntime>,
+    rt: &Arc<dyn ModelBackend>,
     dims: &FeatDims,
     a: &Trace,
     b: &Trace,
@@ -615,34 +615,34 @@ pub fn multi_accuracy(
         let pattern = classify_blocks(&blocks, &seen);
         seen.extend(blocks);
 
-        let state = table.state_mut(pattern, rt)?;
+        let state = table.state_mut(pattern, rt.as_ref())?;
         if opts.lambda > 0.0 {
             state.snapshot_prev();
         }
         let mask = vec![0.0f32; dims.delta_vocab];
         let mut shuffled: Vec<Sample> = train_group.to_vec();
         rng.shuffle(&mut shuffled);
-        for chunk in shuffled.chunks(rt.batch).take(opts.steps_per_group) {
-            if chunk.len() < rt.batch {
+        for chunk in shuffled.chunks(rt.batch()).take(opts.steps_per_group) {
+            if chunk.len() < rt.batch() {
                 break;
             }
-            let batch = pack_batch(chunk, rt.batch, dims.seq_len);
+            let batch = pack_batch(chunk, rt.batch(), dims.seq_len);
             rt.train_step(state, &batch, &mask, opts.lambda, opts.mu)?;
             train_steps += 1;
         }
 
         // evaluate next group, attributing per tenant
         let params = state.params.clone();
-        let cap_batches = opts.eval_cap.div_ceil(rt.batch);
-        for (bi, chunk) in eval_group.chunks(rt.batch).enumerate() {
-            if bi >= cap_batches || chunk.len() < rt.batch {
+        let cap_batches = opts.eval_cap.div_ceil(rt.batch());
+        for (bi, chunk) in eval_group.chunks(rt.batch()).enumerate() {
+            if bi >= cap_batches || chunk.len() < rt.batch() {
                 break;
             }
-            let batch = pack_batch(chunk, rt.batch, dims.seq_len);
+            let batch = pack_batch(chunk, rt.batch(), dims.seq_len);
             let logits = rt.forward(&params, &batch)?;
             let top1 = rt.top1(&logits);
             for (i, (pred, s)) in top1.iter().zip(chunk).enumerate() {
-                let tenant = eval_tenants[bi * rt.batch + i];
+                let tenant = eval_tenants[bi * rt.batch() + i];
                 if *pred == s.label as usize {
                     correct[tenant] += 1;
                 }

@@ -22,7 +22,7 @@ use crate::config::PAGES_PER_BB;
 use crate::policy::dfa::{classify_blocks, Pattern};
 use crate::predictor::features::{pack_batch, FeatDims, Sample};
 use crate::predictor::model_table::ModelTable;
-use crate::runtime::ModelRuntime;
+use crate::runtime::ModelBackend;
 use crate::util::rng::Rng;
 
 /// Knobs shared by all methodologies.
@@ -87,7 +87,7 @@ fn group_pattern(samples: &[Sample], seen: &mut HashSet<u64>) -> Pattern {
 }
 
 fn eval_top1(
-    rt: &ModelRuntime,
+    rt: &dyn ModelBackend,
     params: &[f32],
     samples: &[Sample],
     dims: &FeatDims,
@@ -95,8 +95,8 @@ fn eval_top1(
 ) -> Result<(usize, usize)> {
     let mut correct = 0usize;
     let mut total = 0usize;
-    for chunk in samples.chunks(rt.batch).take(cap.div_ceil(rt.batch)) {
-        let batch = pack_batch(chunk, rt.batch, dims.seq_len);
+    for chunk in samples.chunks(rt.batch()).take(cap.div_ceil(rt.batch())) {
+        let batch = pack_batch(chunk, rt.batch(), dims.seq_len);
         let logits = rt.forward(params, &batch)?;
         for (pred, s) in rt.top1(&logits).iter().zip(chunk) {
             if *pred == s.label as usize {
@@ -112,7 +112,7 @@ fn eval_top1(
 /// `TrainOpts::ours()` turns them all on). `thrash_pages`, when given,
 /// provides the E∪T page set for the µ term.
 pub fn online_accuracy(
-    rt: &Arc<ModelRuntime>,
+    rt: &Arc<dyn ModelBackend>,
     dims: &FeatDims,
     samples: &[Sample],
     opts: &TrainOpts,
@@ -151,17 +151,17 @@ pub fn online_accuracy(
         }
 
         // train on group i
-        let state = table.state_mut(pattern, rt)?;
+        let state = table.state_mut(pattern, rt.as_ref())?;
         if opts.lambda > 0.0 {
             state.snapshot_prev();
         }
         let mut shuffled: Vec<Sample> = train_group.to_vec();
         rng.shuffle(&mut shuffled);
-        for chunk in shuffled.chunks(rt.batch).take(opts.steps_per_group) {
-            if chunk.len() < rt.batch {
+        for chunk in shuffled.chunks(rt.batch()).take(opts.steps_per_group) {
+            if chunk.len() < rt.batch() {
                 break;
             }
-            let batch = pack_batch(chunk, rt.batch, dims.seq_len);
+            let batch = pack_batch(chunk, rt.batch(), dims.seq_len);
             rt.train_step(state, &batch, &mask, opts.lambda, opts.mu)?;
             train_steps += 1;
         }
@@ -179,10 +179,10 @@ pub fn online_accuracy(
             pattern
         };
         let params = table
-            .state_mut(eval_pattern, rt)?
+            .state_mut(eval_pattern, rt.as_ref())?
             .params
             .clone();
-        let (c, t) = eval_top1(rt, &params, eval_group, dims, opts.eval_cap)?;
+        let (c, t) = eval_top1(rt.as_ref(), &params, eval_group, dims, opts.eval_cap)?;
         correct += c;
         total += t;
     }
@@ -204,7 +204,7 @@ pub fn online_accuracy(
 /// samples, then predict everything in temporal order — the paper's
 /// accuracy upper bound.
 pub fn offline_accuracy(
-    rt: &Arc<ModelRuntime>,
+    rt: &Arc<dyn ModelBackend>,
     dims: &FeatDims,
     samples: &[Sample],
     opts: &TrainOpts,
@@ -228,11 +228,11 @@ pub fn offline_accuracy(
         train_idx.iter().map(|&i| samples[i].clone()).collect();
     'outer: for _epoch in 0..8 {
         rng.shuffle(&mut train);
-        for chunk in train.chunks(rt.batch) {
-            if chunk.len() < rt.batch {
+        for chunk in train.chunks(rt.batch()) {
+            if chunk.len() < rt.batch() {
                 break;
             }
-            let batch = pack_batch(chunk, rt.batch, dims.seq_len);
+            let batch = pack_batch(chunk, rt.batch(), dims.seq_len);
             rt.train_step(&mut state, &batch, &mask, 0.0, 0.0)?;
             train_steps += 1;
             if train_steps >= budget {
@@ -245,7 +245,7 @@ pub fn offline_accuracy(
     let stride = (samples.len() / (opts.eval_cap * 8).max(1)).max(1);
     let strided: Vec<Sample> =
         samples.iter().step_by(stride).cloned().collect();
-    let (c, t) = eval_top1(rt, &state.params, &strided, dims, opts.eval_cap * 8)?;
+    let (c, t) = eval_top1(rt.as_ref(), &state.params, &strided, dims, opts.eval_cap * 8)?;
 
     Ok(AccuracyReport {
         method: "offline".into(),

@@ -8,7 +8,7 @@ use std::collections::HashSet;
 use anyhow::Result;
 
 use crate::coordinator::{
-    multi_accuracy, offline_accuracy, online_accuracy, RunSpec, TrainOpts,
+    multi_accuracy, offline_accuracy, online_accuracy, TrainOpts,
 };
 use crate::predictor::features::samples_from_trace;
 use crate::predictor::{FeatDims, IntelligentConfig};
@@ -18,8 +18,7 @@ use crate::util::csv::{fnum, Table};
 use super::ExpContext;
 
 fn dims_of(ctx: &mut ExpContext) -> Result<FeatDims> {
-    let (runtime, _) = ctx.predictor()?;
-    Ok(crate::coordinator::feat_dims(runtime))
+    ctx.dims()
 }
 
 fn workload_set(ctx: &ExpContext) -> Vec<Workload> {
@@ -38,7 +37,7 @@ fn workload_set(ctx: &ExpContext) -> Vec<Workload> {
 /// Fig 4: top-1 page-delta accuracy, online vs offline training.
 pub fn fig4(ctx: &mut ExpContext) -> Result<()> {
     let dims = dims_of(ctx)?;
-    let (_, model) = ctx.predictor()?;
+    let model = ctx.predictor()?;
     let mut t = Table::new(
         "Fig 4 — top-1 delta accuracy: online vs offline (single workload)",
         &["Benchmark", "Online", "Offline", "Loss"],
@@ -74,7 +73,7 @@ pub fn fig4(ctx: &mut ExpContext) -> Result<()> {
 /// multiple (pattern-aware) models, online with a single model.
 pub fn fig6(ctx: &mut ExpContext) -> Result<()> {
     let dims = dims_of(ctx)?;
-    let (_, model) = ctx.predictor()?;
+    let model = ctx.predictor()?;
     let trace = ctx.trace(Workload::Hotspot)?;
     let (samples, _) = samples_from_trace(&trace, dims);
 
@@ -162,7 +161,7 @@ pub fn fig10(ctx: &mut ExpContext) -> Result<()> {
 /// offline (profiling) upper bound.
 pub fn fig11(ctx: &mut ExpContext) -> Result<()> {
     let dims = dims_of(ctx)?;
-    let (_, model) = ctx.predictor()?;
+    let model = ctx.predictor()?;
     let mut t = Table::new(
         "Fig 11 — top-1 accuracy normalized to offline training",
         &["Benchmark", "Online", "Ours", "Offline(abs)"],
@@ -200,7 +199,7 @@ pub fn fig11(ctx: &mut ExpContext) -> Result<()> {
 /// cost on the four worst-thrashing benchmarks.
 pub fn fig12(ctx: &mut ExpContext) -> Result<()> {
     let dims = dims_of(ctx)?;
-    let (_, model) = ctx.predictor()?;
+    let model = ctx.predictor()?;
     let focus = [Workload::Atax, Workload::Bicg, Workload::Nw, Workload::SradV2];
     let mut t = Table::new(
         "Fig 12 — loss function with/without the thrashing term @125%",
@@ -208,7 +207,7 @@ pub fn fig12(ctx: &mut ExpContext) -> Result<()> {
     );
     for w in focus {
         let trace = ctx.trace(w)?;
-        let spec = RunSpec::new(&trace, 125);
+        let spec = ctx.run_spec(&trace, 125);
         let run_mu = |ctx: &mut ExpContext, mu: f32| -> Result<u64> {
             let sctx = ctx
                 .strategy_ctx()?
@@ -261,7 +260,7 @@ pub fn fig12(ctx: &mut ExpContext) -> Result<()> {
 /// category pairs, online vs ours.
 pub fn table7(ctx: &mut ExpContext) -> Result<()> {
     let dims = dims_of(ctx)?;
-    let (_, model) = ctx.predictor()?;
+    let model = ctx.predictor()?;
     let rows = [
         Workload::StreamTriad,
         Workload::Hotspot,

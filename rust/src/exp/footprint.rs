@@ -1,9 +1,10 @@
 //! Table IV: memory footprint of the pattern-aware prediction scheme.
 //!
 //! `Total = (Params×2 + Acti) × Patterns` (Equation 4) at 5-bit
-//! quantisation. Params/activations come from the manifest (computed
-//! analytically by the python side); the per-benchmark `Patterns` column
-//! is the number of DFA classes the benchmark's transfer stream actually
+//! quantisation. Params/activations come from the selected predictor
+//! backend — analytic for the native predictor, manifest-read for the
+//! artifact-backed ones; the per-benchmark `Patterns` column is the
+//! number of DFA classes the benchmark's transfer stream actually
 //! exhibits, measured on the generated trace.
 
 use std::collections::HashSet;
@@ -38,9 +39,7 @@ pub fn patterns_in_trace(trace: &crate::trace::Trace) -> usize {
 }
 
 pub fn table4(ctx: &mut ExpContext) -> Result<()> {
-    let (runtime, _) = ctx.predictor()?;
-    let entry = runtime.manifest.model("predictor")?;
-    let (params_mb, act_mb) = (entry.params_mb, entry.activations_mb);
+    let (params_mb, act_mb) = ctx.predictor_footprint_mb()?;
 
     let mut t = Table::new(
         "Table IV — memory footprint of the pattern-aware scheme (5-bit quantised)",

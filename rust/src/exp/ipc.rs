@@ -5,7 +5,6 @@
 use anyhow::Result;
 
 use crate::config::us_to_cycles;
-use crate::coordinator::RunSpec;
 use crate::trace::workloads::Workload;
 use crate::util::csv::{fnum, Table};
 
@@ -22,7 +21,7 @@ pub fn fig3(ctx: &mut ExpContext) -> Result<()> {
     for w in Workload::ALL {
         let trace = ctx.trace(w)?;
         let mut ipc_at = |pct: u32| -> Result<f64> {
-            let spec = RunSpec::new(&trace, pct);
+            let spec = ctx.run_spec(&trace, pct);
             Ok(ctx.run_cell(&spec, "baseline")?.outcome.stats.ipc())
         };
         let (i100, i110, i125, i150) =
@@ -69,7 +68,7 @@ pub fn fig13(ctx: &mut ExpContext) -> Result<()> {
     let mut sums = [0.0f64; 5];
     for w in &workloads {
         let trace = ctx.trace(*w)?;
-        let spec = RunSpec::new(&trace, 125);
+        let spec = ctx.run_spec(&trace, 125);
         let smart = ctx.run_cell(&spec, "uvmsmart")?;
         let ours = ctx.run_cell(&spec, "intelligent")?;
         // strip the default overhead back out, then sweep
@@ -117,7 +116,7 @@ pub fn fig14(ctx: &mut ExpContext) -> Result<()> {
         for (oi, pct) in [125u32, 150].into_iter().enumerate() {
             // crash emulation at 150%: runaway thrash kills the run
             let crash_at = 3 * trace.working_set_pages;
-            let mut spec = RunSpec::new(&trace, pct);
+            let mut spec = ctx.run_spec(&trace, pct);
             if pct >= 150 {
                 spec = spec.with_crash_threshold(crash_at);
             }

@@ -5,8 +5,13 @@
 //!
 //! Grid cells run through [`crate::api::StrategyRegistry`] by name —
 //! [`ExpContext::run_cell`] is the one-liner the experiment modules use;
-//! it builds the artifact-backed [`StrategyCtx`] lazily only for
+//! it builds the predictor-carrying [`StrategyCtx`] lazily only for
 //! strategies that need one.
+//!
+//! By default experiments run against the artifact-free **native**
+//! predictor backend ([`crate::predictor::native`]), so the whole suite —
+//! including the §V accuracy tables — works from a clean checkout.
+//! `--predictor stub|pjrt` selects the manifest-backed backends instead.
 
 use std::path::PathBuf;
 use std::sync::Arc;
@@ -17,7 +22,9 @@ use crate::api::{CellResult, StrategyCtx, StrategyRegistry};
 use crate::config::Scale;
 use crate::coordinator::RunSpec;
 use crate::corpus::{CorpusStore, TraceCache};
-use crate::runtime::{ModelRuntime, Runtime};
+use crate::predictor::{native_dims, FeatDims, NativeModel};
+use crate::runtime::{ModelBackend, PredictorKind, Runtime};
+use crate::sim::CostModelKind;
 use crate::trace::workloads::Workload;
 use crate::trace::Trace;
 
@@ -31,8 +38,13 @@ pub struct ExpOpts {
     /// generated for one `repro exp` invocation are persisted as
     /// `.uvmt` and reloaded by later processes (`--corpus DIR`)
     pub corpus_dir: Option<PathBuf>,
-    /// trim PJRT-heavy experiments (fewer workloads / groups)
+    /// trim model-heavy experiments (fewer workloads / groups)
     pub quick: bool,
+    /// interconnect timing model for every simulated cell
+    /// (`--cost-model table-v|coherent-link`)
+    pub cost_model: CostModelKind,
+    /// predictor backend (`--predictor native|stub|pjrt`)
+    pub predictor: PredictorKind,
 }
 
 impl Default for ExpOpts {
@@ -44,23 +56,25 @@ impl Default for ExpOpts {
             artifacts_dir: crate::runtime::Manifest::default_dir(),
             corpus_dir: None,
             quick: false,
+            cost_model: CostModelKind::default(),
+            predictor: PredictorKind::default(),
         }
     }
 }
 
 /// Lazily-initialised runtime context shared across experiments in one
 /// `exp all` invocation (compiling an executable trio costs seconds, so
-/// compiled models are cached by name), plus the open strategy registry
-/// every grid cell resolves against and the shared trace cache: every
-/// table/figure that touches a workload asks [`ExpContext::trace`], so
-/// one `Arc<Trace>` per (workload, scale, seed) serves the whole suite
+/// constructed models are cached by name), plus the open strategy
+/// registry every grid cell resolves against and the shared trace cache:
+/// every table/figure that touches a workload asks [`ExpContext::trace`],
+/// so one `Arc<Trace>` per (workload, scale, seed) serves the whole suite
 /// instead of each experiment regenerating its own copies.
 pub struct ExpContext {
     pub opts: ExpOpts,
     pub registry: StrategyRegistry,
     pub cache: TraceCache,
     runtime: Option<Runtime>,
-    models: std::collections::HashMap<String, Arc<ModelRuntime>>,
+    models: std::collections::HashMap<String, Arc<dyn ModelBackend>>,
 }
 
 impl ExpContext {
@@ -92,6 +106,13 @@ impl ExpContext {
         self.cache.get_builtin(w, self.opts.scale, seed)
     }
 
+    /// A [`RunSpec`] carrying the experiment-wide cost model — every
+    /// simulated cell must go through here (or [`ExpContext::run_cell`])
+    /// so `--cost-model` applies uniformly.
+    pub fn run_spec<'a>(&self, trace: &'a Trace, oversub: u32) -> RunSpec<'a> {
+        RunSpec::new(trace, oversub).with_cost_model(self.opts.cost_model)
+    }
+
     fn ensure_runtime(&mut self) -> Result<&Runtime> {
         if self.runtime.is_none() {
             self.runtime = Some(Runtime::new(&self.opts.artifacts_dir)?);
@@ -99,32 +120,76 @@ impl ExpContext {
         Ok(self.runtime.as_ref().unwrap())
     }
 
-    /// Compile (or fetch cached) executables for a model by name.
-    pub fn model(&mut self, name: &str) -> Result<Arc<ModelRuntime>> {
+    /// Feature dimensions of the selected backend: compiled-in for the
+    /// native predictor, manifest-read otherwise.
+    pub fn dims(&mut self) -> Result<FeatDims> {
+        match self.opts.predictor {
+            PredictorKind::Native => Ok(native_dims()),
+            _ => {
+                self.ensure_runtime()?;
+                Ok(crate::coordinator::feat_dims(
+                    self.runtime.as_ref().unwrap(),
+                ))
+            }
+        }
+    }
+
+    /// Construct (or fetch cached) the named model on the selected
+    /// backend. Native needs no artifacts; stub/pjrt load the manifest.
+    pub fn model(&mut self, name: &str) -> Result<Arc<dyn ModelBackend>> {
         if !self.models.contains_key(name) {
-            self.ensure_runtime()?;
-            let model = Arc::new(self.runtime.as_ref().unwrap().model(name)?);
+            let model: Arc<dyn ModelBackend> = match self.opts.predictor {
+                PredictorKind::Native => Arc::new(NativeModel::for_model(name)?),
+                _ => {
+                    self.opts.predictor.ensure_available()?;
+                    self.ensure_runtime()?;
+                    Arc::new(self.runtime.as_ref().unwrap().model(name)?)
+                }
+            };
             self.models.insert(name.to_string(), model);
         }
         Ok(Arc::clone(&self.models[name]))
     }
 
-    /// The runtime + compiled predictor, loading on first use.
-    pub fn predictor(&mut self) -> Result<(&Runtime, Arc<ModelRuntime>)> {
-        let model = self.model("predictor")?;
-        Ok((self.runtime.as_ref().unwrap(), model))
+    /// The predictor model on the selected backend, loading on first use.
+    pub fn predictor(&mut self) -> Result<Arc<dyn ModelBackend>> {
+        self.model("predictor")
     }
 
-    /// Strategy ctx carrying the compiled predictor (artifact-backed
-    /// strategies); loads the runtime on first use.
+    /// Predictor memory footprint `(params_mb, activations_mb)` for
+    /// Table IV: analytic for the native backend, manifest-read for the
+    /// artifact-backed ones.
+    pub fn predictor_footprint_mb(&mut self) -> Result<(f64, f64)> {
+        match self.opts.predictor {
+            PredictorKind::Native => {
+                let m = NativeModel::for_model("predictor")?;
+                Ok((m.params_mb(), m.activations_mb()))
+            }
+            _ => {
+                self.ensure_runtime()?;
+                let entry = self
+                    .runtime
+                    .as_ref()
+                    .unwrap()
+                    .manifest
+                    .model("predictor")?;
+                Ok((entry.params_mb, entry.activations_mb))
+            }
+        }
+    }
+
+    /// Strategy ctx carrying the selected predictor backend (for
+    /// model-backed strategies).
     pub fn strategy_ctx(&mut self) -> Result<StrategyCtx> {
-        let (runtime, model) = self.predictor()?;
-        let dims = crate::coordinator::feat_dims(runtime);
+        let dims = self.dims()?;
+        let model = self.predictor()?;
         Ok(StrategyCtx::with_model(model, dims))
     }
 
-    /// Run one grid cell by registry name, wiring the artifact ctx only
-    /// when the strategy declares it needs one.
+    /// Run one grid cell by registry name, wiring the model-carrying ctx
+    /// only when the strategy declares it needs one. The experiment-wide
+    /// cost model is already on the [`RunSpec`] (see
+    /// [`ExpContext::run_spec`]).
     pub fn run_cell(
         &mut self,
         spec: &RunSpec<'_>,

@@ -1,10 +1,17 @@
 //! Thrashing tables: Table I (rule-based strategies), Table II (the
 //! HPE × prefetcher pathology) and Table VI (the full grid including
 //! our solution). All cells run through the strategy registry by name.
+//!
+//! The pre-eviction mechanism (background `pre_evict` directives) is
+//! surfaced directly in the paper-style output: Table I carries
+//! `PreEv`/`Avoided` columns for the `tree-evict` strategy and Table VI
+//! for our solution — `pre_evictions` counts pages moved out ahead of
+//! demand pressure, `evictions_avoided` the demand evictions that found
+//! their frame already free because of it.
 
 use anyhow::Result;
 
-use crate::coordinator::RunSpec;
+use crate::api::CellResult;
 use crate::trace::workloads::Workload;
 use crate::util::csv::Table;
 
@@ -12,17 +19,26 @@ use super::ExpContext;
 
 const OVERSUB: u32 = 125;
 
-fn thrash_of(ctx: &mut ExpContext, w: Workload, strategy: &str) -> Result<u64> {
+fn cell_of(
+    ctx: &mut ExpContext,
+    w: Workload,
+    strategy: &str,
+) -> Result<CellResult> {
     let trace = ctx.trace(w)?;
-    let spec = RunSpec::new(&trace, OVERSUB);
-    Ok(ctx.run_cell(&spec, strategy)?.outcome.stats.thrash_events)
+    let spec = ctx.run_spec(&trace, OVERSUB);
+    ctx.run_cell(&spec, strategy)
+}
+
+fn thrash_of(ctx: &mut ExpContext, w: Workload, strategy: &str) -> Result<u64> {
+    Ok(cell_of(ctx, w, strategy)?.outcome.stats.thrash_events)
 }
 
 /// Table I: pages thrashed @125% for the rule-based landscape — the
 /// paper's four columns plus the directive-API `tree-evict`
-/// configuration (tree prefetch + background pre-eviction), so the
-/// first strategy whose eviction traffic overlaps compute sits next to
-/// its reactive peers — and the oracle bound.
+/// configuration (tree prefetch + background pre-eviction, with its
+/// pre-eviction counters), so the first strategy whose eviction traffic
+/// overlaps compute sits next to its reactive peers — and the oracle
+/// bound.
 pub fn table1(ctx: &mut ExpContext) -> Result<()> {
     let mut t = Table::new(
         "Table I — pages thrashed @125% oversubscription (rule-based)",
@@ -32,16 +48,21 @@ pub fn table1(ctx: &mut ExpContext) -> Result<()> {
             "D.+HPE",
             "UVMSmart",
             "T.+PreEvict",
+            "PreEv",
+            "Avoided",
             "D.+Belady.",
         ],
     );
     for w in Workload::ALL {
+        let tree = cell_of(ctx, w, "tree-evict")?;
         t.row(vec![
             w.name().to_string(),
             thrash_of(ctx, w, "baseline")?.to_string(),
             thrash_of(ctx, w, "demand-hpe")?.to_string(),
             thrash_of(ctx, w, "uvmsmart")?.to_string(),
-            thrash_of(ctx, w, "tree-evict")?.to_string(),
+            tree.outcome.stats.thrash_events.to_string(),
+            tree.outcome.stats.pre_evictions.to_string(),
+            tree.outcome.stats.evictions_avoided.to_string(),
             thrash_of(ctx, w, "demand-belady")?.to_string(),
         ]);
     }
@@ -68,7 +89,8 @@ pub fn table2(ctx: &mut ExpContext) -> Result<()> {
     Ok(())
 }
 
-/// Table VI: the full strategy grid @125%, including our solution.
+/// Table VI: the full strategy grid @125%, including our solution (with
+/// its pre-eviction counters).
 pub fn table6(ctx: &mut ExpContext) -> Result<()> {
     let workloads: Vec<Workload> = if ctx.opts.quick {
         vec![Workload::Atax, Workload::Bicg, Workload::Nw, Workload::Hotspot]
@@ -83,6 +105,8 @@ pub fn table6(ctx: &mut ExpContext) -> Result<()> {
             "Tree.+HPE",
             "UVMSmart",
             "Our solution",
+            "PreEv",
+            "Avoided",
             "Demand.+HPE",
             "Demand.+Belady.",
         ],
@@ -91,20 +115,20 @@ pub fn table6(ctx: &mut ExpContext) -> Result<()> {
     let mut ours_sum = 0u64;
     let mut smart_sum = 0u64;
     for w in &workloads {
-        let trace = ctx.trace(*w)?;
-        let spec = RunSpec::new(&trace, OVERSUB);
-        let ours = ctx.run_cell(&spec, "intelligent")?.outcome.stats.thrash_events;
+        let ours = cell_of(ctx, *w, "intelligent")?;
         let base = thrash_of(ctx, *w, "baseline")?;
         let smart = thrash_of(ctx, *w, "uvmsmart")?;
         base_sum += base;
-        ours_sum += ours;
+        ours_sum += ours.outcome.stats.thrash_events;
         smart_sum += smart;
         t.row(vec![
             w.name().to_string(),
             base.to_string(),
             thrash_of(ctx, *w, "tree-hpe")?.to_string(),
             smart.to_string(),
-            ours.to_string(),
+            ours.outcome.stats.thrash_events.to_string(),
+            ours.outcome.stats.pre_evictions.to_string(),
+            ours.outcome.stats.evictions_avoided.to_string(),
             thrash_of(ctx, *w, "demand-hpe")?.to_string(),
             thrash_of(ctx, *w, "demand-belady")?.to_string(),
         ]);

@@ -34,7 +34,8 @@ use uvmio::coordinator::{
 use uvmio::corpus::{self, CorpusStore, TraceCache};
 use uvmio::exp::{self, ExpContext, ExpOpts};
 use uvmio::predictor::features::samples_from_trace;
-use uvmio::runtime::{Manifest, Runtime};
+use uvmio::predictor::{native_dims, NativeModel};
+use uvmio::runtime::{Manifest, ModelBackend, PredictorKind, Runtime};
 use uvmio::sim::{Arena, CostModelKind, Session};
 use uvmio::trace::workloads::Workload;
 use uvmio::trace::Trace;
@@ -45,22 +46,33 @@ repro — intelligent UVM oversubscription management (paper reproduction)
 
 USAGE:
   repro exp <id|all> [--quick] [--scale N] [--seed N] [--reports DIR]
-            [--corpus DIR]
+            [--corpus DIR] [--cost-model table-v|coherent-link]
+            [--predictor native|stub|pjrt]
       regenerate a paper table/figure (table1 table2 table3 table4 table6
       table7 fig3 fig4 fig5 fig6 fig10 fig11 fig12 fig13 fig14). With
       --corpus DIR the experiment trace cache is backed by the .uvmt
       store: traces generated once are persisted and reloaded by later
-      runs (shared with `repro sweep --corpus` and `repro corpus build`)
+      runs (shared with `repro sweep --corpus` and `repro corpus build`).
+      --cost-model prices every simulated cell (default table-v, the
+      paper's PCIe pricing). --predictor picks the model backend for
+      model-backed cells, including the §V accuracy tables: the default
+      `native` is the artifact-free pure-Rust predictor, so the whole
+      suite runs from a clean checkout; stub/pjrt use `make artifacts`
   repro simulate --workload W --strategy S [--oversub PCT] [--scale N] [--seed N]
-              [--cost-model table-v|coherent-link]
+              [--cost-model table-v|coherent-link] [--predictor B]
       one simulation cell; S is ANY registered strategy name
       (`repro info` lists them; builtin: baseline demand-hpe tree-hpe
       tree-evict demand-belady demand-lru demand-random uvmsmart
-      intelligent — tree-evict is the directive-API pre-eviction
-      configuration: its drain traffic runs on the background-transfer
-      queue and overlaps compute). --cost-model swaps the timing model
-      (default table-v, the paper's PCIe pricing; coherent-link prices
-      the same run like Grace-Hopper-class hardware)
+      intelligent intelligent-native — tree-evict is the directive-API
+      pre-eviction configuration: its drain traffic runs on the
+      background-transfer queue and overlaps compute;
+      intelligent-native is the full solution on the artifact-free
+      native predictor, so it needs no `make artifacts`). --cost-model
+      swaps the timing model (default table-v, the paper's PCIe
+      pricing; coherent-link prices the same run like
+      Grace-Hopper-class hardware). --predictor picks the model backend
+      (native|stub|pjrt, default native) for artifact-backed strategies
+      like `intelligent`
   repro simulate --stream corpus:NAME [--strategy S] [--oversub PCT]
               [--corpus DIR] [--progress [N]] [--cost-model M]
       one-off streamed run: decode the named .uvmt corpus entry access
@@ -72,7 +84,7 @@ USAGE:
               [--oversub P1,P2,..] [--seeds N1,N2,..] [--threads N]
               [--scale N] [--reports DIR] [--artifacts DIR] [--corpus DIR]
               [--crash-at L=T,..] [--progress [N]] [--schedule POLICY]
-              [--cost-model table-v|coherent-link]
+              [--cost-model table-v|coherent-link] [--predictor B]
       run the (workload × strategy × oversubscription × seed) grid in
       parallel across threads (artifact-backed strategies run on a
       serialized lane); streams a console table and writes
@@ -97,7 +109,9 @@ USAGE:
       --progress streams a mid-run snapshot line (stderr) per cell every
       N faults (default 100000), including link occupancy (total +
       background pre-eviction cycles) — live observability for long
-      sweeps.
+      sweeps. --predictor picks the backend for artifact-backed
+      strategies; `intelligent-native` ignores it (always native) and
+      runs on the parallel lane like the rule-based strategies.
   repro corpus build [--workloads all|W1,..] [--scale N] [--seeds N1,..]
               [--corpus DIR]
       generate builtin traces into the corpus (.uvmt, content-addressed)
@@ -115,7 +129,9 @@ USAGE:
   repro corpus gc [--corpus DIR]
       remove corrupt entries and orphaned temp files
   repro accuracy --workload W [--method online|offline|ours] [--seed N]
-      predictor accuracy on one workload
+              [--predictor native|stub|pjrt]
+      predictor accuracy on one workload (default backend: the
+      artifact-free native predictor)
   repro info
       registered strategies + artifact manifest + workload inventory
 ";
@@ -162,12 +178,17 @@ fn opts_from(args: &Args) -> anyhow::Result<ExpOpts> {
     if let Some(dir) = args.get("corpus") {
         opts.corpus_dir = Some(dir.into());
     }
+    opts.cost_model = parse_cost_model(args)?;
+    opts.predictor = parse_predictor(args)?;
     Ok(opts)
 }
 
 fn cmd_exp(args: &Args) -> anyhow::Result<()> {
-    args.reject_unknown(&["quick", "scale", "seed", "reports", "artifacts", "corpus"])
-        .map_err(anyhow::Error::msg)?;
+    args.reject_unknown(&[
+        "quick", "scale", "seed", "reports", "artifacts", "corpus",
+        "cost-model", "predictor",
+    ])
+    .map_err(anyhow::Error::msg)?;
     let id = args
         .positional
         .first()
@@ -253,6 +274,45 @@ fn parse_cost_model(args: &Args) -> anyhow::Result<CostModelKind> {
     }
 }
 
+/// `--predictor native|stub|pjrt` (default: the artifact-free native
+/// backend, so model-backed strategies run from a clean checkout).
+fn parse_predictor(args: &Args) -> anyhow::Result<PredictorKind> {
+    match args.get("predictor") {
+        None => Ok(PredictorKind::default()),
+        Some(s) => PredictorKind::from_name(s).ok_or_else(|| {
+            anyhow::anyhow!(
+                "--predictor: unknown backend {s:?}; known: {}",
+                PredictorKind::ALL
+                    .iter()
+                    .map(|k| k.name())
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            )
+        }),
+    }
+}
+
+/// [`StrategyCtx`] for artifact-backed strategies under the selected
+/// predictor backend: native self-constructs (no artifacts on disk);
+/// stub/pjrt load the manifest runtime from `artifacts_dir`.
+fn strategy_ctx_for(
+    predictor: PredictorKind,
+    artifacts_dir: &std::path::Path,
+) -> anyhow::Result<StrategyCtx> {
+    match predictor {
+        PredictorKind::Native => {
+            let model: Arc<dyn ModelBackend> =
+                Arc::new(NativeModel::for_model("predictor")?);
+            Ok(StrategyCtx::with_model(model, native_dims()))
+        }
+        other => {
+            other.ensure_available()?;
+            let runtime = Runtime::new(artifacts_dir)?;
+            Ok(StrategyCtx::from_runtime(&runtime)?)
+        }
+    }
+}
+
 /// `--progress` alone uses the default cadence; `--progress N` overrides
 /// it (N = faults between snapshot lines); absent = disabled.
 fn parse_progress(args: &Args) -> anyhow::Result<u64> {
@@ -312,7 +372,7 @@ fn cmd_simulate_stream(args: &Args, stream: &str) -> anyhow::Result<()> {
         meta.kernels,
         Vec::new(),
     );
-    let cost_model = parse_cost_model(args)?;
+    let cost_model = opts.cost_model;
     let cfg = SimConfig::default().with_oversubscription(meta.touched_pages, oversub);
     let spec = RunSpec {
         trace: &placeholder,
@@ -322,8 +382,7 @@ fn cmd_simulate_stream(args: &Args, stream: &str) -> anyhow::Result<()> {
         cost_model,
     };
     let ctx = if entry.needs_artifacts {
-        let runtime = Runtime::new(&opts.artifacts_dir)?;
-        StrategyCtx::from_runtime(&runtime)?
+        strategy_ctx_for(opts.predictor, &opts.artifacts_dir)?
     } else {
         StrategyCtx::default()
     };
@@ -377,7 +436,7 @@ fn cmd_simulate_stream(args: &Args, stream: &str) -> anyhow::Result<()> {
 fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
     args.reject_unknown(&[
         "workload", "strategy", "oversub", "scale", "seed", "artifacts",
-        "stream", "corpus", "progress", "cost-model",
+        "stream", "corpus", "progress", "cost-model", "predictor",
     ])
     .map_err(anyhow::Error::msg)?;
     if let Some(stream) = args.get("stream") {
@@ -400,13 +459,12 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
     let display = spec_entry.display.clone();
     let needs_artifacts = spec_entry.needs_artifacts;
     let oversub = args.get_parse("oversub", 125u32).map_err(anyhow::Error::msg)?;
-    let cost_model = parse_cost_model(args)?;
+    let cost_model = opts.cost_model;
     let trace = w.generate(opts.scale, opts.seed);
     let spec = RunSpec::new(&trace, oversub).with_cost_model(cost_model);
 
     let ctx = if needs_artifacts {
-        let runtime = Runtime::new(&opts.artifacts_dir)?;
-        StrategyCtx::from_runtime(&runtime)?
+        strategy_ctx_for(opts.predictor, &opts.artifacts_dir)?
     } else {
         StrategyCtx::default()
     };
@@ -493,7 +551,7 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
     args.reject_unknown(&[
         "workloads", "strategies", "oversub", "seeds", "threads", "scale",
         "reports", "artifacts", "corpus", "crash-at", "progress", "schedule",
-        "cost-model",
+        "cost-model", "predictor",
     ])
     .map_err(anyhow::Error::msg)?;
     let registry = StrategyRegistry::builtin();
@@ -534,7 +592,9 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
     };
     let reports: PathBuf = args.get_or("reports", "reports").into();
 
-    // artifact ctx only when an artifact-backed strategy is in the grid
+    // model-carrying ctx only when an artifact-backed strategy is in the
+    // grid (intelligent-native self-constructs per cell and stays on the
+    // parallel lane, so it does NOT force one)
     let ctx = if strategies
         .iter()
         .any(|s| registry.get(s).map(|e| e.needs_artifacts).unwrap_or(false))
@@ -545,8 +605,7 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
         } else {
             artifacts.into()
         };
-        let runtime = Runtime::new(&dir)?;
-        StrategyCtx::from_runtime(&runtime)?
+        strategy_ctx_for(parse_predictor(args)?, &dir)?
     } else {
         StrategyCtx::default()
     };
@@ -823,14 +882,27 @@ fn cmd_corpus(args: &Args) -> anyhow::Result<()> {
 }
 
 fn cmd_accuracy(args: &Args) -> anyhow::Result<()> {
-    args.reject_unknown(&["workload", "method", "scale", "seed", "artifacts"])
-        .map_err(anyhow::Error::msg)?;
+    args.reject_unknown(&[
+        "workload", "method", "scale", "seed", "artifacts", "predictor",
+    ])
+    .map_err(anyhow::Error::msg)?;
     let opts = opts_from(args)?;
     let w = parse_workload(args)?;
     let method = args.get_or("method", "online").to_string();
-    let runtime = Runtime::new(&opts.artifacts_dir)?;
-    let model = Arc::new(runtime.model("predictor")?);
-    let dims = uvmio::coordinator::feat_dims(&runtime);
+    let (model, dims) = match opts.predictor {
+        PredictorKind::Native => {
+            let m: Arc<dyn ModelBackend> =
+                Arc::new(NativeModel::for_model("predictor")?);
+            (m, native_dims())
+        }
+        other => {
+            other.ensure_available()?;
+            let runtime = Runtime::new(&opts.artifacts_dir)?;
+            let m: Arc<dyn ModelBackend> =
+                Arc::new(runtime.model("predictor")?);
+            (m, uvmio::coordinator::feat_dims(&runtime))
+        }
+    };
     let trace = w.generate(opts.scale, opts.seed);
     let (samples, vocab) = samples_from_trace(&trace, dims);
     println!("workload: {} ({} samples, {} delta classes)",

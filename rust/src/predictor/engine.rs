@@ -3,8 +3,10 @@
 //! page predictor on the UVM request path.
 //!
 //! Per access: featurise → buffer the window. Every full batch of
-//! windows: one PJRT inference → top-k delta predictions → predicted
-//! pages → (a) prediction frequency table update, (b) prefetch queue.
+//! windows: one backend inference (PJRT, stub, or native — the engine is
+//! generic over [`crate::runtime::ModelBackend`]) → top-k delta
+//! predictions → predicted pages → (a) prediction frequency table
+//! update, (b) prefetch queue.
 //! Eviction: page-set chain partitions ordered by prediction frequency.
 //! Online fine-tuning: every `train_group` samples, snapshot the LUCIR
 //! "previous model", build the thrash mask from E∪T, and run a few Adam
@@ -27,7 +29,7 @@ use crate::policy::dfa::DfaClassifier;
 use crate::policy::{
     DecisionPolicy, Decisions, MemEvent, MemView, PolicyInstrumentation,
 };
-use crate::runtime::ModelRuntime;
+use crate::runtime::ModelBackend;
 use crate::sim::{FaultAction, Page};
 use crate::trace::Access;
 use crate::util::rng::Rng;
@@ -86,7 +88,7 @@ impl Default for IntelligentConfig {
 const PRE_EVICT_BURST: usize = 8;
 
 pub struct IntelligentPolicy {
-    rt: Arc<ModelRuntime>,
+    rt: Arc<dyn ModelBackend>,
     cfg: IntelligentConfig,
     dims: FeatDims,
     wb: WindowBuilder,
@@ -116,7 +118,7 @@ pub struct IntelligentPolicy {
 
 impl IntelligentPolicy {
     pub fn new(
-        rt: Arc<ModelRuntime>,
+        rt: Arc<dyn ModelBackend>,
         dims: FeatDims,
         cfg: IntelligentConfig,
     ) -> IntelligentPolicy {
@@ -151,7 +153,7 @@ impl IntelligentPolicy {
 
     /// Run one batched inference over the buffered windows.
     fn run_inference(&mut self) {
-        let batch_size = self.rt.batch;
+        let batch_size = self.rt.batch();
         if self.infer_buf.len() < batch_size {
             return;
         }
@@ -166,7 +168,7 @@ impl IntelligentPolicy {
             .collect();
         let batch = pack_batch(&samples, batch_size, self.dims.seq_len);
         let pattern = self.dfa.classify_current();
-        let Ok(state) = self.table.state_mut(pattern, &self.rt) else {
+        let Ok(state) = self.table.state_mut(pattern, self.rt.as_ref()) else {
             return;
         };
         let Ok(logits) = self.rt.forward(&state.params, &batch) else {
@@ -250,8 +252,8 @@ impl IntelligentPolicy {
 
         let mut group = std::mem::take(&mut self.samples);
         self.rng.shuffle(&mut group);
-        let batch_size = self.rt.batch;
-        let Ok(state) = self.table.state_mut(pattern, &self.rt) else {
+        let batch_size = self.rt.batch();
+        let Ok(state) = self.table.state_mut(pattern, self.rt.as_ref()) else {
             return;
         };
         // LUCIR: freeze the pre-round weights as the previous model
@@ -294,7 +296,7 @@ impl IntelligentPolicy {
                 self.run_training();
             }
         }
-        if self.infer_buf.len() >= self.rt.batch {
+        if self.infer_buf.len() >= self.rt.batch() {
             self.run_inference();
         }
     }

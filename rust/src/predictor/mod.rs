@@ -1,15 +1,18 @@
 //! The learning stack: feature pipeline, incremental delta vocabulary,
 //! prediction frequency table, page-set chain, pattern-based model table,
-//! and the intelligent policy engine that binds them to the simulator.
+//! the artifact-free native model backend, and the intelligent policy
+//! engine that binds them to the simulator.
 
 pub mod chain;
 pub mod engine;
 pub mod features;
 pub mod freq_table;
 pub mod model_table;
+pub mod native;
 
 pub use chain::PageSetChain;
 pub use engine::{IntelligentConfig, IntelligentPolicy};
 pub use features::{DeltaVocab, FeatDims, Sample, WindowBuilder};
 pub use freq_table::FreqTable;
 pub use model_table::ModelTable;
+pub use native::{native_dims, NativeArch, NativeModel};

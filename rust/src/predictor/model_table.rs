@@ -2,7 +2,7 @@
 //! from DFA access-pattern class to that pattern's model weights. All
 //! entries share one architecture (one compiled executable); only the
 //! flat parameter vectors differ, so a "model switch" is just a different
-//! `TrainState` handed to the same `ModelRuntime` — exactly the
+//! `TrainState` handed to the same backend — exactly the
 //! weights-table-indexed-by-pattern-hash organisation the paper describes.
 
 use std::collections::HashMap;
@@ -10,7 +10,7 @@ use std::collections::HashMap;
 use anyhow::Result;
 
 use crate::policy::dfa::Pattern;
-use crate::runtime::{ModelRuntime, TrainState};
+use crate::runtime::{ModelBackend, TrainState};
 
 #[derive(Debug)]
 pub struct ModelTable {
@@ -42,7 +42,7 @@ impl ModelTable {
     pub fn state_mut(
         &mut self,
         pattern: Pattern,
-        rt: &ModelRuntime,
+        rt: &dyn ModelBackend,
     ) -> Result<&mut TrainState> {
         let slot = self.slot(pattern);
         if !self.states.contains_key(&slot) {

@@ -1,0 +1,941 @@
+//! `predictor::native` — artifact-free, online-trained page predictor.
+//!
+//! A pure-Rust, dependency-free, seeded-deterministic, `Send + Sync`
+//! backend implementing [`crate::runtime::ModelBackend`], so the paper's
+//! §V accuracy experiments and the `intelligent-native` strategy run from
+//! a clean checkout: no AOT artifacts, no PJRT, and no serialized sweep
+//! lane (the PJRT client is `!Send`; this model is plain data).
+//!
+//! # Model
+//!
+//! Two cooperating parts share one flat `f32` parameter vector (so the
+//! existing per-pattern [`crate::predictor::ModelTable`] checkpoints both
+//! together):
+//!
+//! * **n-gram / frequency delta table** (fast path): the last
+//!   [`NG_ORDER`] delta classes of the window are FNV-hashed into one of
+//!   [`NG_BUCKETS`] context buckets, each holding one online-updated
+//!   count per delta class. At inference the counts enter the logits as
+//!   an additive smoothed log-prior `ln((n_c + ½) / (N + ½C))`, so the
+//!   top-k candidate deltas of the matched context surface without any
+//!   matrix math. Counts are bumped by `train_step` (one increment per
+//!   labelled row) and are *skipped* by the gradient optimiser.
+//! * **micro self-attention head**: sum-of-embeddings + position encoding
+//!   per timestep (`d_model` = [`D`]), one single-head attention layer
+//!   (query from the last timestep, keys/values over the whole window),
+//!   and a linear class head. Forward and backward are hand-rolled f32;
+//!   the backward pass derives softmax-attention gradients exactly and
+//!   feeds Adam (lr [`LR`], β₁ 0.9, β₂ 0.999).
+//!
+//! # Loss (paper §IV-E)
+//!
+//! `train_step` minimises the thrash-aware objective the engine already
+//! orchestrates for the other backends:
+//!
+//! ```text
+//! L = CE(p, y) + µ · Σ_c mask_c p_c + λ · KL(p_prev ‖ p)
+//! ```
+//!
+//! where `mask` marks delta classes leading into E∪T (pages under
+//! eviction/thrashing), and `p_prev` comes from a real forward pass over
+//! `TrainState::prev_params` — the LUCIR-style distillation term the stub
+//! backend only pretends to apply. Per-logit gradient:
+//!
+//! ```text
+//! ∂L/∂z_c = (p_c − y_c) + µ·p_c·(mask_c − Σ_k mask_k p_k) + λ·(p_c − p_prev,c)
+//! ```
+//!
+//! # Shapes
+//!
+//! Compiled-in ([`native_dims`]): window T = 10, delta classes C = 64,
+//! addr/pc/tb vocabs 256/64/64, batch 32, `d_model` 16. Architecture
+//! variants ([`NativeArch`]) reuse the same parameter layout so the
+//! Fig 10 comparator sweep (`predictor`/`lstm`/`cnn`/`mlp` →
+//! hybrid/attention/n-gram/linear) runs against the native backend too.
+
+use anyhow::{bail, ensure, Result};
+
+use crate::predictor::features::FeatDims;
+use crate::runtime::{Batch, ModelBackend, TrainState};
+
+/// Embedding / attention width (`d_model`).
+pub const D: usize = 16;
+/// Feature-window length.
+pub const T: usize = 10;
+/// Delta classes (output vocabulary).
+pub const C: usize = 64;
+/// Address-feature vocabulary.
+const A: usize = 256;
+/// PC-feature vocabulary.
+const P: usize = 64;
+/// Thread-block-feature vocabulary.
+const TBV: usize = 64;
+/// Fixed batch size every packed [`Batch`] must use.
+pub const NATIVE_BATCH: usize = 32;
+/// Delta-history order of the n-gram context hash.
+pub const NG_ORDER: usize = 3;
+/// Context buckets in the n-gram table.
+pub const NG_BUCKETS: usize = 512;
+
+const OFF_E_DELTA: usize = 0;
+const OFF_E_ADDR: usize = OFF_E_DELTA + C * D;
+const OFF_E_PC: usize = OFF_E_ADDR + A * D;
+const OFF_E_TB: usize = OFF_E_PC + P * D;
+const OFF_POS: usize = OFF_E_TB + TBV * D;
+const OFF_WQ: usize = OFF_POS + T * D;
+const OFF_WK: usize = OFF_WQ + D * D;
+const OFF_WV: usize = OFF_WK + D * D;
+const OFF_WC: usize = OFF_WV + D * D;
+const OFF_BIAS: usize = OFF_WC + C * D;
+/// Gradient-trained prefix of the parameter vector.
+const TRAINABLE: usize = OFF_BIAS + C;
+const OFF_NGRAM: usize = TRAINABLE;
+/// Total flat parameter count (trainable weights + n-gram counters).
+pub const NATIVE_PARAMS: usize = OFF_NGRAM + NG_BUCKETS * C;
+
+/// Adam learning rate.
+const LR: f32 = 0.02;
+const BETA1: f32 = 0.9;
+const BETA2: f32 = 0.999;
+const EPS: f32 = 1e-8;
+
+/// Feature dimensions the native backend is compiled for.
+pub fn native_dims() -> FeatDims {
+    FeatDims {
+        seq_len: T,
+        delta_vocab: C,
+        addr_vocab: A,
+        pc_vocab: P,
+        tb_vocab: TBV,
+    }
+}
+
+/// Architecture variants sharing one parameter layout.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NativeArch {
+    /// Attention head + n-gram log-prior (the paper-analog; default).
+    Hybrid,
+    /// Attention head alone (Fig 10 "lstm" slot: sequence model).
+    Attention,
+    /// n-gram counts alone (Fig 10 "cnn" slot: local-context model).
+    NGram,
+    /// Mean-pooled embeddings + linear head (Fig 10 "mlp" slot).
+    Linear,
+    /// Order-0 global class-frequency table — the bare frequency-table
+    /// baseline the hybrid must beat.
+    Freq,
+}
+
+impl NativeArch {
+    fn name(self) -> &'static str {
+        match self {
+            NativeArch::Hybrid => "native-hybrid",
+            NativeArch::Attention => "native-attn",
+            NativeArch::NGram => "native-ngram",
+            NativeArch::Linear => "native-linear",
+            NativeArch::Freq => "native-freq",
+        }
+    }
+
+    /// Does this arch run the embedding/attention network?
+    fn neural(self) -> bool {
+        !matches!(self, NativeArch::NGram | NativeArch::Freq)
+    }
+
+    /// Does this arch keep (and use) the n-gram counters?
+    fn counting(self) -> bool {
+        !matches!(self, NativeArch::Attention | NativeArch::Linear)
+    }
+}
+
+/// The native predictor. Plain data — `Send + Sync`, `Clone` — all
+/// mutable state lives in the caller's [`TrainState`].
+#[derive(Debug, Clone)]
+pub struct NativeModel {
+    arch: NativeArch,
+}
+
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Clamp a (possibly aliased) vocab index into `[0, n)`.
+#[inline]
+fn vidx(v: i32, n: usize) -> usize {
+    (v as i64).rem_euclid(n as i64) as usize
+}
+
+/// Per-row attention forward cache (everything backward needs).
+struct AttnCache {
+    q: [f32; D],
+    k: [[f32; D]; T],
+    v: [[f32; D]; T],
+    alpha: [f32; T],
+    ctx: [f32; D],
+}
+
+impl NativeModel {
+    pub fn new(arch: NativeArch) -> NativeModel {
+        NativeModel { arch }
+    }
+
+    /// Map a manifest-style model name onto a native architecture, so
+    /// call sites written against `runtime.model(name)` work unchanged:
+    /// `predictor`/`native` → hybrid, the Fig 10 comparators `lstm` /
+    /// `cnn` / `mlp` → attention / n-gram / linear, and `freq` → the
+    /// frequency-table baseline.
+    pub fn for_model(name: &str) -> Result<NativeModel> {
+        let arch = match name {
+            "predictor" | "native" | "hybrid" => NativeArch::Hybrid,
+            "lstm" | "attention" => NativeArch::Attention,
+            "cnn" | "ngram" => NativeArch::NGram,
+            "mlp" | "linear" => NativeArch::Linear,
+            "freq" => NativeArch::Freq,
+            other => bail!("no native architecture for model '{other}'"),
+        };
+        Ok(NativeModel::new(arch))
+    }
+
+    pub fn arch(&self) -> NativeArch {
+        self.arch
+    }
+
+    /// Deployed parameter footprint, MB: trainable weights at the
+    /// paper's 5-bit quantisation plus 16-bit n-gram counters.
+    pub fn params_mb(&self) -> f64 {
+        (TRAINABLE as f64 * 5.0 / 8.0 + (NG_BUCKETS * C) as f64 * 2.0) / 1e6
+    }
+
+    /// Peak live activations for one forward batch, MB (f32).
+    pub fn activations_mb(&self) -> f64 {
+        // per row: x (T·D) + k,v (2·T·D) + q,ctx (2·D) + α (T) + logits (C)
+        let per_row = 3 * T * D + 2 * D + T + C;
+        (NATIVE_BATCH * per_row * std::mem::size_of::<f32>()) as f64 / 1e6
+    }
+
+    fn validate(&self, params: &[f32], batch: &Batch) -> Result<()> {
+        ensure!(
+            params.len() == NATIVE_PARAMS,
+            "params length {} != expected {NATIVE_PARAMS}",
+            params.len()
+        );
+        batch.validate(NATIVE_BATCH, T)
+    }
+
+    /// Embedded input `x_t = ¼(E_Δ + E_addr + E_pc + E_tb) + pos_t`.
+    fn embed_row(&self, params: &[f32], batch: &Batch, r: usize) -> [[f32; D]; T] {
+        let mut x = [[0.0f32; D]; T];
+        let base = r * T;
+        for (t, xt) in x.iter_mut().enumerate() {
+            let di = OFF_E_DELTA + vidx(batch.delta[base + t], C) * D;
+            let ai = OFF_E_ADDR + vidx(batch.addr[base + t], A) * D;
+            let pi = OFF_E_PC + vidx(batch.pc[base + t], P) * D;
+            let ti = OFF_E_TB + vidx(batch.tb[base + t], TBV) * D;
+            let po = OFF_POS + t * D;
+            for d in 0..D {
+                xt[d] = 0.25
+                    * (params[di + d] + params[ai + d] + params[pi + d] + params[ti + d])
+                    + params[po + d];
+            }
+        }
+        x
+    }
+
+    /// Single-head attention over the window, query from the last step.
+    fn attn(&self, params: &[f32], x: &[[f32; D]; T]) -> AttnCache {
+        let scale = 1.0 / (D as f32).sqrt();
+        let mut q = [0.0f32; D];
+        let mut k = [[0.0f32; D]; T];
+        let mut v = [[0.0f32; D]; T];
+        for i in 0..D {
+            let row = i * D;
+            let mut acc = 0.0f32;
+            for j in 0..D {
+                acc += params[OFF_WQ + row + j] * x[T - 1][j];
+            }
+            q[i] = acc;
+        }
+        for t in 0..T {
+            for i in 0..D {
+                let row = i * D;
+                let (mut ak, mut av) = (0.0f32, 0.0f32);
+                for j in 0..D {
+                    ak += params[OFF_WK + row + j] * x[t][j];
+                    av += params[OFF_WV + row + j] * x[t][j];
+                }
+                k[t][i] = ak;
+                v[t][i] = av;
+            }
+        }
+        let mut score = [0.0f32; T];
+        for t in 0..T {
+            let mut s = 0.0f32;
+            for d in 0..D {
+                s += q[d] * k[t][d];
+            }
+            score[t] = s * scale;
+        }
+        let mx = score.iter().cloned().fold(f32::MIN, f32::max);
+        let mut alpha = [0.0f32; T];
+        let mut z = 0.0f32;
+        for t in 0..T {
+            alpha[t] = (score[t] - mx).exp();
+            z += alpha[t];
+        }
+        for a in alpha.iter_mut() {
+            *a /= z;
+        }
+        let mut ctx = [0.0f32; D];
+        for t in 0..T {
+            for d in 0..D {
+                ctx[d] += alpha[t] * v[t][d];
+            }
+        }
+        AttnCache { q, k, v, alpha, ctx }
+    }
+
+    fn mean_ctx(&self, x: &[[f32; D]; T]) -> [f32; D] {
+        let mut ctx = [0.0f32; D];
+        for xt in x.iter() {
+            for d in 0..D {
+                ctx[d] += xt[d] / T as f32;
+            }
+        }
+        ctx
+    }
+
+    fn head(&self, params: &[f32], ctx: &[f32; D]) -> [f32; C] {
+        let mut logits = [0.0f32; C];
+        for (c, l) in logits.iter_mut().enumerate() {
+            let row = OFF_WC + c * D;
+            let mut acc = params[OFF_BIAS + c];
+            for d in 0..D {
+                acc += params[row + d] * ctx[d];
+            }
+            *l = acc;
+        }
+        logits
+    }
+
+    /// FNV-hash the last [`NG_ORDER`] delta classes into a context
+    /// bucket. The [`NativeArch::Freq`] baseline ignores context and
+    /// always counts in bucket 0 (an order-0 frequency table).
+    fn bucket(&self, batch: &Batch, r: usize) -> usize {
+        if self.arch == NativeArch::Freq {
+            return 0;
+        }
+        let base = r * T;
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for t in (T - NG_ORDER)..T {
+            h = (h ^ vidx(batch.delta[base + t], C) as u64)
+                .wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        (h % NG_BUCKETS as u64) as usize
+    }
+
+    /// Additive smoothed log-prior from the bucket's counters.
+    fn ngram_bonus(&self, params: &[f32], bucket: usize) -> [f32; C] {
+        let off = OFF_NGRAM + bucket * C;
+        let mut n = 0.0f32;
+        for c in 0..C {
+            n += params[off + c];
+        }
+        let denom = n + 0.5 * C as f32;
+        let mut bonus = [0.0f32; C];
+        for (c, b) in bonus.iter_mut().enumerate() {
+            *b = ((params[off + c] + 0.5) / denom).ln();
+        }
+        bonus
+    }
+
+    /// Logits for one row (no caches — forward / distillation path).
+    fn row_logits(&self, params: &[f32], batch: &Batch, r: usize) -> [f32; C] {
+        match self.arch {
+            NativeArch::Hybrid => {
+                let x = self.embed_row(params, batch, r);
+                let cache = self.attn(params, &x);
+                let mut logits = self.head(params, &cache.ctx);
+                let bonus = self.ngram_bonus(params, self.bucket(batch, r));
+                for c in 0..C {
+                    logits[c] += bonus[c];
+                }
+                logits
+            }
+            NativeArch::Attention => {
+                let x = self.embed_row(params, batch, r);
+                let cache = self.attn(params, &x);
+                self.head(params, &cache.ctx)
+            }
+            NativeArch::Linear => {
+                let x = self.embed_row(params, batch, r);
+                let ctx = self.mean_ctx(&x);
+                self.head(params, &ctx)
+            }
+            NativeArch::NGram | NativeArch::Freq => {
+                self.ngram_bonus(params, self.bucket(batch, r))
+            }
+        }
+    }
+
+    /// Embedding/position gradient scatter shared by all neural archs.
+    fn scatter_dx(
+        &self,
+        grads: &mut [f32],
+        batch: &Batch,
+        r: usize,
+        t: usize,
+        dxt: &[f32; D],
+    ) {
+        let base = r * T;
+        let di = OFF_E_DELTA + vidx(batch.delta[base + t], C) * D;
+        let ai = OFF_E_ADDR + vidx(batch.addr[base + t], A) * D;
+        let pi = OFF_E_PC + vidx(batch.pc[base + t], P) * D;
+        let ti = OFF_E_TB + vidx(batch.tb[base + t], TBV) * D;
+        let po = OFF_POS + t * D;
+        for d in 0..D {
+            let g = 0.25 * dxt[d];
+            grads[di + d] += g;
+            grads[ai + d] += g;
+            grads[pi + d] += g;
+            grads[ti + d] += g;
+            grads[po + d] += dxt[d];
+        }
+    }
+}
+
+impl ModelBackend for NativeModel {
+    fn name(&self) -> &str {
+        self.arch.name()
+    }
+    fn batch(&self) -> usize {
+        NATIVE_BATCH
+    }
+    fn seq_len(&self) -> usize {
+        T
+    }
+    fn classes(&self) -> usize {
+        C
+    }
+    fn param_count(&self) -> usize {
+        NATIVE_PARAMS
+    }
+
+    fn init_params(&self, seed: u32) -> Result<Vec<f32>> {
+        let mut s = (seed as u64) ^ 0x6E61_7469_7665_3600; // "native6" tag
+        let mut params = vec![0.0f32; NATIVE_PARAMS];
+        for p in params[..TRAINABLE].iter_mut() {
+            // uniform in [-0.05, 0.05), from the top 24 bits
+            let r = (splitmix64(&mut s) >> 40) as f32 / (1u64 << 24) as f32;
+            *p = (r - 0.5) * 0.1;
+        }
+        // n-gram counters start at zero (the smoothed prior is uniform)
+        Ok(params)
+    }
+
+    fn forward(&self, params: &[f32], batch: &Batch) -> Result<Vec<f32>> {
+        self.validate(params, batch)?;
+        let mut out = Vec::with_capacity(batch.rows * C);
+        for r in 0..batch.rows {
+            out.extend_from_slice(&self.row_logits(params, batch, r));
+        }
+        Ok(out)
+    }
+
+    fn train_step(
+        &self,
+        state: &mut TrainState,
+        batch: &Batch,
+        thrash_mask: &[f32],
+        lambda: f32,
+        mu: f32,
+    ) -> Result<f32> {
+        self.validate(&state.params, batch)?;
+        ensure!(
+            thrash_mask.len() == C,
+            "thrash mask length {} != classes {C}",
+            thrash_mask.len()
+        );
+        let distill = lambda > 0.0 && state.prev_params.len() == NATIVE_PARAMS;
+        let inv_rows = 1.0 / batch.rows as f32;
+        let mut grads = vec![0.0f32; TRAINABLE];
+        let mut loss = 0.0f32;
+
+        for r in 0..batch.rows {
+            // ---- forward (with caches where backward needs them) ----
+            let x;
+            let cache;
+            let ctx: [f32; D];
+            let mut logits = match self.arch {
+                NativeArch::Hybrid | NativeArch::Attention => {
+                    x = self.embed_row(&state.params, batch, r);
+                    let c = self.attn(&state.params, &x);
+                    ctx = c.ctx;
+                    cache = Some(c);
+                    self.head(&state.params, &ctx)
+                }
+                NativeArch::Linear => {
+                    x = self.embed_row(&state.params, batch, r);
+                    cache = None;
+                    ctx = self.mean_ctx(&x);
+                    self.head(&state.params, &ctx)
+                }
+                NativeArch::NGram | NativeArch::Freq => {
+                    x = [[0.0; D]; T];
+                    cache = None;
+                    ctx = [0.0; D];
+                    [0.0; C]
+                }
+            };
+            if self.arch.counting() {
+                let bonus =
+                    self.ngram_bonus(&state.params, self.bucket(batch, r));
+                for c in 0..C {
+                    logits[c] += bonus[c];
+                }
+            }
+
+            // ---- softmax + thrash-aware loss ----
+            let mx = logits.iter().cloned().fold(f32::MIN, f32::max);
+            let mut p = [0.0f32; C];
+            let mut z = 0.0f32;
+            for c in 0..C {
+                p[c] = (logits[c] - mx).exp();
+                z += p[c];
+            }
+            for pc in p.iter_mut() {
+                *pc /= z;
+            }
+            let label = vidx(batch.labels[r], C);
+            let mut masked_mass = 0.0f32;
+            for c in 0..C {
+                masked_mass += thrash_mask[c] * p[c];
+            }
+            loss += -(p[label] + 1e-12).ln() + mu * masked_mass;
+
+            let mut dz = [0.0f32; C];
+            for c in 0..C {
+                dz[c] = p[c] + mu * p[c] * (thrash_mask[c] - masked_mass);
+            }
+            dz[label] -= 1.0;
+
+            if distill {
+                let prev_logits = self.row_logits(&state.prev_params, batch, r);
+                let pmx = prev_logits.iter().cloned().fold(f32::MIN, f32::max);
+                let mut pp = [0.0f32; C];
+                let mut pz = 0.0f32;
+                for c in 0..C {
+                    pp[c] = (prev_logits[c] - pmx).exp();
+                    pz += pp[c];
+                }
+                for c in 0..C {
+                    pp[c] /= pz;
+                    // KL(p_prev ‖ p): anchor the new distribution
+                    loss += lambda
+                        * pp[c]
+                        * ((pp[c] + 1e-12).ln() - (p[c] + 1e-12).ln());
+                    dz[c] += lambda * (p[c] - pp[c]);
+                }
+            }
+            for d in dz.iter_mut() {
+                *d *= inv_rows;
+            }
+
+            // ---- backward (neural archs only; counts have no grad) ----
+            if self.arch.neural() {
+                // class head
+                let mut dctx = [0.0f32; D];
+                for c in 0..C {
+                    let row = OFF_WC + c * D;
+                    grads[OFF_BIAS + c] += dz[c];
+                    for d in 0..D {
+                        grads[row + d] += dz[c] * ctx[d];
+                        dctx[d] += dz[c] * state.params[row + d];
+                    }
+                }
+                if let Some(cache) = &cache {
+                    // softmax attention
+                    let scale = 1.0 / (D as f32).sqrt();
+                    let mut dalpha = [0.0f32; T];
+                    for t in 0..T {
+                        for d in 0..D {
+                            dalpha[t] += dctx[d] * cache.v[t][d];
+                        }
+                    }
+                    let mut s_dot = 0.0f32;
+                    for t in 0..T {
+                        s_dot += cache.alpha[t] * dalpha[t];
+                    }
+                    let mut dq = [0.0f32; D];
+                    for t in 0..T {
+                        let dscore = cache.alpha[t] * (dalpha[t] - s_dot);
+                        let mut dv = [0.0f32; D];
+                        let mut dk = [0.0f32; D];
+                        for d in 0..D {
+                            dv[d] = cache.alpha[t] * dctx[d];
+                            dk[d] = dscore * cache.q[d] * scale;
+                            dq[d] += dscore * cache.k[t][d] * scale;
+                        }
+                        // dWv, dWk and their pullback into x_t
+                        let mut dxt = [0.0f32; D];
+                        for i in 0..D {
+                            let rv = OFF_WV + i * D;
+                            let rk = OFF_WK + i * D;
+                            for j in 0..D {
+                                grads[rv + j] += dv[i] * x[t][j];
+                                grads[rk + j] += dk[i] * x[t][j];
+                                dxt[j] += dv[i] * state.params[rv + j]
+                                    + dk[i] * state.params[rk + j];
+                            }
+                        }
+                        self.scatter_dx(&mut grads, batch, r, t, &dxt);
+                    }
+                    // dWq and its pullback into x_{T-1}
+                    let mut dxl = [0.0f32; D];
+                    for i in 0..D {
+                        let rq = OFF_WQ + i * D;
+                        for j in 0..D {
+                            grads[rq + j] += dq[i] * x[T - 1][j];
+                            dxl[j] += dq[i] * state.params[rq + j];
+                        }
+                    }
+                    self.scatter_dx(&mut grads, batch, r, T - 1, &dxl);
+                } else {
+                    // mean pooling: each timestep gets dctx / T
+                    let mut dxt = [0.0f32; D];
+                    for d in 0..D {
+                        dxt[d] = dctx[d] / T as f32;
+                    }
+                    for t in 0..T {
+                        self.scatter_dx(&mut grads, batch, r, t, &dxt);
+                    }
+                }
+            }
+        }
+
+        // ---- n-gram counting (the online fast path learns here) ----
+        if self.arch.counting() {
+            for r in 0..batch.rows {
+                let off = OFF_NGRAM + self.bucket(batch, r) * C;
+                let label = vidx(batch.labels[r], C);
+                state.params[off + label] += 1.0;
+            }
+        }
+
+        // ---- Adam over the trainable prefix ----
+        if state.m.len() != NATIVE_PARAMS {
+            state.m = vec![0.0; NATIVE_PARAMS];
+        }
+        if state.v.len() != NATIVE_PARAMS {
+            state.v = vec![0.0; NATIVE_PARAMS];
+        }
+        state.step += 1;
+        let t = state.step as f32;
+        let bc1 = 1.0 - BETA1.powf(t);
+        let bc2 = 1.0 - BETA2.powf(t);
+        for i in 0..TRAINABLE {
+            let g = grads[i];
+            state.m[i] = BETA1 * state.m[i] + (1.0 - BETA1) * g;
+            state.v[i] = BETA2 * state.v[i] + (1.0 - BETA2) * g * g;
+            let mhat = state.m[i] / bc1;
+            let vhat = state.v[i] / bc2;
+            state.params[i] -= LR * mhat / (vhat.sqrt() + EPS);
+        }
+
+        Ok(loss * inv_rows)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::predictor::features::pack_batch;
+    use crate::util::rng::Rng;
+
+    fn model() -> NativeModel {
+        NativeModel::new(NativeArch::Hybrid)
+    }
+
+    /// Deterministic batch whose labels depend on the last window delta
+    /// (a first-order pattern: after class a comes class (a + 1) mod 8).
+    fn ordered_batch(seed: u64) -> Batch {
+        let mut rng = Rng::new(seed);
+        let mut b = Batch::default();
+        for _ in 0..NATIVE_BATCH {
+            let mut last = 0i32;
+            for _ in 0..T {
+                last = rng.below(8) as i32;
+                b.delta.push(last);
+                b.addr.push(rng.below(A as u64) as i32);
+                b.pc.push(rng.below(P as u64) as i32);
+                b.tb.push(rng.below(TBV as u64) as i32);
+            }
+            b.labels.push((last + 1) % 8);
+        }
+        b.rows = NATIVE_BATCH;
+        b
+    }
+
+    #[test]
+    fn layout_is_consistent() {
+        let m = model();
+        assert_eq!(m.param_count(), NATIVE_PARAMS);
+        assert_eq!(m.batch(), NATIVE_BATCH);
+        assert_eq!(m.seq_len(), T);
+        assert_eq!(m.classes(), C);
+        assert!(TRAINABLE < NATIVE_PARAMS);
+        let dims = native_dims();
+        assert_eq!(dims.delta_vocab, m.classes());
+        assert_eq!(dims.seq_len, m.seq_len());
+        assert!(m.params_mb() > 0.0 && m.activations_mb() > 0.0);
+    }
+
+    #[test]
+    fn init_is_seeded_deterministic_with_zero_counters() {
+        let m = model();
+        let p1 = m.init_params(7).unwrap();
+        let p2 = m.init_params(7).unwrap();
+        let p3 = m.init_params(8).unwrap();
+        assert_eq!(p1.len(), NATIVE_PARAMS);
+        assert_eq!(p1, p2);
+        assert_ne!(p1, p3);
+        assert!(p1[..TRAINABLE].iter().all(|x| x.abs() <= 0.05));
+        assert!(p1[TRAINABLE..].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn forward_is_well_shaped_and_finite_for_every_arch() {
+        let batch = ordered_batch(42);
+        for arch in [
+            NativeArch::Hybrid,
+            NativeArch::Attention,
+            NativeArch::NGram,
+            NativeArch::Linear,
+            NativeArch::Freq,
+        ] {
+            let m = NativeModel::new(arch);
+            let p = m.init_params(1).unwrap();
+            let logits = m.forward(&p, &batch).unwrap();
+            assert_eq!(logits.len(), batch.rows * C, "{arch:?}");
+            assert!(logits.iter().all(|x| x.is_finite()), "{arch:?}");
+        }
+    }
+
+    #[test]
+    fn training_reduces_loss_on_a_fixed_batch() {
+        let m = model();
+        let batch = ordered_batch(3);
+        let mask = vec![0.0f32; C];
+        let mut state = TrainState::fresh(m.init_params(0).unwrap());
+        let first = m.train_step(&mut state, &batch, &mask, 0.0, 0.0).unwrap();
+        let mut last = first;
+        for _ in 0..59 {
+            last = m.train_step(&mut state, &batch, &mask, 0.0, 0.0).unwrap();
+        }
+        assert_eq!(state.step, 60);
+        assert!(
+            last < first * 0.5,
+            "loss did not drop: first {first}, last {last}"
+        );
+        // the trained model predicts the batch labels
+        let logits = m.forward(&state.params, &batch).unwrap();
+        let correct = m
+            .top1(&logits)
+            .iter()
+            .zip(&batch.labels)
+            .filter(|(p, l)| **p == **l as usize)
+            .count();
+        assert!(
+            correct * 2 > batch.rows,
+            "train top-1 too low: {correct}/{}",
+            batch.rows
+        );
+    }
+
+    #[test]
+    fn training_is_bitwise_deterministic() {
+        let m = model();
+        let mask = vec![0.0f32; C];
+        let run = || {
+            let mut state = TrainState::fresh(m.init_params(9).unwrap());
+            for s in 0..20 {
+                let batch = ordered_batch(100 + s);
+                m.train_step(&mut state, &batch, &mask, 0.3, 0.1).unwrap();
+                if s == 10 {
+                    state.snapshot_prev();
+                }
+            }
+            state.params
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn mu_suppresses_masked_classes() {
+        let m = model();
+        let batch = ordered_batch(99);
+        let run = |mu: f32| -> f32 {
+            let mut state = TrainState::fresh(m.init_params(0).unwrap());
+            let mut mask = vec![0.0f32; C];
+            for &l in &batch.labels {
+                mask[l as usize] = 1.0;
+            }
+            for _ in 0..12 {
+                m.train_step(&mut state, &batch, &mask, 0.0, mu).unwrap();
+            }
+            let logits = m.forward(&state.params, &batch).unwrap();
+            let mut mass = 0.0f32;
+            for (row, &label) in logits.chunks_exact(C).zip(&batch.labels) {
+                let mx = row.iter().cloned().fold(f32::MIN, f32::max);
+                let exp: Vec<f32> = row.iter().map(|v| (v - mx).exp()).collect();
+                let z: f32 = exp.iter().sum();
+                mass += exp[label as usize] / z;
+            }
+            mass / batch.rows as f32
+        };
+        let with_term = run(4.0);
+        let without = run(0.0);
+        assert!(
+            with_term < without,
+            "thrash term should suppress masked classes: {with_term} vs {without}"
+        );
+    }
+
+    #[test]
+    fn lambda_distills_toward_the_previous_model() {
+        // warm up, snapshot prev, then keep training on a *different*
+        // stream: the λ term must keep predictions closer to prev's
+        let m = model();
+        let mask = vec![0.0f32; C];
+        let warm = ordered_batch(1);
+        let shifted = ordered_batch(2);
+        let run = |lambda: f32| -> f32 {
+            let mut state = TrainState::fresh(m.init_params(5).unwrap());
+            for _ in 0..15 {
+                m.train_step(&mut state, &warm, &mask, 0.0, 0.0).unwrap();
+            }
+            state.snapshot_prev();
+            for _ in 0..15 {
+                m.train_step(&mut state, &shifted, &mask, lambda, 0.0).unwrap();
+            }
+            // mean |p - p_prev| over the warm batch
+            let cur = m.forward(&state.params, &warm).unwrap();
+            let prev = m.forward(&state.prev_params, &warm).unwrap();
+            let softmax = |row: &[f32]| -> Vec<f32> {
+                let mx = row.iter().cloned().fold(f32::MIN, f32::max);
+                let e: Vec<f32> = row.iter().map(|v| (v - mx).exp()).collect();
+                let z: f32 = e.iter().sum();
+                e.iter().map(|v| v / z).collect()
+            };
+            let mut dist = 0.0f32;
+            for (a, b) in cur.chunks_exact(C).zip(prev.chunks_exact(C)) {
+                for (pa, pb) in softmax(a).iter().zip(softmax(b)) {
+                    dist += (pa - pb).abs();
+                }
+            }
+            dist
+        };
+        let anchored = run(4.0);
+        let free = run(0.0);
+        assert!(
+            anchored < free,
+            "distillation should anchor predictions: {anchored} vs {free}"
+        );
+    }
+
+    #[test]
+    fn ngram_counts_learn_first_order_structure_frequency_cannot() {
+        // labels follow the last delta; the context-hashed n-gram nails
+        // it, the order-0 frequency table is stuck near chance over the
+        // 8 classes in play
+        let mask = vec![0.0f32; C];
+        let acc = |arch: NativeArch| -> f64 {
+            let m = NativeModel::new(arch);
+            let mut state = TrainState::fresh(m.init_params(0).unwrap());
+            for s in 0..40 {
+                let b = ordered_batch(500 + s);
+                m.train_step(&mut state, &b, &mask, 0.0, 0.0).unwrap();
+            }
+            let eval = ordered_batch(9_999);
+            let logits = m.forward(&state.params, &eval).unwrap();
+            let hit = m
+                .top1(&logits)
+                .iter()
+                .zip(&eval.labels)
+                .filter(|(p, l)| **p == **l as usize)
+                .count();
+            hit as f64 / eval.rows as f64
+        };
+        let ngram = acc(NativeArch::NGram);
+        let freq = acc(NativeArch::Freq);
+        assert!(
+            ngram > 0.75,
+            "context-hashed counts should learn the pattern: {ngram}"
+        );
+        assert!(
+            ngram > freq + 0.2,
+            "n-gram {ngram} should clearly beat order-0 frequency {freq}"
+        );
+    }
+
+    #[test]
+    fn batch_shape_errors_are_loud() {
+        let m = model();
+        let p = m.init_params(0).unwrap();
+        let bad = Batch { rows: 1, ..Default::default() };
+        let err = m.forward(&p, &bad).unwrap_err();
+        assert!(format!("{err:#}").contains("batch shape mismatch"));
+        let mut state = TrainState::fresh(p.clone());
+        let good = ordered_batch(1);
+        let err = m
+            .train_step(&mut state, &good, &[0.0; 3], 0.0, 0.0)
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("thrash mask length"));
+        let err = m.forward(&p[..10], &good).unwrap_err();
+        assert!(format!("{err:#}").contains("params length"));
+    }
+
+    #[test]
+    fn packs_real_feature_windows() {
+        // the native dims round-trip through the shared feature pipeline
+        use crate::config::Scale;
+        use crate::predictor::features::samples_from_trace;
+        use crate::trace::workloads::Workload;
+        let trace = Workload::Hotspot.generate(Scale::default(), 42);
+        let (samples, _) = samples_from_trace(&trace, native_dims());
+        assert!(samples.len() > NATIVE_BATCH);
+        let m = model();
+        let batch = pack_batch(&samples[..NATIVE_BATCH], NATIVE_BATCH, T);
+        let p = m.init_params(0).unwrap();
+        let logits = m.forward(&p, &batch).unwrap();
+        assert_eq!(logits.len(), NATIVE_BATCH * C);
+    }
+
+    #[test]
+    fn for_model_maps_manifest_names() {
+        assert_eq!(
+            NativeModel::for_model("predictor").unwrap().arch(),
+            NativeArch::Hybrid
+        );
+        assert_eq!(
+            NativeModel::for_model("lstm").unwrap().arch(),
+            NativeArch::Attention
+        );
+        assert_eq!(
+            NativeModel::for_model("cnn").unwrap().arch(),
+            NativeArch::NGram
+        );
+        assert_eq!(
+            NativeModel::for_model("mlp").unwrap().arch(),
+            NativeArch::Linear
+        );
+        assert_eq!(
+            NativeModel::for_model("freq").unwrap().arch(),
+            NativeArch::Freq
+        );
+        assert!(NativeModel::for_model("resnet").is_err());
+    }
+}

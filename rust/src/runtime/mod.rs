@@ -1,19 +1,31 @@
-//! Model runtime: loads the AOT artifacts (`artifacts/*.hlo.txt` +
-//! `manifest.json`) produced by `python/compile/aot.py` and exposes typed
-//! `forward` / `train_step` / `init_params` entry points to the predictor.
+//! Model runtime: typed `init_params` / `forward` / `train_step` entry
+//! points behind one backend-agnostic surface, [`ModelBackend`].
 //!
-//! Two interchangeable backends sit behind one public surface:
+//! Three interchangeable backends implement it:
 //!
-//! * **`pjrt` feature** (`executable.rs`) — the real thing: HLO text →
-//!   `XlaComputation` → PJRT CPU client. This is the ONLY bridge between
-//!   the rust request path and the python-authored compute graphs, and it
-//!   crosses at build time, via HLO text, never via a python interpreter.
-//!   The PJRT client is **not** thread-safe; `ModelRuntime` is
-//!   deliberately `!Send` here, which is why the sweep runner keeps
-//!   artifact-backed strategies on a serialized lane.
+//! * **`pjrt` feature** (`executable.rs`) — the real thing: AOT artifacts
+//!   (`artifacts/*.hlo.txt` + `manifest.json`) produced by
+//!   `python/compile/aot.py`, HLO text → `XlaComputation` → PJRT CPU
+//!   client. This is the ONLY bridge between the rust request path and the
+//!   python-authored compute graphs, and it crosses at build time, via HLO
+//!   text, never via a python interpreter. The PJRT client is **not**
+//!   thread-safe; `ModelRuntime` is deliberately `!Send` here, which is
+//!   why the sweep runner keeps artifact-backed strategies on a serialized
+//!   lane.
 //! * **default** (`stub.rs`) — a deterministic, dependency-free stand-in
-//!   with the same API, so the simulator/policy/sweep stack builds and
-//!   tests from a clean checkout (no `xla` crate, no artifacts).
+//!   with the same API and the same artifact manifest, so the
+//!   simulator/policy/sweep stack builds and tests from a clean checkout
+//!   (no `xla` crate). Still needs `artifacts/manifest.json` for shapes.
+//! * **native** ([`crate::predictor::native`]) — a pure-Rust n-gram +
+//!   micro-attention hybrid that needs *no artifacts at all*: shapes are
+//!   compiled in, weights are trained online, and the model is
+//!   `Send + Sync`, so the `intelligent-native` strategy runs on the
+//!   parallel sweep lane and the §V accuracy experiments run from a clean
+//!   checkout under default features.
+//!
+//! Code that consumes a predictor (the policy engine, the trainers, the
+//! experiment drivers) takes `Arc<dyn ModelBackend>` / `&dyn ModelBackend`
+//! and never names a concrete backend.
 
 pub mod manifest;
 pub mod state;
@@ -30,3 +42,203 @@ pub use stub::{Executable, ModelRuntime, Runtime};
 
 pub use manifest::{ArgSpec, ArtifactSpec, Manifest, ModelEntry};
 pub use state::{Batch, TrainState};
+
+use anyhow::{bail, Result};
+
+/// Backend-agnostic predictor surface.
+///
+/// Deliberately **not** `Send + Sync`-bounded: the PJRT backend wraps a
+/// thread-bound client. Callers that need to cross threads construct a
+/// fresh backend per thread (see `api::sweep`) or use the native backend,
+/// whose concrete type is `Send + Sync`.
+pub trait ModelBackend {
+    /// Model name (manifest entry or native architecture).
+    fn name(&self) -> &str;
+    /// Fixed batch size every [`Batch`] must be packed to.
+    fn batch(&self) -> usize;
+    /// Feature-window length T.
+    fn seq_len(&self) -> usize;
+    /// Number of output delta classes C.
+    fn classes(&self) -> usize;
+    /// Length of the flat parameter vector.
+    fn param_count(&self) -> usize;
+
+    /// Deterministic parameter init: same seed → identical weights.
+    fn init_params(&self, seed: u32) -> Result<Vec<f32>>;
+    /// Logits, `rows * classes` row-major.
+    fn forward(&self, params: &[f32], batch: &Batch) -> Result<Vec<f32>>;
+    /// One optimiser step of the thrash-aware loss (§IV-E); returns the
+    /// scalar loss. `thrash_mask` has one slot per class (E∪T membership),
+    /// `lambda` scales the LUCIR-style distillation term, `mu` the
+    /// thrash-suppression term.
+    fn train_step(
+        &self,
+        state: &mut TrainState,
+        batch: &Batch,
+        thrash_mask: &[f32],
+        lambda: f32,
+        mu: f32,
+    ) -> Result<f32>;
+
+    /// Arg-max class per row of a `rows * classes` logit buffer.
+    fn top1(&self, logits: &[f32]) -> Vec<usize> {
+        logits
+            .chunks_exact(self.classes())
+            .map(|row| {
+                row.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(i, _)| i)
+                    .unwrap_or(0)
+            })
+            .collect()
+    }
+
+    /// Top-k classes (descending logit) per row.
+    fn topk(&self, logits: &[f32], k: usize) -> Vec<Vec<usize>> {
+        logits
+            .chunks_exact(self.classes())
+            .map(|row| {
+                let mut idx: Vec<usize> = (0..row.len()).collect();
+                idx.sort_unstable_by(|&a, &b| {
+                    row[b].partial_cmp(&row[a]).unwrap()
+                });
+                idx.truncate(k);
+                idx
+            })
+            .collect()
+    }
+}
+
+/// Both manifest-backed backends (pjrt and stub) expose identical
+/// inherent methods and public fields; one impl covers whichever is
+/// compiled in.
+impl ModelBackend for ModelRuntime {
+    fn name(&self) -> &str {
+        &self.name
+    }
+    fn batch(&self) -> usize {
+        self.batch
+    }
+    fn seq_len(&self) -> usize {
+        self.seq_len
+    }
+    fn classes(&self) -> usize {
+        self.classes
+    }
+    fn param_count(&self) -> usize {
+        self.param_count
+    }
+    fn init_params(&self, seed: u32) -> Result<Vec<f32>> {
+        // inherent methods shadow the trait here, so these calls do not
+        // recurse
+        self.init_params(seed)
+    }
+    fn forward(&self, params: &[f32], batch: &Batch) -> Result<Vec<f32>> {
+        self.forward(params, batch)
+    }
+    fn train_step(
+        &self,
+        state: &mut TrainState,
+        batch: &Batch,
+        thrash_mask: &[f32],
+        lambda: f32,
+        mu: f32,
+    ) -> Result<f32> {
+        self.train_step(state, batch, thrash_mask, lambda, mu)
+    }
+    fn top1(&self, logits: &[f32]) -> Vec<usize> {
+        self.top1(logits)
+    }
+    fn topk(&self, logits: &[f32], k: usize) -> Vec<Vec<usize>> {
+        self.topk(logits, k)
+    }
+}
+
+/// Which predictor backend a CLI entry point should construct
+/// (`--predictor native|stub|pjrt`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PredictorKind {
+    /// Artifact-free pure-Rust backend ([`crate::predictor::native`]).
+    #[default]
+    Native,
+    /// Manifest-backed deterministic stub (default features only).
+    Stub,
+    /// Manifest-backed PJRT/XLA backend (`--features pjrt` only).
+    Pjrt,
+}
+
+impl PredictorKind {
+    pub const ALL: [PredictorKind; 3] =
+        [PredictorKind::Native, PredictorKind::Stub, PredictorKind::Pjrt];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            PredictorKind::Native => "native",
+            PredictorKind::Stub => "stub",
+            PredictorKind::Pjrt => "pjrt",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<PredictorKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "native" => Some(PredictorKind::Native),
+            "stub" => Some(PredictorKind::Stub),
+            "pjrt" => Some(PredictorKind::Pjrt),
+            _ => None,
+        }
+    }
+
+    /// Whether this backend needs `artifacts/manifest.json` on disk.
+    pub fn needs_artifacts(self) -> bool {
+        !matches!(self, PredictorKind::Native)
+    }
+
+    /// Error out early when the requested backend is not compiled in.
+    pub fn ensure_available(self) -> Result<()> {
+        match self {
+            PredictorKind::Native => Ok(()),
+            PredictorKind::Stub => {
+                if cfg!(feature = "pjrt") {
+                    bail!(
+                        "--predictor stub is the default-features backend; \
+                         this binary was built with --features pjrt \
+                         (use --predictor pjrt or native)"
+                    );
+                }
+                Ok(())
+            }
+            PredictorKind::Pjrt => {
+                if !cfg!(feature = "pjrt") {
+                    bail!(
+                        "--predictor pjrt needs a binary built with \
+                         --features pjrt (use --predictor native or stub)"
+                    );
+                }
+                Ok(())
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn predictor_kind_round_trips_and_defaults_to_native() {
+        assert_eq!(PredictorKind::default(), PredictorKind::Native);
+        for k in PredictorKind::ALL {
+            assert_eq!(PredictorKind::from_name(k.name()), Some(k));
+        }
+        assert_eq!(PredictorKind::from_name("NATIVE"), Some(PredictorKind::Native));
+        assert_eq!(PredictorKind::from_name("onnx"), None);
+        assert!(!PredictorKind::Native.needs_artifacts());
+        assert!(PredictorKind::Stub.needs_artifacts());
+        assert!(PredictorKind::Native.ensure_available().is_ok());
+        // exactly one of stub/pjrt is compiled in
+        let stub_ok = PredictorKind::Stub.ensure_available().is_ok();
+        let pjrt_ok = PredictorKind::Pjrt.ensure_available().is_ok();
+        assert_ne!(stub_ok, pjrt_ok);
+    }
+}

@@ -1,0 +1,69 @@
+#!/usr/bin/env bash
+# Regenerate BENCH_PR6.json — the committed bench baseline for the
+# native predictor subsystem (PR 6).
+#
+# Runs the predictor bench binary (the native forward/train_step rows
+# need no artifacts; the pjrt rows appear only after `make artifacts`)
+# and converts the harness's
+#     group/name   time: [1.234 µs]  thrpt: [5.678 Melem/s]
+# lines into a stable JSON document. Re-run on a quiet machine and
+# commit the result whenever the prediction path changes materially:
+#
+#     scripts/bench_baseline.sh [output.json]
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+out="${1:-BENCH_PR6.json}"
+
+raw="$(mktemp)"
+trap 'rm -f "$raw"' EXIT
+(cd rust && cargo bench --bench predictor) | tee "$raw"
+
+python3 - "$raw" "$out" <<'PY'
+import json, re, subprocess, sys
+
+raw_path, out_path = sys.argv[1], sys.argv[2]
+
+UNITS_TIME = {"s": 1e9, "ms": 1e6, "µs": 1e3, "us": 1e3, "ns": 1.0}
+UNITS_THRPT = {"Gelem/s": 1e9, "Melem/s": 1e6, "Kelem/s": 1e3, "elem/s": 1.0}
+LINE = re.compile(
+    r"^(?P<name>\S+)\s+time:\s+\[(?P<t>[\d.]+)\s+(?P<tu>\S+)\]"
+    r"(?:\s+thrpt:\s+\[(?P<r>[\d.]+)\s+(?P<ru>\S+)\])?"
+)
+
+benches = {}
+with open(raw_path, encoding="utf-8") as f:
+    for line in f:
+        m = LINE.match(line.strip())
+        if not m:
+            continue
+        entry = {"time_ns": round(float(m["t"]) * UNITS_TIME[m["tu"]], 3)}
+        if m["r"]:
+            entry["throughput_elem_per_s"] = round(
+                float(m["r"]) * UNITS_THRPT[m["ru"]], 1
+            )
+        benches[m["name"]] = entry
+
+if not benches:
+    sys.exit("no bench lines parsed — did the bench binary run?")
+
+rev = subprocess.run(
+    ["git", "rev-parse", "--short", "HEAD"],
+    capture_output=True, text=True, check=False,
+).stdout.strip() or "unknown"
+
+doc = {
+    "schema": "bench-baseline/v1",
+    "pr": 6,
+    "bench": "predictor",
+    "git_rev": rev,
+    "status": "measured",
+    "note": "median per-iteration times from rust/benches/common harness; "
+            "regenerate with scripts/bench_baseline.sh",
+    "benches": benches,
+}
+with open(out_path, "w", encoding="utf-8") as f:
+    json.dump(doc, f, indent=2, sort_keys=False)
+    f.write("\n")
+print(f"wrote {out_path} ({len(benches)} benches)")
+PY
