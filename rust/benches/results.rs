@@ -1,0 +1,78 @@
+//! ResultStore benchmarks: single-entry put/get latency and the
+//! headline number of the memoization subsystem — the same sweep grid
+//! cold (every cell simulated) versus against a warm store (every cell
+//! one file read, zero simulations).
+
+#[path = "common/mod.rs"]
+mod common;
+
+use std::sync::Arc;
+
+use common::Bench;
+use uvmio::api::{StrategyCtx, StrategyRegistry, SweepRunner, SweepSpec};
+use uvmio::corpus::TraceCache;
+use uvmio::results::ResultStore;
+use uvmio::trace::workloads::Workload;
+
+fn main() {
+    let b = Bench::new("results");
+    let dir = std::env::temp_dir()
+        .join(format!("uvmio-results-bench-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+
+    let registry = StrategyRegistry::builtin();
+    let sweep = SweepSpec::new(
+        vec![Workload::Atax, Workload::Bicg, Workload::Hotspot],
+        vec!["baseline".to_string(), "demand-lru".to_string()],
+    )
+    .with_oversub(vec![110, 125])
+    .with_seeds(vec![42, 7]);
+    let cells = sweep.len() as u64;
+    let empty = StrategyCtx::default();
+    let cache = Arc::new(TraceCache::new());
+
+    // single-entry round-trip: encode + atomic write / read + decode
+    let store = ResultStore::open(dir.join("unit")).unwrap();
+    let records = SweepRunner::new(&registry)
+        .with_cache(Arc::clone(&cache))
+        .run(&sweep, &empty, &mut [])
+        .unwrap();
+    let sample = records
+        .iter()
+        .find_map(|r| r.result.as_ref().ok())
+        .unwrap();
+    b.bench("store/put", 1, || {
+        std::hint::black_box(store.put("bench-cell", sample).unwrap());
+    });
+    b.bench("store/get", 1, || {
+        std::hint::black_box(store.get("bench-cell").unwrap().unwrap());
+    });
+
+    // the headline: identical grid, simulated vs memoized. Both lanes
+    // share a warm trace cache so the delta is simulation vs file read.
+    b.bench("sweep/3x2x2x2/cold-no-store", cells, || {
+        let records = SweepRunner::new(&registry)
+            .with_cache(Arc::clone(&cache))
+            .run(&sweep, &empty, &mut [])
+            .unwrap();
+        std::hint::black_box(records);
+    });
+
+    let warm = Arc::new(ResultStore::open(dir.join("warm")).unwrap());
+    // prime once; every benched iteration below is then all hits
+    SweepRunner::new(&registry)
+        .with_cache(Arc::clone(&cache))
+        .with_results(Arc::clone(&warm))
+        .run(&sweep, &empty, &mut [])
+        .unwrap();
+    b.bench("sweep/3x2x2x2/memoized-warm-store", cells, || {
+        let records = SweepRunner::new(&registry)
+            .with_cache(Arc::clone(&cache))
+            .with_results(Arc::clone(&warm))
+            .run(&sweep, &empty, &mut [])
+            .unwrap();
+        std::hint::black_box(records);
+    });
+
+    let _ = std::fs::remove_dir_all(&dir);
+}

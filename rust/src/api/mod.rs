@@ -29,6 +29,9 @@
 //!   as `Arc<Trace>`. Workload slots ([`SweepWorkload`]) accept builtin
 //!   generators or any [`crate::corpus::TraceSource`] — corpus entries,
 //!   imported CSV / UVM-fault-log traces, `A+B` multi-tenant pairs.
+//!   [`SweepRunner::with_results`] additionally memoizes artifact-free
+//!   cells through a [`crate::results::ResultStore`], so identical
+//!   re-sweeps skip simulation entirely and interrupted sweeps resume.
 //!
 //! ```no_run
 //! use uvmio::api::{ConsoleSink, StrategyCtx, StrategyRegistry, SweepRunner,
@@ -58,6 +61,7 @@ pub use registry::{
 };
 pub use sink::{ConsoleSink, CsvSink, JsonlSink, record_to_json, SweepSink};
 pub use sweep::{
-    CellId, CellRecord, ProgressObserver, ScheduledWorkload, SweepRunner,
-    SweepSpec, SweepWorkload,
+    cell_store_key, parse_sweep_workloads, CellId, CellRecord,
+    ProgressObserver, ScheduledWorkload, SweepRunner, SweepSpec,
+    SweepWorkload,
 };

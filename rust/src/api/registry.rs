@@ -233,10 +233,12 @@ impl StrategyRegistry {
     }
 
     /// The paper's strategies, pre-registered under their CLI names:
-    /// `baseline`, `demand-hpe`, `tree-hpe`, `tree-evict` (the proactive
-    /// pre-eviction configuration), `demand-belady`, `demand-lru`,
-    /// `demand-random`, `uvmsmart`, `intelligent`, and
-    /// `intelligent-native` (the artifact-free backend; parallel lane).
+    /// `baseline`, `demand-hpe`, `tree-hpe`, `hpe-preevict` (HPE with
+    /// its regular-phase `old` arrivals drained in the background),
+    /// `tree-evict` (the proactive pre-eviction configuration),
+    /// `demand-belady`, `demand-lru`, `demand-random`, `uvmsmart`,
+    /// `intelligent`, and `intelligent-native` (the artifact-free
+    /// backend; parallel lane).
     pub fn builtin() -> StrategyRegistry {
         use PaperTable::*;
         let mut r = StrategyRegistry::empty();
@@ -249,6 +251,12 @@ impl StrategyRegistry {
             .in_tables(&[TableI, TableII, TableVI]));
         reg(StrategySpec::new("tree-hpe", "Tree.+HPE", tree_hpe_factory)
             .in_tables(&[TableII, TableVI]));
+        reg(StrategySpec::new(
+            "hpe-preevict",
+            "Tree.+HPE+PreEvict",
+            hpe_preevict_factory,
+        )
+        .in_tables(&[TableII]));
         reg(StrategySpec::new(
             "tree-evict",
             "Tree.+PreEvict",
@@ -415,6 +423,20 @@ fn tree_hpe_factory(
     _ctx: &StrategyCtx,
 ) -> Result<Box<dyn DecisionPolicy>> {
     Ok(Box::new(Composite::new(TreePrefetcher::new(), Hpe::new())))
+}
+
+/// The pre-evict-aware HPE variant: the chain's regular-phase `old`
+/// arrivals drain on the background-transfer queue, and prefetch bursts
+/// are bounded by the frames they can occupy — the §IV-D cooperation
+/// applied to the Table-II pathology case.
+fn hpe_preevict_factory(
+    _spec: &RunSpec<'_>,
+    _ctx: &StrategyCtx,
+) -> Result<Box<dyn DecisionPolicy>> {
+    Ok(Box::new(
+        Composite::new(TreePrefetcher::new(), Hpe::proactive())
+            .with_pressure_aware_prefetch(),
+    ))
 }
 
 /// Ganguly et al.'s tree pre-eviction, in its directive configuration:

@@ -38,7 +38,8 @@ use crate::config::{Scale, SimConfig};
 use crate::coordinator::{
     MultiTenantScheduler, RunSpec, SchedulePolicy, TenantSpec,
 };
-use crate::corpus::{TraceCache, TraceSource};
+use crate::corpus::{self, CorpusStore, TraceCache, TraceSource};
+use crate::results::ResultStore;
 use crate::sim::{CostModelKind, MetricsSnapshot, Observer, SimEvent};
 use crate::trace::workloads::Workload;
 use crate::trace::Trace;
@@ -125,6 +126,86 @@ impl From<ScheduledWorkload> for SweepWorkload {
     fn from(s: ScheduledWorkload) -> SweepWorkload {
         SweepWorkload::Scheduled(s)
     }
+}
+
+/// Parse a comma-separated workload selector into sweep slots: `all`,
+/// builtin generator names, `corpus:`/`csv:`/`uvmlog:` sources, offline
+/// `A+B` compositions, and `sched:A+B` scheduler-backed cells (which
+/// bind to `schedule`). Shared by `repro sweep` and the `repro serve`
+/// job protocol, so a served job accepts exactly the CLI's selector
+/// grammar.
+pub fn parse_sweep_workloads(
+    selector: &str,
+    store: Option<&CorpusStore>,
+    schedule: SchedulePolicy,
+) -> Result<Vec<SweepWorkload>> {
+    if selector.trim().eq_ignore_ascii_case("all") {
+        return Ok(Workload::ALL.into_iter().map(SweepWorkload::from).collect());
+    }
+    let mut out = Vec::new();
+    for part in selector.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+        if let Some(tenants) = part.strip_prefix("sched:") {
+            let tenants = corpus::parse_tenants(tenants, store)?;
+            out.push(SweepWorkload::from(ScheduledWorkload::new(
+                tenants,
+                schedule.clone(),
+            )));
+            continue;
+        }
+        match Workload::from_name(part) {
+            Some(w) => out.push(SweepWorkload::from(w)),
+            None => out.push(SweepWorkload::from(corpus::parse_source(part, store)?)),
+        }
+    }
+    if out.is_empty() {
+        bail!("empty workload list");
+    }
+    Ok(out)
+}
+
+/// The [`ResultStore`](crate::results::ResultStore) key for one sweep
+/// cell: every axis that feeds the simulation is spelled into the
+/// identity string (see the `results` module docs for the format and
+/// its invalidation rules). The trace component reuses the trace
+/// cache's own identity — `gen:<name>:s<scale>:r<seed>` for builtins,
+/// [`TraceSource::cache_key`] for sources, and the tenant key list (at
+/// the scheduler's per-tenant `seed ^ i` perturbation) plus the
+/// schedule name for scheduled cells — so a hit can be served without
+/// ever loading the trace.
+pub fn cell_store_key(
+    sweep: &SweepSpec,
+    workload: &SweepWorkload,
+    strategy: &str,
+    oversub: u32,
+    seed: u64,
+) -> String {
+    let trace_id = match workload {
+        SweepWorkload::Builtin(w) => {
+            CorpusStore::generated_key(w.name(), sweep.scale, seed)
+        }
+        SweepWorkload::Source(s) => s.cache_key(sweep.scale, seed),
+        SweepWorkload::Scheduled(s) => {
+            let tenants: Vec<String> = s
+                .tenants
+                .iter()
+                .enumerate()
+                .map(|(i, t)| t.cache_key(sweep.scale, seed ^ i as u64))
+                .collect();
+            format!("sched[{}]@{}", tenants.join("|"), s.schedule.name())
+        }
+    };
+    format!(
+        "cell:{}:o{}:r{}:cm{}:crash{}:{}",
+        strategy,
+        oversub,
+        seed,
+        sweep.cost_model.name(),
+        sweep
+            .crash_threshold_for(oversub)
+            .map(|t| t.to_string())
+            .unwrap_or_else(|| "-".to_string()),
+        trace_id
+    )
 }
 
 /// The grid a sweep covers. Cell order (the order sinks observe) is the
@@ -261,12 +342,19 @@ pub struct SweepRunner<'r> {
     registry: &'r StrategyRegistry,
     threads: usize,
     cache: Option<Arc<TraceCache>>,
+    results: Option<Arc<ResultStore>>,
     progress_every: Option<u64>,
 }
 
 impl<'r> SweepRunner<'r> {
     pub fn new(registry: &'r StrategyRegistry) -> SweepRunner<'r> {
-        SweepRunner { registry, threads: 0, cache: None, progress_every: None }
+        SweepRunner {
+            registry,
+            threads: 0,
+            cache: None,
+            results: None,
+            progress_every: None,
+        }
     }
 
     /// Worker-thread count for the parallel lane (0 = one per core).
@@ -292,6 +380,19 @@ impl<'r> SweepRunner<'r> {
     /// the run.
     pub fn with_cache(mut self, cache: Arc<TraceCache>) -> SweepRunner<'r> {
         self.cache = Some(cache);
+        self
+    }
+
+    /// Memoize cells through a [`ResultStore`]: before simulating, each
+    /// cell looks itself up under [`cell_store_key`]; a hit is streamed
+    /// to the sinks verbatim (no trace load, no simulation) and a fresh
+    /// `Ok` result is persisted for the next run. `needs_artifacts`
+    /// strategies are exempt — nothing in the key captures the caller's
+    /// loaded model artifacts — and error cells are never cached. Check
+    /// [`ResultStore::stats`] afterwards for the hit/write tallies
+    /// (`repro sweep` prints them as the `skipped N cells` line).
+    pub fn with_results(mut self, results: Arc<ResultStore>) -> SweepRunner<'r> {
+        self.results = Some(results);
         self
     }
 
@@ -349,6 +450,7 @@ impl<'r> SweepRunner<'r> {
             None => Arc::new(TraceCache::new()),
         };
         let cache: &TraceCache = &owned_cache;
+        let results: Option<&ResultStore> = self.results.as_deref();
 
         let registry = self.registry;
         let progress = self.progress_every;
@@ -371,7 +473,8 @@ impl<'r> SweepRunner<'r> {
                         }
                         let ci = parallel_idx[i];
                         let rec = run_one(
-                            registry, sweep, &cells[ci], &worker_ctx, cache, progress,
+                            registry, sweep, &cells[ci], &worker_ctx, cache,
+                            results, progress,
                         );
                         if tx.send((ci, rec)).is_err() {
                             break; // receiver gone: sweep aborted
@@ -384,7 +487,9 @@ impl<'r> SweepRunner<'r> {
             // with the caller's ctx (owns the compiled model); traces
             // come from the same shared cache as the worker lane
             for &ci in &serial_idx {
-                let rec = run_one(registry, sweep, &cells[ci], ctx, cache, progress);
+                let rec = run_one(
+                    registry, sweep, &cells[ci], ctx, cache, results, progress,
+                );
                 let _ = tx.send((ci, rec));
             }
             drop(tx);
@@ -421,6 +526,7 @@ fn run_one(
     cell: &Cell,
     ctx: &StrategyCtx,
     cache: &TraceCache,
+    results: Option<&ResultStore>,
     progress_every: Option<u64>,
 ) -> CellRecord {
     let id = CellId {
@@ -434,6 +540,26 @@ fn run_one(
         "{}/{}@{}% r{}",
         id.workload, id.strategy, id.oversub, id.seed
     );
+
+    // memoized lane: artifact-free cells consult the result store
+    // before touching the trace cache (a hit costs one file read)
+    let store = results.filter(|_| {
+        registry
+            .get(&cell.strategy)
+            .map(|e| !e.needs_artifacts)
+            .unwrap_or(false)
+    });
+    let key = store.map(|_| {
+        cell_store_key(sweep, &cell.workload, &cell.strategy, cell.oversub, cell.seed)
+    });
+    if let (Some(store), Some(key)) = (store, key.as_deref()) {
+        match store.get(key) {
+            Ok(Some(hit)) => return CellRecord { cell: id, result: Ok(hit) },
+            Ok(None) => {}
+            Err(e) => eprintln!("[{label}] result store read failed: {e:#}"),
+        }
+    }
+
     let result = match &cell.workload {
         SweepWorkload::Scheduled(s) => run_scheduled_cell(
             registry, sweep, cell, s, &label, ctx, cache, progress_every,
@@ -443,6 +569,12 @@ fn run_one(
         ),
     }
     .map_err(|e| format!("{e:#}"));
+
+    if let (Some(store), Some(key), Ok(res)) = (store, key.as_deref(), &result) {
+        if let Err(e) = store.put(key, res) {
+            eprintln!("[{label}] result store write failed: {e:#}");
+        }
+    }
     CellRecord { cell: id, result }
 }
 

@@ -1,0 +1,240 @@
+//! `KeyedDir` — the keyed-flat-directory machinery shared by every
+//! content-addressed store in the crate.
+//!
+//! Both [`super::store::CorpusStore`] (`.uvmt` traces) and
+//! [`crate::results::ResultStore`] (`.cell` sweep results) are the same
+//! shape on disk: a flat directory of files named by the FNV-1a 64 hash
+//! of their key, written atomically (private temp file in the same
+//! directory, then `rename` into place) so a killed writer never
+//! publishes a torn entry. This module owns that shape once — path
+//! derivation, atomic writes, entry listing, and the gc sweep that
+//! reaps orphaned temp files and invalid entries — so both stores gc
+//! consistently and a third store costs only a codec.
+//!
+//! What a *valid* entry looks like is the caller's business: `gc` takes
+//! a `healthy` predicate (decode the `.uvmt` header; parse the result
+//! JSON and check its code version) and removes entries that fail it.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::util::hash::fnv1a64;
+
+/// Monotone counter making temp-file names unique across threads.
+static TMP_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// Temp files younger than this are presumed to belong to a live
+/// writer and are skipped by [`KeyedDir::gc_with_grace`]. A put writes
+/// and renames in well under a second; a temp file this old is an
+/// orphan.
+pub const GC_TMP_GRACE: Duration = Duration::from_secs(60);
+
+/// What a gc pass did.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct GcReport {
+    /// invalid entries and orphaned temp files removed
+    pub removed_files: usize,
+    pub reclaimed_bytes: u64,
+    /// healthy entries left in place
+    pub kept: usize,
+}
+
+/// A flat directory of `{fnv1a64(key):016x}.{ext}` files with atomic
+/// writes. Cheap to clone (it is just the path); all state is on disk.
+#[derive(Debug, Clone)]
+pub struct KeyedDir {
+    dir: PathBuf,
+    ext: &'static str,
+}
+
+impl KeyedDir {
+    /// Open (creating if needed) a keyed directory of `.{ext}` entries.
+    pub fn open(dir: impl Into<PathBuf>, ext: &'static str) -> Result<KeyedDir> {
+        let dir = dir.into();
+        fs::create_dir_all(&dir)
+            .with_context(|| format!("creating store dir {}", dir.display()))?;
+        Ok(KeyedDir { dir, ext })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// On-disk path an entry with this key lives at.
+    pub fn path_for(&self, key: &str) -> PathBuf {
+        self.dir
+            .join(format!("{:016x}.{}", fnv1a64(key.as_bytes()), self.ext))
+    }
+
+    /// Atomically publish `bytes` under `key`; returns the final path.
+    /// Overwrites an existing entry with the same key (idempotent puts).
+    pub fn write_atomic(&self, key: &str, bytes: &[u8]) -> Result<PathBuf> {
+        let path = self.path_for(key);
+        let tmp = self.dir.join(format!(
+            ".tmp-{}-{}.{}",
+            std::process::id(),
+            TMP_SEQ.fetch_add(1, Ordering::Relaxed),
+            self.ext
+        ));
+        fs::write(&tmp, bytes)
+            .with_context(|| format!("writing {}", tmp.display()))?;
+        // rename within one directory is atomic: readers see either the
+        // old complete file or the new complete file, never a torn one
+        fs::rename(&tmp, &path).with_context(|| {
+            let _ = fs::remove_file(&tmp);
+            format!("publishing {}", path.display())
+        })?;
+        Ok(path)
+    }
+
+    /// Read the entry stored under `key`; `Ok(None)` if absent.
+    pub fn read(&self, key: &str) -> Result<Option<Vec<u8>>> {
+        let path = self.path_for(key);
+        match fs::read(&path) {
+            Ok(b) => Ok(Some(b)),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(None),
+            Err(e) => {
+                Err(e).with_context(|| format!("reading {}", path.display()))
+            }
+        }
+    }
+
+    /// Paths of every non-temp `.{ext}` file, sorted for determinism.
+    pub fn entry_paths(&self) -> Result<Vec<PathBuf>> {
+        let mut out = Vec::new();
+        let rd = fs::read_dir(&self.dir)
+            .with_context(|| format!("listing {}", self.dir.display()))?;
+        for entry in rd {
+            let path = entry?.path();
+            if path.extension().and_then(|e| e.to_str()) != Some(self.ext) {
+                continue;
+            }
+            if path
+                .file_name()
+                .and_then(|n| n.to_str())
+                .is_some_and(|n| n.starts_with(".tmp-"))
+            {
+                continue;
+            }
+            out.push(path);
+        }
+        out.sort();
+        Ok(out)
+    }
+
+    /// Remove orphaned temp files and entries failing the `healthy`
+    /// predicate; keep everything else. Safe to run concurrently with
+    /// readers (removal is per-file; a reader either got the file
+    /// before or sees NotFound) and with writers: a temp file younger
+    /// than `grace` is assumed to belong to a live writer and left
+    /// alone.
+    pub fn gc_with_grace(
+        &self,
+        grace: Duration,
+        healthy: &mut dyn FnMut(&Path) -> bool,
+    ) -> Result<GcReport> {
+        let mut report = GcReport::default();
+        // orphaned temp files from killed writers
+        let rd = fs::read_dir(&self.dir)
+            .with_context(|| format!("listing {}", self.dir.display()))?;
+        for entry in rd {
+            let entry = entry?;
+            let path = entry.path();
+            let is_tmp = path
+                .file_name()
+                .and_then(|n| n.to_str())
+                .is_some_and(|n| n.starts_with(".tmp-"));
+            if is_tmp {
+                let meta = entry.metadata().ok();
+                let age = meta
+                    .as_ref()
+                    .and_then(|m| m.modified().ok())
+                    .and_then(|t| t.elapsed().ok());
+                // a fresh temp file is a live writer mid-put, not an
+                // orphan — only unknown or stale mtimes are fair game
+                if matches!(age, Some(a) if a < grace) {
+                    continue;
+                }
+                let bytes = meta.map(|m| m.len()).unwrap_or(0);
+                fs::remove_file(&path)
+                    .with_context(|| format!("removing {}", path.display()))?;
+                report.removed_files += 1;
+                report.reclaimed_bytes += bytes;
+            }
+        }
+        // entries the caller's codec rejects
+        for path in self.entry_paths()? {
+            if healthy(&path) {
+                report.kept += 1;
+            } else {
+                let bytes =
+                    fs::metadata(&path).map(|m| m.len()).unwrap_or(0);
+                fs::remove_file(&path)
+                    .with_context(|| format!("removing {}", path.display()))?;
+                report.removed_files += 1;
+                report.reclaimed_bytes += bytes;
+            }
+        }
+        Ok(report)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(tag: &str) -> KeyedDir {
+        let dir = std::env::temp_dir().join(format!(
+            "uvmio-keydir-test-{}-{tag}",
+            std::process::id()
+        ));
+        let _ = fs::remove_dir_all(&dir);
+        KeyedDir::open(dir, "blob").unwrap()
+    }
+
+    #[test]
+    fn atomic_write_read_and_listing() {
+        let kd = tmp_dir("rw");
+        assert!(kd.read("k1").unwrap().is_none());
+        let p1 = kd.write_atomic("k1", b"one").unwrap();
+        let p2 = kd.write_atomic("k1", b"one again").unwrap(); // idempotent path
+        assert_eq!(p1, p2);
+        kd.write_atomic("k2", b"two").unwrap();
+        assert_eq!(kd.read("k1").unwrap().unwrap(), b"one again");
+        assert_eq!(kd.entry_paths().unwrap().len(), 2);
+        // temp residue and foreign extensions never show up as entries
+        fs::write(kd.dir().join(".tmp-1-1.blob"), b"torn").unwrap();
+        fs::write(kd.dir().join("notes.txt"), b"other").unwrap();
+        assert_eq!(kd.entry_paths().unwrap().len(), 2);
+        let _ = fs::remove_dir_all(kd.dir());
+    }
+
+    #[test]
+    fn gc_reaps_temps_and_unhealthy_entries() {
+        let kd = tmp_dir("gc");
+        kd.write_atomic("good", b"healthy").unwrap();
+        kd.write_atomic("bad", b"corrupt").unwrap();
+        fs::write(kd.dir().join(".tmp-9-9.blob"), b"orphan").unwrap();
+        // the default grace protects the fresh temp file…
+        let rep = kd
+            .gc_with_grace(GC_TMP_GRACE, &mut |p| {
+                fs::read(p).map(|b| b == b"healthy").unwrap_or(false)
+            })
+            .unwrap();
+        assert_eq!(rep.removed_files, 1); // the corrupt entry only
+        assert_eq!(rep.kept, 1);
+        // …zero grace collects it too
+        let rep = kd
+            .gc_with_grace(Duration::ZERO, &mut |_| true)
+            .unwrap();
+        assert_eq!(rep.removed_files, 1);
+        assert_eq!(rep.kept, 1);
+        assert!(rep.reclaimed_bytes > 0);
+        assert_eq!(kd.read("good").unwrap().unwrap(), b"healthy");
+        let _ = fs::remove_dir_all(kd.dir());
+    }
+}

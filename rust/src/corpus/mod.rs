@@ -57,13 +57,15 @@
 pub mod cache;
 pub mod format;
 pub mod import;
+pub mod keydir;
 pub mod source;
 pub mod store;
 
 pub use cache::{CacheStats, TraceCache};
 pub use format::{TraceReader, UvmtMeta};
+pub use keydir::{GcReport, KeyedDir, GC_TMP_GRACE};
 pub use source::{
     parse_source, parse_tenants, CorpusSource, CsvSource, FaultLogSource,
     GeneratorSource, InterleaveSource, TraceSource,
 };
-pub use store::{CorpusEntry, CorpusStore, GcReport, GC_TMP_GRACE};
+pub use store::{CorpusEntry, CorpusStore};

@@ -14,10 +14,14 @@
 //! build` or a crashed sweep never publishes a torn `.uvmt`. `gc`
 //! sweeps up the two failure residues that can still accumulate:
 //! orphaned temp files and corrupt/unreadable `.uvmt` entries.
+//!
+//! The directory layout, atomic-write, and gc mechanics live in
+//! [`super::keydir::KeyedDir`], shared with
+//! [`crate::results::ResultStore`]; this module owns only the `.uvmt`
+//! codec and the corpus key schemes.
 
 use std::fs;
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicU64, Ordering};
 
 use anyhow::{bail, Context, Result};
 
@@ -26,14 +30,9 @@ use crate::trace::Trace;
 use crate::util::hash::fnv1a64;
 
 use super::format::{self, UvmtMeta};
+use super::keydir::KeyedDir;
 
-/// Monotone counter making temp-file names unique across threads.
-static TMP_SEQ: AtomicU64 = AtomicU64::new(0);
-
-/// Temp files younger than this are presumed to belong to a live
-/// writer and are skipped by [`CorpusStore::gc`]. A put writes and
-/// renames in well under a second; a temp file this old is an orphan.
-pub const GC_TMP_GRACE: std::time::Duration = std::time::Duration::from_secs(60);
+pub use super::keydir::{GcReport, GC_TMP_GRACE};
 
 /// One `.uvmt` entry as `list`/`gc` see it: the file, its size, and
 /// either its metadata or the reason it failed to parse.
@@ -45,34 +44,21 @@ pub struct CorpusEntry {
     pub meta: std::result::Result<UvmtMeta, String>,
 }
 
-/// What `gc` did.
-#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
-pub struct GcReport {
-    /// corrupt `.uvmt` files and orphaned temp files removed
-    pub removed_files: usize,
-    pub reclaimed_bytes: u64,
-    /// healthy entries left in place
-    pub kept: usize,
-}
-
 /// A content-addressed directory of `.uvmt` traces. Cheap to clone
 /// (it is just the directory path); all state lives on disk.
 #[derive(Debug, Clone)]
 pub struct CorpusStore {
-    dir: PathBuf,
+    kd: KeyedDir,
 }
 
 impl CorpusStore {
     /// Open (creating if needed) a corpus directory.
     pub fn open(dir: impl Into<PathBuf>) -> Result<CorpusStore> {
-        let dir = dir.into();
-        fs::create_dir_all(&dir)
-            .with_context(|| format!("creating corpus dir {}", dir.display()))?;
-        Ok(CorpusStore { dir })
+        Ok(CorpusStore { kd: KeyedDir::open(dir, "uvmt")? })
     }
 
     pub fn dir(&self) -> &Path {
-        &self.dir
+        self.kd.dir()
     }
 
     /// Store key of a generator-built trace: workload × scale × seed.
@@ -88,7 +74,7 @@ impl CorpusStore {
 
     /// On-disk path an entry with this key lives at.
     pub fn path_for(&self, key: &str) -> PathBuf {
-        self.dir.join(format!("{:016x}.uvmt", fnv1a64(key.as_bytes())))
+        self.kd.path_for(key)
     }
 
     /// Is an entry with this key present (no integrity check)?
@@ -99,33 +85,15 @@ impl CorpusStore {
     /// Atomically write `trace` under `key`; returns the final path.
     /// Overwrites an existing entry with the same key (idempotent puts).
     pub fn put(&self, key: &str, trace: &Trace) -> Result<PathBuf> {
-        let path = self.path_for(key);
         let bytes = format::encode(trace, key);
-        let tmp = self.dir.join(format!(
-            ".tmp-{}-{}.uvmt",
-            std::process::id(),
-            TMP_SEQ.fetch_add(1, Ordering::Relaxed)
-        ));
-        fs::write(&tmp, &bytes)
-            .with_context(|| format!("writing {}", tmp.display()))?;
-        // rename within one directory is atomic: readers see either the
-        // old complete file or the new complete file, never a torn one
-        fs::rename(&tmp, &path).with_context(|| {
-            let _ = fs::remove_file(&tmp);
-            format!("publishing {}", path.display())
-        })?;
-        Ok(path)
+        self.kd.write_atomic(key, &bytes)
     }
 
     /// Load the entry stored under `key`, verifying checksum and key.
     pub fn get(&self, key: &str) -> Result<Option<Trace>> {
         let path = self.path_for(key);
-        let bytes = match fs::read(&path) {
-            Ok(b) => b,
-            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
-            Err(e) => {
-                return Err(e).with_context(|| format!("reading {}", path.display()))
-            }
+        let Some(bytes) = self.kd.read(key)? else {
+            return Ok(None);
         };
         let (trace, stored_key) = format::decode(&bytes)
             .with_context(|| format!("decoding {}", path.display()))?;
@@ -215,25 +183,7 @@ impl CorpusStore {
 
     /// Paths of every non-temp `.uvmt` file, sorted for determinism.
     fn entry_paths(&self) -> Result<Vec<PathBuf>> {
-        let mut out = Vec::new();
-        let rd = fs::read_dir(&self.dir)
-            .with_context(|| format!("listing {}", self.dir.display()))?;
-        for entry in rd {
-            let path = entry?.path();
-            if path.extension().and_then(|e| e.to_str()) != Some("uvmt") {
-                continue;
-            }
-            if path
-                .file_name()
-                .and_then(|n| n.to_str())
-                .is_some_and(|n| n.starts_with(".tmp-"))
-            {
-                continue;
-            }
-            out.push(path);
-        }
-        out.sort();
-        Ok(out)
+        self.kd.entry_paths()
     }
 
     /// Every `.uvmt` entry (healthy or corrupt), sorted by file name
@@ -256,12 +206,8 @@ impl CorpusStore {
     /// Metadata for one key without decoding the access stream.
     pub fn stat(&self, key: &str) -> Result<Option<UvmtMeta>> {
         let path = self.path_for(key);
-        let bytes = match fs::read(&path) {
-            Ok(b) => b,
-            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
-            Err(e) => {
-                return Err(e).with_context(|| format!("reading {}", path.display()))
-            }
+        let Some(bytes) = self.kd.read(key)? else {
+            return Ok(None);
         };
         Ok(Some(format::stat(&bytes).with_context(|| {
             format!("stat {}", path.display())
@@ -278,50 +224,15 @@ impl CorpusStore {
     }
 
     /// [`CorpusStore::gc`] with an explicit temp-file grace period
-    /// (tests use zero to collect temp files immediately).
+    /// (tests use zero to collect temp files immediately). The sweep
+    /// itself is [`KeyedDir::gc_with_grace`]; an entry is healthy when
+    /// its `.uvmt` header parses.
     pub fn gc_with_grace(&self, grace: std::time::Duration) -> Result<GcReport> {
-        let mut report = GcReport::default();
-        // orphaned temp files from killed writers
-        let rd = fs::read_dir(&self.dir)
-            .with_context(|| format!("listing {}", self.dir.display()))?;
-        for entry in rd {
-            let entry = entry?;
-            let path = entry.path();
-            let is_tmp = path
-                .file_name()
-                .and_then(|n| n.to_str())
-                .is_some_and(|n| n.starts_with(".tmp-"));
-            if is_tmp {
-                let meta = entry.metadata().ok();
-                let age = meta
-                    .as_ref()
-                    .and_then(|m| m.modified().ok())
-                    .and_then(|t| t.elapsed().ok());
-                // a fresh temp file is a live writer mid-put, not an
-                // orphan — only unknown or stale mtimes are fair game
-                if matches!(age, Some(a) if a < grace) {
-                    continue;
-                }
-                let bytes = meta.map(|m| m.len()).unwrap_or(0);
-                fs::remove_file(&path)
-                    .with_context(|| format!("removing {}", path.display()))?;
-                report.removed_files += 1;
-                report.reclaimed_bytes += bytes;
-            }
-        }
-        // corrupt entries
-        for e in self.entries()? {
-            match e.meta {
-                Ok(_) => report.kept += 1,
-                Err(_) => {
-                    fs::remove_file(&e.path)
-                        .with_context(|| format!("removing {}", e.path.display()))?;
-                    report.removed_files += 1;
-                    report.reclaimed_bytes += e.bytes;
-                }
-            }
-        }
-        Ok(report)
+        self.kd.gc_with_grace(grace, &mut |path| {
+            fs::read(path)
+                .ok()
+                .is_some_and(|b| format::stat(&b).is_ok())
+        })
     }
 }
 

@@ -23,6 +23,7 @@ use crate::config::Scale;
 use crate::coordinator::RunSpec;
 use crate::corpus::{CorpusStore, TraceCache};
 use crate::predictor::{native_dims, FeatDims, NativeModel};
+use crate::results::{run_spec_key, ResultStore};
 use crate::runtime::{ModelBackend, PredictorKind, Runtime};
 use crate::sim::CostModelKind;
 use crate::trace::workloads::Workload;
@@ -38,6 +39,11 @@ pub struct ExpOpts {
     /// generated for one `repro exp` invocation are persisted as
     /// `.uvmt` and reloaded by later processes (`--corpus DIR`)
     pub corpus_dir: Option<PathBuf>,
+    /// memoize experiment grid cells in a [`ResultStore`]
+    /// (`--results DIR`): re-running a table/figure skips every
+    /// already-computed simulation (keys are content-fingerprinted, see
+    /// [`run_spec_key`])
+    pub results_dir: Option<PathBuf>,
     /// trim model-heavy experiments (fewer workloads / groups)
     pub quick: bool,
     /// interconnect timing model for every simulated cell
@@ -55,6 +61,7 @@ impl Default for ExpOpts {
             reports_dir: PathBuf::from("reports"),
             artifacts_dir: crate::runtime::Manifest::default_dir(),
             corpus_dir: None,
+            results_dir: None,
             quick: false,
             cost_model: CostModelKind::default(),
             predictor: PredictorKind::default(),
@@ -73,6 +80,9 @@ pub struct ExpContext {
     pub opts: ExpOpts,
     pub registry: StrategyRegistry,
     pub cache: TraceCache,
+    /// memoized cell results (`ExpOpts::results_dir`); shared with
+    /// `repro sweep --results` / `repro serve --results`
+    pub results: Option<Arc<ResultStore>>,
     runtime: Option<Runtime>,
     models: std::collections::HashMap<String, Arc<dyn ModelBackend>>,
 }
@@ -86,10 +96,15 @@ impl ExpContext {
             Some(dir) => TraceCache::with_store(CorpusStore::open(dir)?),
             None => TraceCache::new(),
         };
+        let results = match &opts.results_dir {
+            Some(dir) => Some(Arc::new(ResultStore::open(dir)?)),
+            None => None,
+        };
         Ok(ExpContext {
             opts,
             registry: StrategyRegistry::builtin(),
             cache,
+            results,
             runtime: None,
             models: std::collections::HashMap::new(),
         })
@@ -190,18 +205,46 @@ impl ExpContext {
     /// only when the strategy declares it needs one. The experiment-wide
     /// cost model is already on the [`RunSpec`] (see
     /// [`ExpContext::run_spec`]).
+    ///
+    /// With `ExpOpts::results_dir` set, cells are memoized under
+    /// [`run_spec_key`] (a content fingerprint of the exact trace plus
+    /// every simulation axis). Deterministic cells only: artifact-free
+    /// strategies always qualify; artifact-backed ones only on the
+    /// self-constructing `native` backend — under stub/PJRT nothing in
+    /// the key captures the loaded artifacts, so those always simulate.
     pub fn run_cell(
         &mut self,
         spec: &RunSpec<'_>,
         strategy: &str,
     ) -> Result<CellResult> {
         let needs = self.registry.get(strategy)?.needs_artifacts;
+        let key = match (&self.results, needs, self.opts.predictor) {
+            (None, _, _) => None,
+            (Some(_), false, _) => Some(run_spec_key(spec, strategy, None)),
+            (Some(_), true, PredictorKind::Native) => Some(run_spec_key(
+                spec,
+                strategy,
+                Some(self.opts.predictor.name()),
+            )),
+            (Some(_), true, _) => None,
+        };
+        if let (Some(store), Some(key)) = (&self.results, &key) {
+            if let Some(hit) = store.get(key)? {
+                return Ok(hit);
+            }
+        }
         let ctx = if needs {
             self.strategy_ctx()?
         } else {
             StrategyCtx::default()
         };
-        self.registry.run(strategy, spec, &ctx)
+        let res = self.registry.run(strategy, spec, &ctx)?;
+        if let (Some(store), Some(key)) = (&self.results, &key) {
+            if let Err(e) = store.put(key, &res) {
+                eprintln!("[{strategy}] result store write failed: {e:#}");
+            }
+        }
+        Ok(res)
     }
 }
 

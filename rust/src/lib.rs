@@ -43,6 +43,7 @@ pub mod corpus;
 pub mod exp;
 pub mod policy;
 pub mod predictor;
+pub mod results;
 pub mod runtime;
 pub mod sim;
 pub mod trace;

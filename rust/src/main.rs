@@ -7,8 +7,11 @@
 //! repro sweep --workloads all --strategies baseline,uvmsmart --oversub 100,125,150
 //! repro sweep --workloads sched:NW+Hotspot --schedule bandwidth-fair
 //! repro sweep --workloads sched:NW+Hotspot --schedule weighted:3,1 --cost-model coherent-link
+//! repro sweep --workloads all --results results --resume
 //! repro corpus build --workloads all --seeds 42,7
 //! repro corpus import faults.csv --name myapp
+//! repro results list --results results
+//! repro serve --addr 127.0.0.1:7077 --corpus corpus --results results
 //! repro accuracy --workload Hotspot --method ours
 //! repro info
 //! ```
@@ -23,9 +26,9 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use uvmio::api::{
-    apply_prediction_overhead, ConsoleSink, CsvSink, JsonlSink,
-    ProgressObserver, ScheduledWorkload, StrategyCtx, StrategyRegistry,
-    SweepRunner, SweepSink, SweepSpec, SweepWorkload,
+    apply_prediction_overhead, parse_sweep_workloads, ConsoleSink, CsvSink,
+    JsonlSink, ProgressObserver, StrategyCtx, StrategyRegistry, SweepRunner,
+    SweepSink, SweepSpec,
 };
 use uvmio::config::{Scale, SimConfig};
 use uvmio::coordinator::{
@@ -35,6 +38,7 @@ use uvmio::corpus::{self, CorpusStore, TraceCache};
 use uvmio::exp::{self, ExpContext, ExpOpts};
 use uvmio::predictor::features::samples_from_trace;
 use uvmio::predictor::{native_dims, NativeModel};
+use uvmio::results::{serve_stdin, serve_tcp, ResultStore, ServeShared};
 use uvmio::runtime::{Manifest, ModelBackend, PredictorKind, Runtime};
 use uvmio::sim::{Arena, CostModelKind, Session};
 use uvmio::trace::workloads::Workload;
@@ -47,7 +51,7 @@ repro — intelligent UVM oversubscription management (paper reproduction)
 USAGE:
   repro exp <id|all> [--quick] [--scale N] [--seed N] [--reports DIR]
             [--corpus DIR] [--cost-model table-v|coherent-link]
-            [--predictor native|stub|pjrt]
+            [--predictor native|stub|pjrt] [--results DIR]
       regenerate a paper table/figure (table1 table2 table3 table4 table6
       table7 fig3 fig4 fig5 fig6 fig10 fig11 fig12 fig13 fig14). With
       --corpus DIR the experiment trace cache is backed by the .uvmt
@@ -57,7 +61,10 @@ USAGE:
       paper's PCIe pricing). --predictor picks the model backend for
       model-backed cells, including the §V accuracy tables: the default
       `native` is the artifact-free pure-Rust predictor, so the whole
-      suite runs from a clean checkout; stub/pjrt use `make artifacts`
+      suite runs from a clean checkout; stub/pjrt use `make artifacts`.
+      --results DIR memoizes every deterministic grid cell, so
+      re-running a table/figure skips already-computed simulations
+      (store shared with `repro sweep --results`)
   repro simulate --workload W --strategy S [--oversub PCT] [--scale N] [--seed N]
               [--cost-model table-v|coherent-link] [--predictor B]
       one simulation cell; S is ANY registered strategy name
@@ -85,6 +92,7 @@ USAGE:
               [--scale N] [--reports DIR] [--artifacts DIR] [--corpus DIR]
               [--crash-at L=T,..] [--progress [N]] [--schedule POLICY]
               [--cost-model table-v|coherent-link] [--predictor B]
+              [--results DIR] [--resume]
       run the (workload × strategy × oversubscription × seed) grid in
       parallel across threads (artifact-backed strategies run on a
       serialized lane); streams a console table and writes
@@ -112,6 +120,33 @@ USAGE:
       sweeps. --predictor picks the backend for artifact-backed
       strategies; `intelligent-native` ignores it (always native) and
       runs on the parallel lane like the rule-based strategies.
+      --results DIR memoizes every artifact-free cell in a
+      content-addressed store: re-running an identical sweep skips all
+      of them (`skipped N cells`, byte-identical sweep.csv/jsonl), an
+      interrupted sweep continues from the cells already on disk, and
+      an incremental sweep costs only the new cells. --resume asserts
+      that intent: it requires --results and errors if the store
+      directory does not exist yet. Entries invalidate automatically on
+      code-version changes (`repro results gc` reaps them)
+  repro results list [--results DIR]
+      list memoized sweep cells (strategy, status, key), flagging stale
+      (other code version) and corrupt entries
+  repro results gc [--results DIR]
+      remove stale/corrupt entries and orphaned temp files
+  repro serve [--addr HOST:PORT | --stdin] [--corpus DIR] [--results DIR]
+              [--threads N]
+      long-running sweep service: newline-delimited JSON jobs in,
+      newline-delimited JSON events out (one `cell` line per finished
+      cell in grid order, then `job_done` with cells/errors/skipped;
+      malformed jobs get an `error` line and the server keeps going).
+      Default transport is TCP on 127.0.0.1:7077, one thread per
+      connection; --stdin serves a single stdin/stdout session for CI
+      and piping. All jobs and connections share one warm trace cache
+      (corpus-backed with --corpus) and, with --results, one memoized
+      result store — a cell any client ever computed is a lookup for
+      all of them. Job fields: workloads (required; the sweep selector
+      grammar), id, strategies, oversub, seeds, scale, cost_model,
+      schedule, crash_at ({\"150\":\"100000\"}), threads
   repro corpus build [--workloads all|W1,..] [--scale N] [--seeds N1,..]
               [--corpus DIR]
       generate builtin traces into the corpus (.uvmt, content-addressed)
@@ -153,6 +188,8 @@ fn real_main() -> anyhow::Result<()> {
         Some("simulate") => cmd_simulate(&args),
         Some("sweep") => cmd_sweep(&args),
         Some("corpus") => cmd_corpus(&args),
+        Some("results") => cmd_results(&args),
+        Some("serve") => cmd_serve(&args),
         Some("accuracy") => cmd_accuracy(&args),
         Some("info") => cmd_info(),
         _ => {
@@ -178,6 +215,9 @@ fn opts_from(args: &Args) -> anyhow::Result<ExpOpts> {
     if let Some(dir) = args.get("corpus") {
         opts.corpus_dir = Some(dir.into());
     }
+    if let Some(dir) = args.get("results") {
+        opts.results_dir = Some(dir.into());
+    }
     opts.cost_model = parse_cost_model(args)?;
     opts.predictor = parse_predictor(args)?;
     Ok(opts)
@@ -186,7 +226,7 @@ fn opts_from(args: &Args) -> anyhow::Result<ExpOpts> {
 fn cmd_exp(args: &Args) -> anyhow::Result<()> {
     args.reject_unknown(&[
         "quick", "scale", "seed", "reports", "artifacts", "corpus",
-        "cost-model", "predictor",
+        "cost-model", "predictor", "results",
     ])
     .map_err(anyhow::Error::msg)?;
     let id = args
@@ -201,6 +241,16 @@ fn cmd_exp(args: &Args) -> anyhow::Result<()> {
         eprintln!(
             "trace cache: {} built, {} loaded from corpus, {} persisted, {} shared hits",
             cs.builds, cs.store_loads, cs.store_writes, cs.hits
+        );
+    }
+    if let Some(rs) = &ctx.results {
+        let s = rs.stats();
+        eprintln!(
+            "results store: skipped {} cells (memoized), {} computed and \
+             persisted ({})",
+            s.hits,
+            s.writes,
+            rs.dir().display()
         );
     }
     Ok(())
@@ -494,40 +544,6 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-/// Workload selectors for a sweep: builtin names, corpus entries,
-/// `csv:`/`uvmlog:` files, `A+B` offline compositions (see
-/// `uvmio::corpus`), or `sched:A+B` scheduler-backed cells whose
-/// tenants run through the online `MultiTenantScheduler` under
-/// `schedule`.
-fn parse_sweep_workloads(
-    selector: &str,
-    store: Option<&CorpusStore>,
-    schedule: SchedulePolicy,
-) -> anyhow::Result<Vec<SweepWorkload>> {
-    if selector.trim().eq_ignore_ascii_case("all") {
-        return Ok(Workload::ALL.into_iter().map(SweepWorkload::from).collect());
-    }
-    let mut out = Vec::new();
-    for part in selector.split(',').map(str::trim).filter(|p| !p.is_empty()) {
-        if let Some(tenants) = part.strip_prefix("sched:") {
-            let tenants = corpus::parse_tenants(tenants, store)?;
-            out.push(SweepWorkload::from(ScheduledWorkload::new(
-                tenants,
-                schedule.clone(),
-            )));
-            continue;
-        }
-        match Workload::from_name(part) {
-            Some(w) => out.push(SweepWorkload::from(w)),
-            None => out.push(SweepWorkload::from(corpus::parse_source(part, store)?)),
-        }
-    }
-    if out.is_empty() {
-        anyhow::bail!("empty workload list");
-    }
-    Ok(out)
-}
-
 /// `--crash-at 150=100000,125=200000` → per-level thresholds.
 fn parse_crash_at(s: &str) -> anyhow::Result<Vec<(u32, u64)>> {
     let mut out = Vec::new();
@@ -551,7 +567,7 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
     args.reject_unknown(&[
         "workloads", "strategies", "oversub", "seeds", "threads", "scale",
         "reports", "artifacts", "corpus", "crash-at", "progress", "schedule",
-        "cost-model", "predictor",
+        "cost-model", "predictor", "results", "resume",
     ])
     .map_err(anyhow::Error::msg)?;
     let registry = StrategyRegistry::builtin();
@@ -625,6 +641,29 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
         None => TraceCache::new(),
     });
 
+    // memoized lane: --results stores every artifact-free cell;
+    // --resume only asserts the store already has cells to continue from
+    let results_store = match args.get("results") {
+        Some(dir) => {
+            if args.has("resume") && !std::path::Path::new(dir).is_dir() {
+                anyhow::bail!(
+                    "--resume: results dir {dir} does not exist — nothing to \
+                     resume from (drop --resume to start a fresh memoized sweep)"
+                );
+            }
+            Some(Arc::new(ResultStore::open(dir)?))
+        }
+        None => {
+            if args.has("resume") {
+                anyhow::bail!(
+                    "--resume needs --results DIR (the store holding the \
+                     already-computed cells)"
+                );
+            }
+            None
+        }
+    };
+
     let csv_path = reports.join("sweep.csv");
     let jsonl_path = reports.join("sweep.jsonl");
     let mut sinks: Vec<Box<dyn SweepSink>> = vec![
@@ -635,11 +674,14 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
     let progress = parse_progress(args)?;
 
     let t0 = Instant::now();
-    let records = SweepRunner::new(&registry)
+    let mut runner = SweepRunner::new(&registry)
         .with_threads(threads)
         .with_cache(Arc::clone(&cache))
-        .with_progress(progress)
-        .run(&sweep, &ctx, &mut sinks)?;
+        .with_progress(progress);
+    if let Some(rs) = &results_store {
+        runner = runner.with_results(Arc::clone(rs));
+    }
+    let records = runner.run(&sweep, &ctx, &mut sinks)?;
     let cs = cache.stats();
     println!(
         "{} cells in {:.2?} -> {} + {}",
@@ -652,6 +694,18 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
         "trace cache: {} built, {} loaded from corpus, {} persisted, {} shared hits",
         cs.builds, cs.store_loads, cs.store_writes, cs.hits
     );
+    if let Some(rs) = &results_store {
+        let s = rs.stats();
+        println!(
+            "results store: skipped {} cells (memoized), {} computed and \
+             persisted, {} stale, {} corrupt ({})",
+            s.hits,
+            s.writes,
+            s.stale,
+            s.corrupt,
+            rs.dir().display()
+        );
+    }
     let failed = records.iter().filter(|r| r.result.is_err()).count();
     if failed > 0 {
         anyhow::bail!("{failed} cell(s) failed — see the error column");
@@ -879,6 +933,111 @@ fn cmd_corpus(args: &Args) -> anyhow::Result<()> {
             "unknown corpus verb {other:?}; known: build import export list gc"
         ),
     }
+}
+
+fn cmd_results(args: &Args) -> anyhow::Result<()> {
+    let verb = args
+        .positional
+        .first()
+        .map(String::as_str)
+        .unwrap_or("list");
+    args.reject_unknown(&["results"]).map_err(anyhow::Error::msg)?;
+    let store = ResultStore::open(args.get_or("results", "results"))?;
+    match verb {
+        "list" => {
+            let entries = store.entries()?;
+            if entries.is_empty() {
+                println!("result store {} is empty", store.dir().display());
+                return Ok(());
+            }
+            println!("{:<18} {:>7} {:>6}  {}", "strategy", "status", "KiB", "key");
+            let (mut stale, mut corrupt) = (0usize, 0usize);
+            for e in &entries {
+                match &e.meta {
+                    Ok(m) => {
+                        let flag = if m.code_version != store.code_version() {
+                            stale += 1;
+                            "  [stale]"
+                        } else {
+                            ""
+                        };
+                        println!(
+                            "{:<18} {:>7} {:>6}  {}{}",
+                            m.strategy,
+                            m.status,
+                            e.bytes / 1024,
+                            m.key,
+                            flag
+                        );
+                    }
+                    Err(why) => {
+                        corrupt += 1;
+                        println!(
+                            "CORRUPT {} ({} bytes): {why}",
+                            e.path.display(),
+                            e.bytes
+                        );
+                    }
+                }
+            }
+            println!(
+                "{} entr{} in {} (code version {}){}",
+                entries.len(),
+                if entries.len() == 1 { "y" } else { "ies" },
+                store.dir().display(),
+                store.code_version(),
+                if stale + corrupt > 0 {
+                    format!(
+                        " — {stale} stale, {corrupt} corrupt; run \
+                         `repro results gc`"
+                    )
+                } else {
+                    String::new()
+                }
+            );
+            Ok(())
+        }
+        "gc" => {
+            let rep = store.gc()?;
+            println!(
+                "results gc: removed {} file(s), reclaimed {} KiB, kept {} entr{}",
+                rep.removed_files,
+                rep.reclaimed_bytes / 1024,
+                rep.kept,
+                if rep.kept == 1 { "y" } else { "ies" }
+            );
+            Ok(())
+        }
+        other => {
+            anyhow::bail!("unknown results verb {other:?}; known: list gc")
+        }
+    }
+}
+
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    args.reject_unknown(&["addr", "stdin", "corpus", "results", "threads"])
+        .map_err(anyhow::Error::msg)?;
+    let cache = Arc::new(match args.get("corpus") {
+        Some(dir) => TraceCache::with_store(CorpusStore::open(dir)?),
+        None => TraceCache::new(),
+    });
+    let mut shared = ServeShared::new(cache);
+    // a second handle on the same directory: selectors like
+    // `corpus:name` resolve against it while the cache above persists
+    if let Some(dir) = args.get("corpus") {
+        shared.corpus = Some(CorpusStore::open(dir)?);
+    }
+    if let Some(dir) = args.get("results") {
+        shared.results = Some(Arc::new(ResultStore::open(dir)?));
+    }
+    shared.threads =
+        args.get_parse("threads", 0usize).map_err(anyhow::Error::msg)?;
+    if args.has("stdin") {
+        let stdin = std::io::stdin();
+        let stdout = std::io::stdout();
+        return serve_stdin(&shared, stdin.lock(), stdout.lock());
+    }
+    serve_tcp(args.get_or("addr", "127.0.0.1:7077"), shared)
 }
 
 fn cmd_accuracy(args: &Args) -> anyhow::Result<()> {

@@ -18,18 +18,37 @@
 //! "Tree.+HPE" loses by orders of magnitude while "Demand.+HPE" is
 //! near-optimal. We reproduce the mechanism, not just the outcome.
 //!
-//! HPE is a reactive [`Evictor`] (pulled at `VictimNeeded` decisions;
-//! no `pre_evict` directives) — its chain rotation rides the
-//! composite's `Interval` event, exactly as it rode `on_interval`
-//! before the decision-API redesign.
+//! [`Hpe::new`] is the faithful reactive [`Evictor`] (pulled at
+//! `VictimNeeded` decisions; no `pre_evict` directives) — its chain
+//! rotation rides the composite's `Interval` event, exactly as it rode
+//! `on_interval` before the decision-API redesign.
+//!
+//! [`Hpe::proactive`] adds the directive-API extension the chain makes
+//! natural: pages aging out of the *middle* partition are exactly the
+//! pages HPE itself would evict first in regular mode, so instead of
+//! waiting for memory pressure to pull them one `VictimNeeded` at a
+//! time, the proactive variant queues them for **background drain**
+//! (`pre_evict` directives on the slack-scheduled transfer queue).
+//! Drain happens only while the classifier says *regular* — in
+//! irregular/thrashing phases the old partition is the protected warm
+//! set and draining it would be exactly the pathology HPE exists to
+//! avoid — and a still-warm candidate (touched since aging) is dropped
+//! rather than drained. Victim selection is untouched, so the variant
+//! degrades to reactive HPE whenever the drain is empty.
 
 use std::collections::{HashMap, VecDeque};
 
 use crate::config::PAGES_PER_BB;
+use crate::policy::MemView;
 use crate::sim::{DeviceMemory, Page};
 use crate::trace::Access;
 
 use super::Evictor;
+
+/// A drain candidate touched more than this many times since migration
+/// is considered warm and is dropped from the background drain (it can
+/// still be picked reactively at `VictimNeeded` time).
+const DRAIN_TOUCH_GUARD: u32 = 2;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 enum Mode {
@@ -52,6 +71,11 @@ pub struct Hpe {
     dense_threshold: u16,
     /// classified every interval from the accumulated block stats
     intervals: u64,
+    /// emit background-drain `pre_evict` directives ([`Hpe::proactive`])
+    proactive: bool,
+    /// pages aged out of `middle` during a regular phase, queued for
+    /// background drain (oldest first)
+    drain: VecDeque<Page>,
 }
 
 impl Hpe {
@@ -65,7 +89,20 @@ impl Hpe {
             mode: Mode::Regular,
             dense_threshold: (PAGES_PER_BB as u16) * 3 / 4, // 12 of 16
             intervals: 0,
+            proactive: false,
+            drain: VecDeque::new(),
         }
+    }
+
+    /// The pre-evict-aware variant (see the module docs): chain
+    /// rotation additionally queues regular-phase `old` arrivals for
+    /// background drain via `pre_evict` directives.
+    pub fn proactive() -> Hpe {
+        Hpe { proactive: true, ..Hpe::new() }
+    }
+
+    pub fn is_proactive(&self) -> bool {
+        self.proactive
     }
 
     pub fn mode_name(&self) -> &'static str {
@@ -147,10 +184,17 @@ impl Evictor for Hpe {
         self.intervals += 1;
         // age the chain: middle -> old, new -> middle
         let aged: Vec<Page> = self.middle.drain(..).collect();
-        self.old.extend(aged);
+        self.old.extend(aged.iter().copied());
         let fresh: Vec<Page> = self.new.drain(..).collect();
         self.middle.extend(fresh);
         self.classify();
+        // the pages that just became `old` are regular mode's first
+        // victims anyway — queue them for background drain instead of
+        // waiting for pressure. Classify first: an interval that flips
+        // to irregular must NOT schedule its aged warm set for drain.
+        if self.proactive && self.mode == Mode::Regular {
+            self.drain.extend(aged);
+        }
     }
 
     fn select_victim(&mut self, _mem: &DeviceMemory) -> Option<Page> {
@@ -176,6 +220,25 @@ impl Evictor for Hpe {
                     })
             }
         }
+    }
+
+    fn pre_evict(&mut self, _view: &MemView<'_>) -> Vec<Page> {
+        // drain only while the pattern is regular: in irregular mode
+        // the aged partitions are the protected warm set
+        if !self.proactive || self.mode != Mode::Regular {
+            return Vec::new();
+        }
+        let mut out = Vec::new();
+        while let Some(p) = self.drain.pop_front() {
+            match self.touches.get(&p) {
+                None => continue, // already evicted: stale entry
+                // warm by touch count: drop it from the drain
+                // (reactive selection can still take it later)
+                Some(&t) if t > DRAIN_TOUCH_GUARD => continue,
+                Some(_) => out.push(p),
+            }
+        }
+        out
     }
 }
 
@@ -269,5 +332,65 @@ mod tests {
         let hpe = count_misses(&seq, 6, &mut h);
         let lru = count_misses(&seq, 6, &mut Lru::new());
         assert!(hpe < lru, "HPE {hpe} vs LRU {lru}");
+    }
+
+    fn view(mem: &DeviceMemory) -> MemView<'_> {
+        MemView::new(mem, 0, 0, 0)
+    }
+
+    #[test]
+    fn proactive_drains_cold_pages_aged_out_of_middle() {
+        let mem = DeviceMemory::new(16);
+        let mut h = Hpe::proactive();
+        h.on_migrate(1, false);
+        h.on_interval(); // 1 -> middle
+        h.on_interval(); // 1 -> old: queued for drain (regular mode)
+        assert_eq!(h.pre_evict(&view(&mem)), vec![1]);
+        assert!(h.pre_evict(&view(&mem)).is_empty(), "drain consumed");
+    }
+
+    #[test]
+    fn warm_drain_candidates_are_skipped() {
+        let mem = DeviceMemory::new(16);
+        let mut h = Hpe::proactive();
+        h.on_migrate(1, false);
+        for _ in 0..=DRAIN_TOUCH_GUARD {
+            h.on_access(&acc(1), true); // warm: touches > guard
+        }
+        h.on_interval();
+        h.on_interval();
+        assert!(h.pre_evict(&view(&mem)).is_empty());
+    }
+
+    #[test]
+    fn evicted_pages_fall_out_of_the_drain() {
+        let mem = DeviceMemory::new(16);
+        let mut h = Hpe::proactive();
+        h.on_migrate(1, false);
+        h.on_migrate(2, false);
+        h.on_interval();
+        h.on_interval();
+        h.on_evict(1); // pressure got there first: stale drain entry
+        assert_eq!(h.pre_evict(&view(&mem)), vec![2]);
+    }
+
+    #[test]
+    fn reactive_and_irregular_modes_never_drain() {
+        let mem = DeviceMemory::new(64);
+        let mut reactive = Hpe::new();
+        reactive.on_migrate(1, false);
+        reactive.on_interval();
+        reactive.on_interval();
+        assert!(reactive.pre_evict(&view(&mem)).is_empty());
+
+        // sparse pattern -> irregular: the aged set is protected
+        let mut h = Hpe::proactive();
+        for bb in 0..8u64 {
+            h.on_migrate(bb * PAGES_PER_BB, false);
+        }
+        h.on_interval(); // classify: sparse -> irregular
+        h.on_interval(); // pages age to old while irregular
+        assert_eq!(h.mode, Mode::Irregular);
+        assert!(h.pre_evict(&view(&mem)).is_empty());
     }
 }

@@ -1,0 +1,74 @@
+//! # `uvmio::results` — memoized, resumable sweep results
+//!
+//! Every experiment in the paper is a grid of
+//! (workload × strategy × oversub × seed) cells, and each cell is a
+//! *pure function* of its inputs — the simulator is deterministic by
+//! house invariant. This module content-addresses those cell results
+//! the way [`crate::corpus`] content-addresses traces, so
+//!
+//! * re-running an identical sweep skips every cell (zero simulations,
+//!   zero trace builds, byte-identical sweep.csv/sweep.jsonl),
+//! * an interrupted sweep resumes from the cells already on disk
+//!   (`repro sweep --results DIR --resume`), and
+//! * an incremental sweep — one new strategy against a standing grid —
+//!   costs only the new column.
+//!
+//! ## The cell key
+//!
+//! A sweep cell is memoized under a composed identity string (hashed to
+//! the file name by [`crate::corpus::keydir::KeyedDir`]):
+//!
+//! ```text
+//! cell:<strategy>:o<oversub>:r<seed>:cm<cost-model>:crash<threshold|->:<trace-id>
+//! ```
+//!
+//! where `<trace-id>` is the trace-cache identity of the workload —
+//! `gen:<name>:s<scale>:r<seed>` for builtin generators,
+//! [`TraceSource::cache_key`](crate::corpus::TraceSource::cache_key)
+//! for corpus/CSV/fault-log sources, and
+//! `sched[<tenant-ids>]@<schedule>` for scheduler-backed cells (the
+//! schedule policy is part of the identity). `exp` table cells key on a
+//! *content* fingerprint of the exact trace instead
+//! ([`run_spec_key`]/[`trace_fingerprint`]) plus the predictor backend
+//! when the strategy is artifact-backed.
+//!
+//! ## Invalidation rules
+//!
+//! * **Code version.** Every entry records the
+//!   [`code_version`](crate::util::hash::code_version) fingerprint it
+//!   was computed under (crate version + simulation revision). An entry
+//!   with any other fingerprint is *stale*: it is never served, counts
+//!   in [`ResultStats::stale`], is recomputed and overwritten on the
+//!   next run, and `repro results gc` reaps it.
+//! * **Corruption.** An entry that fails to parse or decode is never
+//!   trusted: counted in [`ResultStats::corrupt`], recomputed,
+//!   gc-reaped. A same-hash *different-key* entry (an FNV collision)
+//!   errors loudly instead of serving the wrong cell.
+//! * **Errors are not cached.** Only `Ok` cells (including
+//!   deterministic *crashed* cells) are persisted; error cells are
+//!   recomputed every run.
+//! * **Artifact-backed strategies are not memoized.** The `intelligent`
+//!   strategy under the stub/PJRT runtimes depends on whatever model
+//!   artifacts the caller loaded — nothing in the key captures them, so
+//!   its cells always simulate. (`intelligent-native` self-constructs
+//!   deterministically and memoizes fine.)
+//! * **Named sources are identity-keyed, not content-keyed.** A
+//!   `corpus:name`/`csv:path` workload is identified the same way the
+//!   in-process [`TraceCache`](crate::corpus::TraceCache) identifies it
+//!   — by name/path. Re-importing *different content under the same
+//!   name* requires clearing the affected results (or bumping the
+//!   name), exactly like the trace cache.
+//!
+//! The serving layer ([`serve`]) turns this into a long-running
+//! product: `repro serve` accepts sweep specs as NDJSON jobs over TCP
+//! or stdin, streams per-cell results as they land, and shares one warm
+//! `TraceCache` + `ResultStore` across all jobs and clients.
+
+pub mod serve;
+pub mod store;
+
+pub use serve::{run_job, serve_stdin, serve_tcp, JobSpec, ServeShared};
+pub use store::{
+    run_spec_key, trace_fingerprint, ResultEntry, ResultMeta, ResultStats,
+    ResultStore,
+};

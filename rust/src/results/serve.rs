@@ -1,0 +1,479 @@
+//! `repro serve` — the long-running sweep service.
+//!
+//! Jobs are newline-delimited JSON sweep specs; responses are
+//! newline-delimited JSON events streamed as cells land (the runner's
+//! reorder buffer keeps them in grid order):
+//!
+//! ```text
+//! → {"id":"j1","workloads":"NW,Hotspot","strategies":"baseline,demand-lru",
+//!    "oversub":[125],"seeds":[42]}
+//! ← {"type":"cell","job":"j1","workload":"NW","strategy":"baseline",...}
+//! ← {"type":"cell","job":"j1",...}
+//! ← {"type":"job_done","job":"j1","cells":"4","errors":"0","skipped":"0"}
+//! ```
+//!
+//! A malformed or failing job produces one `{"type":"error",...}` line
+//! and the server moves on to the next job — a bad client never takes
+//! the service down. Two transports share the handler:
+//! [`serve_tcp`] (std-only `TcpListener`, one thread per connection)
+//! and [`serve_stdin`] (stdin → stdout, for CI and piping). Every
+//! connection and every job shares ONE warm [`TraceCache`] and ONE
+//! [`ResultStore`], so a cell any client ever computed is a lookup for
+//! all of them.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpListener;
+use std::sync::Arc;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::api::{
+    parse_sweep_workloads, record_to_json, CellRecord, StrategyCtx,
+    StrategyRegistry, SweepRunner, SweepSink, SweepSpec,
+};
+use crate::config::Scale;
+use crate::coordinator::SchedulePolicy;
+use crate::corpus::{CorpusStore, TraceCache};
+use crate::predictor::native::{native_dims, NativeModel};
+use crate::runtime::ModelBackend;
+use crate::sim::CostModelKind;
+use crate::util::json::Json;
+
+use super::ResultStore;
+
+/// Everything one server process shares across jobs and connections.
+#[derive(Clone)]
+pub struct ServeShared {
+    pub registry: Arc<StrategyRegistry>,
+    pub cache: Arc<TraceCache>,
+    pub results: Option<Arc<ResultStore>>,
+    /// corpus backing `corpus:`/named workload selectors
+    pub corpus: Option<CorpusStore>,
+    /// worker threads per job; 0 = the runner's default
+    pub threads: usize,
+}
+
+impl ServeShared {
+    pub fn new(cache: Arc<TraceCache>) -> ServeShared {
+        ServeShared {
+            registry: Arc::new(StrategyRegistry::builtin()),
+            cache,
+            results: None,
+            corpus: None,
+            threads: 0,
+        }
+    }
+}
+
+/// One sweep job as submitted on the wire. Only `workloads` is
+/// required; everything else has the CLI's defaults.
+#[derive(Debug, Clone)]
+pub struct JobSpec {
+    pub id: String,
+    pub workloads: String,
+    pub strategies: String,
+    pub oversub: Vec<u32>,
+    pub seeds: Vec<u64>,
+    pub scale: u32,
+    pub cost_model: CostModelKind,
+    pub schedule: SchedulePolicy,
+    /// per-oversub-level crash thresholds, `{"150":"100000"}` on the wire
+    pub crash_at: Vec<(u32, u64)>,
+    pub threads: usize,
+}
+
+/// Accept both JSON numbers and strings for integer fields (seeds can
+/// exceed 2^53, where JSON numbers stop being exact).
+fn num_u64(v: &Json) -> Option<u64> {
+    match v {
+        Json::Num(n) if n.fract() == 0.0 && *n >= 0.0 => Some(*n as u64),
+        Json::Str(s) => s.parse().ok(),
+        _ => None,
+    }
+}
+
+fn num_list(doc: &Json, key: &str) -> Result<Option<Vec<u64>>> {
+    let Some(v) = doc.get(key) else { return Ok(None) };
+    let arr = v
+        .as_arr()
+        .ok_or_else(|| anyhow!("job field '{key}' must be an array"))?;
+    arr.iter()
+        .map(|x| {
+            num_u64(x)
+                .ok_or_else(|| anyhow!("job field '{key}': invalid integer"))
+        })
+        .collect::<Result<Vec<u64>>>()
+        .map(Some)
+}
+
+impl JobSpec {
+    /// Parse one job line; `seq` numbers jobs that carry no `id`.
+    pub fn parse(line: &str, seq: usize) -> Result<JobSpec> {
+        let doc = Json::parse(line)
+            .map_err(|e| anyhow!("malformed job JSON: {e}"))?;
+        let workloads = doc
+            .get("workloads")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("job needs a 'workloads' selector"))?
+            .to_string();
+        let cost_model = match doc.get("cost_model").and_then(Json::as_str) {
+            None => CostModelKind::default(),
+            Some(s) => CostModelKind::from_name(s)
+                .ok_or_else(|| anyhow!("unknown cost_model {s:?}"))?,
+        };
+        let schedule = match doc.get("schedule").and_then(Json::as_str) {
+            None => SchedulePolicy::default(),
+            Some(s) => SchedulePolicy::from_name(s)
+                .ok_or_else(|| anyhow!("unknown schedule {s:?}"))?,
+        };
+        let mut crash_at = Vec::new();
+        if let Some(obj) = doc.get("crash_at") {
+            let map = obj
+                .as_obj()
+                .ok_or_else(|| anyhow!("'crash_at' must be an object"))?;
+            for (level, t) in map {
+                crash_at.push((
+                    level.parse::<u32>().map_err(|_| {
+                        anyhow!("crash_at level {level:?} is not an integer")
+                    })?,
+                    num_u64(t).ok_or_else(|| {
+                        anyhow!("crash_at threshold for {level:?} is invalid")
+                    })?,
+                ));
+            }
+        }
+        Ok(JobSpec {
+            id: doc
+                .get("id")
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .unwrap_or_else(|| format!("job-{seq}")),
+            workloads,
+            strategies: doc
+                .get("strategies")
+                .and_then(Json::as_str)
+                .unwrap_or("baseline")
+                .to_string(),
+            oversub: num_list(&doc, "oversub")?
+                .map(|v| v.into_iter().map(|x| x as u32).collect())
+                .unwrap_or_else(|| vec![125]),
+            seeds: num_list(&doc, "seeds")?.unwrap_or_else(|| vec![42]),
+            scale: doc
+                .get("scale")
+                .and_then(num_u64)
+                .map(|v| v as u32)
+                .unwrap_or(1),
+            cost_model,
+            schedule,
+            crash_at,
+            threads: doc
+                .get("threads")
+                .and_then(num_u64)
+                .map(|v| v as usize)
+                .unwrap_or(0),
+        })
+    }
+}
+
+/// Streams each finished cell as one NDJSON line, flushed immediately
+/// so clients see progress while the grid is still running.
+struct JobSink<'w> {
+    out: &'w mut dyn Write,
+    job: String,
+}
+
+impl SweepSink for JobSink<'_> {
+    fn on_cell(&mut self, rec: &CellRecord) -> Result<()> {
+        let mut v = record_to_json(rec);
+        if let Json::Obj(m) = &mut v {
+            m.insert("type".into(), Json::Str("cell".into()));
+            m.insert("job".into(), Json::Str(self.job.clone()));
+        }
+        writeln!(self.out, "{}", v.compact())?;
+        self.out.flush()?;
+        Ok(())
+    }
+}
+
+fn event_line(kind: &str, job: Option<&str>, extra: &[(&str, String)]) -> String {
+    let mut m = std::collections::BTreeMap::new();
+    m.insert("type".to_string(), Json::Str(kind.to_string()));
+    if let Some(id) = job {
+        m.insert("job".to_string(), Json::Str(id.to_string()));
+    }
+    for (k, v) in extra {
+        m.insert(k.to_string(), Json::Str(v.clone()));
+    }
+    Json::Obj(m).compact()
+}
+
+/// [`StrategyCtx`] for a job: artifact-backed strategies run on the
+/// self-constructing native predictor (a server has no artifact dir).
+fn ctx_for(
+    registry: &StrategyRegistry,
+    strategies: &[String],
+) -> Result<StrategyCtx> {
+    let needs = strategies
+        .iter()
+        .any(|s| registry.get(s).map(|e| e.needs_artifacts).unwrap_or(false));
+    if needs {
+        let model: Arc<dyn ModelBackend> =
+            Arc::new(NativeModel::for_model("predictor")?);
+        Ok(StrategyCtx::with_model(model, native_dims()))
+    } else {
+        Ok(StrategyCtx::default())
+    }
+}
+
+/// Run one job, streaming cells to `out`; ends with a `job_done` line.
+/// Per-cell failures become error cells in the stream (the sweep keeps
+/// going); only spec-level problems (unknown strategy, bad selector)
+/// error out of here.
+pub fn run_job(
+    shared: &ServeShared,
+    job: &JobSpec,
+    out: &mut dyn Write,
+) -> Result<usize> {
+    let workloads = parse_sweep_workloads(
+        &job.workloads,
+        shared.corpus.as_ref(),
+        job.schedule.clone(),
+    )?;
+    let strategies = shared.registry.resolve_list(&job.strategies)?;
+    let ctx = ctx_for(&shared.registry, &strategies)?;
+    let mut sweep = SweepSpec::new(workloads, strategies)
+        .with_oversub(job.oversub.clone())
+        .with_seeds(job.seeds.clone())
+        .with_scale(Scale { factor: job.scale })
+        .with_cost_model(job.cost_model);
+    for &(level, t) in &job.crash_at {
+        sweep = sweep.with_crash_threshold_at(level, t);
+    }
+
+    let before = shared
+        .results
+        .as_ref()
+        .map(|s| s.stats())
+        .unwrap_or_default();
+    let threads = if job.threads > 0 { job.threads } else { shared.threads };
+    let records = {
+        let mut sinks: Vec<Box<dyn SweepSink + '_>> =
+            vec![Box::new(JobSink { out, job: job.id.clone() })];
+        let mut runner = SweepRunner::new(&shared.registry)
+            .with_threads(threads)
+            .with_cache(Arc::clone(&shared.cache));
+        if let Some(store) = &shared.results {
+            runner = runner.with_results(Arc::clone(store));
+        }
+        runner.run(&sweep, &ctx, &mut sinks)?
+    };
+    let errors = records.iter().filter(|r| r.result.is_err()).count();
+    let skipped = shared
+        .results
+        .as_ref()
+        .map(|s| s.stats().hits - before.hits)
+        .unwrap_or(0);
+    writeln!(
+        out,
+        "{}",
+        event_line(
+            "job_done",
+            Some(&job.id),
+            &[
+                ("cells", records.len().to_string()),
+                ("errors", errors.to_string()),
+                ("skipped", skipped.to_string()),
+            ],
+        )
+    )?;
+    out.flush()?;
+    Ok(records.len())
+}
+
+/// Handle one request line: parse, run, and on any failure emit a
+/// single `error` event instead of propagating (the connection and the
+/// server survive bad jobs). Returns `Err` only when the *client* is
+/// gone (write failure).
+fn handle_line(
+    shared: &ServeShared,
+    seq: usize,
+    line: &str,
+    out: &mut dyn Write,
+) -> Result<()> {
+    let line = line.trim();
+    if line.is_empty() {
+        return Ok(());
+    }
+    let outcome = JobSpec::parse(line, seq)
+        .and_then(|job| run_job(shared, &job, out).map(|_| job.id));
+    if let Err(e) = outcome {
+        let id = JobSpec::parse(line, seq).map(|j| j.id).ok();
+        writeln!(
+            out,
+            "{}",
+            event_line("error", id.as_deref(), &[(
+                "error",
+                format!("{e:#}")
+            )])
+        )
+        .context("writing error event")?;
+        out.flush().context("flushing error event")?;
+    }
+    Ok(())
+}
+
+/// The `--stdin` transport: read jobs from `input`, stream events to
+/// `out`, return at EOF. This is what `repro serve --stdin` runs and
+/// what CI pipes one-shot jobs through.
+pub fn serve_stdin(
+    shared: &ServeShared,
+    input: impl BufRead,
+    mut out: impl Write,
+) -> Result<()> {
+    for (seq, line) in input.lines().enumerate() {
+        let line = line.context("reading job line")?;
+        handle_line(shared, seq, &line, &mut out)?;
+    }
+    Ok(())
+}
+
+/// The TCP transport: bind `addr`, accept forever, one thread per
+/// connection, every connection sharing the warm caches in `shared`.
+pub fn serve_tcp(addr: &str, shared: ServeShared) -> Result<()> {
+    let listener = TcpListener::bind(addr)
+        .with_context(|| format!("binding {addr}"))?;
+    eprintln!(
+        "repro serve: listening on {} (newline-delimited JSON jobs; \
+         see USAGE)",
+        listener.local_addr()?
+    );
+    let shared = Arc::new(shared);
+    for (conn_id, stream) in listener.incoming().enumerate() {
+        let stream = match stream {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("repro serve: accept failed: {e}");
+                continue;
+            }
+        };
+        let shared = Arc::clone(&shared);
+        std::thread::spawn(move || {
+            let peer = stream
+                .peer_addr()
+                .map(|a| a.to_string())
+                .unwrap_or_else(|_| "?".into());
+            let reader = match stream.try_clone() {
+                Ok(s) => BufReader::new(s),
+                Err(e) => {
+                    eprintln!("repro serve: clone failed for {peer}: {e}");
+                    return;
+                }
+            };
+            let mut writer = stream;
+            for (i, line) in reader.lines().enumerate() {
+                let Ok(line) = line else { break };
+                // job seqs unique per connection: conn id × 1M + line
+                let seq = conn_id * 1_000_000 + i;
+                if handle_line(&shared, seq, &line, &mut writer).is_err() {
+                    break; // client hung up mid-stream
+                }
+            }
+        });
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn shared() -> ServeShared {
+        let mut s = ServeShared::new(Arc::new(TraceCache::new()));
+        s.threads = 1;
+        s
+    }
+
+    #[test]
+    fn job_spec_defaults_and_overrides() {
+        let j = JobSpec::parse(r#"{"workloads":"NW"}"#, 3).unwrap();
+        assert_eq!(j.id, "job-3");
+        assert_eq!(j.strategies, "baseline");
+        assert_eq!(j.oversub, vec![125]);
+        assert_eq!(j.seeds, vec![42]);
+        assert_eq!(j.scale, 1);
+        assert_eq!(j.cost_model, CostModelKind::TableV);
+
+        let j = JobSpec::parse(
+            r#"{"id":"x","workloads":"NW,Hotspot","strategies":"all",
+                "oversub":[110,125],"seeds":["9007199254740993"],
+                "scale":2,"cost_model":"coherent-link",
+                "schedule":"round-robin","crash_at":{"150":"1000"},
+                "threads":2}"#,
+            0,
+        )
+        .unwrap();
+        assert_eq!(j.id, "x");
+        assert_eq!(j.oversub, vec![110, 125]);
+        assert_eq!(j.seeds, vec![9_007_199_254_740_993]); // > 2^53, exact
+        assert_eq!(j.cost_model, CostModelKind::CoherentLink);
+        assert_eq!(j.crash_at, vec![(150, 1000)]);
+        assert_eq!(j.threads, 2);
+
+        assert!(JobSpec::parse("{}", 0).is_err()); // workloads required
+        assert!(JobSpec::parse("not json", 0).is_err());
+    }
+
+    #[test]
+    fn stdin_round_trip_streams_cells_and_survives_bad_jobs() {
+        let input = "garbage line\n\
+             {\"id\":\"t\",\"workloads\":\"NW\",\"strategies\":\
+             \"baseline,demand-lru\",\"oversub\":[125],\"seeds\":[42]}\n";
+        let mut out = Vec::new();
+        serve_stdin(&shared(), input.as_bytes(), &mut out).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        // 1 error (bad job) + 2 cells + 1 job_done
+        assert!(lines[0].contains("\"type\":\"error\""));
+        assert_eq!(
+            lines.iter().filter(|l| l.contains("\"type\":\"cell\"")).count(),
+            2
+        );
+        let done = lines.last().unwrap();
+        assert!(done.contains("\"type\":\"job_done\""));
+        assert!(done.contains("\"job\":\"t\""));
+        assert!(done.contains("\"cells\":\"2\""));
+        assert!(done.contains("\"errors\":\"0\""));
+    }
+
+    #[test]
+    fn second_identical_job_is_fully_memoized() {
+        let dir = std::env::temp_dir().join(format!(
+            "uvmio-serve-test-{}-memo",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut sh = shared();
+        sh.results = Some(Arc::new(ResultStore::open(&dir).unwrap()));
+        let job = "{\"id\":\"m\",\"workloads\":\"NW\",\
+                   \"strategies\":\"baseline\"}\n";
+        let input = format!("{job}{job}");
+        let mut out = Vec::new();
+        serve_stdin(&sh, input.as_bytes(), &mut out).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        let dones: Vec<&str> = text
+            .lines()
+            .filter(|l| l.contains("\"type\":\"job_done\""))
+            .collect();
+        assert_eq!(dones.len(), 2);
+        assert!(dones[0].contains("\"skipped\":\"0\""));
+        assert!(dones[1].contains("\"skipped\":\"1\""));
+        // and the two cell lines are byte-identical
+        let cells: Vec<&str> = text
+            .lines()
+            .filter(|l| l.contains("\"type\":\"cell\""))
+            .collect();
+        assert_eq!(cells.len(), 2);
+        assert_eq!(cells[0], cells[1]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,655 @@
+//! `ResultStore` — the content-addressed on-disk half of `results`.
+//!
+//! One `.cell` file per memoized cell, living in a
+//! [`KeyedDir`](crate::corpus::keydir::KeyedDir) exactly like the trace
+//! corpus: file name = FNV-1a 64 of the cell key, atomic
+//! temp-plus-rename writes, `entries`/`stat`/`gc`. The payload is a
+//! small JSON document (the crate's own `util::json`) holding the cell
+//! key, the code-version fingerprint it was computed under, and a
+//! lossless encoding of the full [`CellResult`] — every `Stats`
+//! counter, both page sets, and the per-tenant attribution rows — so a
+//! memoized cell reproduces the CSV/JSONL sinks byte-for-byte.
+//!
+//! All `u64` counters are encoded as JSON *strings*: the sweep sinks
+//! print them with `u64::to_string`, and routing them through an `f64`
+//! would round values above 2^53 and break the byte-identical
+//! guarantee.
+
+use std::collections::{BTreeMap, HashSet};
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::api::CellResult;
+use crate::coordinator::{RunSpec, TenantReport};
+use crate::corpus::keydir::{GcReport, KeyedDir, GC_TMP_GRACE};
+use crate::corpus::format;
+use crate::sim::{Page, RunOutcome, Stats};
+use crate::trace::Trace;
+use crate::util::hash::{code_version, fnv1a64};
+use crate::util::json::Json;
+
+/// Payload schema tag; distinct from the code-version fingerprint
+/// (schema = how a cell is *encoded*, code version = what *computed* it).
+const SCHEMA: &str = "cell/v1";
+
+/// Hit/miss accounting, mirroring `corpus::CacheStats`: after any run,
+/// `hits` is exactly the number of simulations skipped and `writes` the
+/// number of fresh cells persisted.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ResultStats {
+    pub lookups: u64,
+    /// valid entries returned without simulating
+    pub hits: u64,
+    /// entries ignored because their code-version fingerprint differs
+    pub stale: u64,
+    /// entries ignored because they failed to parse/decode
+    pub corrupt: u64,
+    /// fresh results persisted
+    pub writes: u64,
+}
+
+impl ResultStats {
+    pub fn misses(&self) -> u64 {
+        self.lookups - self.hits
+    }
+}
+
+/// Header of one stored cell, as `list`/`stat` see it.
+#[derive(Debug, Clone)]
+pub struct ResultMeta {
+    pub key: String,
+    pub code_version: String,
+    pub strategy: String,
+    /// `"ok"` or `"crashed"` (error cells are never memoized)
+    pub status: String,
+}
+
+/// One `.cell` entry: the file, its size, and either its header or the
+/// reason it failed to parse.
+#[derive(Debug, Clone)]
+pub struct ResultEntry {
+    pub path: PathBuf,
+    pub bytes: u64,
+    pub meta: std::result::Result<ResultMeta, String>,
+}
+
+/// A content-addressed directory of memoized sweep-cell results.
+/// Shared across threads behind an `Arc` (all counters are atomic; the
+/// directory itself is append-only with atomic publishes).
+#[derive(Debug)]
+pub struct ResultStore {
+    kd: KeyedDir,
+    code_version: String,
+    lookups: AtomicU64,
+    hits: AtomicU64,
+    stale: AtomicU64,
+    corrupt: AtomicU64,
+    writes: AtomicU64,
+}
+
+impl ResultStore {
+    /// Open (creating if needed) a result directory, stamped with the
+    /// running binary's [`code_version`].
+    pub fn open(dir: impl Into<PathBuf>) -> Result<ResultStore> {
+        Ok(ResultStore {
+            kd: KeyedDir::open(dir, "cell")?,
+            code_version: code_version(),
+            lookups: AtomicU64::new(0),
+            hits: AtomicU64::new(0),
+            stale: AtomicU64::new(0),
+            corrupt: AtomicU64::new(0),
+            writes: AtomicU64::new(0),
+        })
+    }
+
+    /// Override the code-version fingerprint (tests forge stale entries
+    /// with this; production stores always use [`code_version`]).
+    pub fn with_code_version(mut self, v: impl Into<String>) -> ResultStore {
+        self.code_version = v.into();
+        self
+    }
+
+    pub fn code_version(&self) -> &str {
+        &self.code_version
+    }
+
+    pub fn dir(&self) -> &Path {
+        self.kd.dir()
+    }
+
+    /// On-disk path an entry with this key lives at.
+    pub fn path_for(&self, key: &str) -> PathBuf {
+        self.kd.path_for(key)
+    }
+
+    /// Is an entry with this key present (no validity check)?
+    pub fn contains(&self, key: &str) -> bool {
+        self.path_for(key).exists()
+    }
+
+    /// Point-in-time counter snapshot.
+    pub fn stats(&self) -> ResultStats {
+        ResultStats {
+            lookups: self.lookups.load(Ordering::Relaxed),
+            hits: self.hits.load(Ordering::Relaxed),
+            stale: self.stale.load(Ordering::Relaxed),
+            corrupt: self.corrupt.load(Ordering::Relaxed),
+            writes: self.writes.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Atomically persist `result` under `key`; returns the final path.
+    /// Idempotent: same key overwrites (the result is deterministic, so
+    /// concurrent writers of one cell publish identical bytes).
+    pub fn put(&self, key: &str, result: &CellResult) -> Result<PathBuf> {
+        let doc = encode_cell(key, &self.code_version, result);
+        let path = self.kd.write_atomic(key, doc.as_bytes())?;
+        self.writes.fetch_add(1, Ordering::Relaxed);
+        Ok(path)
+    }
+
+    /// Look up the cell memoized under `key`. `Ok(None)` on a miss —
+    /// absent, corrupt (counted, recompute, never trust), or stale
+    /// (computed under a different code version). A same-hash
+    /// *different-key* file is a genuine FNV collision and errors
+    /// loudly rather than serving the wrong cell.
+    pub fn get(&self, key: &str) -> Result<Option<CellResult>> {
+        self.lookups.fetch_add(1, Ordering::Relaxed);
+        let Some(bytes) = self.kd.read(key)? else {
+            return Ok(None);
+        };
+        let parsed = std::str::from_utf8(&bytes)
+            .map_err(|e| e.to_string())
+            .and_then(Json::parse);
+        let doc = match parsed {
+            Ok(doc) => doc,
+            Err(_) => {
+                self.corrupt.fetch_add(1, Ordering::Relaxed);
+                return Ok(None);
+            }
+        };
+        let stored_key = doc.get("key").and_then(Json::as_str).unwrap_or("");
+        if !stored_key.is_empty() && stored_key != key {
+            bail!(
+                "result key collision at {}: wanted '{key}', file holds \
+                 '{stored_key}'",
+                self.path_for(key).display()
+            );
+        }
+        match decode_cell(&doc) {
+            Ok((meta, result)) => {
+                if meta.key != key || meta.code_version != self.code_version {
+                    // wrong fingerprint (or unreadable key): recompute
+                    self.stale.fetch_add(1, Ordering::Relaxed);
+                    return Ok(None);
+                }
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Ok(Some(result))
+            }
+            Err(_) => {
+                self.corrupt.fetch_add(1, Ordering::Relaxed);
+                Ok(None)
+            }
+        }
+    }
+
+    /// Header of the entry under `key` without decoding the result.
+    pub fn stat(&self, key: &str) -> Result<Option<ResultMeta>> {
+        let Some(bytes) = self.kd.read(key)? else {
+            return Ok(None);
+        };
+        let meta = parse_meta(&bytes)
+            .map_err(|e| anyhow!("{e}"))
+            .with_context(|| format!("stat {}", self.path_for(key).display()))?;
+        Ok(Some(meta))
+    }
+
+    /// Every `.cell` entry (healthy or not), sorted by file name.
+    pub fn entries(&self) -> Result<Vec<ResultEntry>> {
+        let mut out = Vec::new();
+        for path in self.kd.entry_paths()? {
+            let (bytes, meta) = match fs::read(&path) {
+                Ok(b) => (b.len() as u64, parse_meta(&b)),
+                Err(e) => (0, Err(format!("unreadable: {e}"))),
+            };
+            out.push(ResultEntry { path, bytes, meta });
+        }
+        Ok(out)
+    }
+
+    /// Remove orphaned temp files, corrupt entries, and stale entries
+    /// (wrong code version — they can never be served again); keep
+    /// everything healthy. Same sweep and the same live-writer grace
+    /// period as `repro corpus gc` ([`KeyedDir::gc_with_grace`]).
+    pub fn gc(&self) -> Result<GcReport> {
+        self.gc_with_grace(GC_TMP_GRACE)
+    }
+
+    /// [`ResultStore::gc`] with an explicit temp-file grace period.
+    pub fn gc_with_grace(&self, grace: Duration) -> Result<GcReport> {
+        let current = self.code_version.clone();
+        self.kd.gc_with_grace(grace, &mut |path| {
+            fs::read(path)
+                .ok()
+                .and_then(|b| parse_meta(&b).ok())
+                .is_some_and(|m| m.code_version == current)
+        })
+    }
+}
+
+/// Parse just the header fields of a stored cell document.
+fn parse_meta(bytes: &[u8]) -> std::result::Result<ResultMeta, String> {
+    let doc = std::str::from_utf8(bytes)
+        .map_err(|e| e.to_string())
+        .and_then(Json::parse)?;
+    if doc.get("schema").and_then(Json::as_str) != Some(SCHEMA) {
+        return Err(format!("not a {SCHEMA} document"));
+    }
+    let str_field = |k: &str| {
+        doc.get(k)
+            .and_then(Json::as_str)
+            .map(str::to_string)
+            .ok_or_else(|| format!("missing field '{k}'"))
+    };
+    let crashed = doc
+        .get("result")
+        .and_then(|r| r.get("crashed"))
+        .and_then(Json::as_bool)
+        .ok_or_else(|| "missing field 'result.crashed'".to_string())?;
+    Ok(ResultMeta {
+        key: str_field("key")?,
+        code_version: str_field("code_version")?,
+        strategy: doc
+            .get("result")
+            .and_then(|r| r.get("strategy"))
+            .and_then(Json::as_str)
+            .map(str::to_string)
+            .ok_or_else(|| "missing field 'result.strategy'".to_string())?,
+        status: if crashed { "crashed" } else { "ok" }.to_string(),
+    })
+}
+
+// ---------------------------------------------------------------------
+// cell keys
+
+/// The memoization key of a standalone [`RunSpec`] cell (the `exp`
+/// tables): strategy × oversub × cost model × crash threshold ×
+/// predictor backend (artifact-backed strategies only) × a *content*
+/// hash of the exact trace. Sweep cells use
+/// [`crate::api::cell_store_key`] instead, which names traces by
+/// identity (no trace load needed to hit).
+pub fn run_spec_key(
+    spec: &RunSpec<'_>,
+    strategy: &str,
+    backend: Option<&str>,
+) -> String {
+    format!(
+        "cell:{strategy}:o{}:cm{}:crash{}:p{}:trace:{:016x}",
+        spec.oversub_percent,
+        spec.cost_model.name(),
+        spec.crash_threshold
+            .map(|t| t.to_string())
+            .unwrap_or_else(|| "-".into()),
+        backend.unwrap_or("-"),
+        trace_fingerprint(spec.trace),
+    )
+}
+
+/// FNV-1a 64 over the trace's canonical `.uvmt` encoding — the same
+/// bytes `corpus::store::CorpusStore::import_key` hashes, so equal
+/// content ⇒ equal fingerprint regardless of how the trace was built.
+pub fn trace_fingerprint(trace: &Trace) -> u64 {
+    fnv1a64(&format::encode(trace, ""))
+}
+
+// ---------------------------------------------------------------------
+// codec
+
+fn u(v: u64) -> Json {
+    Json::Str(v.to_string())
+}
+
+fn pages_json(set: &HashSet<Page>) -> Json {
+    let mut v: Vec<Page> = set.iter().copied().collect();
+    v.sort_unstable();
+    Json::Arr(v.into_iter().map(u).collect())
+}
+
+/// Encode one memoized cell as a compact JSON document.
+fn encode_cell(key: &str, code_version: &str, res: &CellResult) -> String {
+    let s = &res.outcome.stats;
+    let mut stats = BTreeMap::new();
+    let mut put = |k: &str, v: u64| {
+        stats.insert(k.to_string(), u(v));
+    };
+    put("accesses", s.accesses);
+    put("instructions", s.instructions);
+    put("cycles", s.cycles);
+    put("tlb_hits", s.tlb_hits);
+    put("tlb_misses", s.tlb_misses);
+    put("hits", s.hits);
+    put("faults", s.faults);
+    put("migrations", s.migrations);
+    put("evictions", s.evictions);
+    put("writebacks", s.writebacks);
+    put("zero_copy", s.zero_copy);
+    put("delayed_remote", s.delayed_remote);
+    put("prefetches", s.prefetches);
+    put("garbage_prefetches", s.garbage_prefetches);
+    put("pre_evictions", s.pre_evictions);
+    put("evictions_avoided", s.evictions_avoided);
+    put("background_link_cycles", s.background_link_cycles);
+    put("thrash_events", s.thrash_events);
+    put("predictions", s.predictions);
+    put("prediction_overhead_cycles", s.prediction_overhead_cycles);
+    put("policy_victim_fallbacks", s.policy_victim_fallbacks);
+    stats.insert("thrashed_pages".into(), pages_json(&s.thrashed_pages));
+    stats.insert("evicted_pages".into(), pages_json(&s.evicted_pages));
+
+    let tenants: Vec<Json> = res
+        .tenants
+        .iter()
+        .map(|t| {
+            let mut o = BTreeMap::new();
+            o.insert("name".to_string(), Json::Str(t.name.clone()));
+            o.insert("base".to_string(), u(t.base));
+            o.insert("accesses".to_string(), u(t.accesses));
+            o.insert("hits".to_string(), u(t.hits));
+            o.insert("faults".to_string(), u(t.faults));
+            o.insert("cycles".to_string(), u(t.cycles));
+            o.insert("link_cycles".to_string(), u(t.link_cycles));
+            Json::Obj(o)
+        })
+        .collect();
+
+    let mut r = BTreeMap::new();
+    r.insert("strategy".to_string(), Json::Str(res.strategy.clone()));
+    r.insert("display".to_string(), Json::Str(res.display.clone()));
+    r.insert("crashed".to_string(), Json::Bool(res.outcome.crashed));
+    r.insert("inference_calls".to_string(), u(res.inference_calls));
+    r.insert("model_predictions".to_string(), u(res.model_predictions));
+    r.insert("patterns_used".to_string(), u(res.patterns_used as u64));
+    r.insert(
+        "last_loss".to_string(),
+        if res.last_loss.is_finite() {
+            Json::Num(res.last_loss as f64)
+        } else {
+            Json::Null
+        },
+    );
+    r.insert("stats".to_string(), Json::Obj(stats));
+    r.insert("tenants".to_string(), Json::Arr(tenants));
+
+    let mut doc = BTreeMap::new();
+    doc.insert("schema".to_string(), Json::Str(SCHEMA.to_string()));
+    doc.insert("key".to_string(), Json::Str(key.to_string()));
+    doc.insert(
+        "code_version".to_string(),
+        Json::Str(code_version.to_string()),
+    );
+    doc.insert("result".to_string(), Json::Obj(r));
+    Json::Obj(doc).compact()
+}
+
+fn ru64(v: &Json, k: &str) -> Result<u64> {
+    v.get(k)
+        .and_then(Json::as_str)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| anyhow!("missing/invalid u64 field '{k}'"))
+}
+
+fn rstr(v: &Json, k: &str) -> Result<String> {
+    v.get(k)
+        .and_then(Json::as_str)
+        .map(str::to_string)
+        .ok_or_else(|| anyhow!("missing string field '{k}'"))
+}
+
+fn rpages(v: &Json, k: &str) -> Result<HashSet<Page>> {
+    let arr = v
+        .get(k)
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("missing page-set field '{k}'"))?;
+    arr.iter()
+        .map(|p| {
+            p.as_str()
+                .and_then(|s| s.parse().ok())
+                .ok_or_else(|| anyhow!("invalid page in '{k}'"))
+        })
+        .collect()
+}
+
+/// Decode a stored cell document back into its header + [`CellResult`].
+fn decode_cell(doc: &Json) -> Result<(ResultMeta, CellResult)> {
+    if doc.get("schema").and_then(Json::as_str) != Some(SCHEMA) {
+        bail!("not a {SCHEMA} document");
+    }
+    let r = doc
+        .get("result")
+        .ok_or_else(|| anyhow!("missing 'result'"))?;
+    let sj = r.get("stats").ok_or_else(|| anyhow!("missing 'stats'"))?;
+    let stats = Stats {
+        accesses: ru64(sj, "accesses")?,
+        instructions: ru64(sj, "instructions")?,
+        cycles: ru64(sj, "cycles")?,
+        tlb_hits: ru64(sj, "tlb_hits")?,
+        tlb_misses: ru64(sj, "tlb_misses")?,
+        hits: ru64(sj, "hits")?,
+        faults: ru64(sj, "faults")?,
+        migrations: ru64(sj, "migrations")?,
+        evictions: ru64(sj, "evictions")?,
+        writebacks: ru64(sj, "writebacks")?,
+        zero_copy: ru64(sj, "zero_copy")?,
+        delayed_remote: ru64(sj, "delayed_remote")?,
+        prefetches: ru64(sj, "prefetches")?,
+        garbage_prefetches: ru64(sj, "garbage_prefetches")?,
+        pre_evictions: ru64(sj, "pre_evictions")?,
+        evictions_avoided: ru64(sj, "evictions_avoided")?,
+        background_link_cycles: ru64(sj, "background_link_cycles")?,
+        thrash_events: ru64(sj, "thrash_events")?,
+        thrashed_pages: rpages(sj, "thrashed_pages")?,
+        evicted_pages: rpages(sj, "evicted_pages")?,
+        predictions: ru64(sj, "predictions")?,
+        prediction_overhead_cycles: ru64(sj, "prediction_overhead_cycles")?,
+        policy_victim_fallbacks: ru64(sj, "policy_victim_fallbacks")?,
+    };
+    let tenants = r
+        .get("tenants")
+        .and_then(Json::as_arr)
+        .map(|arr| {
+            arr.iter()
+                .map(|t| {
+                    Ok(TenantReport {
+                        name: rstr(t, "name")?,
+                        base: ru64(t, "base")?,
+                        accesses: ru64(t, "accesses")?,
+                        hits: ru64(t, "hits")?,
+                        faults: ru64(t, "faults")?,
+                        cycles: ru64(t, "cycles")?,
+                        link_cycles: ru64(t, "link_cycles")?,
+                    })
+                })
+                .collect::<Result<Vec<_>>>()
+        })
+        .transpose()?
+        .unwrap_or_default();
+    let crashed = r
+        .get("crashed")
+        .and_then(Json::as_bool)
+        .ok_or_else(|| anyhow!("missing 'crashed'"))?;
+    let last_loss = match r.get("last_loss") {
+        Some(Json::Num(n)) => *n as f32,
+        _ => f32::NAN,
+    };
+    let result = CellResult {
+        outcome: RunOutcome { stats, crashed },
+        strategy: rstr(r, "strategy")?,
+        display: rstr(r, "display")?,
+        inference_calls: ru64(r, "inference_calls")?,
+        model_predictions: ru64(r, "model_predictions")?,
+        patterns_used: ru64(r, "patterns_used")? as usize,
+        last_loss,
+        tenants,
+    };
+    let meta = ResultMeta {
+        key: rstr(doc, "key")?,
+        code_version: rstr(doc, "code_version")?,
+        strategy: result.strategy.clone(),
+        status: if crashed { "crashed" } else { "ok" }.to_string(),
+    };
+    Ok((meta, result))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Scale;
+    use crate::trace::workloads::Workload;
+
+    fn tmp_store(tag: &str) -> ResultStore {
+        let dir = std::env::temp_dir().join(format!(
+            "uvmio-results-test-{}-{tag}",
+            std::process::id()
+        ));
+        let _ = fs::remove_dir_all(&dir);
+        ResultStore::open(dir).unwrap()
+    }
+
+    /// A result exercising every codec edge: counters above 2^53 (the
+    /// f64-exactness cliff), both page sets, NaN loss, tenant rows.
+    fn sample() -> CellResult {
+        let mut stats = Stats {
+            accesses: (1u64 << 60) + 7,
+            cycles: 9_007_199_254_740_993, // 2^53 + 1: not an exact f64
+            faults: 123,
+            ..Stats::default()
+        };
+        stats.thrashed_pages.extend([3, 7, 11]);
+        stats.evicted_pages.extend([7, 9]);
+        CellResult {
+            outcome: RunOutcome { stats, crashed: true },
+            strategy: "demand-lru".into(),
+            display: "Demand.+LRU".into(),
+            inference_calls: 5,
+            model_predictions: 9,
+            patterns_used: 2,
+            last_loss: f32::NAN,
+            tenants: vec![TenantReport {
+                name: "NW".into(),
+                base: 4096,
+                accesses: 10,
+                hits: 6,
+                faults: 4,
+                cycles: 999,
+                link_cycles: 12,
+            }],
+        }
+    }
+
+    #[test]
+    fn codec_round_trips_losslessly() {
+        let res = sample();
+        let doc = encode_cell("k", "v1+sim1", &res);
+        let (meta, back) = decode_cell(&Json::parse(&doc).unwrap()).unwrap();
+        assert_eq!(meta.key, "k");
+        assert_eq!(meta.code_version, "v1+sim1");
+        assert_eq!(meta.status, "crashed");
+        assert_eq!(back.outcome.stats, res.outcome.stats);
+        assert_eq!(back.outcome.crashed, res.outcome.crashed);
+        assert_eq!(back.strategy, res.strategy);
+        assert_eq!(back.display, res.display);
+        assert_eq!(back.inference_calls, res.inference_calls);
+        assert_eq!(back.model_predictions, res.model_predictions);
+        assert_eq!(back.patterns_used, res.patterns_used);
+        assert!(back.last_loss.is_nan());
+        assert_eq!(back.tenants.len(), 1);
+        assert_eq!(back.tenants[0].name, "NW");
+        assert_eq!(back.tenants[0].base, 4096);
+        assert_eq!(back.tenants[0].cycles, 999);
+    }
+
+    #[test]
+    fn finite_loss_round_trips_exactly() {
+        let mut res = sample();
+        res.last_loss = 0.123_456_79_f32;
+        let doc = encode_cell("k", "v", &res);
+        let (_, back) = decode_cell(&Json::parse(&doc).unwrap()).unwrap();
+        assert_eq!(back.last_loss, res.last_loss);
+    }
+
+    #[test]
+    fn put_get_counts_hits_and_survives_reopen() {
+        let store = tmp_store("putget");
+        let key = "cell:test:o125:r42";
+        assert!(store.get(key).unwrap().is_none());
+        store.put(key, &sample()).unwrap();
+        let back = store.get(key).unwrap().unwrap();
+        assert_eq!(back.outcome.stats, sample().outcome.stats);
+        let s = store.stats();
+        assert_eq!((s.lookups, s.hits, s.writes), (2, 1, 1));
+        // a second handle on the same directory sees the entry
+        let store2 = ResultStore::open(store.dir()).unwrap();
+        assert!(store2.get(key).unwrap().is_some());
+        assert_eq!(store2.stat(key).unwrap().unwrap().status, "crashed");
+        let _ = fs::remove_dir_all(store.dir());
+    }
+
+    #[test]
+    fn corrupt_entries_are_recomputed_not_trusted() {
+        let store = tmp_store("corrupt");
+        let key = "cell:test:corrupt";
+        store.put(key, &sample()).unwrap();
+        fs::write(store.path_for(key), b"{ torn json").unwrap();
+        assert!(store.get(key).unwrap().is_none());
+        assert_eq!(store.stats().corrupt, 1);
+        // gc reaps it
+        let rep = store.gc_with_grace(Duration::ZERO).unwrap();
+        assert_eq!(rep.removed_files, 1);
+        assert_eq!(rep.kept, 0);
+        let _ = fs::remove_dir_all(store.dir());
+    }
+
+    #[test]
+    fn stale_code_version_is_a_miss_and_gc_fodder() {
+        let dir = std::env::temp_dir().join(format!(
+            "uvmio-results-test-{}-stale",
+            std::process::id()
+        ));
+        let _ = fs::remove_dir_all(&dir);
+        let old = ResultStore::open(&dir)
+            .unwrap()
+            .with_code_version("0.0.0+sim0");
+        let key = "cell:test:stale";
+        old.put(key, &sample()).unwrap();
+        assert!(old.get(key).unwrap().is_some()); // same fingerprint: hit
+
+        let current = ResultStore::open(&dir).unwrap();
+        assert!(current.get(key).unwrap().is_none());
+        assert_eq!(current.stats().stale, 1);
+        assert_eq!(current.entries().unwrap().len(), 1);
+        let rep = current.gc_with_grace(Duration::ZERO).unwrap();
+        assert_eq!(rep.removed_files, 1); // stale entries are reaped
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn run_spec_keys_separate_every_axis() {
+        let t42 = Workload::Nw.generate(Scale::default(), 42);
+        let t43 = Workload::Nw.generate(Scale::default(), 43);
+        let spec = RunSpec::new(&t42, 125);
+        let k = run_spec_key(&spec, "baseline", None);
+        assert_eq!(k, run_spec_key(&RunSpec::new(&t42, 125), "baseline", None));
+        assert_ne!(k, run_spec_key(&spec, "demand-lru", None));
+        assert_ne!(k, run_spec_key(&RunSpec::new(&t42, 150), "baseline", None));
+        assert_ne!(k, run_spec_key(&RunSpec::new(&t43, 125), "baseline", None));
+        assert_ne!(k, run_spec_key(&spec, "baseline", Some("native")));
+        assert_ne!(
+            trace_fingerprint(&t42),
+            trace_fingerprint(&t43),
+        );
+    }
+}

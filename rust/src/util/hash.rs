@@ -18,6 +18,20 @@ pub fn fnv1a64(bytes: &[u8]) -> u64 {
     h
 }
 
+/// Bump when simulator/policy semantics change in a way that alters
+/// cell outcomes (new cost pricing, changed eviction order, stats
+/// field changes, …). This invalidates every memoized
+/// [`crate::results::ResultStore`] entry at once — stale results are
+/// recomputed, never trusted.
+const SIM_REV: u32 = 1;
+
+/// The code-version fingerprint stamped into every memoized sweep
+/// result: crate version plus the simulation revision ([`SIM_REV`]).
+/// Entries written under a different fingerprint are treated as stale.
+pub fn code_version() -> String {
+    format!("{}+sim{}", env!("CARGO_PKG_VERSION"), SIM_REV)
+}
+
 /// Streaming FNV-1a accumulator (same digest as [`fnv1a64`] over the
 /// concatenation of all `update` calls).
 #[derive(Debug, Clone)]
@@ -64,6 +78,13 @@ mod tests {
         h.update(b"foo");
         h.update(b"bar");
         assert_eq!(h.digest(), fnv1a64(b"foobar"));
+    }
+
+    #[test]
+    fn code_version_is_stable_within_a_build() {
+        let v = code_version();
+        assert!(v.contains("+sim"));
+        assert_eq!(v, code_version());
     }
 
     #[test]

@@ -14,10 +14,11 @@ use uvmio::policy::lru::Lru;
 use uvmio::policy::{DecisionPolicy, DemandOnly, LegacyPolicyAdapter, Policy};
 use uvmio::trace::workloads::Workload;
 
-const BUILTIN: [&str; 10] = [
+const BUILTIN: [&str; 11] = [
     "baseline",
     "demand-hpe",
     "tree-hpe",
+    "hpe-preevict",
     "tree-evict",
     "demand-belady",
     "demand-lru",

@@ -210,6 +210,56 @@ fn tree_evict_pre_eviction_reduces_thrashing_at_125() {
     );
 }
 
+/// Same criterion for the proactive HPE variant (`hpe-preevict`):
+/// draining the aged chain partitions in regular mode must strictly
+/// reduce `thrashed_pages` versus reactive HPE on at least 3 workloads
+/// at 125% oversubscription, and actually use the background queue.
+#[test]
+fn hpe_pre_eviction_reduces_thrashing_at_125() {
+    let registry = StrategyRegistry::builtin();
+    let mut reduced = 0usize;
+    let mut regressed = 0usize;
+    let mut total_pre_evictions = 0u64;
+    let mut report = Vec::new();
+    for w in Workload::ALL {
+        let trace = w.generate(Scale::default(), 42);
+        let spec = RunSpec::new(&trace, 125);
+
+        // reactive HPE: chain ages, but eviction happens only on demand
+        let reactive = Engine::new(spec.cfg.clone()).run(
+            &trace,
+            &mut Composite::new(TreePrefetcher::new(), Hpe::new()),
+        );
+        // the proactive configuration registered as `hpe-preevict`
+        let proactive = registry
+            .run("hpe-preevict", &spec, &StrategyCtx::default())
+            .unwrap()
+            .outcome;
+
+        total_pre_evictions += proactive.stats.pre_evictions;
+        let (r, p) = (
+            reactive.stats.thrashed_pages.len(),
+            proactive.stats.thrashed_pages.len(),
+        );
+        if p < r {
+            reduced += 1;
+        } else if p > r {
+            regressed += 1;
+        }
+        report.push(format!("{}: reactive {r} vs pre-eviction {p}", w.name()));
+    }
+    assert!(
+        reduced >= 3,
+        "HPE pre-eviction must strictly reduce thrashed_pages on ≥3 \
+         workloads (got {reduced}, regressed {regressed}):\n{}",
+        report.join("\n")
+    );
+    assert!(
+        total_pre_evictions > 0,
+        "the proactive drain queue must actually run"
+    );
+}
+
 /// Same criterion for the intelligent policy under the deterministic
 /// stub model runtime: pre-eviction on versus off (the reactive
 /// pre-redesign behaviour), strict thrashed-page reduction on ≥3

@@ -1,0 +1,266 @@
+//! ResultStore integration tests: the acceptance criteria of the
+//! memoized, resumable sweep service.
+//!
+//! * **Warm re-sweep is free** — an identical sweep against a warm
+//!   store produces byte-identical CSV/JSONL reports while running
+//!   ZERO simulations (the fresh trace cache records zero lookups).
+//! * **Resume** — after an "interrupted" partial sweep, re-running the
+//!   full grid computes only the missing cells and the combined output
+//!   matches a from-scratch store-less run byte for byte.
+//! * **Invalidation** — corrupt entries and entries written under a
+//!   different code version are detected, recomputed and overwritten;
+//!   they never reach a report.
+//! * **`repro serve --stdin`** — one NDJSON job through the actual
+//!   binary streams cell lines and a `job_done` summary.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use uvmio::api::{
+    cell_store_key, CellRecord, CsvSink, JsonlSink, StrategyCtx,
+    StrategyRegistry, SweepRunner, SweepSink, SweepSpec,
+};
+use uvmio::corpus::TraceCache;
+use uvmio::results::ResultStore;
+use uvmio::trace::workloads::Workload;
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "uvmio-results-it-{}-{tag}",
+        std::process::id()
+    ));
+    let _ = fs::remove_dir_all(&dir);
+    fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn spec(workloads: Vec<Workload>) -> SweepSpec {
+    SweepSpec::new(
+        workloads,
+        vec!["baseline".to_string(), "demand-lru".to_string()],
+    )
+    .with_oversub(vec![110, 125])
+}
+
+/// Run `sweep` through CSV + JSONL file sinks, optionally memoized.
+fn run_to_files(
+    sweep: &SweepSpec,
+    cache: Arc<TraceCache>,
+    store: Option<Arc<ResultStore>>,
+    csv: &Path,
+    jsonl: &Path,
+) -> Vec<CellRecord> {
+    let registry = StrategyRegistry::builtin();
+    let mut sinks: Vec<Box<dyn SweepSink + '_>> = vec![
+        Box::new(CsvSink::to_path(csv).unwrap()),
+        Box::new(JsonlSink::to_path(jsonl).unwrap()),
+    ];
+    let mut runner =
+        SweepRunner::new(&registry).with_threads(2).with_cache(cache);
+    if let Some(s) = store {
+        runner = runner.with_results(s);
+    }
+    runner.run(sweep, &StrategyCtx::default(), &mut sinks).unwrap()
+}
+
+/// Tentpole criterion: re-running an identical sweep against a warm
+/// store simulates NOTHING (the fresh trace cache is never consulted)
+/// and still writes byte-identical reports.
+#[test]
+fn memoized_resweep_is_byte_identical_with_zero_simulations() {
+    let dir = tmp_dir("memo");
+    let store = Arc::new(ResultStore::open(dir.join("results")).unwrap());
+    let sweep = spec(vec![Workload::Atax, Workload::Hotspot]);
+    let cells = sweep.len() as u64;
+
+    let (csv_a, jsonl_a) = (dir.join("a.csv"), dir.join("a.jsonl"));
+    run_to_files(
+        &sweep,
+        Arc::new(TraceCache::new()),
+        Some(Arc::clone(&store)),
+        &csv_a,
+        &jsonl_a,
+    );
+    let s = store.stats();
+    assert_eq!(s.hits, 0, "cold store must not hit");
+    assert_eq!(s.writes, cells, "every cell persisted");
+
+    // second run: fresh trace cache, warm store — every cell is a
+    // store hit and the cache records zero lookups (no trace was ever
+    // built or loaded, therefore nothing was simulated)
+    let (csv_b, jsonl_b) = (dir.join("b.csv"), dir.join("b.jsonl"));
+    let warm_cache = Arc::new(TraceCache::new());
+    run_to_files(
+        &sweep,
+        Arc::clone(&warm_cache),
+        Some(Arc::clone(&store)),
+        &csv_b,
+        &jsonl_b,
+    );
+    let s = store.stats();
+    assert_eq!(s.hits, cells, "every cell must be memoized");
+    assert_eq!(s.writes, cells, "a full-hit pass persists nothing new");
+    assert_eq!(
+        warm_cache.stats().lookups,
+        0,
+        "zero trace-cache lookups == zero simulations"
+    );
+
+    assert_eq!(fs::read(&csv_a).unwrap(), fs::read(&csv_b).unwrap());
+    assert_eq!(fs::read(&jsonl_a).unwrap(), fs::read(&jsonl_b).unwrap());
+    let _ = fs::remove_dir_all(&dir);
+}
+
+/// Resume criterion: a sweep killed partway leaves its finished cells
+/// in the store; re-running the full grid computes only the missing
+/// ones, and the resumed reports match a from-scratch run exactly.
+#[test]
+fn resume_computes_only_the_missing_cells() {
+    let dir = tmp_dir("resume");
+    let store = Arc::new(ResultStore::open(dir.join("results")).unwrap());
+
+    // the "interrupted" first attempt: only the ATAX column landed
+    let partial = spec(vec![Workload::Atax]);
+    run_to_files(
+        &partial,
+        Arc::new(TraceCache::new()),
+        Some(Arc::clone(&store)),
+        &dir.join("p.csv"),
+        &dir.join("p.jsonl"),
+    );
+    let done = partial.len() as u64;
+    assert_eq!(store.stats().writes, done);
+
+    // the resumed full grid: stored column skipped, the rest computed
+    let full = spec(vec![Workload::Atax, Workload::Hotspot]);
+    let (csv_r, jsonl_r) = (dir.join("r.csv"), dir.join("r.jsonl"));
+    run_to_files(
+        &full,
+        Arc::new(TraceCache::new()),
+        Some(Arc::clone(&store)),
+        &csv_r,
+        &jsonl_r,
+    );
+    let s = store.stats();
+    assert_eq!(s.hits, done, "only the pre-computed cells may hit");
+    assert_eq!(s.writes, full.len() as u64, "only missing cells computed");
+
+    // and the resumed output matches a from-scratch store-less run
+    let (csv_f, jsonl_f) = (dir.join("f.csv"), dir.join("f.jsonl"));
+    run_to_files(
+        &full,
+        Arc::new(TraceCache::new()),
+        None,
+        &csv_f,
+        &jsonl_f,
+    );
+    assert_eq!(fs::read(&csv_r).unwrap(), fs::read(&csv_f).unwrap());
+    assert_eq!(fs::read(&jsonl_r).unwrap(), fs::read(&jsonl_f).unwrap());
+    let _ = fs::remove_dir_all(&dir);
+}
+
+/// Invalidation criterion: a torn entry and a stale (other code
+/// version) entry are both recomputed through the sweep path — the
+/// reports stay correct either way.
+#[test]
+fn corrupt_and_stale_entries_are_recomputed() {
+    let dir = tmp_dir("invalid");
+    let results = dir.join("results");
+    let store = Arc::new(ResultStore::open(&results).unwrap());
+    let sweep =
+        SweepSpec::new(vec![Workload::Nw], vec!["baseline".to_string()]);
+    run_to_files(
+        &sweep,
+        Arc::new(TraceCache::new()),
+        Some(Arc::clone(&store)),
+        &dir.join("a.csv"),
+        &dir.join("a.jsonl"),
+    );
+    assert_eq!(store.stats().writes, 1);
+
+    // truncate the entry on disk: the re-sweep must notice, recompute
+    // and overwrite instead of trusting the torn file
+    let key = cell_store_key(&sweep, &sweep.workloads[0], "baseline", 125, 42);
+    let path = store.path_for(&key);
+    assert!(path.exists(), "{} missing", path.display());
+    fs::write(&path, b"{ torn").unwrap();
+    run_to_files(
+        &sweep,
+        Arc::new(TraceCache::new()),
+        Some(Arc::clone(&store)),
+        &dir.join("b.csv"),
+        &dir.join("b.jsonl"),
+    );
+    let s = store.stats();
+    assert_eq!(s.corrupt, 1, "torn entry must be counted");
+    assert_eq!(s.writes, 2, "the corrupt cell must be recomputed");
+    assert_eq!(
+        fs::read(dir.join("a.csv")).unwrap(),
+        fs::read(dir.join("b.csv")).unwrap()
+    );
+
+    // a code-version bump makes the (now healthy) entry stale: the
+    // sweep recomputes it under the new version, same numbers out
+    let bumped = Arc::new(
+        ResultStore::open(&results).unwrap().with_code_version("sim-next"),
+    );
+    run_to_files(
+        &sweep,
+        Arc::new(TraceCache::new()),
+        Some(Arc::clone(&bumped)),
+        &dir.join("c.csv"),
+        &dir.join("c.jsonl"),
+    );
+    let s = bumped.stats();
+    assert_eq!(s.stale, 1, "old-version entry must be counted stale");
+    assert_eq!(s.writes, 1, "and recomputed under the new version");
+    assert_eq!(
+        fs::read(dir.join("a.csv")).unwrap(),
+        fs::read(dir.join("c.csv")).unwrap()
+    );
+    let _ = fs::remove_dir_all(&dir);
+}
+
+/// Satellite requirement: one NDJSON job through the real binary's
+/// `serve --stdin` transport streams its cells and a `job_done` line.
+#[test]
+fn repro_serve_stdin_binary_round_trip() {
+    use std::io::Write as _;
+    use std::process::{Command, Stdio};
+
+    let bin = env!("CARGO_BIN_EXE_repro");
+    let mut child = Command::new(bin)
+        .args(["serve", "--stdin", "--threads", "1"])
+        .stdin(Stdio::piped())
+        .stdout(Stdio::piped())
+        .stderr(Stdio::piped())
+        .spawn()
+        .expect("spawn repro serve --stdin");
+    child
+        .stdin
+        .take()
+        .unwrap()
+        .write_all(
+            b"{\"id\":\"it\",\"workloads\":\"NW\",\
+              \"strategies\":\"baseline,demand-lru\"}\n",
+        )
+        .unwrap();
+    let out = child.wait_with_output().unwrap();
+    assert!(
+        out.status.success(),
+        "serve --stdin failed:\nstderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let text = String::from_utf8_lossy(&out.stdout);
+    let cells = text
+        .lines()
+        .filter(|l| l.contains("\"type\":\"cell\""))
+        .count();
+    assert_eq!(cells, 2, "{text}");
+    let done = text.lines().last().unwrap();
+    assert!(done.contains("\"type\":\"job_done\""), "{text}");
+    assert!(done.contains("\"job\":\"it\""), "{text}");
+    assert!(done.contains("\"cells\":\"2\""), "{text}");
+    assert!(done.contains("\"errors\":\"0\""), "{text}");
+}

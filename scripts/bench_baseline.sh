@@ -1,23 +1,25 @@
 #!/usr/bin/env bash
-# Regenerate BENCH_PR6.json — the committed bench baseline for the
-# native predictor subsystem (PR 6).
+# Regenerate BENCH_PR7.json — the committed bench baseline for the
+# native predictor subsystem (PR 6) and the memoized result store
+# (PR 7).
 #
-# Runs the predictor bench binary (the native forward/train_step rows
-# need no artifacts; the pjrt rows appear only after `make artifacts`)
-# and converts the harness's
+# Runs the predictor and results bench binaries (neither needs
+# artifacts; the pjrt rows appear only after `make artifacts`) and
+# converts the harness's
 #     group/name   time: [1.234 µs]  thrpt: [5.678 Melem/s]
 # lines into a stable JSON document. Re-run on a quiet machine and
-# commit the result whenever the prediction path changes materially:
+# commit the result whenever the prediction or memoization path
+# changes materially:
 #
 #     scripts/bench_baseline.sh [output.json]
 set -euo pipefail
 
 cd "$(dirname "$0")/.."
-out="${1:-BENCH_PR6.json}"
+out="${1:-BENCH_PR7.json}"
 
 raw="$(mktemp)"
 trap 'rm -f "$raw"' EXIT
-(cd rust && cargo bench --bench predictor) | tee "$raw"
+(cd rust && cargo bench --bench predictor --bench results) | tee "$raw"
 
 python3 - "$raw" "$out" <<'PY'
 import json, re, subprocess, sys
@@ -54,8 +56,8 @@ rev = subprocess.run(
 
 doc = {
     "schema": "bench-baseline/v1",
-    "pr": 6,
-    "bench": "predictor",
+    "pr": 7,
+    "bench": "predictor+results",
     "git_rev": rev,
     "status": "measured",
     "note": "median per-iteration times from rust/benches/common harness; "
