@@ -1,0 +1,98 @@
+//! The unwrap-ratchet baseline file (`lint-baseline.txt`).
+//!
+//! Format: one `module count` pair per line, `#` comments and blank
+//! lines ignored. The committed counts are a ceiling that may only go
+//! down: the ratchet rule fails when a module's live count exceeds its
+//! entry, and notes (without failing) when an entry can be tightened.
+//! `repro lint --write-baseline` regenerates the file from the tree.
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::path::Path;
+
+pub const BASELINE_FILE: &str = "lint-baseline.txt";
+
+pub struct Baseline {
+    /// module → (allowed count, 1-based line of the entry).
+    pub entries: BTreeMap<String, (usize, u32)>,
+}
+
+/// Load a baseline. `Ok(None)` when the file does not exist; `Err` with
+/// a human message on malformed content.
+pub fn load(path: &Path) -> Result<Option<Baseline>, String> {
+    let text = match fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+        Err(e) => return Err(format!("{}: {e}", path.display())),
+    };
+    let mut entries = BTreeMap::new();
+    for (idx, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut parts = line.split_whitespace();
+        let (module, count) = match (parts.next(), parts.next(), parts.next()) {
+            (Some(m), Some(c), None) => (m, c),
+            _ => {
+                return Err(format!(
+                    "{}:{}: expected `module count`, got {line:?}",
+                    path.display(),
+                    idx + 1
+                ))
+            }
+        };
+        let count: usize = count.parse().map_err(|_| {
+            format!(
+                "{}:{}: count is not a number: {line:?}",
+                path.display(),
+                idx + 1
+            )
+        })?;
+        entries.insert(module.to_string(), (count, idx as u32 + 1));
+    }
+    Ok(Some(Baseline { entries }))
+}
+
+/// Render a baseline from live counts, sorted by module.
+pub fn render(counts: &BTreeMap<String, usize>) -> String {
+    let mut out = String::new();
+    out.push_str("# unwrap/expect ceiling per src module (test mods and main.rs excluded).\n");
+    out.push_str("# Maintained by the unwrap-ratchet lint rule: counts may only decrease.\n");
+    out.push_str("# Regenerate after removing unwraps with: repro lint --write-baseline\n");
+    for (module, count) in counts {
+        out.push_str(&format!("{module} {count}\n"));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_then_reparse_roundtrips() {
+        let mut counts = BTreeMap::new();
+        counts.insert("api".to_string(), 12usize);
+        counts.insert("sim".to_string(), 0usize);
+        let text = render(&counts);
+        let dir = std::env::temp_dir().join("uvmio-baseline-test");
+        std::fs::create_dir_all(&dir).expect("temp dir");
+        let path = dir.join(BASELINE_FILE);
+        std::fs::write(&path, &text).expect("write baseline");
+        let parsed = load(&path).expect("parse").expect("present");
+        assert_eq!(parsed.entries.get("api").map(|e| e.0), Some(12));
+        assert_eq!(parsed.entries.get("sim").map(|e| e.0), Some(0));
+    }
+
+    #[test]
+    fn missing_file_is_none_and_garbage_is_err() {
+        let missing = Path::new("/nonexistent/lint-baseline.txt");
+        assert!(load(missing).expect("missing is ok").is_none());
+        let dir = std::env::temp_dir().join("uvmio-baseline-test");
+        std::fs::create_dir_all(&dir).expect("temp dir");
+        let path = dir.join("bad-baseline.txt");
+        std::fs::write(&path, "api twelve\n").expect("write");
+        assert!(load(&path).is_err());
+    }
+}

@@ -1,0 +1,119 @@
+//! `uvmio::analysis` — a dependency-free determinism/conservation lint
+//! pass over this crate's own sources, exposed as `repro lint`.
+//!
+//! Determinism is the house invariant (serial ≡ parallel sweeps,
+//! session ≡ engine, online ≡ offline schedules, byte-identical pinned
+//! suites, and the `ResultStore` memoizes on the assumption that a cell
+//! key fully determines its bytes). Nothing used to enforce that at the
+//! source level — one unsorted `HashMap` loop in a result-bearing
+//! module silently breaks reproducibility and poisons every cached
+//! result. This pass encodes the failure classes the repo has actually
+//! hit:
+//!
+//! | rule | checks |
+//! |------|--------|
+//! | `nondet-iteration` | hash-order iteration in `sim/`, `policy/`, `coordinator/`, `trace/`, `results/` |
+//! | `wall-clock` | `Instant`/`SystemTime`/ambient entropy outside `main.rs` + `results/serve.rs` |
+//! | `unwrap-ratchet` | `.unwrap()`/`.expect(` counts vs the committed `lint-baseline.txt` ceiling |
+//! | `counter-conservation` | every `u64` `Stats` counter reaches `MetricsSnapshot`, the sweep CSV header, and the `cell/v1` codec |
+//! | `registry-exhaustiveness` | builtin strategy names: registry ≡ `BUILTIN` test ≡ `policy/mod.rs` doc list |
+//!
+//! Waiver grammar (rule 1 only): a `// lint: sorted <reason>` comment on
+//! the flagged line or the line directly above, or an explicit `.sort`
+//! within two lines of the site (the collect-then-sort idiom).
+//!
+//! Built in the house style: [`crate::util::rustlex`] tokenizes, the
+//! walker lexes `<root>/src` + `<root>/tests` in sorted order, rules are
+//! pure token-stream functions. No syn, no regex, no process spawning —
+//! the pass runs in the test suite itself (`tests/lint.rs` keeps the
+//! tree clean) and as a blocking CI lane via `repro lint --deny`.
+
+pub mod baseline;
+pub mod rules;
+pub mod source;
+
+use std::fs;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+pub use baseline::BASELINE_FILE;
+
+/// One finding, anchored to a file/line relative to the lint root.
+#[derive(Debug, Clone)]
+pub struct Diagnostic {
+    pub rule: &'static str,
+    pub file: String,
+    pub line: u32,
+    pub msg: String,
+}
+
+impl std::fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{}:{}: [{}] {}",
+            self.file, self.line, self.rule, self.msg
+        )
+    }
+}
+
+/// The outcome of a lint run: hard violations (non-zero exit under
+/// `--deny`) plus advisory notes (ratchet slack, skipped cross-file
+/// rules on foreign trees).
+#[derive(Debug, Default)]
+pub struct LintReport {
+    pub violations: Vec<Diagnostic>,
+    pub notes: Vec<String>,
+    pub files: usize,
+}
+
+impl LintReport {
+    pub fn clean(&self) -> bool {
+        self.violations.is_empty()
+    }
+}
+
+/// Run all five rules over the crate rooted at `root` (the directory
+/// holding `src/`, `tests/`, and `lint-baseline.txt`). Deterministic:
+/// files are walked in sorted order and diagnostics are sorted by
+/// (file, line, rule).
+pub fn run_lint(root: &Path) -> Result<LintReport> {
+    let files = source::collect_sources(root)
+        .with_context(|| format!("walking sources under {}", root.display()))?;
+    let mut report = LintReport {
+        files: files.len(),
+        ..LintReport::default()
+    };
+    for f in &files {
+        rules::nondet_iteration(f, &mut report.violations);
+        rules::wall_clock(f, &mut report.violations);
+    }
+    match baseline::load(&root.join(BASELINE_FILE)) {
+        Ok(b) => rules::unwrap_ratchet(&files, b.as_ref(), &mut report),
+        Err(e) => report.violations.push(Diagnostic {
+            rule: rules::RULE_RATCHET,
+            file: BASELINE_FILE.to_string(),
+            line: 0,
+            msg: e,
+        }),
+    }
+    rules::counter_conservation(&files, &mut report);
+    rules::registry_exhaustiveness(&files, &mut report);
+    report
+        .violations
+        .sort_by(|a, b| (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule)));
+    Ok(report)
+}
+
+/// Regenerate `<root>/lint-baseline.txt` from the live unwrap/expect
+/// counts and return the rendered text.
+pub fn write_baseline(root: &Path) -> Result<String> {
+    let files = source::collect_sources(root)
+        .with_context(|| format!("walking sources under {}", root.display()))?;
+    let counts = rules::unwrap_counts(&files);
+    let text = baseline::render(&counts);
+    let path = root.join(BASELINE_FILE);
+    fs::write(&path, &text).with_context(|| format!("writing {}", path.display()))?;
+    Ok(text)
+}

@@ -1,0 +1,893 @@
+//! The five lint rules. Each is a pure function over lexed
+//! [`SourceFile`]s pushing [`Diagnostic`]s — no I/O, so unit tests lint
+//! snippet strings directly.
+
+use std::collections::BTreeMap;
+use std::collections::BTreeSet;
+
+use super::baseline::Baseline;
+use super::source::SourceFile;
+use super::{Diagnostic, LintReport};
+use crate::util::rustlex::{TokKind, Token};
+
+pub const RULE_NONDET: &str = "nondet-iteration";
+pub const RULE_CLOCK: &str = "wall-clock";
+pub const RULE_RATCHET: &str = "unwrap-ratchet";
+pub const RULE_CONSERVATION: &str = "counter-conservation";
+pub const RULE_REGISTRY: &str = "registry-exhaustiveness";
+
+/// Directories where iteration order leaks into simulation results,
+/// reports, or stored bytes.
+const NONDET_DIRS: &[&str] = &[
+    "src/coordinator/",
+    "src/policy/",
+    "src/results/",
+    "src/sim/",
+    "src/trace/",
+];
+
+/// Order-sensitive methods on hash collections.
+const NONDET_METHODS: &[&str] = &[
+    "drain",
+    "into_iter",
+    "iter",
+    "iter_mut",
+    "keys",
+    "values",
+    "values_mut",
+];
+
+/// Identifiers that smuggle wall-clock time or ambient entropy into
+/// library code (allowed only in `main.rs` and `results/serve.rs`).
+const CLOCK_IDENTS: &[&str] = &[
+    "Instant",
+    "RandomState",
+    "SystemTime",
+    "from_entropy",
+    "thread_rng",
+];
+const CLOCK_ALLOW: &[&str] = &["src/main.rs", "src/results/serve.rs"];
+
+fn text<'a>(f: &'a SourceFile, t: &Token) -> &'a str {
+    t.text(&f.text)
+}
+
+fn is(f: &SourceFile, i: usize, s: &str) -> bool {
+    f.code.get(i).is_some_and(|t| t.text(&f.text) == s)
+}
+
+fn ident_at<'a>(f: &'a SourceFile, i: usize) -> Option<&'a str> {
+    f.code
+        .get(i)
+        .filter(|t| t.kind == TokKind::Ident)
+        .map(|t| t.text(&f.text))
+}
+
+/// Strip the quotes (and any `r#`/`b` prefix) off a string literal
+/// token's text.
+fn str_content(tok_text: &str) -> &str {
+    let Some(first) = tok_text.find('"') else {
+        return tok_text;
+    };
+    let Some(last) = tok_text.rfind('"') else {
+        return tok_text;
+    };
+    if last > first {
+        &tok_text[first + 1..last]
+    } else {
+        tok_text
+    }
+}
+
+/// Rule 1 — `nondet-iteration`: iterating a `HashMap`/`HashSet` in a
+/// result-bearing module without a sort or a `// lint: sorted` waiver.
+///
+/// Detection is declaration-driven: an identifier becomes *suspicious*
+/// when its declaration mentions `HashMap`/`HashSet` (`name: HashMap<…>`
+/// annotations on fields, lets, params, and struct-literal inits, or
+/// `let name = HashMap::new()`). Any `suspicious.iter()`-family call or
+/// `for … in &suspicious` loop is then flagged unless the site is
+/// inside a `#[cfg(test)] mod`, carries a waiver, or feeds an explicit
+/// `.sort` within two lines.
+pub fn nondet_iteration(f: &SourceFile, out: &mut Vec<Diagnostic>) {
+    if !NONDET_DIRS.iter().any(|d| f.rel.starts_with(d)) {
+        return;
+    }
+    let suspects = suspicious_idents(f);
+    if suspects.is_empty() {
+        return;
+    }
+    let mut flagged_lines: Vec<u32> = Vec::new();
+    let mut flag = |f: &SourceFile, line: u32, what: String, out: &mut Vec<Diagnostic>| {
+        if f.in_test(line) || f.waived(line) || f.feeds_sort(line) {
+            return;
+        }
+        if flagged_lines.contains(&line) {
+            return;
+        }
+        flagged_lines.push(line);
+        out.push(Diagnostic {
+            rule: RULE_NONDET,
+            file: f.rel.clone(),
+            line,
+            msg: format!(
+                "{what} iterates a HashMap/HashSet in result-bearing code; \
+                 iteration order is nondeterministic — sort the output or waive \
+                 with `// lint: sorted <reason>`"
+            ),
+        });
+    };
+    for i in 0..f.code.len() {
+        let Some(name) = ident_at(f, i) else { continue };
+        // suspicious.iter() / self.suspicious.keys() / …
+        if suspects.contains(name) && is(f, i + 1, ".") {
+            if let Some(method) = ident_at(f, i + 2) {
+                if NONDET_METHODS.contains(&method) && is(f, i + 3, "(") {
+                    // anchor to the receiver: multi-line chains put the
+                    // method on a later line than the waiver comment
+                    let line = f.code[i].line;
+                    flag(f, line, format!("`{name}.{method}()`"), out);
+                }
+            }
+        }
+        // for … in &suspicious { … }
+        if name == "for" {
+            let mut j = i + 1;
+            let mut saw_in = None;
+            while j < f.code.len() && j < i + 25 {
+                let t = text(f, &f.code[j]);
+                if t == "{" || t == ";" {
+                    break;
+                }
+                if t == "in" && f.code[j].kind == TokKind::Ident {
+                    saw_in = Some(j);
+                    break;
+                }
+                j += 1;
+            }
+            if let Some(j) = saw_in {
+                let mut k = j + 1;
+                while k < f.code.len() && k < j + 12 {
+                    let t = text(f, &f.code[k]);
+                    if t == "{" {
+                        break;
+                    }
+                    if f.code[k].kind == TokKind::Ident
+                        && suspects.contains(t)
+                        && t != "self"
+                        && t != "mut"
+                    {
+                        flag(f, f.code[k].line, format!("`for … in {t}`"), out);
+                    }
+                    k += 1;
+                }
+            }
+        }
+    }
+}
+
+/// Identifiers whose declaration in this file involves a hash
+/// collection. Over-approximate on purpose — a false positive costs one
+/// waiver comment, a false negative costs reproducibility.
+fn suspicious_idents(f: &SourceFile) -> BTreeSet<String> {
+    let mut out = BTreeSet::new();
+    for i in 0..f.code.len() {
+        let Some(name) = ident_at(f, i) else { continue };
+        if matches!(name, "HashMap" | "HashSet") {
+            continue;
+        }
+        // `name : …HashMap<…>…` — field decls, typed lets, fn params,
+        // struct-literal inits (`Session { delay_counters: HashMap::new() }`)
+        if is(f, i + 1, ":") && !is(f, i + 2, ":") {
+            let mut depth = 0i32;
+            let mut j = i + 2;
+            while j < f.code.len() && j < i + 42 {
+                let t = text(f, &f.code[j]);
+                match t {
+                    "<" => depth += 1,
+                    ">" => {
+                        if depth == 0 {
+                            break;
+                        }
+                        depth -= 1;
+                    }
+                    "," | ";" | "{" | "}" | ")" if depth == 0 => break,
+                    "HashMap" | "HashSet" => {
+                        out.insert(name.to_string());
+                        break;
+                    }
+                    _ => {}
+                }
+                j += 1;
+            }
+        }
+        // `let [mut] name = HashMap::new()` — untyped lets
+        if name == "let" {
+            let mut j = i + 1;
+            if ident_at(f, j) == Some("mut") {
+                j += 1;
+            }
+            let Some(bound) = ident_at(f, j) else { continue };
+            if !is(f, j + 1, "=") {
+                continue;
+            }
+            for k in j + 2..(j + 8).min(f.code.len()) {
+                let t = text(f, &f.code[k]);
+                if t == ";" {
+                    break;
+                }
+                if matches!(t, "HashMap" | "HashSet") {
+                    out.insert(bound.to_string());
+                    break;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Rule 2 — `wall-clock`: wall-clock time or ambient entropy in library
+/// code. Determinism requires all time to come from `sim::clock` and
+/// all randomness from `util::rng`; only the CLI driver (`main.rs`) and
+/// the serve loop may consult the host clock.
+pub fn wall_clock(f: &SourceFile, out: &mut Vec<Diagnostic>) {
+    if !f.rel.starts_with("src/") || CLOCK_ALLOW.contains(&f.rel.as_str()) {
+        return;
+    }
+    for t in &f.code {
+        if t.kind != TokKind::Ident {
+            continue;
+        }
+        let name = text(f, t);
+        if CLOCK_IDENTS.contains(&name) && !f.in_test(t.line) {
+            out.push(Diagnostic {
+                rule: RULE_CLOCK,
+                file: f.rel.clone(),
+                line: t.line,
+                msg: format!(
+                    "`{name}` is wall-clock/ambient-entropy; library code must \
+                     use sim::clock for time and util::rng for randomness \
+                     (allowed only in {})",
+                    CLOCK_ALLOW.join(", ")
+                ),
+            });
+        }
+    }
+}
+
+/// Count `.unwrap()` / `.expect(` sites per src module, test mods and
+/// `main.rs` excluded. Token-level, so `.unwrap_or(…)` never counts and
+/// string/comment mentions never count.
+pub fn unwrap_counts(files: &[SourceFile]) -> BTreeMap<String, usize> {
+    let mut counts: BTreeMap<String, usize> = BTreeMap::new();
+    for f in files {
+        if !f.rel.starts_with("src/") || f.rel == "src/main.rs" {
+            continue;
+        }
+        let Some(module) = f.module() else { continue };
+        let entry = counts.entry(module.to_string()).or_insert(0);
+        for i in 0..f.code.len() {
+            if !is(f, i, ".") {
+                continue;
+            }
+            let Some(m) = ident_at(f, i + 1) else { continue };
+            if matches!(m, "unwrap" | "expect")
+                && is(f, i + 2, "(")
+                && !f.in_test(f.code[i + 1].line)
+            {
+                *entry += 1;
+            }
+        }
+    }
+    counts
+}
+
+/// Rule 3 — `unwrap-ratchet`: live counts must not exceed the committed
+/// baseline. Shrinkage is reported as a note so the baseline gets
+/// tightened, not silently banked as headroom.
+pub fn unwrap_ratchet(
+    files: &[SourceFile],
+    baseline: Option<&Baseline>,
+    report: &mut LintReport,
+) {
+    let counts = unwrap_counts(files);
+    let empty = BTreeMap::new();
+    let entries = baseline.map_or(&empty, |b| &b.entries);
+    if baseline.is_none() {
+        report.notes.push(format!(
+            "{}: not found — all unwrap baselines treated as 0; run \
+             `repro lint --write-baseline` to create it",
+            super::baseline::BASELINE_FILE
+        ));
+    }
+    let modules: BTreeSet<&String> = counts.keys().chain(entries.keys()).collect();
+    for module in modules {
+        let cur = counts.get(module).copied().unwrap_or(0);
+        let (base, line) = entries.get(module).copied().unwrap_or((0, 0));
+        if cur > base {
+            report.violations.push(Diagnostic {
+                rule: RULE_RATCHET,
+                file: super::baseline::BASELINE_FILE.to_string(),
+                line,
+                msg: format!(
+                    "module `{module}`: {cur} unwrap/expect site(s) in library \
+                     code, baseline allows {base}; return Result instead (the \
+                     ratchet only goes down)"
+                ),
+            });
+        } else if cur < base {
+            report.notes.push(format!(
+                "module `{module}`: {cur} unwrap/expect site(s) < baseline \
+                 {base} — tighten with `repro lint --write-baseline`"
+            ));
+        }
+    }
+}
+
+/// Rule 4 — `counter-conservation`: every `u64` counter field of
+/// `sim::stats::Stats` must flow into (a) `MetricsSnapshot`, (b) the
+/// sweep CSV `COLUMNS` header in `api/sink.rs`, and (c) the `cell/v1`
+/// codec literals in `results/store.rs`. This is the bug class PRs 5–7
+/// patched by hand: a counter added to `Stats` but dropped on one of
+/// the three export paths.
+pub fn counter_conservation(files: &[SourceFile], report: &mut LintReport) {
+    let Some(stats) = by_rel(files, "src/sim/stats.rs") else {
+        report
+            .notes
+            .push("counter-conservation: src/sim/stats.rs not found; rule skipped".into());
+        return;
+    };
+    let Some(fields) = struct_fields(stats, "Stats") else {
+        report.violations.push(Diagnostic {
+            rule: RULE_CONSERVATION,
+            file: stats.rel.clone(),
+            line: 1,
+            msg: "cannot locate `struct Stats`".into(),
+        });
+        return;
+    };
+    let snapshot: BTreeSet<String> = struct_fields(stats, "MetricsSnapshot")
+        .map(|v| v.into_iter().map(|(n, _, _)| n).collect())
+        .unwrap_or_default();
+    let (columns, columns_file, columns_line) = match by_rel(files, "src/api/sink.rs")
+        .and_then(|f| const_str_list(f, "COLUMNS").map(|(set, line)| (set, f.rel.clone(), line)))
+    {
+        Some(t) => t,
+        None => {
+            report.violations.push(Diagnostic {
+                rule: RULE_CONSERVATION,
+                file: "src/api/sink.rs".into(),
+                line: 1,
+                msg: "cannot locate the `COLUMNS` sweep CSV header const".into(),
+            });
+            return;
+        }
+    };
+    let store_lits: BTreeSet<String> = match by_rel(files, "src/results/store.rs") {
+        Some(f) => f
+            .code
+            .iter()
+            .filter(|t| t.kind == TokKind::Str)
+            .map(|t| str_content(t.text(&f.text)).to_string())
+            .collect(),
+        None => {
+            report
+                .notes
+                .push("counter-conservation: src/results/store.rs not found; rule skipped".into());
+            return;
+        }
+    };
+    for (name, line, is_u64) in fields {
+        if !is_u64 {
+            continue;
+        }
+        if !snapshot.contains(&name) {
+            report.violations.push(Diagnostic {
+                rule: RULE_CONSERVATION,
+                file: stats.rel.clone(),
+                line,
+                msg: format!("Stats.{name} is not exported by MetricsSnapshot"),
+            });
+        }
+        if !columns.contains(&name) {
+            report.violations.push(Diagnostic {
+                rule: RULE_CONSERVATION,
+                file: columns_file.clone(),
+                line: columns_line,
+                msg: format!("Stats.{name} is missing from the sweep CSV COLUMNS header"),
+            });
+        }
+        if !store_lits.contains(&name) {
+            report.violations.push(Diagnostic {
+                rule: RULE_CONSERVATION,
+                file: "src/results/store.rs".into(),
+                line: 1,
+                msg: format!("Stats.{name} is not encoded by the cell/v1 result codec"),
+            });
+        }
+    }
+}
+
+/// Rule 5 — `registry-exhaustiveness`: the builtin strategy names
+/// registered in `api::registry`, the `BUILTIN` inventory in
+/// `tests/api_registry.rs`, and the backticked "Registry names" doc
+/// list in `policy/mod.rs` must agree exactly.
+pub fn registry_exhaustiveness(files: &[SourceFile], report: &mut LintReport) {
+    let Some(reg) = by_rel(files, "src/api/registry.rs") else {
+        report
+            .notes
+            .push("registry-exhaustiveness: src/api/registry.rs not found; rule skipped".into());
+        return;
+    };
+    // `StrategySpec::new("name", …)` registration sites
+    let mut registered: Vec<(String, u32)> = Vec::new();
+    for i in 0..reg.code.len() {
+        if ident_at(reg, i) == Some("StrategySpec")
+            && is(reg, i + 1, ":")
+            && is(reg, i + 2, ":")
+            && ident_at(reg, i + 3) == Some("new")
+            && is(reg, i + 4, "(")
+        {
+            if let Some(t) = reg.code.get(i + 5).filter(|t| t.kind == TokKind::Str) {
+                if !reg.in_test(t.line) {
+                    registered.push((str_content(t.text(&reg.text)).to_string(), t.line));
+                }
+            }
+        }
+    }
+    let reg_set: BTreeSet<&String> = registered.iter().map(|(n, _)| n).collect();
+
+    let (tested, tested_line) = match by_rel(files, "tests/api_registry.rs")
+        .and_then(|f| const_str_list(f, "BUILTIN"))
+    {
+        Some(t) => t,
+        None => {
+            report.violations.push(Diagnostic {
+                rule: RULE_REGISTRY,
+                file: "tests/api_registry.rs".into(),
+                line: 1,
+                msg: "cannot locate the `BUILTIN` strategy inventory".into(),
+            });
+            return;
+        }
+    };
+
+    let (documented, doc_line) = match by_rel(files, "src/policy/mod.rs").and_then(doc_name_list) {
+        Some(t) => t,
+        None => {
+            report.violations.push(Diagnostic {
+                rule: RULE_REGISTRY,
+                file: "src/policy/mod.rs".into(),
+                line: 1,
+                msg: "cannot locate the `Registry names` doc list (a module-doc \
+                      line `Registry names (in registration order):` followed by \
+                      backticked names, ending with a period)"
+                    .into(),
+            });
+            return;
+        }
+    };
+
+    for (name, line) in &registered {
+        if !tested.contains(name) {
+            report.violations.push(Diagnostic {
+                rule: RULE_REGISTRY,
+                file: reg.rel.clone(),
+                line: *line,
+                msg: format!("strategy `{name}` is not in the BUILTIN test inventory"),
+            });
+        }
+        if !documented.contains(name) {
+            report.violations.push(Diagnostic {
+                rule: RULE_REGISTRY,
+                file: reg.rel.clone(),
+                line: *line,
+                msg: format!("strategy `{name}` is not in the policy/mod.rs doc list"),
+            });
+        }
+    }
+    for name in &tested {
+        if !reg_set.contains(name) {
+            report.violations.push(Diagnostic {
+                rule: RULE_REGISTRY,
+                file: "tests/api_registry.rs".into(),
+                line: tested_line,
+                msg: format!("BUILTIN lists `{name}` but the registry does not register it"),
+            });
+        }
+    }
+    for name in &documented {
+        if !reg_set.contains(name) {
+            report.violations.push(Diagnostic {
+                rule: RULE_REGISTRY,
+                file: "src/policy/mod.rs".into(),
+                line: doc_line,
+                msg: format!("doc list names `{name}` but the registry does not register it"),
+            });
+        }
+    }
+}
+
+fn by_rel<'a>(files: &'a [SourceFile], rel: &str) -> Option<&'a SourceFile> {
+    files.iter().find(|f| f.rel == rel)
+}
+
+/// Parse `struct <name> { … }` fields → `(name, line, is_u64)`.
+fn struct_fields(f: &SourceFile, name: &str) -> Option<Vec<(String, u32, bool)>> {
+    let code = &f.code;
+    let mut i = 0;
+    let start = loop {
+        if i + 1 >= code.len() {
+            return None;
+        }
+        if ident_at(f, i) == Some("struct") && ident_at(f, i + 1) == Some(name) {
+            break i + 2;
+        }
+        i += 1;
+    };
+    // find the opening brace (no generics on these structs, but tolerate them)
+    let mut j = start;
+    let mut brace = None;
+    while j < code.len() && j < start + 24 {
+        match text(f, &code[j]) {
+            "{" => {
+                brace = Some(j);
+                break;
+            }
+            ";" => return Some(Vec::new()), // unit struct
+            _ => j += 1,
+        }
+    }
+    let mut j = brace? + 1;
+    let mut out = Vec::new();
+    let mut depth = 1i32;
+    while j < code.len() && depth > 0 {
+        let t = text(f, &code[j]);
+        match t {
+            "{" => {
+                depth += 1;
+                j += 1;
+                continue;
+            }
+            "}" => {
+                depth -= 1;
+                j += 1;
+                continue;
+            }
+            _ => {}
+        }
+        if depth != 1 {
+            j += 1;
+            continue;
+        }
+        // skip attributes and visibility
+        if t == "#" && is(f, j + 1, "[") {
+            let mut d = 1i32;
+            j += 2;
+            while j < code.len() && d > 0 {
+                match text(f, &code[j]) {
+                    "[" => d += 1,
+                    "]" => d -= 1,
+                    _ => {}
+                }
+                j += 1;
+            }
+            continue;
+        }
+        if ident_at(f, j) == Some("pub") {
+            j += 1;
+            // tolerate pub(crate) etc.
+            if is(f, j, "(") {
+                while j < code.len() && !is(f, j, ")") {
+                    j += 1;
+                }
+                j += 1;
+            }
+            continue;
+        }
+        // field: `name : type-tokens ,`
+        let Some(fname) = ident_at(f, j) else {
+            j += 1;
+            continue;
+        };
+        if !is(f, j + 1, ":") {
+            j += 1;
+            continue;
+        }
+        let line = code[j].line;
+        let mut k = j + 2;
+        let mut angle = 0i32;
+        let mut bracket = 0i32;
+        let mut ty: Vec<&str> = Vec::new();
+        while k < code.len() {
+            let s = text(f, &code[k]);
+            match s {
+                "<" => angle += 1,
+                ">" => angle -= 1,
+                "[" | "(" => bracket += 1,
+                "]" | ")" => bracket -= 1,
+                "," if angle == 0 && bracket == 0 => break,
+                "}" if angle == 0 && bracket == 0 => break,
+                _ => {}
+            }
+            ty.push(s);
+            k += 1;
+        }
+        out.push((fname.to_string(), line, ty == ["u64"]));
+        if is(f, k, ",") {
+            k += 1;
+        }
+        j = k;
+    }
+    Some(out)
+}
+
+/// Collect the string literals of `const <name> … = [ "…", … ];` (or a
+/// slice literal) → (set, line of the name).
+fn const_str_list(f: &SourceFile, name: &str) -> Option<(BTreeSet<String>, u32)> {
+    let code = &f.code;
+    for i in 0..code.len() {
+        if ident_at(f, i) != Some(name) {
+            continue;
+        }
+        // must be a declaration: preceded by `const` or `static` nearby
+        let declared = (i.saturating_sub(2)..i)
+            .any(|j| matches!(ident_at(f, j), Some("const") | Some("static")));
+        if !declared {
+            continue;
+        }
+        let line = code[i].line;
+        let mut set = BTreeSet::new();
+        let mut j = i + 1;
+        // the `;` inside an array type like `[&str; 11]` is not the
+        // declaration terminator — only a depth-0 `;` is
+        let mut depth = 0i32;
+        while j < code.len() {
+            let s = text(f, &code[j]);
+            match s {
+                "[" | "(" | "{" => depth += 1,
+                "]" | ")" | "}" => depth -= 1,
+                ";" if depth == 0 => break,
+                _ => {}
+            }
+            if code[j].kind == TokKind::Str {
+                set.insert(str_content(s).to_string());
+            }
+            j += 1;
+        }
+        return Some((set, line));
+    }
+    None
+}
+
+/// Extract the backticked names from the "Registry names" module-doc
+/// paragraph: the marker line itself contributes nothing; following
+/// comment lines contribute their backticked spans until a line ending
+/// with `.` closes the list.
+fn doc_name_list(f: &SourceFile) -> Option<(BTreeSet<String>, u32)> {
+    let comments: Vec<&Token> = f
+        .tokens
+        .iter()
+        .filter(|t| t.kind == TokKind::Comment)
+        .collect();
+    let marker = comments
+        .iter()
+        .position(|t| t.text(&f.text).contains("Registry names"))?;
+    let line = comments[marker].line;
+    let mut names = BTreeSet::new();
+    for t in &comments[marker + 1..] {
+        let body = t
+            .text(&f.text)
+            .trim_start_matches('/')
+            .trim_start_matches('!')
+            .trim();
+        let mut rest = body;
+        while let Some(open) = rest.find('`') {
+            let after = &rest[open + 1..];
+            let Some(close) = after.find('`') else { break };
+            names.insert(after[..close].to_string());
+            rest = &after[close + 1..];
+        }
+        if body.ends_with('.') {
+            return Some((names, line));
+        }
+    }
+    // unterminated list — treat as not found so the rule reports it
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sim_file(src: &str) -> SourceFile {
+        SourceFile::parse("src/sim/fake.rs".into(), src.into())
+    }
+
+    fn lint_nondet(src: &str) -> Vec<Diagnostic> {
+        let f = sim_file(src);
+        let mut out = Vec::new();
+        nondet_iteration(&f, &mut out);
+        out
+    }
+
+    #[test]
+    fn nondet_flags_map_iteration() {
+        let out = lint_nondet(
+            "use std::collections::HashMap;\n\
+             pub fn f(m: &HashMap<u64, u64>) -> u64 {\n\
+                 m.iter().map(|(_, v)| v).sum()\n\
+             }\n",
+        );
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].rule, RULE_NONDET);
+        assert_eq!(out[0].line, 3);
+    }
+
+    #[test]
+    fn nondet_flags_field_and_for_loop() {
+        let out = lint_nondet(
+            "use std::collections::{HashMap, HashSet};\n\
+             pub struct S { frames: HashMap<u64, u64>, live: HashSet<u64> }\n\
+             impl S {\n\
+                 pub fn a(&self) -> Vec<u64> { self.frames.keys().copied().collect() }\n\
+                 pub fn b(&self) { for p in &self.live { drop(p); } }\n\
+             }\n",
+        );
+        let lines: Vec<u32> = out.iter().map(|d| d.line).collect();
+        assert_eq!(lines, vec![4, 5]);
+    }
+
+    #[test]
+    fn nondet_respects_waiver_sort_and_tests() {
+        let out = lint_nondet(
+            "use std::collections::HashMap;\n\
+             pub fn w(m: &HashMap<u64, u64>) -> usize {\n\
+                 // lint: sorted — count is order-independent\n\
+                 m.values().filter(|v| **v > 0).count()\n\
+             }\n\
+             pub fn s(m: &HashMap<u64, u64>) -> Vec<u64> {\n\
+                 let mut v: Vec<u64> = m.keys().copied().collect();\n\
+                 v.sort_unstable();\n\
+                 v\n\
+             }\n\
+             #[cfg(test)]\n\
+             mod tests {\n\
+                 use std::collections::HashMap;\n\
+                 fn t(m: &HashMap<u64, u64>) -> usize { m.iter().count() }\n\
+             }\n",
+        );
+        assert!(out.is_empty(), "unexpected: {:?}", out.first().map(|d| d.line));
+    }
+
+    #[test]
+    fn nondet_ignores_btreemap_and_other_dirs() {
+        let out = lint_nondet(
+            "use std::collections::BTreeMap;\n\
+             pub fn f(m: &BTreeMap<u64, u64>) -> Vec<u64> { m.keys().copied().collect() }\n",
+        );
+        assert!(out.is_empty());
+        let f = SourceFile::parse(
+            "src/util/fake.rs".into(),
+            "use std::collections::HashMap;\n\
+             pub fn f(m: &HashMap<u64, u64>) -> usize { m.iter().count() }\n"
+                .into(),
+        );
+        let mut out = Vec::new();
+        nondet_iteration(&f, &mut out);
+        assert!(out.is_empty(), "util/ is not a watched dir");
+    }
+
+    #[test]
+    fn clock_flags_instant_outside_allow_list() {
+        let f = sim_file("pub fn t() { let _x = std::time::Instant::now(); }\n");
+        let mut out = Vec::new();
+        wall_clock(&f, &mut out);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].rule, RULE_CLOCK);
+        assert_eq!(out[0].line, 1);
+        // comments and strings never trip it
+        let f = sim_file("// Instant::now is banned\npub const X: &str = \"Instant\";\n");
+        let mut out = Vec::new();
+        wall_clock(&f, &mut out);
+        assert!(out.is_empty());
+        // main.rs is allow-listed
+        let f = SourceFile::parse(
+            "src/main.rs".into(),
+            "pub fn t() { let _x = std::time::Instant::now(); }\n".into(),
+        );
+        let mut out = Vec::new();
+        wall_clock(&f, &mut out);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn unwrap_counting_is_token_level() {
+        let f = sim_file(
+            "pub fn f(x: Option<u64>) -> u64 {\n\
+                 let a = x.unwrap();\n\
+                 let b = x.expect(\"msg\");\n\
+                 let c = x.unwrap_or(0); // not counted\n\
+                 // x.unwrap() in a comment: not counted\n\
+                 a + b + c\n\
+             }\n\
+             #[cfg(test)]\n\
+             mod tests {\n\
+                 fn t(x: Option<u64>) -> u64 { x.unwrap() }\n\
+             }\n",
+        );
+        let counts = unwrap_counts(&[f]);
+        assert_eq!(counts.get("sim"), Some(&2));
+    }
+
+    #[test]
+    fn ratchet_flags_growth_and_notes_shrinkage() {
+        let f = sim_file("pub fn f(x: Option<u64>) -> u64 { x.unwrap() }\n");
+        let mut report = LintReport::default();
+        unwrap_ratchet(&[f], None, &mut report);
+        assert_eq!(report.violations.len(), 1);
+        assert_eq!(report.violations[0].rule, RULE_RATCHET);
+
+        let f = sim_file("pub fn f(x: Option<u64>) -> u64 { x.unwrap() }\n");
+        let mut entries = BTreeMap::new();
+        entries.insert("sim".to_string(), (5usize, 1u32));
+        let baseline = Baseline { entries };
+        let mut report = LintReport::default();
+        unwrap_ratchet(&[f], Some(&baseline), &mut report);
+        assert!(report.violations.is_empty());
+        assert_eq!(report.notes.len(), 1, "shrinkage should be noted");
+    }
+
+    #[test]
+    fn conservation_finds_dropped_counter() {
+        let stats = SourceFile::parse(
+            "src/sim/stats.rs".into(),
+            "pub struct Stats { pub kept: u64, pub lost: u64, pub not_a_counter: f64 }\n\
+             pub struct MetricsSnapshot { pub kept: u64 }\n"
+                .into(),
+        );
+        let sink = SourceFile::parse(
+            "src/api/sink.rs".into(),
+            "pub const COLUMNS: &[&str] = &[\"kept\"];\n".into(),
+        );
+        let store = SourceFile::parse(
+            "src/results/store.rs".into(),
+            "pub fn codec() -> &'static str { \"kept\" }\n".into(),
+        );
+        let mut report = LintReport::default();
+        counter_conservation(&[stats, sink, store], &mut report);
+        let msgs: Vec<&str> = report.violations.iter().map(|d| d.msg.as_str()).collect();
+        assert_eq!(report.violations.len(), 3, "{msgs:?}");
+        assert!(report.violations.iter().all(|d| d.rule == RULE_CONSERVATION));
+        assert!(msgs.iter().all(|m| m.contains("lost")));
+    }
+
+    #[test]
+    fn registry_rule_cross_checks_three_sources() {
+        let reg = SourceFile::parse(
+            "src/api/registry.rs".into(),
+            "fn builtin(reg: &mut R) {\n\
+                 reg.add(StrategySpec::new(\"alpha\", \"Alpha\", f));\n\
+                 reg.add(StrategySpec::new(\"phantom\", \"Ghost\", f));\n\
+             }\n"
+            .into(),
+        );
+        let tests = SourceFile::parse(
+            "tests/api_registry.rs".into(),
+            "const BUILTIN: [&str; 1] = [\"alpha\"];\n".into(),
+        );
+        let docs = SourceFile::parse(
+            "src/policy/mod.rs".into(),
+            "//! Registry names (in registration order):\n\
+             //! `alpha`.\n"
+                .into(),
+        );
+        let mut report = LintReport::default();
+        registry_exhaustiveness(&[reg, tests, docs], &mut report);
+        // phantom: missing from BUILTIN + missing from docs
+        assert_eq!(report.violations.len(), 2);
+        assert!(report.violations.iter().all(|d| d.rule == RULE_REGISTRY));
+        assert!(report.violations.iter().all(|d| d.msg.contains("phantom")));
+        assert_eq!(report.violations[0].line, 3);
+    }
+}

@@ -1,0 +1,304 @@
+//! Lexed source files and the module-aware tree walker.
+//!
+//! A [`SourceFile`] is one `.rs` file plus everything the rules need to
+//! query repeatedly: the token stream (with and without comments), the
+//! line ranges covered by `#[cfg(test)] mod` items, the lines waived by
+//! `// lint: sorted` comments, and the raw line text (for the
+//! feeds-a-sort lookahead). [`collect_sources`] walks `<root>/src` and
+//! `<root>/tests` in sorted order so diagnostics are emitted
+//! deterministically, skipping `fixtures/`, `target/`, and `.git/`.
+
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+use crate::util::rustlex::{lex, TokKind, Token};
+
+/// Directory names never descended into. `fixtures` keeps the committed
+/// bad-on-purpose lint fixture tree out of the real lint run.
+const SKIP_DIRS: &[&str] = &["fixtures", "target", ".git"];
+
+pub struct SourceFile {
+    /// Path relative to the lint root, `/`-separated (e.g.
+    /// `src/sim/session.rs`). Rules key all scoping decisions off this.
+    pub rel: String,
+    pub text: String,
+    /// Every token, comments included (waiver + doc-list extraction).
+    pub tokens: Vec<Token>,
+    /// Code tokens only (comments stripped) — what the rules scan.
+    pub code: Vec<Token>,
+    /// Inclusive line ranges of `#[cfg(test)] mod … { … }` items.
+    test_ranges: Vec<(u32, u32)>,
+    /// Lines carrying (or directly below) a `// lint: sorted` waiver.
+    waived_lines: Vec<u32>,
+}
+
+impl SourceFile {
+    pub fn parse(rel: String, text: String) -> SourceFile {
+        let tokens = lex(&text);
+        let code: Vec<Token> = tokens
+            .iter()
+            .copied()
+            .filter(|t| t.kind != TokKind::Comment)
+            .collect();
+        let test_ranges = find_test_ranges(&text, &code);
+        let mut waived_lines = Vec::new();
+        for t in &tokens {
+            if t.kind == TokKind::Comment && t.text(&text).contains("lint: sorted") {
+                // waives the comment's own line (trailing form) and the
+                // line below (line-above form)
+                waived_lines.push(t.line);
+                waived_lines.push(t.line + 1);
+            }
+        }
+        SourceFile {
+            rel,
+            text,
+            tokens,
+            code,
+            test_ranges,
+            waived_lines,
+        }
+    }
+
+    /// Is `line` inside a `#[cfg(test)] mod` region?
+    pub fn in_test(&self, line: u32) -> bool {
+        self.test_ranges.iter().any(|&(lo, hi)| lo <= line && line <= hi)
+    }
+
+    /// Does `line` carry a `// lint: sorted` waiver (same line or the
+    /// line above)?
+    pub fn waived(&self, line: u32) -> bool {
+        self.waived_lines.contains(&line)
+    }
+
+    /// Does the flagged iteration feed an explicit sort? True when
+    /// `.sort` appears in the source text on `line..=line+2` — the
+    /// collect-then-`sort_unstable()` idiom the codebase already uses.
+    pub fn feeds_sort(&self, line: u32) -> bool {
+        self.text
+            .lines()
+            .skip(line.saturating_sub(1) as usize)
+            .take(3)
+            .any(|l| l.contains(".sort"))
+    }
+
+    /// First path component under `src/` — the ratchet's module key
+    /// (`src/api/sink.rs` → `api`, `src/config.rs` → `config`,
+    /// `src/lib.rs` → `lib`).
+    pub fn module(&self) -> Option<&str> {
+        let rest = self.rel.strip_prefix("src/")?;
+        Some(match rest.split_once('/') {
+            Some((dir, _)) => dir,
+            None => rest.strip_suffix(".rs").unwrap_or(rest),
+        })
+    }
+}
+
+/// Locate `#[cfg(test)] mod name { … }` items by token-level brace
+/// matching. String/char/comment contents are single tokens, so brace
+/// counting over code tokens cannot desync on literals.
+fn find_test_ranges(src: &str, code: &[Token]) -> Vec<(u32, u32)> {
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < code.len() {
+        if !(code[i].kind == TokKind::Punct && code[i].text(src) == "#") {
+            i += 1;
+            continue;
+        }
+        // attribute `#[ … ]` — bracket-match and remember whether it
+        // mentions both `cfg` and `test` (covers `cfg(all(test, …))`)
+        let attr_start = i;
+        if !matches!(code.get(i + 1), Some(t) if t.text(src) == "[") {
+            i += 1;
+            continue;
+        }
+        let mut j = i + 2;
+        let mut depth = 1i32;
+        let mut saw_cfg = false;
+        let mut saw_test = false;
+        while j < code.len() && depth > 0 {
+            let t = code[j].text(src);
+            match t {
+                "[" => depth += 1,
+                "]" => depth -= 1,
+                "cfg" => saw_cfg = true,
+                "test" => saw_test = true,
+                _ => {}
+            }
+            j += 1;
+        }
+        if !(saw_cfg && saw_test) {
+            i = j;
+            continue;
+        }
+        // skip any further attributes between #[cfg(test)] and the item
+        while matches!(code.get(j), Some(t) if t.text(src) == "#")
+            && matches!(code.get(j + 1), Some(t) if t.text(src) == "[")
+        {
+            let mut depth = 1i32;
+            j += 2;
+            while j < code.len() && depth > 0 {
+                match code[j].text(src) {
+                    "[" => depth += 1,
+                    "]" => depth -= 1,
+                    _ => {}
+                }
+                j += 1;
+            }
+        }
+        // expect `mod name {` — anything else (a cfg(test)'d fn or use)
+        // is not a region, leave it to per-line judgement
+        let is_mod = matches!(code.get(j), Some(t) if t.kind == TokKind::Ident && t.text(src) == "mod");
+        if !is_mod {
+            i = j.max(attr_start + 1);
+            continue;
+        }
+        let mut k = j + 1;
+        while k < code.len() && code[k].text(src) != "{" {
+            if code[k].text(src) == ";" {
+                break; // `mod name;` — no inline body
+            }
+            k += 1;
+        }
+        if k >= code.len() || code[k].text(src) != "{" {
+            i = k;
+            continue;
+        }
+        let start_line = code[attr_start].line;
+        let mut depth = 1i32;
+        let mut m = k + 1;
+        while m < code.len() && depth > 0 {
+            match code[m].text(src) {
+                "{" => depth += 1,
+                "}" => depth -= 1,
+                _ => {}
+            }
+            m += 1;
+        }
+        let end_line = code.get(m.saturating_sub(1)).map_or(u32::MAX, |t| t.line);
+        out.push((start_line, end_line));
+        i = m;
+    }
+    out
+}
+
+/// Collect and parse every `.rs` file under `<root>/src` and
+/// `<root>/tests`, sorted by relative path.
+pub fn collect_sources(root: &Path) -> io::Result<Vec<SourceFile>> {
+    let mut paths: Vec<PathBuf> = Vec::new();
+    for top in ["src", "tests"] {
+        let dir = root.join(top);
+        if dir.is_dir() {
+            walk(&dir, &mut paths)?;
+        }
+    }
+    let mut rels: Vec<(String, PathBuf)> = paths
+        .into_iter()
+        .map(|p| {
+            let rel = p
+                .strip_prefix(root)
+                .unwrap_or(&p)
+                .components()
+                .map(|c| c.as_os_str().to_string_lossy().into_owned())
+                .collect::<Vec<_>>()
+                .join("/");
+            (rel, p)
+        })
+        .collect();
+    rels.sort();
+    let mut out = Vec::with_capacity(rels.len());
+    for (rel, path) in rels {
+        let text = fs::read_to_string(&path)?;
+        out.push(SourceFile::parse(rel, text));
+    }
+    Ok(out)
+}
+
+fn walk(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    for entry in fs::read_dir(dir)? {
+        let entry = entry?;
+        let path = entry.path();
+        let name = entry.file_name().to_string_lossy().into_owned();
+        if path.is_dir() {
+            if !SKIP_DIRS.contains(&name.as_str()) {
+                walk(&path, out)?;
+            }
+        } else if name.ends_with(".rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn file(src: &str) -> SourceFile {
+        SourceFile::parse("src/sim/fake.rs".into(), src.into())
+    }
+
+    #[test]
+    fn test_mod_region_is_detected() {
+        let f = file(
+            "pub fn real() {}\n\
+             #[cfg(test)]\n\
+             mod tests {\n\
+                 use super::*;\n\
+                 fn helper() { let _ = 1; }\n\
+             }\n\
+             pub fn after() {}\n",
+        );
+        assert!(!f.in_test(1));
+        assert!(f.in_test(2));
+        assert!(f.in_test(5));
+        assert!(!f.in_test(7));
+    }
+
+    #[test]
+    fn cfg_test_fn_is_not_a_region() {
+        // only `mod` items form regions; a cfg(test) fn stays visible
+        let f = file("#[cfg(test)]\nfn helper() {}\n");
+        assert!(!f.in_test(2));
+    }
+
+    #[test]
+    fn waiver_covers_same_line_and_line_below() {
+        let f = file("a(); // lint: sorted\nb();\nc();\n");
+        assert!(f.waived(1));
+        assert!(f.waived(2));
+        assert!(!f.waived(3));
+    }
+
+    #[test]
+    fn feeds_sort_looks_two_lines_ahead() {
+        let f = file("let mut v: Vec<u64> = m.keys().copied().collect();\nv.sort_unstable();\n");
+        assert!(f.feeds_sort(1));
+        let g = file("let v = m.keys();\nuse_it(v);\nmore();\nv.sort();\n");
+        assert!(!g.feeds_sort(1));
+    }
+
+    #[test]
+    fn module_keys() {
+        assert_eq!(file("").module(), Some("sim"));
+        let lib = SourceFile::parse("src/lib.rs".into(), String::new());
+        assert_eq!(lib.module(), Some("lib"));
+        let t = SourceFile::parse("tests/session.rs".into(), String::new());
+        assert_eq!(t.module(), None);
+    }
+
+    #[test]
+    fn braces_in_strings_do_not_desync_regions() {
+        let f = file(
+            "#[cfg(test)]\n\
+             mod tests {\n\
+                 const S: &str = \"}}}{{{\";\n\
+                 fn x() {}\n\
+             }\n\
+             pub fn after() {}\n",
+        );
+        assert!(f.in_test(4));
+        assert!(!f.in_test(6));
+    }
+}

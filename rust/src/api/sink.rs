@@ -26,6 +26,9 @@ pub trait SweepSink {
 }
 
 /// CSV column order shared by [`CsvSink`] and the console header.
+/// Counter conservation (enforced by `repro lint`): every `u64` counter
+/// field of [`crate::sim::Stats`] must appear here, so no counter can be
+/// recorded by the simulator yet silently dropped from sweep reports.
 const COLUMNS: &[&str] = &[
     "workload",
     "strategy",
@@ -35,10 +38,14 @@ const COLUMNS: &[&str] = &[
     "status",
     "thrash_events",
     "unique_thrashed",
+    "accesses",
+    "tlb_hits",
+    "tlb_misses",
     "faults",
     "hits",
     "migrations",
     "evictions",
+    "writebacks",
     "prefetches",
     "garbage_prefetches",
     "pre_evictions",
@@ -51,6 +58,8 @@ const COLUMNS: &[&str] = &[
     "ipc",
     "inference_calls",
     "predictions",
+    "prediction_overhead_cycles",
+    "policy_victim_fallbacks",
     "error",
 ];
 
@@ -82,10 +91,14 @@ fn csv_fields(rec: &CellRecord) -> Vec<String> {
             row.extend([
                 s.thrash_events.to_string(),
                 s.thrashed_pages.len().to_string(),
+                s.accesses.to_string(),
+                s.tlb_hits.to_string(),
+                s.tlb_misses.to_string(),
                 s.faults.to_string(),
                 s.hits.to_string(),
                 s.migrations.to_string(),
                 s.evictions.to_string(),
+                s.writebacks.to_string(),
                 s.prefetches.to_string(),
                 s.garbage_prefetches.to_string(),
                 s.pre_evictions.to_string(),
@@ -98,6 +111,8 @@ fn csv_fields(rec: &CellRecord) -> Vec<String> {
                 format!("{:.6}", s.ipc()),
                 r.inference_calls.to_string(),
                 s.predictions.to_string(),
+                s.prediction_overhead_cycles.to_string(),
+                s.policy_victim_fallbacks.to_string(),
                 String::new(),
             ]);
         }

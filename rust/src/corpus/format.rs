@@ -182,8 +182,27 @@ pub fn encode(trace: &Trace, key: &str) -> Vec<u8> {
 
 // ---- decode ----------------------------------------------------------------
 
+/// Little-endian u64 at `b[at..at + 8]`. Callers bound-check `b` first;
+/// spelled as an explicit byte gather so corrupt-input paths stay free
+/// of unwraps (unwrap-ratchet).
+fn le_u64(b: &[u8], at: usize) -> u64 {
+    u64::from_le_bytes([
+        b[at],
+        b[at + 1],
+        b[at + 2],
+        b[at + 3],
+        b[at + 4],
+        b[at + 5],
+        b[at + 6],
+        b[at + 7],
+    ])
+}
+
 /// Validate the fixed header and extract `(checksum, body_len)`.
-fn parse_header(header: &[u8; HEADER_LEN]) -> Result<(u64, u64)> {
+fn parse_header(header: &[u8]) -> Result<(u64, u64)> {
+    if header.len() < HEADER_LEN {
+        bail!("uvmt: file shorter than the {HEADER_LEN}-byte header");
+    }
     if header[0..4] != MAGIC {
         bail!("uvmt: bad magic (not a .uvmt file)");
     }
@@ -191,19 +210,15 @@ fn parse_header(header: &[u8; HEADER_LEN]) -> Result<(u64, u64)> {
     if version != VERSION {
         bail!("uvmt: unsupported format version {version} (this build reads {VERSION})");
     }
-    let checksum = u64::from_le_bytes(header[8..16].try_into().unwrap());
-    let body_len = u64::from_le_bytes(header[16..24].try_into().unwrap());
+    let checksum = le_u64(header, 8);
+    let body_len = le_u64(header, 16);
     Ok((checksum, body_len))
 }
 
 /// Verify the container (magic, version, length, checksum) and return
 /// the body slice.
 fn checked_body(bytes: &[u8]) -> Result<&[u8]> {
-    if bytes.len() < HEADER_LEN {
-        bail!("uvmt: file shorter than the {HEADER_LEN}-byte header");
-    }
-    let header: &[u8; HEADER_LEN] = bytes[..HEADER_LEN].try_into().unwrap();
-    let (checksum, body_len) = parse_header(header)?;
+    let (checksum, body_len) = parse_header(bytes)?;
     let body = &bytes[HEADER_LEN..];
     if body_len != body.len() as u64 {
         bail!(

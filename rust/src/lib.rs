@@ -35,7 +35,37 @@
 //! against shared resources — one [`sim::Interconnect`], one
 //! [`sim::FaultBatcher`] — with per-tenant cycle attribution at the
 //! [`sim::Clock::charge`] choke point.
+//!
+//! ## House invariants
+//!
+//! Everything above is pinned to these rules; [`analysis`] (the
+//! `repro lint` static pass) and [`sim::AuditObserver`] (the runtime
+//! auditor behind `repro simulate --audit`) enforce them mechanically:
+//!
+//! 1. **Bit-stable determinism.** Same inputs → same bytes, always:
+//!    serial ≡ parallel sweeps, [`sim::Session`] ≡ [`sim::Engine`],
+//!    online schedules ≡ offline interleaves, and every
+//!    [`results::ResultStore`] cell is fully determined by its key. No
+//!    hash-order iteration in result-bearing code, no wall-clock time or
+//!    ambient entropy outside the CLI driver and the serve loop — time
+//!    comes from [`sim::clock`], randomness from [`util::rng`].
+//! 2. **Counter conservation.** Every `u64` counter in [`sim::Stats`]
+//!    reaches [`sim::MetricsSnapshot`], the sweep CSV header, and the
+//!    `cell/v1` result codec; at run time `tlb_hits + tlb_misses ==
+//!    accesses`, `evictions_avoided ≤ pre_evictions ≤ evictions ≤
+//!    migrations`, residency never exceeds capacity, snapshots never
+//!    move backwards, and per-tenant cycles sum exactly to the combined
+//!    session's.
+//! 3. **Corrupt input never panics library code.** Decode paths
+//!    ([`corpus::format`], [`results`] parsing) return `Result`; the
+//!    unwrap-ratchet (`lint-baseline.txt`) only goes down.
+//! 4. **Registries stay exhaustive.** Builtin strategy names agree
+//!    across [`api::StrategyRegistry`], the `BUILTIN` test inventory,
+//!    and the [`policy`] module docs.
 
+#![forbid(unsafe_code)]
+
+pub mod analysis;
 pub mod api;
 pub mod config;
 pub mod coordinator;

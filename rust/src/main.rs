@@ -13,6 +13,7 @@
 //! repro results list --results results
 //! repro serve --addr 127.0.0.1:7077 --corpus corpus --results results
 //! repro accuracy --workload Hotspot --method ours
+//! repro lint --deny
 //! repro info
 //! ```
 //!
@@ -40,7 +41,7 @@ use uvmio::predictor::features::samples_from_trace;
 use uvmio::predictor::{native_dims, NativeModel};
 use uvmio::results::{serve_stdin, serve_tcp, ResultStore, ServeShared};
 use uvmio::runtime::{Manifest, ModelBackend, PredictorKind, Runtime};
-use uvmio::sim::{Arena, CostModelKind, Session};
+use uvmio::sim::{Arena, AuditObserver, CostModelKind, Session};
 use uvmio::trace::workloads::Workload;
 use uvmio::trace::Trace;
 use uvmio::util::cli::Args;
@@ -66,7 +67,7 @@ USAGE:
       re-running a table/figure skips already-computed simulations
       (store shared with `repro sweep --results`)
   repro simulate --workload W --strategy S [--oversub PCT] [--scale N] [--seed N]
-              [--cost-model table-v|coherent-link] [--predictor B]
+              [--cost-model table-v|coherent-link] [--predictor B] [--audit]
       one simulation cell; S is ANY registered strategy name
       (`repro info` lists them; builtin: baseline demand-hpe tree-hpe
       tree-evict demand-belady demand-lru demand-random uvmsmart
@@ -79,9 +80,14 @@ USAGE:
       pricing; coherent-link prices the same run like
       Grace-Hopper-class hardware). --predictor picks the model backend
       (native|stub|pjrt, default native) for artifact-backed strategies
-      like `intelligent`
+      like `intelligent`. --audit attaches the runtime invariant
+      auditor: every simulation event is checked against the counter
+      conservation laws (tlb_hits+tlb_misses == accesses, eviction /
+      pre-eviction / writeback orderings, capacity bounds, counter
+      monotonicity) and the run panics with the offending event on the
+      first violation
   repro simulate --stream corpus:NAME [--strategy S] [--oversub PCT]
-              [--corpus DIR] [--progress [N]] [--cost-model M]
+              [--corpus DIR] [--progress [N]] [--cost-model M] [--audit]
       one-off streamed run: decode the named .uvmt corpus entry access
       by access through a Session in O(1) memory (entries larger than
       RAM stream fine); --progress prints a mid-run snapshot line every
@@ -167,6 +173,20 @@ USAGE:
               [--predictor native|stub|pjrt]
       predictor accuracy on one workload (default backend: the
       artifact-free native predictor)
+  repro lint [--deny] [--write-baseline] [PATH]
+      dependency-free determinism/conservation static analysis over the
+      crate tree at PATH (default: the uvmio crate). Rules:
+      nondet-iteration (hash-order iteration in result-bearing modules;
+      waive with `// lint: sorted <reason>` on or directly above the
+      line, or sort within two lines), wall-clock (Instant/SystemTime/
+      ambient entropy in library code), unwrap-ratchet (unwrap/expect
+      counts may only go down vs the committed lint-baseline.txt;
+      regenerate a tighter ceiling with --write-baseline),
+      counter-conservation (every u64 Stats counter reaches
+      MetricsSnapshot, the sweep CSV header, and the cell/v1 codec), and
+      registry-exhaustiveness (registry ≡ BUILTIN test ≡ policy doc
+      list). --deny exits non-zero on any violation (the blocking CI
+      lane)
   repro info
       registered strategies + artifact manifest + workload inventory
 ";
@@ -191,6 +211,7 @@ fn real_main() -> anyhow::Result<()> {
         Some("results") => cmd_results(&args),
         Some("serve") => cmd_serve(&args),
         Some("accuracy") => cmd_accuracy(&args),
+        Some("lint") => cmd_lint(&args),
         Some("info") => cmd_info(),
         _ => {
             print!("{USAGE}");
@@ -451,6 +472,9 @@ fn cmd_simulate_stream(args: &Args, stream: &str) -> anyhow::Result<()> {
             meta.accesses,
         )));
     }
+    if args.has("audit") {
+        session.add_observer(Box::new(AuditObserver::new(spec.cfg.capacity_pages)));
+    }
     session.feed_results(&mut reader)?;
 
     // same §V-C prediction-overhead post-pass as the registry path
@@ -486,7 +510,7 @@ fn cmd_simulate_stream(args: &Args, stream: &str) -> anyhow::Result<()> {
 fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
     args.reject_unknown(&[
         "workload", "strategy", "oversub", "scale", "seed", "artifacts",
-        "stream", "corpus", "progress", "cost-model", "predictor",
+        "stream", "corpus", "progress", "cost-model", "predictor", "audit",
     ])
     .map_err(anyhow::Error::msg)?;
     if let Some(stream) = args.get("stream") {
@@ -518,7 +542,16 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
     } else {
         StrategyCtx::default()
     };
-    let cell = registry.run(&strategy, &spec, &ctx)?;
+    let cell = if args.has("audit") {
+        registry.run_observed(
+            &strategy,
+            &spec,
+            &ctx,
+            vec![Box::new(AuditObserver::new(spec.cfg.capacity_pages))],
+        )?
+    } else {
+        registry.run(&strategy, &spec, &ctx)?
+    };
     let s = &cell.outcome.stats;
     println!("workload        : {} ({} pages, {} accesses)", trace.name,
              trace.working_set_pages, trace.accesses.len());
@@ -1075,6 +1108,64 @@ fn cmd_accuracy(args: &Args) -> anyhow::Result<()> {
     println!("method  : {}", report.method);
     println!("top-1   : {:.3} over {} evaluations", report.top1, report.evaluated);
     println!("training: {} steps, {} model(s)", report.train_steps, report.patterns_used);
+    Ok(())
+}
+
+/// `repro lint [--deny] [--write-baseline] [PATH]` — the
+/// determinism/conservation static-analysis pass over a crate tree
+/// (default: the crate this binary was built from, or `rust/` when run
+/// from the workspace root).
+fn cmd_lint(args: &Args) -> anyhow::Result<()> {
+    args.reject_unknown(&["deny", "write-baseline"])
+        .map_err(anyhow::Error::msg)?;
+    // boolean flags swallow a following bare token as their value, so
+    // accept both `lint rust --deny` and `lint --deny rust`
+    let mut root: Option<String> = args.positional.first().cloned();
+    for flag in ["deny", "write-baseline"] {
+        if let Some(v) = args.get(flag) {
+            if v != uvmio::util::cli::FLAG_SET {
+                root = Some(v.to_string());
+            }
+        }
+    }
+    let root = root.unwrap_or_else(|| {
+        if std::path::Path::new("rust/src").is_dir() {
+            "rust".into()
+        } else {
+            ".".into()
+        }
+    });
+    let root = std::path::Path::new(&root);
+
+    if args.has("write-baseline") {
+        let rendered = uvmio::analysis::write_baseline(root)?;
+        eprintln!(
+            "wrote {}",
+            root.join(uvmio::analysis::BASELINE_FILE).display()
+        );
+        print!("{rendered}");
+        return Ok(());
+    }
+
+    let report = uvmio::analysis::run_lint(root)?;
+    for d in &report.violations {
+        println!("{d}");
+    }
+    for n in &report.notes {
+        println!("note: {n}");
+    }
+    println!(
+        "lint: {} file(s) checked, {} violation(s), {} note(s)",
+        report.files,
+        report.violations.len(),
+        report.notes.len()
+    );
+    if args.has("deny") && !report.clean() {
+        anyhow::bail!(
+            "lint --deny: {} violation(s)",
+            report.violations.len()
+        );
+    }
     Ok(())
 }
 

@@ -104,10 +104,12 @@ impl Evictor for Belady {
                 }
             }
         }
-        // heap exhausted but pages resident (shouldn't happen): linear scan
+        // heap exhausted but pages resident (shouldn't happen): linear
+        // scan, page number as tie-break so hash order never decides
+        // lint: sorted — max over (next_use, page) is order-independent
         self.next_use
             .iter()
-            .max_by_key(|(_, &nu)| nu)
+            .max_by_key(|(&p, &nu)| (nu, p))
             .map(|(&p, _)| p)
     }
 }
@@ -129,10 +131,14 @@ pub fn count_misses<E: Evictor>(seq: &[Page], capacity: usize, ev: &mut E) -> u6
         if !is_res {
             misses += 1;
             if resident.len() >= capacity {
+                // fallback for evictors returning an invalid victim:
+                // deterministic min-page pick, never hash order
                 let v = ev
                     .select_victim(&mem)
                     .filter(|v| resident.contains(v))
-                    .unwrap_or_else(|| *resident.iter().next().unwrap());
+                    // lint: sorted — min() is order-independent
+                    .or_else(|| resident.iter().min().copied())
+                    .unwrap_or(p);
                 resident.remove(&v);
                 ev.on_evict(v);
             }

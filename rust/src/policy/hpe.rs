@@ -119,7 +119,7 @@ impl Hpe {
             return;
         }
         let dense = self
-            .bb_pages
+            .bb_pages // lint: sorted — counting is order-independent
             .values()
             .filter(|&&c| c >= self.dense_threshold)
             .count();

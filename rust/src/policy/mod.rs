@@ -51,6 +51,13 @@
 //! [`composite::Composite`]; [`Evictor::pre_evict`] is the hook a
 //! proactive evictor uses to surface background pre-eviction
 //! candidates through the composite.
+//!
+//! Registry names (in registration order):
+//! `baseline`, `demand-hpe`, `tree-hpe`, `hpe-preevict`, `tree-evict`,
+//! `demand-belady`, `demand-lru`, `demand-random`, `uvmsmart`,
+//! `intelligent`, `intelligent-native`.
+//! The registry-exhaustiveness lint keeps this list in sync with
+//! `StrategyRegistry::builtin` and the `BUILTIN` test inventory.
 
 pub mod belady;
 pub mod composite;

@@ -1,0 +1,325 @@
+//! Runtime invariant auditor — the dynamic half of the lint pass.
+//!
+//! [`AuditObserver`] is an [`Observer`] that re-validates the
+//! simulator's conservation laws on **every emitted event** and panics
+//! with the offending event context the moment one breaks. The static
+//! lint (`repro lint`) catches nondeterminism at the source level; this
+//! catches accounting bugs at run time — a counter bumped on one path
+//! but not its conservation partner, residency exceeding capacity, a
+//! snapshot that moved backwards.
+//!
+//! Checked on every event (see `src/lib.rs` for the house-invariants
+//! list these implement):
+//!
+//! - `resident_pages ≤ capacity`
+//! - `tlb_hits + tlb_misses == accesses` (every access is translated
+//!   exactly once, counted before fault service)
+//! - `hits + faults ≤ accesses`, short by at most the single access
+//!   currently being serviced (background pre-evict events fire inside
+//!   the fault path, after the access is counted and before the fault
+//!   is)
+//! - `evictions_avoided ≤ pre_evictions` (an admission can only be
+//!   credited against a pre-eviction that actually happened)
+//! - `pre_evictions ≤ evictions ≤ migrations` (pages leave only after
+//!   they arrived) and `writebacks ≤ evictions`
+//! - `thrashed_unique ≤ thrash_events ≤ migrations` and
+//!   `evicted_unique ≤ evictions`
+//! - `background_link_cycles ≤ link_busy_cycles` (slack scheduling
+//!   never invents link capacity)
+//! - snapshot monotonicity: every cumulative counter is non-decreasing
+//!   event-over-event, and `crashed` never un-crashes
+//!
+//! Attach with [`crate::sim::Session::add_observer`] (or
+//! `repro simulate --audit`); the tier-1 grid test drives it across all
+//! 11 workloads × {125, 150}. The auditor holds no simulation state
+//! beyond the previous snapshot, so attaching it never perturbs
+//! results — the equivalence suites stay byte-identical with it on.
+
+use super::session::{Observer, SimEvent};
+use super::stats::MetricsSnapshot;
+
+pub struct AuditObserver {
+    capacity: u64,
+    prev: Option<MetricsSnapshot>,
+    events: u64,
+}
+
+impl AuditObserver {
+    /// Auditor for a session with `capacity` device pages
+    /// (`SimConfig::capacity_pages` — the same value the session's
+    /// `DeviceMemory` was built with).
+    pub fn new(capacity: u64) -> AuditObserver {
+        AuditObserver {
+            capacity,
+            prev: None,
+            events: 0,
+        }
+    }
+
+    /// Events validated so far.
+    pub fn events_seen(&self) -> u64 {
+        self.events
+    }
+
+    fn violation(&self, what: &str, event: &SimEvent, snap: &MetricsSnapshot) -> ! {
+        panic!(
+            "audit: {what} (event #{n} = {event:?}, snapshot = {snap:?})",
+            n = self.events
+        );
+    }
+}
+
+impl Observer for AuditObserver {
+    fn on_event(&mut self, event: &SimEvent, snap: &MetricsSnapshot) {
+        self.events += 1;
+        if snap.resident_pages > self.capacity {
+            self.violation(
+                &format!(
+                    "resident_pages {} > capacity {}",
+                    snap.resident_pages, self.capacity
+                ),
+                event,
+                snap,
+            );
+        }
+        if snap.tlb_hits + snap.tlb_misses != snap.accesses {
+            self.violation(
+                &format!(
+                    "tlb_hits {} + tlb_misses {} != accesses {}",
+                    snap.tlb_hits, snap.tlb_misses, snap.accesses
+                ),
+                event,
+                snap,
+            );
+        }
+        let serviced = snap.hits + snap.faults;
+        if serviced > snap.accesses || snap.accesses - serviced > 1 {
+            self.violation(
+                &format!(
+                    "hits {} + faults {} must equal accesses {} up to the one \
+                     access in flight",
+                    snap.hits, snap.faults, snap.accesses
+                ),
+                event,
+                snap,
+            );
+        }
+        if snap.evictions_avoided > snap.pre_evictions {
+            self.violation(
+                &format!(
+                    "evictions_avoided {} > pre_evictions {}",
+                    snap.evictions_avoided, snap.pre_evictions
+                ),
+                event,
+                snap,
+            );
+        }
+        if snap.pre_evictions > snap.evictions {
+            self.violation(
+                &format!(
+                    "pre_evictions {} > evictions {}",
+                    snap.pre_evictions, snap.evictions
+                ),
+                event,
+                snap,
+            );
+        }
+        if snap.evictions > snap.migrations {
+            self.violation(
+                &format!(
+                    "evictions {} > migrations {} (a page left that never arrived)",
+                    snap.evictions, snap.migrations
+                ),
+                event,
+                snap,
+            );
+        }
+        if snap.writebacks > snap.evictions {
+            self.violation(
+                &format!(
+                    "writebacks {} > evictions {}",
+                    snap.writebacks, snap.evictions
+                ),
+                event,
+                snap,
+            );
+        }
+        if snap.thrash_events > snap.migrations {
+            self.violation(
+                &format!(
+                    "thrash_events {} > migrations {}",
+                    snap.thrash_events, snap.migrations
+                ),
+                event,
+                snap,
+            );
+        }
+        if snap.thrashed_unique > snap.thrash_events {
+            self.violation(
+                &format!(
+                    "thrashed_unique {} > thrash_events {}",
+                    snap.thrashed_unique, snap.thrash_events
+                ),
+                event,
+                snap,
+            );
+        }
+        if snap.evicted_unique > snap.evictions {
+            self.violation(
+                &format!(
+                    "evicted_unique {} > evictions {}",
+                    snap.evicted_unique, snap.evictions
+                ),
+                event,
+                snap,
+            );
+        }
+        if snap.background_link_cycles > snap.link_busy_cycles {
+            self.violation(
+                &format!(
+                    "background_link_cycles {} > link_busy_cycles {}",
+                    snap.background_link_cycles, snap.link_busy_cycles
+                ),
+                event,
+                snap,
+            );
+        }
+        if let Some(prev) = &self.prev {
+            let pairs: [(&str, u64, u64); 21] = [
+                ("accesses", prev.accesses, snap.accesses),
+                ("instructions", prev.instructions, snap.instructions),
+                ("cycles", prev.cycles, snap.cycles),
+                ("tlb_hits", prev.tlb_hits, snap.tlb_hits),
+                ("tlb_misses", prev.tlb_misses, snap.tlb_misses),
+                ("hits", prev.hits, snap.hits),
+                ("faults", prev.faults, snap.faults),
+                ("migrations", prev.migrations, snap.migrations),
+                ("evictions", prev.evictions, snap.evictions),
+                ("writebacks", prev.writebacks, snap.writebacks),
+                ("zero_copy", prev.zero_copy, snap.zero_copy),
+                ("delayed_remote", prev.delayed_remote, snap.delayed_remote),
+                ("prefetches", prev.prefetches, snap.prefetches),
+                (
+                    "garbage_prefetches",
+                    prev.garbage_prefetches,
+                    snap.garbage_prefetches,
+                ),
+                ("pre_evictions", prev.pre_evictions, snap.pre_evictions),
+                (
+                    "evictions_avoided",
+                    prev.evictions_avoided,
+                    snap.evictions_avoided,
+                ),
+                (
+                    "background_link_cycles",
+                    prev.background_link_cycles,
+                    snap.background_link_cycles,
+                ),
+                ("thrash_events", prev.thrash_events, snap.thrash_events),
+                ("thrashed_unique", prev.thrashed_unique, snap.thrashed_unique),
+                ("evicted_unique", prev.evicted_unique, snap.evicted_unique),
+                ("link_busy_cycles", prev.link_busy_cycles, snap.link_busy_cycles),
+            ];
+            for (name, before, after) in pairs {
+                if after < before {
+                    self.violation(
+                        &format!("{name} moved backwards: {before} -> {after}"),
+                        event,
+                        snap,
+                    );
+                }
+            }
+            if prev.crashed && !snap.crashed {
+                self.violation("crashed un-crashed", event, snap);
+            }
+        }
+        self.prev = Some(*snap);
+    }
+}
+
+/// Multi-tenant conservation: per-tenant attributed cycles must sum to
+/// the combined session's `Stats.cycles` exactly (cycle attribution
+/// never invents or drops time). Panics with an `audit:` message on
+/// violation, like [`AuditObserver`].
+pub fn assert_tenant_conservation(combined_cycles: u64, tenant_cycles: &[u64]) {
+    let sum: u64 = tenant_cycles.iter().sum();
+    assert!(
+        sum == combined_cycles,
+        "audit: per-tenant cycles sum {sum} != combined Stats.cycles \
+         {combined_cycles} (per-tenant: {tenant_cycles:?})"
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn consistent(accesses: u64) -> MetricsSnapshot {
+        MetricsSnapshot {
+            accesses,
+            tlb_hits: accesses / 2,
+            tlb_misses: accesses - accesses / 2,
+            hits: accesses / 2,
+            faults: accesses - accesses / 2,
+            migrations: 2,
+            evictions: 1,
+            resident_pages: 1,
+            ..MetricsSnapshot::default()
+        }
+    }
+
+    #[test]
+    fn consistent_stream_passes() {
+        let mut a = AuditObserver::new(4);
+        let ev = SimEvent::Interval { index: 0 };
+        a.on_event(&ev, &consistent(2));
+        a.on_event(&ev, &consistent(4));
+        assert_eq!(a.events_seen(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "audit: resident_pages")]
+    fn capacity_violation_panics() {
+        let mut a = AuditObserver::new(0);
+        a.on_event(&SimEvent::Interval { index: 0 }, &consistent(2));
+    }
+
+    #[test]
+    #[should_panic(expected = "audit: tlb_hits")]
+    fn tlb_conservation_violation_panics() {
+        let mut a = AuditObserver::new(4);
+        let mut snap = consistent(2);
+        snap.tlb_misses += 1;
+        a.on_event(&SimEvent::Interval { index: 0 }, &snap);
+    }
+
+    #[test]
+    #[should_panic(expected = "moved backwards")]
+    fn monotonicity_violation_panics() {
+        let mut a = AuditObserver::new(4);
+        let ev = SimEvent::Interval { index: 0 };
+        a.on_event(&ev, &consistent(4));
+        a.on_event(&ev, &consistent(2));
+    }
+
+    #[test]
+    #[should_panic(expected = "audit: evictions_avoided")]
+    fn preevict_credit_violation_panics() {
+        let mut a = AuditObserver::new(4);
+        let mut snap = consistent(2);
+        snap.evictions_avoided = 1; // with pre_evictions = 0
+        a.on_event(&SimEvent::Interval { index: 0 }, &snap);
+    }
+
+    #[test]
+    fn tenant_cycles_that_sum_pass() {
+        assert_tenant_conservation(10, &[4, 6]);
+        assert_tenant_conservation(0, &[]);
+    }
+
+    #[test]
+    #[should_panic(expected = "audit: per-tenant cycles")]
+    fn tenant_cycle_leak_panics() {
+        assert_tenant_conservation(10, &[4, 5]);
+    }
+}

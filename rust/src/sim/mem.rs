@@ -88,8 +88,10 @@ impl DeviceMemory {
         self.frames.remove(&page)
     }
 
-    /// Iterate resident pages (order unspecified).
+    /// Iterate resident pages (order unspecified — callers that fold the
+    /// result into simulation state or reports must sort first).
     pub fn pages(&self) -> impl Iterator<Item = Page> + '_ {
+        // lint: sorted — order-unspecified by documented contract above
         self.frames.keys().copied()
     }
 
@@ -99,6 +101,7 @@ impl DeviceMemory {
     /// a seed-dependent choice here would break the sweep runner's
     /// serial-vs-parallel byte-identical determinism contract.
     pub fn any_page(&self) -> Option<Page> {
+        // lint: sorted — min() over keys is order-independent
         self.frames.keys().min().copied()
     }
 }

@@ -36,6 +36,7 @@
 //! with per-tenant cycle attribution at the [`Clock::charge`] choke
 //! point.
 
+pub mod audit;
 pub mod clock;
 pub mod engine;
 pub mod mem;
@@ -43,6 +44,7 @@ pub mod session;
 pub mod stats;
 pub mod tlb;
 
+pub use audit::AuditObserver;
 pub use clock::{
     Clock, CoherentLink, CostEvent, CostModel, CostModelKind, FaultBatcher,
     Interconnect, TableV,

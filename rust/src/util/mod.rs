@@ -1,6 +1,6 @@
 //! Dependency-free substrate utilities: deterministic RNG, FNV hashing,
-//! JSON, CLI parsing, a mini property-test harness, and CSV/report
-//! helpers.
+//! JSON, CLI parsing, a mini property-test harness, CSV/report helpers,
+//! and a token-level Rust lexer for the lint pass.
 
 pub mod check;
 pub mod cli;
@@ -8,3 +8,4 @@ pub mod csv;
 pub mod hash;
 pub mod json;
 pub mod rng;
+pub mod rustlex;

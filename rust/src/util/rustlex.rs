@@ -1,0 +1,437 @@
+//! Token-level Rust lexer for the `analysis` lint pass.
+//!
+//! Hand-rolled in the house style (like [`crate::util::json`] and
+//! [`crate::util::csv`]): a byte cursor over the source, no regexes, no
+//! external crates. The lexer is *lossless enough* for linting — it
+//! distinguishes identifiers, numbers, string/char literals, lifetimes,
+//! comments, and single-byte punctuation, and records the 1-based line
+//! of every token — but it does not validate Rust syntax. Things the
+//! rules depend on and that plain substring search gets wrong:
+//!
+//! - comments and string literals never produce `Ident` tokens, so a
+//!   doc mention of `Instant::now` is not a wall-clock violation;
+//! - raw strings (`r"…"`, `r#"…"#`, any hash depth) and nested block
+//!   comments are skipped as single tokens;
+//! - `'a` (lifetime) vs `'a'` (char literal) are disambiguated, so
+//!   quote-matching never desyncs;
+//! - numbers never swallow `..`, so range punctuation survives.
+
+/// Token classes. Punctuation is one byte per token (`::` is two `:`
+/// tokens) — rules that need multi-byte operators match adjacent tokens.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TokKind {
+    Ident,
+    Num,
+    Str,
+    Char,
+    Lifetime,
+    Punct,
+    Comment,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct Token {
+    pub kind: TokKind,
+    /// Byte range `lo..hi` into the source.
+    pub lo: usize,
+    pub hi: usize,
+    /// 1-based line of the token's first byte.
+    pub line: u32,
+}
+
+impl Token {
+    pub fn text<'a>(&self, src: &'a str) -> &'a str {
+        &src[self.lo..self.hi]
+    }
+}
+
+/// Lex `src` into tokens. Never fails: unrecognized bytes become
+/// single-byte `Punct` tokens and an unterminated literal or comment
+/// simply runs to end-of-file. Lint rules prefer over-approximation to
+/// refusing to analyze a file.
+pub fn lex(src: &str) -> Vec<Token> {
+    Lexer {
+        b: src.as_bytes(),
+        i: 0,
+        line: 1,
+        out: Vec::new(),
+    }
+    .run()
+}
+
+struct Lexer<'a> {
+    b: &'a [u8],
+    i: usize,
+    line: u32,
+    out: Vec<Token>,
+}
+
+fn is_ident_start(c: u8) -> bool {
+    c == b'_' || c.is_ascii_alphabetic()
+}
+
+fn is_ident_cont(c: u8) -> bool {
+    c == b'_' || c.is_ascii_alphanumeric()
+}
+
+impl<'a> Lexer<'a> {
+    fn run(mut self) -> Vec<Token> {
+        while self.i < self.b.len() {
+            let c = self.b[self.i];
+            match c {
+                b'\n' => {
+                    self.line += 1;
+                    self.i += 1;
+                }
+                b' ' | b'\t' | b'\r' => self.i += 1,
+                b'/' if self.at(self.i + 1) == b'/' => self.line_comment(),
+                b'/' if self.at(self.i + 1) == b'*' => self.block_comment(),
+                b'"' => {
+                    let lo = self.i;
+                    let line = self.line;
+                    self.plain_string();
+                    self.push(TokKind::Str, lo, line);
+                }
+                b'\'' => self.char_or_lifetime(),
+                c if is_ident_start(c) => self.ident_or_prefixed_literal(),
+                c if c.is_ascii_digit() => self.number(),
+                _ => {
+                    let lo = self.i;
+                    self.i += 1;
+                    self.push(TokKind::Punct, lo, self.line);
+                }
+            }
+        }
+        self.out
+    }
+
+    /// Byte at absolute position `j`, or `0` past end-of-file (NUL never
+    /// occurs in source text, so it acts as a safe "no match" sentinel).
+    fn at(&self, j: usize) -> u8 {
+        self.b.get(j).copied().unwrap_or(0)
+    }
+
+    fn push(&mut self, kind: TokKind, lo: usize, line: u32) {
+        self.out.push(Token {
+            kind,
+            lo,
+            hi: self.i,
+            line,
+        });
+    }
+
+    fn line_comment(&mut self) {
+        let lo = self.i;
+        let line = self.line;
+        while self.i < self.b.len() && self.b[self.i] != b'\n' {
+            self.i += 1;
+        }
+        self.push(TokKind::Comment, lo, line);
+    }
+
+    fn block_comment(&mut self) {
+        let lo = self.i;
+        let line = self.line;
+        self.i += 2;
+        let mut depth = 1usize;
+        while self.i < self.b.len() && depth > 0 {
+            if self.b[self.i] == b'\n' {
+                self.line += 1;
+                self.i += 1;
+            } else if self.b[self.i] == b'/' && self.at(self.i + 1) == b'*' {
+                depth += 1;
+                self.i += 2;
+            } else if self.b[self.i] == b'*' && self.at(self.i + 1) == b'/' {
+                depth -= 1;
+                self.i += 2;
+            } else {
+                self.i += 1;
+            }
+        }
+        self.push(TokKind::Comment, lo, line);
+    }
+
+    /// Consume a `"…"` literal starting at the opening quote. Handles
+    /// escapes (`\"`, `\\`) and counts embedded newlines — including the
+    /// newline of a `\`-continuation, which the escape skip would
+    /// otherwise silently swallow and desync every later token's line.
+    fn plain_string(&mut self) {
+        self.i += 1; // opening quote
+        while self.i < self.b.len() {
+            match self.b[self.i] {
+                b'\\' => {
+                    if self.at(self.i + 1) == b'\n' {
+                        self.line += 1;
+                    }
+                    self.i += 2;
+                }
+                b'\n' => {
+                    self.line += 1;
+                    self.i += 1;
+                }
+                b'"' => {
+                    self.i += 1;
+                    return;
+                }
+                _ => self.i += 1,
+            }
+        }
+    }
+
+    /// Consume `r"…"` / `r#"…"#` starting at the first `#` or quote
+    /// (after the `r`/`br` prefix). The hash depth of the opener decides
+    /// the closer.
+    fn raw_string(&mut self) {
+        let mut hashes = 0usize;
+        while self.at(self.i) == b'#' {
+            hashes += 1;
+            self.i += 1;
+        }
+        self.i += 1; // opening quote
+        while self.i < self.b.len() {
+            if self.b[self.i] == b'\n' {
+                self.line += 1;
+                self.i += 1;
+            } else if self.b[self.i] == b'"' {
+                self.i += 1;
+                let mut seen = 0usize;
+                while seen < hashes && self.at(self.i) == b'#' {
+                    seen += 1;
+                    self.i += 1;
+                }
+                if seen == hashes {
+                    return;
+                }
+            } else {
+                self.i += 1;
+            }
+        }
+    }
+
+    /// An identifier, keyword, raw identifier (`r#match`), or a
+    /// string/char literal behind an `r` / `b` / `br` prefix.
+    fn ident_or_prefixed_literal(&mut self) {
+        let lo = self.i;
+        let line = self.line;
+        while self.i < self.b.len() && is_ident_cont(self.b[self.i]) {
+            self.i += 1;
+        }
+        let word = &self.b[lo..self.i];
+        let next = self.at(self.i);
+        if matches!(word, b"r" | b"b" | b"br") {
+            // raw / byte string: r"…", r#"…"#, b"…", br#"…"#
+            let raw = word != b"b";
+            if next == b'"' || (raw && next == b'#' && self.raw_quote_ahead()) {
+                if raw {
+                    self.raw_string();
+                } else {
+                    self.plain_string();
+                }
+                self.push(TokKind::Str, lo, line);
+                return;
+            }
+            // byte char literal: b'x'
+            if word == b"b" && next == b'\'' {
+                self.char_body();
+                self.push(TokKind::Char, lo, line);
+                return;
+            }
+            // raw identifier: r#match
+            if word == b"r" && next == b'#' && is_ident_start(self.at(self.i + 1)) {
+                self.i += 1;
+                while self.i < self.b.len() && is_ident_cont(self.b[self.i]) {
+                    self.i += 1;
+                }
+            }
+        }
+        self.push(TokKind::Ident, lo, line);
+    }
+
+    /// After an `r` prefix sitting on `#`s: is this `r#…#"` (raw string)
+    /// rather than `r#ident`?
+    fn raw_quote_ahead(&self) -> bool {
+        let mut j = self.i;
+        while self.at(j) == b'#' {
+            j += 1;
+        }
+        self.at(j) == b'"'
+    }
+
+    /// Consume a char literal with the cursor on the opening quote: the
+    /// quote, then an escape or a single (possibly multi-byte)
+    /// character, then the closing quote.
+    fn char_body(&mut self) {
+        self.i += 1; // opening quote
+        let mut budget = 12usize; // \u{10FFFF} is the longest body
+        while self.i < self.b.len() && budget > 0 {
+            match self.b[self.i] {
+                b'\\' => self.i += 2,
+                b'\'' => {
+                    self.i += 1;
+                    return;
+                }
+                _ => self.i += 1,
+            }
+            budget -= 1;
+        }
+    }
+
+    /// `'` starts either a lifetime (`'a`, `'static`, `'_`) or a char
+    /// literal (`'x'`, `'\n'`, `'λ'`). Rule: an escape or a non-ident
+    /// first byte means char literal; an ident body followed by `'`
+    /// means char literal (`'x'`); otherwise lifetime.
+    fn char_or_lifetime(&mut self) {
+        let lo = self.i;
+        let line = self.line;
+        let first = self.at(self.i + 1);
+        if is_ident_cont(first) && first != 0 {
+            // could be 'a (lifetime) or 'a' (char)
+            let mut j = self.i + 1;
+            while j < self.b.len() && is_ident_cont(self.b[j]) {
+                j += 1;
+            }
+            if self.at(j) == b'\'' {
+                self.i = j + 1;
+                self.push(TokKind::Char, lo, line);
+            } else {
+                self.i = j;
+                self.push(TokKind::Lifetime, lo, line);
+            }
+        } else {
+            self.char_body();
+            self.push(TokKind::Char, lo, line);
+        }
+    }
+
+    /// A number: digits/letters/underscores, plus one `.fraction` hop —
+    /// taken only when the byte after `.` is a digit, so `0..n` stays a
+    /// range and `x.0` stays a tuple index.
+    fn number(&mut self) {
+        let lo = self.i;
+        let line = self.line;
+        while self.i < self.b.len() && is_ident_cont(self.b[self.i]) {
+            self.i += 1;
+        }
+        if self.at(self.i) == b'.' && self.at(self.i + 1).is_ascii_digit() {
+            self.i += 1;
+            while self.i < self.b.len() && is_ident_cont(self.b[self.i]) {
+                self.i += 1;
+            }
+        }
+        self.push(TokKind::Num, lo, line);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<(TokKind, String)> {
+        lex(src)
+            .into_iter()
+            .map(|t| (t.kind, t.text(src).to_string()))
+            .collect()
+    }
+
+    #[test]
+    fn idents_numbers_puncts() {
+        let got = kinds("let x = 42;");
+        assert_eq!(
+            got,
+            vec![
+                (TokKind::Ident, "let".into()),
+                (TokKind::Ident, "x".into()),
+                (TokKind::Punct, "=".into()),
+                (TokKind::Num, "42".into()),
+                (TokKind::Punct, ";".into()),
+            ]
+        );
+    }
+
+    #[test]
+    fn number_does_not_swallow_range() {
+        let got = kinds("0..n");
+        assert_eq!(got[0], (TokKind::Num, "0".into()));
+        assert_eq!(got[1], (TokKind::Punct, ".".into()));
+        assert_eq!(got[2], (TokKind::Punct, ".".into()));
+        assert_eq!(got[3], (TokKind::Ident, "n".into()));
+        // but a real fraction is one token
+        assert_eq!(kinds("1.5e3")[0], (TokKind::Num, "1.5e3".into()));
+    }
+
+    #[test]
+    fn comments_are_single_tokens() {
+        let got = kinds("a // Instant::now in a comment\nb /* nested /* ok */ */ c");
+        let idents: Vec<_> = got
+            .iter()
+            .filter(|(k, _)| *k == TokKind::Ident)
+            .map(|(_, s)| s.as_str())
+            .collect();
+        assert_eq!(idents, vec!["a", "b", "c"]);
+        assert_eq!(got.iter().filter(|(k, _)| *k == TokKind::Comment).count(), 2);
+    }
+
+    #[test]
+    fn strings_hide_their_contents() {
+        let got = kinds(r##"f("Instant", r#"HashMap "quoted" body"#, b"bytes")"##);
+        let idents: Vec<_> = got
+            .iter()
+            .filter(|(k, _)| *k == TokKind::Ident)
+            .map(|(_, s)| s.as_str())
+            .collect();
+        assert_eq!(idents, vec!["f"]);
+        assert_eq!(got.iter().filter(|(k, _)| *k == TokKind::Str).count(), 3);
+    }
+
+    #[test]
+    fn lifetime_vs_char() {
+        let got = kinds("fn f<'a>(x: &'a str) { let c = 'x'; let n = '\\n'; }");
+        let lifetimes = got.iter().filter(|(k, _)| *k == TokKind::Lifetime).count();
+        let chars = got.iter().filter(|(k, _)| *k == TokKind::Char).count();
+        assert_eq!(lifetimes, 2);
+        assert_eq!(chars, 2);
+    }
+
+    #[test]
+    fn lifetimes_in_generic_lists_stay_lifetimes() {
+        // `'a, 'b` — the comma must not trick the lexer into a char literal
+        let got = kinds("struct S<'a, 'b> { x: &'a str, y: &'b str }");
+        assert_eq!(got.iter().filter(|(k, _)| *k == TokKind::Lifetime).count(), 4);
+        assert_eq!(got.iter().filter(|(k, _)| *k == TokKind::Char).count(), 0);
+    }
+
+    #[test]
+    fn raw_identifier_is_one_ident() {
+        let got = kinds("r#match + other");
+        assert_eq!(got[0], (TokKind::Ident, "r#match".into()));
+    }
+
+    #[test]
+    fn lines_are_tracked_through_multiline_tokens() {
+        let src = "a\n/* two\nlines */\n\"str\nacross\"\nb";
+        let toks = lex(src);
+        let b = toks.last().unwrap();
+        assert_eq!(b.text(src), "b");
+        assert_eq!(b.line, 6);
+    }
+
+    #[test]
+    fn string_continuation_newline_is_counted() {
+        // `\` at end of line inside a string: the escape skip must not
+        // swallow the newline, or every later token's line drifts
+        let src = "let s = \"a\\\n   b\";\nafter";
+        let toks = lex(src);
+        let after = toks.last().unwrap();
+        assert_eq!(after.text(src), "after");
+        assert_eq!(after.line, 3);
+    }
+
+    #[test]
+    fn unterminated_literal_does_not_loop() {
+        // must terminate and lex the rest as best it can
+        let toks = lex("let s = \"unterminated");
+        assert!(!toks.is_empty());
+        let toks = lex("let c = '");
+        assert!(!toks.is_empty());
+    }
+}

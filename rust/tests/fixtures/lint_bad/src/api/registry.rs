@@ -1,0 +1,15 @@
+//! Fixture registry: registers a strategy that neither the `BUILTIN`
+//! inventory nor the policy doc list knows about.
+
+pub struct StrategySpec;
+
+impl StrategySpec {
+    pub fn new(_name: &str, _display: &str, _factory: u32) -> StrategySpec {
+        StrategySpec
+    }
+}
+
+pub fn builtin() {
+    let _ = StrategySpec::new("baseline", "Baseline", 0);
+    let _ = StrategySpec::new("phantom", "Ghost", 0);
+}

@@ -1,0 +1,3 @@
+//! Fixture sweep CSV header: `lost_counter` never makes it to a column.
+
+pub const COLUMNS: &[&str] = &["workload", "accesses"];

@@ -1,0 +1,4 @@
+//! Fixture policy doc list — misses `phantom`.
+//!
+//! Registry names (in registration order):
+//! `baseline`.

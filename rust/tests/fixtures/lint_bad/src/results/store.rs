@@ -1,0 +1,5 @@
+//! Fixture cell codec: names `accesses` but never `lost_counter`.
+
+pub fn field_name() -> &'static str {
+    "accesses"
+}

@@ -1,0 +1,21 @@
+//! Fixture: one nondet-iteration site, one wall-clock site, and one
+//! unwrap over the baseline ceiling.
+
+use std::collections::HashMap;
+
+pub fn nondet(m: &HashMap<u64, u64>) -> u64 {
+    let mut sum = 0;
+    for (_k, v) in m.iter() {
+        sum += *v;
+    }
+    sum
+}
+
+pub fn wall_clock_now() -> u64 {
+    let t = std::time::Instant::now();
+    t.elapsed().as_nanos() as u64
+}
+
+pub fn ratchet(v: Option<u64>) -> u64 {
+    v.unwrap()
+}

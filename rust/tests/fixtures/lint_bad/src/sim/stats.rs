@@ -1,0 +1,11 @@
+//! Fixture: `lost_counter` is counted by `Stats` but dropped by every
+//! export path — the counter-conservation rule must flag all three.
+
+pub struct Stats {
+    pub accesses: u64,
+    pub lost_counter: u64,
+}
+
+pub struct MetricsSnapshot {
+    pub accesses: u64,
+}

@@ -1,0 +1,3 @@
+//! Fixture BUILTIN inventory — misses `phantom`.
+
+pub const BUILTIN: [&str; 1] = ["baseline"];

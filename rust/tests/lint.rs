@@ -1,0 +1,80 @@
+//! The lint pass's own gate: the committed bad-on-purpose fixture tree
+//! trips every rule, and the real tree stays clean (the same check CI
+//! runs as `repro lint --deny`).
+
+use std::collections::BTreeSet;
+use std::path::Path;
+
+use uvmio::analysis::{run_lint, rules};
+
+#[test]
+fn fixture_tree_trips_every_rule() {
+    let root =
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/lint_bad");
+    let report = run_lint(&root).expect("lint run over the fixture tree");
+    let hit: BTreeSet<&str> = report.violations.iter().map(|d| d.rule).collect();
+    for rule in [
+        rules::RULE_NONDET,
+        rules::RULE_CLOCK,
+        rules::RULE_RATCHET,
+        rules::RULE_CONSERVATION,
+        rules::RULE_REGISTRY,
+    ] {
+        assert!(
+            hit.contains(rule),
+            "fixture did not trip `{rule}`; got: {:#?}",
+            report.violations
+        );
+    }
+
+    // pin the anchors: the nondet site is the fixture's `m.iter()` loop,
+    // the conservation leak is `lost_counter`, the phantom strategy is
+    // flagged against both inventories
+    assert!(report
+        .violations
+        .iter()
+        .any(|d| d.rule == rules::RULE_NONDET && d.file == "src/sim/bad.rs" && d.line == 8));
+    assert!(report
+        .violations
+        .iter()
+        .any(|d| d.rule == rules::RULE_CLOCK && d.file == "src/sim/bad.rs"));
+    assert!(report
+        .violations
+        .iter()
+        .any(|d| d.rule == rules::RULE_RATCHET && d.msg.contains("`sim`")));
+    assert_eq!(
+        report
+            .violations
+            .iter()
+            .filter(|d| d.rule == rules::RULE_CONSERVATION
+                && d.msg.contains("lost_counter"))
+            .count(),
+        3,
+        "lost_counter must be flagged on all three export paths"
+    );
+    assert_eq!(
+        report
+            .violations
+            .iter()
+            .filter(|d| d.rule == rules::RULE_REGISTRY && d.msg.contains("phantom"))
+            .count(),
+        2,
+        "phantom must be missing from BUILTIN and from the doc list"
+    );
+}
+
+#[test]
+fn repo_is_lint_clean() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let report = run_lint(root).expect("lint run over the real tree");
+    for d in &report.violations {
+        eprintln!("{d}");
+    }
+    assert!(
+        report.clean(),
+        "the tree must pass its own lint ({} violations — fix them or \
+         waive with `// lint: sorted <reason>`)",
+        report.violations.len()
+    );
+    assert!(report.files > 50, "walker found too few files: {}", report.files);
+}

@@ -21,7 +21,8 @@ use uvmio::coordinator::{
 };
 use uvmio::corpus::{CorpusStore, TraceReader};
 use uvmio::sim::{
-    Arena, CoherentLink, MetricsSnapshot, Observer, Session, SimEvent, TableV,
+    Arena, AuditObserver, CoherentLink, MetricsSnapshot, Observer, Session,
+    SimEvent, TableV,
 };
 use uvmio::trace::multi::interleave;
 use uvmio::trace::workloads::Workload;
@@ -74,6 +75,11 @@ fn session_matches_engine_on_every_builtin_workload() {
                     policy,
                 );
                 session.add_observer(Box::new(Counter::default()));
+                // the runtime invariant auditor rides the whole tier-1
+                // grid: any conservation violation panics the test
+                session.add_observer(Box::new(AuditObserver::new(
+                    spec.cfg.capacity_pages,
+                )));
                 let mut snaps = 0usize;
                 for (i, acc) in trace.accesses.iter().enumerate() {
                     session.push(acc);
@@ -414,18 +420,35 @@ fn tenant_cycles_sum_to_combined_run_under_every_schedule() {
             .add_tenant(TenantSpec::from_trace(&b))
             .run(125, build_policy(&registry, "baseline", &spec))
             .unwrap();
-        let cycle_sum: u64 = out.tenants.iter().map(|t| t.cycles).sum();
-        assert_eq!(
-            cycle_sum,
+        let tenant_cycles: Vec<u64> =
+            out.tenants.iter().map(|t| t.cycles).collect();
+        uvmio::sim::audit::assert_tenant_conservation(
             out.outcome.stats.cycles,
-            "{}: tenant cycles must sum to the combined run",
-            schedule.name()
+            &tenant_cycles,
         );
         let acc_sum: u64 = out.tenants.iter().map(|t| t.accesses).sum();
         assert_eq!(acc_sum, out.outcome.stats.accesses, "{}", schedule.name());
         for t in &out.tenants {
             assert!(t.cycles > 0, "{}: live tenant bills cycles", t.name);
         }
+    }
+}
+
+/// The auditor actually bites: an observer primed with a wrong capacity
+/// must panic with an `audit:` message on the first migration that
+/// "exceeds" it.
+#[test]
+#[should_panic(expected = "audit:")]
+fn audit_observer_panics_on_violated_invariant() {
+    let registry = StrategyRegistry::builtin();
+    let trace = Workload::Nw.generate(Scale::default(), 42);
+    let spec = RunSpec::new(&trace, 125);
+    let policy = build_policy(&registry, "baseline", &spec);
+    let mut session =
+        Session::new(spec.cfg.clone(), Arena::of_trace(&trace), policy);
+    session.add_observer(Box::new(AuditObserver::new(0)));
+    for acc in &trace.accesses {
+        session.push(acc);
     }
 }
 
