@@ -4,12 +4,27 @@
 //!
 //! Method: warm up, then run batches until ≥ `MIN_TIME`, report the
 //! median of per-iteration times across batches.
+//!
+//! Set `UVMIO_BENCH_QUICK=1` to shrink the warmup and sampling windows
+//! ~10x. Quick numbers are noisy — they exist so CI can prove the bench
+//! binaries compile and run (the bench-smoke lane), not for committing
+//! to a `BENCH_*.json` baseline.
 
 use std::time::{Duration, Instant};
 
-const WARMUP: Duration = Duration::from_millis(300);
-const MIN_TIME: Duration = Duration::from_millis(1200);
 const MAX_ITERS: u64 = 1_000_000_000;
+
+fn quick() -> bool {
+    std::env::var_os("UVMIO_BENCH_QUICK").is_some_and(|v| v != "0")
+}
+
+fn warmup() -> Duration {
+    if quick() { Duration::from_millis(30) } else { Duration::from_millis(300) }
+}
+
+fn min_time() -> Duration {
+    if quick() { Duration::from_millis(120) } else { Duration::from_millis(1200) }
+}
 
 pub struct Bench {
     group: String,
@@ -25,13 +40,14 @@ impl Bench {
     /// throughput reporting (0 = skip throughput).
     pub fn bench<F: FnMut()>(&self, name: &str, elems: u64, mut f: F) {
         // warmup
+        let warmup = warmup();
         let start = Instant::now();
         let mut warm_iters = 0u64;
-        while start.elapsed() < WARMUP && warm_iters < MAX_ITERS {
+        while start.elapsed() < warmup && warm_iters < MAX_ITERS {
             f();
             warm_iters += 1;
         }
-        let per_iter_est = WARMUP
+        let per_iter_est = warmup
             .checked_div(warm_iters.max(1) as u32)
             .unwrap_or(Duration::from_nanos(1))
             .max(Duration::from_nanos(1));
@@ -40,8 +56,9 @@ impl Bench {
         let batch = batch.clamp(1, 1_000_000);
 
         let mut samples: Vec<f64> = Vec::new();
+        let min_time = min_time();
         let bench_start = Instant::now();
-        while bench_start.elapsed() < MIN_TIME || samples.len() < 5 {
+        while bench_start.elapsed() < min_time || samples.len() < 5 {
             let t0 = Instant::now();
             for _ in 0..batch {
                 f();

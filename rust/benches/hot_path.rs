@@ -1,0 +1,182 @@
+//! PR 9 hot-path benches: the allocation-free session fast path and the
+//! dense page-table against the `HashMap` design it replaced.
+//!
+//! Three groups (see `scripts/bench_baseline.sh`, which parses these
+//! into `BENCH_PR9.json`):
+//!
+//! * `sim/push_hot_loop` — per-access [`Session::push`] over the BICG
+//!   thrasher at 125% oversubscription. The pre-PR-9 calling
+//!   convention; every event used to allocate a `Decisions` and a
+//!   `HashMap` probe chain.
+//! * `sim/push_batch` — the same trace through one
+//!   [`Session::push_batch`] call: amortized crash checks, pooled
+//!   `Decisions` scratch, no per-event allocation.
+//! * `mem/dense_vs_ref/*` — microbenchmark of the dense
+//!   structure-of-arrays [`DeviceMemory`] vs a faithful
+//!   `HashMap`-backed reference model (the old layout) on an identical
+//!   install/touch/evict/pin churn sequence, including pages past the
+//!   dense span (overflow path).
+//!
+//! Each iteration builds a fresh session, so `sim/*` numbers are
+//! cold-start inclusive: the first few events of an iteration grow the
+//! scratch pool and feed buffers, after which the path is steady-state.
+//! `UVMIO_BENCH_QUICK=1` shrinks sampling for the CI smoke lane.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use std::collections::HashMap;
+
+use common::Bench;
+use uvmio::api::{StrategyCtx, StrategyRegistry};
+use uvmio::config::Scale;
+use uvmio::coordinator::RunSpec;
+use uvmio::sim::{Arena, DeviceMemory, Session};
+use uvmio::trace::workloads::Workload;
+use uvmio::util::rng::Rng;
+
+/// The pre-PR-9 `DeviceMemory` layout: one `HashMap` entry per resident
+/// page, linear `min` scan for the eviction probe. Kept here (not in
+/// the library) purely as the bench reference; the differential test in
+/// `tests/mem_dense.rs` owns the full-fidelity twin.
+struct RefMem {
+    capacity: u64,
+    frames: HashMap<u64, (u64, u32, bool, bool)>, // migrated_at, touches, dirty, prefetched
+}
+
+impl RefMem {
+    fn new(capacity: u64) -> RefMem {
+        RefMem { capacity, frames: HashMap::new() }
+    }
+
+    fn resident(&self, page: u64) -> bool {
+        self.frames.contains_key(&page)
+    }
+
+    fn install(&mut self, page: u64, now: u64) {
+        assert!((self.frames.len() as u64) < self.capacity);
+        self.frames.insert(page, (now, 0, false, false));
+    }
+
+    fn touch(&mut self, page: u64, is_write: bool) -> bool {
+        match self.frames.get_mut(&page) {
+            Some(f) => {
+                f.1 += 1;
+                f.2 |= is_write;
+                true
+            }
+            None => false,
+        }
+    }
+
+    fn evict(&mut self, page: u64) -> bool {
+        self.frames.remove(&page).is_some()
+    }
+
+    fn any_page(&self) -> Option<u64> {
+        self.frames.keys().copied().min()
+    }
+
+    fn is_full(&self) -> bool {
+        self.frames.len() as u64 >= self.capacity
+    }
+}
+
+/// Deterministic churn script: (page, is_write) pairs skewed so most
+/// land inside the dense span and a few exercise the overflow map.
+fn churn_sequence(span: u64, len: usize) -> Vec<(u64, bool)> {
+    let mut rng = Rng::new(0x9e37_79b9);
+    (0..len)
+        .map(|_| {
+            let page = if rng.chance(0.02) {
+                // past the dense span: overflow path
+                span + rng.below(256)
+            } else {
+                rng.below(span)
+            };
+            (page, rng.chance(0.3))
+        })
+        .collect()
+}
+
+fn main() {
+    let registry = StrategyRegistry::builtin();
+    let ctx = StrategyCtx::default();
+    let trace = Workload::Bicg.generate(Scale::default(), 42);
+    let spec = RunSpec::new(&trace, 125);
+    let events = trace.accesses.len() as u64;
+
+    let b = Bench::new("sim");
+
+    // per-access push: the pre-batch calling convention
+    b.bench("push_hot_loop", events, || {
+        let policy =
+            registry.get("baseline").unwrap().build(&spec, &ctx).unwrap();
+        let mut session =
+            Session::new(spec.cfg.clone(), Arena::of_trace(&trace), policy);
+        for acc in &trace.accesses {
+            session.push(acc);
+        }
+        std::hint::black_box(session.finish());
+    });
+
+    // whole-slice batch: amortized observer/crash/scratch handling
+    b.bench("push_batch", events, || {
+        let policy =
+            registry.get("baseline").unwrap().build(&spec, &ctx).unwrap();
+        let mut session =
+            Session::new(spec.cfg.clone(), Arena::of_trace(&trace), policy);
+        session.push_batch(&trace.accesses);
+        std::hint::black_box(session.finish());
+    });
+
+    // batch under an attached crash threshold: forces the per-access
+    // threshold re-check loop, bounding what the fast path saves
+    b.bench("push_batch_crash_checked", events, || {
+        let policy =
+            registry.get("baseline").unwrap().build(&spec, &ctx).unwrap();
+        let mut session =
+            Session::new(spec.cfg.clone(), Arena::of_trace(&trace), policy)
+                .with_crash_threshold(u64::MAX - 1);
+        session.push_batch(&trace.accesses);
+        std::hint::black_box(session.finish());
+    });
+
+    let b = Bench::new("mem");
+    const SPAN: u64 = 4096;
+    const CAP: u64 = 1024;
+    let script = churn_sequence(SPAN, 16_384);
+    let ops = script.len() as u64;
+
+    b.bench("dense_vs_ref/dense", ops, || {
+        let mut mem = DeviceMemory::with_span(CAP, SPAN);
+        let mut now = 0u64;
+        for &(page, is_write) in &script {
+            if !mem.touch(page, is_write) {
+                if mem.is_full() {
+                    let victim = mem.any_page().unwrap();
+                    mem.evict(victim);
+                }
+                mem.install(page, now, false);
+            }
+            now += 1;
+        }
+        std::hint::black_box(mem.used());
+    });
+
+    b.bench("dense_vs_ref/hashref", ops, || {
+        let mut mem = RefMem::new(CAP);
+        let mut now = 0u64;
+        for &(page, is_write) in &script {
+            if !mem.touch(page, is_write) {
+                if mem.is_full() {
+                    let victim = mem.any_page().unwrap();
+                    mem.evict(victim);
+                }
+                mem.install(page, now);
+            }
+            now += 1;
+        }
+        std::hint::black_box(mem.resident(0));
+    });
+}

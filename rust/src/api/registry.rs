@@ -385,7 +385,11 @@ impl StrategyRegistry {
         for o in observers {
             session.add_observer(o);
         }
-        session.feed(spec.trace.accesses.iter().copied());
+        session.push_batch(&spec.trace.accesses);
+        // residency conservation: the dense page table's bitset must
+        // agree with its O(1) counter after every run (one popcount —
+        // noise next to the simulation it checks)
+        crate::sim::check_residency(session.memory());
         let instr = session.policy().instrumentation();
         let mut outcome = session.finish();
         apply_prediction_overhead(&mut outcome, &instr, &spec.cfg);

@@ -438,6 +438,9 @@ impl<'a> MultiTenantScheduler<'a> {
                 kernel: merged_kernel,
                 ..acc
             };
+            // per-access push on purpose (not push_batch): the tenant
+            // target changes between consecutive accesses, and the
+            // schedule re-picks per step from live attribution
             session.set_tenant(ti);
             let step = session.push(&global);
             reports[ti].accesses += 1;

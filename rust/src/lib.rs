@@ -62,6 +62,40 @@
 //! 4. **Registries stay exhaustive.** Builtin strategy names agree
 //!    across [`api::StrategyRegistry`], the `BUILTIN` test inventory,
 //!    and the [`policy`] module docs.
+//!
+//! ## Hot path & performance
+//!
+//! The per-access simulation loop is allocation-free at steady state,
+//! and the layout choices behind that are load-bearing — changing them
+//! means re-running the differential and equivalence suites:
+//!
+//! * [`sim::DeviceMemory`] is a **dense page table**: parallel
+//!   structure-of-arrays metadata (packed residency/dirty/prefetched/
+//!   pinned bitsets, `migrated_at`/`touches`/`delay` columns) sized
+//!   from the arena's page span, with a sparse `BTreeMap` overflow for
+//!   pages past the span. Soft-pin delay counters and policy pins live
+//!   in the same table — they are page attributes and survive
+//!   eviction. `tests/mem_dense.rs` pins it against a `HashMap`
+//!   reference model on randomized churn.
+//! * [`policy::DecisionPolicy::decide`] writes into a **caller-owned
+//!   [`policy::Decisions`] scratch**. The caller clears the scratch
+//!   before every call; policies must *never* assume the callee clears
+//!   it, and must only append to a scratch they were handed (composing
+//!   policies forward `out` to their inner policy first). The session
+//!   recycles scratches through a small pool, so an empty decision set
+//!   costs zero heap allocation.
+//! * [`sim::Session::push_batch`] is the batch front door: one
+//!   observer-interest check and one crash-mode branch per slice
+//!   instead of per access. [`sim::Engine`], the strategy registry, and
+//!   chunked [`sim::Session::feed`] / `feed_results` streaming all
+//!   route through it; per-access [`sim::Session::push`] remains for
+//!   interleaving callers (the multi-tenant scheduler) and is
+//!   byte-identical by construction.
+//!
+//! Benches: `cargo bench --bench hot_path` (`sim/push_hot_loop`,
+//! `sim/push_batch`, `mem/dense_vs_ref/*`); refresh the committed
+//! baseline with `scripts/bench_baseline.sh` on a quiet machine (see
+//! `USAGE.md`). `UVMIO_BENCH_QUICK=1` gives CI-grade quick sampling.
 
 #![forbid(unsafe_code)]
 

@@ -41,7 +41,7 @@ use uvmio::predictor::features::samples_from_trace;
 use uvmio::predictor::{native_dims, NativeModel};
 use uvmio::results::{serve_stdin, serve_tcp, ResultStore, ServeShared};
 use uvmio::runtime::{Manifest, ModelBackend, PredictorKind, Runtime};
-use uvmio::sim::{Arena, AuditObserver, CostModelKind, Session};
+use uvmio::sim::{check_residency, Arena, AuditObserver, CostModelKind, Session};
 use uvmio::trace::workloads::Workload;
 use uvmio::trace::Trace;
 use uvmio::util::cli::Args;
@@ -476,6 +476,11 @@ fn cmd_simulate_stream(args: &Args, stream: &str) -> anyhow::Result<()> {
         session.add_observer(Box::new(AuditObserver::new(spec.cfg.capacity_pages)));
     }
     session.feed_results(&mut reader)?;
+    if args.has("audit") {
+        // end-of-stream structural check the event auditor cannot see:
+        // dense-table residency bitset vs its maintained counter
+        check_residency(session.memory());
+    }
 
     // same §V-C prediction-overhead post-pass as the registry path
     let instr = session.policy().instrumentation();

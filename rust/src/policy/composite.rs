@@ -58,52 +58,49 @@ impl<P: Prefetcher, E: Evictor> DecisionPolicy for Composite<P, E> {
         format!("{}.+{}", self.prefetcher.name(), self.evictor.name())
     }
 
-    fn decide(&mut self, event: &MemEvent<'_>, view: &MemView<'_>) -> Decisions {
+    fn decide(
+        &mut self,
+        event: &MemEvent<'_>,
+        view: &MemView<'_>,
+        out: &mut Decisions,
+    ) {
         match *event {
             MemEvent::Access { acc, resident } => {
                 self.prefetcher.on_access(acc, resident);
                 self.evictor.on_access(acc, resident);
-                Decisions::none()
             }
             // composites service every fault by migration (the default)
-            MemEvent::Fault { .. } => Decisions::none(),
+            MemEvent::Fault { .. } => {}
             MemEvent::FaultServiced { acc, .. } => {
-                let mut prefetch = self.prefetcher.prefetch(acc);
-                let pre_evict = self.evictor.pre_evict(view);
+                out.prefetch.extend(self.prefetcher.prefetch(acc));
+                out.pre_evict.extend(self.evictor.pre_evict(view));
                 if self.pressure_aware {
                     // count only the pre-evictions the slack rule will
                     // execute now — dirty pages held back by a busy
                     // link free nothing yet
                     let budget = (view.free_frames() as usize)
-                        .saturating_add(view.pre_evictable_now(&pre_evict));
-                    if prefetch.len() > budget {
-                        prefetch.truncate(budget);
+                        .saturating_add(view.pre_evictable_now(&out.pre_evict));
+                    if out.prefetch.len() > budget {
+                        out.prefetch.truncate(budget);
                     }
                 }
-                Decisions::none()
-                    .with_prefetch(prefetch)
-                    .with_pre_evict(pre_evict)
             }
             MemEvent::VictimNeeded { .. } => {
-                Decisions::victim(self.evictor.select_victim(view.memory()))
+                out.victim = self.evictor.select_victim(view.memory());
             }
             MemEvent::Migrated { page, via_prefetch } => {
                 self.prefetcher.on_migrate(page, via_prefetch);
                 self.evictor.on_migrate(page, via_prefetch);
-                Decisions::none()
             }
             MemEvent::Evicted { page, .. } => {
                 self.prefetcher.on_evict(page);
                 self.evictor.on_evict(page);
-                Decisions::none()
             }
             MemEvent::Interval { .. } => {
                 self.evictor.on_interval();
-                Decisions::none()
             }
             MemEvent::KernelBoundary { kernel } => {
                 self.evictor.on_kernel_boundary(kernel);
-                Decisions::none()
             }
         }
     }
@@ -125,6 +122,16 @@ mod tests {
         MemView::new(mem, 0, 0, 0)
     }
 
+    fn decide<P: DecisionPolicy>(
+        p: &mut P,
+        event: MemEvent<'_>,
+        view: &MemView<'_>,
+    ) -> Decisions {
+        let mut d = Decisions::none();
+        p.decide(&event, view, &mut d);
+        d
+    }
+
     #[test]
     fn names_follow_paper_convention() {
         let c = Composite::new(DemandOnly, Lru::new());
@@ -138,8 +145,9 @@ mod tests {
         let mem = DeviceMemory::new(8);
         let mut c = Composite::new(DemandOnly, Lru::new());
         let a = acc(0);
-        let d = c.decide(
-            &MemEvent::FaultServiced {
+        let d = decide(
+            &mut c,
+            MemEvent::FaultServiced {
                 acc: &a,
                 action: crate::sim::FaultAction::Migrate,
             },
@@ -154,12 +162,13 @@ mod tests {
         let mem = DeviceMemory::new(8);
         let mut c = Composite::new(DemandOnly, Lru::new());
         for p in [3, 4] {
-            c.decide(
-                &MemEvent::Migrated { page: p, via_prefetch: false },
+            decide(
+                &mut c,
+                MemEvent::Migrated { page: p, via_prefetch: false },
                 &view(&mem),
             );
         }
-        let d = c.decide(&MemEvent::VictimNeeded { incoming: 9 }, &view(&mem));
+        let d = decide(&mut c, MemEvent::VictimNeeded { incoming: 9 }, &view(&mem));
         assert_eq!(d.victim, Some(3), "LRU order");
     }
 
@@ -172,13 +181,15 @@ mod tests {
         mem.install(100, 0, false); // unrelated resident page
         let mut c = Composite::new(TreePrefetcher::new(), Lru::new())
             .with_pressure_aware_prefetch();
-        c.decide(
-            &MemEvent::Migrated { page: 0, via_prefetch: false },
+        decide(
+            &mut c,
+            MemEvent::Migrated { page: 0, via_prefetch: false },
             &view(&mem),
         );
         let a = acc(0);
-        let d = c.decide(
-            &MemEvent::FaultServiced {
+        let d = decide(
+            &mut c,
+            MemEvent::FaultServiced {
                 acc: &a,
                 action: crate::sim::FaultAction::Migrate,
             },
@@ -189,12 +200,14 @@ mod tests {
 
         // the plain composite is unbounded (faithful baseline)
         let mut plain = Composite::new(TreePrefetcher::new(), Lru::new());
-        plain.decide(
-            &MemEvent::Migrated { page: 0, via_prefetch: false },
+        decide(
+            &mut plain,
+            MemEvent::Migrated { page: 0, via_prefetch: false },
             &view(&mem),
         );
-        let d = plain.decide(
-            &MemEvent::FaultServiced {
+        let d = decide(
+            &mut plain,
+            MemEvent::FaultServiced {
                 acc: &a,
                 action: crate::sim::FaultAction::Migrate,
             },

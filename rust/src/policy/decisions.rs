@@ -110,8 +110,9 @@ impl<'a> MemView<'a> {
     }
 
     /// Frame metadata of a resident page (touch count, dirty bit,
-    /// install cycle, prefetched-untouched flag).
-    pub fn frame(&self, page: Page) -> Option<&'a Frame> {
+    /// install cycle, prefetched-untouched flag). By value — the dense
+    /// page table synthesizes the `Frame` from its column arrays.
+    pub fn frame(&self, page: Page) -> Option<Frame> {
         self.mem.frame(page)
     }
 
@@ -240,6 +241,19 @@ impl Decisions {
         self.unpin = pages;
         self
     }
+
+    /// Reset to "decide nothing" while keeping the vector capacities.
+    /// The session clears its scratch this way before every `decide`
+    /// call, so the steady-state hot path allocates nothing for empty
+    /// decision sets.
+    pub fn clear(&mut self) {
+        self.fault_action = None;
+        self.victim = None;
+        self.prefetch.clear();
+        self.pre_evict.clear();
+        self.pin.clear();
+        self.unpin.clear();
+    }
 }
 
 /// A complete memory-management strategy under the directive protocol:
@@ -256,8 +270,19 @@ pub trait DecisionPolicy {
         PolicyInstrumentation::default()
     }
 
-    /// The single decision entry point.
-    fn decide(&mut self, event: &MemEvent<'_>, view: &MemView<'_>) -> Decisions;
+    /// The single decision entry point. `out` is a **caller-owned
+    /// scratch** that arrives cleared — the caller guarantees
+    /// [`Decisions::clear`] ran; policies must not assume the callee
+    /// clears it — so implementations write directives into it instead
+    /// of allocating a fresh value per event. Wrappers that delegate
+    /// pass `out` through untouched; a policy composing several inner
+    /// `decide` calls manages clearing between them itself.
+    fn decide(
+        &mut self,
+        event: &MemEvent<'_>,
+        view: &MemView<'_>,
+        out: &mut Decisions,
+    );
 }
 
 /// Forwarding impl so a borrowed policy drives an owning session —
@@ -271,8 +296,13 @@ impl<P: DecisionPolicy + ?Sized> DecisionPolicy for &mut P {
         (**self).instrumentation()
     }
 
-    fn decide(&mut self, event: &MemEvent<'_>, view: &MemView<'_>) -> Decisions {
-        (**self).decide(event, view)
+    fn decide(
+        &mut self,
+        event: &MemEvent<'_>,
+        view: &MemView<'_>,
+        out: &mut Decisions,
+    ) {
+        (**self).decide(event, view, out)
     }
 }
 
@@ -285,8 +315,13 @@ impl<P: DecisionPolicy + ?Sized> DecisionPolicy for Box<P> {
         (**self).instrumentation()
     }
 
-    fn decide(&mut self, event: &MemEvent<'_>, view: &MemView<'_>) -> Decisions {
-        (**self).decide(event, view)
+    fn decide(
+        &mut self,
+        event: &MemEvent<'_>,
+        view: &MemView<'_>,
+        out: &mut Decisions,
+    ) {
+        (**self).decide(event, view, out)
     }
 }
 
@@ -329,36 +364,36 @@ impl<P: Policy + ?Sized> DecisionPolicy for LegacyPolicyAdapter<P> {
         self.inner.instrumentation()
     }
 
-    fn decide(&mut self, event: &MemEvent<'_>, view: &MemView<'_>) -> Decisions {
+    fn decide(
+        &mut self,
+        event: &MemEvent<'_>,
+        view: &MemView<'_>,
+        out: &mut Decisions,
+    ) {
         match *event {
             MemEvent::Access { acc, resident } => {
                 self.inner.on_access(acc, resident);
-                Decisions::none()
             }
             MemEvent::Fault { acc } => {
-                Decisions::fault(self.inner.fault_action(acc.page))
+                out.fault_action = Some(self.inner.fault_action(acc.page));
             }
             MemEvent::FaultServiced { acc, .. } => {
-                Decisions::none().with_prefetch(self.inner.prefetch(acc))
+                out.prefetch.extend(self.inner.prefetch(acc));
             }
             MemEvent::VictimNeeded { .. } => {
-                Decisions::victim(self.inner.select_victim(view.memory()))
+                out.victim = self.inner.select_victim(view.memory());
             }
             MemEvent::Migrated { page, via_prefetch } => {
                 self.inner.on_migrate(page, via_prefetch);
-                Decisions::none()
             }
             MemEvent::Evicted { page, .. } => {
                 self.inner.on_evict(page);
-                Decisions::none()
             }
             MemEvent::Interval { .. } => {
                 self.inner.on_interval();
-                Decisions::none()
             }
             MemEvent::KernelBoundary { kernel } => {
                 self.inner.on_kernel_boundary(kernel);
-                Decisions::none()
             }
         }
     }
@@ -371,6 +406,18 @@ mod tests {
 
     fn acc(page: Page) -> Access {
         Access { page, pc: 0, tb: 0, kernel: 0, inst_gap: 0, is_write: false }
+    }
+
+    /// Drive one decide call through a fresh scratch (what the session
+    /// does with its reusable one).
+    fn decide<P: DecisionPolicy>(
+        p: &mut P,
+        event: MemEvent<'_>,
+        view: &MemView<'_>,
+    ) -> Decisions {
+        let mut d = Decisions::none();
+        p.decide(&event, view, &mut d);
+        d
     }
 
     /// A legacy policy recording its hook-call order.
@@ -427,22 +474,23 @@ mod tests {
         let a = acc(5);
         let mut ad = LegacyPolicyAdapter::new(Spy::default());
 
-        let d = ad.decide(&MemEvent::Access { acc: &a, resident: false }, &view);
+        let d = decide(&mut ad, MemEvent::Access { acc: &a, resident: false }, &view);
         assert!(d.fault_action.is_none() && d.prefetch.is_empty());
-        let d = ad.decide(&MemEvent::Fault { acc: &a }, &view);
+        let d = decide(&mut ad, MemEvent::Fault { acc: &a }, &view);
         assert_eq!(d.fault_action, Some(FaultAction::ZeroCopy));
-        let d = ad.decide(
-            &MemEvent::FaultServiced { acc: &a, action: FaultAction::Migrate },
+        let d = decide(
+            &mut ad,
+            MemEvent::FaultServiced { acc: &a, action: FaultAction::Migrate },
             &view,
         );
         assert_eq!(d.prefetch, vec![6]);
         assert!(d.pre_evict.is_empty(), "legacy policies cannot pre-evict");
-        let d = ad.decide(&MemEvent::VictimNeeded { incoming: 5 }, &view);
+        let d = decide(&mut ad, MemEvent::VictimNeeded { incoming: 5 }, &view);
         assert_eq!(d.victim, Some(9));
-        ad.decide(&MemEvent::Migrated { page: 5, via_prefetch: false }, &view);
-        ad.decide(&MemEvent::Evicted { page: 9, pre_evicted: false }, &view);
-        ad.decide(&MemEvent::Interval { index: 1 }, &view);
-        ad.decide(&MemEvent::KernelBoundary { kernel: 2 }, &view);
+        decide(&mut ad, MemEvent::Migrated { page: 5, via_prefetch: false }, &view);
+        decide(&mut ad, MemEvent::Evicted { page: 9, pre_evicted: false }, &view);
+        decide(&mut ad, MemEvent::Interval { index: 1 }, &view);
+        decide(&mut ad, MemEvent::KernelBoundary { kernel: 2 }, &view);
         assert_eq!(
             ad.inner().calls,
             vec![
@@ -508,5 +556,24 @@ mod tests {
         assert_eq!(d.pin, vec![4]);
         assert_eq!(d.unpin, vec![5]);
         assert!(Decisions::none().victim.is_none());
+    }
+
+    #[test]
+    fn clear_resets_everything_but_keeps_capacity() {
+        let mut d = Decisions::fault(FaultAction::Delay)
+            .with_prefetch(vec![1, 2, 3])
+            .with_pre_evict(vec![4])
+            .with_pin(vec![5])
+            .with_unpin(vec![6]);
+        d.victim = Some(7);
+        let cap = d.prefetch.capacity();
+        d.clear();
+        assert!(d.fault_action.is_none() && d.victim.is_none());
+        assert!(d.prefetch.is_empty() && d.pre_evict.is_empty());
+        assert!(d.pin.is_empty() && d.unpin.is_empty());
+        assert!(
+            d.prefetch.capacity() >= cap,
+            "clear must retain buffer capacity for reuse"
+        );
     }
 }

@@ -101,21 +101,25 @@ impl DecisionPolicy for UvmSmart {
         "UVMSmart".into()
     }
 
-    fn decide(&mut self, event: &MemEvent<'_>, view: &MemView<'_>) -> Decisions {
+    fn decide(
+        &mut self,
+        event: &MemEvent<'_>,
+        view: &MemView<'_>,
+        out: &mut Decisions,
+    ) {
         match *event {
             MemEvent::Access { acc, resident } => {
                 self.evictor.on_access(acc, resident);
                 self.prefetcher.on_access(acc, resident);
-                Decisions::none()
             }
             MemEvent::Fault { acc } => {
-                Decisions::fault(self.fault_action_for(acc.page))
+                out.fault_action = Some(self.fault_action_for(acc.page));
             }
             MemEvent::FaultServiced { acc, .. } => {
-                Decisions::none().with_prefetch(self.prefetch_for(acc))
+                out.prefetch.extend(self.prefetch_for(acc));
             }
             MemEvent::VictimNeeded { .. } => {
-                Decisions::victim(self.evictor.select_victim(view.memory()))
+                out.victim = self.evictor.select_victim(view.memory());
             }
             MemEvent::Migrated { page, via_prefetch } => {
                 self.resident += 1;
@@ -127,19 +131,16 @@ impl DecisionPolicy for UvmSmart {
                 }
                 self.prefetcher.on_migrate(page, via_prefetch);
                 self.evictor.on_migrate(page, via_prefetch);
-                Decisions::none()
             }
             MemEvent::Evicted { page, .. } => {
                 self.resident = self.resident.saturating_sub(1);
                 self.evictions_seen += 1;
                 self.prefetcher.on_evict(page);
                 self.evictor.on_evict(page);
-                Decisions::none()
             }
-            MemEvent::Interval { .. } => Decisions::none(),
+            MemEvent::Interval { .. } => {}
             MemEvent::KernelBoundary { .. } => {
                 self.pattern = self.dfa.kernel_boundary();
-                Decisions::none()
             }
         }
     }
@@ -173,11 +174,13 @@ mod tests {
 
     /// Drive the migrate/evict/boundary notifications through decide(),
     /// the way the session does.
+    fn notify(u: &mut UvmSmart, mem: &DeviceMemory, event: MemEvent<'_>) {
+        let mut d = Decisions::none();
+        u.decide(&event, &MemView::new(mem, 0, 0, 0), &mut d);
+    }
+
     fn notify_migrate(u: &mut UvmSmart, mem: &DeviceMemory, page: Page) {
-        u.decide(
-            &MemEvent::Migrated { page, via_prefetch: false },
-            &MemView::new(mem, 0, 0, 0),
-        );
+        notify(u, mem, MemEvent::Migrated { page, via_prefetch: false });
     }
 
     #[test]
@@ -195,15 +198,10 @@ mod tests {
             let bb = (i * i * 2654435761 >> 5) % 997;
             notify_migrate(&mut u, &mem, bb * 16);
         }
-        u.decide(
-            &MemEvent::KernelBoundary { kernel: 1 },
-            &MemView::new(&mem, 0, 0, 0),
-        );
+        notify(&mut u, &mem, MemEvent::KernelBoundary { kernel: 1 });
         assert!(u.pattern().is_random());
-        u.decide(
-            &MemEvent::Evicted { page: 0, pre_evicted: false },
-            &MemView::new(&mem, 0, 0, 0),
-        ); // pressure begins
+        // pressure begins
+        notify(&mut u, &mem, MemEvent::Evicted { page: 0, pre_evicted: false });
         assert_eq!(u.fault_action_for(5), FaultAction::ZeroCopy);
     }
 
@@ -214,10 +212,7 @@ mod tests {
         for p in 0..64u64 {
             notify_migrate(&mut u, &mem, p);
         }
-        u.decide(
-            &MemEvent::KernelBoundary { kernel: 1 },
-            &MemView::new(&mem, 0, 0, 0),
-        );
+        notify(&mut u, &mem, MemEvent::KernelBoundary { kernel: 1 });
         assert!(u.pattern().is_linear());
         let pf = u.prefetch_for(&A {
             page: 64,

@@ -369,19 +369,23 @@ impl DecisionPolicy for IntelligentPolicy {
         }
     }
 
-    fn decide(&mut self, event: &MemEvent<'_>, view: &MemView<'_>) -> Decisions {
+    fn decide(
+        &mut self,
+        event: &MemEvent<'_>,
+        view: &MemView<'_>,
+        out: &mut Decisions,
+    ) {
         match *event {
             MemEvent::Access { acc, .. } => {
                 self.observe_access(acc);
-                Decisions::none()
             }
             MemEvent::Fault { acc } => {
-                Decisions::fault(self.fault_action_for(acc.page))
+                out.fault_action = Some(self.fault_action_for(acc.page));
             }
             MemEvent::FaultServiced { acc, .. } => {
-                let mut d = Decisions::none();
                 if self.cfg.pre_evict {
-                    d.pre_evict = self.pre_evict_candidates(view, acc.page);
+                    out.pre_evict
+                        .extend(self.pre_evict_candidates(view, acc.page));
                 }
                 let mut burst =
                     self.cfg.prefetch_burst.min(self.prefetch_queue.len());
@@ -391,15 +395,14 @@ impl DecisionPolicy for IntelligentPolicy {
                     // actually execute (held-back dirty pages count 0)
                     burst = burst.min(
                         (view.free_frames() as usize).saturating_add(
-                            view.pre_evictable_now(&d.pre_evict),
+                            view.pre_evictable_now(&out.pre_evict),
                         ),
                     );
                 }
-                d.prefetch = self.prefetch_queue.drain(..burst).collect();
-                d
+                out.prefetch.extend(self.prefetch_queue.drain(..burst));
             }
             MemEvent::VictimNeeded { .. } => {
-                Decisions::victim(self.chain.victim(&self.freq, 64))
+                out.victim = self.chain.victim(&self.freq, 64);
             }
             MemEvent::Migrated { page, via_prefetch } => {
                 self.chain.insert(page);
@@ -409,21 +412,17 @@ impl DecisionPolicy for IntelligentPolicy {
                 if !via_prefetch {
                     self.dfa.note_transfer(page);
                 }
-                Decisions::none()
             }
             MemEvent::Evicted { page, .. } => {
                 self.chain.remove(page);
                 self.evicted.insert(page);
-                Decisions::none()
             }
             MemEvent::Interval { .. } => {
                 self.chain.rotate();
                 self.freq.on_interval();
-                Decisions::none()
             }
             MemEvent::KernelBoundary { .. } => {
                 self.dfa.kernel_boundary();
-                Decisions::none()
             }
         }
     }

@@ -29,14 +29,36 @@
 //! - snapshot monotonicity: every cumulative counter is non-decreasing
 //!   event-over-event, and `crashed` never un-crashes
 //!
+//! One structural invariant cannot be seen through snapshots: the dense
+//! page table's residency bitset must agree with its maintained `used`
+//! counter. [`check_residency`] recounts the bitset (popcount plus the
+//! sparse overflow map) against [`DeviceMemory::used`]; the `--audit`
+//! CLI paths run it after the stream ends, alongside this observer.
+//!
 //! Attach with [`crate::sim::Session::add_observer`] (or
 //! `repro simulate --audit`); the tier-1 grid test drives it across all
 //! 11 workloads × {125, 150}. The auditor holds no simulation state
 //! beyond the previous snapshot, so attaching it never perturbs
 //! results — the equivalence suites stay byte-identical with it on.
 
+use super::mem::DeviceMemory;
 use super::session::{Observer, SimEvent};
 use super::stats::MetricsSnapshot;
+
+/// Residency conservation for the dense page table: the popcount of the
+/// residency bitset (plus overflow residents) must equal the maintained
+/// `used()` counter. O(span/64) — run it at checkpoints (the `--audit`
+/// CLI paths run it once per simulation), not per event. Panics with an
+/// `audit:` message on violation, like [`AuditObserver`].
+pub fn check_residency(mem: &DeviceMemory) {
+    let counted = mem.residency_popcount();
+    assert!(
+        counted == mem.used(),
+        "audit: residency bitset popcount {counted} != used() {used} \
+         (dense page-table accounting drifted)",
+        used = mem.used()
+    );
+}
 
 pub struct AuditObserver {
     capacity: u64,
@@ -321,5 +343,16 @@ mod tests {
     #[should_panic(expected = "audit: per-tenant cycles")]
     fn tenant_cycle_leak_panics() {
         assert_tenant_conservation(10, &[4, 5]);
+    }
+
+    #[test]
+    fn residency_conservation_holds_through_churn() {
+        let mut mem = DeviceMemory::new(4);
+        check_residency(&mem);
+        mem.install(0, 0, false);
+        mem.install(1, 1, false);
+        mem.evict(0);
+        mem.install(2, 2, true);
+        check_residency(&mem);
     }
 }

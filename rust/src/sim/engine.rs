@@ -2,7 +2,8 @@
 //! policy under the default (Table V) timing model.
 //!
 //! `Engine` is a thin wrapper over [`Session`] — it builds a session
-//! from the trace's [`Arena`], feeds every access, and returns the
+//! from the trace's [`Arena`], pushes the whole access slice through
+//! the batched hot path ([`Session::push_batch`]), and returns the
 //! [`RunOutcome`]. The two paths are byte-identical by construction
 //! (the `session_matches_engine_*` integration tests pin it); use a
 //! [`Session`] directly for streaming ingestion, mid-run snapshots,
@@ -50,7 +51,7 @@ impl Engine {
     ) -> RunOutcome {
         let mut session = Session::new(self.cfg, Arena::of_trace(trace), Box::new(policy))
             .with_crash_threshold(self.crash_threshold);
-        session.feed(trace.accesses.iter().copied());
+        session.push_batch(&trace.accesses);
         session.finish()
     }
 }

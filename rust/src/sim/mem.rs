@@ -1,9 +1,33 @@
 //! GPU device-memory model: the resident page set under a fixed frame
 //! budget, with dirty tracking for writeback accounting.
+//!
+//! Layout: a **dense page table** over the arena span backed by
+//! structure-of-arrays frame metadata — packed `u64` bitsets for the
+//! residency / dirty / prefetched-untouched / pinned flags and parallel
+//! arrays for `migrated_at` / `touches` / delay counters — so
+//! `resident` / `touch` / `install` / `evict` are O(1) array ops with
+//! no hashing, and `pages()` / `any_page()` are bitset scans. Pages at
+//! or beyond the dense span (sparse page ids from `csv:` / `uvmlog:`
+//! imports) fall back to deterministic `BTreeMap` overflow storage with
+//! identical observable semantics. Size the span from the workload's
+//! arena via [`DeviceMemory::with_span`]; [`DeviceMemory::new`] covers
+//! `[0, capacity)` densely, which is always affordable because the
+//! resident set is capacity-bounded anyway.
+//!
+//! The table also carries the session's per-page **policy attributes**
+//! (pin flags for the `pin`/`unpin` directives, delay counters for
+//! `FaultAction::Delay`), which outlive residency: evicting a page
+//! clears its frame but not its pin or delay state.
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, BTreeSet};
 
 use super::Page;
+
+/// Dense metadata ceiling: spans beyond this many pages keep the tail
+/// in the overflow maps instead of growing the arrays without bound
+/// (a sparse import with huge page ids must not allocate the span).
+/// 4 Mi pages ≈ 68 MB of table — far above every builtin workload.
+const MAX_DENSE_PAGES: u64 = 1 << 22;
 
 /// Per-frame metadata.
 #[derive(Debug, Clone, Copy, Default)]
@@ -17,19 +41,131 @@ pub struct Frame {
     pub prefetched_untouched: bool,
 }
 
-/// Device memory: a capacity-bounded map from page to frame.
+/// A packed bitset over page indices `[0, span)`.
+#[derive(Debug, Clone, Default)]
+struct BitSet {
+    words: Vec<u64>,
+}
+
+impl BitSet {
+    fn with_bits(bits: u64) -> BitSet {
+        BitSet { words: vec![0; bits.div_ceil(64) as usize] }
+    }
+
+    #[inline]
+    fn get(&self, i: u64) -> bool {
+        (self.words[(i / 64) as usize] >> (i % 64)) & 1 != 0
+    }
+
+    #[inline]
+    fn set(&mut self, i: u64) {
+        self.words[(i / 64) as usize] |= 1 << (i % 64);
+    }
+
+    #[inline]
+    fn unset(&mut self, i: u64) {
+        self.words[(i / 64) as usize] &= !(1 << (i % 64));
+    }
+
+    #[inline]
+    fn assign(&mut self, i: u64, v: bool) {
+        if v {
+            self.set(i)
+        } else {
+            self.unset(i)
+        }
+    }
+
+    fn count_ones(&self) -> u64 {
+        self.words.iter().map(|w| w.count_ones() as u64).sum()
+    }
+
+    /// Lowest set bit index, if any.
+    fn first_set(&self) -> Option<u64> {
+        self.words
+            .iter()
+            .position(|&w| w != 0)
+            .map(|wi| wi as u64 * 64 + self.words[wi].trailing_zeros() as u64)
+    }
+
+    /// Ascending iterator over set bit indices.
+    fn iter_ones(&self) -> impl Iterator<Item = u64> + '_ {
+        self.words.iter().enumerate().flat_map(|(wi, &word)| OnesIter {
+            word,
+            base: wi as u64 * 64,
+        })
+    }
+}
+
+/// Iterator over the set bits of one word (ascending).
+struct OnesIter {
+    word: u64,
+    base: u64,
+}
+
+impl Iterator for OnesIter {
+    type Item = u64;
+
+    fn next(&mut self) -> Option<u64> {
+        if self.word == 0 {
+            return None;
+        }
+        let tz = self.word.trailing_zeros() as u64;
+        self.word &= self.word - 1; // clear lowest set bit
+        Some(self.base + tz)
+    }
+}
+
+/// Device memory: a capacity-bounded page table (see the module docs
+/// for the dense/overflow layout).
 #[derive(Debug, Clone)]
 pub struct DeviceMemory {
-    frames: HashMap<Page, Frame>,
     capacity: u64,
+    /// resident-page count (kept in lockstep with the residency bitset;
+    /// `repro simulate --audit` cross-checks the two)
+    used: u64,
+    /// pages `[0, span)` live in the dense arrays below
+    span: u64,
+    resident: BitSet,
+    dirty: BitSet,
+    prefetched: BitSet,
+    pinned: BitSet,
+    migrated_at: Vec<u64>,
+    touches: Vec<u32>,
+    delay: Vec<u32>,
+    /// resident frames at pages `>= span` (sparse imported page ids)
+    overflow: BTreeMap<Page, Frame>,
+    overflow_pins: BTreeSet<Page>,
+    overflow_delay: BTreeMap<Page, u32>,
 }
 
 impl DeviceMemory {
+    /// A table whose dense span covers `[0, capacity_pages)`.
     pub fn new(capacity_pages: u64) -> DeviceMemory {
+        DeviceMemory::with_span(capacity_pages, capacity_pages)
+    }
+
+    /// A table whose dense span covers `[0, span_pages)` — size it from
+    /// the arena (`Arena::span_pages`) so every working-set page takes
+    /// the O(1) dense path. The span is clamped to [`MAX_DENSE_PAGES`];
+    /// pages beyond it use the overflow maps (same semantics).
+    pub fn with_span(capacity_pages: u64, span_pages: u64) -> DeviceMemory {
         assert!(capacity_pages > 0, "zero-capacity device memory");
+        let span = span_pages.max(capacity_pages).min(MAX_DENSE_PAGES);
         DeviceMemory {
-            frames: HashMap::with_capacity(capacity_pages as usize),
             capacity: capacity_pages,
+            used: 0,
+            span,
+            resident: BitSet::with_bits(span),
+            dirty: BitSet::with_bits(span),
+            prefetched: BitSet::with_bits(span),
+            pinned: BitSet::with_bits(span),
+            migrated_at: vec![0; span as usize],
+            touches: vec![0; span as usize],
+            delay: vec![0; span as usize],
+            overflow: BTreeMap::new(),
+            overflow_pins: BTreeSet::new(),
+            overflow_delay: BTreeMap::new(),
         }
     }
 
@@ -38,19 +174,38 @@ impl DeviceMemory {
     }
 
     pub fn used(&self) -> u64 {
-        self.frames.len() as u64
+        self.used
     }
 
     pub fn is_full(&self) -> bool {
         self.used() >= self.capacity
     }
 
+    #[inline]
     pub fn resident(&self, page: Page) -> bool {
-        self.frames.contains_key(&page)
+        if page < self.span {
+            self.resident.get(page)
+        } else {
+            self.overflow.contains_key(&page)
+        }
     }
 
-    pub fn frame(&self, page: Page) -> Option<&Frame> {
-        self.frames.get(&page)
+    /// Frame metadata of a resident page (by value — the dense table
+    /// has no contiguous `Frame` to borrow).
+    pub fn frame(&self, page: Page) -> Option<Frame> {
+        if page < self.span {
+            if !self.resident.get(page) {
+                return None;
+            }
+            Some(Frame {
+                dirty: self.dirty.get(page),
+                migrated_at: self.migrated_at[page as usize],
+                touches: self.touches[page as usize],
+                prefetched_untouched: self.prefetched.get(page),
+            })
+        } else {
+            self.overflow.get(&page).copied()
+        }
     }
 
     /// Install a page. Panics if already resident or over capacity —
@@ -58,51 +213,154 @@ impl DeviceMemory {
     /// path: see DESIGN.md §Key invariants).
     pub fn install(&mut self, page: Page, now: u64, via_prefetch: bool) {
         assert!(!self.is_full(), "install over capacity");
-        let prev = self.frames.insert(
-            page,
-            Frame {
-                dirty: false,
-                migrated_at: now,
-                touches: 0,
-                prefetched_untouched: via_prefetch,
-            },
-        );
-        assert!(prev.is_none(), "page {page} installed twice");
+        if page < self.span {
+            assert!(!self.resident.get(page), "page {page} installed twice");
+            self.resident.set(page);
+            self.dirty.unset(page);
+            self.prefetched.assign(page, via_prefetch);
+            self.migrated_at[page as usize] = now;
+            self.touches[page as usize] = 0;
+        } else {
+            let prev = self.overflow.insert(
+                page,
+                Frame {
+                    dirty: false,
+                    migrated_at: now,
+                    touches: 0,
+                    prefetched_untouched: via_prefetch,
+                },
+            );
+            assert!(prev.is_none(), "page {page} installed twice");
+        }
+        self.used += 1;
     }
 
     /// Record an access to a resident page. Returns false if not resident.
+    #[inline]
     pub fn touch(&mut self, page: Page, is_write: bool) -> bool {
-        match self.frames.get_mut(&page) {
-            Some(f) => {
-                f.dirty |= is_write;
-                f.touches = f.touches.saturating_add(1);
-                f.prefetched_untouched = false;
-                true
+        if page < self.span {
+            if !self.resident.get(page) {
+                return false;
             }
-            None => false,
+            if is_write {
+                self.dirty.set(page);
+            }
+            let t = &mut self.touches[page as usize];
+            *t = t.saturating_add(1);
+            self.prefetched.unset(page);
+            true
+        } else {
+            match self.overflow.get_mut(&page) {
+                Some(f) => {
+                    f.dirty |= is_write;
+                    f.touches = f.touches.saturating_add(1);
+                    f.prefetched_untouched = false;
+                    true
+                }
+                None => false,
+            }
         }
     }
 
-    /// Evict a page; returns its frame (dirty flag drives writeback cost).
+    /// Evict a page; returns its frame (dirty flag drives writeback
+    /// cost). Pin and delay state are page attributes, not frame
+    /// attributes — they survive the eviction.
     pub fn evict(&mut self, page: Page) -> Option<Frame> {
-        self.frames.remove(&page)
+        let f = if page < self.span {
+            if !self.resident.get(page) {
+                return None;
+            }
+            let f = Frame {
+                dirty: self.dirty.get(page),
+                migrated_at: self.migrated_at[page as usize],
+                touches: self.touches[page as usize],
+                prefetched_untouched: self.prefetched.get(page),
+            };
+            self.resident.unset(page);
+            self.dirty.unset(page);
+            self.prefetched.unset(page);
+            f
+        } else {
+            self.overflow.remove(&page)?
+        };
+        self.used -= 1;
+        Some(f)
     }
 
-    /// Iterate resident pages (order unspecified — callers that fold the
-    /// result into simulation state or reports must sort first).
+    /// Pin a page against background pre-eviction (the `pin`
+    /// directive). Pins are sticky across evictions until `unpin`.
+    pub fn pin(&mut self, page: Page) {
+        if page < self.span {
+            self.pinned.set(page);
+        } else {
+            self.overflow_pins.insert(page);
+        }
+    }
+
+    /// Drop a pin (the `unpin` directive); no-op if not pinned.
+    pub fn unpin(&mut self, page: Page) {
+        if page < self.span {
+            self.pinned.unset(page);
+        } else {
+            self.overflow_pins.remove(&page);
+        }
+    }
+
+    pub fn is_pinned(&self, page: Page) -> bool {
+        if page < self.span {
+            self.pinned.get(page)
+        } else {
+            self.overflow_pins.contains(&page)
+        }
+    }
+
+    /// Increment the page's `FaultAction::Delay` counter and return the
+    /// post-increment count (the session compares it against
+    /// `SimConfig::delay_threshold`).
+    pub fn delay_bump(&mut self, page: Page) -> u32 {
+        if page < self.span {
+            let c = &mut self.delay[page as usize];
+            *c = c.saturating_add(1);
+            *c
+        } else {
+            let c = self.overflow_delay.entry(page).or_insert(0);
+            *c = c.saturating_add(1);
+            *c
+        }
+    }
+
+    /// Reset the page's delay counter (a delayed page finally migrated).
+    pub fn delay_clear(&mut self, page: Page) {
+        if page < self.span {
+            self.delay[page as usize] = 0;
+        } else {
+            self.overflow_delay.remove(&page);
+        }
+    }
+
+    /// Iterate resident pages in ascending page order (a bitset scan
+    /// over the dense span, then the overflow keys — all `>= span`).
     pub fn pages(&self) -> impl Iterator<Item = Page> + '_ {
-        // lint: sorted — order-unspecified by documented contract above
-        self.frames.keys().copied()
+        self.resident.iter_ones().chain(self.overflow.keys().copied())
     }
 
-    /// A resident page — the engine's last-resort victim fallback. Scans
-    /// for the minimum page number rather than taking HashMap iteration
-    /// order: the fallback is rare (it is counted as a policy bug), and
-    /// a seed-dependent choice here would break the sweep runner's
+    /// A resident page — the engine's last-resort victim fallback. The
+    /// minimum resident page number (lowest set residency bit): the
+    /// fallback is rare (it is counted as a policy bug), and a
+    /// seed-dependent choice here would break the sweep runner's
     /// serial-vs-parallel byte-identical determinism contract.
     pub fn any_page(&self) -> Option<Page> {
-        // lint: sorted — min() over keys is order-independent
-        self.frames.keys().min().copied()
+        self.resident
+            .first_set()
+            .or_else(|| self.overflow.keys().next().copied())
+    }
+
+    /// Recount residency from the ground truth (bitset popcount +
+    /// overflow entries). [`DeviceMemory::used`] maintains the same
+    /// quantity as an O(1) counter; `repro simulate --audit` and the
+    /// differential tests assert the two stay equal.
+    pub fn residency_popcount(&self) -> u64 {
+        self.resident.count_ones() + self.overflow.len() as u64
     }
 }
 
@@ -141,6 +399,14 @@ mod tests {
     }
 
     #[test]
+    #[should_panic(expected = "installed twice")]
+    fn double_install_in_overflow_is_a_bug() {
+        let mut m = DeviceMemory::with_span(4, 4);
+        m.install(1 << 40, 0, false);
+        m.install(1 << 40, 0, false);
+    }
+
+    #[test]
     fn touch_sets_dirty_and_clears_prefetch_mark() {
         let mut m = DeviceMemory::new(2);
         m.install(5, 0, true);
@@ -151,5 +417,84 @@ mod tests {
         assert!(!f.prefetched_untouched);
         assert_eq!(f.touches, 1);
         assert!(!m.touch(99, false));
+    }
+
+    #[test]
+    fn overflow_pages_behave_like_dense_pages() {
+        // span 8: page 3 dense, page 1<<40 overflow
+        let mut m = DeviceMemory::with_span(4, 8);
+        let far = 1u64 << 40;
+        m.install(3, 7, false);
+        m.install(far, 9, true);
+        assert!(m.resident(far));
+        assert_eq!(m.used(), 2);
+        assert_eq!(m.residency_popcount(), 2);
+        assert_eq!(m.frame(far).unwrap().migrated_at, 9);
+        assert!(m.frame(far).unwrap().prefetched_untouched);
+        assert!(m.touch(far, true));
+        let f = m.frame(far).unwrap();
+        assert!(f.dirty && !f.prefetched_untouched);
+        // ascending page order: dense first, overflow after
+        assert_eq!(m.pages().collect::<Vec<_>>(), vec![3, far]);
+        assert_eq!(m.any_page(), Some(3));
+        let f = m.evict(far).unwrap();
+        assert!(f.dirty);
+        assert_eq!(m.any_page(), Some(3));
+        assert_eq!(m.used(), m.residency_popcount());
+    }
+
+    #[test]
+    fn pages_scan_is_ascending_and_any_page_is_min() {
+        let mut m = DeviceMemory::with_span(8, 200);
+        for p in [130u64, 2, 67, 64, 199] {
+            m.install(p, 0, false);
+        }
+        assert_eq!(m.pages().collect::<Vec<_>>(), vec![2, 64, 67, 130, 199]);
+        assert_eq!(m.any_page(), Some(2));
+        m.evict(2);
+        assert_eq!(m.any_page(), Some(64));
+        assert_eq!(m.residency_popcount(), m.used());
+    }
+
+    #[test]
+    fn pins_and_delay_counters_survive_eviction() {
+        let mut m = DeviceMemory::with_span(4, 8);
+        m.pin(5); // pin before residency is legal
+        assert!(m.is_pinned(5));
+        m.install(5, 0, false);
+        m.evict(5);
+        assert!(m.is_pinned(5), "pin outlives the frame");
+        m.unpin(5);
+        assert!(!m.is_pinned(5));
+
+        assert_eq!(m.delay_bump(6), 1);
+        assert_eq!(m.delay_bump(6), 2);
+        m.delay_clear(6);
+        assert_eq!(m.delay_bump(6), 1);
+
+        // same contract in the overflow range
+        let far = 1u64 << 33;
+        m.pin(far);
+        assert!(m.is_pinned(far));
+        m.unpin(far);
+        assert!(!m.is_pinned(far));
+        assert_eq!(m.delay_bump(far), 1);
+        assert_eq!(m.delay_bump(far), 2);
+        m.delay_clear(far);
+        assert_eq!(m.delay_bump(far), 1);
+    }
+
+    #[test]
+    fn reinstall_resets_frame_metadata() {
+        let mut m = DeviceMemory::new(2);
+        m.install(1, 5, false);
+        m.touch(1, true);
+        m.evict(1);
+        m.install(1, 9, true);
+        let f = m.frame(1).unwrap();
+        assert!(!f.dirty, "dirty does not leak across reinstall");
+        assert_eq!(f.migrated_at, 9);
+        assert_eq!(f.touches, 0);
+        assert!(f.prefetched_untouched);
     }
 }

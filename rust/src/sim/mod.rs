@@ -19,7 +19,8 @@
 //! Two front doors share one timing core:
 //!
 //! * [`Session`] — the resumable, event-driven API: push accesses one at
-//!   a time (or stream them with [`Session::feed`] /
+//!   a time, in slices ([`Session::push_batch`] — the allocation-free
+//!   hot path), or as streams ([`Session::feed`] /
 //!   [`Session::feed_results`]), register [`Observer`]s for typed
 //!   [`SimEvent`]s, read a [`MetricsSnapshot`] mid-run, and let the
 //!   per-step crash check stop runaway thrashers. This is what
@@ -44,7 +45,7 @@ pub mod session;
 pub mod stats;
 pub mod tlb;
 
-pub use audit::AuditObserver;
+pub use audit::{check_residency, AuditObserver};
 pub use clock::{
     Clock, CoherentLink, CostEvent, CostModel, CostModelKind, FaultBatcher,
     Interconnect, TableV,

@@ -3,10 +3,11 @@
 //! [`crate::sim::Engine::run`] consumes a fully materialized
 //! [`Trace`](crate::trace::Trace) and returns once at the end; a
 //! `Session` is the same timing model turned inside out. Accesses are
-//! *pushed* one at a time ([`Session::push`]) or streamed from any
-//! iterator ([`Session::feed`], [`Session::feed_results`] for fallible
+//! *pushed* one at a time ([`Session::push`]), in slices
+//! ([`Session::push_batch`]) or streamed from any iterator
+//! ([`Session::feed`], [`Session::feed_results`] for fallible
 //! streams such as [`crate::corpus::format::TraceReader`]), which buys
-//! three capabilities the batch API cannot offer:
+//! three capabilities the offline engine cannot offer:
 //!
 //! * **streaming ingestion** — a `.uvmt` corpus entry larger than RAM
 //!   runs through [`Session::feed_results`] without ever materializing
@@ -40,11 +41,24 @@
 //! from a trace, or from a `.uvmt` header via
 //! [`crate::corpus::format::UvmtMeta`]).
 //!
+//! # Hot path
+//!
+//! The per-access path allocates nothing in the steady state: policy
+//! consultations write into [`Decisions`] scratch buffers recycled
+//! through a small pool (the session clears a scratch before every
+//! `decide` call — the half of the contract policies rely on), the
+//! per-page soft-pin counters and pin set live inside the dense
+//! [`DeviceMemory`] page table, and `feed`/`feed_results` chunk their
+//! input through [`Session::push_batch`] over one reusable buffer.
+//! Observer dispatch computes each observer's interest exactly once
+//! per event and materializes the [`MetricsSnapshot`] only when some
+//! observer wants the event.
+//!
 //! `Engine::run` is a thin wrapper over `Session` — the two paths
 //! produce byte-identical [`Stats`] by construction, and the
 //! `session_matches_engine_*` integration tests pin that equivalence.
 
-use std::collections::{HashMap, HashSet, VecDeque};
+use std::collections::VecDeque;
 
 use crate::config::SimConfig;
 use crate::policy::{DecisionPolicy, Decisions, MemEvent, MemView};
@@ -57,6 +71,16 @@ use crate::trace::Access;
 /// evict the oldest queue entries first (they simply never pre-evict —
 /// the demand path still can).
 const BACKGROUND_QUEUE_CAP: usize = 4096;
+
+/// Streaming chunk size: `feed` / `feed_results` buffer this many
+/// accesses into a reusable chunk and hand it to [`Session::push_batch`].
+const FEED_CHUNK: usize = 1024;
+
+/// Decision-scratch pool bound. Decision points nest — a fault-serviced
+/// decision is still in hand while `admit` consults the policy about
+/// victims — so a few buffers cycle through the pool; returns beyond the
+/// bound are dropped rather than hoarded.
+const SCRATCH_POOL_CAP: usize = 4;
 
 /// Result of a run: final stats plus the crash determination used by the
 /// 150% experiments (the paper reports ATAX/NW/2DCONV crashing under
@@ -107,6 +131,16 @@ impl Arena {
             .iter()
             .any(|&(base, pages)| page >= base && page < base + pages)
     }
+
+    /// Every page the allocation map can name — the span the dense
+    /// page table is sized from. Imported traces may still touch pages
+    /// beyond it; those ride [`DeviceMemory`]'s sparse overflow map.
+    pub fn span_pages(&self) -> u64 {
+        self.allocations
+            .iter()
+            .map(|&(base, pages)| base.saturating_add(pages))
+            .fold(self.working_set_pages, u64::max)
+    }
 }
 
 /// A typed simulation event, delivered to [`Observer`]s the moment it
@@ -143,9 +177,10 @@ pub enum SimEvent {
 pub trait Observer {
     /// Cheap pre-filter: the session materializes a snapshot (and calls
     /// [`Observer::on_event`]) only for events some observer is
-    /// interested in. The default accepts everything; sparse consumers
-    /// like progress reporters override it so high-frequency events on
-    /// the hot path cost nothing.
+    /// interested in, and asks each observer **once per event**. The
+    /// default accepts everything; sparse consumers like progress
+    /// reporters override it so high-frequency events on the hot path
+    /// cost nothing.
     fn interested(&self, _event: &SimEvent) -> bool {
         true
     }
@@ -176,13 +211,13 @@ pub struct StepResult {
 pub struct Session<'p> {
     cfg: SimConfig,
     arena: Arena,
+    /// dense page table; also owns the soft-pin delay counters and the
+    /// policy pin set (page attributes that survive eviction)
     mem: DeviceMemory,
     tlb: Tlb,
     stats: Stats,
     /// the timing layer: cost model + shared resources + attribution
     clock: Clock,
-    /// soft-pin remote-touch counters (delayed migration)
-    delay_counters: HashMap<Page, u32>,
     faults_in_interval: u32,
     intervals: u64,
     current_kernel: u32,
@@ -192,11 +227,15 @@ pub struct Session<'p> {
     /// the background-transfer queue: pre-evict directives awaiting a
     /// drain opportunity (see `drain_background` for the slack rule)
     background: VecDeque<Page>,
-    /// pages pinned by policy hint — exempt from background pre-eviction
-    pinned: HashSet<Page>,
+    /// held-back dirty directives, reused across drains
+    held_buf: Vec<Page>,
     /// frames freed by pre-eviction and not yet consumed by an admit —
     /// the `evictions_avoided` accounting credit
     preevict_credit: u64,
+    /// recycled [`Decisions`] scratch buffers (see module docs)
+    scratch_pool: Vec<Decisions>,
+    /// reusable chunk buffer for `feed` / `feed_results`
+    feed_buf: Vec<Access>,
     policy: Box<dyn DecisionPolicy + 'p>,
     observers: Vec<Box<dyn Observer + 'p>>,
 }
@@ -209,20 +248,22 @@ impl<'p> Session<'p> {
     ) -> Session<'p> {
         let cap = cfg.capacity_pages;
         assert!(cap > 0, "SimConfig.capacity_pages not set");
+        let span = arena.span_pages();
         Session {
-            mem: DeviceMemory::new(cap),
+            mem: DeviceMemory::with_span(cap, span),
             tlb: Tlb::new(cfg.tlb_entries),
             stats: Stats::default(),
             clock: Clock::table_v(&cfg),
-            delay_counters: HashMap::new(),
             faults_in_interval: 0,
             intervals: 0,
             current_kernel: 0,
             crash_threshold: u64::MAX,
             crashed: false,
             background: VecDeque::new(),
-            pinned: HashSet::new(),
+            held_buf: Vec::new(),
             preevict_credit: 0,
+            scratch_pool: Vec::new(),
+            feed_buf: Vec::new(),
             observers: Vec::new(),
             cfg,
             arena,
@@ -323,10 +364,7 @@ impl<'p> Session<'p> {
             return StepResult { hit: false, action: None, crashed: true };
         }
         if acc.kernel != self.current_kernel {
-            self.current_kernel = acc.kernel;
-            let d = self.decide(MemEvent::KernelBoundary { kernel: acc.kernel });
-            self.apply_hints(&d);
-            self.emit(SimEvent::KernelBoundary { kernel: acc.kernel });
+            self.kernel_boundary(acc.kernel);
         }
         let result = self.step(acc);
         if self.stats.thrash_events > self.crash_threshold {
@@ -337,36 +375,100 @@ impl<'p> Session<'p> {
         result
     }
 
-    /// Push every access of an infallible stream; stops at a crash.
-    /// Returns the last [`StepResult`] (default for an empty stream).
-    pub fn feed<I>(&mut self, accesses: I) -> StepResult
-    where
-        I: IntoIterator<Item = Access>,
-    {
-        let mut last = StepResult { crashed: self.crashed, ..StepResult::default() };
-        for acc in accesses {
-            last = self.push(&acc);
-            if last.crashed {
-                break;
+    /// Simulate a slice of accesses — the batch hot path. Semantically
+    /// identical to pushing each access in order (stops consuming at a
+    /// crash, exactly like [`Session::push`]), but sessions without
+    /// crash emulation skip the per-access threshold check entirely.
+    /// Returns the last [`StepResult`] (default for an empty slice).
+    pub fn push_batch(&mut self, accesses: &[Access]) -> StepResult {
+        if self.crashed {
+            return StepResult { hit: false, action: None, crashed: true };
+        }
+        let mut last = StepResult::default();
+        if self.crash_threshold == u64::MAX {
+            // crash emulation off: thrash_events can never exceed the
+            // threshold, so the per-push check is dead weight
+            for acc in accesses {
+                if acc.kernel != self.current_kernel {
+                    self.kernel_boundary(acc.kernel);
+                }
+                last = self.step(acc);
+            }
+        } else {
+            for acc in accesses {
+                last = self.push(acc);
+                if last.crashed {
+                    break;
+                }
             }
         }
         last
     }
 
-    /// Push every access of a fallible stream (e.g. a streaming `.uvmt`
-    /// decoder); stops at the first stream error or at a crash.
-    pub fn feed_results<I, E>(&mut self, accesses: I) -> Result<StepResult, E>
+    /// Push every access of an infallible stream; stops at a crash.
+    /// Internally chunks through [`Session::push_batch`] over a reusable
+    /// buffer. Returns the last [`StepResult`] (default for an empty
+    /// stream).
+    pub fn feed<I>(&mut self, accesses: I) -> StepResult
     where
-        I: IntoIterator<Item = Result<Access, E>>,
+        I: IntoIterator<Item = Access>,
     {
+        let mut buf = std::mem::take(&mut self.feed_buf);
         let mut last = StepResult { crashed: self.crashed, ..StepResult::default() };
-        for acc in accesses {
-            last = self.push(&acc?);
+        let mut iter = accesses.into_iter();
+        loop {
+            buf.clear();
+            buf.extend(iter.by_ref().take(FEED_CHUNK));
+            if buf.is_empty() {
+                break;
+            }
+            last = self.push_batch(&buf);
             if last.crashed {
                 break;
             }
         }
-        Ok(last)
+        buf.clear();
+        self.feed_buf = buf;
+        last
+    }
+
+    /// Push every access of a fallible stream (e.g. a streaming `.uvmt`
+    /// decoder); stops at the first stream error or at a crash. Accesses
+    /// decoded before an error are simulated before it is returned,
+    /// exactly as under per-access pushing.
+    pub fn feed_results<I, E>(&mut self, accesses: I) -> Result<StepResult, E>
+    where
+        I: IntoIterator<Item = Result<Access, E>>,
+    {
+        let mut buf = std::mem::take(&mut self.feed_buf);
+        let mut last = StepResult { crashed: self.crashed, ..StepResult::default() };
+        let mut iter = accesses.into_iter();
+        let mut stream_err: Option<E> = None;
+        loop {
+            buf.clear();
+            for item in iter.by_ref().take(FEED_CHUNK) {
+                match item {
+                    Ok(acc) => buf.push(acc),
+                    Err(e) => {
+                        stream_err = Some(e);
+                        break;
+                    }
+                }
+            }
+            let exhausted = buf.len() < FEED_CHUNK;
+            if !buf.is_empty() {
+                last = self.push_batch(&buf);
+            }
+            if last.crashed || stream_err.is_some() || exhausted {
+                break;
+            }
+        }
+        buf.clear();
+        self.feed_buf = buf;
+        match stream_err {
+            Some(e) => Err(e),
+            None => Ok(last),
+        }
     }
 
     /// Consume the session: final stats plus the crash determination.
@@ -400,26 +502,45 @@ impl<'p> Session<'p> {
         cost
     }
 
+    /// Grab a cleared [`Decisions`] scratch from the pool (or mint one).
+    /// The caller owns it for the duration of one decision point and
+    /// returns it through [`Session::put_scratch`].
+    #[inline]
+    fn take_scratch(&mut self) -> Decisions {
+        let mut d = self.scratch_pool.pop().unwrap_or_else(Decisions::none);
+        d.clear();
+        d
+    }
+
+    #[inline]
+    fn put_scratch(&mut self, d: Decisions) {
+        if self.scratch_pool.len() < SCRATCH_POOL_CAP {
+            self.scratch_pool.push(d);
+        }
+    }
+
     /// Consult the policy on one event, with a read-only view of the
-    /// session's residency / occupancy / clock state.
-    fn decide(&mut self, event: MemEvent<'_>) -> Decisions {
+    /// session's residency / occupancy / clock state. `out` must arrive
+    /// cleared (the scratch-pool discipline guarantees it).
+    fn decide_into(&mut self, event: MemEvent<'_>, out: &mut Decisions) {
         let view = MemView::new(
             &self.mem,
             self.stats.cycles,
             self.clock.interconnect().free_at(),
             self.clock.interconnect().busy_total(),
         );
-        self.policy.decide(&event, &view)
+        self.policy.decide(&event, &view, out);
     }
 
     /// Honour the pin/unpin hints a decision carries (valid on every
-    /// event).
+    /// event). Pins live in the dense page table as page attributes —
+    /// they survive eviction, like the soft-pin delay counters.
     fn apply_hints(&mut self, d: &Decisions) {
         for &p in &d.pin {
-            self.pinned.insert(p);
+            self.mem.pin(p);
         }
         for &p in &d.unpin {
-            self.pinned.remove(&p);
+            self.mem.unpin(p);
         }
     }
 
@@ -434,19 +555,50 @@ impl<'p> Session<'p> {
         }
     }
 
+    /// Deliver one event: each observer's `interested` pre-filter runs
+    /// exactly once, and the snapshot is built only if some observer
+    /// accepted (observers beyond the 128-bit interest mask are
+    /// re-asked — sessions never carry that many).
     #[inline]
     fn emit(&mut self, event: SimEvent) {
-        if self.observers.is_empty()
-            || !self.observers.iter().any(|o| o.interested(&event))
-        {
+        if self.observers.is_empty() {
+            return;
+        }
+        let mut mask: u128 = 0;
+        let mut any = false;
+        for (i, o) in self.observers.iter().enumerate() {
+            if o.interested(&event) {
+                any = true;
+                if i < 128 {
+                    mask |= 1u128 << i;
+                }
+            }
+        }
+        if !any {
             return;
         }
         let snap = self.snapshot();
-        for o in self.observers.iter_mut() {
-            if o.interested(&event) {
+        for (i, o) in self.observers.iter_mut().enumerate() {
+            let wanted = if i < 128 {
+                mask & (1u128 << i) != 0
+            } else {
+                o.interested(&event)
+            };
+            if wanted {
                 o.on_event(&event, &snap);
             }
         }
+    }
+
+    /// Cross a kernel (phase) boundary: notify the policy, then the
+    /// observers.
+    fn kernel_boundary(&mut self, kernel: u32) {
+        self.current_kernel = kernel;
+        let mut d = self.take_scratch();
+        self.decide_into(MemEvent::KernelBoundary { kernel }, &mut d);
+        self.apply_hints(&d);
+        self.put_scratch(d);
+        self.emit(SimEvent::KernelBoundary { kernel });
     }
 
     fn step(&mut self, acc: &Access) -> StepResult {
@@ -464,8 +616,10 @@ impl<'p> Session<'p> {
         }
 
         let resident = self.mem.resident(acc.page);
-        let d = self.decide(MemEvent::Access { acc, resident });
+        let mut d = self.take_scratch();
+        self.decide_into(MemEvent::Access { acc, resident }, &mut d);
         self.apply_hints(&d);
+        self.put_scratch(d);
 
         if resident {
             self.stats.hits += 1;
@@ -481,18 +635,21 @@ impl<'p> Session<'p> {
             // the batched decision point: prefetch and pre-eviction DMA
             // are scheduled while the far-fault batch is in flight;
             // candidates must lie inside a managed allocation.
-            let mut d = self.decide(MemEvent::FaultServiced { acc, action });
+            let mut d = self.take_scratch();
+            self.decide_into(MemEvent::FaultServiced { acc, action }, &mut d);
             self.apply_hints(&d);
             self.queue_pre_evictions(&mut d);
             // drain before admitting prefetches so they land in the
             // frames this decision's pre-evictions just freed
             self.drain_background();
-            for page in d.prefetch {
+            for i in 0..d.prefetch.len() {
+                let page = d.prefetch[i];
                 if !self.arena.in_allocation(page) || self.mem.resident(page) {
                     continue;
                 }
                 self.admit(page, true);
             }
+            self.put_scratch(d);
             StepResult { hit: false, action: Some(action), crashed: false }
         }
     }
@@ -505,21 +662,26 @@ impl<'p> Session<'p> {
         if self.faults_in_interval >= interval_faults {
             self.faults_in_interval = 0;
             self.intervals += 1;
-            let mut d = self.decide(MemEvent::Interval { index: self.intervals });
+            let mut d = self.take_scratch();
+            self.decide_into(MemEvent::Interval { index: self.intervals }, &mut d);
             self.apply_hints(&d);
             self.queue_pre_evictions(&mut d);
+            self.put_scratch(d);
             self.emit(SimEvent::Interval { index: self.intervals });
         }
 
-        let d = self.decide(MemEvent::Fault { acc });
+        let mut d = self.take_scratch();
+        self.decide_into(MemEvent::Fault { acc }, &mut d);
         self.apply_hints(&d);
         let action = d.fault_action.unwrap_or(FaultAction::Migrate);
+        self.put_scratch(d);
         let effective = match action {
             FaultAction::Delay => {
-                let c = self.delay_counters.entry(acc.page).or_insert(0);
-                *c += 1;
-                if *c >= delay_threshold {
-                    self.delay_counters.remove(&acc.page);
+                // soft-pin counters are page attributes of the dense
+                // table (same lifetime as the old side table: cleared
+                // only when the threshold trips)
+                if self.mem.delay_bump(acc.page) >= delay_threshold {
+                    self.mem.delay_clear(acc.page);
                     FaultAction::Migrate
                 } else {
                     self.stats.delayed_remote += 1;
@@ -564,14 +726,14 @@ impl<'p> Session<'p> {
         if self.background.is_empty() {
             return;
         }
-        let mut held: VecDeque<Page> = VecDeque::new();
+        let mut held = std::mem::take(&mut self.held_buf);
         while let Some(page) = self.background.pop_front() {
-            if !self.mem.resident(page) || self.pinned.contains(&page) {
+            if !self.mem.resident(page) || self.mem.is_pinned(page) {
                 continue; // stale or pinned: drop the directive
             }
             let dirty = self.mem.frame(page).map(|f| f.dirty).unwrap_or(false);
             if dirty && self.clock.interconnect().free_at() > self.stats.cycles {
-                held.push_back(page); // no slack: hold for a later drain
+                held.push(page); // no slack: hold for a later drain
                 continue;
             }
             let frame = self.mem.evict(page).expect("checked resident");
@@ -587,11 +749,17 @@ impl<'p> Session<'p> {
                 self.stats.background_link_cycles +=
                     self.clock.interconnect().busy_total() - before;
             }
-            let d = self.decide(MemEvent::Evicted { page, pre_evicted: true });
+            let mut d = self.take_scratch();
+            self.decide_into(MemEvent::Evicted { page, pre_evicted: true }, &mut d);
             self.apply_hints(&d);
+            self.put_scratch(d);
             self.emit(SimEvent::PreEvict { page, dirty: frame.dirty });
         }
-        self.background = held;
+        // the queue is empty here: refilling from the held list keeps
+        // the original directive order, without the old per-drain
+        // VecDeque allocation
+        self.background.extend(held.drain(..));
+        self.held_buf = held;
     }
 
     /// Bring a page into device memory, evicting as needed.
@@ -607,9 +775,12 @@ impl<'p> Session<'p> {
             self.stats.evictions_avoided += 1;
         }
         while self.mem.is_full() {
-            let d = self.decide(MemEvent::VictimNeeded { incoming: page });
+            let mut d = self.take_scratch();
+            self.decide_into(MemEvent::VictimNeeded { incoming: page }, &mut d);
             self.apply_hints(&d);
-            let victim = match d.victim {
+            let chosen = d.victim;
+            self.put_scratch(d);
+            let victim = match chosen {
                 Some(v) if self.mem.resident(v) && v != page => v,
                 _ => {
                     self.stats.policy_victim_fallbacks += 1;
@@ -627,11 +798,13 @@ impl<'p> Session<'p> {
                 // writeback occupies the link but does not stall the SMs
                 self.charge(CostEvent::LinkTransfer);
             }
-            let d = self.decide(MemEvent::Evicted {
-                page: victim,
-                pre_evicted: false,
-            });
+            let mut d = self.take_scratch();
+            self.decide_into(
+                MemEvent::Evicted { page: victim, pre_evicted: false },
+                &mut d,
+            );
             self.apply_hints(&d);
+            self.put_scratch(d);
             self.emit(SimEvent::Evict { page: victim, dirty: frame.dirty });
         }
         // prefetch transfers ride the link in the background
@@ -641,8 +814,10 @@ impl<'p> Session<'p> {
         }
         self.mem.install(page, self.stats.cycles, via_prefetch);
         let thrashed = self.stats.note_migration(page);
-        let d = self.decide(MemEvent::Migrated { page, via_prefetch });
+        let mut d = self.take_scratch();
+        self.decide_into(MemEvent::Migrated { page, via_prefetch }, &mut d);
         self.apply_hints(&d);
+        self.put_scratch(d);
         self.emit(SimEvent::Migrate { page, via_prefetch });
         if thrashed {
             self.emit(SimEvent::Thrash { page });
@@ -731,6 +906,39 @@ mod tests {
     }
 
     #[test]
+    fn push_batch_matches_per_access_pushes() {
+        let seq: Vec<u64> = (0..6).cycle().take(200).collect();
+        let t = mk_trace(&seq, 6);
+
+        let mut a = session_for(&t, 4);
+        let mut last_a = StepResult::default();
+        for acc in &t.accesses {
+            last_a = a.push(acc);
+        }
+
+        let mut b = session_for(&t, 4);
+        let last_b = b.push_batch(&t.accesses);
+
+        assert_eq!(last_a, last_b);
+        assert_eq!(a.finish(), b.finish());
+    }
+
+    #[test]
+    fn feed_chunks_match_push_batch() {
+        // longer than one FEED_CHUNK so the chunking loop actually spins
+        let seq: Vec<u64> = (0..8).cycle().take(3000).collect();
+        let t = mk_trace(&seq, 8);
+
+        let mut a = session_for(&t, 5);
+        a.feed(t.accesses.iter().copied());
+
+        let mut b = session_for(&t, 5);
+        b.push_batch(&t.accesses);
+
+        assert_eq!(a.finish(), b.finish());
+    }
+
+    #[test]
     fn events_match_stats() {
         let seq: Vec<u64> = (0..4).cycle().take(40).collect();
         let t = mk_trace(&seq, 4);
@@ -765,8 +973,10 @@ mod tests {
         assert!(s.crashed());
         let consumed = s.stats().accesses;
         assert!(consumed < t.accesses.len() as u64, "crash must stop the feed");
-        // pushes after a crash are inert
+        // pushes after a crash are inert — batched or not
         let r = s.push(&t.accesses[0]);
+        assert!(r.crashed);
+        let r = s.push_batch(&t.accesses);
         assert!(r.crashed);
         assert_eq!(s.stats().accesses, consumed);
         assert_eq!(rec.borrow().crashes, 1);
@@ -803,6 +1013,13 @@ mod tests {
         assert!(!multi.in_allocation(99));
     }
 
+    #[test]
+    fn arena_span_covers_every_allocation() {
+        assert_eq!(Arena::new(100, vec![]).span_pages(), 100);
+        assert_eq!(Arena::new(100, vec![(0, 4), (32, 8)]).span_pages(), 100);
+        assert_eq!(Arena::new(10, vec![(0, 4), (200, 8)]).span_pages(), 208);
+    }
+
     /// A minimal directive policy: LRU demand eviction, plus a pre-evict
     /// directive for one named page at every fault-serviced point.
     struct PreEvictOne {
@@ -819,12 +1036,12 @@ mod tests {
             &mut self,
             event: &MemEvent<'_>,
             view: &MemView<'_>,
-        ) -> Decisions {
-            let mut d = self.inner.decide(event, view);
+            out: &mut Decisions,
+        ) {
+            self.inner.decide(event, view, out);
             if let MemEvent::FaultServiced { .. } = event {
-                d.pre_evict.push(self.target);
+                out.pre_evict.push(self.target);
             }
-            d
         }
     }
 
@@ -902,13 +1119,13 @@ mod tests {
                 &mut self,
                 event: &MemEvent<'_>,
                 view: &MemView<'_>,
-            ) -> Decisions {
-                let mut d = self.inner.decide(event, view);
+                out: &mut Decisions,
+            ) {
+                self.inner.decide(event, view, out);
                 if let MemEvent::FaultServiced { .. } = event {
-                    d.pin.push(0);
-                    d.pre_evict.push(0);
+                    out.pin.push(0);
+                    out.pre_evict.push(0);
                 }
-                d
             }
         }
         let t = mk_trace(&[0, 1, 2, 3, 4, 5], 6);

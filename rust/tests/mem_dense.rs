@@ -1,0 +1,350 @@
+//! PR-9 differential suite for the dense page-table `DeviceMemory`.
+//!
+//! Two layers of defense for the SoA rewrite:
+//!
+//! 1. A randomized differential test driving the dense table and a
+//!    `HashMap`/`HashSet` reference model (the layout the rewrite
+//!    replaced) through identical install/touch/evict/pin/delay
+//!    sequences — including pages past the dense span, which take the
+//!    overflow-map path — and asserting every observable agrees at
+//!    every step.
+//! 2. A pinned sweep byte-identity check: serial vs parallel sweeps
+//!    over all 11 builtin workloads × {125, 150}% must serialize to
+//!    byte-identical CSV and JSONL. The page table is the single most
+//!    shared structure under that grid, so any nondeterminism or
+//!    accounting drift it introduces shows up here as a byte diff.
+
+use std::collections::{HashMap, HashSet};
+
+use uvmio::api::{
+    CsvSink, JsonlSink, StrategyCtx, StrategyRegistry, SweepRunner,
+    SweepSink, SweepSpec,
+};
+use uvmio::sim::{DeviceMemory, Frame};
+use uvmio::trace::workloads::Workload;
+use uvmio::util::check::props;
+use uvmio::util::rng::Rng;
+
+/// The pre-PR-9 layout, kept as an executable specification: one
+/// `HashMap` entry per resident frame, pins in a `HashSet`, delay
+/// counters in their own map. Every method mirrors the documented
+/// `DeviceMemory` contract (including the install panics).
+struct RefMem {
+    capacity: u64,
+    frames: HashMap<u64, Frame>,
+    pinned: HashSet<u64>,
+    delay: HashMap<u64, u32>,
+}
+
+impl RefMem {
+    fn new(capacity: u64) -> RefMem {
+        RefMem {
+            capacity,
+            frames: HashMap::new(),
+            pinned: HashSet::new(),
+            delay: HashMap::new(),
+        }
+    }
+
+    fn used(&self) -> u64 {
+        self.frames.len() as u64
+    }
+
+    fn is_full(&self) -> bool {
+        self.used() >= self.capacity
+    }
+
+    fn resident(&self, page: u64) -> bool {
+        self.frames.contains_key(&page)
+    }
+
+    fn frame(&self, page: u64) -> Option<Frame> {
+        self.frames.get(&page).copied()
+    }
+
+    fn install(&mut self, page: u64, now: u64, via_prefetch: bool) {
+        assert!(!self.is_full(), "install over capacity");
+        let prev = self.frames.insert(
+            page,
+            Frame {
+                dirty: false,
+                migrated_at: now,
+                touches: 0,
+                prefetched_untouched: via_prefetch,
+            },
+        );
+        assert!(prev.is_none(), "page {page} installed twice");
+    }
+
+    fn touch(&mut self, page: u64, is_write: bool) -> bool {
+        match self.frames.get_mut(&page) {
+            Some(f) => {
+                f.dirty |= is_write;
+                f.touches = f.touches.saturating_add(1);
+                f.prefetched_untouched = false;
+                true
+            }
+            None => false,
+        }
+    }
+
+    fn evict(&mut self, page: u64) -> Option<Frame> {
+        self.frames.remove(&page)
+    }
+
+    fn pin(&mut self, page: u64) {
+        self.pinned.insert(page);
+    }
+
+    fn unpin(&mut self, page: u64) {
+        self.pinned.remove(&page);
+    }
+
+    fn is_pinned(&self, page: u64) -> bool {
+        self.pinned.contains(&page)
+    }
+
+    fn delay_bump(&mut self, page: u64) -> u32 {
+        let c = self.delay.entry(page).or_insert(0);
+        *c = c.saturating_add(1);
+        *c
+    }
+
+    fn delay_clear(&mut self, page: u64) {
+        self.delay.remove(&page);
+    }
+
+    fn pages(&self) -> Vec<u64> {
+        let mut v: Vec<u64> = self.frames.keys().copied().collect();
+        v.sort_unstable();
+        v
+    }
+
+    fn any_page(&self) -> Option<u64> {
+        self.frames.keys().copied().min()
+    }
+}
+
+fn assert_frames_eq(a: Option<Frame>, b: Option<Frame>, page: u64, ctx: &str) {
+    match (a, b) {
+        (None, None) => {}
+        (Some(a), Some(b)) => {
+            assert_eq!(a.dirty, b.dirty, "{ctx}: dirty of page {page}");
+            assert_eq!(
+                a.migrated_at, b.migrated_at,
+                "{ctx}: migrated_at of page {page}"
+            );
+            assert_eq!(a.touches, b.touches, "{ctx}: touches of page {page}");
+            assert_eq!(
+                a.prefetched_untouched, b.prefetched_untouched,
+                "{ctx}: prefetched_untouched of page {page}"
+            );
+        }
+        (a, b) => panic!(
+            "{ctx}: page {page} residency split — dense {:?} vs ref {:?}",
+            a.is_some(),
+            b.is_some()
+        ),
+    }
+}
+
+/// Draw a page id that lands in the dense span most of the time, just
+/// past it sometimes, and far past it (forcing the overflow `BTreeMap`)
+/// occasionally.
+fn draw_page(rng: &mut Rng, span: u64) -> u64 {
+    if rng.chance(0.08) {
+        span + rng.below(16)
+    } else if rng.chance(0.03) {
+        (1u64 << 40) + rng.below(8)
+    } else {
+        rng.below(span.max(1))
+    }
+}
+
+#[test]
+fn dense_table_matches_hashmap_reference_under_random_churn() {
+    props(0xd1ff_9e37, 48, |rng| {
+        let capacity = 1 + rng.below(12);
+        // span independent of capacity: sometimes smaller (with_span
+        // clamps up to capacity), sometimes much larger
+        let span = 1 + rng.below(96);
+        let mut dense = DeviceMemory::with_span(capacity, span);
+        let mut reference = RefMem::new(capacity);
+        let mut now = 0u64;
+
+        let steps = 200 + rng.below(300);
+        for step in 0..steps {
+            let page = draw_page(rng, span);
+            let ctx = format!("step {step} (cap {capacity}, span {span})");
+            match rng.below(100) {
+                // install a missing page when a frame is free
+                0..=29 => {
+                    if !dense.resident(page) && !dense.is_full() {
+                        let via_prefetch = rng.chance(0.3);
+                        dense.install(page, now, via_prefetch);
+                        reference.install(page, now, via_prefetch);
+                    }
+                }
+                // touch (hit or miss — the bool must agree)
+                30..=59 => {
+                    let is_write = rng.chance(0.4);
+                    assert_eq!(
+                        dense.touch(page, is_write),
+                        reference.touch(page, is_write),
+                        "{ctx}: touch({page})"
+                    );
+                }
+                // evict (resident or not — the frame must agree)
+                60..=74 => {
+                    assert_frames_eq(
+                        dense.evict(page),
+                        reference.evict(page),
+                        page,
+                        &format!("{ctx}: evict"),
+                    );
+                }
+                // pin / unpin — page attributes, resident or not
+                75..=84 => {
+                    if rng.chance(0.5) {
+                        dense.pin(page);
+                        reference.pin(page);
+                    } else {
+                        dense.unpin(page);
+                        reference.unpin(page);
+                    }
+                }
+                // delay counters — bump returns post-increment count
+                85..=94 => {
+                    if rng.chance(0.7) {
+                        assert_eq!(
+                            dense.delay_bump(page),
+                            reference.delay_bump(page),
+                            "{ctx}: delay_bump({page})"
+                        );
+                    } else {
+                        dense.delay_clear(page);
+                        reference.delay_clear(page);
+                    }
+                }
+                // full-state probe
+                _ => {
+                    assert_eq!(
+                        dense.pages().collect::<Vec<_>>(),
+                        reference.pages(),
+                        "{ctx}: resident sets"
+                    );
+                }
+            }
+            now += 1;
+
+            // cheap invariants on every step
+            assert_eq!(dense.used(), reference.used(), "{ctx}: used");
+            assert_eq!(dense.is_full(), reference.is_full(), "{ctx}: is_full");
+            assert_eq!(
+                dense.residency_popcount(),
+                dense.used(),
+                "{ctx}: popcount vs used"
+            );
+            assert_eq!(
+                dense.any_page(),
+                reference.any_page(),
+                "{ctx}: any_page (min resident)"
+            );
+            assert_eq!(
+                dense.resident(page),
+                reference.resident(page),
+                "{ctx}: resident({page})"
+            );
+            assert_frames_eq(
+                dense.frame(page),
+                reference.frame(page),
+                page,
+                &format!("{ctx}: frame"),
+            );
+            assert_eq!(
+                dense.is_pinned(page),
+                reference.is_pinned(page),
+                "{ctx}: is_pinned({page})"
+            );
+        }
+
+        // final exhaustive sweep over every page either side ever saw
+        assert_eq!(
+            dense.pages().collect::<Vec<_>>(),
+            reference.pages(),
+            "final resident sets (cap {capacity}, span {span})"
+        );
+        for page in reference.pages() {
+            assert_frames_eq(
+                dense.frame(page),
+                reference.frame(page),
+                page,
+                "final",
+            );
+        }
+    });
+}
+
+#[test]
+fn dense_and_reference_agree_on_overflow_only_workload() {
+    // every page past the span: the whole run lives in the overflow maps
+    let mut dense = DeviceMemory::with_span(4, 8);
+    let mut reference = RefMem::new(4);
+    let base = 1u64 << 33;
+    for i in 0..4 {
+        dense.install(base + i, i, i % 2 == 0);
+        reference.install(base + i, i, i % 2 == 0);
+    }
+    assert!(dense.is_full() && reference.is_full());
+    assert_eq!(dense.any_page(), reference.any_page());
+    assert_eq!(dense.pages().collect::<Vec<_>>(), reference.pages());
+    assert_frames_eq(dense.evict(base), reference.evict(base), base, "evict");
+    assert_eq!(dense.used(), reference.used());
+    assert_eq!(dense.residency_popcount(), dense.used());
+}
+
+/// Serial vs parallel sweeps over the full builtin workload grid at
+/// {125, 150}% must write byte-identical CSV and JSONL. Pinned here (on
+/// top of the narrower grid in `api_registry.rs`) because the dense
+/// page table sits under every one of these cells.
+#[test]
+fn sweep_csv_jsonl_byte_identical_serial_vs_parallel_full_grid() {
+    let registry = StrategyRegistry::builtin();
+    assert_eq!(Workload::ALL.len(), 11, "grid expects the 11 builtins");
+    let sweep = SweepSpec::new(
+        Workload::ALL.to_vec(),
+        registry
+            .resolve_list("baseline,uvmsmart,hpe-preevict")
+            .unwrap(),
+    )
+    .with_oversub(vec![125, 150]);
+    let ctx = StrategyCtx::default();
+
+    let render = |threads: usize| -> (Vec<u8>, Vec<u8>) {
+        let mut csv = Vec::new();
+        let mut jsonl = Vec::new();
+        {
+            let mut sinks: Vec<Box<dyn SweepSink + '_>> = vec![
+                Box::new(CsvSink::new(&mut csv)),
+                Box::new(JsonlSink::new(&mut jsonl)),
+            ];
+            SweepRunner::new(&registry)
+                .with_threads(threads)
+                .run(&sweep, &ctx, &mut sinks)
+                .unwrap();
+        }
+        (csv, jsonl)
+    };
+
+    let (csv_serial, jsonl_serial) = render(1);
+    let (csv_parallel, jsonl_parallel) = render(4);
+    assert!(!csv_serial.is_empty() && !jsonl_serial.is_empty());
+    assert_eq!(
+        csv_serial, csv_parallel,
+        "sweep CSV diverged between serial and parallel"
+    );
+    assert_eq!(
+        jsonl_serial, jsonl_parallel,
+        "sweep JSONL diverged between serial and parallel"
+    );
+}

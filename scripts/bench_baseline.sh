@@ -1,25 +1,34 @@
 #!/usr/bin/env bash
-# Regenerate BENCH_PR7.json — the committed bench baseline for the
-# native predictor subsystem (PR 6) and the memoized result store
-# (PR 7).
+# Regenerate the committed bench baseline.
 #
-# Runs the predictor and results bench binaries (neither needs
-# artifacts; the pjrt rows appear only after `make artifacts`) and
-# converts the harness's
+# PR 7 baselined the predictor + result-store benches
+# (BENCH_PR7.json); PR 9 adds the session hot-path trio
+# (sim/push_hot_loop, sim/push_batch, mem/dense_vs_ref/*) from
+# `benches/hot_path.rs` and baselines everything into BENCH_PR9.json.
+#
+# Runs the bench binaries (none needs artifacts; the pjrt rows appear
+# only after `make artifacts`) and converts the harness's
 #     group/name   time: [1.234 µs]  thrpt: [5.678 Melem/s]
 # lines into a stable JSON document. Re-run on a quiet machine and
-# commit the result whenever the prediction or memoization path
-# changes materially:
+# commit the result whenever the prediction, memoization, or session
+# hot path changes materially:
 #
 #     scripts/bench_baseline.sh [output.json]
+#
+# Cold-vs-warm: the harness already warms up before sampling, but the
+# *first* invocation after a build also pays page-cache and frequency
+# ramp costs. For a committed baseline, run the script twice and keep
+# the second output; the delta between the two runs is your noise
+# floor (record it in the JSON "note" if it exceeds ~5%).
 set -euo pipefail
 
 cd "$(dirname "$0")/.."
-out="${1:-BENCH_PR7.json}"
+out="${1:-BENCH_PR9.json}"
 
 raw="$(mktemp)"
 trap 'rm -f "$raw"' EXIT
-(cd rust && cargo bench --bench predictor --bench results) | tee "$raw"
+(cd rust && cargo bench --bench predictor --bench results --bench hot_path) \
+    | tee "$raw"
 
 python3 - "$raw" "$out" <<'PY'
 import json, re, subprocess, sys
@@ -56,12 +65,13 @@ rev = subprocess.run(
 
 doc = {
     "schema": "bench-baseline/v1",
-    "pr": 7,
-    "bench": "predictor+results",
+    "pr": 9,
+    "bench": "predictor+results+hot_path",
     "git_rev": rev,
     "status": "measured",
     "note": "median per-iteration times from rust/benches/common harness; "
-            "regenerate with scripts/bench_baseline.sh",
+            "regenerate with scripts/bench_baseline.sh (run twice, keep "
+            "the second output — see cold-vs-warm note in the script)",
     "benches": benches,
 }
 with open(out_path, "w", encoding="utf-8") as f:
