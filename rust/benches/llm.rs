@@ -1,0 +1,54 @@
+//! LLM serving benchmarks: generator throughput for the `trace::llm`
+//! family (accesses synthesized per second) and the serving driver
+//! end-to-end — a full request mix time-sliced through the online
+//! scheduler at 125% oversubscription. These bound how much of a
+//! serving-table sweep is trace synthesis vs simulation.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use common::Bench;
+use uvmio::config::Scale;
+use uvmio::coordinator::run_mix;
+use uvmio::policy::composite::Composite;
+use uvmio::policy::lru::Lru;
+use uvmio::policy::DemandOnly;
+use uvmio::trace::workloads::Workload;
+
+fn main() {
+    let b = Bench::new("llm");
+    let scale = Scale::default();
+
+    for w in Workload::LLM {
+        let elems = w.generate(scale, 42).accesses.len() as u64;
+        let name = format!("gen/{}", w.name());
+        b.bench(&name, elems, || {
+            std::hint::black_box(w.generate(scale, 42));
+        });
+    }
+
+    for mix in uvmio::coordinator::ServingMix::all() {
+        let probe = run_mix(
+            &mix,
+            scale,
+            42,
+            125,
+            Box::new(Composite::new(DemandOnly, Lru::new())),
+        )
+        .expect("serving mix runs");
+        let elems = probe.outcome.stats.accesses;
+        let name = format!("serving/{}@125", mix.name);
+        b.bench(&name, elems, || {
+            std::hint::black_box(
+                run_mix(
+                    &mix,
+                    scale,
+                    42,
+                    125,
+                    Box::new(Composite::new(DemandOnly, Lru::new())),
+                )
+                .expect("serving mix runs"),
+            );
+        });
+    }
+}

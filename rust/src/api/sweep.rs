@@ -65,6 +65,10 @@ use super::sink::SweepSink;
 pub struct ScheduledWorkload {
     pub tenants: Vec<Arc<dyn TraceSource>>,
     pub schedule: SchedulePolicy,
+    /// per-tenant arrival slots (index-aligned; missing entries default
+    /// to 0 = present from the start, today's behaviour). Set by the
+    /// serving driver's arrival process; empty for plain `sched:` cells.
+    pub arrivals: Vec<u64>,
 }
 
 impl ScheduledWorkload {
@@ -72,14 +76,37 @@ impl ScheduledWorkload {
         tenants: Vec<Arc<dyn TraceSource>>,
         schedule: SchedulePolicy,
     ) -> ScheduledWorkload {
-        ScheduledWorkload { tenants, schedule }
+        ScheduledWorkload { tenants, schedule, arrivals: Vec::new() }
     }
 
-    /// Display name: `sched:A+B@fault-aware`.
+    /// Stagger tenants on the scheduler's merged-slot clock (see
+    /// [`crate::coordinator::TenantSpec::with_arrival`]).
+    pub fn with_arrivals(mut self, arrivals: Vec<u64>) -> ScheduledWorkload {
+        self.arrivals = arrivals;
+        self
+    }
+
+    /// Display name: `sched:A+B@fault-aware`, with runs of the same
+    /// tenant collapsed multiplier-style (`sched:llm-req*12@round-robin`)
+    /// so serving fleets stay readable in reports.
     pub fn name(&self) -> String {
-        let tenants: Vec<String> =
-            self.tenants.iter().map(|t| t.name()).collect();
-        format!("sched:{}@{}", tenants.join("+"), self.schedule.name())
+        let mut parts: Vec<String> = Vec::new();
+        let mut run: Option<(String, usize)> = None;
+        for t in &self.tenants {
+            let name = t.name();
+            match run.take() {
+                Some((n, c)) if n == name => run = Some((n, c + 1)),
+                Some((n, c)) => {
+                    parts.push(if c > 1 { format!("{n}*{c}") } else { n });
+                    run = Some((name, 1));
+                }
+                None => run = Some((name, 1)),
+            }
+        }
+        if let Some((n, c)) = run {
+            parts.push(if c > 1 { format!("{n}*{c}") } else { n });
+        }
+        format!("sched:{}@{}", parts.join("+"), self.schedule.name())
     }
 }
 
@@ -191,7 +218,27 @@ pub fn cell_store_key(
                 .enumerate()
                 .map(|(i, t)| t.cache_key(sweep.scale, seed ^ i as u64))
                 .collect();
-            format!("sched[{}]@{}", tenants.join("|"), s.schedule.name())
+            // arrivals change the merge order, so they are part of the
+            // identity; the empty (all-at-slot-0) case keeps the exact
+            // pre-arrival key, so existing stored results stay valid
+            let arrivals = if s.arrivals.iter().all(|&a| a == 0) {
+                String::new()
+            } else {
+                format!(
+                    "@arr[{}]",
+                    s.arrivals
+                        .iter()
+                        .map(u64::to_string)
+                        .collect::<Vec<_>>()
+                        .join(",")
+                )
+            };
+            format!(
+                "sched[{}]@{}{}",
+                tenants.join("|"),
+                s.schedule.name(),
+                arrivals
+            )
         }
     };
     format!(
@@ -677,8 +724,10 @@ fn run_scheduled_cell(
         .with_schedule(sched_workload.schedule.clone())
         .with_config(spec.cfg.clone())
         .with_cost_model(sweep.cost_model);
-    for t in &traces {
-        sched = sched.add_tenant(TenantSpec::from_trace(t));
+    for (i, t) in traces.iter().enumerate() {
+        sched = sched.add_tenant(TenantSpec::from_trace(t).with_arrival(
+            sched_workload.arrivals.get(i).copied().unwrap_or(0),
+        ));
     }
     if let Some(t) = spec.crash_threshold {
         sched = sched.with_crash_threshold(t);

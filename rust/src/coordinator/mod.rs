@@ -25,10 +25,14 @@
 //! per-tenant priority/QoS weights (`--schedule weighted:3,1`).
 //! Scheduler-driven policies speak the directive protocol
 //! ([`crate::policy::DecisionPolicy`]), like every other session
-//! consumer.
+//! consumer. [`serving`] builds on the scheduler: a deterministic
+//! LLM request-mix driver ([`ServingMix`]) that instantiates request
+//! streams as arriving tenants and lowers onto the sweep grid as a
+//! memoizable scheduled workload.
 
 pub mod driver;
 pub mod multi;
+pub mod serving;
 pub mod trainer;
 
 pub use driver::{feat_dims, normalized_ipc, CellResult, RunSpec};
@@ -36,4 +40,5 @@ pub use multi::{
     multi_accuracy, MultiOutcome, MultiReport, MultiTenantScheduler,
     SchedulePolicy, TenantReport, TenantSpec,
 };
+pub use serving::{run_mix, RequestSource, ServingMix};
 pub use trainer::{offline_accuracy, online_accuracy, AccuracyReport, TrainOpts};

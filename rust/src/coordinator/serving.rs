@@ -1,0 +1,258 @@
+//! `coordinator::serving` — the LLM request-mix serving driver.
+//!
+//! The [`crate::trace::llm`] generators model *one* inference artifact
+//! each (a weight stack, a KV region, one request). A serving system is
+//! the composition: tens-to-hundreds of concurrent requests, each its
+//! own tenant stream, arriving over time and dying independently, all
+//! fighting for one oversubscribed device memory. That composition is
+//! exactly what the online [`MultiTenantScheduler`] already does — so a
+//! [`ServingMix`] is nothing more than a deterministic recipe for a
+//! scheduler run: which tenants (an optional shared weight-sweeper plus
+//! N copies of [`RequestSource`]), which arrival slots (a seeded,
+//! deterministic arrival process on the scheduler's merged-slot clock),
+//! and which [`SchedulePolicy`] time-slices them.
+//!
+//! Request shapes ride the sweep's per-tenant `seed ^ i` derivation:
+//! tenant `i` loads its trace at `seed ^ i`, and
+//! [`crate::trace::llm::request_profile`] is seeded the same way inside
+//! the generator — so [`ServingMix::tokens`] can recompute the mix's
+//! total serviced tokens from the seed alone. That keeps
+//! tokens-per-cycle reportable on *memoized* sweep cells (a warm
+//! [`crate::results::ResultStore`] hit carries cycles but no traces;
+//! tokens are re-derived, never stored).
+//!
+//! [`ServingMix::workload`] lowers a mix onto the sweep grid as a
+//! [`ScheduledWorkload`] with arrivals, so serving cells ride the
+//! ordinary memoized `SweepRunner` path; [`run_mix`] is the direct
+//! in-process driver for tests and benches.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::api::ScheduledWorkload;
+use crate::config::Scale;
+use crate::corpus::{GeneratorSource, TraceSource};
+use crate::policy::DecisionPolicy;
+use crate::trace::llm::{llm_request, request_profile};
+use crate::trace::workloads::Workload;
+use crate::trace::Trace;
+
+use super::multi::{
+    MultiOutcome, MultiTenantScheduler, SchedulePolicy, TenantSpec,
+};
+
+/// One serving request as a [`TraceSource`]: tenant `i` of a mix loads
+/// [`llm_request`] at the sweep's derived `seed ^ i`, so every request
+/// slot gets its own sampled (context, output-length) shape while the
+/// whole fleet shares one `Arc`'d source object.
+pub struct RequestSource;
+
+impl TraceSource for RequestSource {
+    fn id(&self) -> String {
+        "gen:llm-req".to_string()
+    }
+
+    fn name(&self) -> String {
+        "llm-req".to_string()
+    }
+
+    fn load(&self, scale: Scale, seed: u64) -> Result<Trace> {
+        Ok(llm_request(scale, seed))
+    }
+}
+
+/// A deterministic request-mix recipe: N request tenants (plus an
+/// optional shared weight-sweep tenant), a fixed arrival gap on the
+/// scheduler's merged-slot clock, and the schedule that time-slices
+/// them. Everything downstream — traces, arrivals, token totals — is a
+/// pure function of (mix, scale, seed).
+#[derive(Debug, Clone)]
+pub struct ServingMix {
+    /// mix id (exp table rows, bench labels)
+    pub name: &'static str,
+    /// concurrent request streams
+    pub requests: usize,
+    /// merged slots between consecutive request arrivals (0 = all
+    /// present at start, the saturated-batch regime)
+    pub arrival_gap: u64,
+    /// prepend a shared `llm-weights` tenant (tenant 0, arrival 0) —
+    /// the model's weight sweeps competing with every KV region
+    pub include_weights: bool,
+    pub schedule: SchedulePolicy,
+}
+
+impl ServingMix {
+    /// Interactive chat: 12 requests trickling in (staggered arrivals)
+    /// over a shared weight stack, proportional time-slicing.
+    pub fn chat() -> ServingMix {
+        ServingMix {
+            name: "chat",
+            requests: 12,
+            arrival_gap: 600,
+            include_weights: true,
+            schedule: SchedulePolicy::Proportional,
+        }
+    }
+
+    /// Saturated offline batch: 32 requests all queued at slot 0, no
+    /// weight tenant (pure KV pressure), round-robin slicing.
+    pub fn batch() -> ServingMix {
+        ServingMix {
+            name: "batch",
+            requests: 32,
+            arrival_gap: 0,
+            include_weights: false,
+            schedule: SchedulePolicy::RoundRobin,
+        }
+    }
+
+    /// The exp-table mixes, in display order.
+    pub fn all() -> Vec<ServingMix> {
+        vec![ServingMix::chat(), ServingMix::batch()]
+    }
+
+    /// Tenant sources in index order: `[weights,] req, req, …` — the
+    /// request copies share one source object; per-tenant `seed ^ i`
+    /// keeps their streams distinct.
+    pub fn tenants(&self) -> Vec<Arc<dyn TraceSource>> {
+        let mut out: Vec<Arc<dyn TraceSource>> = Vec::new();
+        if self.include_weights {
+            out.push(Arc::new(GeneratorSource(Workload::LlmWeights)));
+        }
+        let req: Arc<dyn TraceSource> = Arc::new(RequestSource);
+        for _ in 0..self.requests {
+            out.push(Arc::clone(&req));
+        }
+        out
+    }
+
+    /// Arrival slot per tenant (index-aligned with [`Self::tenants`]):
+    /// the weight tenant is present from slot 0; request `k` arrives at
+    /// `k * arrival_gap`.
+    pub fn arrivals(&self) -> Vec<u64> {
+        let mut out = Vec::new();
+        if self.include_weights {
+            out.push(0);
+        }
+        for k in 0..self.requests as u64 {
+            out.push(k * self.arrival_gap);
+        }
+        out
+    }
+
+    /// Lower the mix onto the sweep grid: a [`ScheduledWorkload`] with
+    /// arrivals, memoizable under the ordinary cell store key.
+    pub fn workload(&self) -> ScheduledWorkload {
+        ScheduledWorkload::new(self.tenants(), self.schedule.clone())
+            .with_arrivals(self.arrivals())
+    }
+
+    /// Total tokens the mix services at `seed` — recomputed from the
+    /// per-tenant seed derivation (`request_profile(seed ^ i)`), never
+    /// from a loaded trace, so memoized cells can report tokens/cycle.
+    /// Pinned against the generated traces by the serving test suite.
+    pub fn tokens(&self, seed: u64) -> u64 {
+        let offset = if self.include_weights { 1u64 } else { 0 };
+        (0..self.requests as u64)
+            .map(|k| request_profile(seed ^ (k + offset)).tokens())
+            .sum()
+    }
+}
+
+/// Drive a mix in-process: load tenant `i` at `seed ^ i`, stagger
+/// arrivals per the mix, run to completion under `policy` at
+/// `oversub_percent` (capacity derived from the combined touched set,
+/// same as any scheduler run). The sweep-grid path
+/// ([`ServingMix::workload`]) produces byte-identical outcomes; this
+/// direct form is for tests, benches and embedding.
+pub fn run_mix(
+    mix: &ServingMix,
+    scale: Scale,
+    seed: u64,
+    oversub_percent: u32,
+    policy: Box<dyn DecisionPolicy>,
+) -> Result<MultiOutcome> {
+    let sources = mix.tenants();
+    let arrivals = mix.arrivals();
+    let mut traces: Vec<Trace> = Vec::with_capacity(sources.len());
+    for (i, s) in sources.iter().enumerate() {
+        traces.push(s.load(scale, seed ^ i as u64)?);
+    }
+    let mut sched =
+        MultiTenantScheduler::new().with_schedule(mix.schedule.clone());
+    for (i, t) in traces.iter().enumerate() {
+        sched = sched.add_tenant(
+            TenantSpec::from_trace(t)
+                .with_arrival(arrivals.get(i).copied().unwrap_or(0)),
+        );
+    }
+    sched.run(oversub_percent, policy)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::policy::composite::Composite;
+    use crate::policy::lru::Lru;
+    use crate::policy::DemandOnly;
+
+    fn demand_lru() -> Box<dyn DecisionPolicy> {
+        Box::new(Composite::new(DemandOnly, Lru::new()))
+    }
+
+    #[test]
+    fn mix_geometry_is_consistent() {
+        for mix in ServingMix::all() {
+            let tenants = mix.tenants();
+            let arrivals = mix.arrivals();
+            assert_eq!(tenants.len(), arrivals.len(), "{}", mix.name);
+            let expected =
+                mix.requests + usize::from(mix.include_weights);
+            assert_eq!(tenants.len(), expected, "{}", mix.name);
+            // arrivals are sorted: the driver never schedules backwards
+            assert!(arrivals.windows(2).all(|w| w[0] <= w[1]));
+        }
+    }
+
+    #[test]
+    fn tokens_match_generated_traces() {
+        // the seed-derived token total must equal what the traces
+        // actually encode (kernels - 1 per request trace)
+        let scale = Scale { factor: 1 };
+        for mix in ServingMix::all() {
+            for seed in [7u64, 42] {
+                let sources = mix.tenants();
+                let mut from_traces = 0u64;
+                for (i, s) in sources.iter().enumerate() {
+                    if s.name() != "llm-req" {
+                        continue;
+                    }
+                    let t = s.load(scale, seed ^ i as u64).unwrap();
+                    from_traces += t.kernels as u64 - 1;
+                }
+                assert_eq!(
+                    mix.tokens(seed),
+                    from_traces,
+                    "{} seed {seed}",
+                    mix.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn run_mix_is_deterministic() {
+        let scale = Scale { factor: 1 };
+        let mix = ServingMix::chat();
+        let a = run_mix(&mix, scale, 42, 125, demand_lru()).unwrap();
+        let b = run_mix(&mix, scale, 42, 125, demand_lru()).unwrap();
+        assert_eq!(a.outcome, b.outcome);
+        assert_eq!(a.tenants, b.tenants);
+        // attribution conservation with arrivals active
+        let cycles: u64 = a.tenants.iter().map(|t| t.cycles).sum();
+        assert_eq!(cycles, a.outcome.stats.cycles);
+        let accesses: u64 = a.tenants.iter().map(|t| t.accesses).sum();
+        assert_eq!(accesses, a.outcome.stats.accesses);
+    }
+}

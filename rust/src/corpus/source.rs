@@ -15,12 +15,17 @@
 //!
 //! ```text
 //! NW                  builtin generator (any Workload name)
+//! llm:decode          LLM serving family alias (llm-weights/kv/decode)
 //! corpus:mytrace      corpus entry by trace name (needs a store)
 //! mytrace             same, when the name is not a builtin workload
 //! csv:path/to.csv     CSV access dump, loaded directly from the file
 //! uvmlog:fault.log    UVM fault log, loaded directly from the file
 //! NW+corpus:mytrace   two sources interleaved as concurrent tenants
 //! ```
+//!
+//! [`parse_tenants`] (the `sched:` grammar) additionally accepts a
+//! `*N` tenant-count multiplier per segment — `sched:llm-decode*64`
+//! instantiates 64 tenants of one source without a 64-term spec.
 //!
 //! `csv:`/`uvmlog:` consume the REST of the spec as the file path (so
 //! paths may contain `+`); compose a file source as the right-hand
@@ -267,11 +272,49 @@ pub fn parse_source(
              csv:/uvmlog: prefixes for files)",
             Workload::ALL
                 .iter()
+                .chain(Workload::LLM.iter())
                 .map(|w| w.name())
                 .collect::<Vec<_>>()
                 .join(", ")
         ),
     }
+}
+
+/// Upper bound on the `*N` tenant multiplier: keeps the per-tenant
+/// `tb` namespace (`u32::MAX / TB_STRIDE` ≈ 262k tenants in
+/// [`crate::coordinator::MultiTenantScheduler`]) comfortably clear.
+pub const MAX_TENANT_MULTIPLIER: u32 = 4096;
+
+/// Push one `+`-free tenant segment, expanding a trailing `*N`
+/// multiplier (`llm-decode*64` → 64 shared handles to one source; the
+/// scheduler's per-tenant `seed ^ i` derivation makes each copy a
+/// distinct stream). A suffix that does not parse as a number is not a
+/// multiplier — the whole segment goes to [`parse_source`] untouched.
+fn push_tenant_segment(
+    out: &mut Vec<Arc<dyn TraceSource>>,
+    seg: &str,
+    store: Option<&CorpusStore>,
+) -> Result<()> {
+    if let Some((base, count)) = seg.rsplit_once('*') {
+        if let Ok(n) = count.trim().parse::<u32>() {
+            if n == 0 {
+                bail!("tenant multiplier in '{seg}' must be at least 1");
+            }
+            if n > MAX_TENANT_MULTIPLIER {
+                bail!(
+                    "tenant multiplier in '{seg}' exceeds the maximum of \
+                     {MAX_TENANT_MULTIPLIER}"
+                );
+            }
+            let src = parse_source(base, store)?;
+            for _ in 0..n {
+                out.push(Arc::clone(&src));
+            }
+            return Ok(());
+        }
+    }
+    out.push(parse_source(seg, store)?);
+    Ok(())
 }
 
 /// Split a `+`-composed spec into its tenant sources *without*
@@ -283,6 +326,10 @@ pub fn parse_source(
 /// Same binding rules as [`parse_source`]: a `csv:`/`uvmlog:` prefix
 /// consumes the rest of the spec as a file path (so file sources compose
 /// only as the rightmost tenant). A spec with no `+` yields one tenant.
+/// A segment may carry a `*N` tenant-count multiplier
+/// (`sched:llm-decode*64`, `NW*2+Hotspot`): the segment's source is
+/// repeated N times, and per-tenant seed derivation (`seed ^ i`)
+/// downstream gives every copy its own stream.
 pub fn parse_tenants(
     spec: &str,
     store: Option<&CorpusStore>,
@@ -296,11 +343,11 @@ pub fn parse_tenants(
         }
         match rest.split_once('+') {
             Some((head, tail)) => {
-                out.push(parse_source(head, store)?);
+                push_tenant_segment(&mut out, head, store)?;
                 rest = tail;
             }
             None => {
-                out.push(parse_source(rest, store)?);
+                push_tenant_segment(&mut out, rest, store)?;
                 break;
             }
         }
@@ -372,6 +419,31 @@ mod tests {
 
         assert!(parse_tenants("", None).is_err());
         assert!(parse_tenants("NW+", None).is_err());
+    }
+
+    #[test]
+    fn tenant_multiplier_expands_segments() {
+        let ts = parse_tenants("llm-decode*3", None).unwrap();
+        assert_eq!(ts.len(), 3);
+        assert!(ts.iter().all(|t| t.name() == "llm-decode"));
+        // the copies share one source object
+        assert!(Arc::ptr_eq(&ts[0], &ts[1]));
+
+        // multipliers compose with + segments on either side
+        let ts = parse_tenants("NW*2+Hotspot+llm:kv*2", None).unwrap();
+        let names: Vec<String> = ts.iter().map(|t| t.name()).collect();
+        assert_eq!(names, ["NW", "NW", "Hotspot", "llm-kv", "llm-kv"]);
+
+        // *1 is the degenerate single tenant
+        assert_eq!(parse_tenants("ATAX*1", None).unwrap().len(), 1);
+
+        // zero and oversized multipliers are rejected
+        assert!(parse_tenants("NW*0", None).is_err());
+        assert!(parse_tenants("NW*5000", None).is_err());
+        // a non-numeric suffix is not a multiplier: falls through to
+        // normal source resolution (and errors as an unknown workload)
+        let err = parse_tenants("NW*lots", None).unwrap_err().to_string();
+        assert!(err.contains("NW*lots"), "{err}");
     }
 
     #[test]

@@ -251,12 +251,14 @@ impl ExpContext {
 pub mod accuracy;
 pub mod footprint;
 pub mod ipc;
+pub mod serving;
 pub mod thrash;
 pub mod traces;
 
 pub const ALL: &[&str] = &[
     "table1", "table2", "table3", "table4", "table6", "table7", "fig3",
     "fig4", "fig5", "fig6", "fig10", "fig11", "fig12", "fig13", "fig14",
+    "serving",
 ];
 
 /// Run one experiment by id.
@@ -277,6 +279,7 @@ pub fn run(id: &str, ctx: &mut ExpContext) -> Result<()> {
         "fig12" => accuracy::fig12(ctx),
         "fig13" => ipc::fig13(ctx),
         "fig14" => ipc::fig14(ctx),
+        "serving" => serving::serving(ctx),
         "all" => {
             for id in ALL {
                 eprintln!("== running {id} ==");

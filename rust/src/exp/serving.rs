@@ -1,0 +1,105 @@
+//! The serving table: policies under LLM request mixes.
+//!
+//! Not a paper table — the forward-looking experiment the ROADMAP's
+//! serving north star asks for. Each [`ServingMix`] (interactive chat,
+//! saturated batch) is lowered onto the sweep grid as a scheduled
+//! workload with arrivals and swept over the policy landscape at
+//! 125/150% oversubscription. Two things the paper tables never show:
+//!
+//! * **tokens serviced per megacycle** — tokens are a pure function of
+//!   the mix and seed ([`ServingMix::tokens`]), so the column is
+//!   recomputable on memoized cells without loading a trace, and fixed
+//!   token work means lower cycles ⇔ higher serving throughput;
+//! * **both cost models side by side** — the table intentionally sweeps
+//!   `table-v` AND `coherent-link` regardless of `--cost-model`,
+//!   because the Grace-Hopper question ("is oversubscription survivable
+//!   on a coherent link?") is exactly the serving question.
+//!
+//! With `--results` set the cells ride the sweep runner's memoized
+//! lane: a warm re-run performs zero simulations.
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use crate::api::{StrategyCtx, SweepRunner, SweepSpec, SweepWorkload};
+use crate::coordinator::ServingMix;
+use crate::sim::CostModelKind;
+use crate::util::csv::{fnum, Table};
+
+use super::ExpContext;
+
+/// Serving table: tokens/Mcycle and thrashed pages per (mix, cost
+/// model, strategy, oversub). `--quick` trims to the chat mix, 125%
+/// and the rule-based strategies.
+pub fn serving(ctx: &mut ExpContext) -> Result<()> {
+    let mixes = if ctx.opts.quick {
+        vec![ServingMix::chat()]
+    } else {
+        ServingMix::all()
+    };
+    let strategies: Vec<String> = if ctx.opts.quick {
+        vec!["baseline".into(), "tree-evict".into(), "hpe-preevict".into()]
+    } else {
+        vec![
+            "baseline".into(),
+            "tree-evict".into(),
+            "hpe-preevict".into(),
+            "intelligent-native".into(),
+        ]
+    };
+    let oversub: Vec<u32> =
+        if ctx.opts.quick { vec![125] } else { vec![125, 150] };
+
+    let mut t = Table::new(
+        "Serving — tokens/Mcycle and pages thrashed under LLM request mixes",
+        &[
+            "Mix", "Model", "Strategy", "Oversub", "Cycles", "Tok/Mcyc",
+            "Thrash", "PreEv", "Avoided",
+        ],
+    );
+    for mix in &mixes {
+        let tokens = mix.tokens(ctx.opts.seed);
+        for model in CostModelKind::ALL {
+            let spec = SweepSpec::new(
+                vec![SweepWorkload::from(mix.workload())],
+                strategies.clone(),
+            )
+            .with_oversub(oversub.clone())
+            .with_seeds(vec![ctx.opts.seed])
+            .with_scale(ctx.opts.scale)
+            .with_cost_model(model);
+            let mut runner = SweepRunner::new(&ctx.registry);
+            if let Some(results) = &ctx.results {
+                runner = runner.with_results(Arc::clone(results));
+            }
+            let records =
+                runner.run(&spec, &StrategyCtx::default(), &mut [])?;
+            for rec in records {
+                let cell = rec
+                    .result
+                    .map_err(|e| anyhow!("serving cell failed: {e}"))?;
+                let stats = &cell.outcome.stats;
+                let tok_per_mcyc = if stats.cycles == 0 {
+                    0.0
+                } else {
+                    tokens as f64 * 1e6 / stats.cycles as f64
+                };
+                t.row(vec![
+                    mix.name.to_string(),
+                    model.name().to_string(),
+                    cell.display.clone(),
+                    format!("{}%", rec.cell.oversub),
+                    stats.cycles.to_string(),
+                    fnum(tok_per_mcyc, 2),
+                    stats.thrash_events.to_string(),
+                    stats.pre_evictions.to_string(),
+                    stats.evictions_avoided.to_string(),
+                ]);
+            }
+        }
+    }
+    print!("{}", t.to_console());
+    t.save(&ctx.opts.reports_dir, "serving")?;
+    Ok(())
+}

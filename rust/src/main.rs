@@ -7,7 +7,9 @@
 //! repro sweep --workloads all --strategies baseline,uvmsmart --oversub 100,125,150
 //! repro sweep --workloads sched:NW+Hotspot --schedule bandwidth-fair
 //! repro sweep --workloads sched:NW+Hotspot --schedule weighted:3,1 --cost-model coherent-link
+//! repro sweep --workloads llm-decode,sched:llm-kv*8 --strategies baseline,hpe-preevict
 //! repro sweep --workloads all --results results --resume
+//! repro exp serving --quick
 //! repro corpus build --workloads all --seeds 42,7
 //! repro corpus import faults.csv --name myapp
 //! repro results list --results results
@@ -54,7 +56,12 @@ USAGE:
             [--corpus DIR] [--cost-model table-v|coherent-link]
             [--predictor native|stub|pjrt] [--results DIR]
       regenerate a paper table/figure (table1 table2 table3 table4 table6
-      table7 fig3 fig4 fig5 fig6 fig10 fig11 fig12 fig13 fig14). With
+      table7 fig3 fig4 fig5 fig6 fig10 fig11 fig12 fig13 fig14), or the
+      forward-looking `serving` table: LLM request mixes (chat, batch)
+      swept over the policy landscape at 125/150% under BOTH cost
+      models, reporting tokens serviced per megacycle and thrashed
+      pages (tokens are recomputed from the mix seed, so memoized
+      serving cells report throughput without loading traces). With
       --corpus DIR the experiment trace cache is backed by the .uvmt
       store: traces generated once are persisted and reloaded by later
       runs (shared with `repro sweep --corpus` and `repro corpus build`).
@@ -108,7 +115,13 @@ USAGE:
       per (workload, scale, seed) via a shared cache; with --corpus DIR
       they are also persisted to / reloaded from the .uvmt store, and
       workload names may be corpus entries, csv:FILE / uvmlog:FILE
-      imports, or A+B multi-tenant compositions. sched:A+B cells run
+      imports, or A+B multi-tenant compositions. Besides the 11 paper
+      benchmarks, the LLM serving family is addressable by name
+      (llm-weights llm-kv llm-decode, or the llm:weights|kv|decode
+      aliases): layer-sweep weight reads, growing-then-dying KV-cache
+      regions with explicit end-of-request kernels, and the
+      prefill+decode composite — the workloads where pre-evict-aware
+      strategies separate from reactive ones. sched:A+B cells run
       their tenants through the ONLINE MultiTenantScheduler (shared
       device memory + interconnect, per-tenant cycle/fault attribution
       in sweep.jsonl) instead of an offline pre-interleave; --schedule
@@ -116,7 +129,10 @@ USAGE:
       fault-aware, bandwidth-fair, weighted:W1,W2,.. for priority/QoS
       time-slicing — tenant i gets slots in proportion to Wi; default
       proportional — for two tenants byte-identical to the offline A+B
-      merge). --cost-model prices every cell (recorded as a per-cell
+      merge). A sched: segment takes a *N tenant-count multiplier
+      (sched:llm-decode*64 = 64 tenants of one source; tenant i loads
+      at seed^i, so every copy is a distinct stream — large fleets
+      without large CLI strings). --cost-model prices every cell (recorded as a per-cell
       column in sweep.csv/jsonl). --crash-at maps an oversubscription
       level to a crash threshold (thrash events), e.g.
       --crash-at 150=100000 reproduces the Fig-14 crash columns.
@@ -166,7 +182,9 @@ USAGE:
       larger than RAM export fine). --key addresses an entry directly
       when several share a trace name
   repro corpus list [--corpus DIR]
-      list corpus entries (name, size, provenance key), flag corrupt ones
+      list corpus entries (name, workload category — streaming/regular/
+      mixed/random/llm, '-' for imports — size, provenance key), flag
+      corrupt ones
   repro corpus gc [--corpus DIR]
       remove corrupt entries and orphaned temp files
   repro accuracy --workload W [--method online|offline|ours] [--seed N]
@@ -301,6 +319,7 @@ fn parse_workloads(selector: &str) -> anyhow::Result<Vec<Workload>> {
                 "unknown workload {part}; known: {}",
                 Workload::ALL
                     .iter()
+                    .chain(Workload::LLM.iter())
                     .map(|w| w.name())
                     .collect::<Vec<_>>()
                     .join(", ")
@@ -916,15 +935,20 @@ fn cmd_corpus(args: &Args) -> anyhow::Result<()> {
                 return Ok(());
             }
             println!(
-                "{:<16} {:>10} {:>8} {:>7} {:>8}  {}",
-                "name", "accesses", "pages", "kernels", "KiB", "key"
+                "{:<16} {:<9} {:>10} {:>8} {:>7} {:>8}  {}",
+                "name", "category", "accesses", "pages", "kernels", "KiB", "key"
             );
             let mut corrupt = 0usize;
             for e in &entries {
                 match &e.meta {
                     Ok(m) => println!(
-                        "{:<16} {:>10} {:>8} {:>7} {:>8}  {}",
+                        "{:<16} {:<9} {:>10} {:>8} {:>7} {:>8}  {}",
                         m.name,
+                        // builtin generators carry a workload category
+                        // (Table VII classes + llm); imports show '-'
+                        Workload::from_name(&m.name)
+                            .map(|w| w.category())
+                            .unwrap_or("-"),
                         m.accesses,
                         m.working_set_pages,
                         m.kernels,
@@ -1187,7 +1211,7 @@ fn cmd_info() -> anyhow::Result<()> {
         );
     }
     println!("workloads:");
-    for w in Workload::ALL {
+    for w in Workload::ALL.into_iter().chain(Workload::LLM) {
         let t = w.generate(Scale::default(), 42);
         println!(
             "  {:12} {:>6} pages  {:>7} accesses  {} kernels  [{}]",

@@ -1,0 +1,460 @@
+//! LLM-inference workload family: the first generators whose
+//! *page-lifetime* structure — not just their delta texture — is the
+//! point.
+//!
+//! An inference server under memory oversubscription has three page
+//! populations with radically different lifetimes:
+//!
+//! * **Weights** — read-only, swept front-to-back once per decode step.
+//!   Strictly sequential, so they are maximally prefetchable, and they
+//!   recur every step, so they are the canonical pin candidates.
+//! * **Live KV-cache** — one region per in-flight request, growing
+//!   monotonically (one append per generated token) and re-read every
+//!   step by attention. Warm while the request lives.
+//! * **Dead KV-cache** — the instant a request emits its last token its
+//!   whole region goes cold *forever*. Dead pages are perfect
+//!   pre-eviction candidates: draining them in the background frees
+//!   frames without ever causing a re-fault.
+//!
+//! The generators make that structure explicit. Every request's end is
+//! marked by a dedicated **completion kernel** (a phase boundary whose
+//! only traffic touches the dying region), so interval- and phase-aware
+//! policies can *see* death instead of inferring it from silence. This
+//! is the scenario where the pre-evict-aware strategies (`tree-evict`,
+//! `hpe-preevict`, `intelligent-native`) separate from their reactive
+//! forms by construction — the reactive forms must burn a demand
+//! eviction (and often a wrong victim) for every frame the background
+//! drain would have handed back for free.
+//!
+//! Capacity interplay (same convention as the HPC generators): at 125%
+//! oversubscription the device holds 80% of the touched working set.
+//! `llm-weights` sweeps more pages than fit — the cyclic-LRU pathology
+//! with a perfectly prefetchable stream. `llm-kv` and `llm-decode` keep
+//! the *live* set near capacity while dead regions accumulate, so a
+//! policy's victim choice (dead KV vs hot weights/live KV) is exactly
+//! what the thrash count measures.
+//!
+//! Request shapes (context length, output length) are sampled per
+//! request from the caller's seed via [`RequestProfile`]; the serving
+//! driver ([`crate::coordinator::serving`]) uses the same sampler, so
+//! tokens serviced by a request stream are recomputable from its seed
+//! alone — memoized sweep cells report tokens/cycle without reloading
+//! any trace.
+
+use crate::config::Scale;
+use crate::trace::workloads::{Arena, Extent, TraceBuilder};
+use crate::trace::Trace;
+use crate::util::rng::Rng;
+
+/// Decode tokens that fit one KV page: the KV region grows by one page
+/// every `TOKENS_PER_KV_PAGE` generated tokens.
+pub const TOKENS_PER_KV_PAGE: u64 = 2;
+
+/// Attention re-reads per decode step: a strided window over the
+/// request's whole KV history (keeps live regions warm).
+const ATTENTION_READS: u64 = 6;
+
+/// The sampled shape of one inference request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RequestProfile {
+    /// KV pages written during prefill (the prompt's context length).
+    pub ctx_pages: u64,
+    /// Decode steps == output tokens generated (one append per step).
+    pub decode_steps: u64,
+}
+
+impl RequestProfile {
+    /// Draw a request shape from an rng stream (context 24–64 pages,
+    /// output 24–56 tokens — interactive-serving scale).
+    pub fn sample(rng: &mut Rng) -> RequestProfile {
+        RequestProfile {
+            ctx_pages: 24 + rng.below(41),
+            decode_steps: 24 + rng.below(33),
+        }
+    }
+
+    /// KV pages appended over the whole decode phase.
+    pub fn decode_kv_pages(&self, scale: Scale) -> u64 {
+        scale.pages(self.decode_steps.div_ceil(TOKENS_PER_KV_PAGE))
+    }
+
+    /// Total KV region size (context + decode growth).
+    pub fn kv_pages(&self, scale: Scale) -> u64 {
+        scale.pages(self.ctx_pages) + self.decode_kv_pages(scale)
+    }
+
+    /// Tokens this request services (decode steps; scale-independent,
+    /// so tokens/cycle compares policies on identical token work).
+    pub fn tokens(&self) -> u64 {
+        self.decode_steps
+    }
+}
+
+/// The canonical per-seed request shape — [`llm_request`] generates from
+/// it and [`crate::coordinator::serving`] recomputes token totals from
+/// it, so the two always agree without loading a trace.
+pub fn request_profile(seed: u64) -> RequestProfile {
+    RequestProfile::sample(&mut Rng::new(seed ^ 0x11F0))
+}
+
+/// Emit one decode step of a request into the builder: append this
+/// token's KV page (monotone growth across the region), then re-read an
+/// attention window strided over the whole history. Returns nothing;
+/// page coverage is exact — as `local` sweeps `0..decode_steps` the
+/// append index covers every decode page of the region.
+fn decode_step(
+    t: &mut TraceBuilder,
+    region: Extent,
+    ctx: u64,
+    local: u64,
+    decode_steps: u64,
+    tb: u32,
+) {
+    let d_total = region.pages - ctx;
+    let idx = ctx + (local * d_total) / decode_steps;
+    t.touch(region.page(idx), 1, tb, true);
+    let grown = idx + 1;
+    let reads = ATTENTION_READS.min(grown);
+    let stride = (grown / reads).max(1);
+    for j in 0..reads {
+        let back = (j * stride).min(grown - 1);
+        t.touch(region.page(grown - 1 - back), 2, tb + 1, false);
+    }
+}
+
+/// Prefill: the request's context lands in its KV region as one
+/// sequential write burst.
+fn prefill(t: &mut TraceBuilder, region: Extent, ctx: u64, tb: u32) {
+    for cp in 0..ctx {
+        t.touch(region.page(cp), 0, tb + (cp / 16) as u32 % 4, true);
+    }
+}
+
+/// `llm-weights`: the layer-sweep weight reader. L transformer layers
+/// of weight pages, read strictly sequentially front-to-back, and the
+/// whole stack re-swept once per decode step (one kernel per step).
+///
+/// 24 layers × 38 pages = 912 pages at scale 1 — more than the 125%
+/// capacity (≈729), so a recency evictor churns the entire stack every
+/// sweep (the cyclic-LRU pathology) while the stream itself is the most
+/// prefetchable pattern the tree prefetcher will ever see.
+pub fn llm_weights(scale: Scale, seed: u64) -> Trace {
+    let mut rng = Rng::new(seed ^ 0x11A7);
+    let layers = 24u64;
+    let layer_pages = scale.pages(38);
+    let sweeps = 6 + rng.below(3); // 6–8 decode steps
+    let mut arena = Arena::new();
+    let w = arena.alloc(layers * layer_pages);
+    let mut t = TraceBuilder::new("llm-weights", 4);
+    for _step in 0..sweeps {
+        t.next_kernel();
+        for l in 0..layers {
+            for p in 0..layer_pages {
+                let page = w.page(l * layer_pages + p);
+                t.touch(page, 0, (l % 16) as u32, false);
+            }
+        }
+    }
+    t.finish(&arena)
+}
+
+/// `llm-kv`: a batch of requests' KV-cache regions, no weights — the
+/// page-death workload in isolation. Ten requests arrive staggered
+/// (two steps apart), each prefilling its context then appending one
+/// token per step with attention re-reads over its history; a request's
+/// last token is followed by a **completion kernel** touching only the
+/// dying region — the explicit end-of-request boundary.
+///
+/// Live regions are re-read every step (evicting one costs re-faults);
+/// dead regions are never touched again (evicting one is free). At 125%
+/// the resident set outgrows capacity as requests retire, so the victim
+/// choice — dead region vs live region — is the whole game.
+pub fn llm_kv(scale: Scale, seed: u64) -> Trace {
+    let mut rng = Rng::new(seed ^ 0x11CB);
+    let requests: usize = 10;
+    let profiles: Vec<RequestProfile> =
+        (0..requests).map(|_| RequestProfile::sample(&mut rng)).collect();
+    let mut arena = Arena::new();
+    let kv: Vec<Extent> =
+        profiles.iter().map(|p| arena.alloc(p.kv_pages(scale))).collect();
+    let arrivals: Vec<u64> = (0..requests as u64).map(|r| r * 2).collect();
+    let max_step = profiles
+        .iter()
+        .zip(&arrivals)
+        .map(|(p, a)| a + p.decode_steps)
+        .max()
+        .unwrap_or(0);
+    let mut t = TraceBuilder::new("llm-kv", 6);
+    for step in 0..max_step {
+        t.next_kernel();
+        let mut dying: Vec<usize> = Vec::new();
+        for r in 0..requests {
+            let (arr, p) = (arrivals[r], &profiles[r]);
+            if step < arr || step >= arr + p.decode_steps {
+                continue;
+            }
+            let local = step - arr;
+            let ctx = scale.pages(p.ctx_pages);
+            let tb = r as u32 * 4;
+            if local == 0 {
+                prefill(&mut t, kv[r], ctx, tb);
+            }
+            decode_step(&mut t, kv[r], ctx, local, p.decode_steps, tb);
+            if local + 1 == p.decode_steps {
+                dying.push(r);
+            }
+        }
+        if !dying.is_empty() {
+            // the explicit end-of-request boundary: a completion kernel
+            // whose only traffic re-reads the head of each dying region
+            t.next_kernel();
+            for r in dying {
+                t.touch(kv[r].page(0), 3, r as u32 * 4, false);
+            }
+        }
+    }
+    t.finish(&arena)
+}
+
+/// `llm-decode`: the prefill+decode composite — a shared weight stack
+/// re-swept every decode step *plus* six concurrent requests growing
+/// and retiring KV regions (same request machinery as [`llm_kv`],
+/// completion kernels included).
+///
+/// The per-step weight sweep strides by 4 pages with a rotating offset,
+/// so every weight page recurs within 4 steps while each step stays
+/// cheap; weights (480 pages at scale 1) plus live KV sit just above
+/// the 125% capacity, so reactive policies must pick victims under
+/// pressure every step — and every dead KV page they *don't* pick is a
+/// weight page thrashed instead.
+pub fn llm_decode(scale: Scale, seed: u64) -> Trace {
+    let mut rng = Rng::new(seed ^ 0x11DE);
+    let requests: usize = 6;
+    let profiles: Vec<RequestProfile> =
+        (0..requests).map(|_| RequestProfile::sample(&mut rng)).collect();
+    let layers = 12u64;
+    let layer_pages = scale.pages(40);
+    let mut arena = Arena::new();
+    let w = arena.alloc(layers * layer_pages);
+    let kv: Vec<Extent> =
+        profiles.iter().map(|p| arena.alloc(p.kv_pages(scale))).collect();
+    let arrivals: Vec<u64> = (0..requests as u64).map(|r| r * 3).collect();
+    let max_step = profiles
+        .iter()
+        .zip(&arrivals)
+        .map(|(p, a)| a + p.decode_steps)
+        .max()
+        .unwrap_or(0);
+    let wtotal = layers * layer_pages;
+    let mut t = TraceBuilder::new("llm-decode", 8);
+    for step in 0..max_step {
+        t.next_kernel();
+        // the step's weight sweep (front-to-back, stride 4, rotating
+        // offset: all pages recur every 4 steps)
+        let mut wp = step % 4;
+        while wp < wtotal {
+            t.touch(w.page(wp), 0, (wp / layer_pages) as u32, false);
+            wp += 4;
+        }
+        let mut dying: Vec<usize> = Vec::new();
+        for r in 0..requests {
+            let (arr, p) = (arrivals[r], &profiles[r]);
+            if step < arr || step >= arr + p.decode_steps {
+                continue;
+            }
+            let local = step - arr;
+            let ctx = scale.pages(p.ctx_pages);
+            let tb = 16 + r as u32 * 4;
+            if local == 0 {
+                prefill(&mut t, kv[r], ctx, tb);
+            }
+            decode_step(&mut t, kv[r], ctx, local, p.decode_steps, tb);
+            if local + 1 == p.decode_steps {
+                dying.push(r);
+            }
+        }
+        if !dying.is_empty() {
+            t.next_kernel();
+            for r in dying {
+                t.touch(kv[r].page(0), 3, 16 + r as u32 * 4, false);
+            }
+        }
+    }
+    t.finish(&arena)
+}
+
+/// One serving request as its own trace: kernel 0 prefills the context,
+/// then one kernel per decode step (append + attention window). Tokens
+/// serviced == `kernels - 1` == [`request_profile`]`(seed).tokens()` —
+/// the serving driver leans on that identity for token accounting.
+///
+/// This is the tenant-stream generator behind
+/// [`crate::coordinator::serving::RequestSource`]: the sweep's
+/// per-tenant `seed ^ i` derivation gives every concurrent request slot
+/// its own sampled shape.
+pub fn llm_request(scale: Scale, seed: u64) -> Trace {
+    let p = request_profile(seed);
+    let mut arena = Arena::new();
+    let region = arena.alloc(p.kv_pages(scale));
+    let ctx = scale.pages(p.ctx_pages);
+    let mut t = TraceBuilder::new("llm-req", 6);
+    t.next_kernel();
+    prefill(&mut t, region, ctx, 0);
+    for local in 0..p.decode_steps {
+        t.next_kernel();
+        decode_step(&mut t, region, ctx, local, p.decode_steps, 0);
+    }
+    t.finish(&arena)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::workloads::Workload;
+    use std::collections::HashMap;
+
+    fn scale1() -> Scale {
+        Scale { factor: 1 }
+    }
+
+    #[test]
+    fn llm_traces_validate_at_both_scales() {
+        for gen in [llm_weights, llm_kv, llm_decode, llm_request] {
+            for factor in [1u32, 2] {
+                let t = gen(Scale { factor }, 42);
+                t.validate().unwrap_or_else(|e| panic!("{e}"));
+                assert!(!t.accesses.is_empty(), "{} empty", t.name);
+            }
+        }
+    }
+
+    #[test]
+    fn llm_traces_deterministic_and_seed_sensitive() {
+        for gen in [llm_weights, llm_kv, llm_decode, llm_request] {
+            let a = gen(scale1(), 7);
+            let b = gen(scale1(), 7);
+            assert_eq!(a, b, "{} not deterministic", a.name);
+        }
+        // request shapes flow from the seed
+        let a = llm_kv(scale1(), 1);
+        let b = llm_kv(scale1(), 2);
+        assert_ne!(a.accesses, b.accesses);
+    }
+
+    #[test]
+    fn weights_sweep_is_strictly_sequential_per_kernel() {
+        let t = llm_weights(scale1(), 42);
+        for phase in t.phases() {
+            let pages: Vec<u64> =
+                t.accesses[phase].iter().map(|a| a.page).collect();
+            assert!(
+                pages.windows(2).all(|w| w[1] == w[0] + 1),
+                "a weight sweep must be strictly sequential"
+            );
+        }
+        // the stack exceeds 80% of itself: 125% oversubscription churns
+        assert!(t.touched_pages > 800, "weights must outgrow 125% capacity");
+    }
+
+    #[test]
+    fn kv_regions_grow_monotonically_and_die_before_trace_end() {
+        for t in [llm_kv(scale1(), 42), llm_decode(scale1(), 42)] {
+            let last_kernel = t.kernels - 1;
+            // per-allocation birth/death structure, KV allocations only
+            // (llm-decode's first allocation is the weight stack)
+            let kv_allocs: Vec<(u64, u64)> = t
+                .allocations
+                .iter()
+                .copied()
+                .filter(|&(base, _)| !(t.name == "llm-decode" && base == 0))
+                .collect();
+            let mut dead = 0usize;
+            for &(base, pages) in &kv_allocs {
+                let mut first_touch: HashMap<u64, usize> = HashMap::new();
+                let mut death = 0u32;
+                for (i, a) in t.accesses.iter().enumerate() {
+                    if a.page < base || a.page >= base + pages {
+                        continue;
+                    }
+                    first_touch.entry(a.page).or_insert(i);
+                    death = a.kernel;
+                }
+                // monotone growth: page p is first touched no earlier
+                // than page p-1
+                let mut prev = 0usize;
+                for p in base..base + pages {
+                    let i = *first_touch
+                        .get(&p)
+                        .unwrap_or_else(|| panic!("{}: page {p} untouched", t.name));
+                    assert!(
+                        i >= prev,
+                        "{}: KV growth not monotone at page {p}",
+                        t.name
+                    );
+                    prev = i;
+                }
+                if death < last_kernel {
+                    dead += 1;
+                }
+            }
+            assert!(
+                dead * 2 >= kv_allocs.len(),
+                "{}: at least half the requests must die mid-trace \
+                 ({dead}/{})",
+                t.name,
+                kv_allocs.len()
+            );
+        }
+    }
+
+    #[test]
+    fn request_trace_tokens_match_profile() {
+        for seed in [1u64, 7, 42, 99] {
+            let p = request_profile(seed);
+            let t = llm_request(scale1(), seed);
+            assert_eq!(t.kernels as u64 - 1, p.tokens());
+            assert_eq!(
+                t.working_set_pages,
+                p.kv_pages(scale1()),
+                "request arena is exactly its KV region"
+            );
+        }
+    }
+
+    #[test]
+    fn llm_workloads_touch_their_allocations() {
+        for w in Workload::LLM {
+            let t = w.generate(scale1(), 42);
+            let touched: std::collections::HashSet<u64> =
+                t.accesses.iter().map(|a| a.page).collect();
+            assert_eq!(touched.len() as u64, t.touched_pages, "{}", w.name());
+            let alloc_pages: u64 = t.allocations.iter().map(|(_, p)| p).sum();
+            let frac = touched.len() as f64 / alloc_pages as f64;
+            assert!(
+                frac > 0.85,
+                "{}: only {frac:.2} of the allocations is touched",
+                w.name()
+            );
+        }
+    }
+
+    #[test]
+    fn llm_names_and_category_round_trip() {
+        for w in Workload::LLM {
+            assert_eq!(Workload::from_name(w.name()), Some(w));
+            assert_eq!(w.category(), "llm");
+            assert!(!Workload::ALL.contains(&w), "LLM family stays out of ALL");
+        }
+        // the llm: spec alias
+        assert_eq!(
+            Workload::from_name("llm:weights"),
+            Some(Workload::LlmWeights)
+        );
+        assert_eq!(Workload::from_name("llm:kv"), Some(Workload::LlmKvCache));
+        assert_eq!(
+            Workload::from_name("LLM:decode"),
+            Some(Workload::LlmDecode)
+        );
+        assert_eq!(Workload::from_name("llm:nope"), None);
+    }
+}

@@ -8,6 +8,7 @@
 //! PC, thread-block id, kernel (phase) index, and the compute-instruction
 //! gap used by the timing model.
 
+pub mod llm;
 pub mod multi;
 pub mod stats;
 pub mod workloads;

@@ -2,9 +2,11 @@
 # Regenerate the committed bench baseline.
 #
 # PR 7 baselined the predictor + result-store benches
-# (BENCH_PR7.json); PR 9 adds the session hot-path trio
+# (BENCH_PR7.json); PR 9 added the session hot-path trio
 # (sim/push_hot_loop, sim/push_batch, mem/dense_vs_ref/*) from
-# `benches/hot_path.rs` and baselines everything into BENCH_PR9.json.
+# `benches/hot_path.rs`; PR 10 adds the LLM generator + serving-driver
+# rows (llm/gen/*, llm/serving/*) from `benches/llm.rs` and baselines
+# everything into BENCH_PR10.json.
 #
 # Runs the bench binaries (none needs artifacts; the pjrt rows appear
 # only after `make artifacts`) and converts the harness's
@@ -23,11 +25,12 @@
 set -euo pipefail
 
 cd "$(dirname "$0")/.."
-out="${1:-BENCH_PR9.json}"
+out="${1:-BENCH_PR10.json}"
 
 raw="$(mktemp)"
 trap 'rm -f "$raw"' EXIT
-(cd rust && cargo bench --bench predictor --bench results --bench hot_path) \
+(cd rust && cargo bench --bench predictor --bench results --bench hot_path \
+    --bench llm) \
     | tee "$raw"
 
 python3 - "$raw" "$out" <<'PY'
@@ -65,8 +68,8 @@ rev = subprocess.run(
 
 doc = {
     "schema": "bench-baseline/v1",
-    "pr": 9,
-    "bench": "predictor+results+hot_path",
+    "pr": 10,
+    "bench": "predictor+results+hot_path+llm",
     "git_rev": rev,
     "status": "measured",
     "note": "median per-iteration times from rust/benches/common harness; "
